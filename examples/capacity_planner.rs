@@ -1,0 +1,21 @@
+//! Capacity planner (paper Table 5 + Fig. 11): enumerate Lamina DOPs and
+//! vLLM TP degrees for each model, simulate throughput on a trace, and
+//! report cost efficiency — the tool an operator would use to choose a
+//! deployment.
+//!
+//!     cargo run --release --example capacity_planner [-- <requests>]
+
+fn main() -> Result<(), String> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1500);
+
+    let t5 = lamina::figures::serving::table5();
+    lamina::figures::save("table5", &t5, "results").map_err(|e| e.to_string())?;
+    println!();
+    let f11 = lamina::figures::serving::fig11(n, 42);
+    lamina::figures::save("fig11", &f11, "results").map_err(|e| e.to_string())?;
+    println!("\nwrote results/table5.json and results/fig11.json");
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Network microbenchmark (paper Fig. 13): modelled ping-pong sweep for all
+//! four stacks plus a live wall-clock round-trip over the in-process
+//! transport to validate the data path.
+//!
+//!     cargo run --release --example ping_pong
+
+fn main() {
+    let fig = lamina::figures::network::fig13();
+    let _ = lamina::figures::save("fig13", &fig, "results");
+
+    println!();
+    let live = lamina::figures::network::live_pingpong(65536, 100);
+    let _ = lamina::figures::save("pingpong-live", &live, "results");
+    println!("\nwrote results/fig13.json and results/pingpong-live.json");
+}

@@ -1,0 +1,41 @@
+//! Quickstart: load the AOT-compiled tiny model and greedy-decode a prompt
+//! through the full disaggregated stack (leader slices + 2 attention
+//! workers + simulated network).
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use lamina::workers::{DisaggPipeline, PipelineOpts};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("LAMINA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    println!("loading artifacts from {artifacts}/ ...");
+    let pipe = DisaggPipeline::start(PipelineOpts::new(&artifacts))?;
+    let cfg = pipe.config().clone();
+    println!(
+        "model '{}': {} layers, d={}, {} heads ({} kv), {} params",
+        cfg.name, cfg.layers, cfg.d, cfg.heads, cfg.kv_heads, cfg.param_count
+    );
+
+    let prompts: Vec<Vec<i32>> = vec![vec![1, 7, 42, 99, 3], vec![500, 2, 2, 8]];
+    let steps = 12;
+    let t0 = std::time::Instant::now();
+    let out = pipe.decode(&prompts, steps)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    for (p, o) in prompts.iter().zip(&out) {
+        println!("prompt {p:?} -> {o:?}");
+    }
+    let total: usize = out.iter().map(|o| o.len()).sum();
+    println!(
+        "{total} tokens in {:.2}s ({:.1} tok/s through the disaggregated pipeline)",
+        dt,
+        total as f64 / dt
+    );
+    let stats = pipe.engine_stats();
+    println!(
+        "leader engine: {} executions, {} compilations, {:.1} ms compute",
+        stats.executions, stats.compilations, stats.exec_seconds * 1e3
+    );
+    pipe.shutdown();
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! Trace-driven serving comparison (paper Fig. 10): replay all four
+//! production-trace workloads against Lamina and the vLLM baseline at
+//! equal hardware cost, for all three models.
+//!
+//!     cargo run --release --example trace_serve [-- <requests>]
+
+fn main() -> Result<(), String> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000);
+    let fig = lamina::figures::serving::fig10(n, 42);
+    lamina::figures::save("fig10", &fig, "results").map_err(|e| e.to_string())?;
+
+    println!();
+    let f12 = lamina::figures::serving::fig12();
+    lamina::figures::save("fig12", &f12, "results").map_err(|e| e.to_string())?;
+    println!();
+    let f14 = lamina::figures::serving::fig14();
+    lamina::figures::save("fig14", &f14, "results").map_err(|e| e.to_string())?;
+    println!("\nwrote results/fig10.json, results/fig12.json, results/fig14.json");
+    Ok(())
+}

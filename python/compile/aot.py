@@ -1,0 +1,263 @@
+"""AOT compile path: lower every Lamina entry point to HLO **text** and dump
+weights + a JSON manifest for the Rust runtime.
+
+Run once at build time (``make artifacts``); Python never appears on the
+serving path. Interchange is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``) — the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to ``--out-dir`` (default ``artifacts/``):
+
+* ``<entry>.b<B>[.s<S>].hlo.txt`` — one HLO module per (entry point, batch
+  bucket[, seq bucket]); the Rust runtime compiles each once and caches the
+  executable (continuous batching pads to the nearest bucket).
+* ``weights.bin`` — all weights, little-endian f32, order given by manifest.
+* ``manifest.json`` — config, weight table (name/shape/offset), entry-point
+  I/O signatures, bucket lists.
+* ``golden.json`` — greedy-decoded token ids for fixed prompts, the oracle
+  for the Rust integration test.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import attention as A
+
+BATCH_BUCKETS = [1, 2, 4, 8]
+SEQ_BUCKETS = [16, 64, 256]
+# Head-level attention sharding (paper §5): worker counts the attention
+# artifacts are lowered for. Worker w of W owns kv_heads/W KV heads and the
+# matching G·kv_heads/W query heads; shapes shrink accordingly.
+SHARD_COUNTS = [1, 2]
+GOLDEN_PROMPTS = [[1, 7, 42, 99, 3], [500, 2, 2, 8], [13, 255]]
+GOLDEN_STEPS = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered → XLA HLO text via stablehlo (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args: List[Any]) -> List[Dict[str, Any]]:
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)}
+        for a in args
+    ]
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entrypoints(cfg: M.ModelConfig, batches, seqs):
+    """Yield (name, batch, seq, fn, example_args, input_names)."""
+    hd, H, KH, d, V = cfg.head_dim, cfg.heads, cfg.kv_heads, cfg.d, cfg.vocab
+    f32, i32 = jnp.float32, jnp.int32
+
+    for B in batches:
+        yield (
+            "slice_first", B, None,
+            functools.partial(M.slice_first, cfg),
+            [_spec((B,), i32), _spec((B,), i32), _spec((V, d)),
+             _spec((d,)), _spec((d, H * hd)), _spec((d, KH * hd)),
+             _spec((d, KH * hd))],
+            ["tokens", "pos", "embed", "attn_norm", "wq", "wk", "wv"],
+            ["q", "k_new", "v_new", "resid"],
+        )
+        yield (
+            "slice_mid", B, None,
+            functools.partial(M.slice_mid, cfg),
+            [_spec((B, H, hd)), _spec((B, d)), _spec((B,), i32),
+             _spec((H * hd, d)), _spec((d,)), _spec((d, cfg.ffn)),
+             _spec((d, cfg.ffn)), _spec((cfg.ffn, d)),
+             _spec((d,)), _spec((d, H * hd)), _spec((d, KH * hd)),
+             _spec((d, KH * hd))],
+            ["attn_out", "resid", "pos", "wo", "ffn_norm", "w_gate", "w_up",
+             "w_down", "attn_norm_next", "wq_next", "wk_next", "wv_next"],
+            ["q", "k_new", "v_new", "resid"],
+        )
+        yield (
+            "slice_last", B, None,
+            functools.partial(M.slice_last, cfg),
+            [_spec((B, H, hd)), _spec((B, d)),
+             _spec((H * hd, d)), _spec((d,)), _spec((d, cfg.ffn)),
+             _spec((d, cfg.ffn)), _spec((cfg.ffn, d)),
+             _spec((d,)), _spec((d, V))],
+            ["attn_out", "resid", "wo", "ffn_norm", "w_gate", "w_up",
+             "w_down", "final_norm", "lm_head"],
+            ["logits", "next_token"],
+        )
+        for W in SHARD_COUNTS:
+            # shard shapes: worker owns KH/W kv heads → H/W query heads
+            assert KH % W == 0, "shard count must divide kv heads"
+            khs, hs = KH // W, H // W
+            sfx = "" if W == 1 else f"_w{W}"
+            yield (
+                f"attn_combine{sfx}", B, None,
+                A.combine_new_token,
+                [_spec((B, hs, hd)), _spec((B, khs, hd)), _spec((B, khs, hd)),
+                 _spec((B, hs, hd)), _spec((B, hs)), _spec((B, hs))],
+                ["q", "k_new", "v_new", "a_prev", "s_prev", "m_prev"],
+                ["attn_out"],
+            )
+            # chunked prefill (paper §5): one request, chunk of T = B tokens
+            for S in seqs:
+                yield (
+                    f"prefill_attn{sfx}", B, S,
+                    lambda q, kc, vc, l, kn, vn: A.chunked_prefill_attention(
+                        q, kc, vc, l, kn, vn),
+                    [_spec((B, hs, hd)), _spec((khs, S, hd)),
+                     _spec((khs, S, hd)), _spec((1,), i32),
+                     _spec((B, khs, hd)), _spec((B, khs, hd))],
+                    ["q", "k_cache", "v_cache", "lens", "k_new", "v_new"],
+                    ["attn_out"],
+                )
+            for S in seqs:
+                yield (
+                    f"attention{sfx}", B, S,
+                    lambda q, kc, vc, l: A.decode_attention(q, kc, vc, l),
+                    [_spec((B, hs, hd)), _spec((B, khs, S, hd)),
+                     _spec((B, khs, S, hd)), _spec((B,), i32)],
+                    ["q", "k_cache", "v_cache", "lens"],
+                    ["attn_out"],
+                )
+                yield (
+                    f"attn_prev{sfx}", B, S,
+                    lambda q, kc, vc, l: A.partial_attention(q, kc, vc, l),
+                    [_spec((B, hs, hd)), _spec((B, khs, S, hd)),
+                     _spec((B, khs, S, hd)), _spec((B,), i32)],
+                    ["q", "k_cache", "v_cache", "lens"],
+                    ["a_prev", "s_prev", "m_prev"],
+                )
+
+
+def artifact_name(entry: str, batch: int, seq) -> str:
+    if seq is None:
+        return f"{entry}.b{batch}.hlo.txt"
+    return f"{entry}.b{batch}.s{seq}.hlo.txt"
+
+
+def dump_weights(cfg: M.ModelConfig, w, path: str):
+    """Write weights.bin and return the manifest tensor table."""
+    tensors = []
+    offset = 0
+    flat: List[np.ndarray] = []
+
+    def add(name, arr):
+        nonlocal offset
+        a = np.asarray(arr, dtype=np.float32)
+        tensors.append({
+            "name": name,
+            "shape": list(a.shape),
+            "dtype": "f32",
+            "offset": offset,
+            "size": a.size * 4,
+        })
+        flat.append(a)
+        offset += a.size * 4
+
+    for name in M.GLOBAL_WEIGHT_NAMES:
+        add(name, w[name])
+    for i, lw in enumerate(w["layers"]):
+        for name in M.LAYER_WEIGHT_NAMES:
+            add(f"layer{i}.{name}", lw[name])
+
+    with open(path, "wb") as f:
+        for a in flat:
+            f.write(a.tobytes())
+    return tensors
+
+
+def make_golden(cfg: M.ModelConfig, w) -> Dict[str, Any]:
+    outs = M.reference_decode(cfg, w, GOLDEN_PROMPTS, GOLDEN_STEPS)
+    return {"prompts": GOLDEN_PROMPTS, "steps": GOLDEN_STEPS,
+            "generated": outs}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--config", default="tiny", choices=sorted(M.CONFIGS))
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--batches", default=",".join(map(str, BATCH_BUCKETS)))
+    p.add_argument("--seqs", default=",".join(map(str, SEQ_BUCKETS)))
+    p.add_argument("--skip-golden", action="store_true")
+    args = p.parse_args()
+
+    cfg = M.CONFIGS[args.config]
+    batches = [int(x) for x in args.batches.split(",")]
+    seqs = [int(x) for x in args.seqs.split(",")]
+    assert all(s <= cfg.max_seq for s in seqs)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    w = M.init_weights(cfg, seed=args.seed)
+    tensors = dump_weights(cfg, w, os.path.join(args.out_dir, "weights.bin"))
+    print(f"weights.bin: {sum(t['size'] for t in tensors)} bytes, "
+          f"{len(tensors)} tensors ({cfg.param_count} params)")
+
+    entries = []
+    for entry, B, S, fn, specs, in_names, out_names in build_entrypoints(
+            cfg, batches, seqs):
+        def as_tuple(*a, _fn=fn):
+            out = _fn(*a)
+            return out if isinstance(out, tuple) else (out,)
+
+        lowered = jax.jit(as_tuple).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = artifact_name(entry, B, S)
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append({
+            "entry": entry, "batch": B, "seq": S, "file": fname,
+            "inputs": [dict(n, name=nm) for n, nm in zip(_sig(specs), in_names)],
+            "outputs": out_names,
+        })
+        print(f"  {fname}: {len(text)} chars")
+
+    manifest = {
+        "format_version": 1,
+        "config": {
+            "name": cfg.name, "vocab": cfg.vocab, "d": cfg.d,
+            "layers": cfg.layers, "heads": cfg.heads,
+            "kv_heads": cfg.kv_heads, "ffn": cfg.ffn,
+            "max_seq": cfg.max_seq, "head_dim": cfg.head_dim,
+            "rope_theta": cfg.rope_theta, "eps": cfg.eps,
+            "param_count": cfg.param_count,
+        },
+        "seed": args.seed,
+        "buckets": {"batch": batches, "seq": seqs},
+        "weights": {"file": "weights.bin", "tensors": tensors},
+        "layer_weight_names": list(M.LAYER_WEIGHT_NAMES),
+        "global_weight_names": list(M.GLOBAL_WEIGHT_NAMES),
+        "entrypoints": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    if not args.skip_golden:
+        golden = make_golden(cfg, w)
+        with open(os.path.join(args.out_dir, "golden.json"), "w") as f:
+            json.dump(golden, f)
+        print(f"golden.json: {len(golden['prompts'])} prompts × "
+              f"{golden['steps']} steps")
+    print(f"manifest.json: {len(entries)} entry points")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,363 @@
+"""L1 — Pallas decode-attention kernels for Lamina.
+
+The paper's attention worker runs the memory-bound batched-GEMV (BGEMV) decode
+attention on memory-optimised devices. On TPU-style hardware (see DESIGN.md
+§Hardware-Adaptation) we express it as a Pallas kernel:
+
+* grid over ``(batch, kv_head)`` — each program owns one request's one KV head
+  group, turning the per-request BGEMV into a thin ``G×hd @ hd×S`` GEMM that
+  maps onto MXU tiles (GQA raises arithmetic intensity G×, paper §2.2.2);
+* the KV sequence is streamed through VMEM in ``block_s`` chunks with an
+  online-softmax accumulator — the HBM→VMEM schedule the paper's CUDA kernel
+  expressed with threadblocks;
+* a *flash* variant additionally tiles the sequence onto the grid with VMEM
+  scratch accumulators (double-buffered HBM streaming on real TPUs).
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU performance is estimated analytically in
+DESIGN.md / EXPERIMENTS.md from VMEM footprint and MXU utilisation.
+
+Two extra entry points support the paper's resource-utilisation overlapping
+(§4.2.2): ``partial_attention`` returns the max-stabilised softmax state
+``[A, S, m]`` over the *cached* tokens only (computable as soon as ``q``
+arrives at the attention worker), and ``combine_new_token`` folds in the
+freshly projected ``k_new/v_new`` when they arrive later.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_S = 128
+
+
+def _online_softmax_chunks(q, k, v, valid_len, seq_len, block_s):
+    """Shared online-softmax inner loop over VMEM-resident K/V.
+
+    q: [G, hd], k/v: [S, hd]; returns (acc [G, hd], s [G], m [G]) —
+    the *stabilised* partial state (acc and s are scaled by exp(-m)).
+    """
+    G, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    nblk = seq_len // block_s
+
+    def body(i, carry):
+        acc, s, m = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, i * block_s, block_s, axis=0)
+        vb = jax.lax.dynamic_slice_in_dim(v, i * block_s, block_s, axis=0)
+        scores = jnp.dot(q, kb.T) * scale                     # [G, block_s]
+        idx = i * block_s + jax.lax.iota(jnp.int32, block_s)
+        mask = idx[None, :] < valid_len
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=1))       # [G]
+        corr = jnp.exp(m - m_new)
+        e = jnp.exp(scores - m_new[:, None])
+        e = jnp.where(mask, e, 0.0)
+        s_new = s * corr + jnp.sum(e, axis=1)
+        acc_new = acc * corr[:, None] + jnp.dot(e, vb)
+        return acc_new, s_new, m_new
+
+    init = (
+        jnp.zeros((G, hd), jnp.float32),
+        jnp.zeros((G,), jnp.float32),
+        jnp.full((G,), NEG_INF, jnp.float32),
+    )
+    return jax.lax.fori_loop(0, nblk, body, init)
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, block_s):
+    """Full decode attention for one (batch, kv_head) program."""
+    q = q_ref[0, 0].astype(jnp.float32)                       # [G, hd]
+    k = k_ref[0, 0].astype(jnp.float32)                       # [S, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+    n = len_ref[0]
+    acc, s, _ = _online_softmax_chunks(q, k, v, n, k.shape[0], block_s)
+    o_ref[0, 0] = (acc / s[:, None]).astype(o_ref.dtype)
+
+
+def _partial_kernel(q_ref, k_ref, v_ref, len_ref, a_ref, s_ref, m_ref, *, block_s):
+    """Partial (unnormalised, max-stabilised) attention over cached tokens."""
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    n = len_ref[0]
+    acc, s, m = _online_softmax_chunks(q, k, v, n, k.shape[0], block_s)
+    a_ref[0, 0] = acc.astype(a_ref.dtype)
+    s_ref[0, 0] = s.astype(s_ref.dtype)
+    m_ref[0, 0] = m.astype(m_ref.dtype)
+
+
+def _pick_block_s(seq_len, block_s):
+    """Largest divisor of seq_len that is <= requested block size."""
+    b = min(block_s, seq_len)
+    while seq_len % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q, k_cache, v_cache, lens, *, block_s=DEFAULT_BLOCK_S,
+                     interpret=True):
+    """GQA decode attention via the Pallas kernel.
+
+    Args:
+      q:       [B, H, hd]     current-token queries.
+      k_cache: [B, KH, S, hd] key cache (rows >= lens[b] ignored).
+      v_cache: [B, KH, S, hd] value cache.
+      lens:    [B] int32      valid cache length per request.
+      block_s: sequence chunk streamed through the online-softmax loop.
+
+    Returns [B, H, hd] attention outputs (same dtype as q).
+    """
+    B, H, hd = q.shape
+    _, KH, S, _ = k_cache.shape
+    assert H % KH == 0, "query heads must be divisible by kv heads"
+    G = H // KH
+    bs = _pick_block_s(S, block_s)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, block_s=bs),
+        grid=(B, KH),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, S, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, S, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, hd), q.dtype),
+        interpret=interpret,
+    )(q.reshape(B, KH, G, hd), k_cache, v_cache, lens)
+    return out.reshape(B, H, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def partial_attention(q, k_cache, v_cache, lens, *, block_s=DEFAULT_BLOCK_S,
+                      interpret=True):
+    """Partial attention over the cached tokens only (overlap path, §4.2.2).
+
+    Returns the max-stabilised state ``(A, S, m)`` with shapes
+    ``([B,H,hd], [B,H], [B,H])`` such that the full attention equals
+    ``combine(new_token_partial(q, k_new, v_new), (A, S, m))``.
+    """
+    B, H, hd = q.shape
+    _, KH, S, _ = k_cache.shape
+    G = H // KH
+    bs = _pick_block_s(S, block_s)
+    a, s, m = pl.pallas_call(
+        functools.partial(_partial_kernel, block_s=bs),
+        grid=(B, KH),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, S, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, S, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, G), lambda b, h: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KH, G, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, KH, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, KH, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(B, KH, G, hd), k_cache, v_cache, lens)
+    return a.reshape(B, H, hd), s.reshape(B, H), m.reshape(B, H)
+
+
+def combine_new_token(q, k_new, v_new, a_prev, s_prev, m_prev):
+    """Fold the newly generated token into a partial attention state.
+
+    Pure-jnp (the work is O(B·H·hd); not worth a kernel). This is the second
+    half of the paper's divide-and-conquer attention:
+
+      A_q(I) = (A_q(prev)·S_q(prev) + A_q(new)·S_q(new)) / (S_q(prev)+S_q(new))
+
+    computed in max-stabilised form.
+    """
+    B, H, hd = q.shape
+    _, KH, _ = k_new.shape
+    G = H // KH
+    qf = q.reshape(B, KH, G, hd).astype(jnp.float32)
+    s_new = jnp.einsum("bkgd,bkd->bkg", qf, k_new.astype(jnp.float32))
+    s_new = (s_new / jnp.sqrt(jnp.float32(hd))).reshape(B, H)
+    m = jnp.maximum(m_prev, s_new)
+    c_prev = jnp.exp(m_prev - m)
+    c_new = jnp.exp(s_new - m)
+    denom = s_prev * c_prev + c_new
+    v_rep = jnp.broadcast_to(
+        v_new.astype(jnp.float32)[:, :, None, :], (B, KH, G, hd)
+    ).reshape(B, H, hd)
+    num = a_prev * c_prev[..., None] + v_rep * c_new[..., None]
+    return (num / denom[..., None]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash variant: sequence tiled on the grid with VMEM scratch accumulators.
+# This is the shape a real-TPU deployment would use (double-buffered HBM
+# streaming driven by BlockSpec); numerics are identical to decode_attention.
+# ---------------------------------------------------------------------------
+
+def _flash_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc_ref, s_ref, m_ref,
+                  *, block_s, nblk):
+    sb = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)                       # [G, hd]
+    k = k_ref[0, 0].astype(jnp.float32)                       # [block_s, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+    n = len_ref[0]
+
+    @pl.when(sb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    scores = jnp.dot(q, k.T) * scale                          # [G, block_s]
+    idx = sb * block_s + jax.lax.iota(jnp.int32, block_s)
+    mask = idx[None, :] < n
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(scores, axis=1))
+    corr = jnp.exp(m_old - m_new)
+    e = jnp.where(mask, jnp.exp(scores - m_new[:, None]), 0.0)
+    s_ref[...] = s_ref[...] * corr + jnp.sum(e, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(e, v)
+    m_ref[...] = m_new
+
+    @pl.when(sb == nblk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / s_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_flash(q, k_cache, v_cache, lens, *,
+                           block_s=DEFAULT_BLOCK_S, interpret=True):
+    """Flash-decode attention: sequence blocks on the grid, scratch in VMEM."""
+    import jax.experimental.pallas.tpu as pltpu
+
+    B, H, hd = q.shape
+    _, KH, S, _ = k_cache.shape
+    G = H // KH
+    bs = _pick_block_s(S, block_s)
+    nblk = S // bs
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_s=bs, nblk=nblk),
+        grid=(B, KH, nblk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1,), lambda b, h, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(B, KH, G, hd), k_cache, v_cache, lens)
+    return out.reshape(B, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill attention (paper §5, "handling the prefill-decode
+# transition"): a chunk of T prompt tokens attends (a) the already-cached
+# prefix and (b) causally within the chunk. One request per call (B = 1);
+# the coordinator schedules chunks between decode steps so KV streaming
+# interferes minimally with decoding (Sarathi-style piggybacking).
+# ---------------------------------------------------------------------------
+
+def _prefill_kernel(q_ref, kc_ref, vc_ref, len_ref, kn_ref, vn_ref, o_ref, *,
+                    block_s):
+    """One (kv_head,) program: q [T, G, hd] over cache [S, hd] + chunk."""
+    q = q_ref[0].astype(jnp.float32)                 # [T, G, hd]
+    kc = kc_ref[0].astype(jnp.float32)               # [S, hd]
+    vc = vc_ref[0].astype(jnp.float32)
+    kn = kn_ref[0].astype(jnp.float32)               # [T, hd]
+    vn = vn_ref[0].astype(jnp.float32)
+    n = len_ref[0]
+    T, G, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qf = q.reshape(T * G, hd)
+
+    # cached-prefix partial (shared mask per chunk row)
+    acc, s, m = _online_softmax_chunks(qf, kc, vc, n, kc.shape[0], block_s)
+
+    # intra-chunk causal part
+    scores = jnp.dot(qf, kn.T) * scale               # [T*G, T]
+    ti = jax.lax.iota(jnp.int32, T * G) // G         # chunk row of each query
+    tj = jax.lax.iota(jnp.int32, T)
+    mask = tj[None, :] <= ti[:, None]                # causal within chunk
+    scores = jnp.where(mask, scores, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(scores, axis=1))
+    corr = jnp.exp(m - m_new)
+    e = jnp.where(mask, jnp.exp(scores - m_new[:, None]), 0.0)
+    s = s * corr + jnp.sum(e, axis=1)
+    acc = acc * corr[:, None] + jnp.dot(e, vn)
+
+    o_ref[0] = (acc / s[:, None]).reshape(T, G, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def chunked_prefill_attention(q, k_cache, v_cache, lens, k_new, v_new, *,
+                              block_s=DEFAULT_BLOCK_S, interpret=True):
+    """Prefill a chunk of T tokens for ONE request.
+
+    Args:
+      q:       [T, H, hd]      chunk queries (RoPE applied).
+      k_cache: [KH, S, hd]     cached keys (first ``lens`` rows valid).
+      v_cache: [KH, S, hd]
+      lens:    [1] int32       valid cached tokens (before this chunk).
+      k_new:   [T, KH, hd]     chunk keys.
+      v_new:   [T, KH, hd]     chunk values.
+
+    Returns [T, H, hd]: each chunk token attends the cached prefix plus the
+    chunk's own causal prefix.
+    """
+    T, H, hd = q.shape
+    KH, S, _ = k_cache.shape
+    G = H // KH
+    bs = _pick_block_s(S, block_s)
+    # regroup: [KH, T, G, hd] so the grid maps one kv head per program
+    qg = jnp.transpose(q.reshape(T, KH, G, hd), (1, 0, 2, 3))
+    kn = jnp.transpose(k_new, (1, 0, 2))             # [KH, T, hd]
+    vn = jnp.transpose(v_new, (1, 0, 2))
+    out = pl.pallas_call(
+        functools.partial(_prefill_kernel, block_s=bs),
+        grid=(KH,),
+        in_specs=[
+            pl.BlockSpec((1, T, G, hd), lambda h: (h, 0, 0, 0)),
+            pl.BlockSpec((1, S, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, S, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1,), lambda h: (0,)),
+            pl.BlockSpec((1, T, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, T, hd), lambda h: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T, G, hd), lambda h: (h, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((KH, T, G, hd), q.dtype),
+        interpret=interpret,
+    )(qg, k_cache, v_cache, lens, kn, vn)
+    return jnp.transpose(out, (1, 0, 2, 3)).reshape(T, H, hd)
+
+
+def vmem_footprint_bytes(G, hd, S, block_s, dtype_bytes=2):
+    """Estimated VMEM working set of one flash-decode program on a real TPU.
+
+    q tile + double-buffered K and V blocks + fp32 accumulators. Used by the
+    perf analysis in EXPERIMENTS.md (interpret mode has no real VMEM).
+    """
+    q_tile = G * hd * dtype_bytes
+    kv_blocks = 2 * 2 * block_s * hd * dtype_bytes  # K+V, double-buffered
+    acc = (G * hd + 2 * G) * 4
+    return q_tile + kv_blocks + acc

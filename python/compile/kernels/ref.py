@@ -1,0 +1,160 @@
+"""Pure-jnp correctness oracles for the Lamina attention kernels.
+
+These are the ground truth used by pytest/hypothesis to validate the Pallas
+kernels in `attention.py` and by `model.py` tests for the sliced decode step.
+Everything here is deliberately straightforward jnp — no pallas, no tricks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # avoid actual -inf so masked softmax stays NaN-free
+
+
+def decode_attention_ref(q, k_cache, v_cache, lens):
+    """Reference GQA decode attention.
+
+    Args:
+      q:        [B, H, hd]   queries for the current token.
+      k_cache:  [B, KH, S, hd] key cache (first ``lens[b]`` rows valid).
+      v_cache:  [B, KH, S, hd] value cache.
+      lens:     [B] int32, number of valid cached tokens per request.
+
+    Returns:
+      [B, H, hd] attention output.
+    """
+    B, H, hd = q.shape
+    _, KH, S, _ = k_cache.shape
+    G = H // KH
+    qr = q.reshape(B, KH, G, hd).astype(jnp.float32)
+    kc = k_cache.astype(jnp.float32)
+    vc = v_cache.astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qr, kc) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.arange(S)[None, None, None, :] < lens[:, None, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", w, vc)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def partial_attention_ref(q, k_cache, v_cache, lens):
+    """Reference for the *partial* attention used by the overlap path.
+
+    Computes the max-stabilised partial softmax state over the cached tokens:
+      m = max_j s_j            (running max, [B, H])
+      S = sum_j exp(s_j - m)   (stabilised denominator, [B, H])
+      A = sum_j exp(s_j - m) v_j   (stabilised numerator, [B, H, hd])
+
+    The paper's §4.2.2 combines raw [A, S]; we carry ``m`` as well for
+    numerical stability — combining is exact either way.
+    """
+    B, H, hd = q.shape
+    _, KH, S, _ = k_cache.shape
+    G = H // KH
+    qr = q.reshape(B, KH, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qr, k_cache.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.arange(S)[None, None, None, :] < lens[:, None, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)                       # [B, KH, G]
+    e = jnp.exp(scores - m[..., None])
+    e = jnp.where(mask, e, 0.0)
+    s = jnp.sum(e, axis=-1)                            # [B, KH, G]
+    a = jnp.einsum("bkgs,bksd->bkgd", e, v_cache.astype(jnp.float32))
+    return (
+        a.reshape(B, H, hd),
+        s.reshape(B, H),
+        m.reshape(B, H),
+    )
+
+
+def combine_partials_ref(a1, s1, m1, a2, s2, m2):
+    """Combine two max-stabilised partial attention states (paper §4.2.2).
+
+    A_q(I1 ∪ I2) = (A1·S1 + A2·S2) / (S1 + S2) in the paper's un-stabilised
+    notation; with per-partial running maxes m1, m2 the exact form is below.
+    """
+    m = jnp.maximum(m1, m2)
+    c1 = jnp.exp(m1 - m)
+    c2 = jnp.exp(m2 - m)
+    s = s1 * c1 + s2 * c2
+    a = a1 * c1[..., None] + a2 * c2[..., None]
+    return a / s[..., None]
+
+
+def new_token_partial_ref(q, k_new, v_new):
+    """Partial softmax state for the single newly-generated token.
+
+    Args:
+      q:     [B, H, hd]
+      k_new: [B, KH, hd]
+      v_new: [B, KH, hd]
+
+    Returns (A, S, m) with shapes ([B,H,hd], [B,H], [B,H]).
+    """
+    B, H, hd = q.shape
+    _, KH, _ = k_new.shape
+    G = H // KH
+    qr = q.reshape(B, KH, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bkd->bkg", qr, k_new.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))                  # [B, KH, G]
+    m = s                                              # single element: max == score
+    one = jnp.ones_like(s)                             # exp(s - m) == 1
+    a = jnp.broadcast_to(
+        v_new.astype(jnp.float32)[:, :, None, :], (B, KH, G, hd)
+    )
+    return (
+        a.reshape(B, H, hd),
+        one.reshape(B, H),
+        m.reshape(B, H),
+    )
+
+
+def chunked_prefill_ref(q, k_cache, v_cache, lens, k_new, v_new):
+    """Reference for the chunked-prefill attention (one request).
+
+    q: [T, H, hd]; k_cache/v_cache: [KH, S, hd]; lens: [1];
+    k_new/v_new: [T, KH, hd]. Each chunk token i attends cache[:lens] and
+    chunk tokens 0..i.
+    """
+    T, H, hd = q.shape
+    KH, S, _ = k_cache.shape
+    G = H // KH
+    n = lens[0]
+    # build the full K/V the chunk sees: cache then chunk
+    kc = jnp.concatenate([k_cache, jnp.transpose(k_new, (1, 0, 2))], axis=1)
+    vc = jnp.concatenate([v_cache, jnp.transpose(v_new, (1, 0, 2))], axis=1)
+    qr = q.reshape(T, KH, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("tkgd,ksd->tkgs", qr, kc.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    pos = jnp.arange(S + T)
+    ti = jnp.arange(T)
+    mask = (pos[None, :] < n) | (
+        (pos[None, :] >= S) & (pos[None, :] - S <= ti[:, None])
+    )
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("tkgs,ksd->tkgd", w, vc.astype(jnp.float32))
+    return out.reshape(T, H, hd).astype(q.dtype)
+
+
+def rmsnorm_ref(x, w, eps=1e-5):
+    """RMSNorm: x * w / sqrt(mean(x^2) + eps)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def rope_ref(x, pos, theta=10000.0):
+    """Rotary position embedding over the last dim of x: [B, n, hd], pos: [B]."""
+    B, n, hd = x.shape
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = pos[:, None].astype(jnp.float32) * freqs[None, :]       # [B, half]
+    cos = jnp.cos(ang)[:, None, :]                                # [B, 1, half]
+    sin = jnp.sin(ang)[:, None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,281 @@
+"""L2 — LLaMA-style decode-step model, pre-split for model-attention
+disaggregation (paper §4.2.1).
+
+Cutting the decode step at every attention operator yields ``L+1`` slices.
+All middle slices are structurally identical, so we lower three HLO entry
+points and bind per-layer weights at call time from the Rust coordinator:
+
+* ``slice_first`` — embed → RMSNorm → QKV projection (layer 0) → RoPE.
+* ``slice_mid``   — O-proj (layer i) → +residual → SwiGLU FFN → +residual →
+                    RMSNorm → QKV projection (layer i+1) → RoPE.
+* ``slice_last``  — O-proj (layer L-1) → +residual → FFN → final RMSNorm →
+                    LM head → greedy next token.
+
+The cut context between slices is exactly ``{residual stream x, q, k, v}``:
+the min-cut the automated converter finds on the operator graph (asserted by
+``rust/src/opgraph`` tests). The attention operator itself lives in
+``kernels/attention.py`` (L1) and is lowered into its own artifacts executed
+by the *attention workers*; the slices run on the *model workers*.
+
+Weights are plain pytrees of jnp arrays; ``init_weights`` produces a
+deterministic random model, and ``reference_decode`` is the unsliced oracle
+the sliced path is tested against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels.ref import rmsnorm_ref, rope_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (LLaMA-style, GQA)."""
+
+    name: str
+    vocab: int
+    d: int            # hidden dim
+    layers: int
+    heads: int        # query heads H
+    kv_heads: int     # KV heads KH; G = H / KH
+    ffn: int          # SwiGLU hidden dim
+    max_seq: int      # KV-cache capacity (per seq bucket)
+    rope_theta: float = 10000.0
+    eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d % self.heads == 0
+        return self.d // self.heads
+
+    @property
+    def gqa_group(self) -> int:
+        assert self.heads % self.kv_heads == 0
+        return self.heads // self.kv_heads
+
+    @property
+    def param_count(self) -> int:
+        """Exact parameter count for this config."""
+        hd = self.head_dim
+        per_layer = (
+            self.d * self.heads * hd          # Wq
+            + 2 * self.d * self.kv_heads * hd  # Wk, Wv
+            + self.heads * hd * self.d        # Wo
+            + 3 * self.d * self.ffn           # Wgate, Wup, Wdown
+            + 2 * self.d                      # attn_norm, ffn_norm
+        )
+        return (
+            self.vocab * self.d               # embedding
+            + self.layers * per_layer
+            + self.d                          # final norm
+            + self.d * self.vocab             # LM head
+        )
+
+
+# Named configs. `tiny` is what `make artifacts` AOT-compiles and the Rust
+# e2e example actually serves; the Table-3 models exist as *analytical*
+# configs for the roofline simulator (their HLO is never materialised here).
+TINY = ModelConfig(name="tiny", vocab=512, d=128, layers=4, heads=8,
+                   kv_heads=2, ffn=256, max_seq=256)
+SMALL = ModelConfig(name="small", vocab=2048, d=256, layers=8, heads=16,
+                    kv_heads=4, ffn=768, max_seq=512)
+CONFIGS = {c.name: c for c in (TINY, SMALL)}
+
+
+# ---------------------------------------------------------------------------
+# Weight init
+# ---------------------------------------------------------------------------
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> Dict[str, Any]:
+    """Deterministic random-init weights, scaled for stable decoding."""
+    key = jax.random.PRNGKey(seed)
+    hd = cfg.head_dim
+
+    def nrm(key, shape, scale):
+        return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+    keys = iter(jax.random.split(key, 8 + 8 * cfg.layers))
+    w: Dict[str, Any] = {
+        "embed": nrm(next(keys), (cfg.vocab, cfg.d), 1.0),
+        "final_norm": jnp.ones((cfg.d,), jnp.float32),
+        "lm_head": nrm(next(keys), (cfg.d, cfg.vocab), cfg.d ** -0.5),
+        "layers": [],
+    }
+    for _ in range(cfg.layers):
+        w["layers"].append({
+            "attn_norm": jnp.ones((cfg.d,), jnp.float32),
+            "wq": nrm(next(keys), (cfg.d, cfg.heads * hd), cfg.d ** -0.5),
+            "wk": nrm(next(keys), (cfg.d, cfg.kv_heads * hd), cfg.d ** -0.5),
+            "wv": nrm(next(keys), (cfg.d, cfg.kv_heads * hd), cfg.d ** -0.5),
+            "wo": nrm(next(keys), (cfg.heads * hd, cfg.d), cfg.d ** -0.5),
+            "ffn_norm": jnp.ones((cfg.d,), jnp.float32),
+            "w_gate": nrm(next(keys), (cfg.d, cfg.ffn), cfg.d ** -0.5),
+            "w_up": nrm(next(keys), (cfg.d, cfg.ffn), cfg.d ** -0.5),
+            "w_down": nrm(next(keys), (cfg.ffn, cfg.d), cfg.ffn ** -0.5),
+        })
+    return w
+
+
+# Flat, ordered per-layer weight names — the binary layout contract shared
+# with aot.py (manifest) and the Rust weight loader.
+LAYER_WEIGHT_NAMES = ("attn_norm", "wq", "wk", "wv", "wo", "ffn_norm",
+                      "w_gate", "w_up", "w_down")
+GLOBAL_WEIGHT_NAMES = ("embed", "final_norm", "lm_head")
+
+
+# ---------------------------------------------------------------------------
+# Model slices (the HLO entry points)
+# ---------------------------------------------------------------------------
+
+def _qkv(cfg: ModelConfig, x, pos, attn_norm, wq, wk, wv):
+    """RMSNorm → QKV proj → RoPE. Shared tail of slice_first/slice_mid."""
+    hd = cfg.head_dim
+    B = x.shape[0]
+    h = rmsnorm_ref(x, attn_norm, cfg.eps)
+    q = (h @ wq).reshape(B, cfg.heads, hd)
+    k = (h @ wk).reshape(B, cfg.kv_heads, hd)
+    v = (h @ wv).reshape(B, cfg.kv_heads, hd)
+    q = rope_ref(q, pos, cfg.rope_theta)
+    k = rope_ref(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def _ffn(cfg: ModelConfig, x, ffn_norm, w_gate, w_up, w_down):
+    """Pre-norm SwiGLU FFN with residual."""
+    h = rmsnorm_ref(x, ffn_norm, cfg.eps)
+    return x + (jax.nn.silu(h @ w_gate) * (h @ w_up)) @ w_down
+
+
+def slice_first(cfg: ModelConfig, tokens, pos, embed, attn_norm, wq, wk, wv):
+    """tokens [B] i32, pos [B] i32 → (q, k_new, v_new, resid)."""
+    x = embed[tokens]                       # [B, d]
+    q, k, v = _qkv(cfg, x, pos, attn_norm, wq, wk, wv)
+    return q, k, v, x
+
+
+def slice_mid(cfg: ModelConfig, attn_out, resid, pos,
+              wo, ffn_norm, w_gate, w_up, w_down,
+              attn_norm_next, wq_next, wk_next, wv_next):
+    """attn_out [B,H,hd], resid [B,d] → (q, k_new, v_new, resid')."""
+    B = resid.shape[0]
+    x = resid + attn_out.reshape(B, -1) @ wo
+    x = _ffn(cfg, x, ffn_norm, w_gate, w_up, w_down)
+    q, k, v = _qkv(cfg, x, pos, attn_norm_next, wq_next, wk_next, wv_next)
+    return q, k, v, x
+
+
+def slice_last(cfg: ModelConfig, attn_out, resid,
+               wo, ffn_norm, w_gate, w_up, w_down, final_norm, lm_head):
+    """attn_out [B,H,hd], resid [B,d] → (logits [B,V], next_token [B] i32)."""
+    B = resid.shape[0]
+    x = resid + attn_out.reshape(B, -1) @ wo
+    x = _ffn(cfg, x, ffn_norm, w_gate, w_up, w_down)
+    x = rmsnorm_ref(x, final_norm, cfg.eps)
+    logits = x @ lm_head
+    return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def layer_slice_args(w: Dict[str, Any], i: int) -> List[Any]:
+    """Weights for slice_mid joining attention-layer i to layer i+1."""
+    li, ln = w["layers"][i], w["layers"][i + 1]
+    return [li["wo"], li["ffn_norm"], li["w_gate"], li["w_up"], li["w_down"],
+            ln["attn_norm"], ln["wq"], ln["wk"], ln["wv"]]
+
+
+# ---------------------------------------------------------------------------
+# Reference decode (unsliced oracle)
+# ---------------------------------------------------------------------------
+
+def reference_step(cfg: ModelConfig, w, tokens, pos, k_cache, v_cache, lens):
+    """One unsliced decode step. Returns (logits, next_token, k_cache',
+    v_cache', lens')."""
+    B = tokens.shape[0]
+    x = w["embed"][tokens]
+    for i, lw in enumerate(w["layers"]):
+        q, k_new, v_new = _qkv(cfg, x, pos, lw["attn_norm"], lw["wq"],
+                               lw["wk"], lw["wv"])
+        k_cache = k_cache.at[i, jnp.arange(B), :, lens, :].set(k_new)
+        v_cache = v_cache.at[i, jnp.arange(B), :, lens, :].set(v_new)
+        a = attn_k.decode_attention(q, k_cache[i], v_cache[i], lens + 1)
+        x = x + a.reshape(B, -1) @ lw["wo"]
+        x = _ffn(cfg, x, lw["ffn_norm"], lw["w_gate"], lw["w_up"], lw["w_down"])
+    x = rmsnorm_ref(x, w["final_norm"], cfg.eps)
+    logits = x @ w["lm_head"]
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return logits, nxt, k_cache, v_cache, lens + 1
+
+
+def empty_cache(cfg: ModelConfig, batch: int):
+    shape = (cfg.layers, batch, cfg.kv_heads, cfg.max_seq, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def reference_decode(cfg: ModelConfig, w, prompts: List[List[int]],
+                     steps: int) -> List[List[int]]:
+    """Greedy-decode ``steps`` tokens for each prompt; returns generated ids.
+
+    Prompts are consumed token-by-token through the decode path (no separate
+    prefill kernel — prefill is out of scope per the paper's evaluation,
+    which removes the prefill phase from both systems).
+    """
+    B = len(prompts)
+    k_cache, v_cache = empty_cache(cfg, B)
+    lens = jnp.zeros((B,), jnp.int32)
+    maxp = max(len(p) for p in prompts)
+    out: List[List[int]] = [[] for _ in range(B)]
+    cur = jnp.array([p[0] for p in prompts], jnp.int32)
+    for t in range(maxp + steps - 1):
+        pos = lens
+        _, nxt, k_cache, v_cache, lens = reference_step(
+            cfg, w, cur, pos, k_cache, v_cache, lens)
+        nxt_list = []
+        for b, p in enumerate(prompts):
+            if t + 1 < len(p):
+                nxt_list.append(p[t + 1])          # still teacher-forcing prompt
+            else:
+                tok = int(nxt[b])
+                if len(out[b]) < steps:
+                    out[b].append(tok)
+                nxt_list.append(tok)
+        cur = jnp.array(nxt_list, jnp.int32)
+    return out
+
+
+def sliced_step(cfg: ModelConfig, w, tokens, pos, k_cache, v_cache, lens,
+                overlap: bool = False):
+    """One decode step through the *sliced* path (first/mid/last + attention).
+
+    Mirrors exactly what the Rust coordinator does, including the overlap
+    variant that computes partial attention over the cache before folding in
+    the new token (paper §4.2.2). Used by tests to prove slice equivalence.
+    """
+    B = tokens.shape[0]
+    q, k_new, v_new, resid = slice_first(
+        cfg, tokens, pos, w["embed"], w["layers"][0]["attn_norm"],
+        w["layers"][0]["wq"], w["layers"][0]["wk"], w["layers"][0]["wv"])
+    for i in range(cfg.layers):
+        if overlap:
+            a_p, s_p, m_p = attn_k.partial_attention(q, k_cache[i], v_cache[i], lens)
+            a = attn_k.combine_new_token(q, k_new, v_new, a_p, s_p, m_p)
+            k_cache = k_cache.at[i, jnp.arange(B), :, lens, :].set(k_new)
+            v_cache = v_cache.at[i, jnp.arange(B), :, lens, :].set(v_new)
+        else:
+            k_cache = k_cache.at[i, jnp.arange(B), :, lens, :].set(k_new)
+            v_cache = v_cache.at[i, jnp.arange(B), :, lens, :].set(v_new)
+            a = attn_k.decode_attention(q, k_cache[i], v_cache[i], lens + 1)
+        if i + 1 < cfg.layers:
+            q, k_new, v_new, resid = slice_mid(
+                cfg, a, resid, pos, *layer_slice_args(w, i))
+        else:
+            lw = w["layers"][i]
+            logits, nxt = slice_last(
+                cfg, a, resid, lw["wo"], lw["ffn_norm"], lw["w_gate"],
+                lw["w_up"], lw["w_down"], w["final_norm"], w["lm_head"])
+    return logits, nxt, k_cache, v_cache, lens + 1

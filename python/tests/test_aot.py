@@ -1,0 +1,132 @@
+"""AOT artifact tests: manifest integrity, weight layout, HLO lowering.
+
+These validate the build-path contract between python (producer) and the
+Rust runtime (consumer) without needing the Rust side.
+"""
+
+import json
+import os
+import struct
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    """Build a minimal artifact set once for the module."""
+    out = tmp_path_factory.mktemp("artifacts")
+    argv = sys.argv
+    sys.argv = ["aot", "--out-dir", str(out), "--batches", "1,2",
+                "--seqs", "64", "--skip-golden"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    with open(out / "manifest.json") as f:
+        manifest = json.load(f)
+    return out, manifest
+
+
+class TestManifest:
+    def test_config_roundtrip(self, built):
+        _, m = built
+        c = m["config"]
+        assert c["name"] == "tiny"
+        assert c["param_count"] == M.TINY.param_count
+        assert c["head_dim"] == M.TINY.head_dim
+
+    def test_entrypoint_coverage(self, built):
+        _, m = built
+        entries = {(e["entry"], e["batch"], e["seq"]) for e in m["entrypoints"]}
+        for B in (1, 2):
+            assert ("slice_first", B, None) in entries
+            assert ("slice_mid", B, None) in entries
+            assert ("slice_last", B, None) in entries
+            assert ("attn_combine", B, None) in entries
+            assert ("attention", B, 64) in entries
+            assert ("attn_prev", B, 64) in entries
+
+    def test_files_exist_and_are_hlo(self, built):
+        out, m = built
+        for e in m["entrypoints"]:
+            p = out / e["file"]
+            assert p.exists()
+            head = p.read_text()[:200]
+            assert "HloModule" in head
+
+    def test_input_signatures(self, built):
+        _, m = built
+        for e in m["entrypoints"]:
+            if e["entry"] == "attention":
+                names = [i["name"] for i in e["inputs"]]
+                assert names == ["q", "k_cache", "v_cache", "lens"]
+                kc = e["inputs"][1]
+                assert kc["shape"] == [e["batch"], M.TINY.kv_heads, 64,
+                                       M.TINY.head_dim]
+
+    def test_weight_table_layout(self, built):
+        """Offsets must be contiguous and match the declared order."""
+        out, m = built
+        tensors = m["weights"]["tensors"]
+        names = [t["name"] for t in tensors]
+        assert names[:3] == ["embed", "final_norm", "lm_head"]
+        assert names[3] == "layer0.attn_norm"
+        expect_off = 0
+        for t in tensors:
+            assert t["offset"] == expect_off
+            assert t["size"] == int(np.prod(t["shape"])) * 4
+            expect_off += t["size"]
+        assert os.path.getsize(out / "weights.bin") == expect_off
+
+    def test_weights_bin_values(self, built):
+        """weights.bin bytes must equal init_weights(seed) tensors."""
+        out, m = built
+        w = M.init_weights(M.TINY, seed=m["seed"])
+        blob = (out / "weights.bin").read_bytes()
+        t0 = next(t for t in m["weights"]["tensors"] if t["name"] == "embed")
+        got = np.frombuffer(blob[t0["offset"]:t0["offset"] + t0["size"]],
+                            dtype="<f4").reshape(t0["shape"])
+        np.testing.assert_array_equal(got, np.asarray(w["embed"]))
+        t1 = next(t for t in m["weights"]["tensors"]
+                  if t["name"] == "layer1.w_down")
+        got = np.frombuffer(blob[t1["offset"]:t1["offset"] + t1["size"]],
+                            dtype="<f4").reshape(t1["shape"])
+        np.testing.assert_array_equal(got, np.asarray(w["layers"][1]["w_down"]))
+
+
+class TestHloText:
+    def test_hlo_text_parses_back(self, built):
+        """The emitted text must be acceptable to XLA's own parser."""
+        out, m = built
+        from jax._src.lib import xla_client as xc
+        e = m["entrypoints"][0]
+        text = (out / e["file"]).read_text()
+        # ROOT of the entry computation must be a tuple (return_tuple=True)
+        assert "ROOT" in text and "tuple(" in text
+
+    def test_no_custom_calls(self, built):
+        """interpret=True pallas must lower to plain HLO (no mosaic)."""
+        out, m = built
+        for e in m["entrypoints"]:
+            text = (out / e["file"]).read_text()
+            assert "custom-call" not in text, e["file"]
+
+
+class TestGolden:
+    def test_golden_generation(self):
+        g = aot.make_golden(M.TINY, M.init_weights(M.TINY, seed=0))
+        assert len(g["generated"]) == len(g["prompts"])
+        assert all(len(o) == g["steps"] for o in g["generated"])
+        # regeneration is deterministic
+        g2 = aot.make_golden(M.TINY, M.init_weights(M.TINY, seed=0))
+        assert g == g2

@@ -1,0 +1,308 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; every test asserts allclose against ref.py.
+This is the core build-time correctness signal for the attention artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+def make_case(key, B, KH, G, S, hd, dtype=jnp.float32, min_len=1):
+    H = KH * G
+    q = rand(key, (B, H, hd), dtype)
+    k = rand(key + 1, (B, KH, S, hd), dtype)
+    v = rand(key + 2, (B, KH, S, hd), dtype)
+    lens = jax.random.randint(jax.random.PRNGKey(key + 3), (B,), min_len, S + 1)
+    return q, k, v, lens.astype(jnp.int32)
+
+
+TOL = dict(atol=2e-5, rtol=2e-5)
+BF16_TOL = dict(atol=2e-2, rtol=2e-2)
+
+
+class TestDecodeAttention:
+    def test_basic(self):
+        q, k, v, lens = make_case(0, 4, 2, 4, 128, 32)
+        out = A.decode_attention(q, k, v, lens)
+        np.testing.assert_allclose(out, R.decode_attention_ref(q, k, v, lens), **TOL)
+
+    def test_mha_g1(self):
+        """G=1 degenerates to plain multi-head attention (LLaMA-33B/65B)."""
+        q, k, v, lens = make_case(1, 2, 8, 1, 64, 16)
+        out = A.decode_attention(q, k, v, lens)
+        np.testing.assert_allclose(out, R.decode_attention_ref(q, k, v, lens), **TOL)
+
+    def test_single_token_cache(self):
+        q, k, v, _ = make_case(2, 3, 2, 2, 64, 16)
+        lens = jnp.ones((3,), jnp.int32)
+        out = A.decode_attention(q, k, v, lens)
+        np.testing.assert_allclose(out, R.decode_attention_ref(q, k, v, lens), **TOL)
+
+    def test_full_cache(self):
+        q, k, v, _ = make_case(3, 2, 2, 2, 96, 16)
+        lens = jnp.full((2,), 96, jnp.int32)
+        out = A.decode_attention(q, k, v, lens)
+        np.testing.assert_allclose(out, R.decode_attention_ref(q, k, v, lens), **TOL)
+
+    def test_ragged_lens(self):
+        """Mixed lengths in one batch — the continuous-batching case."""
+        q, k, v, _ = make_case(4, 5, 2, 4, 160, 32)
+        lens = jnp.array([1, 160, 77, 32, 159], jnp.int32)
+        out = A.decode_attention(q, k, v, lens)
+        np.testing.assert_allclose(out, R.decode_attention_ref(q, k, v, lens), **TOL)
+
+    @pytest.mark.parametrize("block_s", [16, 32, 64, 128, 999])
+    def test_block_sizes(self, block_s):
+        """block_s must not change numerics (chunking invariance)."""
+        q, k, v, lens = make_case(5, 2, 2, 2, 128, 16)
+        out = A.decode_attention(q, k, v, lens, block_s=block_s)
+        np.testing.assert_allclose(out, R.decode_attention_ref(q, k, v, lens), **TOL)
+
+    def test_non_divisible_block(self):
+        """S=96 with requested block 64 → falls back to a divisor."""
+        q, k, v, lens = make_case(6, 2, 2, 2, 96, 16)
+        out = A.decode_attention(q, k, v, lens, block_s=64)
+        np.testing.assert_allclose(out, R.decode_attention_ref(q, k, v, lens), **TOL)
+
+    def test_bf16_inputs(self):
+        q, k, v, lens = make_case(7, 2, 2, 4, 64, 32, dtype=jnp.bfloat16)
+        out = A.decode_attention(q, k, v, lens)
+        assert out.dtype == jnp.bfloat16
+        ref = R.decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), ref.astype(jnp.float32), **BF16_TOL)
+
+    def test_large_scores_no_overflow(self):
+        """Softmax stability: huge logits must not produce inf/nan."""
+        q, k, v, lens = make_case(8, 2, 2, 2, 64, 16)
+        out = A.decode_attention(q * 100.0, k * 100.0, v, lens)
+        assert np.isfinite(np.array(out)).all()
+        ref = R.decode_attention_ref(q * 100.0, k * 100.0, v, lens)
+        np.testing.assert_allclose(out, ref, **TOL)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        B=st.integers(1, 6),
+        KH=st.sampled_from([1, 2, 4]),
+        G=st.sampled_from([1, 2, 4, 8]),
+        S=st.sampled_from([16, 48, 64, 128, 200]),
+        hd=st.sampled_from([8, 16, 32, 64]),
+        key=st.integers(0, 10_000),
+    )
+    def test_hypothesis_sweep(self, B, KH, G, S, hd, key):
+        q, k, v, lens = make_case(key, B, KH, G, S, hd)
+        out = A.decode_attention(q, k, v, lens)
+        np.testing.assert_allclose(out, R.decode_attention_ref(q, k, v, lens), **TOL)
+
+
+class TestFlashDecode:
+    def test_matches_simple(self):
+        q, k, v, lens = make_case(10, 4, 2, 4, 256, 32)
+        o1 = A.decode_attention(q, k, v, lens, block_s=64)
+        o2 = A.decode_attention_flash(q, k, v, lens, block_s=64)
+        np.testing.assert_allclose(o1, o2, **TOL)
+
+    def test_matches_ref(self):
+        q, k, v, lens = make_case(11, 3, 2, 2, 128, 16)
+        out = A.decode_attention_flash(q, k, v, lens, block_s=32)
+        np.testing.assert_allclose(out, R.decode_attention_ref(q, k, v, lens), **TOL)
+
+    @pytest.mark.parametrize("block_s", [16, 64, 128, 256])
+    def test_grid_block_sizes(self, block_s):
+        q, k, v, lens = make_case(12, 2, 2, 4, 256, 32)
+        out = A.decode_attention_flash(q, k, v, lens, block_s=block_s)
+        np.testing.assert_allclose(out, R.decode_attention_ref(q, k, v, lens), **TOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        B=st.integers(1, 4),
+        KH=st.sampled_from([1, 2]),
+        G=st.sampled_from([1, 4]),
+        S=st.sampled_from([32, 64, 128]),
+        hd=st.sampled_from([16, 32]),
+        key=st.integers(0, 10_000),
+    )
+    def test_hypothesis_sweep(self, B, KH, G, S, hd, key):
+        q, k, v, lens = make_case(key, B, KH, G, S, hd)
+        out = A.decode_attention_flash(q, k, v, lens, block_s=32)
+        np.testing.assert_allclose(out, R.decode_attention_ref(q, k, v, lens), **TOL)
+
+    def test_vmem_footprint_estimate(self):
+        """Flash working set must fit comfortably in a 16 MiB TPU VMEM."""
+        # LLaMA3-70B geometry: G=8, hd=128, S up to 32768, block 512.
+        fp = A.vmem_footprint_bytes(G=8, hd=128, S=32768, block_s=512)
+        assert fp < 16 * 2**20 / 4  # leave 4x headroom for the compiler
+
+
+class TestPartialAttention:
+    def test_matches_ref(self):
+        q, k, v, lens = make_case(20, 3, 2, 4, 128, 32)
+        a, s, m = A.partial_attention(q, k, v, lens)
+        ar, sr, mr = R.partial_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(a, ar, atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(s, sr, atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(m, mr, **TOL)
+
+    def test_combine_equals_full(self):
+        """partial(cache) ⊕ new-token == full attention over cache+new.
+
+        This is the exactness property behind the paper's §4.2.2 overlap.
+        """
+        B, KH, G, S, hd = 4, 2, 4, 128, 16
+        q, k, v, _ = make_case(21, B, KH, G, S, hd)
+        lens = jnp.array([0, 63, 100, 127], jnp.int32)  # incl. empty cache
+        kn = rand(30, (B, KH, hd))
+        vn = rand(31, (B, KH, hd))
+        k2 = k.at[jnp.arange(B), :, lens, :].set(kn)
+        v2 = v.at[jnp.arange(B), :, lens, :].set(vn)
+        full = R.decode_attention_ref(q, k2, v2, lens + 1)
+        a, s, m = A.partial_attention(q, k, v, lens)
+        comb = A.combine_new_token(q, kn, vn, a, s, m)
+        np.testing.assert_allclose(comb, full, atol=1e-4, rtol=1e-4)
+
+    def test_combine_associative_split(self):
+        """Combining partials over I1 ∪ I2 == attention over the union."""
+        B, KH, G, S, hd = 2, 2, 2, 64, 16
+        q = rand(40, (B, KH * G, hd))
+        k1 = rand(41, (B, KH, S, hd))
+        v1 = rand(42, (B, KH, S, hd))
+        k2 = rand(43, (B, KH, S, hd))
+        v2 = rand(44, (B, KH, S, hd))
+        lens = jnp.full((B,), S, jnp.int32)
+        a1, s1, m1 = R.partial_attention_ref(q, k1, v1, lens)
+        a2, s2, m2 = R.partial_attention_ref(q, k2, v2, lens)
+        comb = R.combine_partials_ref(a1, s1, m1, a2, s2, m2)
+        kcat = jnp.concatenate([k1, k2], axis=2)
+        vcat = jnp.concatenate([v1, v2], axis=2)
+        full = R.decode_attention_ref(q, kcat, vcat, lens * 2)
+        np.testing.assert_allclose(comb, full, atol=1e-4, rtol=1e-4)
+
+    def test_new_token_partial_ref(self):
+        B, KH, G, hd = 3, 2, 4, 16
+        q = rand(50, (B, KH * G, hd))
+        kn = rand(51, (B, KH, hd))
+        vn = rand(52, (B, KH, hd))
+        a, s, m = R.new_token_partial_ref(q, kn, vn)
+        # attention over a 1-token cache == softmax of one element == v
+        kc = kn[:, :, None, :]
+        vc = vn[:, :, None, :]
+        full = R.decode_attention_ref(q, kc, vc, jnp.ones((B,), jnp.int32))
+        comb = a / s[..., None]
+        np.testing.assert_allclose(comb, full, **TOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        B=st.integers(1, 4),
+        KH=st.sampled_from([1, 2]),
+        G=st.sampled_from([1, 4]),
+        S=st.sampled_from([32, 128]),
+        hd=st.sampled_from([16, 32]),
+        key=st.integers(0, 10_000),
+    )
+    def test_hypothesis_combine(self, B, KH, G, S, hd, key):
+        q, k, v, lens = make_case(key, B, KH, G, S, hd)
+        lens = jnp.minimum(lens, S - 1)  # leave room for the new token
+        lens = jnp.maximum(lens, 0)
+        kn = rand(key + 7, (B, KH, hd))
+        vn = rand(key + 8, (B, KH, hd))
+        k2 = k.at[jnp.arange(B), :, lens, :].set(kn)
+        v2 = v.at[jnp.arange(B), :, lens, :].set(vn)
+        full = R.decode_attention_ref(q, k2, v2, lens + 1)
+        a, s, m = A.partial_attention(q, k, v, lens)
+        comb = A.combine_new_token(q, kn, vn, a, s, m)
+        np.testing.assert_allclose(comb, full, atol=1e-4, rtol=1e-4)
+
+
+class TestChunkedPrefill:
+    def make(self, key, T, KH, G, S, hd):
+        H = KH * G
+        return (
+            rand(key, (T, H, hd)),
+            rand(key + 1, (KH, S, hd)),
+            rand(key + 2, (KH, S, hd)),
+            rand(key + 3, (T, KH, hd)),
+            rand(key + 4, (T, KH, hd)),
+        )
+
+    @pytest.mark.parametrize("n_cached", [0, 1, 17, 64])
+    def test_matches_ref(self, n_cached):
+        q, kc, vc, kn, vn = self.make(70, 8, 2, 4, 64, 16)
+        lens = jnp.array([n_cached], jnp.int32)
+        out = A.chunked_prefill_attention(q, kc, vc, lens, kn, vn)
+        ref = R.chunked_prefill_ref(q, kc, vc, lens, kn, vn)
+        np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+    def test_equals_sequential_decode(self):
+        """A T-token chunk == T single-token decode steps (exactness of the
+        prefill-decode transition)."""
+        T, KH, G, S, hd = 6, 2, 2, 32, 16
+        q, kc, vc, kn, vn = self.make(80, T, KH, G, S, hd)
+        n0 = 10
+        big_k = jnp.zeros((1, KH, S + T, hd)).at[0, :, :S].set(kc)
+        big_v = jnp.zeros((1, KH, S + T, hd)).at[0, :, :S].set(vc)
+        outs = []
+        for i in range(T):
+            big_k = big_k.at[0, :, n0 + i].set(kn[i])
+            big_v = big_v.at[0, :, n0 + i].set(vn[i])
+            o = A.decode_attention(q[i:i + 1], big_k, big_v,
+                                   jnp.array([n0 + i + 1], jnp.int32))
+            outs.append(o[0])
+        seq = jnp.stack(outs)
+        chunk = A.chunked_prefill_attention(
+            q, kc, vc, jnp.array([n0], jnp.int32), kn, vn)
+        np.testing.assert_allclose(chunk, seq, atol=1e-4, rtol=1e-4)
+
+    def test_padding_rows_isolated(self):
+        """Trailing (padding) chunk rows must not affect earlier outputs."""
+        T, KH, G, S, hd = 8, 2, 2, 32, 16
+        q, kc, vc, kn, vn = self.make(90, T, KH, G, S, hd)
+        lens = jnp.array([5], jnp.int32)
+        full = A.chunked_prefill_attention(q, kc, vc, lens, kn, vn)
+        q2 = q.at[6:].set(999.0)
+        kn2 = kn.at[6:].set(-999.0)
+        vn2 = vn.at[6:].set(999.0)
+        mod = A.chunked_prefill_attention(q2, kc, vc, lens, kn2, vn2)
+        np.testing.assert_allclose(full[:6], mod[:6], atol=1e-5, rtol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        T=st.sampled_from([1, 4, 8]),
+        KH=st.sampled_from([1, 2]),
+        G=st.sampled_from([1, 4]),
+        S=st.sampled_from([32, 64]),
+        n=st.integers(0, 32),
+        key=st.integers(0, 10_000),
+    )
+    def test_hypothesis_sweep(self, T, KH, G, S, n, key):
+        q, kc, vc, kn, vn = self.make(key, T, KH, G, S, 16)
+        lens = jnp.array([min(n, S)], jnp.int32)
+        out = A.chunked_prefill_attention(q, kc, vc, lens, kn, vn)
+        ref = R.chunked_prefill_ref(q, kc, vc, lens, kn, vn)
+        np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+
+class TestInterpretVsJit:
+    def test_kernel_inside_jit_graph(self):
+        """The kernel must lower inside a bigger jitted graph (the L2 path)."""
+        q, k, v, lens = make_case(60, 2, 2, 2, 64, 16)
+
+        @jax.jit
+        def f(q, k, v, lens):
+            return A.decode_attention(q, k, v, lens) * 2.0
+
+        out = f(q, k, v, lens)
+        np.testing.assert_allclose(
+            out, R.decode_attention_ref(q, k, v, lens) * 2.0, **TOL)

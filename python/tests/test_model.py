@@ -1,0 +1,178 @@
+"""L2 model tests: sliced decode path vs the unsliced reference.
+
+Proves the paper's §4.2.1 slicing is semantics-preserving (the min-cut
+context {resid, q, k, v} carries everything between slices) and that the
+§4.2.2 overlap path is numerically equivalent.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.TINY
+W = M.init_weights(CFG, seed=0)
+
+
+def run_steps(step_fn, tokens, steps, **kw):
+    B = tokens.shape[0]
+    kc, vc = M.empty_cache(CFG, B)
+    lens = jnp.zeros((B,), jnp.int32)
+    cur = tokens
+    logits_hist, tok_hist = [], []
+    for _ in range(steps):
+        logits, nxt, kc, vc, lens = step_fn(CFG, W, cur, lens, kc, vc, lens, **kw)
+        logits_hist.append(np.array(logits))
+        tok_hist.append(np.array(nxt))
+        cur = nxt
+    return logits_hist, tok_hist
+
+
+class TestConfigs:
+    def test_param_count_matches_init(self):
+        total = 0
+        total += W["embed"].size + W["final_norm"].size + W["lm_head"].size
+        for lw in W["layers"]:
+            total += sum(a.size for a in lw.values())
+        assert total == CFG.param_count
+
+    def test_head_geometry(self):
+        assert CFG.heads % CFG.kv_heads == 0
+        assert CFG.d == CFG.heads * CFG.head_dim
+
+    @pytest.mark.parametrize("name", sorted(M.CONFIGS))
+    def test_all_configs_valid(self, name):
+        c = M.CONFIGS[name]
+        assert c.gqa_group >= 1 and c.head_dim % 2 == 0
+
+
+class TestSliceEquivalence:
+    def test_sliced_matches_reference_multi_step(self):
+        tokens = jnp.array([1, 7, 42], jnp.int32)
+        lr, tr = run_steps(M.reference_step, tokens, 5)
+        ls, ts = run_steps(M.sliced_step, tokens, 5)
+        for a, b in zip(lr, ls):
+            np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+        for a, b in zip(tr, ts):
+            np.testing.assert_array_equal(a, b)
+
+    def test_overlap_path_matches(self):
+        tokens = jnp.array([3, 500], jnp.int32)
+        ls, ts = run_steps(M.sliced_step, tokens, 5)
+        lo, to = run_steps(M.sliced_step, tokens, 5, overlap=True)
+        for a, b in zip(ls, lo):
+            np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+        for a, b in zip(ts, to):
+            np.testing.assert_array_equal(a, b)
+
+    def test_batch_one(self):
+        tokens = jnp.array([9], jnp.int32)
+        lr, _ = run_steps(M.reference_step, tokens, 3)
+        ls, _ = run_steps(M.sliced_step, tokens, 3)
+        for a, b in zip(lr, ls):
+            np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+    def test_deterministic_init(self):
+        w2 = M.init_weights(CFG, seed=0)
+        np.testing.assert_array_equal(W["embed"], w2["embed"])
+        w3 = M.init_weights(CFG, seed=1)
+        assert not np.array_equal(np.array(W["embed"]), np.array(w3["embed"]))
+
+
+class TestSliceInterfaces:
+    """The cut context between slices is exactly {resid, q, k, v}."""
+
+    def test_slice_first_shapes(self):
+        B = 2
+        q, k, v, resid = M.slice_first(
+            CFG, jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
+            W["embed"], W["layers"][0]["attn_norm"], W["layers"][0]["wq"],
+            W["layers"][0]["wk"], W["layers"][0]["wv"])
+        assert q.shape == (B, CFG.heads, CFG.head_dim)
+        assert k.shape == (B, CFG.kv_heads, CFG.head_dim)
+        assert v.shape == (B, CFG.kv_heads, CFG.head_dim)
+        assert resid.shape == (B, CFG.d)
+
+    def test_slice_mid_shapes(self):
+        B = 4
+        q, k, v, resid = M.slice_mid(
+            CFG, jnp.zeros((B, CFG.heads, CFG.head_dim)),
+            jnp.zeros((B, CFG.d)), jnp.zeros((B,), jnp.int32),
+            *M.layer_slice_args(W, 0))
+        assert q.shape == (B, CFG.heads, CFG.head_dim)
+        assert resid.shape == (B, CFG.d)
+
+    def test_slice_last_shapes(self):
+        B = 3
+        lw = W["layers"][-1]
+        logits, nxt = M.slice_last(
+            CFG, jnp.zeros((B, CFG.heads, CFG.head_dim)),
+            jnp.zeros((B, CFG.d)), lw["wo"], lw["ffn_norm"], lw["w_gate"],
+            lw["w_up"], lw["w_down"], W["final_norm"], W["lm_head"])
+        assert logits.shape == (B, CFG.vocab)
+        assert nxt.shape == (B,) and nxt.dtype == jnp.int32
+
+    def test_greedy_token_is_argmax(self):
+        B = 2
+        lw = W["layers"][-1]
+        a = jax.random.normal(jax.random.PRNGKey(5), (B, CFG.heads, CFG.head_dim))
+        r = jax.random.normal(jax.random.PRNGKey(6), (B, CFG.d))
+        logits, nxt = M.slice_last(
+            CFG, a, r, lw["wo"], lw["ffn_norm"], lw["w_gate"],
+            lw["w_up"], lw["w_down"], W["final_norm"], W["lm_head"])
+        np.testing.assert_array_equal(np.argmax(np.array(logits), -1), nxt)
+
+
+class TestPrimitives:
+    def test_rmsnorm_unit_scale(self):
+        x = jnp.full((2, 8), 3.0)
+        out = R.rmsnorm_ref(x, jnp.ones((8,)))
+        np.testing.assert_allclose(out, 1.0, atol=1e-3)
+
+    def test_rope_norm_preserving(self):
+        """RoPE is a rotation: per-pair L2 norm is preserved."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 16))
+        pos = jnp.array([0, 37], jnp.int32)
+        out = R.rope_ref(x, pos)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(out, axis=-1), jnp.linalg.norm(x, axis=-1),
+            atol=1e-4, rtol=1e-4)
+
+    def test_rope_pos0_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 8))
+        out = R.rope_ref(x, jnp.zeros((1,), jnp.int32))
+        np.testing.assert_allclose(out, x, atol=1e-6)
+
+    def test_rope_relative_shift(self):
+        """q·k after RoPE depends only on relative position."""
+        hd = 16
+        q = jax.random.normal(jax.random.PRNGKey(2), (1, 1, hd))
+        k = jax.random.normal(jax.random.PRNGKey(3), (1, 1, hd))
+        def dot_at(pq, pk):
+            qr = R.rope_ref(q, jnp.array([pq], jnp.int32))
+            kr = R.rope_ref(k, jnp.array([pk], jnp.int32))
+            return float(jnp.sum(qr * kr))
+        assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-3
+
+
+class TestReferenceDecode:
+    def test_prompt_teacher_forcing(self):
+        outs = M.reference_decode(CFG, W, [[1, 2, 3], [9]], steps=4)
+        assert len(outs) == 2 and all(len(o) == 4 for o in outs)
+        assert all(0 <= t < CFG.vocab for o in outs for t in o)
+
+    def test_decode_deterministic(self):
+        a = M.reference_decode(CFG, W, [[5, 6]], steps=3)
+        b = M.reference_decode(CFG, W, [[5, 6]], steps=3)
+        assert a == b
+
+    def test_batch_invariance(self):
+        """A request's output must not depend on its batch-mates."""
+        solo = M.reference_decode(CFG, W, [[7, 8, 9]], steps=3)[0]
+        pair = M.reference_decode(CFG, W, [[7, 8, 9], [100, 100, 100]], steps=3)[0]
+        assert solo == pair

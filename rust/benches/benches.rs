@@ -1,0 +1,216 @@
+//! Lamina bench suite (`cargo bench`) — custom harness (no criterion in the
+//! offline toolchain; see `util::bench`).
+//!
+//! Covers the serving hot paths (L3), the PJRT execution path (runtime),
+//! and one end-to-end bench per paper experiment family:
+//!   * decode-step benches     → Figs. 10/12 (real tiny-model TBT)
+//!   * attention-exec benches  → Fig. 3 (kernel-side cost vs batch/seq)
+//!   * overlap on/off bench    → Fig. 14
+//!   * transport benches       → Fig. 13
+//!   * simulator benches       → Figs. 10–12 regeneration cost
+//!   * coordinator micro       → batcher/KV/min-cut/pipeline hot paths
+//!
+//! Env: LAMINA_BENCH_QUICK=1 shrinks budgets (CI smoke).
+
+use lamina::baseline::vllm::{run_vllm, VllmConfig};
+use lamina::coordinator::batcher::ContinuousBatcher;
+use lamina::coordinator::sim::{run_lamina, wave_cost, LaminaConfig};
+use lamina::devices::specs::{H100, H20, LLAMA3_70B};
+use lamina::kvcache::{BlockAllocator, KvRegistry};
+use lamina::netsim::stack::{FHBN, LINE_RATE_400G};
+use lamina::netsim::transport::link;
+use lamina::opgraph::builder::{build_decode_graph, llama3_70b_shape, tiny_shape};
+use lamina::opgraph::schedule::emit_programs;
+use lamina::opgraph::slicer::split_at_attention;
+use lamina::runtime::engine::Engine;
+use lamina::runtime::host::HostTensor;
+use lamina::trace::{fixed_length, synthesize, AZURE_CONV};
+use lamina::util::bench::{black_box, Bench};
+use lamina::util::json::Json;
+use lamina::workers::{DisaggPipeline, PipelineOpts};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    bench_coordinator(&mut b);
+    bench_opgraph(&mut b);
+    bench_transport(&mut b);
+    bench_simulators(&mut b);
+    if artifacts_dir().join("manifest.json").exists() {
+        bench_runtime(&mut b);
+        bench_pipeline(&mut b);
+    } else {
+        eprintln!("NOTE: artifacts/ missing — skipping PJRT benches (run `make artifacts`)");
+    }
+
+    print!("{}", b.summary());
+}
+
+// ---- L3 coordinator micro-benches ---------------------------------------
+
+fn bench_coordinator(b: &mut Bench) {
+    // continuous batcher: admission + step over a realistic backlog
+    let reqs = synthesize(&AZURE_CONV, 4096, 1);
+    b.run("batcher/admit+step (4k backlog)", || {
+        let mut batcher = ContinuousBatcher::new(500_000, 256);
+        batcher.submit_all(reqs.iter().copied());
+        batcher.admit();
+        for _ in 0..8 {
+            black_box(batcher.step());
+            batcher.admit();
+        }
+    });
+
+    // KV block allocator hot path
+    b.run("kvcache/alloc+release (256 blocks)", || {
+        let mut a = BlockAllocator::new(4096, 16);
+        let blocks = a.alloc_n(256).unwrap();
+        a.release_all(&blocks);
+        black_box(a.free_blocks());
+    });
+
+    b.run("kvcache/registry admit-append-evict", || {
+        let mut r = KvRegistry::new(8192, 16);
+        for id in 0..64 {
+            r.admit(id, 100).unwrap();
+        }
+        for id in 0..64 {
+            for _ in 0..4 {
+                r.append(id).unwrap();
+            }
+        }
+        for id in 0..64 {
+            r.evict(id);
+        }
+        black_box(r.live_requests());
+    });
+
+    // per-iteration cost-model evaluation (the sim's inner loop)
+    let cfg = LaminaConfig::standard(&LLAMA3_70B, &H100, &H20, (2, 4), &FHBN);
+    b.run("sim/wave_cost (70B, B=256)", || {
+        black_box(wave_cost(&cfg, 256, 256 * 4096));
+    });
+}
+
+// ---- model-converter benches ---------------------------------------------
+
+fn bench_opgraph(b: &mut Bench) {
+    b.run("opgraph/build tiny graph", || {
+        black_box(build_decode_graph(tiny_shape()));
+    });
+    b.run("opgraph/split 80-layer graph (min-cut ×80)", || {
+        let dg = build_decode_graph(llama3_70b_shape());
+        black_box(split_at_attention(&dg));
+    });
+    let dg = build_decode_graph(llama3_70b_shape());
+    let sr = split_at_attention(&dg);
+    b.run("opgraph/emit 81 slice programs", || {
+        black_box(emit_programs(&dg, &sr));
+    });
+}
+
+// ---- network transport ----------------------------------------------------
+
+fn bench_transport(b: &mut Bench) {
+    let (a, z) = link::<Vec<u8>>(&FHBN, LINE_RATE_400G, 0.0);
+    let payload = vec![0u8; 4096];
+    b.run("transport/send+recv 4 KiB (unpaced)", || {
+        a.send(payload.clone(), 4096).unwrap();
+        black_box(z.recv().unwrap());
+    });
+
+    b.run("netsim/pingpong sweep (Fig. 13 data)", || {
+        let sizes = lamina::netsim::pingpong::default_sizes();
+        black_box(lamina::netsim::pingpong::sweep(&sizes, LINE_RATE_400G));
+    });
+}
+
+// ---- paper-scale simulators (one per serving figure) ----------------------
+
+fn bench_simulators(b: &mut Bench) {
+    let reqs = fixed_length(128, 2048, 4);
+    let lam = LaminaConfig::standard(&LLAMA3_70B, &H100, &H20, (2, 4), &FHBN);
+    b.run("sim/fig10 lamina run (128 reqs)", || {
+        black_box(run_lamina(&lam, &reqs));
+    });
+    let vll = VllmConfig::standard(&LLAMA3_70B, &H100, 4);
+    b.run("sim/fig10 vllm run (128 reqs)", || {
+        black_box(run_vllm(&vll, &reqs));
+    });
+}
+
+// ---- PJRT runtime (real artifacts) ----------------------------------------
+
+fn bench_runtime(b: &mut Bench) {
+    let engine = Engine::load(artifacts_dir()).expect("engine");
+    engine.warmup().expect("warmup");
+    let mc = engine.manifest.config.clone();
+    let hd = mc.head_dim;
+
+    // slice_mid at batch buckets (the model worker's dominant call)
+    for &bucket in &[1usize, 8] {
+        let attn_out = HostTensor::zeros_f32(vec![bucket, mc.heads, hd]);
+        let resid = HostTensor::zeros_f32(vec![bucket, mc.d]);
+        let pos = HostTensor::i32(vec![bucket], vec![0; bucket]);
+        let weights: Vec<String> = [
+            "layer0.wo", "layer0.ffn_norm", "layer0.w_gate", "layer0.w_up",
+            "layer0.w_down", "layer1.attn_norm", "layer1.wq", "layer1.wk",
+            "layer1.wv",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        b.run(&format!("pjrt/slice_mid b{bucket}"), || {
+            black_box(
+                engine
+                    .execute("slice_mid", bucket, None, &[&attn_out, &resid, &pos], &weights)
+                    .unwrap(),
+            );
+        });
+    }
+
+    // attention at batch × seq buckets (the attention worker's call)
+    for &(bucket, seq) in &[(1usize, 64usize), (8, 64), (8, 256)] {
+        let q = HostTensor::zeros_f32(vec![bucket, mc.heads, hd]);
+        let kc = HostTensor::zeros_f32(vec![bucket, mc.kv_heads, seq, hd]);
+        let vc = HostTensor::zeros_f32(vec![bucket, mc.kv_heads, seq, hd]);
+        let lens = HostTensor::i32(vec![bucket], vec![seq as i32 / 2; bucket]);
+        b.run(&format!("pjrt/attention b{bucket} s{seq}"), || {
+            black_box(
+                engine
+                    .execute_raw("attention", bucket, Some(seq), &[&q, &kc, &vc, &lens])
+                    .unwrap(),
+            );
+        });
+    }
+}
+
+// ---- end-to-end decode steps (Figs. 10/12/14 on the real stack) -----------
+
+fn bench_pipeline(b: &mut Bench) {
+    for (label, overlap) in [("overlap", true), ("sequential", false)] {
+        let pipe = DisaggPipeline::start(PipelineOpts {
+            overlap,
+            ..PipelineOpts::new(artifacts_dir())
+        })
+        .expect("pipeline");
+        // warm every bucket once
+        pipe.decode(&[vec![1, 2, 3]], 2).unwrap();
+        let prompts: Vec<Vec<i32>> = (0..4).map(|i| vec![1 + i, 2, 3]).collect();
+        pipe.decode(&prompts, 2).unwrap();
+        b.run(&format!("e2e/decode-step b4 ({label})"), || {
+            black_box(pipe.decode(&prompts, 1).unwrap());
+        });
+        pipe.shutdown();
+    }
+
+    // JSON substrate on a real manifest (startup path)
+    let text = std::fs::read_to_string(artifacts_dir().join("manifest.json")).unwrap();
+    b.run("json/parse manifest", || {
+        black_box(Json::parse(&text).unwrap());
+    });
+}

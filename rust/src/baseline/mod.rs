@@ -1,0 +1,6 @@
+//! Baseline systems the paper compares against (vLLM on homogeneous H100s,
+//! decode-only, continuous batching).
+
+pub mod vllm;
+
+pub use vllm::{run_vllm, VllmConfig};

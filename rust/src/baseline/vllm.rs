@@ -1,0 +1,159 @@
+//! Homogeneous tensor-parallel decode baseline (the paper's §6 comparator:
+//! vLLM on H100s, prefill removed, continuous batching, paged KV).
+//!
+//! Same batching/admission logic as the Lamina simulator, same roofline cost
+//! model, same device specs — the only differences are architectural: model
+//! and attention share the H100s (no disaggregation, no pipelining, no
+//! cross-pool network), and KV capacity is what the weights leave free.
+
+use crate::coordinator::batcher::ContinuousBatcher;
+use crate::coordinator::sim::SimReport;
+use crate::devices::roofline::{atime_tokens, max_batch_homogeneous, mtime};
+use crate::devices::specs::{DeviceSpec, LlmSpec};
+use crate::metrics::{ServeMetrics, StepBreakdown};
+use crate::trace::Request;
+
+#[derive(Debug, Clone)]
+pub struct VllmConfig {
+    pub model: &'static LlmSpec,
+    pub dev: &'static DeviceSpec,
+    /// Tensor-parallel degree = number of GPUs.
+    pub tp: usize,
+    pub mem_util: f64,
+    pub sched_overhead_s: f64,
+    /// vLLM's `max_num_seqs` scheduler cap (default 256 upstream).
+    pub max_batch: usize,
+    /// Achievable fraction of peak HBM bandwidth for PagedAttention:
+    /// block-table indirection and fragmented 16-token block reads keep the
+    /// paged kernel below the dense-streaming efficiency the attention
+    /// workers reach on contiguous caches (Lamina stores per-worker dense
+    /// shards). 0.62 is a conservative published-benchmarks figure.
+    pub attn_bw_eff: f64,
+}
+
+impl VllmConfig {
+    pub fn standard(model: &'static LlmSpec, dev: &'static DeviceSpec, tp: usize) -> Self {
+        VllmConfig {
+            model,
+            dev,
+            tp,
+            mem_util: 0.92,
+            sched_overhead_s: 100e-6,
+            max_batch: 256,
+            attn_bw_eff: 0.62,
+        }
+    }
+
+    pub fn cost_per_hour(&self) -> f64 {
+        self.tp as f64 * self.dev.price_hr
+    }
+
+    /// KV token capacity: pool memory minus weights.
+    pub fn kv_capacity_tokens(&self) -> usize {
+        max_batch_homogeneous(self.model, self.dev, self.tp, 1, self.mem_util)
+    }
+
+    /// Whether the model even fits on this pool.
+    pub fn fits(&self) -> bool {
+        self.model.param_bytes() < self.dev.mem_bytes() * self.tp as f64 * self.mem_util
+    }
+}
+
+/// One decode iteration's cost on the homogeneous pool.
+pub fn vllm_step_cost(cfg: &VllmConfig, batch: usize, total_ctx: usize) -> StepBreakdown {
+    let m = mtime(cfg.model, cfg.dev, batch, cfg.tp);
+    let a = atime_tokens(cfg.model, cfg.dev, total_ctx as f64, cfg.tp);
+    // attention is memory-bound: paged-gather efficiency scales its time
+    let attn_s = a.time_s * (cfg.dev.bw_eff / cfg.attn_bw_eff);
+    StepBreakdown {
+        model_s: m.time_s,
+        attn_s,
+        network_s: 0.0, // NVLink collectives are inside mtime
+        sched_s: cfg.sched_overhead_s,
+        total_s: m.time_s + attn_s + cfg.sched_overhead_s,
+    }
+}
+
+/// Closed-loop decode-only run (mirrors `run_lamina`).
+pub fn run_vllm(cfg: &VllmConfig, requests: &[Request]) -> SimReport {
+    assert!(cfg.fits(), "{} does not fit on {}×{}", cfg.model.name, cfg.tp, cfg.dev.name);
+    let mut batcher = ContinuousBatcher::new(cfg.kv_capacity_tokens(), cfg.max_batch);
+    batcher.submit_all(requests.iter().copied());
+
+    let mut metrics = ServeMetrics::new();
+    let mut iters = 0u64;
+    while !batcher.is_idle() {
+        iters += 1;
+        assert!(iters < 100_000_000, "simulation not draining");
+        batcher.admit();
+        if batcher.batch_size() == 0 {
+            break; // remaining requests can never fit
+        }
+        // Steady-state gating: drop the drain tail (see run_lamina).
+        let loaded = batcher.waiting_len() > 0;
+        let bd = vllm_step_cost(cfg, batcher.batch_size(), batcher.total_context());
+        let (batch, done) = batcher.step();
+        metrics.record_completion(done.len() as u64);
+        if loaded || metrics.steps() == 0 {
+            metrics.record_step(batch, bd);
+        }
+    }
+
+    let cost = cfg.cost_per_hour();
+    let thr = metrics.throughput();
+    SimReport { metrics, config_cost_hr: cost, tokens_per_dollar: thr * 3600.0 / cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::specs::{H100, LLAMA3_70B, LLAMA_33B, LLAMA_65B};
+    use crate::trace::fixed_length;
+
+    #[test]
+    fn model_fit_checks() {
+        assert!(VllmConfig::standard(&LLAMA_33B, &H100, 2).fits());
+        assert!(!VllmConfig::standard(&LLAMA3_70B, &H100, 1).fits());
+        assert!(VllmConfig::standard(&LLAMA3_70B, &H100, 4).fits());
+    }
+
+    #[test]
+    fn kv_capacity_small_after_weights() {
+        // 4×H100 = 320 GB; 70B weights 137.5 GB → ~157 GB KV at 0.92 util.
+        let cfg = VllmConfig::standard(&LLAMA3_70B, &H100, 4);
+        let cap = cfg.kv_capacity_tokens();
+        // 157 GB / 327 680 B per token ≈ 480k tokens
+        assert!(cap > 300_000 && cap < 600_000, "cap={cap}");
+        // For MHA 65B it is far smaller: weights 130 GB, KV/token 2.6 MB.
+        let cfg65 = VllmConfig::standard(&LLAMA_65B, &H100, 4);
+        assert!(cfg65.kv_capacity_tokens() < 80_000);
+    }
+
+    #[test]
+    fn drains_and_counts() {
+        let cfg = VllmConfig::standard(&LLAMA_33B, &H100, 2);
+        let reqs = fixed_length(32, 512, 8);
+        let rep = run_vllm(&cfg, &reqs);
+        assert_eq!(rep.metrics.requests_completed, 32);
+        // steady-state gating records at most the total token count
+        assert!(rep.metrics.tokens_generated > 0);
+        assert!(rep.metrics.tokens_generated <= 32 * 8);
+    }
+
+    #[test]
+    fn throughput_positive_and_batch_bounded() {
+        let cfg = VllmConfig::standard(&LLAMA_65B, &H100, 4);
+        let reqs = fixed_length(256, 8192, 8);
+        let rep = run_vllm(&cfg, &reqs);
+        assert!(rep.metrics.throughput() > 0.0);
+        // 65B at 8k ctx: capacity ~55k tokens → batch ≲ 7
+        assert!(rep.metrics.mean_batch() < 10.0, "batch={}", rep.metrics.mean_batch());
+    }
+
+    #[test]
+    #[should_panic]
+    fn run_panics_if_model_does_not_fit() {
+        let cfg = VllmConfig::standard(&LLAMA3_70B, &H100, 1);
+        run_vllm(&cfg, &fixed_length(1, 10, 1));
+    }
+}

@@ -1,0 +1,237 @@
+//! Continuous batcher (iteration-granularity batching, Orca-style; the
+//! paper's systems — both Lamina and the vLLM baseline — batch this way).
+//!
+//! Requests wait in a FIFO; each decode iteration the batcher admits waiting
+//! requests while (a) the KV capacity can hold their *full* trajectory
+//! (prompt + all generated tokens — conservative reservation, no
+//! preemption), and (b) the batch-size cap allows. Completed requests leave
+//! and free their reservation at iteration boundaries.
+
+use std::collections::VecDeque;
+
+use crate::trace::Request;
+
+/// A request admitted to the running set.
+#[derive(Debug, Clone, Copy)]
+pub struct Running {
+    pub req: Request,
+    /// Tokens currently in the KV cache (prompt + generated so far).
+    pub context: usize,
+    /// Tokens generated so far.
+    pub generated: usize,
+    /// Iteration index at admission (for latency accounting).
+    pub admitted_at: u64,
+}
+
+impl Running {
+    pub fn done(&self) -> bool {
+        self.generated >= self.req.gen_tokens
+    }
+}
+
+/// Continuous batcher with token-reservation admission control.
+#[derive(Debug)]
+pub struct ContinuousBatcher {
+    waiting: VecDeque<Request>,
+    running: Vec<Running>,
+    /// Total KV token capacity of the serving pool.
+    capacity_tokens: usize,
+    reserved_tokens: usize,
+    max_batch: usize,
+    iteration: u64,
+}
+
+impl ContinuousBatcher {
+    pub fn new(capacity_tokens: usize, max_batch: usize) -> Self {
+        assert!(max_batch > 0);
+        ContinuousBatcher {
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            capacity_tokens,
+            reserved_tokens: 0,
+            max_batch,
+            iteration: 0,
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.waiting.push_back(req);
+    }
+
+    pub fn submit_all(&mut self, reqs: impl IntoIterator<Item = Request>) {
+        for r in reqs {
+            self.submit(r);
+        }
+    }
+
+    /// Admit as many waiting requests as fit. Returns number admitted.
+    pub fn admit(&mut self) -> usize {
+        let mut n = 0;
+        while self.running.len() < self.max_batch {
+            let Some(front) = self.waiting.front() else { break };
+            let need = front.max_context();
+            if need > self.capacity_tokens {
+                // can never fit: reject outright (caller sees it dropped)
+                log::warn!("request {} needs {} tokens > capacity {}", front.id, need,
+                    self.capacity_tokens);
+                self.waiting.pop_front();
+                continue;
+            }
+            if self.reserved_tokens + need > self.capacity_tokens {
+                break; // FIFO: do not skip ahead (no head-of-line bypass)
+            }
+            let req = self.waiting.pop_front().unwrap();
+            self.reserved_tokens += need;
+            self.running.push(Running {
+                req,
+                context: req.prompt_tokens,
+                generated: 0,
+                admitted_at: self.iteration,
+            });
+            n += 1;
+        }
+        n
+    }
+
+    /// One decode iteration: every running request appends one token;
+    /// completed requests are removed and their reservation freed.
+    /// Returns (batch size this iteration, completed requests).
+    pub fn step(&mut self) -> (usize, Vec<Running>) {
+        self.iteration += 1;
+        let batch = self.running.len();
+        for r in &mut self.running {
+            r.context += 1;
+            r.generated += 1;
+        }
+        let mut done = Vec::new();
+        self.running.retain(|r| {
+            if r.done() {
+                done.push(*r);
+                false
+            } else {
+                true
+            }
+        });
+        for d in &done {
+            self.reserved_tokens -= d.req.max_context();
+        }
+        (batch, done)
+    }
+
+    pub fn running(&self) -> &[Running] {
+        &self.running
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.running.is_empty() && self.waiting.is_empty()
+    }
+
+    /// Total context tokens currently cached (drives ATIME).
+    pub fn total_context(&self) -> usize {
+        self.running.iter().map(|r| r.context).sum()
+    }
+
+    pub fn reserved_tokens(&self) -> usize {
+        self.reserved_tokens
+    }
+
+    pub fn capacity_tokens(&self) -> usize {
+        self.capacity_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: usize, gen: usize) -> Request {
+        Request { id, prompt_tokens: prompt, gen_tokens: gen }
+    }
+
+    #[test]
+    fn admits_until_capacity() {
+        let mut b = ContinuousBatcher::new(1000, 64);
+        b.submit_all([req(0, 300, 100), req(1, 300, 100), req(2, 300, 100)]);
+        assert_eq!(b.admit(), 2); // 400+400 fits; third would need 1200
+        assert_eq!(b.batch_size(), 2);
+        assert_eq!(b.reserved_tokens(), 800);
+        assert_eq!(b.waiting_len(), 1);
+    }
+
+    #[test]
+    fn admits_more_after_completion() {
+        let mut b = ContinuousBatcher::new(460, 64);
+        b.submit_all([req(0, 100, 2), req(1, 300, 50), req(2, 50, 50)]);
+        assert_eq!(b.admit(), 2); // 102 + 350 = 452 ≤ 460; req 2 must wait
+        assert_eq!(b.waiting_len(), 1);
+        // run until req 0 finishes
+        let (_, done) = b.step();
+        assert!(done.is_empty());
+        let (_, done) = b.step();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].req.id, 0);
+        assert_eq!(b.reserved_tokens(), 350);
+    }
+
+    #[test]
+    fn batch_cap_respected() {
+        let mut b = ContinuousBatcher::new(1_000_000, 4);
+        b.submit_all((0..10).map(|i| req(i, 10, 10)));
+        assert_eq!(b.admit(), 4);
+        assert_eq!(b.batch_size(), 4);
+    }
+
+    #[test]
+    fn fifo_no_bypass() {
+        // A huge head request blocks smaller ones behind it (documented
+        // FIFO behaviour — head-of-line blocking, no reorder).
+        let mut b = ContinuousBatcher::new(1000, 64);
+        b.submit_all([req(0, 600, 100), req(1, 900, 50), req(2, 10, 10)]);
+        assert_eq!(b.admit(), 1); // only req 0
+        assert_eq!(b.waiting_len(), 2);
+    }
+
+    #[test]
+    fn oversized_request_dropped() {
+        let mut b = ContinuousBatcher::new(100, 8);
+        b.submit_all([req(0, 200, 10), req(1, 20, 10)]);
+        assert_eq!(b.admit(), 1);
+        assert_eq!(b.running()[0].req.id, 1);
+    }
+
+    #[test]
+    fn step_counts_and_context_growth() {
+        let mut b = ContinuousBatcher::new(10_000, 8);
+        b.submit(req(0, 100, 5));
+        b.admit();
+        let (n, _) = b.step();
+        assert_eq!(n, 1);
+        assert_eq!(b.running()[0].context, 101);
+        assert_eq!(b.total_context(), 101);
+    }
+
+    #[test]
+    fn drains_to_idle() {
+        let mut b = ContinuousBatcher::new(10_000, 8);
+        b.submit_all((0..5).map(|i| req(i, 50, 3)));
+        let mut iters = 0;
+        let mut completed = 0;
+        while !b.is_idle() {
+            b.admit();
+            let (_, done) = b.step();
+            completed += done.len();
+            iters += 1;
+            assert!(iters < 100, "not draining");
+        }
+        assert_eq!(completed, 5);
+        assert_eq!(b.reserved_tokens(), 0);
+    }
+}

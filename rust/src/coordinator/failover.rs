@@ -1,0 +1,171 @@
+//! Fault tolerance (paper §5):
+//!
+//! * **model workers are stateless** — all request state (the KV caches)
+//!   lives on the attention workers, so a failed model worker is replaced by
+//!   a spare and decoding continues without losing progress;
+//! * **attention-worker failure** loses KV shards — the cache is rebuilt by
+//!   re-running the prompt + already-generated tokens (kept in the service
+//!   front-end) through the prefill path on the surviving pool.
+
+use crate::devices::roofline::mtime;
+use crate::devices::specs::{DeviceSpec, LlmSpec};
+
+/// Worker health state tracked by the global scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerState {
+    Healthy,
+    Failed,
+    /// Replacement spun up, KV rebuild in progress (attention workers only).
+    Rebuilding,
+}
+
+/// Pool membership + spare tracking for one worker class.
+#[derive(Debug)]
+pub struct WorkerPool {
+    pub name: &'static str,
+    states: Vec<WorkerState>,
+    spares: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FailoverError(pub String);
+
+impl std::fmt::Display for FailoverError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for FailoverError {}
+
+impl WorkerPool {
+    pub fn new(name: &'static str, workers: usize, spares: usize) -> Self {
+        WorkerPool { name, states: vec![WorkerState::Healthy; workers], spares }
+    }
+
+    pub fn healthy(&self) -> usize {
+        self.states.iter().filter(|s| **s == WorkerState::Healthy).count()
+    }
+
+    pub fn size(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn state(&self, i: usize) -> WorkerState {
+        self.states[i]
+    }
+
+    pub fn fail(&mut self, i: usize) {
+        self.states[i] = WorkerState::Failed;
+    }
+
+    /// Swap in a spare for a failed worker. Model workers become healthy
+    /// immediately (stateless); attention workers enter Rebuilding.
+    pub fn replace(&mut self, i: usize, stateless: bool) -> Result<(), FailoverError> {
+        if self.states[i] != WorkerState::Failed {
+            return Err(FailoverError(format!("{} worker {i} is not failed", self.name)));
+        }
+        if self.spares == 0 {
+            return Err(FailoverError(format!("{} pool out of spares", self.name)));
+        }
+        self.spares -= 1;
+        self.states[i] = if stateless { WorkerState::Healthy } else { WorkerState::Rebuilding };
+        Ok(())
+    }
+
+    pub fn finish_rebuild(&mut self, i: usize) {
+        assert_eq!(self.states[i], WorkerState::Rebuilding);
+        self.states[i] = WorkerState::Healthy;
+    }
+}
+
+/// Time to reconstruct the lost KV shard by re-processing every affected
+/// request's tokens through the model (prefill-style, compute-bound on the
+/// model pool). `tokens_lost` = Σ per-request context length × the failed
+/// worker's head share.
+pub fn kv_rebuild_time(
+    model: &LlmSpec,
+    model_dev: &DeviceSpec,
+    tp: usize,
+    tokens_lost: usize,
+    prefill_chunk: usize,
+) -> f64 {
+    if tokens_lost == 0 {
+        return 0.0;
+    }
+    // Re-run tokens in chunks through the non-attention path (the dominant
+    // cost; attention during rebuild is over the partial rebuilt cache and
+    // folded into the same roofline bound).
+    let chunks = tokens_lost.div_ceil(prefill_chunk);
+    let per_chunk = mtime(model, model_dev, prefill_chunk.max(1), tp).time_s;
+    chunks as f64 * per_chunk
+}
+
+/// Head-share of KV lost when one of `workers` attention workers fails
+/// under head-level partitioning.
+pub fn lost_fraction(workers: usize) -> f64 {
+    1.0 / workers as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::specs::{H100, LLAMA3_70B};
+
+    #[test]
+    fn model_worker_swap_is_instant() {
+        let mut pool = WorkerPool::new("model", 2, 1);
+        pool.fail(0);
+        assert_eq!(pool.healthy(), 1);
+        pool.replace(0, true).unwrap();
+        assert_eq!(pool.healthy(), 2);
+        assert_eq!(pool.state(0), WorkerState::Healthy);
+    }
+
+    #[test]
+    fn attention_worker_rebuilds() {
+        let mut pool = WorkerPool::new("attn", 4, 1);
+        pool.fail(2);
+        pool.replace(2, false).unwrap();
+        assert_eq!(pool.state(2), WorkerState::Rebuilding);
+        assert_eq!(pool.healthy(), 3);
+        pool.finish_rebuild(2);
+        assert_eq!(pool.healthy(), 4);
+    }
+
+    #[test]
+    fn no_spares_errors() {
+        let mut pool = WorkerPool::new("model", 2, 0);
+        pool.fail(1);
+        assert!(pool.replace(1, true).is_err());
+    }
+
+    #[test]
+    fn replace_healthy_rejected() {
+        let mut pool = WorkerPool::new("model", 2, 1);
+        assert!(pool.replace(0, true).is_err());
+    }
+
+    #[test]
+    fn rebuild_time_scales_with_tokens() {
+        let t1 = kv_rebuild_time(&LLAMA3_70B, &H100, 2, 100_000, 512);
+        let t2 = kv_rebuild_time(&LLAMA3_70B, &H100, 2, 200_000, 512);
+        assert!(t1 > 0.0);
+        assert!((t2 / t1 - 2.0).abs() < 0.05);
+        assert_eq!(kv_rebuild_time(&LLAMA3_70B, &H100, 2, 0, 512), 0.0);
+    }
+
+    #[test]
+    fn rebuild_seconds_not_hours() {
+        // Losing 1/4 of a 300-request × 4k-context batch's KV must rebuild
+        // in seconds — the practicality claim behind §5.
+        let tokens = 300 * 4096 / 4;
+        let t = kv_rebuild_time(&LLAMA3_70B, &H100, 2, tokens, 512);
+        assert!(t < 60.0, "rebuild {t}s");
+    }
+
+    #[test]
+    fn lost_fraction_head_level() {
+        assert_eq!(lost_fraction(4), 0.25);
+    }
+}

@@ -1,0 +1,14 @@
+//! The Lamina coordinator — the paper's L3 systems contribution: continuous
+//! batching, rotational staggered pipelining, DOP planning, failover, and
+//! the serving simulator that drives the paper-scale experiments.
+
+pub mod batcher;
+pub mod failover;
+pub mod openloop;
+pub mod pipeline;
+pub mod planner;
+pub mod sim;
+
+pub use batcher::ContinuousBatcher;
+pub use pipeline::StaggerPlan;
+pub use sim::{run_lamina, LaminaConfig, SimReport};

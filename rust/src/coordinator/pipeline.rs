@@ -1,0 +1,176 @@
+//! Rotational staggered pipelining (paper §4.3, Fig. 8).
+//!
+//! With a single batch, the model pool idles while the attention pool works
+//! and vice versa. Lamina runs `n` batches concurrently over `n-1` model
+//! replicas, each replica phase-shifted by `t_m/(n-1)`; all batches share
+//! the attention pool. Choosing the attention-worker count so that
+//! `t_a = t_m/(n-1)` makes the schedule bubble-free, and the rotation
+//! `replica(j, k) = (j + k) mod (n-1)` keeps hand-offs conflict-free.
+
+/// Static description of a staggered pipeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StaggerPlan {
+    /// Number of concurrent batches n.
+    pub batches: usize,
+    /// Number of model replicas (n-1).
+    pub replicas: usize,
+    /// Per-batch model (non-attention) time for one full decode step.
+    pub t_model: f64,
+    /// Per-batch attention time for one full decode step.
+    pub t_attn: f64,
+}
+
+impl StaggerPlan {
+    pub fn new(batches: usize, t_model: f64, t_attn: f64) -> Self {
+        assert!(batches >= 1);
+        StaggerPlan { batches, replicas: batches.saturating_sub(1).max(1), t_model, t_attn }
+    }
+
+    /// The stagger offset between consecutive batch starts.
+    pub fn stagger(&self) -> f64 {
+        self.t_model / self.replicas as f64
+    }
+
+    /// Bubble-free iff t_a ≤ t_m/(n-1): attention (plus hand-off) finishes
+    /// before the batch's next replica slot opens.
+    pub fn is_bubble_free(&self, tolerance: f64) -> bool {
+        self.t_attn <= self.stagger() * (1.0 + tolerance)
+    }
+
+    /// Steady-state time between tokens for each batch: one model pass plus
+    /// the attention phases it must wait through. Bubble-free schedules give
+    /// `t_m + stagger`; otherwise attention is the bottleneck and batches
+    /// queue behind `n · t_a`.
+    pub fn tbt(&self) -> f64 {
+        if self.batches == 1 {
+            // no pipelining: strictly sequential model → attention
+            return self.t_model + self.t_attn;
+        }
+        let bubble_free = self.t_model + self.stagger();
+        let attn_bound = self.batches as f64 * self.t_attn;
+        let model_bound =
+            (self.batches as f64 / self.replicas as f64) * self.t_model;
+        bubble_free.max(attn_bound).max(model_bound)
+    }
+
+    /// Aggregate tokens/s per unit batch size (each of the n batches emits
+    /// one token per TBT).
+    pub fn throughput_factor(&self) -> f64 {
+        self.batches as f64 / self.tbt()
+    }
+
+    /// Model-pool utilisation in steady state.
+    pub fn model_utilization(&self) -> f64 {
+        (self.batches as f64 * self.t_model) / (self.replicas as f64 * self.tbt())
+    }
+
+    /// Attention-pool utilisation in steady state.
+    pub fn attn_utilization(&self) -> f64 {
+        (self.batches as f64 * self.t_attn) / self.tbt()
+    }
+
+    /// The replica executing slice k of batch j (paper: (j+k) mod (n-1)+1;
+    /// we index replicas from 0).
+    pub fn replica_for(&self, batch: usize, slice: usize) -> usize {
+        (batch + slice) % self.replicas
+    }
+
+    /// Context migration between consecutive slices is needed iff the
+    /// replica changes — never for n = 2 (paper §4.3).
+    pub fn needs_migration(&self) -> bool {
+        self.replicas > 1
+    }
+}
+
+/// Pick the smallest attention-worker count `b` such that the pipeline is
+/// bubble-free (t_a(b) ≤ t_m/(n-1)), given attention time with one worker
+/// scales as `t_attn_one / b`. Returns None if even `max_workers` cannot.
+pub fn min_attn_workers_for_bubble_free(
+    t_model: f64,
+    t_attn_one_worker: f64,
+    batches: usize,
+    max_workers: usize,
+) -> Option<usize> {
+    let replicas = batches.saturating_sub(1).max(1);
+    let budget = t_model / replicas as f64;
+    (1..=max_workers).find(|&b| t_attn_one_worker / b as f64 <= budget)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_batch_single_replica() {
+        let p = StaggerPlan::new(2, 10e-3, 8e-3);
+        assert_eq!(p.replicas, 1);
+        assert!(!p.needs_migration());
+        assert!(p.is_bubble_free(0.0)); // 8 ≤ 10
+        // TBT = t_m + stagger = 20 ms; throughput 2 tokens per 20 ms.
+        assert!((p.tbt() - 20e-3).abs() < 1e-12);
+        assert!((p.throughput_factor() - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bubble_free_condition() {
+        // n=3 → stagger = t_m/2.
+        let good = StaggerPlan::new(3, 10e-3, 5e-3);
+        assert!(good.is_bubble_free(0.0));
+        let bad = StaggerPlan::new(3, 10e-3, 6e-3);
+        assert!(!bad.is_bubble_free(0.0));
+    }
+
+    #[test]
+    fn attention_bound_when_underprovisioned() {
+        // t_a ≫ stagger: TBT driven by n·t_a.
+        let p = StaggerPlan::new(2, 4e-3, 10e-3);
+        assert!((p.tbt() - 20e-3).abs() < 1e-12);
+        assert!(p.attn_utilization() > 0.99);
+    }
+
+    #[test]
+    fn utilizations_bounded() {
+        for (n, tm, ta) in [(2, 10e-3, 9e-3), (4, 12e-3, 3e-3), (2, 5e-3, 20e-3)] {
+            let p = StaggerPlan::new(n, tm, ta);
+            assert!(p.model_utilization() <= 1.0 + 1e-9, "{p:?}");
+            assert!(p.attn_utilization() <= 1.0 + 1e-9, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn bubble_free_pipeline_fully_uses_model_pool() {
+        // Perfectly tuned: t_a == stagger → model util = n/(n-1)·t_m / tbt,
+        // with tbt = t_m + t_m/(n-1) → util = 1.
+        let p = StaggerPlan::new(3, 10e-3, 5e-3);
+        assert!((p.model_utilization() - 1.0).abs() < 1e-9);
+        assert!((p.attn_utilization() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rotation_is_conflict_free() {
+        // At any slice step k, distinct batches map to distinct replicas.
+        let p = StaggerPlan::new(4, 1.0, 0.3);
+        for k in 0..10 {
+            let mut used = std::collections::BTreeSet::new();
+            for j in 0..p.replicas {
+                assert!(used.insert(p.replica_for(j, k)));
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_advances_each_slice() {
+        let p = StaggerPlan::new(3, 1.0, 0.5);
+        assert_ne!(p.replica_for(0, 0), p.replica_for(0, 1));
+        assert_eq!(p.replica_for(0, 0), p.replica_for(0, p.replicas));
+    }
+
+    #[test]
+    fn min_workers_search() {
+        // t_m = 10 ms, one-worker attention = 40 ms, n = 2 → need 4 workers.
+        assert_eq!(min_attn_workers_for_bubble_free(10e-3, 40e-3, 2, 8), Some(4));
+        assert_eq!(min_attn_workers_for_bubble_free(10e-3, 40e-3, 2, 3), None);
+        // n=3 halves the budget → 8 workers.
+        assert_eq!(min_attn_workers_for_bubble_free(10e-3, 40e-3, 3, 8), Some(8));
+    }
+}

@@ -1,0 +1,316 @@
+//! Decode-serving simulator for the disaggregated (Lamina) engine at paper
+//! scale (LLaMA-33B/65B/70B on H100+H20 pools).
+//!
+//! The real testbed is hardware we do not have (DESIGN.md §2): iteration
+//! costs come from the calibrated roofline model (`devices::roofline`) and
+//! the network-stack models (`netsim::stack`), while *all the systems logic*
+//! — continuous batching, KV admission control, staggered pipelining,
+//! per-layer communication with optional resource-utilisation overlapping —
+//! runs for real. This regenerates Figs. 10, 11, 12 and 14.
+
+use crate::coordinator::batcher::ContinuousBatcher;
+use crate::coordinator::pipeline::StaggerPlan;
+use crate::devices::roofline::{atime_tokens, max_batch_disaggregated, mtime};
+use crate::devices::specs::{DeviceSpec, LlmSpec};
+use crate::metrics::{ServeMetrics, StepBreakdown};
+use crate::netsim::stack::{NetStackModel, LINE_RATE_400G};
+use crate::opgraph::schedule::{layer_latency_overlapped, layer_latency_sequential, LayerTimings};
+use crate::trace::Request;
+
+/// Configuration of one Lamina deployment.
+#[derive(Debug, Clone)]
+pub struct LaminaConfig {
+    pub model: &'static LlmSpec,
+    pub model_dev: &'static DeviceSpec,
+    pub attn_dev: &'static DeviceSpec,
+    /// DOP = (a, b): `a` model GPUs (tensor-parallel, one replica per
+    /// `a/replicas` group) and `b` attention GPUs.
+    pub dop: (usize, usize),
+    /// Concurrent batches n (staggered pipelining); replicas = n-1.
+    pub concurrent_batches: usize,
+    pub stack: &'static NetStackModel,
+    /// Enable §4.2.2 resource-utilisation overlapping.
+    pub overlap: bool,
+    /// Fraction of attention-pool memory usable for KV.
+    pub mem_util: f64,
+    /// Per-iteration scheduling overhead (Ray-style task dispatch).
+    pub sched_overhead_s: f64,
+    /// Cap on per-wave batch size.
+    pub max_batch: usize,
+}
+
+impl LaminaConfig {
+    /// Table-5 style constructor: n = 2 concurrent batches, overlap on.
+    pub fn standard(
+        model: &'static LlmSpec,
+        model_dev: &'static DeviceSpec,
+        attn_dev: &'static DeviceSpec,
+        dop: (usize, usize),
+        stack: &'static NetStackModel,
+    ) -> Self {
+        LaminaConfig {
+            model,
+            model_dev,
+            attn_dev,
+            dop,
+            concurrent_batches: 2,
+            stack,
+            overlap: true,
+            mem_util: 0.92,
+            sched_overhead_s: 150e-6,
+            max_batch: 1024,
+        }
+    }
+
+    pub fn cost_per_hour(&self) -> f64 {
+        self.dop.0 as f64 * self.model_dev.price_hr + self.dop.1 as f64 * self.attn_dev.price_hr
+    }
+
+    /// Replicas of the model (n-1); `dop.0` GPUs are split across them.
+    pub fn replicas(&self) -> usize {
+        self.concurrent_batches.saturating_sub(1).max(1)
+    }
+
+    /// Tensor-parallel degree within one model replica.
+    pub fn tp_per_replica(&self) -> usize {
+        (self.dop.0 / self.replicas()).max(1)
+    }
+
+    /// KV capacity in tokens across the attention pool.
+    pub fn kv_capacity_tokens(&self) -> usize {
+        max_batch_disaggregated(self.model, self.attn_dev, self.dop.1, 1, self.mem_util)
+    }
+}
+
+/// Result of one simulated serving run.
+#[derive(Debug)]
+pub struct SimReport {
+    pub metrics: ServeMetrics,
+    pub config_cost_hr: f64,
+    /// Throughput normalised by $/hr (Fig. 11's cost-efficiency).
+    pub tokens_per_dollar: f64,
+}
+
+/// Per-iteration cost of one wave (used by the figure harnesses too).
+#[derive(Debug, Clone, Copy)]
+pub struct WaveCost {
+    pub t_model: f64,
+    pub t_attn: f64,
+    pub t_net_visible: f64,
+    pub tbt: f64,
+}
+
+/// Compute the decode-iteration cost for a wave of `batch` requests with
+/// `total_ctx` cached tokens under `cfg`.
+pub fn wave_cost(cfg: &LaminaConfig, batch: usize, total_ctx: usize) -> WaveCost {
+    let l = cfg.model.layers as f64;
+    let t_model = mtime(cfg.model, cfg.model_dev, batch, cfg.tp_per_replica()).time_s;
+    let t_attn = atime_tokens(cfg.model, cfg.attn_dev, total_ctx as f64, cfg.dop.1).time_s;
+
+    let e = cfg.model.elem_bytes;
+    let d = cfg.model.d as f64;
+    let g = cfg.model.gqa_group as f64;
+    let b = batch as f64;
+    let q_bytes = e * d * b;
+    let kv_bytes = 2.0 * e * d / g * b;
+    let out_bytes = e * d * b;
+
+    // Q is ready once the previous layer's FFN + Q-proj finish; only the
+    // K/V projections (2·d²/G of GEMM volume) can execute after SendQ.
+    // GEMM volume per slice ≈ o(1) + q(1) + kv(2/G) + ffn(3·3.5) in d² units.
+    let kv_share = (2.0 / g) / (2.0 + 2.0 / g + 10.5);
+    let t = LayerTimings {
+        t_slice: t_model / l,
+        q_ready_frac: 1.0 - kv_share,
+        t_attn_prev: t_attn / l,
+        t_attn_new: 2e-6,
+        net_q: cfg.stack.one_way(q_bytes, LINE_RATE_400G),
+        net_kv: cfg.stack.one_way(kv_bytes, LINE_RATE_400G),
+        net_out: cfg.stack.one_way(out_bytes, LINE_RATE_400G),
+    };
+    let per_layer = if cfg.overlap {
+        layer_latency_overlapped(&t)
+    } else {
+        layer_latency_sequential(&t)
+    };
+    let critical_path = per_layer * l;
+
+    // Steady-state TBT: the staggered pipeline bounds (shared pools) and the
+    // wave's own critical path.
+    let plan = StaggerPlan::new(cfg.concurrent_batches, t_model, t_attn);
+    let tbt = plan.tbt().max(critical_path) + cfg.sched_overhead_s;
+
+    WaveCost {
+        t_model,
+        t_attn,
+        t_net_visible: (critical_path - t_model - t_attn).max(0.0),
+        tbt,
+    }
+}
+
+/// Run a closed-loop decode-only serving simulation: all requests queued at
+/// t=0 (the paper's throughput experiments replay traces decode-only).
+pub fn run_lamina(cfg: &LaminaConfig, requests: &[Request]) -> SimReport {
+    let capacity = cfg.kv_capacity_tokens();
+    let n = cfg.concurrent_batches;
+    // one batcher per concurrent wave; KV capacity split evenly (all waves
+    // share the pool; even split is the steady-state share)
+    let mut waves: Vec<ContinuousBatcher> = (0..n)
+        .map(|_| ContinuousBatcher::new(capacity / n, cfg.max_batch))
+        .collect();
+    for (i, r) in requests.iter().enumerate() {
+        waves[i % n].submit(*r);
+    }
+
+    let mut metrics = ServeMetrics::new();
+    let max_iters = 100_000_000u64;
+    let mut iters = 0u64;
+    while waves.iter().any(|w| !w.is_idle()) {
+        iters += 1;
+        assert!(iters < max_iters, "simulation not draining");
+        let mut round_batch = 0usize;
+        let mut worst = WaveCost { t_model: 0.0, t_attn: 0.0, t_net_visible: 0.0, tbt: 0.0 };
+        for w in waves.iter_mut() {
+            w.admit();
+        }
+        // Steady-state measurement (the paper replays 8–23k-request traces
+        // and reports sustained throughput): only record while the system
+        // still has backlog — the drain tail is not steady state.
+        let loaded = waves.iter().all(|w| w.waiting_len() > 0);
+        // The staggered rounds share the attention pool: the round's TBT is
+        // the max over waves (they are phase-shifted, same period).
+        for w in waves.iter() {
+            if w.batch_size() == 0 {
+                continue;
+            }
+            let c = wave_cost(cfg, w.batch_size(), w.total_context());
+            if c.tbt > worst.tbt {
+                worst = c;
+            }
+        }
+        for w in waves.iter_mut() {
+            if w.batch_size() == 0 {
+                continue;
+            }
+            let (batch, done) = w.step();
+            round_batch += batch;
+            metrics.record_completion(done.len() as u64);
+        }
+        if round_batch == 0 {
+            // nothing running (all remaining requests too big) — bail
+            break;
+        }
+        if loaded || metrics.steps() == 0 {
+            metrics.record_step(
+                round_batch,
+                StepBreakdown {
+                    model_s: worst.t_model,
+                    attn_s: worst.t_attn,
+                    network_s: worst.t_net_visible,
+                    sched_s: cfg.sched_overhead_s,
+                    total_s: worst.tbt,
+                },
+            );
+        }
+    }
+
+    let cost = cfg.cost_per_hour();
+    let thr = metrics.throughput();
+    SimReport { metrics, config_cost_hr: cost, tokens_per_dollar: thr * 3600.0 / cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::specs::{H100, H20, LLAMA3_70B, LLAMA_65B};
+    use crate::netsim::stack::FHBN;
+    use crate::trace::fixed_length;
+
+    fn cfg70b() -> LaminaConfig {
+        LaminaConfig::standard(&LLAMA3_70B, &H100, &H20, (2, 4), &FHBN)
+    }
+
+    #[test]
+    fn drains_all_requests() {
+        let cfg = cfg70b();
+        let reqs = fixed_length(64, 1024, 8);
+        let rep = run_lamina(&cfg, &reqs);
+        assert_eq!(rep.metrics.requests_completed, 64);
+        // steady-state gating records at most the total token count
+        assert!(rep.metrics.tokens_generated > 0);
+        assert!(rep.metrics.tokens_generated <= 64 * 8);
+    }
+
+    #[test]
+    fn tbt_in_plausible_range() {
+        // 70B decode TBT on this class of hardware: tens of ms.
+        let cfg = cfg70b();
+        let reqs = fixed_length(128, 4096, 16);
+        let rep = run_lamina(&cfg, &reqs);
+        let tbt = rep.metrics.mean_tbt();
+        assert!(tbt > 5e-3 && tbt < 0.4, "tbt={tbt}");
+    }
+
+    #[test]
+    fn overlap_improves_tbt() {
+        // Like the paper's Fig. 14 protocol: rotational pipelining disabled
+        // so the critical path (where overlap acts) is the TBT.
+        let base = LaminaConfig { concurrent_batches: 1, ..cfg70b() };
+        let reqs = fixed_length(96, 4096, 8);
+        let on = run_lamina(&base, &reqs);
+        let off = run_lamina(&LaminaConfig { overlap: false, ..base }, &reqs);
+        assert!(
+            on.metrics.mean_tbt() < off.metrics.mean_tbt(),
+            "on={} off={}",
+            on.metrics.mean_tbt(),
+            off.metrics.mean_tbt()
+        );
+    }
+
+    #[test]
+    fn more_attention_workers_more_throughput() {
+        // Fig. 11: adding attention workers grows attainable batch.
+        let reqs = fixed_length(600, 4096, 8);
+        let small = run_lamina(
+            &LaminaConfig::standard(&LLAMA_65B, &H100, &H20, (2, 2), &FHBN),
+            &reqs,
+        );
+        let large = run_lamina(
+            &LaminaConfig::standard(&LLAMA_65B, &H100, &H20, (2, 6), &FHBN),
+            &reqs,
+        );
+        assert!(
+            large.metrics.throughput() > 1.2 * small.metrics.throughput(),
+            "small={} large={}",
+            small.metrics.throughput(),
+            large.metrics.throughput()
+        );
+    }
+
+    #[test]
+    fn kv_capacity_bounds_batch() {
+        let cfg = LaminaConfig::standard(&LLAMA_65B, &H100, &H20, (2, 2), &FHBN);
+        // 65B MHA: KV/token = 2·2·8192·80 = 2.6 MB; 2×H20 ≈ 190 GB → ~72k tokens.
+        let cap = cfg.kv_capacity_tokens();
+        assert!(cap > 50_000 && cap < 100_000, "cap={cap}");
+        let reqs = fixed_length(512, 8192, 4);
+        let rep = run_lamina(&cfg, &reqs);
+        // mean batch bounded by capacity/context ≈ 72k/8.2k ≈ 8
+        assert!(rep.metrics.mean_batch() < 16.0, "batch={}", rep.metrics.mean_batch());
+    }
+
+    #[test]
+    fn wave_cost_components_positive() {
+        let cfg = cfg70b();
+        let c = wave_cost(&cfg, 64, 64 * 4096);
+        assert!(c.t_model > 0.0 && c.t_attn > 0.0 && c.tbt >= c.t_model);
+    }
+
+    #[test]
+    fn gqa_model_supports_bigger_batches() {
+        // Fig. 10 note: 70B (GQA) reaches much larger batches than 65B.
+        let c70 = cfg70b();
+        let c65 = LaminaConfig::standard(&LLAMA_65B, &H100, &H20, (2, 4), &FHBN);
+        assert!(c70.kv_capacity_tokens() > 6 * c65.kv_capacity_tokens());
+    }
+}

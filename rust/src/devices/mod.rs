@@ -1,0 +1,10 @@
+//! Device specifications and the roofline operator cost model — the
+//! quantitative substrate behind the paper's §2 analysis and the large-model
+//! performance simulation (the real H100/H20 testbed is hardware we do not
+//! have; see DESIGN.md §2).
+
+pub mod roofline;
+pub mod specs;
+
+pub use roofline::{atime, mtime, OpCost};
+pub use specs::{DeviceSpec, LlmSpec, H100, H20, LLAMA3_70B, LLAMA_33B, LLAMA_65B, TPU_V6E};

@@ -1,0 +1,238 @@
+//! Accelerator device specifications (paper Table 1) and LLM architecture
+//! specs (paper Tables 2 & 3).
+//!
+//! These parameterise the roofline cost model in [`super::roofline`]; the
+//! reproduction's performance figures derive from *these numbers*, exactly
+//! as the paper's own §2/§3.1 analysis does.
+
+/// One accelerator model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Dense BF16 TFLOPs (peak).
+    pub bf16_tflops: f64,
+    /// HBM capacity in GiB.
+    pub mem_gib: f64,
+    /// HBM bandwidth in TB/s (decimal).
+    pub mem_bw_tbs: f64,
+    /// Board power rating in W (0 = unlisted).
+    pub power_w: f64,
+    /// Inter-chip interconnect bandwidth in GB/s (NVLink/ICI), per device.
+    pub ici_gbs: f64,
+    /// Data-center network bandwidth in Gbps, per device NIC.
+    pub net_gbps: f64,
+    /// Cloud price per chip-hour in USD (paper Table 1).
+    pub price_hr: f64,
+    /// Fraction of peak FLOPs achievable on large GEMMs.
+    pub gemm_eff: f64,
+    /// Fraction of peak HBM bandwidth achievable on streaming reads.
+    pub bw_eff: f64,
+}
+
+impl DeviceSpec {
+    pub fn peak_flops(&self) -> f64 {
+        self.bf16_tflops * 1e12
+    }
+
+    pub fn eff_flops(&self) -> f64 {
+        self.peak_flops() * self.gemm_eff
+    }
+
+    pub fn peak_bw(&self) -> f64 {
+        self.mem_bw_tbs * 1e12
+    }
+
+    pub fn eff_bw(&self) -> f64 {
+        self.peak_bw() * self.bw_eff
+    }
+
+    pub fn mem_bytes(&self) -> f64 {
+        self.mem_gib * 1024.0 * 1024.0 * 1024.0
+    }
+
+    /// Device-level "ops:bytes" balance point (arithmetic intensity at the
+    /// roofline ridge). H100 ≈ 295, H20 ≈ 37 — the disparity the paper
+    /// exploits.
+    pub fn ridge_intensity(&self) -> f64 {
+        self.peak_flops() / self.peak_bw()
+    }
+}
+
+/// NVIDIA H100 SXM (paper Table 1).
+pub const H100: DeviceSpec = DeviceSpec {
+    name: "H100",
+    bf16_tflops: 989.0,
+    mem_gib: 80.0,
+    mem_bw_tbs: 3.35,
+    power_w: 700.0,
+    ici_gbs: 450.0,
+    net_gbps: 400.0,
+    price_hr: 11.06,
+    gemm_eff: 0.65,
+    bw_eff: 0.88,
+};
+
+/// NVIDIA H20 (memory-optimised; paper Table 1).
+pub const H20: DeviceSpec = DeviceSpec {
+    name: "H20",
+    bf16_tflops: 148.0,
+    mem_gib: 96.0,
+    mem_bw_tbs: 4.0,
+    power_w: 400.0,
+    ici_gbs: 450.0,
+    net_gbps: 400.0,
+    price_hr: 4.63,
+    gemm_eff: 0.65,
+    bw_eff: 0.88,
+};
+
+/// Google TPU v6e (compute-optimised comparison point; paper Table 1).
+pub const TPU_V6E: DeviceSpec = DeviceSpec {
+    name: "TPUv6e",
+    bf16_tflops: 918.0,
+    mem_gib: 32.0,
+    mem_bw_tbs: 1.64,
+    power_w: 0.0,
+    ici_gbs: 448.0,
+    net_gbps: 200.0,
+    price_hr: 2.70,
+    gemm_eff: 0.65,
+    bw_eff: 0.88,
+};
+
+pub const ALL_DEVICES: &[&DeviceSpec] = &[&H100, &H20, &TPU_V6E];
+
+pub fn device_by_name(name: &str) -> Option<&'static DeviceSpec> {
+    ALL_DEVICES
+        .iter()
+        .find(|d| d.name.eq_ignore_ascii_case(name))
+        .copied()
+}
+
+/// Analytical LLM architecture (paper Tables 2 & 3 notation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LlmSpec {
+    pub name: &'static str,
+    /// Total parameter count N.
+    pub n_params: f64,
+    /// Hidden dimension d.
+    pub d: usize,
+    /// Layer count L.
+    pub layers: usize,
+    /// GQA group size G (1 = plain MHA).
+    pub gqa_group: usize,
+    /// Bytes per element e (2 = FP16).
+    pub elem_bytes: f64,
+}
+
+impl LlmSpec {
+    /// Model weight footprint in bytes.
+    pub fn param_bytes(&self) -> f64 {
+        self.n_params * self.elem_bytes
+    }
+
+    /// KV-cache bytes per token across all layers: 2·e·d·L/G.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.elem_bytes * self.d as f64 * self.layers as f64 / self.gqa_group as f64
+    }
+
+    /// Bytes crossing the model↔attention boundary per token per layer:
+    /// q (e·d) + k,v (2·e·d/G) out, attention output (e·d) back —
+    /// the paper's (2 + 2/G)·e·d term (§3.1).
+    pub fn boundary_bytes_per_token_layer(&self) -> f64 {
+        (2.0 + 2.0 / self.gqa_group as f64) * self.elem_bytes * self.d as f64
+    }
+}
+
+/// LLaMA-33B (Table 3: 64.7 GB FP16, L=60, d=6656, G=1).
+pub const LLAMA_33B: LlmSpec = LlmSpec {
+    name: "LLaMA-33B",
+    n_params: 32.35e9,
+    d: 6656,
+    layers: 60,
+    gqa_group: 1,
+    elem_bytes: 2.0,
+};
+
+/// LLaMA-65B (Table 3: 130.1 GB FP16, L=80, d=8192, G=1).
+pub const LLAMA_65B: LlmSpec = LlmSpec {
+    name: "LLaMA-65B",
+    n_params: 65.05e9,
+    d: 8192,
+    layers: 80,
+    gqa_group: 1,
+    elem_bytes: 2.0,
+};
+
+/// LLaMA3-70B (Table 3: 137.5 GB FP16, L=80, d=8192, G=8).
+pub const LLAMA3_70B: LlmSpec = LlmSpec {
+    name: "LLaMA3-70B",
+    n_params: 68.75e9,
+    d: 8192,
+    layers: 80,
+    gqa_group: 8,
+    elem_bytes: 2.0,
+};
+
+pub const ALL_MODELS: &[&LlmSpec] = &[&LLAMA_33B, &LLAMA_65B, &LLAMA3_70B];
+
+pub fn model_by_name(name: &str) -> Option<&'static LlmSpec> {
+    ALL_MODELS
+        .iter()
+        .find(|m| m.name.eq_ignore_ascii_case(name))
+        .copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_numbers() {
+        assert_eq!(H100.bf16_tflops, 989.0);
+        assert_eq!(H20.mem_bw_tbs, 4.0);
+        assert_eq!(TPU_V6E.price_hr, 2.70);
+    }
+
+    #[test]
+    fn ridge_disparity() {
+        // H100 is compute-rich (high ridge), H20 is bandwidth-rich (low).
+        assert!(H100.ridge_intensity() > 250.0);
+        assert!(H20.ridge_intensity() < 50.0);
+        assert!(H100.ridge_intensity() / H20.ridge_intensity() > 5.0);
+    }
+
+    #[test]
+    fn table3_param_bytes() {
+        // Table 3 gives FP16 footprints: 64.7, 130.1, 137.5 GB.
+        assert!((LLAMA_33B.param_bytes() / 1e9 - 64.7).abs() < 0.5);
+        assert!((LLAMA_65B.param_bytes() / 1e9 - 130.1).abs() < 0.5);
+        assert!((LLAMA3_70B.param_bytes() / 1e9 - 137.5).abs() < 0.5);
+    }
+
+    #[test]
+    fn kv_bytes_gqa_factor() {
+        // GQA (G=8) shrinks per-token KV 8× vs MHA at same d, L.
+        let kv_mha = LLAMA_65B.kv_bytes_per_token();
+        let kv_gqa = LLAMA3_70B.kv_bytes_per_token();
+        assert!((kv_mha / kv_gqa - 8.0).abs() < 1e-9);
+        // LLaMA3-70B: 2·2·8192·80/8 = 327 680 bytes/token.
+        assert!((kv_gqa - 327_680.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(device_by_name("h100").unwrap().name, "H100");
+        assert_eq!(model_by_name("llama3-70b").unwrap().layers, 80);
+        assert!(device_by_name("B200").is_none());
+    }
+
+    #[test]
+    fn boundary_bytes() {
+        // G=1 → 4·e·d; G=8 → 2.25·e·d.
+        let b1 = LLAMA_65B.boundary_bytes_per_token_layer();
+        assert!((b1 - 4.0 * 2.0 * 8192.0).abs() < 1e-9);
+        let b8 = LLAMA3_70B.boundary_bytes_per_token_layer();
+        assert!((b8 - 2.25 * 2.0 * 8192.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,76 @@
+//! Experiment registry: maps every paper table/figure id to its harness and
+//! persists results under `results/`.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Run one experiment by id; returns its JSON record.
+/// `n_requests` bounds trace sizes for the serving simulations.
+pub fn run(id: &str, n_requests: usize, seed: u64) -> Result<Json, String> {
+    let j = match id {
+        "table1" => super::analysis::table1(),
+        "fig2" => super::analysis::fig2(),
+        "fig3" => super::analysis::fig3(),
+        "fig4" => super::analysis::fig4(0.2),
+        "table3" => super::serving::table3(),
+        "table4" => super::serving::table4(n_requests.max(2000), seed),
+        "table5" => super::serving::table5(),
+        "fig10" => super::serving::fig10(n_requests, seed),
+        "fig11" => super::serving::fig11(n_requests, seed),
+        "fig12" => super::serving::fig12(),
+        "fig13" => super::network::fig13(),
+        "fig14" => super::serving::fig14(),
+        "fig9" => super::ablation::fig9(n_requests.max(500), seed),
+        "offload" => super::ablation::offload_analysis(),
+        "alt-devices" => super::ablation::alt_devices(),
+        "slo" => super::serving::slo_sweep(n_requests, seed),
+        "pingpong-live" => super::network::live_pingpong(65536, 50),
+        other => return Err(format!("unknown experiment '{other}'")),
+    };
+    Ok(j)
+}
+
+/// Every experiment id, in paper order.
+pub const ALL_IDS: &[&str] = &[
+    "table1", "fig2", "fig3", "fig4", "table3", "table4", "table5",
+    "fig10", "fig11", "fig12", "fig13", "fig14", "fig9", "offload", "alt-devices", "slo",
+];
+
+/// Persist an experiment record to `results/<id>.json`.
+pub fn save(id: &str, j: &Json, results_dir: impl AsRef<Path>) -> std::io::Result<()> {
+    let dir = results_dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{id}.json")), j.pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_ids_runnable() {
+        for id in ALL_IDS {
+            // small request counts keep this test quick
+            if matches!(*id, "fig10" | "fig11") {
+                continue; // covered by their own (heavier) tests
+            }
+            let j = run(id, 200, 3).unwrap();
+            assert!(!j.is_null());
+        }
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run("fig99", 10, 0).is_err());
+    }
+
+    #[test]
+    fn save_roundtrip() {
+        let dir = std::env::temp_dir().join("lamina-results-test");
+        let j = run("table1", 10, 0).unwrap();
+        save("table1", &j, &dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("table1.json")).unwrap();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+}

@@ -1,0 +1,11 @@
+//! Figure/table harnesses — regenerate every evaluation artifact of the
+//! paper (see DESIGN.md §5 for the experiment index and EXPERIMENTS.md for
+//! recorded paper-vs-measured comparisons).
+
+pub mod ablation;
+pub mod analysis;
+pub mod experiments;
+pub mod network;
+pub mod serving;
+
+pub use experiments::{run, save, ALL_IDS};

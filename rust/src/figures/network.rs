@@ -1,0 +1,128 @@
+//! Fig. 13: the network ping-pong microbenchmark, plus a live round-trip
+//! over the in-process transport to validate the data path.
+
+use crate::netsim::pingpong::{default_sizes, sweep};
+use crate::netsim::stack::{ALL_STACKS, FHBN, LINE_RATE_400G, NCCL};
+use crate::netsim::transport::link;
+use crate::util::json::Json;
+use crate::util::stats::{fmt_bandwidth, fmt_duration};
+
+/// Fig. 13: RTT and effective bandwidth per stack per message size.
+pub fn fig13() -> Json {
+    println!("Fig. 13: GPU-GPU ping-pong over 400 Gbps RoCE (modelled)");
+    println!("{:<11} {:>12} {:>12} {:>14}", "stack", "bytes", "RTT", "bandwidth");
+    let sizes = default_sizes();
+    let pts = sweep(&sizes, LINE_RATE_400G);
+    let mut rows = Vec::new();
+    for p in &pts {
+        println!(
+            "{:<11} {:>12.0} {:>12} {:>14}",
+            p.stack,
+            p.bytes,
+            fmt_duration(p.rtt_s),
+            fmt_bandwidth(p.bw_bytes_per_s)
+        );
+        rows.push(Json::obj(vec![
+            ("stack", Json::str(p.stack)),
+            ("bytes", Json::num(p.bytes)),
+            ("rtt_s", Json::num(p.rtt_s)),
+            ("bw", Json::num(p.bw_bytes_per_s)),
+        ]));
+    }
+    let small_fhbn = FHBN.rtt(8.0, LINE_RATE_400G);
+    let small_nccl = NCCL.rtt(8.0, LINE_RATE_400G);
+    println!(
+        "=> small-msg RTT: FHBN {} vs NCCL {} ({:.1}% reduction; paper: 33.0 µs vs 66.6 µs, 50.5%)",
+        fmt_duration(small_fhbn),
+        fmt_duration(small_nccl),
+        (1.0 - small_fhbn / small_nccl) * 100.0
+    );
+    println!(
+        "=> peak bandwidth: FHBN {} ({:.1}% of line) vs NCCL {} (paper: 45.7 vs 35.5 GB/s)",
+        fmt_bandwidth(FHBN.effective_bw(1e9, LINE_RATE_400G)),
+        FHBN.effective_bw(1e9, LINE_RATE_400G) / LINE_RATE_400G * 100.0,
+        fmt_bandwidth(NCCL.effective_bw(1e9, LINE_RATE_400G)),
+    );
+    Json::obj(vec![("figure", Json::str("13")), ("rows", Json::arr(rows))])
+}
+
+/// Live ping-pong over the in-process transport: actually bounces a buffer
+/// between two threads with wall-clock pacing (time_scale=1) and reports the
+/// measured RTT alongside the model. Validates the data path end to end.
+pub fn live_pingpong(bytes: usize, iters: usize) -> Json {
+    println!("live transport ping-pong: {bytes} bytes × {iters} iters per stack");
+    let mut rows = Vec::new();
+    for stack in ALL_STACKS {
+        let (a, b) = link::<Vec<u8>>(stack, LINE_RATE_400G, 1.0);
+        let echo = std::thread::spawn(move || {
+            while let Ok((buf, n)) = b.recv() {
+                if buf.is_empty() {
+                    break;
+                }
+                if b.send(buf, n).is_err() {
+                    break;
+                }
+            }
+        });
+        let payload = vec![0xabu8; bytes];
+        // warmup
+        a.send(payload.clone(), bytes).unwrap();
+        a.recv().unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            a.send(payload.clone(), bytes).unwrap();
+            let (back, _) = a.recv().unwrap();
+            assert_eq!(back.len(), bytes);
+        }
+        let rtt = t0.elapsed().as_secs_f64() / iters as f64;
+        a.send(Vec::new(), 0).unwrap(); // stop echo thread
+        echo.join().unwrap();
+        let model = stack.rtt(bytes as f64, LINE_RATE_400G);
+        println!(
+            "{:<11} measured {:>12}  model {:>12}",
+            stack.name,
+            fmt_duration(rtt),
+            fmt_duration(model)
+        );
+        rows.push(Json::obj(vec![
+            ("stack", Json::str(stack.name)),
+            ("bytes", Json::num(bytes as f64)),
+            ("measured_rtt_s", Json::num(rtt)),
+            ("model_rtt_s", Json::num(model)),
+        ]));
+    }
+    Json::obj(vec![("live_pingpong", Json::Bool(true)), ("rows", Json::arr(rows))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig13_rows_cover_stacks() {
+        let f = fig13();
+        let rows = f.get("rows").as_arr().unwrap();
+        assert_eq!(rows.len() % ALL_STACKS.len(), 0);
+        // FHBN strictly fastest at every size
+        let n = rows.len() / ALL_STACKS.len();
+        for i in 0..n {
+            let fhbn = rows[i].get("rtt_s").as_f64().unwrap();
+            for s in 1..ALL_STACKS.len() {
+                let other = rows[s * n + i].get("rtt_s").as_f64().unwrap();
+                assert!(fhbn <= other);
+            }
+        }
+    }
+
+    #[test]
+    fn live_pingpong_matches_model() {
+        let j = live_pingpong(64, 20);
+        for r in j.get("rows").as_arr().unwrap() {
+            let meas = r.get("measured_rtt_s").as_f64().unwrap();
+            let model = r.get("model_rtt_s").as_f64().unwrap();
+            // sleep-based pacing can only overshoot; allow generous slack
+            assert!(meas >= model * 0.9, "{meas} < {model}");
+            assert!(meas < model * 40.0 + 2e-3, "{meas} ≫ {model}");
+        }
+    }
+}

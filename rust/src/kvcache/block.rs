@@ -1,0 +1,173 @@
+//! Paged KV-cache block allocator (PagedAttention-style, paper §8 notes
+//! vLLM's fine-grained KV management as a composable optimisation).
+//!
+//! KV memory on each attention worker is divided into fixed-size blocks of
+//! `block_size` token slots; requests own chains of blocks via
+//! [`super::table::BlockTable`]. The allocator is a simple free-list with
+//! O(1) alloc/free and exact accounting — fragmentation can only be
+//! *internal* (tail of the last block), which `internal_waste` reports.
+
+/// Identifier of a physical KV block on one worker.
+pub type BlockId = u32;
+
+#[derive(Debug)]
+pub struct BlockAllocator {
+    block_size: usize,
+    free: Vec<BlockId>,
+    total: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocError {
+    pub requested: usize,
+    pub available: usize,
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KV alloc of {} blocks failed ({} free)", self.requested, self.available)
+    }
+}
+
+impl std::error::Error for AllocError {}
+
+impl BlockAllocator {
+    /// `total_blocks` physical blocks of `block_size` token slots each.
+    pub fn new(total_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0 && total_blocks > 0);
+        BlockAllocator {
+            block_size,
+            // LIFO free list: hot blocks are reused first (cache-friendly)
+            free: (0..total_blocks as BlockId).rev().collect(),
+            total: total_blocks,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total - self.free.len()
+    }
+
+    /// Blocks needed to hold `tokens` token slots.
+    pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Can `n` more blocks be allocated?
+    pub fn can_alloc(&self, n: usize) -> bool {
+        self.free.len() >= n
+    }
+
+    pub fn alloc(&mut self) -> Result<BlockId, AllocError> {
+        self.free
+            .pop()
+            .ok_or(AllocError { requested: 1, available: 0 })
+    }
+
+    pub fn alloc_n(&mut self, n: usize) -> Result<Vec<BlockId>, AllocError> {
+        if self.free.len() < n {
+            return Err(AllocError { requested: n, available: self.free.len() });
+        }
+        Ok((0..n).map(|_| self.free.pop().unwrap()).collect())
+    }
+
+    pub fn release(&mut self, block: BlockId) {
+        debug_assert!((block as usize) < self.total);
+        debug_assert!(!self.free.contains(&block), "double free of block {block}");
+        self.free.push(block);
+    }
+
+    pub fn release_all(&mut self, blocks: &[BlockId]) {
+        for &b in blocks {
+            self.release(b);
+        }
+    }
+
+    /// Token slots wasted in the tails of partially-filled last blocks,
+    /// given the live sequence lengths.
+    pub fn internal_waste(&self, seq_lens: &[usize]) -> usize {
+        seq_lens
+            .iter()
+            .map(|&l| self.blocks_for_tokens(l) * self.block_size - l)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = BlockAllocator::new(10, 16);
+        let blocks = a.alloc_n(10).unwrap();
+        assert_eq!(a.free_blocks(), 0);
+        assert!(a.alloc().is_err());
+        a.release_all(&blocks);
+        assert_eq!(a.free_blocks(), 10);
+    }
+
+    #[test]
+    fn alloc_n_all_distinct() {
+        let mut a = BlockAllocator::new(100, 8);
+        let blocks = a.alloc_n(100).unwrap();
+        let mut sorted = blocks.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 100);
+    }
+
+    #[test]
+    fn failed_alloc_keeps_state() {
+        let mut a = BlockAllocator::new(4, 8);
+        let _held = a.alloc_n(3).unwrap();
+        let err = a.alloc_n(2).unwrap_err();
+        assert_eq!(err.available, 1);
+        assert_eq!(a.free_blocks(), 1); // nothing leaked
+    }
+
+    #[test]
+    fn blocks_for_tokens_rounds_up() {
+        let a = BlockAllocator::new(10, 16);
+        assert_eq!(a.blocks_for_tokens(0), 0);
+        assert_eq!(a.blocks_for_tokens(1), 1);
+        assert_eq!(a.blocks_for_tokens(16), 1);
+        assert_eq!(a.blocks_for_tokens(17), 2);
+    }
+
+    #[test]
+    fn lifo_reuse() {
+        let mut a = BlockAllocator::new(5, 4);
+        let b1 = a.alloc().unwrap();
+        a.release(b1);
+        let b2 = a.alloc().unwrap();
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn internal_waste() {
+        let a = BlockAllocator::new(10, 16);
+        // 17 tokens → 2 blocks → 15 wasted; 32 tokens → 0 wasted
+        assert_eq!(a.internal_waste(&[17, 32]), 15);
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_free_debug_panics() {
+        let mut a = BlockAllocator::new(2, 4);
+        let b = a.alloc().unwrap();
+        a.release(b);
+        a.release(b);
+    }
+}

@@ -1,0 +1,10 @@
+//! KV-cache substrate: paged block allocation, per-request block tables,
+//! and the head-/request-level partitioning strategies of paper §5/Fig. 9.
+
+pub mod block;
+pub mod partition;
+pub mod table;
+
+pub use block::{AllocError, BlockAllocator, BlockId};
+pub use partition::{head_level, request_level, Partition};
+pub use table::{BlockTable, KvRegistry};

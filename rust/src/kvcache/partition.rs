@@ -1,0 +1,156 @@
+//! Attention-work partitioning across memory devices (paper §5, Fig. 9).
+//!
+//! Two strategies:
+//! * **head-level** — each worker owns `KH / W` KV heads of *every* request:
+//!   perfectly balanced (each worker reads the same bytes), but requires the
+//!   worker count to divide the head count. Lamina's choice.
+//! * **request-level** — each worker owns entire requests: flexible, but
+//!   imbalanced when sequence lengths differ.
+//!
+//! `imbalance` quantifies the trade-off the paper argues qualitatively.
+
+/// Assignment of work shards to workers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    /// worker → load (bytes of KV it must read per iteration)
+    pub load: Vec<f64>,
+    /// shard → worker (shard = head for head-level, request for req-level)
+    pub assignment: Vec<usize>,
+}
+
+impl Partition {
+    /// max/mean load ratio − 1: 0 = perfectly balanced.
+    pub fn imbalance(&self) -> f64 {
+        let max = self.load.iter().cloned().fold(0.0, f64::max);
+        let mean = self.load.iter().sum::<f64>() / self.load.len() as f64;
+        if mean == 0.0 {
+            0.0
+        } else {
+            max / mean - 1.0
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartitionError(pub String);
+
+impl std::fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for PartitionError {}
+
+/// Head-level partitioning: KV heads dealt round-robin to workers. Every
+/// worker touches every request, so per-worker load is
+/// `heads_owned · Σ seq_len` — balanced iff workers divide heads.
+pub fn head_level(
+    kv_heads: usize,
+    workers: usize,
+    seq_lens: &[usize],
+    bytes_per_head_token: f64,
+) -> Result<Partition, PartitionError> {
+    if workers == 0 || kv_heads == 0 {
+        return Err(PartitionError("need ≥1 worker and ≥1 head".into()));
+    }
+    if kv_heads % workers != 0 {
+        return Err(PartitionError(format!(
+            "head-level partitioning needs workers ({workers}) to divide kv heads ({kv_heads})"
+        )));
+    }
+    let total_tokens: usize = seq_lens.iter().sum();
+    let mut load = vec![0.0; workers];
+    let assignment: Vec<usize> = (0..kv_heads).map(|h| h % workers).collect();
+    for (h, &w) in assignment.iter().enumerate() {
+        let _ = h;
+        load[w] += total_tokens as f64 * bytes_per_head_token;
+    }
+    Ok(Partition { load, assignment })
+}
+
+/// Request-level partitioning: requests greedily assigned (longest-first) to
+/// the least-loaded worker — the strongest reasonable baseline; still
+/// imbalanced for skewed length distributions.
+pub fn request_level(
+    workers: usize,
+    seq_lens: &[usize],
+    bytes_per_req_token: f64,
+) -> Result<Partition, PartitionError> {
+    if workers == 0 {
+        return Err(PartitionError("need ≥1 worker".into()));
+    }
+    let mut idx: Vec<usize> = (0..seq_lens.len()).collect();
+    idx.sort_by_key(|&i| std::cmp::Reverse(seq_lens[i]));
+    let mut load = vec![0.0; workers];
+    let mut assignment = vec![0usize; seq_lens.len()];
+    for &i in &idx {
+        let w = load
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assignment[i] = w;
+        load[w] += seq_lens[i] as f64 * bytes_per_req_token;
+    }
+    Ok(Partition { load, assignment })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_level_perfectly_balanced() {
+        let p = head_level(8, 4, &[100, 5000, 32, 9], 64.0).unwrap();
+        assert!(p.imbalance() < 1e-12);
+        assert_eq!(p.assignment.len(), 8);
+    }
+
+    #[test]
+    fn head_level_requires_divisibility() {
+        assert!(head_level(8, 3, &[10], 1.0).is_err());
+        assert!(head_level(8, 8, &[10], 1.0).is_ok());
+        assert!(head_level(8, 16, &[10], 1.0).is_err());
+    }
+
+    #[test]
+    fn request_level_balanced_when_uniform() {
+        let p = request_level(4, &[100; 16], 1.0).unwrap();
+        assert!(p.imbalance() < 1e-12);
+    }
+
+    #[test]
+    fn request_level_imbalanced_when_skewed() {
+        // One giant request dominates a worker — the paper's Fig. 9 point.
+        let lens = [32_000, 100, 100, 100, 100, 100, 100, 100];
+        let p = request_level(4, &lens, 1.0).unwrap();
+        assert!(p.imbalance() > 1.0, "imbalance={}", p.imbalance());
+        let h = head_level(8, 4, &lens, 1.0).unwrap();
+        assert!(h.imbalance() < 1e-12);
+    }
+
+    #[test]
+    fn request_level_greedy_beats_naive_roundrobin() {
+        let lens = [1000, 900, 800, 10, 10, 10];
+        let greedy = request_level(2, &lens, 1.0).unwrap();
+        // naive round-robin: (1000+800+10)=1810 vs (900+10+10)=920
+        let naive_imb: f64 = 1810.0 / 1365.0 - 1.0;
+        assert!(greedy.imbalance() < naive_imb);
+    }
+
+    #[test]
+    fn loads_conserve_total() {
+        let lens = [100, 200, 300];
+        let p = request_level(2, &lens, 2.0).unwrap();
+        let total: f64 = p.load.iter().sum();
+        assert!((total - 1200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        assert!(head_level(8, 0, &[1], 1.0).is_err());
+        assert!(request_level(0, &[1], 1.0).is_err());
+    }
+}

@@ -1,0 +1,194 @@
+//! Per-request block tables mapping logical token positions to physical KV
+//! blocks, plus the request-level cache registry an attention worker keeps.
+
+use super::block::{AllocError, BlockAllocator, BlockId};
+
+/// Logical→physical mapping for one request's KV cache on one worker.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    blocks: Vec<BlockId>,
+    len_tokens: usize,
+}
+
+impl BlockTable {
+    pub fn len_tokens(&self) -> usize {
+        self.len_tokens
+    }
+
+    pub fn blocks(&self) -> &[BlockId] {
+        &self.blocks
+    }
+
+    /// Physical (block, offset) of token position `pos`.
+    pub fn locate(&self, pos: usize, block_size: usize) -> Option<(BlockId, usize)> {
+        if pos >= self.len_tokens {
+            return None;
+        }
+        Some((self.blocks[pos / block_size], pos % block_size))
+    }
+
+    /// Append one token slot, allocating a new block when the tail is full.
+    pub fn append(&mut self, alloc: &mut BlockAllocator) -> Result<(), AllocError> {
+        let bs = alloc.block_size();
+        if self.len_tokens == self.blocks.len() * bs {
+            self.blocks.push(alloc.alloc()?);
+        }
+        self.len_tokens += 1;
+        Ok(())
+    }
+
+    /// Grow to hold `tokens` total token slots (prefill handoff).
+    pub fn grow_to(&mut self, tokens: usize, alloc: &mut BlockAllocator) -> Result<(), AllocError> {
+        let need = alloc.blocks_for_tokens(tokens);
+        if need > self.blocks.len() {
+            let extra = alloc.alloc_n(need - self.blocks.len())?;
+            self.blocks.extend(extra);
+        }
+        self.len_tokens = self.len_tokens.max(tokens);
+        Ok(())
+    }
+
+    /// Release every block back to the allocator.
+    pub fn free(&mut self, alloc: &mut BlockAllocator) {
+        alloc.release_all(&self.blocks);
+        self.blocks.clear();
+        self.len_tokens = 0;
+    }
+}
+
+/// Registry of live request caches on one attention worker.
+#[derive(Debug)]
+pub struct KvRegistry {
+    pub alloc: BlockAllocator,
+    tables: std::collections::BTreeMap<u64, BlockTable>,
+}
+
+impl KvRegistry {
+    pub fn new(total_blocks: usize, block_size: usize) -> Self {
+        KvRegistry {
+            alloc: BlockAllocator::new(total_blocks, block_size),
+            tables: Default::default(),
+        }
+    }
+
+    pub fn live_requests(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Admit a request with `prompt_tokens` already cached (decode handoff).
+    pub fn admit(&mut self, req: u64, prompt_tokens: usize) -> Result<(), AllocError> {
+        debug_assert!(!self.tables.contains_key(&req), "request {req} re-admitted");
+        let mut t = BlockTable::default();
+        t.grow_to(prompt_tokens, &mut self.alloc)?;
+        self.tables.insert(req, t);
+        Ok(())
+    }
+
+    /// Append one generated token's KV slot for `req`.
+    pub fn append(&mut self, req: u64) -> Result<(), AllocError> {
+        let t = self.tables.get_mut(&req).expect("unknown request");
+        t.append(&mut self.alloc)
+    }
+
+    pub fn len_tokens(&self, req: u64) -> Option<usize> {
+        self.tables.get(&req).map(|t| t.len_tokens())
+    }
+
+    /// Evict (complete/abort) a request, freeing its blocks.
+    pub fn evict(&mut self, req: u64) {
+        if let Some(mut t) = self.tables.remove(&req) {
+            t.free(&mut self.alloc);
+        }
+    }
+
+    /// Would admitting `prompt_tokens` more tokens fit right now?
+    pub fn can_admit(&self, prompt_tokens: usize, headroom_tokens: usize) -> bool {
+        self.alloc
+            .can_alloc(self.alloc.blocks_for_tokens(prompt_tokens + headroom_tokens))
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.alloc.used_blocks() as f64 / self.alloc.total_blocks() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_allocates_blocks_lazily() {
+        let mut a = BlockAllocator::new(10, 4);
+        let mut t = BlockTable::default();
+        for i in 1..=9 {
+            t.append(&mut a).unwrap();
+            assert_eq!(t.len_tokens(), i);
+        }
+        assert_eq!(t.blocks().len(), 3); // ceil(9/4)
+        assert_eq!(a.used_blocks(), 3);
+    }
+
+    #[test]
+    fn locate_maps_positions() {
+        let mut a = BlockAllocator::new(10, 4);
+        let mut t = BlockTable::default();
+        t.grow_to(10, &mut a).unwrap();
+        let (b0, o0) = t.locate(0, 4).unwrap();
+        let (b1, o1) = t.locate(5, 4).unwrap();
+        assert_eq!(o0, 0);
+        assert_eq!(o1, 1);
+        assert_ne!(b0, b1);
+        assert!(t.locate(10, 4).is_none());
+    }
+
+    #[test]
+    fn free_returns_blocks() {
+        let mut a = BlockAllocator::new(5, 8);
+        let mut t = BlockTable::default();
+        t.grow_to(40, &mut a).unwrap();
+        assert_eq!(a.free_blocks(), 0);
+        t.free(&mut a);
+        assert_eq!(a.free_blocks(), 5);
+        assert_eq!(t.len_tokens(), 0);
+    }
+
+    #[test]
+    fn registry_admit_append_evict() {
+        let mut r = KvRegistry::new(8, 4);
+        r.admit(1, 10).unwrap(); // 3 blocks
+        r.admit(2, 4).unwrap(); // 1 block
+        assert_eq!(r.live_requests(), 2);
+        assert_eq!(r.len_tokens(1), Some(10));
+        for _ in 0..2 {
+            r.append(1).unwrap();
+        }
+        assert_eq!(r.len_tokens(1), Some(12)); // still 3 blocks
+        r.evict(1);
+        assert_eq!(r.live_requests(), 1);
+        assert_eq!(r.alloc.free_blocks(), 7);
+    }
+
+    #[test]
+    fn admit_over_capacity_fails_cleanly() {
+        let mut r = KvRegistry::new(4, 4);
+        r.admit(1, 12).unwrap(); // 3 blocks
+        assert!(r.admit(2, 8).is_err()); // needs 2, only 1 free
+        assert_eq!(r.live_requests(), 1);
+        assert_eq!(r.alloc.free_blocks(), 1);
+    }
+
+    #[test]
+    fn can_admit_respects_headroom() {
+        let r = KvRegistry::new(4, 4);
+        assert!(r.can_admit(12, 4)); // 4 blocks
+        assert!(!r.can_admit(13, 4)); // 5 blocks
+    }
+
+    #[test]
+    fn utilization_tracks() {
+        let mut r = KvRegistry::new(10, 4);
+        assert_eq!(r.utilization(), 0.0);
+        r.admit(1, 20).unwrap();
+        assert_eq!(r.utilization(), 0.5);
+    }
+}

@@ -1,0 +1,30 @@
+//! # Lamina-RS
+//!
+//! Reproduction of *"Efficient Heterogeneous Large Language Model Decoding
+//! with Model-Attention Disaggregation"* (Lamina) as a three-layer
+//! Rust + JAX + Pallas serving stack.
+//!
+//! * **L3 (this crate)** — the coordinator: heterogeneous device pools,
+//!   continuous batching, paged KV-cache management, rotational staggered
+//!   pipelining, the FHBN-vs-NCCL network model, and the roofline simulator
+//!   that regenerates every figure/table of the paper.
+//! * **L2/L1 (`python/compile`)** — the LLaMA-style model slices and the
+//!   Pallas GQA decode-attention kernel, AOT-lowered once to HLO text.
+//! * **runtime** — loads the AOT artifacts via PJRT (`xla` crate) so the
+//!   serving path is pure Rust; Python never runs at request time.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod baseline;
+pub mod coordinator;
+pub mod devices;
+pub mod figures;
+pub mod kvcache;
+pub mod metrics;
+pub mod netsim;
+pub mod opgraph;
+pub mod runtime;
+pub mod trace;
+pub mod util;
+pub mod workers;

@@ -1,0 +1,169 @@
+//! `lamina` — CLI entry point.
+//!
+//! Subcommands:
+//!   serve        run the real tiny-model disaggregated pipeline on a trace
+//!   decode       greedy-decode a prompt through the real pipeline
+//!   all          regenerate every paper table/figure (results/*.json)
+//!   table1|3|4|5, fig2|3|4|10|11|12|13|14   individual experiments
+//!   pingpong-live  wall-clock transport ping-pong
+//!
+//! Common flags: --requests N, --seed S, --results DIR, --artifacts DIR,
+//! --workers N, --no-overlap, --waves N, --stack NAME, --time-scale X.
+
+use lamina::figures;
+use lamina::netsim::stack::stack_by_name;
+use lamina::trace::{synthesize, trace_by_name, Request};
+use lamina::util::cli::Args;
+use lamina::util::stats::fmt_duration;
+use lamina::workers::{DisaggPipeline, PipelineOpts};
+
+const USAGE: &str = "\
+lamina — model-attention disaggregation (Lamina) reproduction
+
+USAGE: lamina <subcommand> [flags]
+
+experiments (analytical, paper-scale):
+  all | table1 | table3 | table4 | table5
+  fig2 | fig3 | fig4 | fig10 | fig11 | fig12 | fig13 | fig14
+  fig9 | offload | alt-devices | slo | pingpong-live
+
+real pipeline (tiny model, PJRT end-to-end):
+  decode  --prompt 1,7,42 --steps 16 [--workers N] [--no-overlap]
+  serve   [--trace azure-conv] [--requests N] [--waves N]
+          [--stack fhbn|nccl|nccl-nogdr|gloo] [--time-scale X]
+
+flags:
+  --requests N     trace subsample size for simulations (default 1000)
+  --seed S         workload seed (default 42)
+  --results DIR    where experiment JSON lands (default results/)
+  --artifacts DIR  AOT artifact dir (default artifacts/)
+";
+
+const SPEC: &[&str] = &[
+    "requests!", "seed!", "results!", "artifacts!", "workers!", "no-overlap",
+    "waves!", "stack!", "time-scale!", "prompt!", "steps!", "trace!", "help",
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, SPEC).map_err(|e| e.to_string())?;
+    if args.has("help") || args.subcommand.is_none() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let sub = args.subcommand.clone().unwrap();
+    let n_requests = args.usize_or("requests", 1000).map_err(|e| e.to_string())?;
+    let seed = args.usize_or("seed", 42).map_err(|e| e.to_string())? as u64;
+    let results_dir = args.get_or("results", "results").to_string();
+    let artifacts = args.get_or("artifacts", "artifacts").to_string();
+
+    match sub.as_str() {
+        "all" => {
+            for id in figures::ALL_IDS {
+                println!("\n=== {id} ===");
+                let j = figures::run(id, n_requests, seed)?;
+                figures::save(id, &j, &results_dir).map_err(|e| e.to_string())?;
+            }
+            println!("\nresults written to {results_dir}/");
+            Ok(())
+        }
+        "decode" => {
+            let prompt: Vec<i32> = args
+                .get_or("prompt", "1,7,42,99,3")
+                .split(',')
+                .map(|t| t.trim().parse().map_err(|_| format!("bad token '{t}'")))
+                .collect::<Result<_, _>>()?;
+            let steps = args.usize_or("steps", 16).map_err(|e| e.to_string())?;
+            let opts = pipeline_opts(&args, &artifacts)?;
+            let pipe = DisaggPipeline::start(opts).map_err(|e| format!("{e:#}"))?;
+            let t0 = std::time::Instant::now();
+            let out = pipe.decode(&[prompt.clone()], steps).map_err(|e| format!("{e:#}"))?;
+            let dt = t0.elapsed().as_secs_f64();
+            println!("prompt:    {prompt:?}");
+            println!("generated: {:?}", out[0]);
+            println!(
+                "{} tokens in {} ({:.1} tok/s end-to-end)",
+                out[0].len(),
+                fmt_duration(dt),
+                out[0].len() as f64 / dt
+            );
+            pipe.shutdown();
+            Ok(())
+        }
+        "serve" => {
+            let opts = pipeline_opts(&args, &artifacts)?;
+            let waves = args.usize_or("waves", 2).map_err(|e| e.to_string())?;
+            let pipe = DisaggPipeline::start(opts).map_err(|e| format!("{e:#}"))?;
+            let reqs = tiny_trace(&args, n_requests, seed, pipe.config().max_seq - 1)?;
+            println!(
+                "serving {} requests on the tiny model ({} waves)...",
+                reqs.len(),
+                waves
+            );
+            let mut m = pipe.serve(&reqs, waves).map_err(|e| format!("{e:#}"))?;
+            println!("completed:   {}", m.requests_completed);
+            println!("tokens:      {}", m.tokens_generated);
+            println!("throughput:  {:.1} tok/s", m.throughput());
+            println!("mean batch:  {:.2}", m.mean_batch());
+            println!(
+                "TBT: mean {}  p50 {}  p99 {}",
+                fmt_duration(m.mean_tbt()),
+                fmt_duration(m.p50_tbt()),
+                fmt_duration(m.p99_tbt())
+            );
+            let bd = m.mean_breakdown();
+            println!(
+                "breakdown: model {}  attention {}  network {}  other {}",
+                fmt_duration(bd.model_s),
+                fmt_duration(bd.attn_s),
+                fmt_duration(bd.network_s),
+                fmt_duration(bd.sched_s)
+            );
+            pipe.shutdown();
+            Ok(())
+        }
+        id => {
+            let j = figures::run(id, n_requests, seed)?;
+            figures::save(id, &j, &results_dir).map_err(|e| e.to_string())?;
+            println!("\nsaved {results_dir}/{id}.json");
+            Ok(())
+        }
+    }
+}
+
+fn pipeline_opts(args: &Args, artifacts: &str) -> Result<PipelineOpts, String> {
+    let mut opts = PipelineOpts::new(artifacts);
+    opts.attn_workers = args.usize_or("workers", 2).map_err(|e| e.to_string())?;
+    opts.overlap = !args.has("no-overlap");
+    opts.time_scale = args.f64_or("time-scale", 0.0).map_err(|e| e.to_string())?;
+    if let Some(name) = args.get("stack") {
+        opts.stack = stack_by_name(name).ok_or_else(|| format!("unknown stack '{name}'"))?;
+    }
+    Ok(opts)
+}
+
+/// A trace scaled down to the tiny model's context window: real trace shape,
+/// lengths clamped into [1, max_ctx].
+fn tiny_trace(args: &Args, n: usize, seed: u64, max_ctx: usize) -> Result<Vec<Request>, String> {
+    let spec = trace_by_name(args.get_or("trace", "azure-conv"))
+        .ok_or_else(|| format!("unknown trace '{}'", args.get_or("trace", "azure-conv")))?;
+    let scale = (spec.mean_prompt + spec.mean_gen) / (max_ctx as f64 / 4.0);
+    Ok(synthesize(spec, n, seed)
+        .into_iter()
+        .map(|r| {
+            let p = ((r.prompt_tokens as f64 / scale).round() as usize).clamp(1, max_ctx - 8);
+            let g = ((r.gen_tokens as f64 / scale).ceil() as usize).clamp(1, max_ctx - p);
+            Request { id: r.id, prompt_tokens: p, gen_tokens: g }
+        })
+        .collect())
+}

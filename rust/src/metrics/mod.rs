@@ -1,0 +1,169 @@
+//! Serving metrics: token throughput, time-between-tokens (TBT), batch-size
+//! tracking, and the per-component latency breakdown of Fig. 12.
+
+use crate::util::stats::{Percentiles, Welford};
+
+/// Latency components of one decode iteration (paper Fig. 12 categories).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StepBreakdown {
+    /// Model-worker (non-attention) execution time.
+    pub model_s: f64,
+    /// Attention-worker execution time.
+    pub attn_s: f64,
+    /// Network time on the critical path.
+    pub network_s: f64,
+    /// Scheduling/queueing overhead.
+    pub sched_s: f64,
+    /// End-to-end observed TBT (≤ sum of parts when overlapped).
+    pub total_s: f64,
+}
+
+impl StepBreakdown {
+    pub fn component_sum(&self) -> f64 {
+        self.model_s + self.attn_s + self.network_s + self.sched_s
+    }
+
+    /// Fraction of component time hidden by overlapping.
+    pub fn overlap_hidden_frac(&self) -> f64 {
+        let sum = self.component_sum();
+        if sum <= 0.0 {
+            0.0
+        } else {
+            ((sum - self.total_s) / sum).max(0.0)
+        }
+    }
+}
+
+/// Aggregating recorder for a serving run.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    pub tokens_generated: u64,
+    pub requests_completed: u64,
+    pub wall_s: f64,
+    tbt: Percentiles,
+    batch: Welford,
+    model_s: Welford,
+    attn_s: Welford,
+    network_s: Welford,
+    sched_s: Welford,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one decode iteration over `batch` requests.
+    pub fn record_step(&mut self, batch: usize, bd: StepBreakdown) {
+        self.tokens_generated += batch as u64;
+        self.wall_s += bd.total_s;
+        self.tbt.add(bd.total_s);
+        self.batch.add(batch as f64);
+        self.model_s.add(bd.model_s);
+        self.attn_s.add(bd.attn_s);
+        self.network_s.add(bd.network_s);
+        self.sched_s.add(bd.sched_s);
+    }
+
+    pub fn record_completion(&mut self, n: u64) {
+        self.requests_completed += n;
+    }
+
+    /// Aggregate throughput in tokens/second.
+    pub fn throughput(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / self.wall_s
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        self.batch.mean()
+    }
+
+    pub fn mean_tbt(&self) -> f64 {
+        self.tbt.mean()
+    }
+
+    pub fn p99_tbt(&mut self) -> f64 {
+        self.tbt.p99()
+    }
+
+    pub fn p50_tbt(&mut self) -> f64 {
+        self.tbt.p50()
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.batch.count()
+    }
+
+    /// Mean per-component breakdown across recorded steps.
+    pub fn mean_breakdown(&self) -> StepBreakdown {
+        StepBreakdown {
+            model_s: self.model_s.mean(),
+            attn_s: self.attn_s.mean(),
+            network_s: self.network_s.mean(),
+            sched_s: self.sched_s.mean(),
+            total_s: self.tbt.mean(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bd(model: f64, attn: f64, net: f64, total: f64) -> StepBreakdown {
+        StepBreakdown { model_s: model, attn_s: attn, network_s: net, sched_s: 0.0, total_s: total }
+    }
+
+    #[test]
+    fn throughput_tokens_over_wall() {
+        let mut m = ServeMetrics::new();
+        for _ in 0..10 {
+            m.record_step(32, bd(0.01, 0.005, 0.002, 0.02));
+        }
+        assert_eq!(m.tokens_generated, 320);
+        assert!((m.throughput() - 320.0 / 0.2).abs() < 1e-9);
+        assert!((m.mean_batch() - 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_averages() {
+        let mut m = ServeMetrics::new();
+        m.record_step(1, bd(0.010, 0.004, 0.002, 0.014));
+        m.record_step(1, bd(0.020, 0.008, 0.004, 0.028));
+        let b = m.mean_breakdown();
+        assert!((b.model_s - 0.015).abs() < 1e-12);
+        assert!((b.attn_s - 0.006).abs() < 1e-12);
+        assert!((b.total_s - 0.021).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_hidden_fraction() {
+        // components sum to 16 ms but observed TBT is 14 ms → 12.5 % hidden
+        let b = bd(0.010, 0.004, 0.002, 0.014);
+        assert!((b.overlap_hidden_frac() - 0.125).abs() < 1e-9);
+        // no overlap
+        let b2 = bd(0.010, 0.004, 0.002, 0.016);
+        assert_eq!(b2.overlap_hidden_frac(), 0.0);
+    }
+
+    #[test]
+    fn tbt_percentiles() {
+        let mut m = ServeMetrics::new();
+        for i in 1..=100 {
+            m.record_step(1, bd(0.0, 0.0, 0.0, i as f64 * 1e-3));
+        }
+        assert!((m.p50_tbt() - 0.0505).abs() < 1e-4);
+        assert!(m.p99_tbt() > 0.098);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.throughput(), 0.0);
+        assert_eq!(m.steps(), 0);
+    }
+}

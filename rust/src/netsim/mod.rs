@@ -1,0 +1,9 @@
+//! Network substrate: calibrated stack models (FHBN/NCCL/NCCL-noGDR/Gloo),
+//! the Fig. 13 ping-pong microbench, and the paced in-process transport the
+//! real serving pipeline moves bytes over.
+
+pub mod pingpong;
+pub mod stack;
+pub mod transport;
+
+pub use stack::{NetStackModel, FHBN, GLOO, LINE_RATE_400G, NCCL, NCCL_NO_GDR};

@@ -1,0 +1,86 @@
+//! Ping-pong microbenchmark (paper §6.3, Fig. 13).
+//!
+//! Reproduces the two-GPU ping-pong: the initiator sends `bytes`, the remote
+//! echoes them back; RTT is measured "from the completion of the kernel that
+//! generates the data to the start of the kernel that consumes it". Here the
+//! timing comes from the calibrated stack models; the *data path* can also be
+//! exercised for real through [`super::transport`] (bytes actually move
+//! between threads) to validate the plumbing.
+
+use super::stack::{NetStackModel, ALL_STACKS};
+
+/// One measured point of the Fig. 13 series.
+#[derive(Debug, Clone)]
+pub struct PingPongPoint {
+    pub stack: &'static str,
+    pub bytes: f64,
+    pub rtt_s: f64,
+    /// One-direction effective bandwidth at this size.
+    pub bw_bytes_per_s: f64,
+}
+
+/// Standard Fig. 13 sweep: 8 B … 1 GiB, powers of 4.
+pub fn default_sizes() -> Vec<f64> {
+    let mut v = Vec::new();
+    let mut s = 8.0;
+    while s <= 1.1e9 {
+        v.push(s);
+        s *= 4.0;
+    }
+    v
+}
+
+/// Run the analytic ping-pong for every stack at the given sizes.
+pub fn sweep(sizes: &[f64], line_rate: f64) -> Vec<PingPongPoint> {
+    let mut out = Vec::new();
+    for stack in ALL_STACKS {
+        for &bytes in sizes {
+            out.push(point(stack, bytes, line_rate));
+        }
+    }
+    out
+}
+
+pub fn point(stack: &NetStackModel, bytes: f64, line_rate: f64) -> PingPongPoint {
+    PingPongPoint {
+        stack: stack.name,
+        bytes,
+        rtt_s: stack.rtt(bytes, line_rate),
+        bw_bytes_per_s: stack.effective_bw(bytes, line_rate),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::stack::LINE_RATE_400G;
+
+    #[test]
+    fn sweep_covers_all_stacks_and_sizes() {
+        let sizes = default_sizes();
+        let pts = sweep(&sizes, LINE_RATE_400G);
+        assert_eq!(pts.len(), sizes.len() * ALL_STACKS.len());
+        assert!(sizes.len() >= 10);
+    }
+
+    #[test]
+    fn rtt_monotone_in_size() {
+        let sizes = default_sizes();
+        for stack in ALL_STACKS {
+            let mut prev = 0.0;
+            for &s in &sizes {
+                let p = point(stack, s, LINE_RATE_400G);
+                assert!(p.rtt_s >= prev);
+                prev = p.rtt_s;
+            }
+        }
+    }
+
+    #[test]
+    fn small_message_latency_dominated() {
+        // Below ~64 KiB the RTT barely moves (latency floor).
+        let a = point(&crate::netsim::stack::FHBN, 8.0, LINE_RATE_400G);
+        let b = point(&crate::netsim::stack::FHBN, 4096.0, LINE_RATE_400G);
+        assert!(b.rtt_s / a.rtt_s < 1.02);
+    }
+}

@@ -1,0 +1,194 @@
+//! Network-stack latency/bandwidth models (paper §4.1, Fig. 13).
+//!
+//! The paper's FHBN removes every host-CPU step from the GPU-to-GPU
+//! communication critical path. We model each stack as a sum of the
+//! components §4.1 enumerates, calibrated against the paper's measured
+//! endpoints: FHBN 33.0 µs small-message RTT / 45.7 GB/s peak (91.4 % of a
+//! 400 Gbps line), NCCL 66.6 µs / 35.5 GB/s.
+//!
+//! The real RDMA/BlueFlame hardware is absent in this reproduction (see
+//! DESIGN.md §2); these models drive both the ping-pong microbench and the
+//! per-layer communication costs in the serving simulator, and pace the
+//! in-process byte transport used by the real tiny-model pipeline.
+
+/// One directional transfer's latency decomposition (seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetStackModel {
+    pub name: &'static str,
+    /// Step 1: sender CPU waits for prior GPU kernels (host-device sync).
+    pub host_sync_s: f64,
+    /// Step 2: work-request submission to the RNIC (doorbell/BlueFlame).
+    pub submit_s: f64,
+    /// Steps 3–4: RNIC processing + wire propagation + switch hops.
+    pub wire_s: f64,
+    /// Step 5: receiver-side completion detection (CPU poll vs GPU poll).
+    pub recv_sync_s: f64,
+    /// Step 6: consumer GPU kernel launch (0 if pre-launched polling kernel).
+    pub kernel_launch_s: f64,
+    /// Achievable fraction of the physical line rate for large messages.
+    pub bw_efficiency: f64,
+}
+
+/// 400 Gbps RoCE line rate in bytes/s (the paper's testbed NICs).
+pub const LINE_RATE_400G: f64 = 50e9;
+/// 200 Gbps variant (TPU v6e hosts in Table 1).
+pub const LINE_RATE_200G: f64 = 25e9;
+
+impl NetStackModel {
+    /// Fixed (size-independent) one-way overhead.
+    pub fn fixed_overhead(&self) -> f64 {
+        self.host_sync_s + self.submit_s + self.wire_s + self.recv_sync_s + self.kernel_launch_s
+    }
+
+    /// One-way latency for a message of `bytes` on a link of `line_rate`.
+    pub fn one_way(&self, bytes: f64, line_rate: f64) -> f64 {
+        self.fixed_overhead() + bytes / (line_rate * self.bw_efficiency)
+    }
+
+    /// Ping-pong round-trip time (the Fig. 13 metric): data out + data back.
+    pub fn rtt(&self, bytes: f64, line_rate: f64) -> f64 {
+        2.0 * self.one_way(bytes, line_rate)
+    }
+
+    /// Effective ping-pong bandwidth at `bytes` (Fig. 13 right panel).
+    pub fn effective_bw(&self, bytes: f64, line_rate: f64) -> f64 {
+        bytes / self.one_way(bytes, line_rate)
+    }
+}
+
+/// Fully host-bypassed network stack (the paper's contribution):
+/// GPU-driven BlueFlame WR submission, device-side sequence-number polling,
+/// pre-launched consumer kernels. No host CPU anywhere on the path.
+pub const FHBN: NetStackModel = NetStackModel {
+    name: "FHBN",
+    host_sync_s: 0.0,        // GPU submits directly; no CPU wait
+    submit_s: 1.5e-6,        // BlueFlame mmio write from device code
+    wire_s: 9.0e-6,          // RNIC pipeline + switch + propagation
+    recv_sync_s: 6.0e-6,     // device-side seqno poll detection
+    kernel_launch_s: 0.0,    // polling kernel pre-launched on stream
+    bw_efficiency: 0.914,    // paper: 45.7 GB/s of 50 GB/s line
+};
+
+/// NCCL with GPUDirect RDMA: data path bypasses host memory but the control
+/// path (steps 1–6 in §4.1) still runs on the CPUs.
+pub const NCCL: NetStackModel = NetStackModel {
+    name: "NCCL",
+    host_sync_s: 9.0e-6,     // cudaStreamSynchronize before send
+    submit_s: 3.0e-6,        // ibv_post_send + doorbell from host
+    wire_s: 9.0e-6,
+    recv_sync_s: 5.0e-6,     // CPU polls CQ
+    kernel_launch_s: 7.3e-6, // launch of the consumer kernel
+    bw_efficiency: 0.71,     // paper: 35.5 GB/s of 50 GB/s line
+};
+
+/// NCCL with GPUDirect RDMA disabled: data staged through host memory —
+/// extra PCIe copies shrink bandwidth and add latency.
+pub const NCCL_NO_GDR: NetStackModel = NetStackModel {
+    name: "NCCL-noGDR",
+    host_sync_s: 9.0e-6,
+    submit_s: 3.0e-6,
+    wire_s: 9.0e-6,
+    recv_sync_s: 13.0e-6,    // + host-buffer copy in/out windows
+    kernel_launch_s: 7.3e-6,
+    bw_efficiency: 0.42,     // bounded by PCIe staging pipeline
+};
+
+/// Gloo: CPU-orchestrated transport, host-memory staging, no GPU awareness.
+pub const GLOO: NetStackModel = NetStackModel {
+    name: "Gloo",
+    host_sync_s: 12.0e-6,
+    submit_s: 6.0e-6,
+    wire_s: 14.0e-6,
+    recv_sync_s: 20.0e-6,
+    kernel_launch_s: 7.3e-6,
+    bw_efficiency: 0.30,
+};
+
+pub const ALL_STACKS: &[&NetStackModel] = &[&FHBN, &NCCL, &NCCL_NO_GDR, &GLOO];
+
+pub fn stack_by_name(name: &str) -> Option<&'static NetStackModel> {
+    ALL_STACKS
+        .iter()
+        .find(|s| s.name.eq_ignore_ascii_case(name))
+        .copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SMALL: f64 = 8.0; // bytes — latency-dominated regime
+
+    #[test]
+    fn fhbn_small_rtt_33us() {
+        let rtt = FHBN.rtt(SMALL, LINE_RATE_400G);
+        assert!((rtt - 33.0e-6).abs() < 1.0e-6, "rtt={:.1}µs", rtt * 1e6);
+    }
+
+    #[test]
+    fn nccl_small_rtt_66us() {
+        let rtt = NCCL.rtt(SMALL, LINE_RATE_400G);
+        assert!((rtt - 66.6e-6).abs() < 1.5e-6, "rtt={:.1}µs", rtt * 1e6);
+    }
+
+    #[test]
+    fn fhbn_cuts_nccl_by_half() {
+        // Paper: 50.5 % reduction.
+        let cut = 1.0 - FHBN.rtt(SMALL, LINE_RATE_400G) / NCCL.rtt(SMALL, LINE_RATE_400G);
+        assert!((cut - 0.505).abs() < 0.03, "cut={cut}");
+    }
+
+    #[test]
+    fn fhbn_peak_bw_45_7() {
+        // 1 GiB message: overhead amortised away.
+        let bw = FHBN.effective_bw(1e9, LINE_RATE_400G);
+        assert!((bw - 45.7e9).abs() / 45.7e9 < 0.02, "bw={:.1} GB/s", bw / 1e9);
+    }
+
+    #[test]
+    fn nccl_peak_bw_35_5() {
+        let bw = NCCL.effective_bw(1e9, LINE_RATE_400G);
+        assert!((bw - 35.5e9).abs() / 35.5e9 < 0.02, "bw={:.1} GB/s", bw / 1e9);
+    }
+
+    #[test]
+    fn stack_ordering_holds_at_all_sizes() {
+        // FHBN ≤ NCCL ≤ NCCL-noGDR ≤ Gloo for every message size.
+        let mut size = 8.0;
+        while size <= 1e9 {
+            let times: Vec<f64> = ALL_STACKS
+                .iter()
+                .map(|s| s.rtt(size, LINE_RATE_400G))
+                .collect();
+            for w in times.windows(2) {
+                assert!(w[0] <= w[1] * 1.0001, "ordering broken at {size}B: {times:?}");
+            }
+            size *= 4.0;
+        }
+    }
+
+    #[test]
+    fn bandwidth_asymptote_monotone() {
+        // Effective bandwidth must increase with message size.
+        let mut prev = 0.0;
+        for bytes in [1e3, 1e4, 1e5, 1e6, 1e7, 1e8] {
+            let bw = FHBN.effective_bw(bytes, LINE_RATE_400G);
+            assert!(bw > prev);
+            prev = bw;
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(stack_by_name("fhbn").unwrap().name, "FHBN");
+        assert_eq!(stack_by_name("NCCL-noGDR").unwrap().bw_efficiency, 0.42);
+        assert!(stack_by_name("tcp").is_none());
+    }
+
+    #[test]
+    fn line_rate_scales_transfer() {
+        let t400 = FHBN.one_way(1e8, LINE_RATE_400G);
+        let t200 = FHBN.one_way(1e8, LINE_RATE_200G);
+        assert!(t200 > 1.8 * t400 && t200 < 2.2 * t400);
+    }
+}

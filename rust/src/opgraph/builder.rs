@@ -1,0 +1,220 @@
+//! Build the decode-step operator graph from an architecture description —
+//! the stand-in for the paper's symbolic-execution front-end (§4.2.1):
+//! given the model's shape specification, emit the weighted computation
+//! graph the splitter cuts.
+
+use super::graph::{NodeId, OpGraph, OpKind};
+
+/// Architecture shape parameters needed to weight the graph (per-request,
+/// i.e. batch size 1; edge bytes scale linearly with batch).
+#[derive(Debug, Clone, Copy)]
+pub struct ArchShape {
+    pub d: usize,
+    pub layers: usize,
+    /// GQA group size (k/v are d/G wide).
+    pub gqa_group: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub elem_bytes: f64,
+}
+
+impl ArchShape {
+    pub fn hidden_bytes(&self) -> f64 {
+        self.elem_bytes * self.d as f64
+    }
+
+    pub fn kv_bytes(&self) -> f64 {
+        self.hidden_bytes() / self.gqa_group as f64
+    }
+
+    pub fn ffn_bytes(&self) -> f64 {
+        self.elem_bytes * self.ffn as f64
+    }
+}
+
+/// Handles to the structurally interesting nodes of the built graph.
+#[derive(Debug, Clone)]
+pub struct DecodeGraph {
+    pub graph: OpGraph,
+    pub input: NodeId,
+    pub output: NodeId,
+    /// Per layer: (attention node, residual-add after o_proj, q rope node,
+    /// k rope node, v projection node).
+    pub layer_handles: Vec<LayerHandles>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct LayerHandles {
+    pub attention: NodeId,
+    pub resid_add: NodeId,
+    pub rope_q: NodeId,
+    pub rope_k: NodeId,
+    pub v_proj: NodeId,
+}
+
+/// Construct the full decode-step op graph: embed → L × (attn block + FFN
+/// block with residual connections) → final norm → LM head → argmax.
+pub fn build_decode_graph(a: ArchShape) -> DecodeGraph {
+    let mut g = OpGraph::default();
+    let hb = a.hidden_bytes();
+    let kvb = a.kv_bytes();
+    let fb = a.ffn_bytes();
+
+    let input = g.add_node("tokens", OpKind::Input, None);
+    let embed = g.add_node("embed", OpKind::Embed, None);
+    g.add_edge(input, embed, 4.0); // token ids, i32
+
+    let mut resid = embed;
+    let mut layer_handles = Vec::with_capacity(a.layers);
+    for l in 0..a.layers {
+        let attn_norm = g.add_node(format!("l{l}.attn_norm"), OpKind::RmsNorm, Some(l));
+        g.add_edge(resid, attn_norm, hb);
+
+        let q_proj = g.add_node(format!("l{l}.q_proj"), OpKind::MatMul, Some(l));
+        let k_proj = g.add_node(format!("l{l}.k_proj"), OpKind::MatMul, Some(l));
+        let v_proj = g.add_node(format!("l{l}.v_proj"), OpKind::MatMul, Some(l));
+        g.add_edge(attn_norm, q_proj, hb);
+        g.add_edge(attn_norm, k_proj, hb);
+        g.add_edge(attn_norm, v_proj, hb);
+
+        let rope_q = g.add_node(format!("l{l}.rope_q"), OpKind::Rope, Some(l));
+        let rope_k = g.add_node(format!("l{l}.rope_k"), OpKind::Rope, Some(l));
+        g.add_edge(q_proj, rope_q, hb);
+        g.add_edge(k_proj, rope_k, kvb);
+
+        let attention = g.add_node(format!("l{l}.attention"), OpKind::Attention, Some(l));
+        g.add_edge(rope_q, attention, hb);
+        g.add_edge(rope_k, attention, kvb);
+        g.add_edge(v_proj, attention, kvb);
+
+        let o_proj = g.add_node(format!("l{l}.o_proj"), OpKind::MatMul, Some(l));
+        g.add_edge(attention, o_proj, hb);
+
+        let resid_add = g.add_node(format!("l{l}.resid_add"), OpKind::Add, Some(l));
+        g.add_edge(o_proj, resid_add, hb);
+        g.add_edge(resid, resid_add, hb); // the residual skip over attention
+
+        let ffn_norm = g.add_node(format!("l{l}.ffn_norm"), OpKind::RmsNorm, Some(l));
+        g.add_edge(resid_add, ffn_norm, hb);
+        let gate = g.add_node(format!("l{l}.gate_proj"), OpKind::MatMul, Some(l));
+        let up = g.add_node(format!("l{l}.up_proj"), OpKind::MatMul, Some(l));
+        g.add_edge(ffn_norm, gate, hb);
+        g.add_edge(ffn_norm, up, hb);
+        let silu = g.add_node(format!("l{l}.silu"), OpKind::Elementwise, Some(l));
+        g.add_edge(gate, silu, fb);
+        let mul = g.add_node(format!("l{l}.mul"), OpKind::Elementwise, Some(l));
+        g.add_edge(silu, mul, fb);
+        g.add_edge(up, mul, fb);
+        let down = g.add_node(format!("l{l}.down_proj"), OpKind::MatMul, Some(l));
+        g.add_edge(mul, down, fb);
+        let ffn_add = g.add_node(format!("l{l}.ffn_add"), OpKind::Add, Some(l));
+        g.add_edge(down, ffn_add, hb);
+        g.add_edge(resid_add, ffn_add, hb); // residual skip over FFN
+
+        layer_handles.push(LayerHandles { attention, resid_add, rope_q, rope_k, v_proj });
+        resid = ffn_add;
+    }
+
+    let final_norm = g.add_node("final_norm", OpKind::RmsNorm, None);
+    g.add_edge(resid, final_norm, hb);
+    let lm_head = g.add_node("lm_head", OpKind::MatMul, None);
+    g.add_edge(final_norm, lm_head, hb);
+    let argmax = g.add_node("argmax", OpKind::ArgMax, None);
+    g.add_edge(lm_head, argmax, a.elem_bytes * a.vocab as f64);
+    let output = g.add_node("next_token", OpKind::Output, None);
+    g.add_edge(argmax, output, 4.0);
+
+    DecodeGraph { graph: g, input, output, layer_handles }
+}
+
+/// Shape of the repo's tiny artifact model (must match python TINY config).
+pub fn tiny_shape() -> ArchShape {
+    ArchShape { d: 128, layers: 4, gqa_group: 4, ffn: 256, vocab: 512, elem_bytes: 4.0 }
+}
+
+/// LLaMA3-70B shape for the analytical experiments.
+pub fn llama3_70b_shape() -> ArchShape {
+    ArchShape { d: 8192, layers: 80, gqa_group: 8, ffn: 28672, vocab: 128_256, elem_bytes: 2.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_count_scales_with_layers() {
+        let g1 = build_decode_graph(ArchShape { layers: 1, ..tiny_shape() });
+        let g4 = build_decode_graph(ArchShape { layers: 4, ..tiny_shape() });
+        let per_layer = (g4.graph.nodes.len() - g1.graph.nodes.len()) / 3;
+        assert_eq!(per_layer, 16); // ops per transformer block
+        assert_eq!(g4.layer_handles.len(), 4);
+    }
+
+    #[test]
+    fn graph_is_dag_with_valid_topo() {
+        let dg = build_decode_graph(tiny_shape());
+        let order = dg.graph.topo_order();
+        assert!(dg.graph.is_topo_order(&order));
+    }
+
+    #[test]
+    fn attention_nodes_found() {
+        let dg = build_decode_graph(tiny_shape());
+        let attn = dg.graph.attention_nodes();
+        assert_eq!(attn.len(), 4);
+        for (i, lh) in dg.layer_handles.iter().enumerate() {
+            assert_eq!(attn[i], lh.attention);
+        }
+    }
+
+    #[test]
+    fn attention_has_three_inputs_one_output() {
+        let dg = build_decode_graph(tiny_shape());
+        for lh in &dg.layer_handles {
+            assert_eq!(dg.graph.predecessors(lh.attention).len(), 3);
+            assert_eq!(dg.graph.successors(lh.attention).len(), 1);
+        }
+    }
+
+    #[test]
+    fn kv_edges_shrunk_by_gqa() {
+        let a = tiny_shape();
+        let dg = build_decode_graph(a);
+        let lh = dg.layer_handles[0];
+        let kv_edge = dg
+            .graph
+            .edges
+            .iter()
+            .find(|e| e.src == lh.rope_k && e.dst == lh.attention)
+            .unwrap();
+        let q_edge = dg
+            .graph
+            .edges
+            .iter()
+            .find(|e| e.src == lh.rope_q && e.dst == lh.attention)
+            .unwrap();
+        assert!((q_edge.bytes / kv_edge.bytes - a.gqa_group as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn removing_attention_keeps_graph_connected() {
+        // The paper's §4.2.1 premise: residuals keep input→output connected
+        // even without attention, hence the need for a min cut.
+        let dg = build_decode_graph(tiny_shape());
+        let banned: std::collections::BTreeSet<_> =
+            dg.graph.attention_nodes().into_iter().collect();
+        // BFS from input avoiding attention nodes.
+        let mut seen = vec![false; dg.graph.nodes.len()];
+        let mut q = vec![dg.input];
+        seen[dg.input] = true;
+        while let Some(v) = q.pop() {
+            for s in dg.graph.successors(v) {
+                if !banned.contains(&s) && !seen[s] {
+                    seen[s] = true;
+                    q.push(s);
+                }
+            }
+        }
+        assert!(seen[dg.output], "residual path must reach the output");
+    }
+}

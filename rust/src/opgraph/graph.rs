@@ -1,0 +1,260 @@
+//! Weighted operator graph IR — the input to the automated model converter
+//! (paper §4.2.1, Fig. 6).
+//!
+//! Nodes are tensor operators; a directed edge `u → v` means v consumes a
+//! tensor produced by u, weighted by that tensor's size in bytes (derived
+//! from the model's shape specification, as the paper's symbolic executor
+//! does). The converter cuts this graph at every attention operator.
+
+use std::collections::BTreeMap;
+
+/// Operator kinds appearing in a transformer decode step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Graph input (token ids / positions).
+    Input,
+    Embed,
+    RmsNorm,
+    /// Dense projection (QKVO, FFN matmuls, LM head).
+    MatMul,
+    Rope,
+    /// The attention operator — the cut point.
+    Attention,
+    /// Residual or elementwise add.
+    Add,
+    /// Elementwise activation (SiLU) or product.
+    Elementwise,
+    ArgMax,
+    /// Graph output.
+    Output,
+}
+
+/// Node id.
+pub type NodeId = usize;
+
+#[derive(Debug, Clone)]
+pub struct OpNode {
+    pub id: NodeId,
+    pub name: String,
+    pub kind: OpKind,
+    /// Which transformer layer this op belongs to (None for embed/head).
+    pub layer: Option<usize>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Edge {
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Tensor bytes flowing along this edge (per decode iteration).
+    pub bytes: f64,
+}
+
+/// The operator graph.
+#[derive(Debug, Clone, Default)]
+pub struct OpGraph {
+    pub nodes: Vec<OpNode>,
+    pub edges: Vec<Edge>,
+}
+
+impl OpGraph {
+    pub fn add_node(&mut self, name: impl Into<String>, kind: OpKind, layer: Option<usize>) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(OpNode { id, name: name.into(), kind, layer });
+        id
+    }
+
+    pub fn add_edge(&mut self, src: NodeId, dst: NodeId, bytes: f64) {
+        assert!(src < self.nodes.len() && dst < self.nodes.len());
+        assert!(src != dst, "self-loop");
+        self.edges.push(Edge { src, dst, bytes });
+    }
+
+    pub fn node(&self, id: NodeId) -> &OpNode {
+        &self.nodes[id]
+    }
+
+    pub fn successors(&self, id: NodeId) -> Vec<NodeId> {
+        self.edges.iter().filter(|e| e.src == id).map(|e| e.dst).collect()
+    }
+
+    pub fn predecessors(&self, id: NodeId) -> Vec<NodeId> {
+        self.edges.iter().filter(|e| e.dst == id).map(|e| e.src).collect()
+    }
+
+    /// Forward adjacency lists, built once — O(V+E). Use instead of
+    /// repeated [`successors`] calls in traversal-heavy code (each of those
+    /// scans every edge).
+    pub fn out_adj(&self) -> Vec<Vec<NodeId>> {
+        let mut adj = vec![Vec::new(); self.nodes.len()];
+        for e in &self.edges {
+            adj[e.src].push(e.dst);
+        }
+        adj
+    }
+
+    /// Reverse adjacency lists, built once.
+    pub fn in_adj(&self) -> Vec<Vec<NodeId>> {
+        let mut adj = vec![Vec::new(); self.nodes.len()];
+        for e in &self.edges {
+            adj[e.dst].push(e.src);
+        }
+        adj
+    }
+
+    pub fn attention_nodes(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| n.kind == OpKind::Attention)
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Kahn topological order; panics on cycles (op graphs are DAGs).
+    pub fn topo_order(&self) -> Vec<NodeId> {
+        let adj = self.out_adj();
+        let mut indeg = vec![0usize; self.nodes.len()];
+        for e in &self.edges {
+            indeg[e.dst] += 1;
+        }
+        let mut queue: Vec<NodeId> = indeg
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(i, _)| i)
+            .collect();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        while let Some(n) = queue.pop() {
+            order.push(n);
+            for &s in &adj[n] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+        assert_eq!(order.len(), self.nodes.len(), "cycle in op graph");
+        order
+    }
+
+    /// Topological order with a priority: nodes for which `prio` returns a
+    /// *smaller* value are scheduled as early as dependencies allow. Used by
+    /// the converter's Q-proj-early reordering (paper §4.2.2).
+    pub fn topo_order_by<F: Fn(&OpNode) -> i64>(&self, prio: F) -> Vec<NodeId> {
+        let adj = self.out_adj();
+        let mut indeg = vec![0usize; self.nodes.len()];
+        for e in &self.edges {
+            indeg[e.dst] += 1;
+        }
+        // min-heap by (prio, id) via BTreeMap for determinism
+        let mut ready: BTreeMap<(i64, NodeId), ()> = BTreeMap::new();
+        for (i, &d) in indeg.iter().enumerate() {
+            if d == 0 {
+                ready.insert((prio(&self.nodes[i]), i), ());
+            }
+        }
+        let mut order = Vec::with_capacity(self.nodes.len());
+        while let Some((&(p, n), ())) = ready.iter().next().map(|(k, v)| (k, *v)) {
+            ready.remove(&(p, n));
+            order.push(n);
+            for &s in &adj[n] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    ready.insert((prio(&self.nodes[s]), s), ());
+                }
+            }
+        }
+        assert_eq!(order.len(), self.nodes.len(), "cycle in op graph");
+        order
+    }
+
+    /// Verify `order` is a valid topological order of this graph.
+    pub fn is_topo_order(&self, order: &[NodeId]) -> bool {
+        if order.len() != self.nodes.len() {
+            return false;
+        }
+        let mut pos = vec![usize::MAX; self.nodes.len()];
+        for (i, &n) in order.iter().enumerate() {
+            pos[n] = i;
+        }
+        self.edges.iter().all(|e| pos[e.src] < pos[e.dst])
+    }
+
+    /// Sum of bytes over all edges crossing from `set` to its complement.
+    pub fn cut_bytes(&self, in_set: &[bool]) -> f64 {
+        self.edges
+            .iter()
+            .filter(|e| in_set[e.src] && !in_set[e.dst])
+            .map(|e| e.bytes)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> OpGraph {
+        // a → b → d, a → c → d
+        let mut g = OpGraph::default();
+        let a = g.add_node("a", OpKind::Input, None);
+        let b = g.add_node("b", OpKind::MatMul, None);
+        let c = g.add_node("c", OpKind::MatMul, None);
+        let d = g.add_node("d", OpKind::Output, None);
+        g.add_edge(a, b, 1.0);
+        g.add_edge(a, c, 2.0);
+        g.add_edge(b, d, 3.0);
+        g.add_edge(c, d, 4.0);
+        g
+    }
+
+    #[test]
+    fn topo_valid() {
+        let g = diamond();
+        let order = g.topo_order();
+        assert!(g.is_topo_order(&order));
+    }
+
+    #[test]
+    fn topo_by_priority_prefers_low() {
+        let g = diamond();
+        // make c (id 2) high priority (low value) over b (id 1)
+        let order = g.topo_order_by(|n| if n.name == "c" { 0 } else { 1 });
+        assert!(g.is_topo_order(&order));
+        let pos_b = order.iter().position(|&x| g.node(x).name == "b").unwrap();
+        let pos_c = order.iter().position(|&x| g.node(x).name == "c").unwrap();
+        assert!(pos_c < pos_b);
+    }
+
+    #[test]
+    fn neighbors() {
+        let g = diamond();
+        assert_eq!(g.successors(0), vec![1, 2]);
+        assert_eq!(g.predecessors(3), vec![1, 2]);
+    }
+
+    #[test]
+    fn cut_bytes_counts_forward_edges_only() {
+        let g = diamond();
+        // set = {a, b}: crossing edges a→c (2) and b→d (3)
+        let cut = g.cut_bytes(&[true, true, false, false]);
+        assert_eq!(cut, 5.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cycle_panics() {
+        let mut g = OpGraph::default();
+        let a = g.add_node("a", OpKind::MatMul, None);
+        let b = g.add_node("b", OpKind::MatMul, None);
+        g.add_edge(a, b, 1.0);
+        g.add_edge(b, a, 1.0);
+        g.topo_order();
+    }
+
+    #[test]
+    fn invalid_topo_detected() {
+        let g = diamond();
+        assert!(!g.is_topo_order(&[3, 1, 2, 0]));
+        assert!(!g.is_topo_order(&[0, 1, 2]));
+    }
+}

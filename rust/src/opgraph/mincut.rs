@@ -1,0 +1,269 @@
+//! Minimum weighted s–t cut via Dinic's max-flow (paper §4.2.1).
+//!
+//! The model splitter removes an attention operator and computes the min cut
+//! between its inputs and outputs in the remaining graph; the cut edges are
+//! the context a slice must hand to the next one (residual stream etc.).
+//!
+//! Capacities are tensor byte counts (f64). Dinic runs in O(V²E), far more
+//! than enough for operator graphs (a few thousand nodes).
+
+use super::graph::{Edge, NodeId, OpGraph};
+
+#[derive(Debug, Clone)]
+struct FlowEdge {
+    to: usize,
+    cap: f64,
+    /// index of the reverse edge in `adj[to]`
+    rev: usize,
+    /// original op-graph edge index (None for reverse/virtual edges);
+    /// retained for debugging cut extraction
+    #[allow(dead_code)]
+    orig: Option<usize>,
+}
+
+/// Max-flow network.
+pub struct Dinic {
+    adj: Vec<Vec<FlowEdge>>,
+    level: Vec<i32>,
+    it: Vec<usize>,
+}
+
+const EPS: f64 = 1e-9;
+
+impl Dinic {
+    pub fn new(n: usize) -> Self {
+        Dinic { adj: vec![Vec::new(); n], level: vec![0; n], it: vec![0; n] }
+    }
+
+    pub fn add_edge(&mut self, from: usize, to: usize, cap: f64, orig: Option<usize>) {
+        let a = self.adj[from].len();
+        let b = self.adj[to].len();
+        self.adj[from].push(FlowEdge { to, cap, rev: b, orig });
+        self.adj[to].push(FlowEdge { to: from, cap: 0.0, rev: a, orig: None });
+    }
+
+    fn bfs(&mut self, s: usize, t: usize) -> bool {
+        self.level.iter_mut().for_each(|l| *l = -1);
+        let mut q = std::collections::VecDeque::new();
+        self.level[s] = 0;
+        q.push_back(s);
+        while let Some(v) = q.pop_front() {
+            for e in &self.adj[v] {
+                if e.cap > EPS && self.level[e.to] < 0 {
+                    self.level[e.to] = self.level[v] + 1;
+                    q.push_back(e.to);
+                }
+            }
+        }
+        self.level[t] >= 0
+    }
+
+    fn dfs(&mut self, v: usize, t: usize, f: f64) -> f64 {
+        if v == t {
+            return f;
+        }
+        while self.it[v] < self.adj[v].len() {
+            let (to, cap, rev) = {
+                let e = &self.adj[v][self.it[v]];
+                (e.to, e.cap, e.rev)
+            };
+            if cap > EPS && self.level[v] < self.level[to] {
+                let d = self.dfs(to, t, f.min(cap));
+                if d > EPS {
+                    self.adj[v][self.it[v]].cap -= d;
+                    self.adj[to][rev].cap += d;
+                    return d;
+                }
+            }
+            self.it[v] += 1;
+        }
+        0.0
+    }
+
+    /// Run max-flow from s to t; returns total flow.
+    pub fn max_flow(&mut self, s: usize, t: usize) -> f64 {
+        assert_ne!(s, t);
+        let mut flow = 0.0;
+        while self.bfs(s, t) {
+            self.it.iter_mut().for_each(|i| *i = 0);
+            loop {
+                let f = self.dfs(s, t, f64::INFINITY);
+                if f <= EPS {
+                    break;
+                }
+                flow += f;
+            }
+        }
+        flow
+    }
+
+    /// After max_flow: the set of nodes reachable from s in the residual
+    /// graph (the s-side of the min cut).
+    pub fn min_cut_side(&self, s: usize) -> Vec<bool> {
+        let mut seen = vec![false; self.adj.len()];
+        let mut q = std::collections::VecDeque::new();
+        seen[s] = true;
+        q.push_back(s);
+        while let Some(v) = q.pop_front() {
+            for e in &self.adj[v] {
+                if e.cap > EPS && !seen[e.to] {
+                    seen[e.to] = true;
+                    q.push_back(e.to);
+                }
+            }
+        }
+        seen
+    }
+}
+
+/// Result of a min-cut query over an op graph.
+#[derive(Debug, Clone)]
+pub struct CutResult {
+    /// Total cut weight (bytes).
+    pub weight: f64,
+    /// Indices into `graph.edges` of the cut edges.
+    pub cut_edges: Vec<usize>,
+    /// `true` for nodes on the source side.
+    pub source_side: Vec<bool>,
+}
+
+/// Minimum weighted cut separating `sources` from `sinks` in `graph`,
+/// optionally ignoring some edges (e.g. those touching the removed
+/// attention node).
+pub fn min_cut(
+    graph: &OpGraph,
+    sources: &[NodeId],
+    sinks: &[NodeId],
+    skip_edge: impl Fn(usize, &Edge) -> bool,
+) -> CutResult {
+    let n = graph.nodes.len();
+    let s = n;
+    let t = n + 1;
+    let mut dinic = Dinic::new(n + 2);
+    for (i, e) in graph.edges.iter().enumerate() {
+        if !skip_edge(i, e) {
+            dinic.add_edge(e.src, e.dst, e.bytes, Some(i));
+        }
+    }
+    for &src in sources {
+        dinic.add_edge(s, src, f64::INFINITY, None);
+    }
+    for &snk in sinks {
+        dinic.add_edge(snk, t, f64::INFINITY, None);
+    }
+    let weight = dinic.max_flow(s, t);
+    let side = dinic.min_cut_side(s);
+    let mut cut_edges = Vec::new();
+    for (i, e) in graph.edges.iter().enumerate() {
+        if !skip_edge(i, e) && side[e.src] && !side[e.dst] {
+            cut_edges.push(i);
+        }
+    }
+    CutResult { weight, cut_edges, source_side: side[..n].to_vec() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opgraph::graph::OpKind;
+
+    #[test]
+    fn simple_chain_cut_is_min_edge() {
+        // a -5-> b -2-> c -7-> d : min cut between a and d is the 2-edge.
+        let mut g = OpGraph::default();
+        let a = g.add_node("a", OpKind::Input, None);
+        let b = g.add_node("b", OpKind::MatMul, None);
+        let c = g.add_node("c", OpKind::MatMul, None);
+        let d = g.add_node("d", OpKind::Output, None);
+        g.add_edge(a, b, 5.0);
+        g.add_edge(b, c, 2.0);
+        g.add_edge(c, d, 7.0);
+        let cut = min_cut(&g, &[a], &[d], |_, _| false);
+        assert!((cut.weight - 2.0).abs() < 1e-9);
+        assert_eq!(cut.cut_edges.len(), 1);
+        assert_eq!(g.edges[cut.cut_edges[0]].bytes, 2.0);
+    }
+
+    #[test]
+    fn parallel_paths_sum() {
+        // two disjoint paths of bottleneck 3 and 4 → min cut 7
+        let mut g = OpGraph::default();
+        let s = g.add_node("s", OpKind::Input, None);
+        let a = g.add_node("a", OpKind::MatMul, None);
+        let b = g.add_node("b", OpKind::MatMul, None);
+        let t = g.add_node("t", OpKind::Output, None);
+        g.add_edge(s, a, 3.0);
+        g.add_edge(a, t, 9.0);
+        g.add_edge(s, b, 9.0);
+        g.add_edge(b, t, 4.0);
+        let cut = min_cut(&g, &[s], &[t], |_, _| false);
+        assert!((cut.weight - 7.0).abs() < 1e-9);
+        assert_eq!(cut.cut_edges.len(), 2);
+    }
+
+    #[test]
+    fn classic_maxflow_instance() {
+        // CLRS-style instance with known max flow 23.
+        let mut g = OpGraph::default();
+        let ids: Vec<_> = (0..6)
+            .map(|i| g.add_node(format!("n{i}"), OpKind::MatMul, None))
+            .collect();
+        let (s, v1, v2, v3, v4, t) = (ids[0], ids[1], ids[2], ids[3], ids[4], ids[5]);
+        g.add_edge(s, v1, 16.0);
+        g.add_edge(s, v2, 13.0);
+        g.add_edge(v1, v3, 12.0);
+        g.add_edge(v2, v1, 4.0);
+        g.add_edge(v2, v4, 14.0);
+        g.add_edge(v3, v2, 9.0);
+        g.add_edge(v3, t, 20.0);
+        g.add_edge(v4, v3, 7.0);
+        g.add_edge(v4, t, 4.0);
+        let cut = min_cut(&g, &[s], &[t], |_, _| false);
+        assert!((cut.weight - 23.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cut_weight_equals_cut_edge_sum() {
+        let mut g = OpGraph::default();
+        let s = g.add_node("s", OpKind::Input, None);
+        let a = g.add_node("a", OpKind::MatMul, None);
+        let b = g.add_node("b", OpKind::MatMul, None);
+        let t = g.add_node("t", OpKind::Output, None);
+        g.add_edge(s, a, 2.5);
+        g.add_edge(s, b, 1.5);
+        g.add_edge(a, t, 1.0);
+        g.add_edge(b, t, 8.0);
+        g.add_edge(a, b, 0.25);
+        let cut = min_cut(&g, &[s], &[t], |_, _| false);
+        let sum: f64 = cut.cut_edges.iter().map(|&i| g.edges[i].bytes).sum();
+        assert!((cut.weight - sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn skip_edges_excluded() {
+        let mut g = OpGraph::default();
+        let s = g.add_node("s", OpKind::Input, None);
+        let t = g.add_node("t", OpKind::Output, None);
+        g.add_edge(s, t, 5.0);
+        g.add_edge(s, t, 3.0);
+        // skip the 5-edge → cut is just the 3-edge
+        let cut = min_cut(&g, &[s], &[t], |i, _| i == 0);
+        assert!((cut.weight - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_source_sink() {
+        let mut g = OpGraph::default();
+        let s1 = g.add_node("s1", OpKind::Input, None);
+        let s2 = g.add_node("s2", OpKind::Input, None);
+        let m = g.add_node("m", OpKind::MatMul, None);
+        let t1 = g.add_node("t1", OpKind::Output, None);
+        let t2 = g.add_node("t2", OpKind::Output, None);
+        g.add_edge(s1, m, 2.0);
+        g.add_edge(s2, m, 3.0);
+        g.add_edge(m, t1, 1.0);
+        g.add_edge(m, t2, 1.5);
+        let cut = min_cut(&g, &[s1, s2], &[t1, t2], |_, _| false);
+        assert!((cut.weight - 2.5).abs() < 1e-9);
+    }
+}

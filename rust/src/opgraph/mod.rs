@@ -1,0 +1,14 @@
+//! The automated model converter (paper §4.2): operator-graph IR, min-cut
+//! splitting at attention operators, and slice-program emission with the
+//! Q-early resource-utilisation-overlapping reorder.
+
+pub mod builder;
+pub mod graph;
+pub mod mincut;
+pub mod schedule;
+pub mod slicer;
+
+pub use builder::{build_decode_graph, ArchShape, DecodeGraph};
+pub use graph::{OpGraph, OpKind};
+pub use schedule::{emit_programs, Instr, LayerTimings};
+pub use slicer::{split_at_attention, SplitResult};

@@ -1,0 +1,219 @@
+//! The model splitter (paper §4.2.1): cut the op graph at every attention
+//! operator, yielding L+1 invokable slices. Because residual connections
+//! keep the graph connected after removing an attention node, each cut is a
+//! *minimum weighted cut* between the graph input (plus the attention's
+//! inputs) and the graph output (plus the attention's output consumer); the
+//! cut edges are the inter-slice context that must be carried across
+//! invocations.
+
+use super::builder::DecodeGraph;
+use super::graph::{NodeId, OpGraph, OpKind};
+use super::mincut::{min_cut, CutResult};
+
+/// One model slice.
+#[derive(Debug, Clone)]
+pub struct Slice {
+    pub index: usize,
+    /// Nodes executed by this slice, in topological order.
+    pub nodes: Vec<NodeId>,
+    /// Context tensors received from the previous slice (edge indices).
+    pub carry_in: Vec<usize>,
+    /// Context tensors passed to the next slice (edge indices).
+    pub carry_out: Vec<usize>,
+}
+
+/// Result of splitting a decode graph.
+#[derive(Debug, Clone)]
+pub struct SplitResult {
+    pub slices: Vec<Slice>,
+    /// Per attention op: the min-cut found when slicing there.
+    pub cuts: Vec<CutResult>,
+    /// slice index of every node.
+    pub node_slice: Vec<usize>,
+}
+
+/// Split at every attention operator.
+///
+/// Node → slice assignment: a node belongs to slice k where k = number of
+/// attention operators among its ancestors (attention node a_i itself is
+/// excluded — it runs on the attention workers, between slices i and i+1).
+/// The min cut at each attention validates/extracts the carried context.
+pub fn split_at_attention(dg: &DecodeGraph) -> SplitResult {
+    let g = &dg.graph;
+    let attn = g.attention_nodes();
+    let n = g.nodes.len();
+
+    // count attention ancestors per node via topo propagation
+    let order = g.topo_order();
+    let out_adj = g.out_adj();
+    let in_adj = g.in_adj();
+    let mut attn_depth = vec![0usize; n];
+    for &v in &order {
+        let base = attn_depth[v];
+        let bump = if g.node(v).kind == OpKind::Attention { 1 } else { 0 };
+        for &s in &out_adj[v] {
+            attn_depth[s] = attn_depth[s].max(base + bump);
+        }
+    }
+
+    // slice index per node; attention nodes assigned to the *earlier* slice
+    // index purely for bookkeeping (they execute remotely).
+    let node_slice: Vec<usize> = (0..n).map(|v| attn_depth[v]).collect();
+
+    // compute the min cut at every attention op: the cut must separate
+    // everything that runs *before* attention i (its ancestors) from
+    // everything that runs *after* (descendants of its output); free nodes
+    // fall on whichever side minimises the carried bytes.
+    let mut cuts = Vec::with_capacity(attn.len());
+    for &a in &attn {
+        let sources = reach(&in_adj, a);
+        let sinks = reach(&out_adj, a);
+        let cut = min_cut(g, &sources, &sinks, |_, e| e.src == a || e.dst == a);
+        cuts.push(cut);
+    }
+
+    // materialise slices
+    let n_slices = attn.len() + 1;
+    let mut slices: Vec<Slice> = (0..n_slices)
+        .map(|i| Slice { index: i, nodes: Vec::new(), carry_in: Vec::new(), carry_out: Vec::new() })
+        .collect();
+    for &v in &order {
+        if g.node(v).kind != OpKind::Attention {
+            slices[node_slice[v]].nodes.push(v);
+        }
+    }
+    for (i, e) in g.edges.iter().enumerate() {
+        if g.node(e.src).kind == OpKind::Attention || g.node(e.dst).kind == OpKind::Attention {
+            continue; // q/k/v and attention-out travel via the network, not carries
+        }
+        let (s0, s1) = (node_slice[e.src], node_slice[e.dst]);
+        if s0 != s1 {
+            slices[s0].carry_out.push(i);
+            slices[s1].carry_in.push(i);
+        }
+    }
+
+    SplitResult { slices, cuts, node_slice }
+}
+
+/// Strict reachable set from `node` along `adj` (excluding `node` itself).
+fn reach(adj: &[Vec<NodeId>], node: NodeId) -> Vec<NodeId> {
+    let mut seen = vec![false; adj.len()];
+    let mut stack: Vec<NodeId> = adj[node].clone();
+    let mut out = Vec::new();
+    while let Some(v) = stack.pop() {
+        if seen[v] {
+            continue;
+        }
+        seen[v] = true;
+        out.push(v);
+        stack.extend(adj[v].iter().copied());
+    }
+    out
+}
+
+/// Total bytes carried between consecutive slices (per request) — what the
+/// rotational pipeline must migrate when a batch hops model replicas.
+pub fn carry_bytes(g: &OpGraph, slice: &Slice) -> f64 {
+    slice.carry_out.iter().map(|&i| g.edges[i].bytes).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opgraph::builder::{build_decode_graph, tiny_shape, ArchShape};
+
+    fn split_tiny() -> (DecodeGraph, SplitResult) {
+        let dg = build_decode_graph(tiny_shape());
+        let sr = split_at_attention(&dg);
+        (dg, sr)
+    }
+
+    use crate::opgraph::builder::DecodeGraph;
+
+    #[test]
+    fn yields_l_plus_1_slices() {
+        let (dg, sr) = split_tiny();
+        assert_eq!(sr.slices.len(), dg.layer_handles.len() + 1);
+    }
+
+    #[test]
+    fn min_cut_is_single_residual_edge() {
+        // The expected context between slices is exactly the residual
+        // stream: one e·d edge (the interface model.py hand-codes).
+        let (dg, sr) = split_tiny();
+        let hb = tiny_shape().hidden_bytes();
+        for cut in &sr.cuts {
+            assert!((cut.weight - hb).abs() < 1e-6, "cut weight {}", cut.weight);
+            assert_eq!(cut.cut_edges.len(), 1);
+            let e = dg.graph.edges[cut.cut_edges[0]];
+            // it is the resid → resid_add skip edge
+            assert_eq!(dg.graph.node(e.dst).kind, OpKind::Add);
+        }
+    }
+
+    #[test]
+    fn carries_match_cuts() {
+        // The slice assignment's carried edges must equal the min cut: one
+        // residual tensor between consecutive slices.
+        let (dg, sr) = split_tiny();
+        for s in &sr.slices[..sr.slices.len() - 1] {
+            assert_eq!(s.carry_out.len(), 1, "slice {}", s.index);
+            assert!((carry_bytes(&dg.graph, s) - tiny_shape().hidden_bytes()).abs() < 1e-6);
+        }
+        assert!(sr.slices.last().unwrap().carry_out.is_empty());
+        assert!(sr.slices[0].carry_in.is_empty());
+    }
+
+    #[test]
+    fn every_non_attention_node_in_exactly_one_slice() {
+        let (dg, sr) = split_tiny();
+        let mut count = vec![0usize; dg.graph.nodes.len()];
+        for s in &sr.slices {
+            for &v in &s.nodes {
+                count[v] += 1;
+            }
+        }
+        for node in &dg.graph.nodes {
+            let expect = if node.kind == OpKind::Attention { 0 } else { 1 };
+            assert_eq!(count[node.id], expect, "{}", node.name);
+        }
+    }
+
+    #[test]
+    fn slices_respect_dependencies() {
+        // No edge may point from a later slice to an earlier one.
+        let (dg, sr) = split_tiny();
+        for e in &dg.graph.edges {
+            if dg.graph.node(e.src).kind == OpKind::Attention
+                || dg.graph.node(e.dst).kind == OpKind::Attention
+            {
+                continue;
+            }
+            assert!(sr.node_slice[e.src] <= sr.node_slice[e.dst]);
+        }
+    }
+
+    #[test]
+    fn first_slice_has_embed_last_has_head() {
+        let (dg, sr) = split_tiny();
+        let names = |s: &Slice| -> Vec<&str> {
+            s.nodes.iter().map(|&v| dg.graph.node(v).name.as_str()).collect()
+        };
+        assert!(names(&sr.slices[0]).contains(&"embed"));
+        assert!(names(sr.slices.last().unwrap()).contains(&"lm_head"));
+        // mid slice i holds o_proj of layer i-1 and q_proj of layer i
+        assert!(names(&sr.slices[1]).contains(&"l0.o_proj"));
+        assert!(names(&sr.slices[1]).contains(&"l1.q_proj"));
+    }
+
+    #[test]
+    fn scales_to_deep_models() {
+        let dg = build_decode_graph(ArchShape { layers: 40, ..tiny_shape() });
+        let sr = split_at_attention(&dg);
+        assert_eq!(sr.slices.len(), 41);
+        for cut in &sr.cuts {
+            assert_eq!(cut.cut_edges.len(), 1);
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! The PJRT execution engine: loads AOT HLO-text artifacts, compiles them on
+//! the CPU PJRT client (once per entry point, cached), uploads weights to
+//! device buffers (once), and executes decode-step slices / attention calls
+//! from the Rust serving path. Python never runs here.
+//!
+//! Interchange is HLO **text** — see `/opt/xla-example/README.md`: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects in proto
+//! form; the text parser reassigns ids.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::host::HostTensor;
+use super::manifest::{EntryPoint, Manifest};
+use super::weights::Weights;
+
+/// Compiled-executable cache key: (entry, batch bucket, seq bucket).
+type Key = (String, usize, usize);
+
+/// The engine owns the PJRT client, the executable cache and the
+/// device-resident weights.
+pub struct Engine {
+    pub manifest: Manifest,
+    pub weights: Weights,
+    client: xla::PjRtClient,
+    executables: Mutex<BTreeMap<Key, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Device buffers of weight tensors, keyed by tensor name.
+    weight_bufs: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtBuffer>>>,
+    /// Execution counters (perf accounting).
+    pub stats: Mutex<EngineStats>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub executions: u64,
+    pub compilations: u64,
+    pub upload_bytes: u64,
+    pub exec_seconds: f64,
+}
+
+impl Engine {
+    /// Load manifest + weights from `artifacts_dir` and create the CPU
+    /// PJRT client. Executables compile lazily on first use.
+    pub fn load(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifacts_dir).map_err(|e| anyhow!(e.to_string()))?;
+        let weights = Weights::load(&manifest).map_err(|e| anyhow!(e.to_string()))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine {
+            manifest,
+            weights,
+            client,
+            executables: Mutex::new(BTreeMap::new()),
+            weight_bufs: Mutex::new(BTreeMap::new()),
+            stats: Mutex::new(EngineStats::default()),
+        })
+    }
+
+    /// Pre-compile every entry point (optional warmup; otherwise lazy).
+    pub fn warmup(&self) -> Result<()> {
+        let entries: Vec<EntryPoint> = self.manifest.entrypoints.clone();
+        for e in entries {
+            self.executable(&e.entry, e.batch, e.seq)?;
+        }
+        Ok(())
+    }
+
+    /// Pre-compile a single entry point.
+    pub fn execute_warm(&self, entry: &str, batch: usize, seq: Option<usize>) -> Result<()> {
+        self.executable(entry, batch, seq).map(|_| ())
+    }
+
+    fn executable(
+        &self,
+        entry: &str,
+        batch: usize,
+        seq: Option<usize>,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = (entry.to_string(), batch, seq.unwrap_or(0));
+        if let Some(e) = self.executables.lock().unwrap().get(&key) {
+            return Ok(std::sync::Arc::clone(e));
+        }
+        let ep = self
+            .manifest
+            .entrypoint(entry, batch, seq)
+            .ok_or_else(|| anyhow!("no artifact for {entry} b{batch} s{seq:?}"))?;
+        let path = self.manifest.hlo_path(ep);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", ep.file))?;
+        let exe = std::sync::Arc::new(exe);
+        self.stats.lock().unwrap().compilations += 1;
+        self.executables
+            .lock()
+            .unwrap()
+            .insert(key, std::sync::Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Device buffer of a weight tensor (uploaded once, then reused).
+    fn weight_buffer(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtBuffer>> {
+        if let Some(b) = self.weight_bufs.lock().unwrap().get(name) {
+            return Ok(std::sync::Arc::clone(b));
+        }
+        let t = self.weights.get(name);
+        let buf = self
+            .client
+            .buffer_from_host_buffer(t.as_f32(), t.shape(), None)
+            .with_context(|| format!("upload weight {name}"))?;
+        let buf = std::sync::Arc::new(buf);
+        self.stats.lock().unwrap().upload_bytes += t.byte_size() as u64;
+        self.weight_bufs
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), std::sync::Arc::clone(&buf));
+        Ok(buf)
+    }
+
+    fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let buf = match t {
+            HostTensor::F32 { shape, data } => {
+                self.client.buffer_from_host_buffer(data, shape, None)?
+            }
+            HostTensor::I32 { shape, data } => {
+                self.client.buffer_from_host_buffer(data, shape, None)?
+            }
+        };
+        Ok(buf)
+    }
+
+    fn download(buf: &xla::PjRtBuffer) -> Result<HostTensor> {
+        let lit = buf.to_literal_sync()?;
+        literal_to_host(&lit)
+    }
+
+    /// Execute an entry point: activations + named weight args (weights go
+    /// as cached device buffers). Returns the output tuple as host tensors.
+    pub fn execute(
+        &self,
+        entry: &str,
+        batch: usize,
+        seq: Option<usize>,
+        activations: &[&HostTensor],
+        weight_names: &[String],
+    ) -> Result<Vec<HostTensor>> {
+        let exe = self.executable(entry, batch, seq)?;
+        let t0 = std::time::Instant::now();
+
+        let mut args: Vec<std::sync::Arc<xla::PjRtBuffer>> = Vec::new();
+        for a in activations {
+            args.push(std::sync::Arc::new(self.upload(a)?));
+        }
+        for name in weight_names {
+            args.push(self.weight_buffer(name)?);
+        }
+        let arg_refs: Vec<&xla::PjRtBuffer> = args.iter().map(|a| a.as_ref()).collect();
+        let result = exe.execute_b(&arg_refs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let out = parts
+            .iter()
+            .map(literal_to_host)
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut st = self.stats.lock().unwrap();
+        st.executions += 1;
+        st.exec_seconds += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// Raw execute with host tensors only (tests / attention worker paths
+    /// where caches are per-worker state, not weights).
+    pub fn execute_raw(
+        &self,
+        entry: &str,
+        batch: usize,
+        seq: Option<usize>,
+        inputs: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        self.execute(entry, batch, seq, inputs, &[])
+    }
+
+    pub fn snapshot_stats(&self) -> EngineStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Download helper exposed for integration tests.
+    pub fn roundtrip(&self, t: &HostTensor) -> Result<HostTensor> {
+        let buf = self.upload(t)?;
+        Self::download(&buf)
+    }
+}
+
+fn literal_to_host(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(HostTensor::f32(dims, lit.to_vec::<f32>()?)),
+        xla::ElementType::S32 => Ok(HostTensor::i32(dims, lit.to_vec::<i32>()?)),
+        other => Err(anyhow!("unsupported artifact dtype {other:?}")),
+    }
+}

@@ -1,0 +1,139 @@
+//! Host-side tensors: the plain-Rust representation of activations moving
+//! through the serving pipeline (and over the simulated network).
+
+/// Dense host tensor, f32 or i32 (the tiny model's artifact dtypes).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Size in bytes (for network accounting).
+    pub fn byte_size(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32 { data, .. } => data,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            HostTensor::I32 { data, .. } => data,
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+
+    /// Pad the leading (batch) dimension up to `batch`, filling zeros.
+    pub fn pad_batch(&self, batch: usize) -> HostTensor {
+        let shape = self.shape();
+        assert!(!shape.is_empty() && shape[0] <= batch);
+        if shape[0] == batch {
+            return self.clone();
+        }
+        let row: usize = shape[1..].iter().product::<usize>().max(1);
+        let mut new_shape = shape.to_vec();
+        new_shape[0] = batch;
+        match self {
+            HostTensor::F32 { data, .. } => {
+                let mut d = data.clone();
+                d.resize(batch * row, 0.0);
+                HostTensor::F32 { shape: new_shape, data: d }
+            }
+            HostTensor::I32 { data, .. } => {
+                let mut d = data.clone();
+                d.resize(batch * row, 0);
+                HostTensor::I32 { shape: new_shape, data: d }
+            }
+        }
+    }
+
+    /// Truncate the leading (batch) dimension down to `batch`.
+    pub fn take_batch(&self, batch: usize) -> HostTensor {
+        let shape = self.shape();
+        assert!(!shape.is_empty() && shape[0] >= batch);
+        if shape[0] == batch {
+            return self.clone();
+        }
+        let row: usize = shape[1..].iter().product::<usize>().max(1);
+        let mut new_shape = shape.to_vec();
+        new_shape[0] = batch;
+        match self {
+            HostTensor::F32 { data, .. } => {
+                HostTensor::F32 { shape: new_shape, data: data[..batch * row].to_vec() }
+            }
+            HostTensor::I32 { data, .. } => {
+                HostTensor::I32 { shape: new_shape, data: data[..batch * row].to_vec() }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_checks_shape() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.byte_size(), 24);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        HostTensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn pad_and_take_batch_roundtrip() {
+        let t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let p = t.pad_batch(4);
+        assert_eq!(p.shape(), &[4, 3]);
+        assert_eq!(&p.as_f32()[6..], &[0.0; 6]);
+        let back = p.take_batch(2);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn pad_i32_and_1d() {
+        let t = HostTensor::i32(vec![3], vec![7, 8, 9]);
+        let p = t.pad_batch(5);
+        assert_eq!(p.as_i32(), &[7, 8, 9, 0, 0]);
+        assert_eq!(p.take_batch(3).as_i32(), &[7, 8, 9]);
+    }
+}

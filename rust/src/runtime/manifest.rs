@@ -1,0 +1,282 @@
+//! Artifact manifest loader — the build-time contract with `python/compile/
+//! aot.py` (`artifacts/manifest.json`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Tiny-model architecture parameters, mirrored from python ModelConfig.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    pub param_count: usize,
+}
+
+impl ModelCfg {
+    pub fn gqa_group(&self) -> usize {
+        self.heads / self.kv_heads
+    }
+}
+
+/// One weight tensor's location in weights.bin.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// One AOT-lowered HLO entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EntryPoint {
+    pub entry: String,
+    pub batch: usize,
+    /// Sequence bucket (None for slice entry points).
+    pub seq: Option<usize>,
+    pub file: String,
+    pub input_names: Vec<String>,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelCfg,
+    pub batch_buckets: Vec<usize>,
+    pub seq_buckets: Vec<usize>,
+    pub weights_file: String,
+    pub tensors: Vec<TensorMeta>,
+    pub entrypoints: Vec<EntryPoint>,
+    pub layer_weight_names: Vec<String>,
+    pub global_weight_names: Vec<String>,
+    by_key: BTreeMap<(String, usize, usize), usize>,
+}
+
+#[derive(Debug)]
+pub struct ManifestError(pub String);
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "manifest error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+fn need_usize(j: &Json, key: &str) -> Result<usize, ManifestError> {
+    j.get(key)
+        .as_usize()
+        .ok_or_else(|| ManifestError(format!("missing/invalid field '{key}'")))
+}
+
+fn need_str(j: &Json, key: &str) -> Result<String, ManifestError> {
+    j.get(key)
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| ManifestError(format!("missing/invalid field '{key}'")))
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| ManifestError(format!("read {}: {e}", path.display())))?;
+        let j = Json::parse(&text).map_err(|e| ManifestError(e.to_string()))?;
+
+        let c = j.get("config");
+        let config = ModelCfg {
+            name: need_str(c, "name")?,
+            vocab: need_usize(c, "vocab")?,
+            d: need_usize(c, "d")?,
+            layers: need_usize(c, "layers")?,
+            heads: need_usize(c, "heads")?,
+            kv_heads: need_usize(c, "kv_heads")?,
+            ffn: need_usize(c, "ffn")?,
+            max_seq: need_usize(c, "max_seq")?,
+            head_dim: need_usize(c, "head_dim")?,
+            param_count: need_usize(c, "param_count")?,
+        };
+
+        let batch_buckets = j
+            .get("buckets")
+            .get("batch")
+            .usize_vec()
+            .ok_or_else(|| ManifestError("bad buckets.batch".into()))?;
+        let seq_buckets = j
+            .get("buckets")
+            .get("seq")
+            .usize_vec()
+            .ok_or_else(|| ManifestError("bad buckets.seq".into()))?;
+
+        let tensors = j
+            .get("weights")
+            .get("tensors")
+            .as_arr()
+            .ok_or_else(|| ManifestError("bad weights.tensors".into()))?
+            .iter()
+            .map(|t| {
+                Ok(TensorMeta {
+                    name: need_str(t, "name")?,
+                    shape: t
+                        .get("shape")
+                        .usize_vec()
+                        .ok_or_else(|| ManifestError("bad tensor shape".into()))?,
+                    offset: need_usize(t, "offset")?,
+                    size: need_usize(t, "size")?,
+                })
+            })
+            .collect::<Result<Vec<_>, ManifestError>>()?;
+
+        let entrypoints = j
+            .get("entrypoints")
+            .as_arr()
+            .ok_or_else(|| ManifestError("bad entrypoints".into()))?
+            .iter()
+            .map(|e| {
+                let inputs = e
+                    .get("inputs")
+                    .as_arr()
+                    .ok_or_else(|| ManifestError("bad inputs".into()))?;
+                Ok(EntryPoint {
+                    entry: need_str(e, "entry")?,
+                    batch: need_usize(e, "batch")?,
+                    seq: e.get("seq").as_usize(),
+                    file: need_str(e, "file")?,
+                    input_names: inputs
+                        .iter()
+                        .map(|i| need_str(i, "name"))
+                        .collect::<Result<_, _>>()?,
+                    input_shapes: inputs
+                        .iter()
+                        .map(|i| {
+                            i.get("shape")
+                                .usize_vec()
+                                .ok_or_else(|| ManifestError("bad input shape".into()))
+                        })
+                        .collect::<Result<_, _>>()?,
+                    outputs: e
+                        .get("outputs")
+                        .as_arr()
+                        .map(|a| a.iter().filter_map(|x| x.as_str().map(str::to_string)).collect())
+                        .unwrap_or_default(),
+                })
+            })
+            .collect::<Result<Vec<_>, ManifestError>>()?;
+
+        let names = |key: &str| -> Vec<String> {
+            j.get(key)
+                .as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_str().map(str::to_string)).collect())
+                .unwrap_or_default()
+        };
+
+        let mut by_key = BTreeMap::new();
+        for (i, e) in entrypoints.iter().enumerate() {
+            by_key.insert((e.entry.clone(), e.batch, e.seq.unwrap_or(0)), i);
+        }
+
+        Ok(Manifest {
+            dir,
+            config,
+            batch_buckets,
+            seq_buckets,
+            weights_file: need_str(j.get("weights"), "file")?,
+            tensors,
+            entrypoints,
+            layer_weight_names: names("layer_weight_names"),
+            global_weight_names: names("global_weight_names"),
+            by_key,
+        })
+    }
+
+    /// Look up an entry point by (name, batch bucket, seq bucket).
+    pub fn entrypoint(&self, entry: &str, batch: usize, seq: Option<usize>) -> Option<&EntryPoint> {
+        self.by_key
+            .get(&(entry.to_string(), batch, seq.unwrap_or(0)))
+            .map(|&i| &self.entrypoints[i])
+    }
+
+    /// Smallest batch bucket ≥ `batch`.
+    pub fn batch_bucket(&self, batch: usize) -> Option<usize> {
+        self.batch_buckets.iter().copied().filter(|&b| b >= batch).min()
+    }
+
+    /// Smallest seq bucket ≥ `tokens`.
+    pub fn seq_bucket(&self, tokens: usize) -> Option<usize> {
+        self.seq_buckets.iter().copied().filter(|&s| s >= tokens).min()
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&TensorMeta> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    pub fn hlo_path(&self, e: &EntryPoint) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join(&self.weights_file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn load_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert_eq!(m.config.name, "tiny");
+        assert_eq!(m.config.d, m.config.heads * m.config.head_dim);
+        assert!(!m.entrypoints.is_empty());
+        assert!(m.entrypoint("slice_mid", m.batch_buckets[0], None).is_some());
+        assert!(m
+            .entrypoint("attention", m.batch_buckets[0], Some(m.seq_buckets[0]))
+            .is_some());
+        // weight table covers all params
+        let total: usize = m.tensors.iter().map(|t| t.size / 4).sum();
+        assert_eq!(total, m.config.param_count);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert_eq!(m.batch_bucket(1), Some(1));
+        assert_eq!(m.batch_bucket(3), Some(4));
+        assert_eq!(m.batch_bucket(100_000), None);
+        assert_eq!(m.seq_bucket(1), Some(m.seq_buckets[0]));
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load("/nonexistent/path").is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Runtime: PJRT-based execution of the AOT artifacts (`artifacts/*.hlo.txt`
+//! + `weights.bin` + `manifest.json`).
+//!
+//! PJRT handles hold raw pointers (`!Send`), so each worker thread owns its
+//! own [`Engine`] — which mirrors the paper's architecture: every device
+//! (model worker, attention worker) is a separate executor; tensors cross
+//! between them as plain host data over the (simulated) network.
+
+pub mod engine;
+pub mod host;
+pub mod manifest;
+pub mod weights;
+
+pub use engine::{Engine, EngineStats};
+pub use host::HostTensor;
+pub use manifest::{Manifest, ModelCfg};
+pub use weights::Weights;

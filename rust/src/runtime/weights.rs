@@ -1,0 +1,147 @@
+//! Weight loading: `weights.bin` (little-endian f32, laid out per the
+//! manifest tensor table) → named host tensors → per-entry-point argument
+//! lists matching the AOT input signatures.
+
+use std::collections::BTreeMap;
+
+use super::host::HostTensor;
+use super::manifest::{Manifest, ManifestError};
+
+/// All model weights, keyed by manifest tensor name
+/// (`embed`, `final_norm`, `lm_head`, `layer{i}.{name}`).
+#[derive(Debug)]
+pub struct Weights {
+    tensors: BTreeMap<String, HostTensor>,
+    pub layers: usize,
+}
+
+impl Weights {
+    pub fn load(manifest: &Manifest) -> Result<Weights, ManifestError> {
+        let path = manifest.weights_path();
+        let blob = std::fs::read(&path)
+            .map_err(|e| ManifestError(format!("read {}: {e}", path.display())))?;
+        let mut tensors = BTreeMap::new();
+        for t in &manifest.tensors {
+            let end = t.offset + t.size;
+            if end > blob.len() {
+                return Err(ManifestError(format!(
+                    "tensor {} [{}..{}] beyond weights.bin ({} bytes)",
+                    t.name, t.offset, end, blob.len()
+                )));
+            }
+            let data: Vec<f32> = blob[t.offset..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(t.name.clone(), HostTensor::f32(t.shape.clone(), data));
+        }
+        Ok(Weights { tensors, layers: manifest.config.layers })
+    }
+
+    pub fn get(&self, name: &str) -> &HostTensor {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("missing weight tensor '{name}'"))
+    }
+
+    pub fn layer(&self, layer: usize, name: &str) -> &HostTensor {
+        self.get(&format!("layer{layer}.{name}"))
+    }
+
+    /// Weight arguments for `slice_first` (aot.py input order after the
+    /// activations): embed, attn_norm₀, wq₀, wk₀, wv₀.
+    pub fn slice_first_args(&self) -> Vec<&HostTensor> {
+        vec![
+            self.get("embed"),
+            self.layer(0, "attn_norm"),
+            self.layer(0, "wq"),
+            self.layer(0, "wk"),
+            self.layer(0, "wv"),
+        ]
+    }
+
+    /// Weight arguments for `slice_mid` joining attention layer `i` to
+    /// layer `i+1`: woᵢ, ffn_normᵢ, w_gateᵢ, w_upᵢ, w_downᵢ,
+    /// attn_normᵢ₊₁, wqᵢ₊₁, wkᵢ₊₁, wvᵢ₊₁.
+    pub fn slice_mid_args(&self, i: usize) -> Vec<&HostTensor> {
+        assert!(i + 1 < self.layers, "slice_mid after last layer");
+        vec![
+            self.layer(i, "wo"),
+            self.layer(i, "ffn_norm"),
+            self.layer(i, "w_gate"),
+            self.layer(i, "w_up"),
+            self.layer(i, "w_down"),
+            self.layer(i + 1, "attn_norm"),
+            self.layer(i + 1, "wq"),
+            self.layer(i + 1, "wk"),
+            self.layer(i + 1, "wv"),
+        ]
+    }
+
+    /// Weight arguments for `slice_last`: wo, ffn_norm, w_gate, w_up,
+    /// w_down (of the last layer), final_norm, lm_head.
+    pub fn slice_last_args(&self) -> Vec<&HostTensor> {
+        let i = self.layers - 1;
+        vec![
+            self.layer(i, "wo"),
+            self.layer(i, "ffn_norm"),
+            self.layer(i, "w_gate"),
+            self.layer(i, "w_up"),
+            self.layer(i, "w_down"),
+            self.get("final_norm"),
+            self.get("lm_head"),
+        ]
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tensors.values().map(|t| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).unwrap())
+        } else {
+            eprintln!("skipping: run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn load_and_count() {
+        let Some(m) = manifest() else { return };
+        let w = Weights::load(&m).unwrap();
+        assert_eq!(w.param_count(), m.config.param_count);
+        assert_eq!(w.get("embed").shape(), &[m.config.vocab, m.config.d]);
+    }
+
+    #[test]
+    fn arg_lists_shapes() {
+        let Some(m) = manifest() else { return };
+        let w = Weights::load(&m).unwrap();
+        let c = &m.config;
+        let first = w.slice_first_args();
+        assert_eq!(first.len(), 5);
+        assert_eq!(first[2].shape(), &[c.d, c.heads * c.head_dim]);
+        let mid = w.slice_mid_args(0);
+        assert_eq!(mid.len(), 9);
+        assert_eq!(mid[0].shape(), &[c.heads * c.head_dim, c.d]);
+        let last = w.slice_last_args();
+        assert_eq!(last.len(), 7);
+        assert_eq!(last[6].shape(), &[c.d, c.vocab]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mid_after_last_layer_panics() {
+        let Some(m) = manifest() else { panic!("no artifacts — vacuous pass") };
+        let w = Weights::load(&m).unwrap();
+        let _ = w.slice_mid_args(m.config.layers - 1);
+    }
+}

@@ -1,0 +1,176 @@
+//! Workload traces (paper §6, Table 4).
+//!
+//! The paper evaluates on four production traces (Azure-Conv, Azure-Code,
+//! Kimi-Conv, Kimi-TA) that publish only sequence-length statistics; this
+//! module synthesises traces matching those statistics (lognormal lengths
+//! fitted to the published means — the paper itself replays dummy tokens of
+//! the recorded lengths) and provides fixed-length microbench workloads for
+//! Figs. 12 & 14.
+
+use crate::util::prng::{lognormal_from_mean_cv, Rng};
+
+/// One inference request (decode-phase view: the prompt is already
+/// prefilled; `prompt_tokens` sizes the initial KV, `gen_tokens` is the
+/// decode work).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+}
+
+impl Request {
+    /// Max context this request reaches.
+    pub fn max_context(&self) -> usize {
+        self.prompt_tokens + self.gen_tokens
+    }
+}
+
+/// Table-4 trace statistics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceSpec {
+    pub name: &'static str,
+    pub requests: usize,
+    pub mean_prompt: f64,
+    pub mean_gen: f64,
+    /// Coefficient of variation for the synthetic lognormals. Production
+    /// LLM length distributions are heavy-tailed; 1.0 is a standard fit.
+    pub cv: f64,
+}
+
+pub const AZURE_CONV: TraceSpec = TraceSpec {
+    name: "Azure-Conv",
+    requests: 19366,
+    mean_prompt: 1154.7,
+    mean_gen: 211.1,
+    cv: 1.0,
+};
+
+pub const AZURE_CODE: TraceSpec = TraceSpec {
+    name: "Azure-Code",
+    requests: 8819,
+    mean_prompt: 2047.8,
+    mean_gen: 27.9,
+    cv: 1.0,
+};
+
+pub const KIMI_CONV: TraceSpec = TraceSpec {
+    name: "Kimi-Conv",
+    requests: 12031,
+    mean_prompt: 12035.1,
+    mean_gen: 342.6,
+    cv: 1.0,
+};
+
+pub const KIMI_TA: TraceSpec = TraceSpec {
+    name: "Kimi-TA",
+    requests: 23608,
+    mean_prompt: 8560.0,
+    mean_gen: 182.1,
+    cv: 1.0,
+};
+
+pub const ALL_TRACES: &[&TraceSpec] = &[&AZURE_CONV, &AZURE_CODE, &KIMI_CONV, &KIMI_TA];
+
+pub fn trace_by_name(name: &str) -> Option<&'static TraceSpec> {
+    ALL_TRACES
+        .iter()
+        .find(|t| t.name.eq_ignore_ascii_case(name))
+        .copied()
+}
+
+/// Synthesize `n` requests matching `spec`'s statistics (n defaults to the
+/// trace's request count; pass a smaller n for fast simulations — the
+/// distribution is what matters).
+pub fn synthesize(spec: &TraceSpec, n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed ^ hash_name(spec.name));
+    let (mu_p, sg_p) = lognormal_from_mean_cv(spec.mean_prompt, spec.cv);
+    let (mu_g, sg_g) = lognormal_from_mean_cv(spec.mean_gen, spec.cv);
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            prompt_tokens: (rng.lognormal(mu_p, sg_p).round() as usize).max(1),
+            gen_tokens: (rng.lognormal(mu_g, sg_g).round() as usize).max(1),
+        })
+        .collect()
+}
+
+fn hash_name(name: &str) -> u64 {
+    name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+    })
+}
+
+/// Fixed-length workload for the microbench figures (12 & 14).
+pub fn fixed_length(n: usize, context: usize, gen: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request { id: i as u64, prompt_tokens: context, gen_tokens: gen })
+        .collect()
+}
+
+/// Empirical summary of a request list (for Table-4 verification).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceSummary {
+    pub requests: usize,
+    pub mean_prompt: f64,
+    pub mean_gen: f64,
+    pub max_context: usize,
+}
+
+pub fn summarize(reqs: &[Request]) -> TraceSummary {
+    let n = reqs.len().max(1) as f64;
+    TraceSummary {
+        requests: reqs.len(),
+        mean_prompt: reqs.iter().map(|r| r.prompt_tokens as f64).sum::<f64>() / n,
+        mean_gen: reqs.iter().map(|r| r.gen_tokens as f64).sum::<f64>() / n,
+        max_context: reqs.iter().map(|r| r.max_context()).max().unwrap_or(0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_matches_table4_means() {
+        for spec in ALL_TRACES {
+            let reqs = synthesize(spec, 20_000, 42);
+            let s = summarize(&reqs);
+            let perr = (s.mean_prompt - spec.mean_prompt).abs() / spec.mean_prompt;
+            let gerr = (s.mean_gen - spec.mean_gen).abs() / spec.mean_gen;
+            assert!(perr < 0.05, "{}: prompt mean off {perr}", spec.name);
+            assert!(gerr < 0.05, "{}: gen mean off {gerr}", spec.name);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed_distinct_per_trace() {
+        let a = synthesize(&AZURE_CONV, 100, 1);
+        let b = synthesize(&AZURE_CONV, 100, 1);
+        assert_eq!(a, b);
+        let c = synthesize(&AZURE_CODE, 100, 1);
+        assert_ne!(a[0], c[0]);
+    }
+
+    #[test]
+    fn lengths_positive_and_heavy_tailed() {
+        let reqs = synthesize(&KIMI_CONV, 10_000, 7);
+        assert!(reqs.iter().all(|r| r.prompt_tokens >= 1 && r.gen_tokens >= 1));
+        let s = summarize(&reqs);
+        // heavy tail: max ≫ mean
+        assert!(s.max_context as f64 > 4.0 * (s.mean_prompt + s.mean_gen));
+    }
+
+    #[test]
+    fn fixed_length_uniform() {
+        let reqs = fixed_length(8, 4096, 64);
+        assert!(reqs.iter().all(|r| r.prompt_tokens == 4096 && r.gen_tokens == 64));
+        assert_eq!(reqs.len(), 8);
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(trace_by_name("kimi-ta").unwrap().requests, 23608);
+        assert!(trace_by_name("nope").is_none());
+    }
+}

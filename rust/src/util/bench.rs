@@ -1,0 +1,192 @@
+//! Criterion-style micro-bench harness (no `criterion` offline).
+//!
+//! Provides warmup, adaptive iteration counts targeting a wall-clock budget,
+//! and mean/p50/p95/p99 reporting. Used by `rust/benches/*` (declared with
+//! `harness = false`) and the perf pass.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::{fmt_duration, Percentiles};
+
+/// Re-export of `std::hint::black_box` under the criterion-familiar name.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup wall-clock budget.
+    pub warmup: Duration,
+    /// Measurement wall-clock budget.
+    pub measure: Duration,
+    /// Max number of timed samples (each sample = `iters_per_sample` calls).
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_millis(1500),
+            max_samples: 200,
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  p50 {:>12}  p95 {:>12}  p99 {:>12}  ({} samples × {} iters)",
+            self.name,
+            fmt_duration(self.mean_s),
+            fmt_duration(self.p50_s),
+            fmt_duration(self.p95_s),
+            fmt_duration(self.p99_s),
+            self.samples,
+            self.iters_per_sample,
+        )
+    }
+}
+
+/// Bench runner; collects results for a final summary table.
+pub struct Bench {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+    quick: bool,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // LAMINA_BENCH_QUICK=1 shrinks budgets for CI smoke runs.
+        let quick = std::env::var("LAMINA_BENCH_QUICK").ok().as_deref() == Some("1");
+        let cfg = if quick {
+            BenchConfig {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(100),
+                max_samples: 30,
+            }
+        } else {
+            BenchConfig::default()
+        };
+        Bench { cfg, results: Vec::new(), quick }
+    }
+
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Benchmark `f`, timing batches of calls.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + estimate per-call cost.
+        let warm_start = Instant::now();
+        let mut calls = 0u64;
+        while warm_start.elapsed() < self.cfg.warmup || calls == 0 {
+            f();
+            calls += 1;
+            if calls > 1_000_000 {
+                break;
+            }
+        }
+        let per_call = warm_start.elapsed().as_secs_f64() / calls as f64;
+
+        // Choose iters per sample so each sample is ~ measure/max_samples.
+        let target_sample = self.cfg.measure.as_secs_f64() / self.cfg.max_samples as f64;
+        let iters = ((target_sample / per_call.max(1e-9)).round() as u64).max(1);
+
+        let mut pct = Percentiles::new();
+        let bench_start = Instant::now();
+        let mut samples = 0;
+        while bench_start.elapsed() < self.cfg.measure && samples < self.cfg.max_samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            pct.add(t.elapsed().as_secs_f64() / iters as f64);
+            samples += 1;
+        }
+
+        let result = BenchResult {
+            name: name.to_string(),
+            samples,
+            iters_per_sample: iters,
+            mean_s: pct.mean(),
+            p50_s: pct.p50(),
+            p95_s: pct.p95(),
+            p99_s: pct.p99(),
+            min_s: pct.min(),
+        };
+        println!("{}", result.report_line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print a closing summary (and return it for dumping to file).
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("\n== bench summary ({} benches) ==\n", self.results.len()));
+        for r in &self.results {
+            s.push_str(&r.report_line());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("LAMINA_BENCH_QUICK", "1");
+        let mut b = Bench::new();
+        let r = b.run("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.samples > 0);
+        assert!(r.p50_s <= r.p99_s * 1.0001);
+    }
+
+    #[test]
+    fn ranks_slower_work_slower() {
+        std::env::set_var("LAMINA_BENCH_QUICK", "1");
+        let mut b = Bench::new();
+        let fast = b.run("fast", || {
+            black_box((0..10u64).sum::<u64>());
+        })
+        .mean_s;
+        let slow = b
+            .run("slow", || {
+                black_box((0..100_000u64).map(|i| i ^ 0x5a5a).sum::<u64>());
+            })
+            .mean_s;
+        assert!(slow > fast, "slow={slow} fast={fast}");
+        assert_eq!(b.results().len(), 2);
+        assert!(b.summary().contains("fast"));
+    }
+}

@@ -1,0 +1,183 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Supports `lamina <subcommand> [--flag] [--key value] [positional…]`.
+//! Unknown flags are errors; `--help` handling is left to the caller.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse raw argv (without the program name). `spec` lists valid option
+    /// names; names ending in `!` take a value, plain names are boolean.
+    pub fn parse(argv: &[String], spec: &[&str]) -> Result<Args, CliError> {
+        let mut valued = std::collections::BTreeSet::new();
+        let mut boolean = std::collections::BTreeSet::new();
+        for s in spec {
+            if let Some(name) = s.strip_suffix('!') {
+                valued.insert(name.to_string());
+            } else {
+                boolean.insert(s.to_string());
+            }
+        }
+
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    if !valued.contains(k) {
+                        return Err(CliError(format!("unknown option --{}", k)));
+                    }
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if valued.contains(name) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| CliError(format!("--{} needs a value", name)))?;
+                    out.flags
+                        .entry(name.to_string())
+                        .or_default()
+                        .push(v.clone());
+                } else if boolean.contains(name) {
+                    out.flags.entry(name.to_string()).or_default().push(String::new());
+                } else {
+                    return Err(CliError(format!("unknown option --{}", name)));
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{} expects an integer, got '{}'", name, v))),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{} expects a number, got '{}'", name, v))),
+        }
+    }
+
+    /// Comma-separated usize list, e.g. `--batches 1,2,4`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|_| CliError(format!("--{}: bad integer '{}'", name, x)))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = Args::parse(
+            &argv(&["fig10", "--trace", "azure-conv", "--verbose", "extra"]),
+            &["trace!", "verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("fig10"));
+        assert_eq!(a.get("trace"), Some("azure-conv"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = Args::parse(&argv(&["x", "--n=5"]), &["n!"]).unwrap();
+        assert_eq!(a.usize_or("n", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(Args::parse(&argv(&["--bogus"]), &[]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&argv(&["--n"]), &["n!"]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv(&[]), &["n!"]).unwrap();
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("alpha", 0.2).unwrap(), 0.2);
+        assert_eq!(a.get_or("mode", "sim"), "sim");
+        assert!(a.subcommand.is_none());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::parse(&argv(&["--b", "1,2, 8"]), &["b!"]).unwrap();
+        assert_eq!(a.usize_list_or("b", &[]).unwrap(), vec![1, 2, 8]);
+        let bad = Args::parse(&argv(&["--b", "1,x"]), &["b!"]).unwrap();
+        assert!(bad.usize_list_or("b", &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&argv(&["--n", "abc"]), &["n!"]).unwrap();
+        assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn repeated_flag_takes_last() {
+        let a = Args::parse(&argv(&["--n", "1", "--n", "2"]), &["n!"]).unwrap();
+        assert_eq!(a.usize_or("n", 0).unwrap(), 2);
+    }
+}

@@ -1,0 +1,9 @@
+//! Substrate utilities built in-repo (the offline toolchain carries no
+//! serde/clap/tokio/criterion/rand — see DESIGN.md §3.11).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod threadpool;

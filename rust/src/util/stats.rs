@@ -1,0 +1,268 @@
+//! Streaming statistics: Welford mean/variance, percentile recorder,
+//! fixed-bucket histogram. Used by the metrics layer and the bench harness.
+
+/// Online mean/variance (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Exact percentile recorder: stores all samples, sorts lazily.
+/// Fine for the sample counts in benches/sims (≤ millions).
+#[derive(Debug, Clone, Default)]
+pub struct Percentiles {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Percentiles {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            self.sorted = true;
+        }
+    }
+
+    /// q in [0, 1]; linear interpolation between closest ranks.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        self.ensure_sorted();
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let pos = q * (self.samples.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&mut self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.quantile(0.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.quantile(1.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+}
+
+/// Log-spaced histogram for latency distributions.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    lo: f64,
+    ratio: f64,
+    buckets: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl LogHistogram {
+    /// Buckets span [lo, hi] with `n` log-spaced bins.
+    pub fn new(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && n > 0);
+        LogHistogram {
+            lo,
+            ratio: (hi / lo).ln() / n as f64,
+            buckets: vec![0; n],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((x / self.lo).ln() / self.ratio) as usize;
+        if idx >= self.buckets.len() {
+            self.overflow += 1;
+        } else {
+            self.buckets[idx] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    pub fn bucket_bounds(&self, i: usize) -> (f64, f64) {
+        let a = self.lo * (self.ratio * i as f64).exp();
+        let b = self.lo * (self.ratio * (i + 1) as f64).exp();
+        (a, b)
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.buckets
+    }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s) for report tables.
+pub fn fmt_duration(secs: f64) -> String {
+    if !secs.is_finite() {
+        return "n/a".into();
+    }
+    let abs = secs.abs();
+    if abs >= 1.0 {
+        format!("{:.3} s", secs)
+    } else if abs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if abs >= 1e-6 {
+        format!("{:.2} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Format bytes/sec as GB/s (decimal) for network tables.
+pub fn fmt_bandwidth(bytes_per_sec: f64) -> String {
+    format!("{:.2} GB/s", bytes_per_sec / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_basic() {
+        let mut w = Welford::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            w.add(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        assert!((w.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(w.count(), 8);
+    }
+
+    #[test]
+    fn welford_empty() {
+        let w = Welford::new();
+        assert_eq!(w.count(), 0);
+        assert_eq!(w.variance(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_exact() {
+        let mut p = Percentiles::new();
+        for i in 1..=100 {
+            p.add(i as f64);
+        }
+        assert!((p.p50() - 50.5).abs() < 1e-9);
+        assert_eq!(p.min(), 1.0);
+        assert_eq!(p.max(), 100.0);
+        assert!((p.quantile(0.99) - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_unsorted_input() {
+        let mut p = Percentiles::new();
+        for x in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            p.add(x);
+        }
+        assert_eq!(p.p50(), 3.0);
+        assert_eq!(p.mean(), 3.0);
+    }
+
+    #[test]
+    fn percentiles_single() {
+        let mut p = Percentiles::new();
+        p.add(7.0);
+        assert_eq!(p.p50(), 7.0);
+        assert_eq!(p.p99(), 7.0);
+    }
+
+    #[test]
+    fn histogram_placement() {
+        let mut h = LogHistogram::new(1.0, 1000.0, 3); // decades
+        h.add(5.0); // [1,10)
+        h.add(50.0); // [10,100)
+        h.add(500.0); // [100,1000)
+        h.add(0.5); // underflow
+        h.add(5000.0); // overflow
+        assert_eq!(h.counts(), &[1, 1, 1]);
+        assert_eq!(h.total(), 5);
+        let (a, b) = h.bucket_bounds(1);
+        assert!((a - 10.0).abs() < 1e-9 && (b - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_duration(1.5), "1.500 s");
+        assert_eq!(fmt_duration(0.0032), "3.200 ms");
+        assert_eq!(fmt_duration(33e-6), "33.00 µs");
+        assert_eq!(fmt_duration(12e-9), "12.0 ns");
+        assert_eq!(fmt_bandwidth(45.7e9), "45.70 GB/s");
+    }
+}

@@ -1,0 +1,231 @@
+//! Minimal thread-pool + actor mailboxes (no `tokio` offline).
+//!
+//! Lamina's workers are long-lived actor threads that exchange typed
+//! messages over `std::sync::mpsc` channels; short parallel jobs (e.g.
+//! sharded attention execution) use the scoped `ThreadPool`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool executing boxed jobs.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let inflight = Arc::clone(&inflight);
+                std::thread::Builder::new()
+                    .name(format!("lamina-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("pool lock poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                inflight.fetch_sub(1, Ordering::Release);
+                            }
+                            Err(_) => break, // sender dropped: shutdown
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, inflight }
+    }
+
+    pub fn spawn(&self, f: impl FnOnce() + Send + 'static) {
+        self.inflight.fetch_add(1, Ordering::Acquire);
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("pool workers gone");
+    }
+
+    /// Busy count of queued + running jobs.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Run `f` over each item in parallel, collecting results in order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (tx, rx) = channel::<(usize, R)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let tx = tx.clone();
+            let f = Arc::clone(&f);
+            self.spawn(move || {
+                let r = f(item);
+                let _ = tx.send((i, r));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|r| r.expect("worker panicked")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // closes the channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A typed actor: a thread with an inbox, processing messages until the
+/// sender side closes (or an Exit message the handler interprets).
+pub struct Actor<M: Send + 'static> {
+    tx: Sender<M>,
+    handle: Option<JoinHandle<()>>,
+    name: String,
+}
+
+impl<M: Send + 'static> Actor<M> {
+    /// Spawn an actor whose body receives the inbox receiver.
+    pub fn spawn(name: &str, body: impl FnOnce(Receiver<M>) + Send + 'static) -> Self {
+        let (tx, rx) = channel();
+        let handle = std::thread::Builder::new()
+            .name(format!("lamina-{name}"))
+            .spawn(move || body(rx))
+            .expect("spawn actor");
+        Actor { tx, handle: Some(handle), name: name.to_string() }
+    }
+
+    pub fn send(&self, msg: M) -> Result<(), String> {
+        self.tx
+            .send(msg)
+            .map_err(|_| format!("actor '{}' has exited", self.name))
+    }
+
+    pub fn sender(&self) -> Sender<M> {
+        self.tx.clone()
+    }
+
+    /// Close the inbox and join the thread. Only unblocks if no other
+    /// `sender()` clones are still alive.
+    pub fn join(mut self) {
+        let handle = self.handle.take();
+        drop(self); // drops tx → inbox closes
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<M: Send + 'static> Drop for Actor<M> {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            // Senders may still be alive elsewhere; detach rather than hang.
+            drop(h);
+        }
+    }
+}
+
+/// One-shot reply channel for request/response actor calls.
+pub struct Reply<T>(Sender<T>);
+
+pub fn reply_channel<T>() -> (Reply<T>, Receiver<T>) {
+    let (tx, rx) = channel();
+    (Reply(tx), rx)
+}
+
+impl<T> Reply<T> {
+    pub fn send(self, value: T) {
+        let _ = self.0.send(value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins workers
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_map_ordered() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect(), |x: i32| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn actor_processes_messages() {
+        let sum = Arc::new(AtomicU64::new(0));
+        let s2 = Arc::clone(&sum);
+        let actor = Actor::spawn("adder", move |rx| {
+            for v in rx {
+                s2.fetch_add(v, Ordering::SeqCst);
+            }
+        });
+        for i in 1..=10u64 {
+            actor.send(i).unwrap();
+        }
+        actor.join();
+        assert_eq!(sum.load(Ordering::SeqCst), 55);
+    }
+
+    #[test]
+    fn actor_request_reply() {
+        enum Msg {
+            Square(u64, Reply<u64>),
+        }
+        let actor = Actor::spawn("squarer", |rx: Receiver<Msg>| {
+            for m in rx {
+                match m {
+                    Msg::Square(x, reply) => reply.send(x * x),
+                }
+            }
+        });
+        let (reply, rx) = reply_channel();
+        actor.send(Msg::Square(9, reply)).unwrap();
+        assert_eq!(rx.recv().unwrap(), 81);
+        actor.join();
+    }
+}

@@ -1,0 +1,761 @@
+//! The model worker / leader: drives the disaggregated decode pipeline on
+//! the real tiny model through PJRT — slices on this thread (the
+//! "compute-optimised device"), attention on worker threads (the
+//! "memory-optimised pool"), tensors crossing the simulated network.
+//!
+//! Supports the paper's §4.2.2 overlap (send Q early, partial attention on
+//! the workers, combine on K/V arrival) and §4.3 two-wave staggered
+//! pipelining (wave B's slices execute while wave A's attention is in
+//! flight on the worker threads).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+
+use crate::metrics::{ServeMetrics, StepBreakdown};
+use crate::netsim::stack::{NetStackModel, LINE_RATE_400G};
+use crate::netsim::transport::{link, Port};
+use crate::runtime::engine::Engine;
+use crate::runtime::host::HostTensor;
+use crate::trace::Request;
+
+use super::attn_worker::{run_attn_worker, AttnWorkerCfg, PAD_SLOT};
+use super::messages::WireMsg;
+
+/// Pipeline options.
+#[derive(Debug, Clone)]
+pub struct PipelineOpts {
+    pub artifacts_dir: std::path::PathBuf,
+    /// Attention workers (head-level shards; must divide kv_heads).
+    pub attn_workers: usize,
+    /// §4.2.2 resource-utilisation overlapping.
+    pub overlap: bool,
+    pub stack: &'static NetStackModel,
+    /// Network pacing factor (0 = functional only, 1 = modelled latencies).
+    pub time_scale: f64,
+    /// Batch slots (max concurrent requests per wave).
+    pub slots: usize,
+    /// Pre-compile every leader entry point at start (removes multi-ms
+    /// lazy-compile spikes from the first requests' tail latency).
+    pub warmup: bool,
+    /// Maximum staggered waves `serve` may run (sizes the KV slot pools).
+    pub max_waves: usize,
+    /// Use the chunked-prefill path for prompts in `serve` (paper §5);
+    /// otherwise prompts are teacher-forced through the decode path.
+    pub use_prefill: bool,
+}
+
+impl PipelineOpts {
+    pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Self {
+        PipelineOpts {
+            artifacts_dir: artifacts_dir.into(),
+            attn_workers: 2,
+            overlap: true,
+            stack: &crate::netsim::stack::FHBN,
+            time_scale: 0.0,
+            slots: 8,
+            warmup: true,
+            max_waves: 2,
+            use_prefill: true,
+        }
+    }
+}
+
+struct WorkerHandle {
+    port: Port<WireMsg>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// One wave's per-slot decode state.
+#[derive(Debug, Clone)]
+struct SlotState {
+    #[allow(dead_code)] // kept for tracing/diagnostics
+    request_id: u64,
+    /// physical KV cache slot on the attention workers — stable for the
+    /// request's lifetime (wave positions shift as requests retire).
+    cache_slot: u32,
+    /// prompt tokens not yet consumed (fed teacher-forcing through decode)
+    pending_prompt: Vec<i32>,
+    /// cached tokens so far
+    len: i32,
+    /// tokens generated so far (output)
+    generated: Vec<i32>,
+    gen_target: usize,
+    next_input: i32,
+}
+
+impl SlotState {
+    fn done(&self) -> bool {
+        self.pending_prompt.is_empty() && self.generated.len() >= self.gen_target
+    }
+}
+
+/// The disaggregated serving pipeline.
+pub struct DisaggPipeline {
+    engine: Engine,
+    workers: Vec<WorkerHandle>,
+    opts: PipelineOpts,
+    /// network bytes sent per decode step (for breakdown accounting)
+    step_net_bytes: std::cell::Cell<usize>,
+}
+
+impl DisaggPipeline {
+    /// Start the pipeline: loads the leader engine and spawns the attention
+    /// worker threads (each builds its own engine).
+    pub fn start(opts: PipelineOpts) -> Result<Self> {
+        let engine = Engine::load(&opts.artifacts_dir)?;
+        if opts.warmup {
+            // compile only the leader-side entry points (slices); attention
+            // artifacts belong to the workers' engines
+            for e in engine.manifest.entrypoints.clone() {
+                if e.entry.starts_with("slice_") {
+                    engine.execute_warm(&e.entry, e.batch, e.seq)?;
+                }
+            }
+        }
+        let mc = &engine.manifest.config;
+        if mc.kv_heads % opts.attn_workers != 0 {
+            bail!(
+                "attention workers ({}) must divide kv heads ({}) for head-level partitioning",
+                opts.attn_workers,
+                mc.kv_heads
+            );
+        }
+        let shard_ok = opts.attn_workers == 1
+            || engine
+                .manifest
+                .entrypoints
+                .iter()
+                .any(|e| e.entry == format!("attention_w{}", opts.attn_workers));
+        if !shard_ok {
+            bail!("no attention artifacts for {} shards — re-run `make artifacts`",
+                opts.attn_workers);
+        }
+
+        let mut workers = Vec::new();
+        for w in 0..opts.attn_workers {
+            let (leader_port, worker_port) = link::<WireMsg>(opts.stack, LINE_RATE_400G, opts.time_scale);
+            let cfg = AttnWorkerCfg {
+                artifacts_dir: opts.artifacts_dir.clone(),
+                shard: w,
+                n_shards: opts.attn_workers,
+                // distinct physical slots for every wave's requests
+                slots: opts.slots * opts.max_waves,
+            };
+            let thread = std::thread::Builder::new()
+                .name(format!("lamina-attn-{w}"))
+                .spawn(move || run_attn_worker(cfg, worker_port))
+                .context("spawn attention worker")?;
+            workers.push(WorkerHandle { port: leader_port, thread: Some(thread) });
+        }
+        Ok(DisaggPipeline { engine, workers, opts, step_net_bytes: std::cell::Cell::new(0) })
+    }
+
+    pub fn config(&self) -> &crate::runtime::manifest::ModelCfg {
+        &self.engine.manifest.config
+    }
+
+    pub fn engine_stats(&self) -> crate::runtime::engine::EngineStats {
+        self.engine.snapshot_stats()
+    }
+
+    // ---- attention round-trip -------------------------------------------
+
+    fn send_q(&self, layer: usize, slots: &[u32], q: &HostTensor, lens: &[i32],
+              seq_bucket: usize) -> Result<()> {
+        let mc = self.config();
+        let w = self.workers.len();
+        let hs = mc.heads / w;
+        for (wi, worker) in self.workers.iter().enumerate() {
+            let qs = slice_heads(q, wi * hs, hs);
+            let msg = WireMsg::StepQ {
+                layer,
+                slots: slots.to_vec(),
+                q: qs,
+                lens: lens.to_vec(),
+                seq_bucket,
+                overlap: self.opts.overlap,
+            };
+            let bytes = msg.wire_bytes();
+            self.step_net_bytes.set(self.step_net_bytes.get() + bytes);
+            worker.port.send(msg, bytes).map_err(|e| anyhow!(e))?;
+        }
+        Ok(())
+    }
+
+    fn send_kv(&self, layer: usize, k: &HostTensor, v: &HostTensor) -> Result<()> {
+        let mc = self.config();
+        let w = self.workers.len();
+        let khs = mc.kv_heads / w;
+        for (wi, worker) in self.workers.iter().enumerate() {
+            let msg = WireMsg::StepKv {
+                layer,
+                k: slice_heads(k, wi * khs, khs),
+                v: slice_heads(v, wi * khs, khs),
+            };
+            let bytes = msg.wire_bytes();
+            self.step_net_bytes.set(self.step_net_bytes.get() + bytes);
+            worker.port.send(msg, bytes).map_err(|e| anyhow!(e))?;
+        }
+        Ok(())
+    }
+
+    fn recv_attn(&self, layer: usize, bucket: usize) -> Result<HostTensor> {
+        let mc = self.config();
+        let w = self.workers.len();
+        let hs = mc.heads / w;
+        let hd = mc.head_dim;
+        let mut out = vec![0.0f32; bucket * mc.heads * hd];
+        for (wi, worker) in self.workers.iter().enumerate() {
+            let (msg, _) = worker.port.recv().map_err(|e| anyhow!(e))?;
+            match msg {
+                WireMsg::AttnOut { layer: l, out: shard } => {
+                    if l != layer {
+                        bail!("attention out for layer {l}, expected {layer}");
+                    }
+                    let sd = shard.as_f32();
+                    for b in 0..bucket {
+                        let dst = (b * mc.heads + wi * hs) * hd;
+                        let src = b * hs * hd;
+                        out[dst..dst + hs * hd].copy_from_slice(&sd[src..src + hs * hd]);
+                    }
+                }
+                WireMsg::WorkerError { msg } => bail!("attention worker {wi}: {msg}"),
+                other => bail!("unexpected reply {other:?}"),
+            }
+        }
+        Ok(HostTensor::f32(vec![bucket, mc.heads, hd], out))
+    }
+
+    // ---- one decode step for one wave -----------------------------------
+
+    /// Execute one full decode step for the given wave. Returns the next
+    /// token per active row and the step's breakdown.
+    fn decode_step(&self, wave: &mut [SlotState], active: &[usize]) -> Result<(Vec<i32>, StepBreakdown)> {
+        let mc = self.config();
+        let step_t0 = Instant::now();
+        self.step_net_bytes.set(0);
+        let b = active.len();
+        let bucket = self
+            .engine
+            .manifest
+            .batch_bucket(b)
+            .ok_or_else(|| anyhow!("batch {b} exceeds largest bucket"))?;
+
+        let mut tokens = vec![0i32; bucket];
+        let mut pos = vec![0i32; bucket];
+        let mut lens = vec![0i32; bucket];
+        let mut slots = vec![PAD_SLOT; bucket];
+        let mut max_len_after = 1usize;
+        for (i, &si) in active.iter().enumerate() {
+            let s = &wave[si];
+            tokens[i] = s.next_input;
+            pos[i] = s.len;
+            lens[i] = s.len;
+            slots[i] = s.cache_slot;
+            max_len_after = max_len_after.max(s.len as usize + 1);
+        }
+        let seq_bucket = self
+            .engine
+            .manifest
+            .seq_bucket(max_len_after)
+            .ok_or_else(|| anyhow!("context {max_len_after} exceeds max seq bucket"))?;
+
+        let tokens_t = HostTensor::i32(vec![bucket], tokens);
+        let pos_t = HostTensor::i32(vec![bucket], pos);
+
+        let mut model_s = 0.0;
+        let mut attn_wait_s = 0.0;
+
+        // slice_first
+        let t0 = Instant::now();
+        let mut outs = self.engine.execute(
+            "slice_first",
+            bucket,
+            None,
+            &[&tokens_t, &pos_t],
+            &first_weight_names(),
+        )?;
+        model_s += t0.elapsed().as_secs_f64();
+        let (mut q, mut k, mut v, mut resid) = take4(&mut outs)?;
+
+        for layer in 0..mc.layers {
+            // ship q early, then k/v (the §4.2.2 ordering)
+            self.send_q(layer, &slots, &q, &lens, seq_bucket)?;
+            self.send_kv(layer, &k, &v)?;
+            let t1 = Instant::now();
+            let attn_out = self.recv_attn(layer, bucket)?;
+            attn_wait_s += t1.elapsed().as_secs_f64();
+
+            let t2 = Instant::now();
+            if layer + 1 < mc.layers {
+                let mut outs = self.engine.execute(
+                    "slice_mid",
+                    bucket,
+                    None,
+                    &[&attn_out, &resid, &pos_t],
+                    &mid_weight_names(layer),
+                )?;
+                model_s += t2.elapsed().as_secs_f64();
+                let (q2, k2, v2, r2) = take4(&mut outs)?;
+                q = q2;
+                k = k2;
+                v = v2;
+                resid = r2;
+            } else {
+                let outs = self.engine.execute(
+                    "slice_last",
+                    bucket,
+                    None,
+                    &[&attn_out, &resid],
+                    &last_weight_names(mc.layers),
+                )?;
+                model_s += t2.elapsed().as_secs_f64();
+                let next = outs
+                    .into_iter()
+                    .nth(1)
+                    .ok_or_else(|| anyhow!("slice_last output arity"))?;
+                let total = step_t0.elapsed().as_secs_f64();
+                let net_bytes = self.step_net_bytes.get();
+                let net_model_s = (self.opts.stack.fixed_overhead()
+                    + net_bytes as f64 / (LINE_RATE_400G * self.opts.stack.bw_efficiency))
+                    * self.opts.time_scale.min(1.0);
+                let bd = StepBreakdown {
+                    model_s,
+                    attn_s: attn_wait_s,
+                    network_s: net_model_s,
+                    sched_s: (total - model_s - attn_wait_s - net_model_s).max(0.0),
+                    total_s: total,
+                };
+                let mut next_tokens = next.as_i32()[..bucket].to_vec();
+                next_tokens.truncate(b.max(1));
+                return Ok((next_tokens, bd));
+            }
+        }
+        unreachable!("loop returns at last layer");
+    }
+
+    /// Advance a wave by one decode step: pick active slots, run the step,
+    /// apply teacher forcing for unconsumed prompt tokens, collect outputs.
+    fn step_wave(&self, wave: &mut Vec<SlotState>) -> Result<Option<StepBreakdown>> {
+        let active: Vec<usize> = (0..wave.len()).filter(|&i| !wave[i].done()).collect();
+        if active.is_empty() {
+            return Ok(None);
+        }
+        let (next, bd) = self.decode_step(wave, &active)?;
+        for (row, &si) in active.iter().enumerate() {
+            let s = &mut wave[si];
+            s.len += 1;
+            let produced = next[row];
+            s.next_input = if let Some(tok) = s.pending_prompt.first().copied() {
+                s.pending_prompt.remove(0);
+                tok
+            } else {
+                if s.generated.len() < s.gen_target {
+                    s.generated.push(produced);
+                }
+                produced
+            };
+        }
+        Ok(Some(bd))
+    }
+
+    // ---- chunked prefill (paper §5) ---------------------------------------
+
+    /// Prefill `prompt` for cache slot `slot` in chunks of the largest batch
+    /// bucket, returning the first generated token. The KV lands on the
+    /// attention workers layer-by-layer exactly as the paper's transition
+    /// protocol streams it.
+    pub fn prefill(&self, slot: u32, prompt: &[i32]) -> Result<i32> {
+        let mc = self.config().clone();
+        assert!(!prompt.is_empty());
+        let chunk = *self
+            .engine
+            .manifest
+            .batch_buckets
+            .iter()
+            .max()
+            .ok_or_else(|| anyhow!("no batch buckets"))?;
+        let mut cached = 0usize;
+        let mut next_token = 0i32;
+        while cached < prompt.len() {
+            let valid = (prompt.len() - cached).min(chunk);
+            let bucket = self
+                .engine
+                .manifest
+                .batch_bucket(valid)
+                .ok_or_else(|| anyhow!("chunk exceeds buckets"))?;
+            let seq_bucket = self
+                .engine
+                .manifest
+                .seq_bucket(cached + bucket)
+                .ok_or_else(|| anyhow!("prompt exceeds context window"))?;
+
+            let mut tokens = vec![0i32; bucket];
+            let mut pos = vec![0i32; bucket];
+            for i in 0..valid {
+                tokens[i] = prompt[cached + i];
+                pos[i] = (cached + i) as i32;
+            }
+            for (i, p) in pos.iter_mut().enumerate().skip(valid) {
+                *p = (cached + i) as i32; // padding rows: harmless positions
+            }
+            let tokens_t = HostTensor::i32(vec![bucket], tokens);
+            let pos_t = HostTensor::i32(vec![bucket], pos);
+
+            let mut outs = self.engine.execute(
+                "slice_first",
+                bucket,
+                None,
+                &[&tokens_t, &pos_t],
+                &first_weight_names(),
+            )?;
+            let (mut q, mut k, mut v, mut resid) = take4(&mut outs)?;
+
+            for layer in 0..mc.layers {
+                self.send_prefill(layer, slot, &q, &k, &v, cached as i32, valid, seq_bucket)?;
+                let attn_out = self.recv_attn(layer, bucket)?;
+                if layer + 1 < mc.layers {
+                    let mut outs = self.engine.execute(
+                        "slice_mid",
+                        bucket,
+                        None,
+                        &[&attn_out, &resid, &pos_t],
+                        &mid_weight_names(layer),
+                    )?;
+                    let (q2, k2, v2, r2) = take4(&mut outs)?;
+                    q = q2;
+                    k = k2;
+                    v = v2;
+                    resid = r2;
+                } else {
+                    let outs = self.engine.execute(
+                        "slice_last",
+                        bucket,
+                        None,
+                        &[&attn_out, &resid],
+                        &last_weight_names(mc.layers),
+                    )?;
+                    let next = &outs[1];
+                    next_token = next.as_i32()[valid - 1];
+                }
+            }
+            cached += valid;
+        }
+        Ok(next_token)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn send_prefill(
+        &self,
+        layer: usize,
+        slot: u32,
+        q: &HostTensor,
+        k: &HostTensor,
+        v: &HostTensor,
+        cached: i32,
+        valid: usize,
+        seq_bucket: usize,
+    ) -> Result<()> {
+        let mc = self.config();
+        let w = self.workers.len();
+        let hs = mc.heads / w;
+        let khs = mc.kv_heads / w;
+        for (wi, worker) in self.workers.iter().enumerate() {
+            let msg = WireMsg::PrefillChunk {
+                layer,
+                slot,
+                q: slice_heads(q, wi * hs, hs),
+                k: slice_heads(k, wi * khs, khs),
+                v: slice_heads(v, wi * khs, khs),
+                cached,
+                valid,
+                seq_bucket,
+            };
+            let bytes = msg.wire_bytes();
+            self.step_net_bytes.set(self.step_net_bytes.get() + bytes);
+            worker.port.send(msg, bytes).map_err(|e| anyhow!(e))?;
+        }
+        Ok(())
+    }
+
+    /// Prefill-then-decode: run the prompt through the chunked prefill path,
+    /// then greedy-decode `steps` tokens. Must produce exactly the same
+    /// tokens as the teacher-forced `decode` path (asserted in tests).
+    pub fn generate(&self, slot: u32, prompt: &[i32], steps: usize) -> Result<Vec<i32>> {
+        let first = self.prefill(slot, prompt)?;
+        let mut wave = vec![SlotState {
+            request_id: slot as u64,
+            cache_slot: slot,
+            pending_prompt: Vec::new(),
+            len: prompt.len() as i32,
+            generated: vec![first],
+            gen_target: steps,
+            next_input: first,
+        }];
+        while wave[0].generated.len() < steps {
+            let (next, _) = self.decode_step(&mut wave, &[0])?;
+            let s = &mut wave[0];
+            s.len += 1;
+            s.generated.push(next[0]);
+            s.next_input = next[0];
+        }
+        let mut out = wave.remove(0).generated;
+        out.truncate(steps);
+        Ok(out)
+    }
+
+    // ---- public decoding APIs --------------------------------------------
+
+    /// Greedy-decode `steps` tokens for each prompt (single wave, batch =
+    /// prompts.len(), must fit in the slot count). Returns generated ids.
+    pub fn decode(&self, prompts: &[Vec<i32>], steps: usize) -> Result<Vec<Vec<i32>>> {
+        if prompts.len() > self.opts.slots {
+            bail!("batch {} exceeds slots {}", prompts.len(), self.opts.slots);
+        }
+        let mut wave: Vec<SlotState> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                assert!(!p.is_empty(), "empty prompt");
+                SlotState {
+                    request_id: i as u64,
+                    cache_slot: i as u32,
+                    pending_prompt: p[1..].to_vec(),
+                    len: 0,
+                    generated: Vec::new(),
+                    gen_target: steps,
+                    next_input: p[0],
+                }
+            })
+            .collect();
+        while self.step_wave(&mut wave)?.is_some() {}
+        Ok(wave.into_iter().map(|s| s.generated).collect())
+    }
+
+    /// Serve a request list with continuous batching across `waves`
+    /// staggered waves. Requests use synthetic prompts of the declared
+    /// lengths (the traces carry lengths only, like the paper's). Slot-based
+    /// admission: a waiting request joins as soon as a slot in some wave
+    /// frees up (iteration-granularity batching).
+    pub fn serve(&self, requests: &[Request], waves: usize) -> Result<ServeMetrics> {
+        let mc = self.config();
+        assert!(waves >= 1, "need at least one wave");
+        assert!(
+            waves <= self.opts.max_waves,
+            "waves {waves} exceed max_waves {} (slot pools)",
+            self.opts.max_waves
+        );
+        let max_ctx = mc.max_seq - 1;
+        for r in requests {
+            if r.max_context() > max_ctx {
+                bail!(
+                    "request {} context {} exceeds tiny-model max {max_ctx}",
+                    r.id,
+                    r.max_context()
+                );
+            }
+        }
+        let mut waiting: std::collections::VecDeque<Request> =
+            requests.iter().copied().collect();
+        let mut waves_state: Vec<Vec<SlotState>> = (0..waves).map(|_| Vec::new()).collect();
+        // physical cache slots are partitioned across waves and recycled via
+        // a per-wave free list (stable for each request's lifetime)
+        let mut free_slots: Vec<Vec<u32>> = (0..waves)
+            .map(|w| {
+                (0..self.opts.slots as u32)
+                    .map(|s| (w * self.opts.slots) as u32 + s)
+                    .rev()
+                    .collect()
+            })
+            .collect();
+        let mut metrics = ServeMetrics::new();
+        let mut rng = crate::util::prng::Rng::new(0x1a31a);
+
+        loop {
+            // admission: fill free slots round-robin across waves
+            for (wi, ws) in waves_state.iter_mut().enumerate() {
+                while let Some(&slot) = free_slots[wi].last() {
+                    let Some(r) = waiting.pop_front() else { break };
+                    free_slots[wi].pop();
+                    let prompt: Vec<i32> = (0..r.prompt_tokens.max(1))
+                        .map(|_| rng.range(1, mc.vocab as u64) as i32)
+                        .collect();
+                    if self.opts.use_prefill && prompt.len() > 1 {
+                        // chunked prefill populates the KV cache; the first
+                        // generated token comes out of the prefill pass
+                        let first = self.prefill(slot, &prompt)?;
+                        ws.push(SlotState {
+                            request_id: r.id,
+                            cache_slot: slot,
+                            pending_prompt: Vec::new(),
+                            len: prompt.len() as i32,
+                            generated: vec![first],
+                            gen_target: r.gen_tokens,
+                            next_input: first,
+                        });
+                    } else {
+                        ws.push(SlotState {
+                            request_id: r.id,
+                            cache_slot: slot,
+                            pending_prompt: prompt[1..].to_vec(),
+                            len: 0,
+                            generated: Vec::new(),
+                            gen_target: r.gen_tokens,
+                            next_input: prompt[0],
+                        });
+                    }
+                }
+            }
+            if waves_state.iter().all(|w| w.is_empty()) && waiting.is_empty() {
+                break;
+            }
+
+            // one round: step every wave (worker threads overlap waves'
+            // attention with the leader's slices of the other wave)
+            for (wi, ws) in waves_state.iter_mut().enumerate() {
+                let decoding = ws
+                    .iter()
+                    .filter(|s| s.pending_prompt.is_empty() && !s.done())
+                    .count();
+                if let Some(bd) = self.step_wave(ws)? {
+                    // only decode-phase tokens count toward serving metrics
+                    if decoding > 0 {
+                        metrics.record_step(decoding, bd);
+                    }
+                }
+                let before = ws.len();
+                ws.retain(|s| {
+                    if s.done() {
+                        free_slots[wi].push(s.cache_slot); // recycle KV slot
+                        false
+                    } else {
+                        true
+                    }
+                });
+                metrics.record_completion((before - ws.len()) as u64);
+            }
+        }
+        Ok(metrics)
+    }
+
+    // ---- fault tolerance (paper §5) ---------------------------------------
+
+    /// Simulate an attention-worker failure: its thread is terminated and
+    /// all its KV state (the head shard of every live request) is lost.
+    pub fn kill_attn_worker(&mut self, idx: usize) {
+        let w = &mut self.workers[idx];
+        let _ = w.port.send(WireMsg::Shutdown, 0);
+        if let Some(t) = w.thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Recover a failed attention worker: spawn a replacement with an empty
+    /// cache, then rebuild the lost KV by re-running each live request's
+    /// prompt + already-generated tokens (kept by the service front-end)
+    /// through the chunked-prefill path. Prefill broadcasts to all workers;
+    /// healthy shards are overwritten with byte-identical values, so the
+    /// rebuild is idempotent.
+    pub fn recover_attn_worker(
+        &mut self,
+        idx: usize,
+        live: &[(u32, Vec<i32>)],
+    ) -> Result<()> {
+        let (leader_port, worker_port) =
+            link::<WireMsg>(self.opts.stack, LINE_RATE_400G, self.opts.time_scale);
+        let cfg = AttnWorkerCfg {
+            artifacts_dir: self.opts.artifacts_dir.clone(),
+            shard: idx,
+            n_shards: self.opts.attn_workers,
+            slots: self.opts.slots * self.opts.max_waves,
+        };
+        let thread = std::thread::Builder::new()
+            .name(format!("lamina-attn-{idx}-r"))
+            .spawn(move || run_attn_worker(cfg, worker_port))
+            .context("respawn attention worker")?;
+        self.workers[idx] = WorkerHandle { port: leader_port, thread: Some(thread) };
+        for (slot, tokens) in live {
+            assert!(!tokens.is_empty());
+            // re-prefill the full known token history; the final next-token
+            // output is discarded (decode continues from the caller's state)
+            let _ = self.prefill(*slot, tokens)?;
+        }
+        Ok(())
+    }
+
+    pub fn shutdown(mut self) {
+        for w in &self.workers {
+            let _ = w.port.send(WireMsg::Shutdown, 0);
+        }
+        for w in &mut self.workers {
+            if let Some(t) = w.thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+/// Slice heads `[h0, h0+n)` out of `[B, H, hd]`.
+fn slice_heads(t: &HostTensor, h0: usize, n: usize) -> HostTensor {
+    let shape = t.shape();
+    assert_eq!(shape.len(), 3);
+    let (b, h, hd) = (shape[0], shape[1], shape[2]);
+    assert!(h0 + n <= h);
+    let src = t.as_f32();
+    let mut out = vec![0.0f32; b * n * hd];
+    for bi in 0..b {
+        let s = (bi * h + h0) * hd;
+        let d = bi * n * hd;
+        out[d..d + n * hd].copy_from_slice(&src[s..s + n * hd]);
+    }
+    HostTensor::f32(vec![b, n, hd], out)
+}
+
+fn take4(outs: &mut Vec<HostTensor>) -> Result<(HostTensor, HostTensor, HostTensor, HostTensor)> {
+    if outs.len() != 4 {
+        bail!("expected 4 outputs, got {}", outs.len());
+    }
+    let r = outs.pop().unwrap();
+    let v = outs.pop().unwrap();
+    let k = outs.pop().unwrap();
+    let q = outs.pop().unwrap();
+    Ok((q, k, v, r))
+}
+
+fn first_weight_names() -> Vec<String> {
+    ["embed", "layer0.attn_norm", "layer0.wq", "layer0.wk", "layer0.wv"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+fn mid_weight_names(layer: usize) -> Vec<String> {
+    let i = layer;
+    let j = layer + 1;
+    vec![
+        format!("layer{i}.wo"),
+        format!("layer{i}.ffn_norm"),
+        format!("layer{i}.w_gate"),
+        format!("layer{i}.w_up"),
+        format!("layer{i}.w_down"),
+        format!("layer{j}.attn_norm"),
+        format!("layer{j}.wq"),
+        format!("layer{j}.wk"),
+        format!("layer{j}.wv"),
+    ]
+}
+
+fn last_weight_names(layers: usize) -> Vec<String> {
+    let i = layers - 1;
+    vec![
+        format!("layer{i}.wo"),
+        format!("layer{i}.ffn_norm"),
+        format!("layer{i}.w_gate"),
+        format!("layer{i}.w_up"),
+        format!("layer{i}.w_down"),
+        "final_norm".to_string(),
+        "lm_head".to_string(),
+    ]
+}

@@ -1,0 +1,97 @@
+//! Wire messages between the model worker (leader) and attention workers.
+//!
+//! These are the exact tensors the paper moves over the DCN each layer:
+//! q right after Q-Proj+RoPE (the overlap path), k/v at slice end, and the
+//! attention output back. Everything is plain host data — the bytes really
+//! cross threads via `netsim::transport`.
+
+use crate::runtime::host::HostTensor;
+
+/// Messages on the leader↔worker link (one enum; the link is bidirectional).
+#[derive(Debug, Clone)]
+pub enum WireMsg {
+    /// Query shard for one layer step. Arrives first; in overlap mode the
+    /// worker immediately starts partial attention over its cached tokens.
+    StepQ {
+        layer: usize,
+        /// cache slot of each batch row (row i ↔ slot slots[i])
+        slots: Vec<u32>,
+        /// [bucket, H_shard, hd]
+        q: HostTensor,
+        /// valid cached tokens per row (before this step's append)
+        lens: Vec<i32>,
+        /// seq bucket to run the attention artifact at
+        seq_bucket: usize,
+        /// overlap mode: run attn_prev now, combine on KV arrival
+        overlap: bool,
+    },
+    /// Key/value shard for the same (layer, step) as the last StepQ.
+    StepKv {
+        layer: usize,
+        /// [bucket, KH_shard, hd]
+        k: HostTensor,
+        /// [bucket, KH_shard, hd]
+        v: HostTensor,
+    },
+    /// Chunked-prefill step for ONE request (paper §5): the worker appends
+    /// the chunk's K/V shard to the slot's cache and computes attention of
+    /// the chunk over cached-prefix + intra-chunk-causal tokens.
+    PrefillChunk {
+        layer: usize,
+        slot: u32,
+        /// [T, H_shard, hd] chunk queries (T = chunk bucket, padded).
+        q: HostTensor,
+        /// [T, KH_shard, hd] chunk keys/values.
+        k: HostTensor,
+        v: HostTensor,
+        /// valid cached tokens before this chunk.
+        cached: i32,
+        /// valid rows of the chunk (≤ T; the rest is padding).
+        valid: usize,
+        seq_bucket: usize,
+    },
+    /// Attention output shard [bucket, H_shard, hd] (worker → leader).
+    AttnOut { layer: usize, out: HostTensor },
+    /// Worker fatal error (worker → leader).
+    WorkerError { msg: String },
+    /// Graceful shutdown (leader → worker).
+    Shutdown,
+}
+
+impl WireMsg {
+    /// Bytes this message occupies on the wire (tensor payloads only).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            WireMsg::StepQ { q, lens, slots, .. } => {
+                q.byte_size() + lens.len() * 4 + slots.len() * 4
+            }
+            WireMsg::StepKv { k, v, .. } => k.byte_size() + v.byte_size(),
+            WireMsg::PrefillChunk { q, k, v, .. } => {
+                q.byte_size() + k.byte_size() + v.byte_size() + 8
+            }
+            WireMsg::AttnOut { out, .. } => out.byte_size(),
+            WireMsg::WorkerError { msg } => msg.len(),
+            WireMsg::Shutdown => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_bytes_accounting() {
+        let q = HostTensor::zeros_f32(vec![4, 4, 16]);
+        let m = WireMsg::StepQ {
+            layer: 0,
+            slots: vec![0, 1, 2, 3],
+            q,
+            lens: vec![0; 4],
+            seq_bucket: 64,
+            overlap: false,
+        };
+        assert_eq!(m.wire_bytes(), 4 * 4 * 16 * 4 + 16 + 16);
+        assert_eq!(WireMsg::Shutdown.wire_bytes(), 0);
+    }
+}

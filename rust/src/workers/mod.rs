@@ -1,0 +1,10 @@
+//! Worker actors of the real (tiny-model) disaggregated pipeline: the
+//! model-worker leader and the head-sharded attention workers, exchanging
+//! tensors over the paced in-process network.
+
+pub mod attn_worker;
+pub mod leader;
+pub mod messages;
+
+pub use leader::{DisaggPipeline, PipelineOpts};
+pub use messages::WireMsg;
