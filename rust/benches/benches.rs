@@ -9,21 +9,27 @@
 //!   * transport benches       → Fig. 13
 //!   * simulator benches       → Figs. 10–12 regeneration cost
 //!   * coordinator micro       → batcher/KV/min-cut/pipeline hot paths
+//!   * paged-KV hot loop       → gather/append vs a dense reference cache,
+//!     plus zero-copy staging vs legacy deep-copy staging
 //!
 //! Env: LAMINA_BENCH_QUICK=1 shrinks budgets (CI smoke).
+//!
+//! Machine-readable output: the decode-path benches land in
+//! `rust/BENCH_decode.json` (name, ns/iter, host bytes copied per iter, KV
+//! blocks in use) so perf trajectory can be tracked across PRs.
 
 use lamina::baseline::vllm::{run_vllm, VllmConfig};
 use lamina::coordinator::batcher::ContinuousBatcher;
 use lamina::coordinator::sim::{run_lamina, wave_cost, LaminaConfig};
 use lamina::devices::specs::{H100, H20, LLAMA3_70B};
-use lamina::kvcache::{BlockAllocator, KvRegistry};
+use lamina::kvcache::{ArenaCfg, BlockAllocator, KvRegistry, PagedKvArena};
 use lamina::netsim::stack::{FHBN, LINE_RATE_400G};
 use lamina::netsim::transport::link;
 use lamina::opgraph::builder::{build_decode_graph, llama3_70b_shape, tiny_shape};
 use lamina::opgraph::schedule::emit_programs;
 use lamina::opgraph::slicer::split_at_attention;
 use lamina::runtime::engine::Engine;
-use lamina::runtime::host::HostTensor;
+use lamina::runtime::host::{copies, HostTensor};
 use lamina::trace::{fixed_length, synthesize, AZURE_CONV};
 use lamina::util::bench::{black_box, Bench};
 use lamina::util::json::Json;
@@ -33,21 +39,52 @@ fn artifacts_dir() -> std::path::PathBuf {
     std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Host bytes physically copied by one invocation of `f`.
+fn copied_bytes(mut f: impl FnMut()) -> u64 {
+    copies::reset();
+    f();
+    copies::total()
+}
+
+/// One `BENCH_decode.json` row.
+fn row(name: &str, ns_per_iter: f64, copy_bytes: u64, kv_blocks: usize) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("ns_per_iter", Json::num(ns_per_iter)),
+        ("host_copy_bytes_per_iter", Json::num(copy_bytes as f64)),
+        ("kv_blocks_in_use", Json::num(kv_blocks as f64)),
+    ])
+}
+
 fn main() {
     let mut b = Bench::new();
+    let mut rows: Vec<Json> = Vec::new();
 
     bench_coordinator(&mut b);
     bench_opgraph(&mut b);
     bench_transport(&mut b);
     bench_simulators(&mut b);
+    let gather_ratio = bench_kv_paged(&mut b, &mut rows);
+    bench_host_staging(&mut b, &mut rows);
     if artifacts_dir().join("manifest.json").exists() {
         bench_runtime(&mut b);
-        bench_pipeline(&mut b);
+        bench_pipeline(&mut b, &mut rows);
     } else {
         eprintln!("NOTE: artifacts/ missing — skipping PJRT benches (run `make artifacts`)");
     }
 
     print!("{}", b.summary());
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("decode")),
+        ("quick", Json::Bool(b.is_quick())),
+        ("gather_copy_ratio_dense_over_paged", Json::num(gather_ratio)),
+        ("rows", Json::arr(rows)),
+    ]);
+    let out_path =
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_decode.json");
+    std::fs::write(&out_path, doc.pretty()).expect("write BENCH_decode.json");
+    eprintln!("wrote {}", out_path.display());
 }
 
 // ---- L3 coordinator micro-benches ---------------------------------------
@@ -143,6 +180,203 @@ fn bench_simulators(b: &mut Bench) {
     });
 }
 
+// ---- paged KV hot loop (tentpole benches, artifact-free) -------------------
+
+/// Dense per-slot reference shard (the seed's layout): `[KH_s, max_seq, hd]`
+/// per slot, gathered with full-`seq_bucket` copies every step regardless
+/// of live context. Kept here as the comparator the paged arena replaced.
+struct DenseShard {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dense_gather(
+    shards: &[DenseShard],
+    slots: &[u32],
+    khs: usize,
+    max_seq: usize,
+    hd: usize,
+    bucket: usize,
+    seq_bucket: usize,
+) -> (HostTensor, HostTensor) {
+    let row = khs * seq_bucket * hd;
+    let mut k = vec![0.0f32; bucket * row];
+    let mut v = vec![0.0f32; bucket * row];
+    let mut copied = 0usize;
+    for (b, &slot) in slots.iter().enumerate() {
+        let cache = &shards[slot as usize];
+        for h in 0..khs {
+            let src = h * max_seq * hd;
+            let dst = b * row + h * seq_bucket * hd;
+            let n = seq_bucket * hd;
+            k[dst..dst + n].copy_from_slice(&cache.k[src..src + n]);
+            v[dst..dst + n].copy_from_slice(&cache.v[src..src + n]);
+            copied += 2 * n;
+        }
+    }
+    copies::add(copied * 4);
+    let shape = vec![bucket, khs, seq_bucket, hd];
+    (HostTensor::f32(shape.clone(), k), HostTensor::f32(shape, v))
+}
+
+/// Benches the paged arena's gather/append against the dense reference and
+/// returns the measured dense/paged copy-bytes ratio for the JSON header.
+fn bench_kv_paged(b: &mut Bench, rows: &mut Vec<Json>) -> f64 {
+    const LAYERS: usize = 1;
+    const KHS: usize = 2;
+    const HD: usize = 64;
+    const BS: usize = 16;
+    const SLOTS: usize = 8;
+    const LEN: usize = 100; // live context per slot (steady-state decode)
+    const SEQ: usize = 256; // seq bucket the kernel runs at
+    const MAX_SEQ: usize = 512;
+
+    // paged arena seeded with LEN tokens per slot
+    let mut arena = PagedKvArena::new(ArenaCfg {
+        layers: LAYERS,
+        kv_heads: KHS,
+        head_dim: HD,
+        max_seq: MAX_SEQ,
+        slots: SLOTS,
+        block_size: BS,
+        initial_blocks: SLOTS,
+    });
+    let slot_ids: Vec<u32> = (0..SLOTS as u32).collect();
+    let step = HostTensor::f32(
+        vec![SLOTS, KHS, HD],
+        (0..SLOTS * KHS * HD).map(|i| i as f32).collect(),
+    );
+    for t in 0..LEN {
+        let lens = vec![t as i32; SLOTS];
+        arena.append_step(&slot_ids, 0, &step, &step, &lens);
+    }
+
+    // dense reference seeded identically
+    let mut shards: Vec<DenseShard> = (0..SLOTS)
+        .map(|_| DenseShard { k: vec![0.0; KHS * MAX_SEQ * HD], v: vec![0.0; KHS * MAX_SEQ * HD] })
+        .collect();
+    let sd = step.as_f32();
+    for (s, shard) in shards.iter_mut().enumerate() {
+        for t in 0..LEN {
+            for h in 0..KHS {
+                let dst = h * MAX_SEQ * HD + t * HD;
+                let src = (s * KHS + h) * HD;
+                shard.k[dst..dst + HD].copy_from_slice(&sd[src..src + HD]);
+                shard.v[dst..dst + HD].copy_from_slice(&sd[src..src + HD]);
+            }
+        }
+    }
+
+    let kv_blocks = arena.stats().blocks_in_use;
+
+    let paged_ns = b
+        .run(&format!("kv/gather paged b{SLOTS} s{SEQ} (len {LEN})"), || {
+            black_box(arena.gather(&slot_ids, 0, SLOTS, SEQ));
+        })
+        .mean_s
+        * 1e9;
+    let paged_bytes = copied_bytes(|| {
+        black_box(arena.gather(&slot_ids, 0, SLOTS, SEQ));
+    });
+    rows.push(row(
+        &format!("kv/gather paged b{SLOTS} s{SEQ} (len {LEN})"),
+        paged_ns,
+        paged_bytes,
+        kv_blocks,
+    ));
+
+    let dense_ns = b
+        .run(&format!("kv/gather dense b{SLOTS} s{SEQ} (len {LEN})"), || {
+            black_box(dense_gather(&shards, &slot_ids, KHS, MAX_SEQ, HD, SLOTS, SEQ));
+        })
+        .mean_s
+        * 1e9;
+    let dense_bytes = copied_bytes(|| {
+        black_box(dense_gather(&shards, &slot_ids, KHS, MAX_SEQ, HD, SLOTS, SEQ));
+    });
+    rows.push(row(
+        &format!("kv/gather dense b{SLOTS} s{SEQ} (len {LEN})"),
+        dense_ns,
+        dense_bytes,
+        SLOTS * MAX_SEQ / BS, // dense residency in block-equivalents
+    ));
+
+    // decode-append + retire lifecycle (allocator + zeroing + writes)
+    let cycle_ns = b
+        .run("kv/append 32 tokens + retire (paged)", || {
+            let mut a = PagedKvArena::new(ArenaCfg {
+                layers: LAYERS,
+                kv_heads: KHS,
+                head_dim: HD,
+                max_seq: MAX_SEQ,
+                slots: 1,
+                block_size: BS,
+                initial_blocks: 2,
+            });
+            let one = step.take_batch(1);
+            for t in 0..32 {
+                a.append_step(&[0], 0, &one, &one, &[t]);
+            }
+            a.retire(0);
+            black_box(a.stats().blocks_in_use);
+        })
+        .mean_s
+        * 1e9;
+    rows.push(row("kv/append 32 tokens + retire (paged)", cycle_ns, 0, 0));
+
+    let ratio = dense_bytes as f64 / paged_bytes.max(1) as f64;
+    eprintln!(
+        "kv/gather host-copy bytes: dense {dense_bytes} vs paged {paged_bytes} \
+         ({ratio:.2}× fewer with paging at len {LEN}/{SEQ})"
+    );
+    ratio
+}
+
+// ---- zero-copy staging vs legacy deep-copy staging ------------------------
+
+fn bench_host_staging(b: &mut Bench, rows: &mut Vec<Json>) {
+    let t = HostTensor::f32(
+        vec![8, 4, 64],
+        (0..8 * 4 * 64).map(|i| i as f32 * 0.5).collect(),
+    );
+
+    // the seed's take_batch deep-copied; it is now an Arc view
+    let view_ns = b
+        .run("host/take_batch b8→b4 (arc view)", || {
+            black_box(t.take_batch(4));
+        })
+        .mean_s
+        * 1e9;
+    let view_bytes = copied_bytes(|| {
+        black_box(t.take_batch(4));
+    });
+    rows.push(row("host/take_batch b8→b4 (arc view)", view_ns, view_bytes, 0));
+
+    // legacy behavior, preserved here as the comparator
+    let legacy_ns = b
+        .run("host/take_batch b8→b4 (legacy deep copy)", || {
+            let row_elems = 4 * 64;
+            let d = t.as_f32()[..4 * row_elems].to_vec();
+            copies::add(d.len() * 4);
+            black_box(HostTensor::f32(vec![4, 4, 64], d));
+        })
+        .mean_s
+        * 1e9;
+    let legacy_bytes = copied_bytes(|| {
+        let row_elems = 4 * 64;
+        let d = t.as_f32()[..4 * row_elems].to_vec();
+        copies::add(d.len() * 4);
+        black_box(HostTensor::f32(vec![4, 4, 64], d));
+    });
+    rows.push(row(
+        "host/take_batch b8→b4 (legacy deep copy)",
+        legacy_ns,
+        legacy_bytes,
+        0,
+    ));
+}
+
 // ---- PJRT runtime (real artifacts) ----------------------------------------
 
 fn bench_runtime(b: &mut Bench) {
@@ -191,7 +425,7 @@ fn bench_runtime(b: &mut Bench) {
 
 // ---- end-to-end decode steps (Figs. 10/12/14 on the real stack) -----------
 
-fn bench_pipeline(b: &mut Bench) {
+fn bench_pipeline(b: &mut Bench, rows: &mut Vec<Json>) {
     for (label, overlap) in [("overlap", true), ("sequential", false)] {
         let pipe = DisaggPipeline::start(PipelineOpts {
             overlap,
@@ -202,9 +436,19 @@ fn bench_pipeline(b: &mut Bench) {
         pipe.decode(&[vec![1, 2, 3]], 2).unwrap();
         let prompts: Vec<Vec<i32>> = (0..4).map(|i| vec![1 + i, 2, 3]).collect();
         pipe.decode(&prompts, 2).unwrap();
-        b.run(&format!("e2e/decode-step b4 ({label})"), || {
+        let name = format!("e2e/decode-step b4 ({label})");
+        let ns = b
+            .run(&name, || {
+                black_box(pipe.decode(&prompts, 1).unwrap());
+            })
+            .mean_s
+            * 1e9;
+        // host bytes copied + KV blocks resident for one full decode pass
+        let copy_bytes = copied_bytes(|| {
             black_box(pipe.decode(&prompts, 1).unwrap());
         });
+        let kv = pipe.kv_stats().expect("kv stats");
+        rows.push(row(&name, ns, copy_bytes, kv.blocks_in_use));
         pipe.shutdown();
     }
 

@@ -1,0 +1,436 @@
+//! Block-paged KV arena: the attention worker's resident KV store.
+//!
+//! Replaces the seed's dense per-slot `[KH_shard, max_seq, hd]` shards
+//! (O(slots × max_seq) resident memory regardless of live context) with the
+//! PagedAttention-style layout the paper's §8 names as the composable
+//! optimisation to adopt: per layer, one contiguous K and one V buffer of
+//! `[total_blocks, KH_shard, block_size, hd]`, carved into fixed-size
+//! blocks of `block_size` token slots handed out by
+//! [`super::block::BlockAllocator`] and mapped per request slot by
+//! [`super::table::BlockTable`].
+//!
+//! Key properties:
+//! * **Resident memory scales with allocated blocks.** The arena starts
+//!   small and grows geometrically on demand (`BlockAllocator::grow` +
+//!   buffer resize); retired requests return their blocks to the pool, so
+//!   steady-state footprint tracks live context, not
+//!   `slots × max_waves × max_seq`.
+//! * **Block-granular copies.** A block's per-head region
+//!   (`block_size × hd` floats) is contiguous, so gather into the kernel's
+//!   `[bucket, KH_shard, seq_bucket, hd]` input is one `copy_from_slice`
+//!   per (row, head, block) — no element loops. Logical token order within
+//!   a head is preserved because blocks are copied in table order.
+//! * **Blocks are zeroed when (re)assigned** to a slot, so gathers are
+//!   bit-identical to a dense zero-initialised reference cache (asserted by
+//!   the `kv_paged` property test) and recycled blocks can never leak KV
+//!   across requests.
+//!
+//! Layer handling mirrors the wire protocol: one block table per slot is
+//! shared by all layers (every layer's buffer has capacity at the same
+//! block id), and the table grows exactly once per token — at `layer == 0`,
+//! where a write at position 0 also retires any stale table left by a
+//! previous occupant of the slot.
+
+use super::block::{BlockAllocator, BlockId};
+use super::table::BlockTable;
+use crate::metrics::KvCacheStats;
+use crate::runtime::host::{copies, HostTensor};
+
+/// Sentinel slot id marking a padded batch row (no backing request).
+pub const PAD_SLOT: u32 = u32::MAX;
+
+/// Arena geometry and sizing.
+#[derive(Debug, Clone, Copy)]
+pub struct ArenaCfg {
+    /// Model layers (each holds its own K/V buffer pair).
+    pub layers: usize,
+    /// KV heads *of this shard* (`kv_heads / n_shards`).
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// Hard per-request context ceiling (protocol invariant).
+    pub max_seq: usize,
+    /// Request slots addressable by the wire protocol.
+    pub slots: usize,
+    /// Token slots per block (vLLM-style, typically 16).
+    pub block_size: usize,
+    /// Blocks to preallocate (the arena grows past this on demand).
+    pub initial_blocks: usize,
+}
+
+/// Paged KV store for one attention worker (one head shard, all layers).
+#[derive(Debug)]
+pub struct PagedKvArena {
+    cfg: ArenaCfg,
+    alloc: BlockAllocator,
+    /// Per layer: K buffer `[total_blocks, kv_heads, block_size, head_dim]`.
+    k: Vec<Vec<f32>>,
+    /// Per layer: V buffer, same layout as `k`.
+    v: Vec<Vec<f32>>,
+    /// Per slot: logical-token → physical-block mapping.
+    tables: Vec<BlockTable>,
+}
+
+impl PagedKvArena {
+    pub fn new(cfg: ArenaCfg) -> Self {
+        assert!(cfg.layers > 0 && cfg.kv_heads > 0 && cfg.head_dim > 0);
+        assert!(cfg.block_size > 0, "block_size must be positive");
+        let initial = cfg.initial_blocks.max(1);
+        let elems = initial * cfg.kv_heads * cfg.block_size * cfg.head_dim;
+        PagedKvArena {
+            alloc: BlockAllocator::new(initial, cfg.block_size),
+            k: (0..cfg.layers).map(|_| vec![0.0; elems]).collect(),
+            v: (0..cfg.layers).map(|_| vec![0.0; elems]).collect(),
+            tables: vec![BlockTable::default(); cfg.slots],
+            cfg,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.cfg.block_size
+    }
+
+    /// Cached tokens currently held for `slot`.
+    pub fn len_tokens(&self, slot: u32) -> usize {
+        self.tables[slot as usize].len_tokens()
+    }
+
+    /// Bytes of K+V buffer currently resident across all layers.
+    pub fn resident_bytes(&self) -> usize {
+        2 * self.cfg.layers * self.alloc.total_blocks() * self.block_elems() * 4
+    }
+
+    /// Accounting snapshot (blocks in use, capacity, internal waste).
+    pub fn stats(&self) -> KvCacheStats {
+        let lens: Vec<usize> = self
+            .tables
+            .iter()
+            .map(|t| t.len_tokens())
+            .filter(|&l| l > 0)
+            .collect();
+        KvCacheStats {
+            blocks_in_use: self.alloc.used_blocks(),
+            total_blocks: self.alloc.total_blocks(),
+            block_size: self.cfg.block_size,
+            internal_waste_tokens: self.alloc.internal_waste(&lens),
+        }
+    }
+
+    /// Free every block owned by `slot` (request retirement). Idempotent.
+    pub fn retire(&mut self, slot: u32) {
+        let table = &mut self.tables[slot as usize];
+        table.free(&mut self.alloc);
+    }
+
+    /// Append one decode step's K/V `[bucket, KH_shard, hd]` at position
+    /// `lens[b]` for each non-pad row. At `layer == 0` the slot's table
+    /// grows (and a write at position 0 first retires any stale table).
+    pub fn append_step(
+        &mut self,
+        slots: &[u32],
+        layer: usize,
+        k: &HostTensor,
+        v: &HostTensor,
+        lens: &[i32],
+    ) {
+        let kd = k.as_f32();
+        let vd = v.as_f32();
+        let (khs, hd) = (self.cfg.kv_heads, self.cfg.head_dim);
+        for (b, &slot) in slots.iter().enumerate() {
+            if slot == PAD_SLOT {
+                continue;
+            }
+            let pos = lens[b] as usize;
+            assert!(pos < self.cfg.max_seq, "KV overflow: pos {pos} ≥ {}", self.cfg.max_seq);
+            if layer == 0 {
+                if pos == 0 {
+                    self.retire(slot);
+                }
+                self.grow_slot(slot as usize, pos + 1);
+            }
+            let (blk, off) = self.tables[slot as usize]
+                .locate(pos, self.cfg.block_size)
+                .expect("append beyond table: StepKv without layer-0 growth");
+            for h in 0..khs {
+                let dst = self.elem_offset(blk, h, off);
+                let src = (b * khs + h) * hd;
+                self.k[layer][dst..dst + hd].copy_from_slice(&kd[src..src + hd]);
+                self.v[layer][dst..dst + hd].copy_from_slice(&vd[src..src + hd]);
+            }
+        }
+    }
+
+    /// Scatter a prefill chunk's K/V `[T, KH_shard, hd]` rows `0..valid`
+    /// into `slot` at positions `cached..cached+valid`. A chunk starting at
+    /// `cached == 0` (on `layer == 0`) resets the slot first.
+    pub fn append_chunk(
+        &mut self,
+        slot: u32,
+        layer: usize,
+        k: &HostTensor,
+        v: &HostTensor,
+        cached: usize,
+        valid: usize,
+    ) {
+        let kd = k.as_f32();
+        let vd = v.as_f32();
+        let (khs, hd) = (self.cfg.kv_heads, self.cfg.head_dim);
+        assert!(cached + valid <= self.cfg.max_seq, "prefill KV overflow");
+        if layer == 0 {
+            if cached == 0 {
+                self.retire(slot);
+            }
+            self.grow_slot(slot as usize, cached + valid);
+        }
+        for i in 0..valid {
+            let (blk, off) = self.tables[slot as usize]
+                .locate(cached + i, self.cfg.block_size)
+                .expect("chunk beyond table: PrefillChunk without layer-0 growth");
+            for h in 0..khs {
+                let dst = self.elem_offset(blk, h, off);
+                let src = (i * khs + h) * hd;
+                self.k[layer][dst..dst + hd].copy_from_slice(&kd[src..src + hd]);
+                self.v[layer][dst..dst + hd].copy_from_slice(&vd[src..src + hd]);
+            }
+        }
+    }
+
+    /// Assemble the kernel's contiguous `[bucket, KH_shard, seq_bucket, hd]`
+    /// K/V inputs. Copies whole per-head block regions (`block_size × hd`
+    /// floats each); positions past a slot's allocated blocks stay zero, as
+    /// do pad rows. Copied bytes are charged to [`copies`].
+    pub fn gather(
+        &self,
+        slots: &[u32],
+        layer: usize,
+        bucket: usize,
+        seq_bucket: usize,
+    ) -> (HostTensor, HostTensor) {
+        let (khs, hd, bs) = (self.cfg.kv_heads, self.cfg.head_dim, self.cfg.block_size);
+        let row = khs * seq_bucket * hd;
+        let mut k = vec![0.0f32; bucket * row];
+        let mut v = vec![0.0f32; bucket * row];
+        let mut copied_elems = 0usize;
+        for (b, &slot) in slots.iter().enumerate() {
+            if slot == PAD_SLOT {
+                continue;
+            }
+            let table = &self.tables[slot as usize];
+            for h in 0..khs {
+                for (bi, &blk) in table.blocks().iter().enumerate() {
+                    let tok0 = bi * bs;
+                    if tok0 >= seq_bucket {
+                        break;
+                    }
+                    let n = bs.min(seq_bucket - tok0) * hd;
+                    let src = self.elem_offset(blk, h, 0);
+                    let dst = b * row + h * seq_bucket * hd + tok0 * hd;
+                    k[dst..dst + n].copy_from_slice(&self.k[layer][src..src + n]);
+                    v[dst..dst + n].copy_from_slice(&self.v[layer][src..src + n]);
+                    copied_elems += 2 * n;
+                }
+            }
+        }
+        copies::add(copied_elems * 4);
+        let shape = vec![bucket, khs, seq_bucket, hd];
+        (HostTensor::f32(shape.clone(), k), HostTensor::f32(shape, v))
+    }
+
+    // ---- internals --------------------------------------------------------
+
+    fn block_elems(&self) -> usize {
+        self.cfg.kv_heads * self.cfg.block_size * self.cfg.head_dim
+    }
+
+    /// Element offset of (block, head, token-within-block) in a layer buffer.
+    fn elem_offset(&self, blk: BlockId, head: usize, tok: usize) -> usize {
+        blk as usize * self.block_elems()
+            + head * self.cfg.block_size * self.cfg.head_dim
+            + tok * self.cfg.head_dim
+    }
+
+    /// Grow `slot`'s table to cover `tokens` positions, allocating (and
+    /// zeroing) blocks as needed; grows the arena itself when the pool runs
+    /// dry.
+    fn grow_slot(&mut self, slot: usize, tokens: usize) {
+        let need = self.alloc.blocks_for_tokens(tokens);
+        let have = self.tables[slot].blocks().len();
+        if need > have {
+            self.ensure_free(need - have);
+        }
+        let table = &mut self.tables[slot];
+        table
+            .grow_to(tokens, &mut self.alloc)
+            .expect("arena invariant: ensure_free preceded grow_to");
+        if need > have {
+            // recycled blocks carry a previous request's KV — zero them so
+            // gathers beyond the written prefix read zeros, bit-identical
+            // to a dense zero-initialised cache
+            let fresh: Vec<BlockId> = self.tables[slot].blocks()[have..].to_vec();
+            for blk in fresh {
+                self.zero_block(blk);
+            }
+        }
+    }
+
+    /// Guarantee `n` free blocks, growing the pool + buffers geometrically.
+    fn ensure_free(&mut self, n: usize) {
+        if self.alloc.can_alloc(n) {
+            return;
+        }
+        let extra = n.max(self.alloc.total_blocks() / 2).max(4);
+        self.alloc.grow(extra);
+        let elems = self.alloc.total_blocks() * self.block_elems();
+        for l in 0..self.cfg.layers {
+            self.k[l].resize(elems, 0.0);
+            self.v[l].resize(elems, 0.0);
+        }
+    }
+
+    fn zero_block(&mut self, blk: BlockId) {
+        let n = self.block_elems();
+        let start = blk as usize * n;
+        for l in 0..self.cfg.layers {
+            self.k[l][start..start + n].fill(0.0);
+            self.v[l][start..start + n].fill(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> PagedKvArena {
+        PagedKvArena::new(ArenaCfg {
+            layers: 2,
+            kv_heads: 2,
+            head_dim: 4,
+            max_seq: 64,
+            slots: 3,
+            block_size: 4,
+            initial_blocks: 2,
+        })
+    }
+
+    fn step_kv(bucket: usize, khs: usize, hd: usize, base: f32) -> HostTensor {
+        let data: Vec<f32> = (0..bucket * khs * hd).map(|i| base + i as f32).collect();
+        HostTensor::f32(vec![bucket, khs, hd], data)
+    }
+
+    #[test]
+    fn append_then_gather_roundtrips() {
+        let mut a = tiny();
+        let slots = [0u32, 1];
+        for t in 0..6 {
+            let lens = [t as i32, t as i32];
+            for layer in 0..2 {
+                let k = step_kv(2, 2, 4, (100 * layer + t) as f32);
+                let v = step_kv(2, 2, 4, (1000 * layer + t) as f32);
+                a.append_step(&slots, layer, &k, &v, &lens);
+            }
+        }
+        assert_eq!(a.len_tokens(0), 6);
+        let (k, v) = a.gather(&slots, 1, 2, 8);
+        assert_eq!(k.shape(), &[2, 2, 8, 4]);
+        // slot 0, head 0, token 3, layer 1 was written from step_kv base
+        // 100*1+3 = 103 at src offset (b=0,h=0) → values 103..107
+        let kd = k.as_f32();
+        let tok3 = &kd[3 * 4..3 * 4 + 4];
+        assert_eq!(tok3, &[103., 104., 105., 106.]);
+        // positions past len are zero
+        assert_eq!(&kd[6 * 4..8 * 4], &[0.0; 8]);
+        // v buffer is independent
+        assert_eq!(&v.as_f32()[3 * 4..3 * 4 + 4], &[1003., 1004., 1005., 1006.]);
+    }
+
+    #[test]
+    fn pad_rows_stay_zero() {
+        let mut a = tiny();
+        let k = step_kv(2, 2, 4, 5.0);
+        a.append_step(&[0, PAD_SLOT], 0, &k, &k, &[0, 0]);
+        let (g, _) = a.gather(&[PAD_SLOT, 0], 0, 2, 4);
+        let gd = g.as_f32();
+        assert!(gd[..2 * 4 * 4].iter().all(|&x| x == 0.0), "pad row must be zero");
+        assert_eq!(gd[2 * 4 * 4], 5.0); // slot 0 row follows
+    }
+
+    #[test]
+    fn grows_on_demand_and_reuses_after_retire() {
+        let mut a = tiny(); // 2 initial blocks of 4 tokens
+        let slots = [0u32];
+        for t in 0..32 {
+            let lens = [t as i32];
+            for layer in 0..2 {
+                let k = step_kv(1, 2, 4, t as f32);
+                a.append_step(&slots, layer, &k, &k, &lens);
+            }
+        }
+        let grown = a.stats();
+        assert_eq!(grown.blocks_in_use, 8); // ceil(32/4)
+        assert!(grown.total_blocks >= 8);
+        let resident = a.resident_bytes();
+
+        a.retire(0);
+        assert_eq!(a.stats().blocks_in_use, 0);
+
+        // a new occupant reuses the freed pool without further growth
+        for t in 0..32 {
+            let lens = [t as i32];
+            for layer in 0..2 {
+                let k = step_kv(1, 2, 4, -(t as f32));
+                a.append_step(&slots, layer, &k, &k, &lens);
+            }
+        }
+        assert_eq!(a.resident_bytes(), resident, "churn must not grow the arena");
+    }
+
+    #[test]
+    fn position_zero_write_resets_stale_slot() {
+        let mut a = tiny();
+        let k = step_kv(1, 2, 4, 7.0);
+        for t in 0..5 {
+            a.append_step(&[0], 0, &k, &k, &[t]);
+        }
+        assert_eq!(a.len_tokens(0), 5);
+        // new request lands on the recycled slot at position 0
+        let k2 = step_kv(1, 2, 4, 9.0);
+        a.append_step(&[0], 0, &k2, &k2, &[0]);
+        assert_eq!(a.len_tokens(0), 1);
+        let (g, _) = a.gather(&[0], 0, 1, 8);
+        let gd = g.as_f32();
+        assert_eq!(gd[0], 9.0);
+        // stale tokens 1..5 from the previous occupant must be zeroed
+        assert!(gd[4..8 * 4].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn chunk_append_matches_positions() {
+        let mut a = tiny();
+        let chunk: Vec<f32> = (0..3 * 2 * 4).map(|i| i as f32).collect();
+        let t = HostTensor::f32(vec![3, 2, 4], chunk);
+        a.append_chunk(0, 0, &t, &t, 0, 3);
+        a.append_chunk(0, 0, &t, &t, 3, 2); // only rows 0..2 valid
+        assert_eq!(a.len_tokens(0), 5);
+        let (g, _) = a.gather(&[0], 0, 1, 8);
+        let gd = g.as_f32();
+        // head 0: tokens 0..3 from chunk rows 0..3 (src stride khs*hd = 8)
+        assert_eq!(&gd[0..4], &[0., 1., 2., 3.]);
+        assert_eq!(&gd[2 * 4..2 * 4 + 4], &[16., 17., 18., 19.]);
+        // tokens 3..5 re-use chunk rows 0..2
+        assert_eq!(&gd[3 * 4..3 * 4 + 4], &[0., 1., 2., 3.]);
+        // head 1 of token 0 lands at [h=1, tok=0]
+        assert_eq!(&gd[8 * 4..8 * 4 + 4], &[4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn internal_waste_reported() {
+        let mut a = tiny(); // block_size 4
+        let k = step_kv(1, 2, 4, 0.0);
+        for t in 0..5 {
+            a.append_step(&[0], 0, &k, &k, &[t]);
+        }
+        // 5 tokens over 2 blocks → 3 wasted tail slots
+        assert_eq!(a.stats().internal_waste_tokens, 3);
+        assert_eq!(a.stats().blocks_in_use, 2);
+    }
+}

@@ -69,6 +69,16 @@ impl BlockAllocator {
         self.free.len() >= n
     }
 
+    /// Add `extra` fresh physical blocks to the pool (arena growth). New
+    /// block ids continue from the previous total, so existing id→offset
+    /// mappings stay valid; callers must extend their backing buffers to
+    /// `total_blocks()` before handing the new ids out.
+    pub fn grow(&mut self, extra: usize) {
+        let start = self.total as BlockId;
+        self.free.extend((start..start + extra as BlockId).rev());
+        self.total += extra;
+    }
+
     pub fn alloc(&mut self) -> Result<BlockId, AllocError> {
         self.free
             .pop()
@@ -160,6 +170,22 @@ mod tests {
         let a = BlockAllocator::new(10, 16);
         // 17 tokens → 2 blocks → 15 wasted; 32 tokens → 0 wasted
         assert_eq!(a.internal_waste(&[17, 32]), 15);
+    }
+
+    #[test]
+    fn grow_extends_pool_with_fresh_ids() {
+        let mut a = BlockAllocator::new(2, 8);
+        let held = a.alloc_n(2).unwrap();
+        assert!(a.alloc().is_err());
+        a.grow(3);
+        assert_eq!(a.total_blocks(), 5);
+        assert_eq!(a.free_blocks(), 3);
+        let more = a.alloc_n(3).unwrap();
+        let mut all: Vec<_> = held.iter().chain(more.iter()).copied().collect();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), 5, "grown ids must not collide");
+        assert!(more.iter().all(|&b| (b as usize) < 5));
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! KV-cache substrate: paged block allocation, per-request block tables,
-//! and the head-/request-level partitioning strategies of paper §5/Fig. 9.
+//! the block-paged arena backing the live attention workers, and the
+//! head-/request-level partitioning strategies of paper §5/Fig. 9.
 
+pub mod arena;
 pub mod block;
 pub mod partition;
 pub mod table;
 
+pub use arena::{ArenaCfg, PagedKvArena, PAD_SLOT};
 pub use block::{AllocError, BlockAllocator, BlockId};
-pub use partition::{head_level, request_level, Partition};
+pub use partition::{head_level, kv_blocks_needed, request_level, Partition};
 pub use table::{BlockTable, KvRegistry};

@@ -69,6 +69,16 @@ pub fn head_level(
     Ok(Partition { load, assignment })
 }
 
+/// KV blocks a paged arena needs to hold `seq_lens` at `block_size` tokens
+/// per block. Under head-level sharding every worker caches a head shard of
+/// *every* request, so the block count is worker-invariant (only the bytes
+/// per block shrink with the shard width) — useful for sizing
+/// `ArenaCfg::initial_blocks` and admission headroom.
+pub fn kv_blocks_needed(seq_lens: &[usize], block_size: usize) -> usize {
+    assert!(block_size > 0);
+    seq_lens.iter().map(|&l| l.div_ceil(block_size)).sum()
+}
+
 /// Request-level partitioning: requests greedily assigned (longest-first) to
 /// the least-loaded worker — the strongest reasonable baseline; still
 /// imbalanced for skewed length distributions.
@@ -146,6 +156,14 @@ mod tests {
         let p = request_level(2, &lens, 2.0).unwrap();
         let total: f64 = p.load.iter().sum();
         assert!((total - 1200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_blocks_needed_rounds_per_request() {
+        assert_eq!(kv_blocks_needed(&[], 16), 0);
+        assert_eq!(kv_blocks_needed(&[1, 16, 17], 16), 4);
+        // per-request rounding: 2×(15 tokens) needs 2 blocks, not ceil(30/16)
+        assert_eq!(kv_blocks_needed(&[15, 15], 16), 2);
     }
 
     #[test]

@@ -129,6 +129,14 @@ fn run(argv: &[String]) -> Result<(), String> {
                 fmt_duration(bd.network_s),
                 fmt_duration(bd.sched_s)
             );
+            let kv = m.kv_stats();
+            println!(
+                "kv arena:  peak {} blocks  last round {}/{} blocks  {} tokens internal waste",
+                m.kv_peak_blocks(),
+                kv.blocks_in_use,
+                kv.total_blocks,
+                kv.internal_waste_tokens
+            );
             pipe.shutdown();
             Ok(())
         }

@@ -1,7 +1,43 @@
 //! Serving metrics: token throughput, time-between-tokens (TBT), batch-size
-//! tracking, and the per-component latency breakdown of Fig. 12.
+//! tracking, the per-component latency breakdown of Fig. 12, and paged
+//! KV-cache accounting (blocks in use, capacity, internal waste) reported
+//! by the attention workers' arenas.
 
 use crate::util::stats::{Percentiles, Welford};
+
+/// Snapshot of paged KV-cache occupancy, summed across attention workers.
+///
+/// `internal_waste_tokens` is the PagedAttention-style internal
+/// fragmentation: token slots allocated in partially-filled tail blocks.
+/// External fragmentation is impossible by construction (fixed-size
+/// blocks).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvCacheStats {
+    pub blocks_in_use: usize,
+    pub total_blocks: usize,
+    pub block_size: usize,
+    pub internal_waste_tokens: usize,
+}
+
+impl KvCacheStats {
+    /// Fraction of resident blocks holding live KV.
+    pub fn utilization(&self) -> f64 {
+        if self.total_blocks == 0 {
+            0.0
+        } else {
+            self.blocks_in_use as f64 / self.total_blocks as f64
+        }
+    }
+
+    /// Sum per-worker snapshots into a pool-wide view.
+    pub fn merge(mut self, other: &KvCacheStats) -> KvCacheStats {
+        self.blocks_in_use += other.blocks_in_use;
+        self.total_blocks += other.total_blocks;
+        self.internal_waste_tokens += other.internal_waste_tokens;
+        self.block_size = self.block_size.max(other.block_size);
+        self
+    }
+}
 
 /// Latency components of one decode iteration (paper Fig. 12 categories).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -46,6 +82,8 @@ pub struct ServeMetrics {
     attn_s: Welford,
     network_s: Welford,
     sched_s: Welford,
+    kv: KvCacheStats,
+    kv_peak_blocks: usize,
 }
 
 impl ServeMetrics {
@@ -67,6 +105,22 @@ impl ServeMetrics {
 
     pub fn record_completion(&mut self, n: u64) {
         self.requests_completed += n;
+    }
+
+    /// Record a KV-arena snapshot (keeps the latest, tracks peak usage).
+    pub fn record_kv(&mut self, s: KvCacheStats) {
+        self.kv_peak_blocks = self.kv_peak_blocks.max(s.blocks_in_use);
+        self.kv = s;
+    }
+
+    /// Latest KV-arena snapshot recorded via [`Self::record_kv`].
+    pub fn kv_stats(&self) -> KvCacheStats {
+        self.kv
+    }
+
+    /// Peak KV blocks in use across all recorded snapshots.
+    pub fn kv_peak_blocks(&self) -> usize {
+        self.kv_peak_blocks
     }
 
     /// Aggregate throughput in tokens/second.
@@ -165,5 +219,48 @@ mod tests {
         let m = ServeMetrics::new();
         assert_eq!(m.throughput(), 0.0);
         assert_eq!(m.steps(), 0);
+        assert_eq!(m.kv_stats(), KvCacheStats::default());
+        assert_eq!(m.kv_peak_blocks(), 0);
+    }
+
+    #[test]
+    fn kv_stats_latest_and_peak() {
+        let mut m = ServeMetrics::new();
+        m.record_kv(KvCacheStats {
+            blocks_in_use: 10,
+            total_blocks: 16,
+            block_size: 16,
+            internal_waste_tokens: 5,
+        });
+        m.record_kv(KvCacheStats {
+            blocks_in_use: 3,
+            total_blocks: 16,
+            block_size: 16,
+            internal_waste_tokens: 1,
+        });
+        assert_eq!(m.kv_stats().blocks_in_use, 3);
+        assert_eq!(m.kv_peak_blocks(), 10);
+        assert!((m.kv_stats().utilization() - 3.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kv_stats_merge_sums_pools() {
+        let a = KvCacheStats {
+            blocks_in_use: 4,
+            total_blocks: 8,
+            block_size: 16,
+            internal_waste_tokens: 2,
+        };
+        let b = KvCacheStats {
+            blocks_in_use: 1,
+            total_blocks: 8,
+            block_size: 16,
+            internal_waste_tokens: 7,
+        };
+        let m = a.merge(&b);
+        assert_eq!(m.blocks_in_use, 5);
+        assert_eq!(m.total_blocks, 16);
+        assert_eq!(m.internal_waste_tokens, 9);
+        assert_eq!(m.block_size, 16);
     }
 }

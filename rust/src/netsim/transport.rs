@@ -7,6 +7,13 @@
 //! pacing for pure-functional tests; 1.0 reproduces the modelled latencies
 //! in wall-clock.
 //!
+//! Payloads may be zero-copy on the host side (`HostTensor` views share
+//! `Arc` buffers, so a send moves a pointer, mirroring RDMA's
+//! no-intermediate-copy property). The `bytes` argument to [`Port::send`]
+//! is therefore the *logical* wire size — callers pass
+//! `WireMsg::wire_bytes()` — and the modelled serialisation/contention
+//! charges are identical whether or not the host materialised a copy.
+//!
 //! Each link serialises its transfers (a 400 Gbps NIC is a shared resource):
 //! a send occupies the link for `bytes / effective_bw`, and deliveries are
 //! ordered accordingly — the same contention the per-device NIC model in the

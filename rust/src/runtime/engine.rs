@@ -12,8 +12,8 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, Context, Result};
 
-use super::host::HostTensor;
-use super::manifest::{EntryPoint, Manifest};
+use super::host::{Dtype, HostTensor};
+use super::manifest::Manifest;
 use super::weights::Weights;
 
 /// Compiled-executable cache key: (entry, batch bucket, seq bucket).
@@ -59,8 +59,7 @@ impl Engine {
 
     /// Pre-compile every entry point (optional warmup; otherwise lazy).
     pub fn warmup(&self) -> Result<()> {
-        let entries: Vec<EntryPoint> = self.manifest.entrypoints.clone();
-        for e in entries {
+        for e in &self.manifest.entrypoints {
             self.executable(&e.entry, e.batch, e.seq)?;
         }
         Ok(())
@@ -124,13 +123,11 @@ impl Engine {
     }
 
     fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
-        let buf = match t {
-            HostTensor::F32 { shape, data } => {
-                self.client.buffer_from_host_buffer(data, shape, None)?
-            }
-            HostTensor::I32 { shape, data } => {
-                self.client.buffer_from_host_buffer(data, shape, None)?
-            }
+        // `as_f32`/`as_i32` hand PJRT the view's slice directly — no host
+        // staging copy even when `t` is an Arc-backed view.
+        let buf = match t.dtype() {
+            Dtype::F32 => self.client.buffer_from_host_buffer(t.as_f32(), t.shape(), None)?,
+            Dtype::I32 => self.client.buffer_from_host_buffer(t.as_i32(), t.shape(), None)?,
         };
         Ok(buf)
     }

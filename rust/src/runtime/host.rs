@@ -1,63 +1,152 @@
 //! Host-side tensors: the plain-Rust representation of activations moving
 //! through the serving pipeline (and over the simulated network).
+//!
+//! Payloads are `Arc`-backed with an element offset, so a [`HostTensor`] is
+//! a cheap *view*: `clone()`, [`HostTensor::take_batch`],
+//! [`HostTensor::view_rows`] and [`HostTensor::reshape`] never touch the
+//! data. This is what makes the leader↔worker wire path zero-copy on the
+//! host side — a `WireMsg` send moves an `Arc`, not a buffer — while
+//! `netsim::transport` keeps charging the *logical* `byte_size()` to the
+//! modelled network. Operations that must materialise bytes (padding, head
+//! slicing across shard boundaries, KV gathers) report what they moved
+//! through [`copies`], so benches can prove the steady-state decode path
+//! copies nothing.
 
-/// Dense host tensor, f32 or i32 (the tiny model's artifact dtypes).
-#[derive(Debug, Clone, PartialEq)]
-pub enum HostTensor {
-    F32 { shape: Vec<usize>, data: Vec<f32> },
-    I32 { shape: Vec<usize>, data: Vec<i32> },
+use std::sync::Arc;
+
+/// Process-wide accounting of host-side tensor bytes physically copied.
+///
+/// Incremented by every deep-copying tensor op (`pad_batch`'s copy path,
+/// cross-shard head slicing, KV-cache gathers, attention-output assembly).
+/// Zero-copy views add nothing. `cargo bench` resets/reads this around the
+/// decode hot loop to report bytes-copied-per-step in `BENCH_decode.json`.
+pub mod copies {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static COPIED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+    pub fn add(bytes: usize) {
+        COPIED_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn total() -> u64 {
+        COPIED_BYTES.load(Ordering::Relaxed)
+    }
+
+    pub fn reset() {
+        COPIED_BYTES.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Element type of a [`HostTensor`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+enum Data {
+    F32(Arc<[f32]>),
+    I32(Arc<[i32]>),
+}
+
+/// Dense host tensor view, f32 or i32 (the tiny model's artifact dtypes).
+/// Cloning shares the underlying buffer.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    shape: Vec<usize>,
+    data: Data,
+    /// Element offset of this view into the shared buffer.
+    offset: usize,
 }
 
 impl HostTensor {
     pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
-        HostTensor::F32 { shape, data }
+        HostTensor { shape, data: Data::F32(data.into()), offset: 0 }
     }
 
     pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
-        HostTensor::I32 { shape, data }
+        HostTensor { shape, data: Data::I32(data.into()), offset: 0 }
     }
 
     pub fn zeros_f32(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
-        HostTensor::F32 { shape, data: vec![0.0; n] }
+        HostTensor::f32(shape, vec![0.0; n])
     }
 
-    pub fn shape(&self) -> &[usize] {
-        match self {
-            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            Data::F32(_) => Dtype::F32,
+            Data::I32(_) => Dtype::I32,
         }
     }
 
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
     pub fn len(&self) -> usize {
-        self.shape().iter().product()
+        self.shape.iter().product()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Size in bytes (for network accounting).
+    /// Size in bytes of *this view* (for network accounting).
     pub fn byte_size(&self) -> usize {
         self.len() * 4
     }
 
     pub fn as_f32(&self) -> &[f32] {
-        match self {
-            HostTensor::F32 { data, .. } => data,
+        match &self.data {
+            Data::F32(d) => &d[self.offset..self.offset + self.len()],
             _ => panic!("expected f32 tensor"),
         }
     }
 
     pub fn as_i32(&self) -> &[i32] {
-        match self {
-            HostTensor::I32 { data, .. } => data,
+        match &self.data {
+            Data::I32(d) => &d[self.offset..self.offset + self.len()],
             _ => panic!("expected i32 tensor"),
         }
     }
 
+    /// Do two tensors share the same underlying allocation?
+    pub fn shares_buffer(&self, other: &HostTensor) -> bool {
+        match (&self.data, &other.data) {
+            (Data::F32(a), Data::F32(b)) => Arc::ptr_eq(a, b),
+            (Data::I32(a), Data::I32(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+
+    /// Zero-copy view of rows `start..start + rows` of the leading dim.
+    pub fn view_rows(&self, start: usize, rows: usize) -> HostTensor {
+        let shape = self.shape();
+        assert!(!shape.is_empty() && start + rows <= shape[0]);
+        let row: usize = shape[1..].iter().product::<usize>().max(1);
+        let mut new_shape = shape.to_vec();
+        new_shape[0] = rows;
+        HostTensor {
+            shape: new_shape,
+            data: self.data.clone(),
+            offset: self.offset + start * row,
+        }
+    }
+
+    /// Zero-copy reinterpretation under a new shape (same element count).
+    pub fn reshape(&self, shape: Vec<usize>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), self.len(), "reshape element mismatch");
+        HostTensor { shape, data: self.data.clone(), offset: self.offset }
+    }
+
     /// Pad the leading (batch) dimension up to `batch`, filling zeros.
+    /// The only staging op that must copy (it appends rows); charged to
+    /// [`copies`].
     pub fn pad_batch(&self, batch: usize) -> HostTensor {
         let shape = self.shape();
         assert!(!shape.is_empty() && shape[0] <= batch);
@@ -67,37 +156,42 @@ impl HostTensor {
         let row: usize = shape[1..].iter().product::<usize>().max(1);
         let mut new_shape = shape.to_vec();
         new_shape[0] = batch;
-        match self {
-            HostTensor::F32 { data, .. } => {
-                let mut d = data.clone();
+        copies::add(self.byte_size());
+        match &self.data {
+            Data::F32(_) => {
+                let mut d = Vec::with_capacity(batch * row);
+                d.extend_from_slice(self.as_f32());
                 d.resize(batch * row, 0.0);
-                HostTensor::F32 { shape: new_shape, data: d }
+                HostTensor::f32(new_shape, d)
             }
-            HostTensor::I32 { data, .. } => {
-                let mut d = data.clone();
+            Data::I32(_) => {
+                let mut d = Vec::with_capacity(batch * row);
+                d.extend_from_slice(self.as_i32());
                 d.resize(batch * row, 0);
-                HostTensor::I32 { shape: new_shape, data: d }
+                HostTensor::i32(new_shape, d)
             }
         }
     }
 
-    /// Truncate the leading (batch) dimension down to `batch`.
+    /// Truncate the leading (batch) dimension down to `batch` — a zero-copy
+    /// view over the shared buffer.
     pub fn take_batch(&self, batch: usize) -> HostTensor {
         let shape = self.shape();
         assert!(!shape.is_empty() && shape[0] >= batch);
-        if shape[0] == batch {
-            return self.clone();
+        self.view_rows(0, batch)
+    }
+}
+
+/// Content equality (a view equals an owned tensor with the same elements).
+impl PartialEq for HostTensor {
+    fn eq(&self, other: &Self) -> bool {
+        if self.shape != other.shape {
+            return false;
         }
-        let row: usize = shape[1..].iter().product::<usize>().max(1);
-        let mut new_shape = shape.to_vec();
-        new_shape[0] = batch;
-        match self {
-            HostTensor::F32 { data, .. } => {
-                HostTensor::F32 { shape: new_shape, data: data[..batch * row].to_vec() }
-            }
-            HostTensor::I32 { data, .. } => {
-                HostTensor::I32 { shape: new_shape, data: data[..batch * row].to_vec() }
-            }
+        match (&self.data, &other.data) {
+            (Data::F32(_), Data::F32(_)) => self.as_f32() == other.as_f32(),
+            (Data::I32(_), Data::I32(_)) => self.as_i32() == other.as_i32(),
+            _ => false,
         }
     }
 }
@@ -111,6 +205,7 @@ mod tests {
         let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
         assert_eq!(t.len(), 6);
         assert_eq!(t.byte_size(), 24);
+        assert_eq!(t.dtype(), Dtype::F32);
     }
 
     #[test]
@@ -135,5 +230,73 @@ mod tests {
         let p = t.pad_batch(5);
         assert_eq!(p.as_i32(), &[7, 8, 9, 0, 0]);
         assert_eq!(p.take_batch(3).as_i32(), &[7, 8, 9]);
+    }
+
+    #[test]
+    fn take_batch_is_zero_copy_view() {
+        let t = HostTensor::f32(vec![4, 2], (0..8).map(|x| x as f32).collect());
+        let v = t.take_batch(2);
+        assert!(v.shares_buffer(&t), "take_batch must not copy");
+        assert_eq!(v.shape(), &[2, 2]);
+        assert_eq!(v.byte_size(), 16); // view-sized, not buffer-sized
+        assert_eq!(v.as_f32(), &[0., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn view_rows_offsets_into_buffer() {
+        let t = HostTensor::i32(vec![4, 2], (0..8).collect());
+        let v = t.view_rows(1, 2);
+        assert!(v.shares_buffer(&t));
+        assert_eq!(v.shape(), &[2, 2]);
+        assert_eq!(v.as_i32(), &[2, 3, 4, 5]);
+        // view of a view composes offsets
+        let vv = v.view_rows(1, 1);
+        assert_eq!(vv.as_i32(), &[4, 5]);
+        assert_eq!(vv.byte_size(), 8);
+    }
+
+    #[test]
+    fn reshape_is_zero_copy() {
+        let t = HostTensor::f32(vec![1, 2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let r = t.reshape(vec![2, 3]);
+        assert!(r.shares_buffer(&t));
+        assert_eq!(r.shape(), &[2, 3]);
+        assert_eq!(r.as_f32(), t.as_f32());
+    }
+
+    #[test]
+    fn clone_shares_buffer() {
+        let t = HostTensor::f32(vec![2, 2], vec![1., 2., 3., 4.]);
+        let c = t.clone();
+        assert!(c.shares_buffer(&t));
+        assert_eq!(c, t);
+    }
+
+    #[test]
+    fn pad_batch_on_view_materialises_view_contents() {
+        let t = HostTensor::f32(vec![4, 2], (0..8).map(|x| x as f32).collect());
+        let v = t.view_rows(1, 2); // rows 1..3
+        let p = v.pad_batch(3);
+        assert!(!p.shares_buffer(&t)); // padding must copy
+        assert_eq!(p.as_f32(), &[2., 3., 4., 5., 0., 0.]);
+    }
+
+    #[test]
+    fn equality_across_view_and_owned() {
+        let t = HostTensor::f32(vec![4, 2], (0..8).map(|x| x as f32).collect());
+        let v = t.view_rows(2, 2);
+        let owned = HostTensor::f32(vec![2, 2], vec![4., 5., 6., 7.]);
+        assert_eq!(v, owned);
+        assert_ne!(v, t.view_rows(0, 2));
+    }
+
+    #[test]
+    fn copies_counter_monotonic_on_pad() {
+        let t = HostTensor::f32(vec![2, 3], vec![1.; 6]);
+        let before = copies::total();
+        let _p = t.pad_batch(8);
+        // pad copies the source view's bytes (other tests may add more in
+        // parallel, so assert monotonically-at-least).
+        assert!(copies::total() >= before + 24);
     }
 }

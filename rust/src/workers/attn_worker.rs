@@ -4,23 +4,24 @@
 //!
 //! The worker is a thread with its own PJRT [`Engine`] (its "device"): it
 //! receives `StepQ`/`StepKv` messages over the simulated network, appends
-//! K/V into its cache shard, runs the attention kernel (full, or
-//! partial+combine in overlap mode) and ships the output shard back.
+//! K/V into its **block-paged arena** ([`PagedKvArena`]), runs the
+//! attention kernel (full, or partial+combine in overlap mode) and ships
+//! the output shard back. KV residency scales with allocated blocks — the
+//! arena grows on demand and frees a request's blocks on [`WireMsg::Retire`]
+//! — and the kernel's contiguous input is assembled with block-granular
+//! `copy_from_slice` gathers. [`WireMsg::KvStatsReq`] exposes occupancy and
+//! internal waste for `ServeMetrics`.
 
+use crate::kvcache::{ArenaCfg, PagedKvArena};
 use crate::netsim::transport::Port;
 use crate::runtime::engine::Engine;
 use crate::runtime::host::HostTensor;
 
 use super::messages::WireMsg;
 
-/// Sentinel slot id marking a padded batch row (no backing request).
-pub const PAD_SLOT: u32 = u32::MAX;
-
-/// Per-slot KV cache shard: dense `[KH_shard, max_seq, hd]` per layer.
-struct SlotCache {
-    k: Vec<f32>,
-    v: Vec<f32>,
-}
+/// Sentinel slot id marking a padded batch row (re-exported from the arena,
+/// which skips pad rows in appends and gathers).
+pub use crate::kvcache::arena::PAD_SLOT;
 
 /// Worker configuration.
 #[derive(Debug, Clone)]
@@ -30,8 +31,10 @@ pub struct AttnWorkerCfg {
     pub shard: usize,
     /// Total attention workers (must divide kv_heads).
     pub n_shards: usize,
-    /// Number of batch slots to preallocate cache for.
+    /// Number of batch slots addressable by the wire protocol.
     pub slots: usize,
+    /// Token slots per KV block in the paged arena.
+    pub kv_block_size: usize,
 }
 
 /// Run the worker loop until `Shutdown` or link closure. Intended to be the
@@ -54,7 +57,7 @@ fn worker_loop(engine: &Engine, cfg: &AttnWorkerCfg, port: &Port<WireMsg>) -> Re
     // pre-compile this shard's attention entry points (lazy compiles would
     // otherwise spike the first decode steps' latency)
     let sfx = if cfg.n_shards == 1 { String::new() } else { format!("_w{}", cfg.n_shards) };
-    for e in engine.manifest.entrypoints.clone() {
+    for e in &engine.manifest.entrypoints {
         let mine = e.entry == format!("attention{sfx}")
             || e.entry == format!("attn_prev{sfx}")
             || e.entry == format!("attn_combine{sfx}")
@@ -68,18 +71,19 @@ fn worker_loop(engine: &Engine, cfg: &AttnWorkerCfg, port: &Port<WireMsg>) -> Re
     let mc = &engine.manifest.config;
     assert_eq!(mc.kv_heads % cfg.n_shards, 0, "shards must divide kv heads");
     let khs = mc.kv_heads / cfg.n_shards;
-    let hs = mc.heads / cfg.n_shards;
     let hd = mc.head_dim;
-    let max_seq = mc.max_seq;
-    let layer_stride = khs * max_seq * hd;
 
-    // caches[slot] holds all layers contiguously: [layers, KH_s, max_seq, hd]
-    let mut caches: Vec<SlotCache> = (0..cfg.slots)
-        .map(|_| SlotCache {
-            k: vec![0.0; mc.layers * layer_stride],
-            v: vec![0.0; mc.layers * layer_stride],
-        })
-        .collect();
+    // this shard's paged KV store: all layers, every request's head shard.
+    // Starts at one block per slot and grows with live context.
+    let mut arena = PagedKvArena::new(ArenaCfg {
+        layers: mc.layers,
+        kv_heads: khs,
+        head_dim: hd,
+        max_seq: mc.max_seq,
+        slots: cfg.slots,
+        block_size: cfg.kv_block_size,
+        initial_blocks: cfg.slots.max(1),
+    });
 
     // state carried from StepQ to StepKv
     struct Pending {
@@ -109,6 +113,12 @@ fn worker_loop(engine: &Engine, cfg: &AttnWorkerCfg, port: &Port<WireMsg>) -> Re
         };
         match msg {
             WireMsg::Shutdown => return Ok(()),
+            WireMsg::Retire { slot } => arena.retire(slot),
+            WireMsg::KvStatsReq => {
+                let reply = WireMsg::KvStats { stats: arena.stats() };
+                let bytes = reply.wire_bytes();
+                port.send(reply, bytes).map_err(|e| e.to_string())?;
+            }
             WireMsg::StepQ { layer, slots, q, lens, seq_bucket, overlap } => {
                 let bucket = q.shape()[0];
                 let mut p = Pending {
@@ -122,10 +132,7 @@ fn worker_loop(engine: &Engine, cfg: &AttnWorkerCfg, port: &Port<WireMsg>) -> Re
                 };
                 if overlap {
                     // partial attention over cached tokens, before k/v exist
-                    let (kc, vc) = gather_cache(
-                        &caches, &p.slots, layer, khs, max_seq, hd, bucket, seq_bucket,
-                        layer_stride,
-                    );
+                    let (kc, vc) = arena.gather(&p.slots, layer, bucket, seq_bucket);
                     let lens_t = HostTensor::i32(vec![bucket], p.lens.clone());
                     let out = engine
                         .execute_raw(
@@ -151,10 +158,7 @@ fn worker_loop(engine: &Engine, cfg: &AttnWorkerCfg, port: &Port<WireMsg>) -> Re
                 }
                 let bucket = p.q.shape()[0];
                 // append k/v at position lens[b] for each active row
-                append_kv(
-                    &mut caches, &p.slots, layer, &k, &v, &p.lens, khs, max_seq, hd,
-                    layer_stride,
-                );
+                arena.append_step(&p.slots, layer, &k, &v, &p.lens);
                 let out = if p.overlap {
                     let (a, s, m) = p.partial.as_ref().unwrap();
                     engine
@@ -167,10 +171,7 @@ fn worker_loop(engine: &Engine, cfg: &AttnWorkerCfg, port: &Port<WireMsg>) -> Re
                         .map_err(|e| format!("attn_combine: {e:#}"))?
                         .remove(0)
                 } else {
-                    let (kc, vc) = gather_cache(
-                        &caches, &p.slots, layer, khs, max_seq, hd, bucket, p.seq_bucket,
-                        layer_stride,
-                    );
+                    let (kc, vc) = arena.gather(&p.slots, layer, bucket, p.seq_bucket);
                     let lens1: Vec<i32> = p.lens.iter().map(|&l| l + 1).collect();
                     let lens_t = HostTensor::i32(vec![bucket], lens1);
                     engine
@@ -189,19 +190,11 @@ fn worker_loop(engine: &Engine, cfg: &AttnWorkerCfg, port: &Port<WireMsg>) -> Re
             }
             WireMsg::PrefillChunk { layer, slot, q, k, v, cached, valid, seq_bucket } => {
                 let t = q.shape()[0];
-                // gather this slot's cache shard as [KH_s, S, hd]
-                let (kc_b, vc_b) = gather_cache(
-                    &caches, &[slot], layer, khs, max_seq, hd, 1, seq_bucket,
-                    layer_stride,
-                );
-                let kc = HostTensor::f32(
-                    vec![khs, seq_bucket, hd],
-                    kc_b.as_f32().to_vec(),
-                );
-                let vc = HostTensor::f32(
-                    vec![khs, seq_bucket, hd],
-                    vc_b.as_f32().to_vec(),
-                );
+                // gather this slot's cached prefix; drop the leading batch
+                // dim with a zero-copy reshape to the kernel's [KH_s, S, hd]
+                let (kc_b, vc_b) = arena.gather(&[slot], layer, 1, seq_bucket);
+                let kc = kc_b.reshape(vec![khs, seq_bucket, hd]);
+                let vc = vc_b.reshape(vec![khs, seq_bucket, hd]);
                 let lens_t = HostTensor::i32(vec![1], vec![cached]);
                 let out = engine
                     .execute_raw(
@@ -213,112 +206,12 @@ fn worker_loop(engine: &Engine, cfg: &AttnWorkerCfg, port: &Port<WireMsg>) -> Re
                     .map_err(|e| format!("prefill_attn: {e:#}"))?
                     .remove(0);
                 // append the chunk's valid K/V rows at cached.. positions
-                append_chunk_kv(
-                    &mut caches[slot as usize], layer, &k, &v, cached as usize,
-                    valid, khs, max_seq, hd, layer_stride,
-                );
+                arena.append_chunk(slot, layer, &k, &v, cached as usize, valid);
                 let bytes = out.byte_size();
                 port.send(WireMsg::AttnOut { layer, out }, bytes)
                     .map_err(|e| e.to_string())?;
             }
             other => return Err(format!("unexpected message {other:?}")),
-        }
-        let _ = hs; // (shard width is implied by artifact shapes)
-    }
-}
-
-/// Scatter a prefill chunk's K/V `[T, KH_s, hd]` rows `0..valid` into the
-/// slot cache at positions `cached..cached+valid`.
-#[allow(clippy::too_many_arguments)]
-fn append_chunk_kv(
-    cache: &mut SlotCache,
-    layer: usize,
-    k: &HostTensor,
-    v: &HostTensor,
-    cached: usize,
-    valid: usize,
-    khs: usize,
-    max_seq: usize,
-    hd: usize,
-    layer_stride: usize,
-) {
-    let kd = k.as_f32();
-    let vd = v.as_f32();
-    assert!(cached + valid <= max_seq, "prefill KV overflow");
-    for i in 0..valid {
-        for h in 0..khs {
-            let dst = layer * layer_stride + h * max_seq * hd + (cached + i) * hd;
-            let src = (i * khs + h) * hd;
-            cache.k[dst..dst + hd].copy_from_slice(&kd[src..src + hd]);
-            cache.v[dst..dst + hd].copy_from_slice(&vd[src..src + hd]);
-        }
-    }
-}
-
-/// Copy the first `seq_bucket` cached tokens of each row's shard into
-/// contiguous `[bucket, KH_s, seq_bucket, hd]` tensors for the kernel call.
-#[allow(clippy::too_many_arguments)]
-fn gather_cache(
-    caches: &[SlotCache],
-    slots: &[u32],
-    layer: usize,
-    khs: usize,
-    max_seq: usize,
-    hd: usize,
-    bucket: usize,
-    seq_bucket: usize,
-    layer_stride: usize,
-) -> (HostTensor, HostTensor) {
-    let row = khs * seq_bucket * hd;
-    let mut k = vec![0.0f32; bucket * row];
-    let mut v = vec![0.0f32; bucket * row];
-    for (b, &slot) in slots.iter().enumerate() {
-        if slot == PAD_SLOT {
-            continue; // padded row: leave zeros, masked out by lens = 0
-        }
-        let cache = &caches[slot as usize];
-        let base = layer * layer_stride;
-        for h in 0..khs {
-            let src = base + h * max_seq * hd;
-            let dst = b * row + h * seq_bucket * hd;
-            let n = seq_bucket * hd;
-            k[dst..dst + n].copy_from_slice(&cache.k[src..src + n]);
-            v[dst..dst + n].copy_from_slice(&cache.v[src..src + n]);
-        }
-    }
-    let shape = vec![bucket, khs, seq_bucket, hd];
-    (HostTensor::f32(shape.clone(), k), HostTensor::f32(shape, v))
-}
-
-/// Scatter the new token's k/v `[bucket, KH_s, hd]` into each row's cache at
-/// position `lens[b]`.
-#[allow(clippy::too_many_arguments)]
-fn append_kv(
-    caches: &mut [SlotCache],
-    slots: &[u32],
-    layer: usize,
-    k: &HostTensor,
-    v: &HostTensor,
-    lens: &[i32],
-    khs: usize,
-    max_seq: usize,
-    hd: usize,
-    layer_stride: usize,
-) {
-    let kd = k.as_f32();
-    let vd = v.as_f32();
-    for (b, &slot) in slots.iter().enumerate() {
-        if slot == PAD_SLOT {
-            continue;
-        }
-        let pos = lens[b] as usize;
-        assert!(pos < max_seq, "KV overflow: pos {pos} ≥ {max_seq}");
-        let cache = &mut caches[slot as usize];
-        for h in 0..khs {
-            let dst = layer * layer_stride + h * max_seq * hd + pos * hd;
-            let src = (b * khs + h) * hd;
-            cache.k[dst..dst + hd].copy_from_slice(&kd[src..src + hd]);
-            cache.v[dst..dst + hd].copy_from_slice(&vd[src..src + hd]);
         }
     }
 }

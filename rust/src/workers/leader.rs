@@ -12,12 +12,11 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-
-use crate::metrics::{ServeMetrics, StepBreakdown};
+use crate::metrics::{KvCacheStats, ServeMetrics, StepBreakdown};
 use crate::netsim::stack::{NetStackModel, LINE_RATE_400G};
 use crate::netsim::transport::{link, Port};
 use crate::runtime::engine::Engine;
-use crate::runtime::host::HostTensor;
+use crate::runtime::host::{copies, HostTensor};
 use crate::trace::Request;
 
 use super::attn_worker::{run_attn_worker, AttnWorkerCfg, PAD_SLOT};
@@ -44,6 +43,8 @@ pub struct PipelineOpts {
     /// Use the chunked-prefill path for prompts in `serve` (paper §5);
     /// otherwise prompts are teacher-forced through the decode path.
     pub use_prefill: bool,
+    /// Token slots per KV block in the workers' paged arenas.
+    pub kv_block_size: usize,
 }
 
 impl PipelineOpts {
@@ -58,6 +59,7 @@ impl PipelineOpts {
             warmup: true,
             max_waves: 2,
             use_prefill: true,
+            kv_block_size: 16,
         }
     }
 }
@@ -70,7 +72,7 @@ struct WorkerHandle {
 /// One wave's per-slot decode state.
 #[derive(Debug, Clone)]
 struct SlotState {
-    #[allow(dead_code)] // kept for tracing/diagnostics
+    /// Front-end request id; surfaced by `LAMINA_STEP_TRACE=1` step traces.
     request_id: u64,
     /// physical KV cache slot on the attention workers — stable for the
     /// request's lifetime (wave positions shift as requests retire).
@@ -108,7 +110,7 @@ impl DisaggPipeline {
         if opts.warmup {
             // compile only the leader-side entry points (slices); attention
             // artifacts belong to the workers' engines
-            for e in engine.manifest.entrypoints.clone() {
+            for e in &engine.manifest.entrypoints {
                 if e.entry.starts_with("slice_") {
                     engine.execute_warm(&e.entry, e.batch, e.seq)?;
                 }
@@ -142,6 +144,7 @@ impl DisaggPipeline {
                 n_shards: opts.attn_workers,
                 // distinct physical slots for every wave's requests
                 slots: opts.slots * opts.max_waves,
+                kv_block_size: opts.kv_block_size,
             };
             let thread = std::thread::Builder::new()
                 .name(format!("lamina-attn-{w}"))
@@ -206,7 +209,7 @@ impl DisaggPipeline {
         let w = self.workers.len();
         let hs = mc.heads / w;
         let hd = mc.head_dim;
-        let mut out = vec![0.0f32; bucket * mc.heads * hd];
+        let mut shards: Vec<HostTensor> = Vec::with_capacity(w);
         for (wi, worker) in self.workers.iter().enumerate() {
             let (msg, _) = worker.port.recv().map_err(|e| anyhow!(e))?;
             match msg {
@@ -214,18 +217,62 @@ impl DisaggPipeline {
                     if l != layer {
                         bail!("attention out for layer {l}, expected {layer}");
                     }
-                    let sd = shard.as_f32();
-                    for b in 0..bucket {
-                        let dst = (b * mc.heads + wi * hs) * hd;
-                        let src = b * hs * hd;
-                        out[dst..dst + hs * hd].copy_from_slice(&sd[src..src + hs * hd]);
-                    }
+                    shards.push(shard);
                 }
                 WireMsg::WorkerError { msg } => bail!("attention worker {wi}: {msg}"),
                 other => bail!("unexpected reply {other:?}"),
             }
         }
+        if w == 1 {
+            // single shard IS the full [bucket, H, hd] output — zero-copy
+            return Ok(shards.pop().unwrap());
+        }
+        // interleave head shards back into [bucket, H, hd]
+        let mut out = vec![0.0f32; bucket * mc.heads * hd];
+        for (wi, shard) in shards.iter().enumerate() {
+            let sd = shard.as_f32();
+            for b in 0..bucket {
+                let dst = (b * mc.heads + wi * hs) * hd;
+                let src = b * hs * hd;
+                out[dst..dst + hs * hd].copy_from_slice(&sd[src..src + hs * hd]);
+            }
+        }
+        copies::add(bucket * mc.heads * hd * 4);
         Ok(HostTensor::f32(vec![bucket, mc.heads, hd], out))
+    }
+
+    // ---- KV lifecycle control plane ---------------------------------------
+
+    /// Free `slot`'s KV blocks on every attention worker (request retired).
+    fn retire_slot(&self, slot: u32) -> Result<()> {
+        for worker in &self.workers {
+            let msg = WireMsg::Retire { slot };
+            let bytes = msg.wire_bytes();
+            worker.port.send(msg, bytes).map_err(|e| anyhow!(e))?;
+        }
+        Ok(())
+    }
+
+    /// Pool-wide KV-arena snapshot: polls every worker and sums the
+    /// per-shard stats (block counts add across shards; the byte size of a
+    /// block shrinks with the shard width).
+    pub fn kv_stats(&self) -> Result<KvCacheStats> {
+        for worker in &self.workers {
+            worker
+                .port
+                .send(WireMsg::KvStatsReq, 0)
+                .map_err(|e| anyhow!(e))?;
+        }
+        let mut sum = KvCacheStats::default();
+        for (wi, worker) in self.workers.iter().enumerate() {
+            let (msg, _) = worker.port.recv().map_err(|e| anyhow!(e))?;
+            match msg {
+                WireMsg::KvStats { stats } => sum = sum.merge(&stats),
+                WireMsg::WorkerError { msg } => bail!("attention worker {wi}: {msg}"),
+                other => bail!("unexpected reply {other:?}"),
+            }
+        }
+        Ok(sum)
     }
 
     // ---- one decode step for one wave -----------------------------------
@@ -261,6 +308,14 @@ impl DisaggPipeline {
             .manifest
             .seq_bucket(max_len_after)
             .ok_or_else(|| anyhow!("context {max_len_after} exceeds max seq bucket"))?;
+
+        if step_trace_enabled() {
+            let ids: Vec<u64> = active.iter().map(|&si| wave[si].request_id).collect();
+            eprintln!(
+                "[step-trace] reqs={ids:?} slots={slots:?} lens={lens:?} \
+                 bucket={bucket} seq_bucket={seq_bucket}"
+            );
+        }
 
         let tokens_t = HostTensor::i32(vec![bucket], tokens);
         let pos_t = HostTensor::i32(vec![bucket], pos);
@@ -614,6 +669,7 @@ impl DisaggPipeline {
 
             // one round: step every wave (worker threads overlap waves'
             // attention with the leader's slices of the other wave)
+            let mut retired: Vec<u32> = Vec::new();
             for (wi, ws) in waves_state.iter_mut().enumerate() {
                 let decoding = ws
                     .iter()
@@ -629,12 +685,25 @@ impl DisaggPipeline {
                 ws.retain(|s| {
                     if s.done() {
                         free_slots[wi].push(s.cache_slot); // recycle KV slot
+                        retired.push(s.cache_slot);
                         false
                     } else {
                         true
                     }
                 });
                 metrics.record_completion((before - ws.len()) as u64);
+            }
+
+            // per-round KV occupancy snapshot, taken BEFORE retiring the
+            // round's completed requests so kv_peak_blocks reflects true
+            // residency (a request that finishes in its first round must
+            // still show up in the peak)
+            metrics.record_kv(self.kv_stats()?);
+
+            // now free the finished requests' KV blocks on every worker —
+            // arena residency tracks live context, not slot capacity
+            for slot in retired {
+                self.retire_slot(slot)?;
             }
         }
         Ok(metrics)
@@ -670,6 +739,7 @@ impl DisaggPipeline {
             shard: idx,
             n_shards: self.opts.attn_workers,
             slots: self.opts.slots * self.opts.max_waves,
+            kv_block_size: self.opts.kv_block_size,
         };
         let thread = std::thread::Builder::new()
             .name(format!("lamina-attn-{idx}-r"))
@@ -697,12 +767,24 @@ impl DisaggPipeline {
     }
 }
 
-/// Slice heads `[h0, h0+n)` out of `[B, H, hd]`.
+/// `LAMINA_STEP_TRACE=1` logs every decode step's request ids, cache slots
+/// and context lengths (checked once, cached).
+fn step_trace_enabled() -> bool {
+    static ON: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ON.get_or_init(|| std::env::var_os("LAMINA_STEP_TRACE").is_some())
+}
+
+/// Slice heads `[h0, h0+n)` out of `[B, H, hd]`. The full-range slice (the
+/// single-worker steady state) is a zero-copy Arc view; a genuine shard
+/// slice must interleave rows and is charged to [`copies`].
 fn slice_heads(t: &HostTensor, h0: usize, n: usize) -> HostTensor {
     let shape = t.shape();
     assert_eq!(shape.len(), 3);
     let (b, h, hd) = (shape[0], shape[1], shape[2]);
     assert!(h0 + n <= h);
+    if h0 == 0 && n == h {
+        return t.clone();
+    }
     let src = t.as_f32();
     let mut out = vec![0.0f32; b * n * hd];
     for bi in 0..b {
@@ -710,6 +792,7 @@ fn slice_heads(t: &HostTensor, h0: usize, n: usize) -> HostTensor {
         let d = bi * n * hd;
         out[d..d + n * hd].copy_from_slice(&src[s..s + n * hd]);
     }
+    copies::add(b * n * hd * 4);
     HostTensor::f32(vec![b, n, hd], out)
 }
 

@@ -2,9 +2,14 @@
 //!
 //! These are the exact tensors the paper moves over the DCN each layer:
 //! q right after Q-Proj+RoPE (the overlap path), k/v at slice end, and the
-//! attention output back. Everything is plain host data — the bytes really
-//! cross threads via `netsim::transport`.
+//! attention output back — plus the KV lifecycle control plane (`Retire`,
+//! `KvStats*`) the paged arena needs. Tensor payloads are `Arc`-backed
+//! [`HostTensor`] views, so a send moves a pointer on the host while
+//! [`WireMsg::wire_bytes`] still charges the *logical* payload size to the
+//! simulated network — the bytes really cross threads via
+//! `netsim::transport`, and the modelled latency is unchanged.
 
+use crate::metrics::KvCacheStats;
 use crate::runtime::host::HostTensor;
 
 /// Messages on the leader↔worker link (one enum; the link is bidirectional).
@@ -34,8 +39,9 @@ pub enum WireMsg {
         v: HostTensor,
     },
     /// Chunked-prefill step for ONE request (paper §5): the worker appends
-    /// the chunk's K/V shard to the slot's cache and computes attention of
-    /// the chunk over cached-prefix + intra-chunk-causal tokens.
+    /// the chunk's K/V shard to the slot's paged cache and computes
+    /// attention of the chunk over cached-prefix + intra-chunk-causal
+    /// tokens.
     PrefillChunk {
         layer: usize,
         slot: u32,
@@ -52,6 +58,13 @@ pub enum WireMsg {
     },
     /// Attention output shard [bucket, H_shard, hd] (worker → leader).
     AttnOut { layer: usize, out: HostTensor },
+    /// The request in `slot` completed: free its KV blocks (leader →
+    /// worker). Idempotent; a later occupant of the slot re-allocates.
+    Retire { slot: u32 },
+    /// Ask for a KV-arena accounting snapshot (leader → worker).
+    KvStatsReq,
+    /// KV-arena accounting snapshot (worker → leader).
+    KvStats { stats: KvCacheStats },
     /// Worker fatal error (worker → leader).
     WorkerError { msg: String },
     /// Graceful shutdown (leader → worker).
@@ -70,6 +83,9 @@ impl WireMsg {
                 q.byte_size() + k.byte_size() + v.byte_size() + 8
             }
             WireMsg::AttnOut { out, .. } => out.byte_size(),
+            WireMsg::Retire { .. } => 4,
+            WireMsg::KvStatsReq => 0,
+            WireMsg::KvStats { .. } => 32,
             WireMsg::WorkerError { msg } => msg.len(),
             WireMsg::Shutdown => 0,
         }
@@ -93,5 +109,22 @@ mod tests {
         };
         assert_eq!(m.wire_bytes(), 4 * 4 * 16 * 4 + 16 + 16);
         assert_eq!(WireMsg::Shutdown.wire_bytes(), 0);
+        assert_eq!(WireMsg::Retire { slot: 3 }.wire_bytes(), 4);
+        assert_eq!(WireMsg::KvStatsReq.wire_bytes(), 0);
+        assert_eq!(WireMsg::KvStats { stats: KvCacheStats::default() }.wire_bytes(), 32);
+    }
+
+    #[test]
+    fn tensor_payloads_share_buffers_on_clone() {
+        // a WireMsg clone (e.g. re-send) must not deep-copy tensor payloads
+        let q = HostTensor::zeros_f32(vec![2, 2, 8]);
+        let m = WireMsg::AttnOut { layer: 0, out: q.clone() };
+        let m2 = m.clone();
+        match (&m, &m2) {
+            (WireMsg::AttnOut { out: a, .. }, WireMsg::AttnOut { out: b, .. }) => {
+                assert!(a.shares_buffer(b));
+            }
+            _ => unreachable!(),
+        }
     }
 }

@@ -1,10 +1,42 @@
-//! Worker actors of the real (tiny-model) disaggregated pipeline: the
-//! model-worker leader and the head-sharded attention workers, exchanging
-//! tensors over the paced in-process network.
+//! Worker actors of the real (tiny-model) disaggregated pipeline.
+//!
+//! The **leader** ([`leader::DisaggPipeline`]) is the paper's
+//! compute-optimised model worker: it executes the non-attention slices
+//! through PJRT and drives the decode loop. The **attention workers**
+//! ([`attn_worker`]) are the memory-optimised pool: each owns a head shard
+//! (`KH/W` KV heads) of *every* request's KV cache and runs the attention
+//! artifacts for it. Tensors cross between them over the paced in-process
+//! network (`netsim::transport`), preserving the paper's §4.2.2 Q-early
+//! overlap and §4.3 staggered-wave pipelining.
+//!
+//! # Memory: block-paged KV arenas
+//!
+//! Each worker keeps its shard in a [`crate::kvcache::PagedKvArena`] — per
+//! layer, one contiguous `[total_blocks, KH_shard, block_size, hd]` K and V
+//! buffer carved into fixed-size blocks, mapped per request slot by a
+//! `BlockTable`. Resident memory scales with **allocated blocks** (live
+//! context), not `slots × max_waves × max_seq`: the arena grows on demand
+//! and the leader frees a request's blocks with `WireMsg::Retire` the
+//! moment it completes. Kernel inputs are assembled with block-granular
+//! `copy_from_slice` gathers, and `WireMsg::KvStatsReq` feeds occupancy +
+//! internal-waste accounting into `ServeMetrics` every serve round.
+//!
+//! # Transport: zero-copy wire path
+//!
+//! `HostTensor` payloads are `Arc`-backed views, so on the steady-state
+//! decode path the leader↔worker byte path performs **no host deep-copies**:
+//! Q/K/V staging uses full-range head slices (views), `WireMsg` sends move
+//! an `Arc`, and a single worker's attention output is returned without
+//! reassembly. Only genuine shard interleaving (W > 1) and kernel staging
+//! gathers copy, and both report what they moved through
+//! `runtime::host::copies` (see `cargo bench` → `BENCH_decode.json`).
+//! Simulated-network accounting is unchanged: `wire_bytes()` still charges
+//! the logical payload size to the modelled link.
 
 pub mod attn_worker;
 pub mod leader;
 pub mod messages;
 
+pub use attn_worker::{AttnWorkerCfg, PAD_SLOT};
 pub use leader::{DisaggPipeline, PipelineOpts};
 pub use messages::WireMsg;

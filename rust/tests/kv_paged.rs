@@ -1,0 +1,278 @@
+//! Paged-KV correctness: the block-paged arena must be **bit-identical** to
+//! a dense zero-initialised reference cache under any interleaving of
+//! decode appends, prefill chunks, slot reuse and retirement — the property
+//! the live pipeline's golden tests rely on, checked here without PJRT
+//! artifacts. Uses the in-repo PRNG (no proptest offline).
+
+use lamina::kvcache::{kv_blocks_needed, ArenaCfg, PagedKvArena, PAD_SLOT};
+use lamina::runtime::host::HostTensor;
+use lamina::util::prng::Rng;
+
+const LAYERS: usize = 3;
+const KHS: usize = 2;
+const HD: usize = 4;
+const MAX_SEQ: usize = 64;
+const SLOTS: usize = 6;
+/// Keep sequences clear of MAX_SEQ so both paths stay in-protocol.
+const LEN_CAP: usize = 48;
+
+/// Dense mirror of the arena's semantics: per slot `[layers, KHS, MAX_SEQ,
+/// HD]`, zeroed on reset, written at the same positions the arena writes.
+struct DenseRef {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl DenseRef {
+    fn new() -> DenseRef {
+        let n = LAYERS * KHS * MAX_SEQ * HD;
+        DenseRef {
+            k: (0..SLOTS).map(|_| vec![0.0; n]).collect(),
+            v: (0..SLOTS).map(|_| vec![0.0; n]).collect(),
+        }
+    }
+
+    fn reset(&mut self, slot: u32) {
+        self.k[slot as usize].fill(0.0);
+        self.v[slot as usize].fill(0.0);
+    }
+
+    fn write(&mut self, slot: u32, layer: usize, pos: usize, kd: &[f32], vd: &[f32], src_row: usize) {
+        for h in 0..KHS {
+            let dst = ((layer * KHS + h) * MAX_SEQ + pos) * HD;
+            let src = (src_row * KHS + h) * HD;
+            self.k[slot as usize][dst..dst + HD].copy_from_slice(&kd[src..src + HD]);
+            self.v[slot as usize][dst..dst + HD].copy_from_slice(&vd[src..src + HD]);
+        }
+    }
+
+    fn append_step(&mut self, slots: &[u32], layer: usize, k: &HostTensor, v: &HostTensor, lens: &[i32]) {
+        let (kd, vd) = (k.as_f32(), v.as_f32());
+        for (b, &slot) in slots.iter().enumerate() {
+            if slot == PAD_SLOT {
+                continue;
+            }
+            let pos = lens[b] as usize;
+            if layer == 0 && pos == 0 {
+                self.reset(slot);
+            }
+            self.write(slot, layer, pos, kd, vd, b);
+        }
+    }
+
+    fn append_chunk(&mut self, slot: u32, layer: usize, k: &HostTensor, v: &HostTensor, cached: usize, valid: usize) {
+        let (kd, vd) = (k.as_f32(), v.as_f32());
+        if layer == 0 && cached == 0 {
+            self.reset(slot);
+        }
+        for i in 0..valid {
+            self.write(slot, layer, cached + i, kd, vd, i);
+        }
+    }
+
+    fn gather(&self, slots: &[u32], layer: usize, bucket: usize, seq: usize) -> (Vec<f32>, Vec<f32>) {
+        let row = KHS * seq * HD;
+        let mut k = vec![0.0f32; bucket * row];
+        let mut v = vec![0.0f32; bucket * row];
+        for (b, &slot) in slots.iter().enumerate() {
+            if slot == PAD_SLOT {
+                continue;
+            }
+            for h in 0..KHS {
+                let src = (layer * KHS + h) * MAX_SEQ * HD;
+                let dst = b * row + h * seq * HD;
+                let n = seq * HD;
+                k[dst..dst + n].copy_from_slice(&self.k[slot as usize][src..src + n]);
+                v[dst..dst + n].copy_from_slice(&self.v[slot as usize][src..src + n]);
+            }
+        }
+        (k, v)
+    }
+}
+
+fn rand_tensor(rng: &mut Rng, rows: usize) -> HostTensor {
+    let data: Vec<f32> = (0..rows * KHS * HD).map(|_| rng.f64() as f32).collect();
+    HostTensor::f32(vec![rows, KHS, HD], data)
+}
+
+/// Pick `n` distinct slots in random order.
+fn pick_slots(rng: &mut Rng, n: usize) -> Vec<u32> {
+    let mut all: Vec<u32> = (0..SLOTS as u32).collect();
+    rng.shuffle(&mut all);
+    all.truncate(n);
+    all
+}
+
+fn check_gather(arena: &PagedKvArena, dense: &DenseRef, rng: &mut Rng, tag: &str) {
+    let bucket = rng.usize(1, SLOTS + 1);
+    let mut slots = pick_slots(rng, bucket);
+    for s in slots.iter_mut() {
+        if rng.chance(0.15) {
+            *s = PAD_SLOT;
+        }
+    }
+    let seq = [8usize, 16, 32, 64][rng.usize(0, 4)];
+    let layer = rng.usize(0, LAYERS);
+    let (pk, pv) = arena.gather(&slots, layer, bucket, seq);
+    let (dk, dv) = dense.gather(&slots, layer, bucket, seq);
+    assert_eq!(pk.shape(), &[bucket, KHS, seq, HD], "{tag}: gather shape");
+    assert_eq!(pk.as_f32(), &dk[..], "{tag}: K diverges (layer {layer}, seq {seq})");
+    assert_eq!(pv.as_f32(), &dv[..], "{tag}: V diverges (layer {layer}, seq {seq})");
+}
+
+fn run_case(seed: u64, block_size: usize, ops: usize) {
+    let mut rng = Rng::new(seed);
+    let mut arena = PagedKvArena::new(ArenaCfg {
+        layers: LAYERS,
+        kv_heads: KHS,
+        head_dim: HD,
+        max_seq: MAX_SEQ,
+        slots: SLOTS,
+        block_size,
+        initial_blocks: 2, // force on-demand growth
+    });
+    let mut dense = DenseRef::new();
+    // the leader's view of each slot's cached length
+    let mut lens = vec![0usize; SLOTS];
+
+    for op in 0..ops {
+        let tag = format!("bs={block_size} seed={seed:#x} op={op}");
+        match rng.usize(0, 100) {
+            // decode step over a random wave
+            0..=54 => {
+                let bucket = rng.usize(1, SLOTS + 1);
+                let mut slots = pick_slots(&mut rng, bucket);
+                let mut step_lens = vec![0i32; bucket];
+                for (b, s) in slots.iter_mut().enumerate() {
+                    if rng.chance(0.2) || lens[*s as usize] + 1 > LEN_CAP {
+                        *s = PAD_SLOT;
+                    } else {
+                        step_lens[b] = lens[*s as usize] as i32;
+                    }
+                }
+                for layer in 0..LAYERS {
+                    let k = rand_tensor(&mut rng, bucket);
+                    let v = rand_tensor(&mut rng, bucket);
+                    arena.append_step(&slots, layer, &k, &v, &step_lens);
+                    dense.append_step(&slots, layer, &k, &v, &step_lens);
+                }
+                for &s in &slots {
+                    if s != PAD_SLOT {
+                        lens[s as usize] += 1;
+                    }
+                }
+            }
+            // prefill chunk (fresh or continuing)
+            55..=74 => {
+                let slot = rng.usize(0, SLOTS) as u32;
+                let cached = if rng.chance(0.5) { 0 } else { lens[slot as usize] };
+                let t = rng.usize(1, 9);
+                if cached + t > LEN_CAP {
+                    continue;
+                }
+                for layer in 0..LAYERS {
+                    let k = rand_tensor(&mut rng, t);
+                    let v = rand_tensor(&mut rng, t);
+                    arena.append_chunk(slot, layer, &k, &v, cached, t);
+                    dense.append_chunk(slot, layer, &k, &v, cached, t);
+                }
+                lens[slot as usize] = cached + t;
+            }
+            // retirement frees blocks immediately
+            75..=86 => {
+                let slot = rng.usize(0, SLOTS) as u32;
+                arena.retire(slot);
+                dense.reset(slot);
+                lens[slot as usize] = 0;
+            }
+            // slot reuse without retire: the leader just starts a new
+            // request at position 0 (decode path); the stale table must be
+            // replaced by the arena's position-0 reset
+            _ => {
+                let slot = rng.usize(0, SLOTS);
+                lens[slot] = 0;
+            }
+        }
+
+        check_gather(&arena, &dense, &mut rng, &tag);
+
+        // allocator invariant: blocks in use exactly cover cached tokens
+        let table_lens: Vec<usize> = (0..SLOTS as u32).map(|s| arena.len_tokens(s)).collect();
+        assert_eq!(
+            arena.stats().blocks_in_use,
+            kv_blocks_needed(&table_lens, block_size),
+            "{tag}: block accounting"
+        );
+    }
+}
+
+#[test]
+fn prop_paged_gather_bit_identical_to_dense() {
+    for &bs in &[1usize, 4, 16] {
+        for rep in 0..6 {
+            run_case(0x9a6ed + rep * 7919 + bs as u64, bs, 60);
+        }
+    }
+}
+
+#[test]
+fn paged_memory_scales_with_live_context_not_capacity() {
+    const BIG_MAX_SEQ: usize = 512;
+    const BIG_SLOTS: usize = 16;
+    let mut arena = PagedKvArena::new(ArenaCfg {
+        layers: 2,
+        kv_heads: KHS,
+        head_dim: HD,
+        max_seq: BIG_MAX_SEQ,
+        slots: BIG_SLOTS,
+        block_size: 16,
+        initial_blocks: BIG_SLOTS,
+    });
+    let slots: Vec<u32> = (0..BIG_SLOTS as u32).collect();
+    let k = HostTensor::zeros_f32(vec![BIG_SLOTS, KHS, HD]);
+    for t in 0..8 {
+        let lens = vec![t as i32; BIG_SLOTS];
+        for layer in 0..2 {
+            arena.append_step(&slots, layer, &k, &k, &lens);
+        }
+    }
+    // dense layout would preallocate slots × max_seq regardless of context
+    let dense_equiv = 2 * 2 * BIG_SLOTS * BIG_MAX_SEQ * KHS * HD * 4;
+    let resident = arena.resident_bytes();
+    assert!(
+        resident * 4 <= dense_equiv,
+        "paged resident {resident} not ≪ dense {dense_equiv}"
+    );
+    // and retirement returns every block
+    for s in 0..BIG_SLOTS as u32 {
+        arena.retire(s);
+    }
+    assert_eq!(arena.stats().blocks_in_use, 0);
+    assert_eq!(arena.stats().internal_waste_tokens, 0);
+}
+
+#[test]
+fn gather_truncates_consistently_when_bucket_smaller_than_context() {
+    // seq_bucket below the cached length: both caches expose exactly the
+    // first seq_bucket tokens
+    let mut arena = PagedKvArena::new(ArenaCfg {
+        layers: 1,
+        kv_heads: KHS,
+        head_dim: HD,
+        max_seq: MAX_SEQ,
+        slots: 1,
+        block_size: 4,
+        initial_blocks: 1,
+    });
+    let mut dense = DenseRef::new();
+    let mut rng = Rng::new(0x7b1234);
+    for t in 0..20 {
+        let k = rand_tensor(&mut rng, 1);
+        let v = rand_tensor(&mut rng, 1);
+        arena.append_step(&[0], 0, &k, &v, &[t]);
+        dense.append_step(&[0], 0, &k, &v, &[t]);
+    }
+    let (pk, _) = arena.gather(&[0], 0, 1, 8);
+    let (dk, _) = dense.gather(&[0], 0, 1, 8);
+    assert_eq!(pk.as_f32(), &dk[..]);
+}

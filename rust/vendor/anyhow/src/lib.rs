@@ -1,0 +1,141 @@
+//! Vendored minimal subset of the `anyhow` API.
+//!
+//! The offline build environment carries no crates.io registry, so Lamina
+//! ships the slice of `anyhow` it actually uses: an opaque string-backed
+//! [`Error`], the [`Result`] alias, the [`anyhow!`]/[`bail!`] macros, and
+//! the [`Context`] extension trait. Semantics match upstream closely enough
+//! for this crate's usage: `?` converts any `std::error::Error` into
+//! [`Error`], and `context`/`with_context` prefix the message.
+
+use std::fmt;
+
+/// Opaque error: a rendered message (the upstream version keeps the source
+/// chain; this shim renders eagerly, which is all Lamina's callers need).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` (chain formatting upstream) degrades to the plain message.
+        write!(f, "{}", self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error` —
+// exactly like upstream — so this blanket `From` is coherent and `?` works
+// on any std error type.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — the crate-wide fallible return type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, mirroring upstream's `Context` trait.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(,)?) => { $crate::Error::msg(format!($fmt)) };
+    ($fmt:literal, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::anyhow!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let e: Error = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        let e: Error = anyhow!(String::from("plain"));
+        assert_eq!(e.to_string(), "plain");
+
+        let r: std::result::Result<(), &str> = Err("inner");
+        let c = r.context("outer").unwrap_err();
+        assert_eq!(c.to_string(), "outer: inner");
+        let r: std::result::Result<(), &str> = Err("inner");
+        let c = r.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(c.to_string(), "outer 1: inner");
+
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert_eq!(f(true).unwrap_err().to_string(), "flag was true");
+    }
+
+    #[test]
+    fn alternate_format_is_safe() {
+        let e: Error = anyhow!("msg");
+        assert_eq!(format!("{e:#}"), "msg");
+        assert_eq!(format!("{e:?}"), "msg");
+    }
+}
