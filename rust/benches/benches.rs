@@ -7,10 +7,12 @@
 //!   * attention-exec benches  → Fig. 3 (kernel-side cost vs batch/seq)
 //!   * overlap on/off bench    → Fig. 14
 //!   * transport benches       → Fig. 13
+//!   * net codec + TCP benches → frame encode/decode GB/s, loopback RTT
 //!   * simulator benches       → Figs. 10–12 regeneration cost
 //!   * coordinator micro       → batcher/KV/min-cut/pipeline hot paths
-//!   * paged-KV hot loop       → gather/append vs a dense reference cache,
-//!     plus zero-copy staging vs legacy deep-copy staging
+//!   * paged-KV hot loop       → gather/append vs a dense reference cache
+//!     (with and without gather-scratch reuse), plus zero-copy staging vs
+//!     legacy deep-copy staging
 //!
 //! Env: LAMINA_BENCH_QUICK=1 shrinks budgets (CI smoke).
 //!
@@ -23,6 +25,7 @@ use lamina::coordinator::batcher::ContinuousBatcher;
 use lamina::coordinator::sim::{run_lamina, wave_cost, LaminaConfig};
 use lamina::devices::specs::{H100, H20, LLAMA3_70B};
 use lamina::kvcache::{ArenaCfg, BlockAllocator, KvRegistry, PagedKvArena};
+use lamina::net::{codec, tcp, Transport};
 use lamina::netsim::stack::{FHBN, LINE_RATE_400G};
 use lamina::netsim::transport::link;
 use lamina::opgraph::builder::{build_decode_graph, llama3_70b_shape, tiny_shape};
@@ -33,7 +36,7 @@ use lamina::runtime::host::{copies, HostTensor};
 use lamina::trace::{fixed_length, synthesize, AZURE_CONV};
 use lamina::util::bench::{black_box, Bench};
 use lamina::util::json::Json;
-use lamina::workers::{DisaggPipeline, PipelineOpts};
+use lamina::workers::{DisaggPipeline, PipelineOpts, WireMsg};
 
 fn artifacts_dir() -> std::path::PathBuf {
     std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -56,6 +59,16 @@ fn row(name: &str, ns_per_iter: f64, copy_bytes: u64, kv_blocks: usize) -> Json 
     ])
 }
 
+/// A net-path row: wire bytes moved per iteration + derived GB/s.
+fn row_net(name: &str, ns_per_iter: f64, wire_bytes: usize) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("ns_per_iter", Json::num(ns_per_iter)),
+        ("wire_bytes_per_iter", Json::num(wire_bytes as f64)),
+        ("gb_per_s", Json::num(wire_bytes as f64 / ns_per_iter.max(1.0))),
+    ])
+}
+
 fn main() {
     let mut b = Bench::new();
     let mut rows: Vec<Json> = Vec::new();
@@ -63,6 +76,7 @@ fn main() {
     bench_coordinator(&mut b);
     bench_opgraph(&mut b);
     bench_transport(&mut b);
+    bench_net(&mut b, &mut rows);
     bench_simulators(&mut b);
     let gather_ratio = bench_kv_paged(&mut b, &mut rows);
     bench_host_staging(&mut b, &mut rows);
@@ -164,6 +178,84 @@ fn bench_transport(b: &mut Bench) {
         let sizes = lamina::netsim::pingpong::default_sizes();
         black_box(lamina::netsim::pingpong::sweep(&sizes, LINE_RATE_400G));
     });
+}
+
+// ---- net: frame codec + real-socket loopback ------------------------------
+
+/// Codec encode/decode throughput on decode-sized payloads and TCP-loopback
+/// round-trips over serialized frames. All rows land in `BENCH_decode.json`
+/// with `wire_bytes_per_iter`/`gb_per_s` so codec and socket-path perf is
+/// tracked across PRs alongside the decode benches.
+fn bench_net(b: &mut Bench, rows: &mut Vec<Json>) {
+    // StepKv with 2 × [32, 8, 64] f32 tensors (128 KiB of payload), the
+    // shape class the per-layer decode wire carries
+    let t = HostTensor::f32(
+        vec![32, 8, 64],
+        (0..32 * 8 * 64).map(|i| (i % 251) as f32 * 0.5).collect(),
+    );
+    let msg = WireMsg::StepKv { layer: 0, k: t.clone(), v: t.clone() };
+    let mut frame = Vec::new();
+    let frame_len = codec::encode(&msg, &mut frame);
+
+    let mut scratch: Vec<u8> = Vec::with_capacity(frame_len);
+    let enc_ns = b
+        .run("net/codec encode StepKv 128KiB", || {
+            scratch.clear();
+            black_box(codec::encode(&msg, &mut scratch));
+        })
+        .mean_s
+        * 1e9;
+    rows.push(row_net("net/codec encode StepKv 128KiB", enc_ns, frame_len));
+
+    let dec_ns = b
+        .run("net/codec decode StepKv 128KiB", || {
+            black_box(codec::decode_frame(&frame).unwrap().unwrap());
+        })
+        .mean_s
+        * 1e9;
+    rows.push(row_net("net/codec decode StepKv 128KiB", dec_ns, frame_len));
+
+    // TCP loopback round-trip through real kernel sockets (serialized both
+    // ways; the echo peer is a thread, as the attention workers are)
+    let (leader, worker) = tcp::pair().expect("tcp loopback pair");
+    let echo = std::thread::spawn(move || loop {
+        match worker.recv() {
+            Ok(WireMsg::Shutdown) | Err(_) => return,
+            Ok(m) => {
+                if worker.send(m).is_err() {
+                    return;
+                }
+            }
+        }
+    });
+
+    let ctl = WireMsg::Retire { slot: 3 };
+    let ctl_bytes = codec::encoded_len(&ctl);
+    let ctl_ns = b
+        .run("net/tcp loopback rtt control (16 B)", || {
+            leader.send(ctl.clone()).unwrap();
+            black_box(leader.recv().unwrap());
+        })
+        .mean_s
+        * 1e9;
+    rows.push(row_net("net/tcp loopback rtt control (16 B)", ctl_ns, 2 * ctl_bytes));
+
+    let out = WireMsg::AttnOut {
+        layer: 0,
+        out: HostTensor::f32(vec![8, 8, 64], vec![0.25; 8 * 8 * 64]),
+    };
+    let out_bytes = codec::encoded_len(&out);
+    let out_ns = b
+        .run("net/tcp loopback rtt AttnOut (16 KiB)", || {
+            leader.send(out.clone()).unwrap();
+            black_box(leader.recv().unwrap());
+        })
+        .mean_s
+        * 1e9;
+    rows.push(row_net("net/tcp loopback rtt AttnOut (16 KiB)", out_ns, 2 * out_bytes));
+
+    leader.send(WireMsg::Shutdown).unwrap();
+    echo.join().unwrap();
 }
 
 // ---- paper-scale simulators (one per serving figure) ----------------------
@@ -285,6 +377,23 @@ fn bench_kv_paged(b: &mut Bench, rows: &mut Vec<Json>) -> f64 {
         paged_bytes,
         kv_blocks,
     ));
+
+    // same gather with scratch reuse disabled: measures the per-step
+    // [bucket, KH_s, seq, hd] allocation cost the reuse removes
+    arena.set_scratch_reuse(false);
+    let fresh_ns = b
+        .run(&format!("kv/gather paged b{SLOTS} s{SEQ} (no scratch reuse)"), || {
+            black_box(arena.gather(&slot_ids, 0, SLOTS, SEQ));
+        })
+        .mean_s
+        * 1e9;
+    rows.push(row(
+        &format!("kv/gather paged b{SLOTS} s{SEQ} (no scratch reuse)"),
+        fresh_ns,
+        paged_bytes,
+        kv_blocks,
+    ));
+    arena.set_scratch_reuse(true);
 
     let dense_ns = b
         .run(&format!("kv/gather dense b{SLOTS} s{SEQ} (len {LEN})"), || {

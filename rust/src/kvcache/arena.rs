@@ -19,7 +19,11 @@
 //!   (`block_size × hd` floats) is contiguous, so gather into the kernel's
 //!   `[bucket, KH_shard, seq_bucket, hd]` input is one `copy_from_slice`
 //!   per (row, head, block) — no element loops. Logical token order within
-//!   a head is preserved because blocks are copied in table order.
+//!   a head is preserved because blocks are copied in table order. Gather
+//!   *output* buffers are recycled across steps: the arena keeps the last
+//!   `[bucket, KH_s, seq, hd]` pair and rewrites it in place once the
+//!   caller has dropped the previous result (no per-step allocation on the
+//!   steady-state decode path).
 //! * **Blocks are zeroed when (re)assigned** to a slot, so gathers are
 //!   bit-identical to a dense zero-initialised reference cache (asserted by
 //!   the `kv_paged` property test) and recycled blocks can never leak KV
@@ -30,6 +34,8 @@
 //! block id), and the table grows exactly once per token — at `layer == 0`,
 //! where a write at position 0 also retires any stale table left by a
 //! previous occupant of the slot.
+
+use std::sync::Arc;
 
 use super::block::{BlockAllocator, BlockId};
 use super::table::BlockTable;
@@ -68,6 +74,15 @@ pub struct PagedKvArena {
     v: Vec<Vec<f32>>,
     /// Per slot: logical-token → physical-block mapping.
     tables: Vec<BlockTable>,
+    /// Reusable gather output buffers (K, V). A gather hands the caller an
+    /// `Arc` view of these; once the caller drops it (after the attention
+    /// kernel consumed the input) the allocation is unique again and the
+    /// next gather rewrites it in place instead of allocating fresh
+    /// `[bucket, KH_s, seq, hd]` vectors every step.
+    scratch: Option<(Arc<[f32]>, Arc<[f32]>)>,
+    /// Scratch reuse toggle (on by default; benches flip it to measure the
+    /// allocation cost it removes).
+    reuse_scratch: bool,
 }
 
 impl PagedKvArena {
@@ -81,7 +96,18 @@ impl PagedKvArena {
             k: (0..cfg.layers).map(|_| vec![0.0; elems]).collect(),
             v: (0..cfg.layers).map(|_| vec![0.0; elems]).collect(),
             tables: vec![BlockTable::default(); cfg.slots],
+            scratch: None,
+            reuse_scratch: true,
             cfg,
+        }
+    }
+
+    /// Enable/disable gather-scratch reuse (on by default). Disabling also
+    /// drops any cached buffer; used by benches to measure the effect.
+    pub fn set_scratch_reuse(&mut self, on: bool) {
+        self.reuse_scratch = on;
+        if !on {
+            self.scratch = None;
         }
     }
 
@@ -198,8 +224,14 @@ impl PagedKvArena {
     /// K/V inputs. Copies whole per-head block regions (`block_size × hd`
     /// floats each); positions past a slot's allocated blocks stay zero, as
     /// do pad rows. Copied bytes are charged to [`copies`].
+    ///
+    /// The output buffers come from a reusable scratch pair: when the
+    /// previous gather's tensors have been dropped, their allocation is
+    /// recycled in place (no per-step `vec![0.0; bucket*row]`); if the
+    /// caller still holds them (or reuse is disabled) fresh buffers are
+    /// allocated, so returned tensors are never aliased while live.
     pub fn gather(
-        &self,
+        &mut self,
         slots: &[u32],
         layer: usize,
         bucket: usize,
@@ -207,32 +239,55 @@ impl PagedKvArena {
     ) -> (HostTensor, HostTensor) {
         let (khs, hd, bs) = (self.cfg.kv_heads, self.cfg.head_dim, self.cfg.block_size);
         let row = khs * seq_bucket * hd;
-        let mut k = vec![0.0f32; bucket * row];
-        let mut v = vec![0.0f32; bucket * row];
+        let needed = bucket * row;
+        let (mut ka, mut va) = self.take_scratch(needed);
         let mut copied_elems = 0usize;
-        for (b, &slot) in slots.iter().enumerate() {
-            if slot == PAD_SLOT {
-                continue;
-            }
-            let table = &self.tables[slot as usize];
-            for h in 0..khs {
-                for (bi, &blk) in table.blocks().iter().enumerate() {
-                    let tok0 = bi * bs;
-                    if tok0 >= seq_bucket {
-                        break;
+        {
+            let k = &mut Arc::get_mut(&mut ka).expect("gather scratch uniquely owned")[..needed];
+            let v = &mut Arc::get_mut(&mut va).expect("gather scratch uniquely owned")[..needed];
+            k.fill(0.0);
+            v.fill(0.0);
+            for (b, &slot) in slots.iter().enumerate() {
+                if slot == PAD_SLOT {
+                    continue;
+                }
+                let table = &self.tables[slot as usize];
+                for h in 0..khs {
+                    for (bi, &blk) in table.blocks().iter().enumerate() {
+                        let tok0 = bi * bs;
+                        if tok0 >= seq_bucket {
+                            break;
+                        }
+                        let n = bs.min(seq_bucket - tok0) * hd;
+                        let src = self.elem_offset(blk, h, 0);
+                        let dst = b * row + h * seq_bucket * hd + tok0 * hd;
+                        k[dst..dst + n].copy_from_slice(&self.k[layer][src..src + n]);
+                        v[dst..dst + n].copy_from_slice(&self.v[layer][src..src + n]);
+                        copied_elems += 2 * n;
                     }
-                    let n = bs.min(seq_bucket - tok0) * hd;
-                    let src = self.elem_offset(blk, h, 0);
-                    let dst = b * row + h * seq_bucket * hd + tok0 * hd;
-                    k[dst..dst + n].copy_from_slice(&self.k[layer][src..src + n]);
-                    v[dst..dst + n].copy_from_slice(&self.v[layer][src..src + n]);
-                    copied_elems += 2 * n;
                 }
             }
         }
         copies::add(copied_elems * 4);
         let shape = vec![bucket, khs, seq_bucket, hd];
-        (HostTensor::f32(shape.clone(), k), HostTensor::f32(shape, v))
+        let kt = HostTensor::f32_arc(shape.clone(), Arc::clone(&ka));
+        let vt = HostTensor::f32_arc(shape, Arc::clone(&va));
+        if self.reuse_scratch {
+            self.scratch = Some((ka, va));
+        }
+        (kt, vt)
+    }
+
+    /// Hand back the cached scratch pair when it is big enough and no
+    /// outstanding tensor still references it; otherwise allocate fresh.
+    fn take_scratch(&mut self, elems: usize) -> (Arc<[f32]>, Arc<[f32]>) {
+        if let Some((k, v)) = self.scratch.take() {
+            if Arc::strong_count(&k) == 1 && Arc::strong_count(&v) == 1 && k.len() >= elems {
+                return (k, v);
+            }
+        }
+        let fresh = || std::iter::repeat(0.0f32).take(elems).collect::<Arc<[f32]>>();
+        (fresh(), fresh())
     }
 
     // ---- internals --------------------------------------------------------
@@ -420,6 +475,53 @@ mod tests {
         assert_eq!(&gd[3 * 4..3 * 4 + 4], &[0., 1., 2., 3.]);
         // head 1 of token 0 lands at [h=1, tok=0]
         assert_eq!(&gd[8 * 4..8 * 4 + 4], &[4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn gather_scratch_reused_after_drop_and_safe_while_held() {
+        let mut a = tiny();
+        let k = step_kv(2, 2, 4, 3.0);
+        a.append_step(&[0, 1], 0, &k, &k, &[0, 0]);
+
+        let (g1, _) = a.gather(&[0, 1], 0, 2, 8);
+        let snapshot = g1.as_f32().to_vec();
+
+        // a second gather while g1 is live must NOT clobber it (the cached
+        // scratch is still referenced, so a fresh buffer is allocated —
+        // and that fresh buffer becomes the new cached scratch)
+        let (g2, _) = a.gather(&[0, 1], 0, 2, 8);
+        let ptr2 = g2.as_f32().as_ptr();
+        assert!(!g2.shares_buffer(&g1), "live gather results must not alias");
+        assert_eq!(g1.as_f32(), &snapshot[..], "held result untouched");
+        assert_eq!(g2.as_f32(), g1.as_f32());
+
+        // once both are dropped, the cached allocation is recycled in place
+        drop(g1);
+        drop(g2);
+        let (g3, _) = a.gather(&[0, 1], 0, 2, 8);
+        let reused = std::ptr::eq(g3.as_f32().as_ptr(), ptr2);
+        assert!(reused, "dropped scratch must be reused");
+        assert_eq!(g3.as_f32(), &snapshot[..]);
+
+        // disabling reuse goes back to fresh allocations (still correct)
+        drop(g3);
+        a.set_scratch_reuse(false);
+        let (g4, _) = a.gather(&[0, 1], 0, 2, 8);
+        assert_eq!(g4.as_f32(), &snapshot[..]);
+    }
+
+    #[test]
+    fn gather_scratch_grows_with_request() {
+        let mut a = tiny();
+        let k = step_kv(1, 2, 4, 1.0);
+        a.append_step(&[0], 0, &k, &k, &[0]);
+        let (small, _) = a.gather(&[0], 0, 1, 4);
+        drop(small);
+        // bigger gather than the cached scratch: must grow, stay correct
+        let (big, _) = a.gather(&[0, PAD_SLOT, 0], 0, 3, 16);
+        assert_eq!(big.shape(), &[3, 2, 16, 4]);
+        assert_eq!(big.as_f32()[0], 1.0);
+        assert!(big.as_f32()[2 * 16 * 4..4 * 16 * 4].iter().all(|&x| x == 0.0));
     }
 
     #[test]

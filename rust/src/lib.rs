@@ -22,6 +22,7 @@ pub mod devices;
 pub mod figures;
 pub mod kvcache;
 pub mod metrics;
+pub mod net;
 pub mod netsim;
 pub mod opgraph;
 pub mod runtime;

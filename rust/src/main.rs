@@ -11,6 +11,7 @@
 //! --workers N, --no-overlap, --waves N, --stack NAME, --time-scale X.
 
 use lamina::figures;
+use lamina::net::TransportKind;
 use lamina::netsim::stack::stack_by_name;
 use lamina::trace::{synthesize, trace_by_name, Request};
 use lamina::util::cli::Args;
@@ -29,19 +30,27 @@ experiments (analytical, paper-scale):
 
 real pipeline (tiny model, PJRT end-to-end):
   decode  --prompt 1,7,42 --steps 16 [--workers N] [--no-overlap]
+          [--transport inproc|tcp]
   serve   [--trace azure-conv] [--requests N] [--waves N]
           [--stack fhbn|nccl|nccl-nogdr|gloo] [--time-scale X]
+          [--transport inproc|tcp] [--kv-budget BLOCKS]
 
 flags:
   --requests N     trace subsample size for simulations (default 1000)
   --seed S         workload seed (default 42)
   --results DIR    where experiment JSON lands (default results/)
   --artifacts DIR  AOT artifact dir (default artifacts/)
+  --transport T    leader↔worker wire: inproc (paced channel, modelled
+                   bytes) or tcp (real loopback sockets, serialized frames,
+                   measured-vs-logical byte report)  (default inproc)
+  --kv-budget N    per-worker KV block budget; admission defers requests
+                   that would overflow it (default: unlimited)
 ";
 
 const SPEC: &[&str] = &[
     "requests!", "seed!", "results!", "artifacts!", "workers!", "no-overlap",
-    "waves!", "stack!", "time-scale!", "prompt!", "steps!", "trace!", "help",
+    "waves!", "stack!", "time-scale!", "prompt!", "steps!", "trace!",
+    "transport!", "kv-budget!", "help",
 ];
 
 fn main() {
@@ -137,6 +146,40 @@ fn run(argv: &[String]) -> Result<(), String> {
                 kv.total_blocks,
                 kv.internal_waste_tokens
             );
+            if m.deferred_admissions() > 0 {
+                println!("kv admission: {} deferrals (budget back-pressure)", m.deferred_admissions());
+            }
+            // measured-vs-logical wire accounting, per message class
+            let transport = pipe.transport();
+            let wt = m.wire_stats().total();
+            println!(
+                "wire [{}]: {} msgs  logical {} B  serialized {} B",
+                transport.name(),
+                wt.msgs,
+                wt.logical_bytes,
+                wt.serialized_bytes
+            );
+            for (class, c) in m.wire_stats().iter() {
+                if c.msgs == 0 {
+                    continue;
+                }
+                let overhead = if c.serialized_bytes > 0 && c.logical_bytes > 0 {
+                    format!(
+                        "  (+{:.2}% vs wire_bytes model)",
+                        (c.serialized_bytes as f64 / c.logical_bytes as f64 - 1.0) * 100.0
+                    )
+                } else {
+                    String::new()
+                };
+                println!(
+                    "  {:<9} {:>7} msgs  logical {:>12} B  serialized {:>12} B{}",
+                    class.name(),
+                    c.msgs,
+                    c.logical_bytes,
+                    c.serialized_bytes,
+                    overhead
+                );
+            }
             pipe.shutdown();
             Ok(())
         }
@@ -156,6 +199,13 @@ fn pipeline_opts(args: &Args, artifacts: &str) -> Result<PipelineOpts, String> {
     opts.time_scale = args.f64_or("time-scale", 0.0).map_err(|e| e.to_string())?;
     if let Some(name) = args.get("stack") {
         opts.stack = stack_by_name(name).ok_or_else(|| format!("unknown stack '{name}'"))?;
+    }
+    if let Some(t) = args.get("transport") {
+        opts.transport = TransportKind::parse(t)
+            .ok_or_else(|| format!("unknown transport '{t}' (use inproc|tcp)"))?;
+    }
+    if args.has("kv-budget") {
+        opts.kv_block_budget = Some(args.usize_or("kv-budget", 0).map_err(|e| e.to_string())?);
     }
     Ok(opts)
 }

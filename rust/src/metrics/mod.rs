@@ -1,8 +1,10 @@
 //! Serving metrics: token throughput, time-between-tokens (TBT), batch-size
-//! tracking, the per-component latency breakdown of Fig. 12, and paged
+//! tracking, the per-component latency breakdown of Fig. 12, paged
 //! KV-cache accounting (blocks in use, capacity, internal waste) reported
-//! by the attention workers' arenas.
+//! by the attention workers' arenas, and per-message-class wire accounting
+//! (logical `wire_bytes()` model vs measured serialized frame bytes).
 
+use crate::net::WireStats;
 use crate::util::stats::{Percentiles, Welford};
 
 /// Snapshot of paged KV-cache occupancy, summed across attention workers.
@@ -84,6 +86,8 @@ pub struct ServeMetrics {
     sched_s: Welford,
     kv: KvCacheStats,
     kv_peak_blocks: usize,
+    wire: WireStats,
+    deferred_admissions: u64,
 }
 
 impl ServeMetrics {
@@ -121,6 +125,27 @@ impl ServeMetrics {
     /// Peak KV blocks in use across all recorded snapshots.
     pub fn kv_peak_blocks(&self) -> usize {
         self.kv_peak_blocks
+    }
+
+    /// Sum a transport endpoint's wire counters into this run's totals.
+    pub fn record_wire(&mut self, s: &WireStats) {
+        self.wire.merge(s);
+    }
+
+    /// Per-message-class wire traffic: logical (modelled) bytes next to
+    /// measured serialized bytes (non-zero only on serializing transports).
+    pub fn wire_stats(&self) -> &WireStats {
+        &self.wire
+    }
+
+    /// Count one admission the KV budget deferred to a later round.
+    pub fn record_deferred_admission(&mut self) {
+        self.deferred_admissions += 1;
+    }
+
+    /// Admissions deferred by leader-side KV admission control.
+    pub fn deferred_admissions(&self) -> u64 {
+        self.deferred_admissions
     }
 
     /// Aggregate throughput in tokens/second.
@@ -221,6 +246,22 @@ mod tests {
         assert_eq!(m.steps(), 0);
         assert_eq!(m.kv_stats(), KvCacheStats::default());
         assert_eq!(m.kv_peak_blocks(), 0);
+        assert_eq!(m.wire_stats().total().msgs, 0);
+        assert_eq!(m.deferred_admissions(), 0);
+    }
+
+    #[test]
+    fn wire_and_deferral_accounting() {
+        use crate::net::MsgClass;
+        let mut m = ServeMetrics::new();
+        let mut w = WireStats::new();
+        w.record(MsgClass::StepKv, 1000, 1040);
+        m.record_wire(&w);
+        m.record_wire(&w);
+        let c = m.wire_stats().class(MsgClass::StepKv);
+        assert_eq!((c.msgs, c.logical_bytes, c.serialized_bytes), (2, 2000, 2080));
+        m.record_deferred_admission();
+        assert_eq!(m.deferred_admissions(), 1);
     }
 
     #[test]

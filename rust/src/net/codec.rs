@@ -1,0 +1,539 @@
+//! Versioned, length-prefixed binary frame codec for [`WireMsg`].
+//!
+//! This is the byte format both real-socket endpoints speak. One message =
+//! one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic           0x1A31 (LE) — stream resync guard
+//! 2       1     version         FORMAT_VERSION (currently 1)
+//! 3       1     msg type tag    0..=8, one per WireMsg variant
+//! 4       4     payload length  u32 LE (bytes after the 12-byte header)
+//! 8       4     checksum        u32 LE, FNV-1a over version ‖ tag ‖ payload
+//! 12      n     payload         variant-specific, all integers LE
+//! ```
+//!
+//! The checksum covers the version and tag bytes as well as the payload, so
+//! a corrupted tag (which would re-interpret the payload under the wrong
+//! schema) is rejected as `BadChecksum` rather than mis-parsed.
+//!
+//! **Tensor encoding.** A [`HostTensor`] payload is `dtype:u8` (0 = f32,
+//! 1 = i32), `ndim:u8`, `ndim × u32` dims, then the raw element bytes
+//! (4 bytes each, LE). Decoding builds the element buffer *directly* as an
+//! `Arc`-backed allocation (`chunks_exact(4) → collect::<Arc<[f32]>>()`),
+//! so the wire path is one copy in — receive buffer → tensor — and
+//! zero-copy from there on (every later send/clone moves the `Arc`).
+//!
+//! **Streaming.** [`decode_frame`] is incremental: given a prefix of the
+//! byte stream it returns `Ok(None)` ("need more bytes") until a full frame
+//! is buffered, which is what lets the TCP transport keep a partial frame
+//! across read timeouts without losing sync. All decode failures are typed
+//! [`CodecError`]s — corrupt input can never panic (bounds, dims, element
+//! counts and vector lengths are validated before any allocation).
+//!
+//! Vectors (`slots`, `lens`) are `u32 count` + packed elements. `usize`
+//! protocol fields travel as `u32` (layer, seq bucket and chunk sizes are
+//! bounded far below that in practice).
+
+use std::sync::Arc;
+
+use crate::metrics::KvCacheStats;
+use crate::runtime::host::{Dtype, HostTensor};
+use crate::workers::messages::WireMsg;
+
+/// First two bytes of every frame.
+pub const MAGIC: u16 = 0x1A31;
+/// Current frame-format version.
+pub const FORMAT_VERSION: u8 = 1;
+/// Fixed frame header size in bytes.
+pub const HEADER_LEN: usize = 12;
+
+/// Hard caps a decoder enforces before allocating (corrupt-input defense).
+const MAX_PAYLOAD: usize = 1 << 30;
+const MAX_DIMS: usize = 8;
+const MAX_TENSOR_ELEMS: usize = 1 << 27; // 512 MiB of f32
+const MAX_VEC_LEN: usize = 1 << 20;
+
+/// Typed decode failure. `Truncated`/`Malformed` mean a structurally broken
+/// frame; `BadChecksum` means bit corruption in transit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    BadMagic(u16),
+    BadVersion(u8),
+    UnknownType(u8),
+    BadChecksum { want: u32, got: u32 },
+    Truncated(&'static str),
+    Malformed(String),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::BadMagic(m) => write!(f, "bad frame magic {m:#06x}"),
+            CodecError::BadVersion(v) => write!(f, "unsupported frame version {v}"),
+            CodecError::UnknownType(t) => write!(f, "unknown message type {t}"),
+            CodecError::BadChecksum { want, got } => {
+                write!(f, "frame checksum mismatch (want {want:#010x}, got {got:#010x})")
+            }
+            CodecError::Truncated(what) => write!(f, "truncated frame ({what})"),
+            CodecError::Malformed(why) => write!(f, "malformed frame: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// FNV-1a 32-bit over `version ‖ tag ‖ payload`.
+fn checksum(version: u8, tag: u8, payload: &[u8]) -> u32 {
+    fn step(h: u32, b: u8) -> u32 {
+        (h ^ b as u32).wrapping_mul(0x0100_0193)
+    }
+    let mut h = step(step(0x811c_9dc5, version), tag);
+    for &b in payload {
+        h = step(h, b);
+    }
+    h
+}
+
+fn tag_of(msg: &WireMsg) -> u8 {
+    match msg {
+        WireMsg::StepQ { .. } => 0,
+        WireMsg::StepKv { .. } => 1,
+        WireMsg::PrefillChunk { .. } => 2,
+        WireMsg::AttnOut { .. } => 3,
+        WireMsg::Retire { .. } => 4,
+        WireMsg::KvStatsReq => 5,
+        WireMsg::KvStats { .. } => 6,
+        WireMsg::WorkerError { .. } => 7,
+        WireMsg::Shutdown => 8,
+    }
+}
+
+// ---- encode ---------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &HostTensor) {
+    out.push(match t.dtype() {
+        Dtype::F32 => 0,
+        Dtype::I32 => 1,
+    });
+    out.push(t.shape().len() as u8);
+    for &d in t.shape() {
+        put_u32(out, d as u32);
+    }
+    out.reserve(t.byte_size());
+    match t.dtype() {
+        Dtype::F32 => {
+            for x in t.as_f32() {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Dtype::I32 => {
+            for x in t.as_i32() {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+fn put_u32_slice(out: &mut Vec<u8>, xs: &[u32]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        put_u32(out, x);
+    }
+}
+
+fn put_i32_slice(out: &mut Vec<u8>, xs: &[i32]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn encode_payload(msg: &WireMsg, out: &mut Vec<u8>) {
+    match msg {
+        WireMsg::StepQ { layer, slots, q, lens, seq_bucket, overlap } => {
+            put_u32(out, *layer as u32);
+            put_u32(out, *seq_bucket as u32);
+            out.push(*overlap as u8);
+            put_u32_slice(out, slots);
+            put_i32_slice(out, lens);
+            put_tensor(out, q);
+        }
+        WireMsg::StepKv { layer, k, v } => {
+            put_u32(out, *layer as u32);
+            put_tensor(out, k);
+            put_tensor(out, v);
+        }
+        WireMsg::PrefillChunk { layer, slot, q, k, v, cached, valid, seq_bucket } => {
+            put_u32(out, *layer as u32);
+            put_u32(out, *slot);
+            out.extend_from_slice(&cached.to_le_bytes());
+            put_u32(out, *valid as u32);
+            put_u32(out, *seq_bucket as u32);
+            put_tensor(out, q);
+            put_tensor(out, k);
+            put_tensor(out, v);
+        }
+        WireMsg::AttnOut { layer, out: t } => {
+            put_u32(out, *layer as u32);
+            put_tensor(out, t);
+        }
+        WireMsg::Retire { slot } => put_u32(out, *slot),
+        WireMsg::KvStatsReq => {}
+        WireMsg::KvStats { stats } => {
+            put_u64(out, stats.blocks_in_use as u64);
+            put_u64(out, stats.total_blocks as u64);
+            put_u32(out, stats.block_size as u32);
+            put_u64(out, stats.internal_waste_tokens as u64);
+        }
+        WireMsg::WorkerError { msg } => {
+            put_u32(out, msg.len() as u32);
+            out.extend_from_slice(msg.as_bytes());
+        }
+        WireMsg::Shutdown => {}
+    }
+}
+
+/// Append one complete frame for `msg` to `out`; returns the frame size in
+/// bytes. `out` is not cleared (callers batch frames into one write).
+pub fn encode(msg: &WireMsg, out: &mut Vec<u8>) -> usize {
+    let start = out.len();
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(FORMAT_VERSION);
+    let tag = tag_of(msg);
+    out.push(tag);
+    out.extend_from_slice(&[0u8; 8]); // length + checksum backpatched below
+    let body = out.len();
+    encode_payload(msg, out);
+    let plen = (out.len() - body) as u32;
+    let sum = checksum(FORMAT_VERSION, tag, &out[body..]);
+    out[start + 4..start + 8].copy_from_slice(&plen.to_le_bytes());
+    out[start + 8..start + 12].copy_from_slice(&sum.to_le_bytes());
+    out.len() - start
+}
+
+/// Exact wire size of `msg`'s frame without materialising it.
+pub fn encoded_len(msg: &WireMsg) -> usize {
+    let tensor = |t: &HostTensor| 2 + 4 * t.shape().len() + t.byte_size();
+    HEADER_LEN
+        + match msg {
+            WireMsg::StepQ { slots, q, lens, .. } => {
+                4 + 4 + 1 + (4 + 4 * slots.len()) + (4 + 4 * lens.len()) + tensor(q)
+            }
+            WireMsg::StepKv { k, v, .. } => 4 + tensor(k) + tensor(v),
+            WireMsg::PrefillChunk { q, k, v, .. } => {
+                4 + 4 + 4 + 4 + 4 + tensor(q) + tensor(k) + tensor(v)
+            }
+            WireMsg::AttnOut { out, .. } => 4 + tensor(out),
+            WireMsg::Retire { .. } => 4,
+            WireMsg::KvStatsReq => 0,
+            WireMsg::KvStats { .. } => 8 + 8 + 4 + 8,
+            WireMsg::WorkerError { msg } => 4 + msg.len(),
+            WireMsg::Shutdown => 0,
+        }
+}
+
+// ---- decode ---------------------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], CodecError> {
+        if self.buf.len() - self.pos < n {
+            return Err(CodecError::Truncated(what));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &'static str) -> Result<u8, CodecError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self, what: &'static str) -> Result<i32, CodecError> {
+        Ok(i32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn finish(&self) -> Result<(), CodecError> {
+        if self.pos != self.buf.len() {
+            return Err(CodecError::Malformed(format!(
+                "{} trailing payload bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn get_vec_len(r: &mut Reader, what: &'static str) -> Result<usize, CodecError> {
+    let n = r.u32(what)? as usize;
+    if n > MAX_VEC_LEN {
+        return Err(CodecError::Malformed(format!("{what} length {n} exceeds cap")));
+    }
+    Ok(n)
+}
+
+fn get_u32_vec(r: &mut Reader, what: &'static str) -> Result<Vec<u32>, CodecError> {
+    let n = get_vec_len(r, what)?;
+    let bytes = r.take(4 * n, what)?;
+    Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+fn get_i32_vec(r: &mut Reader, what: &'static str) -> Result<Vec<i32>, CodecError> {
+    let n = get_vec_len(r, what)?;
+    let bytes = r.take(4 * n, what)?;
+    Ok(bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+fn get_tensor(r: &mut Reader) -> Result<HostTensor, CodecError> {
+    let dtype = r.u8("tensor dtype")?;
+    let ndim = r.u8("tensor ndim")? as usize;
+    if ndim > MAX_DIMS {
+        return Err(CodecError::Malformed(format!("tensor rank {ndim} exceeds cap")));
+    }
+    let mut shape = Vec::with_capacity(ndim);
+    let mut elems: usize = 1;
+    for _ in 0..ndim {
+        let d = r.u32("tensor dim")? as usize;
+        elems = elems
+            .checked_mul(d)
+            .filter(|&e| e <= MAX_TENSOR_ELEMS)
+            .ok_or_else(|| CodecError::Malformed("tensor element count overflow".into()))?;
+        shape.push(d);
+    }
+    let bytes = r.take(4 * elems, "tensor data")?;
+    match dtype {
+        0 => {
+            // one copy: receive buffer → the tensor's own Arc allocation
+            let data: Arc<[f32]> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Ok(HostTensor::f32_arc(shape, data))
+        }
+        1 => {
+            let data: Arc<[i32]> = bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Ok(HostTensor::i32_arc(shape, data))
+        }
+        d => Err(CodecError::Malformed(format!("unknown tensor dtype {d}"))),
+    }
+}
+
+fn decode_payload(tag: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
+    let mut r = Reader { buf: payload, pos: 0 };
+    let msg = match tag {
+        0 => {
+            let layer = r.u32("layer")? as usize;
+            let seq_bucket = r.u32("seq_bucket")? as usize;
+            let overlap = r.u8("overlap")? != 0;
+            let slots = get_u32_vec(&mut r, "slots")?;
+            let lens = get_i32_vec(&mut r, "lens")?;
+            let q = get_tensor(&mut r)?;
+            WireMsg::StepQ { layer, slots, q, lens, seq_bucket, overlap }
+        }
+        1 => {
+            let layer = r.u32("layer")? as usize;
+            let k = get_tensor(&mut r)?;
+            let v = get_tensor(&mut r)?;
+            WireMsg::StepKv { layer, k, v }
+        }
+        2 => {
+            let layer = r.u32("layer")? as usize;
+            let slot = r.u32("slot")?;
+            let cached = r.i32("cached")?;
+            let valid = r.u32("valid")? as usize;
+            let seq_bucket = r.u32("seq_bucket")? as usize;
+            let q = get_tensor(&mut r)?;
+            let k = get_tensor(&mut r)?;
+            let v = get_tensor(&mut r)?;
+            WireMsg::PrefillChunk { layer, slot, q, k, v, cached, valid, seq_bucket }
+        }
+        3 => {
+            let layer = r.u32("layer")? as usize;
+            let out = get_tensor(&mut r)?;
+            WireMsg::AttnOut { layer, out }
+        }
+        4 => WireMsg::Retire { slot: r.u32("slot")? },
+        5 => WireMsg::KvStatsReq,
+        6 => {
+            let stats = KvCacheStats {
+                blocks_in_use: r.u64("blocks_in_use")? as usize,
+                total_blocks: r.u64("total_blocks")? as usize,
+                block_size: r.u32("block_size")? as usize,
+                internal_waste_tokens: r.u64("internal_waste")? as usize,
+            };
+            WireMsg::KvStats { stats }
+        }
+        7 => {
+            let n = get_vec_len(&mut r, "error text")?;
+            let bytes = r.take(n, "error text")?;
+            let msg = String::from_utf8(bytes.to_vec())
+                .map_err(|_| CodecError::Malformed("error text not utf-8".into()))?;
+            WireMsg::WorkerError { msg }
+        }
+        8 => WireMsg::Shutdown,
+        t => return Err(CodecError::UnknownType(t)),
+    };
+    r.finish()?;
+    Ok(msg)
+}
+
+/// Try to decode one frame from the front of `buf`.
+///
+/// * `Ok(Some((msg, consumed)))` — a full frame was parsed; the caller
+///   should drop the first `consumed` bytes.
+/// * `Ok(None)` — `buf` holds only a frame prefix; read more and retry
+///   (this is what makes short reads / read timeouts loss-free).
+/// * `Err(_)` — the stream is corrupt at the current position.
+pub fn decode_frame(buf: &[u8]) -> Result<Option<(WireMsg, usize)>, CodecError> {
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    let magic = u16::from_le_bytes([buf[0], buf[1]]);
+    if magic != MAGIC {
+        return Err(CodecError::BadMagic(magic));
+    }
+    let version = buf[2];
+    if version != FORMAT_VERSION {
+        return Err(CodecError::BadVersion(version));
+    }
+    let tag = buf[3];
+    let plen = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+    if plen > MAX_PAYLOAD {
+        return Err(CodecError::Malformed(format!("payload length {plen} exceeds cap")));
+    }
+    if buf.len() < HEADER_LEN + plen {
+        return Ok(None);
+    }
+    let want = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]);
+    let payload = &buf[HEADER_LEN..HEADER_LEN + plen];
+    let got = checksum(version, tag, payload);
+    if want != got {
+        return Err(CodecError::BadChecksum { want, got });
+    }
+    let msg = decode_payload(tag, payload)?;
+    Ok(Some((msg, HEADER_LEN + plen)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: &WireMsg) -> WireMsg {
+        let mut buf = Vec::new();
+        let n = encode(msg, &mut buf);
+        assert_eq!(n, buf.len());
+        assert_eq!(n, encoded_len(msg), "encoded_len must match encode");
+        let (got, used) = decode_frame(&buf).unwrap().expect("complete frame");
+        assert_eq!(used, buf.len());
+        got
+    }
+
+    #[test]
+    fn control_messages_roundtrip() {
+        assert_eq!(roundtrip(&WireMsg::Shutdown), WireMsg::Shutdown);
+        assert_eq!(roundtrip(&WireMsg::KvStatsReq), WireMsg::KvStatsReq);
+        assert_eq!(roundtrip(&WireMsg::Retire { slot: 77 }), WireMsg::Retire { slot: 77 });
+        let e = WireMsg::WorkerError { msg: "ünïcode blew up".into() };
+        assert_eq!(roundtrip(&e), e);
+        let s = WireMsg::KvStats {
+            stats: KvCacheStats {
+                blocks_in_use: 3,
+                total_blocks: 9,
+                block_size: 16,
+                internal_waste_tokens: 5,
+            },
+        };
+        assert_eq!(roundtrip(&s), s);
+    }
+
+    #[test]
+    fn tensor_messages_roundtrip() {
+        let q = HostTensor::f32(vec![2, 3, 4], (0..24).map(|i| i as f32 * 0.25).collect());
+        let m = WireMsg::StepQ {
+            layer: 7,
+            slots: vec![0, u32::MAX, 2],
+            q: q.clone(),
+            lens: vec![-1, 0, 12],
+            seq_bucket: 256,
+            overlap: true,
+        };
+        assert_eq!(roundtrip(&m), m);
+        let m = WireMsg::StepKv { layer: 1, k: q.clone(), v: q.clone() };
+        assert_eq!(roundtrip(&m), m);
+    }
+
+    #[test]
+    fn decoded_tensor_is_arc_backed_and_views_share() {
+        let out = HostTensor::f32(vec![4, 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let mut buf = Vec::new();
+        encode(&WireMsg::AttnOut { layer: 0, out }, &mut buf);
+        let (msg, _) = decode_frame(&buf).unwrap().unwrap();
+        let WireMsg::AttnOut { out, .. } = msg else { panic!() };
+        // zero copies after the decode: a clone shares the buffer
+        assert!(out.clone().shares_buffer(&out));
+        assert_eq!(out.view_rows(1, 2).as_f32(), &[3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn incomplete_prefix_asks_for_more() {
+        let mut buf = Vec::new();
+        encode(&WireMsg::Retire { slot: 1 }, &mut buf);
+        for cut in 0..buf.len() {
+            assert_eq!(decode_frame(&buf[..cut]).unwrap(), None, "prefix of {cut}");
+        }
+    }
+
+    #[test]
+    fn corruption_is_an_error_not_a_panic() {
+        let q = HostTensor::f32(vec![2, 2], vec![1., 2., 3., 4.]);
+        let mut buf = Vec::new();
+        encode(&WireMsg::AttnOut { layer: 0, out: q }, &mut buf);
+        // flip every byte position in turn; decode must return Err or (for
+        // the length field, which can make the frame "incomplete") Ok(None)
+        for i in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[i] ^= 0x40;
+            match decode_frame(&bad) {
+                Ok(Some(_)) => panic!("corrupt byte {i} decoded successfully"),
+                Ok(None) | Err(_) => {}
+            }
+        }
+    }
+
+    #[test]
+    fn two_frames_back_to_back() {
+        let mut buf = Vec::new();
+        encode(&WireMsg::Retire { slot: 5 }, &mut buf);
+        let first_len = buf.len();
+        encode(&WireMsg::Shutdown, &mut buf);
+        let (m1, used) = decode_frame(&buf).unwrap().unwrap();
+        assert_eq!(m1, WireMsg::Retire { slot: 5 });
+        assert_eq!(used, first_len);
+        let (m2, _) = decode_frame(&buf[used..]).unwrap().unwrap();
+        assert_eq!(m2, WireMsg::Shutdown);
+    }
+}

@@ -1,0 +1,118 @@
+//! In-process transport: the paced [`Port`] link (`netsim::transport`)
+//! wrapped as a [`Transport`].
+//!
+//! This is the simulator-faithful path: payload tensors cross threads as
+//! `Arc` views (zero host copies, mirroring RDMA), while delivery is paced
+//! by the calibrated [`NetStackModel`] and the link charges the *logical*
+//! `wire_bytes()` to its [`crate::netsim::transport::LinkStats`]. The
+//! adapter adds the per-message-class [`WireStats`] table the leader
+//! reports, with `serialized_bytes` left at 0 — nothing is serialized here;
+//! the TCP transport is what measures real frames.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::stats::{MsgClass, WireStats};
+use super::{Transport, TransportKind};
+use crate::netsim::stack::NetStackModel;
+use crate::netsim::transport::{link, LinkStats, Port};
+use crate::workers::messages::WireMsg;
+
+/// [`Transport`] adapter over one paced in-process [`Port`].
+pub struct InprocTransport {
+    port: Port<WireMsg>,
+    stats: Mutex<WireStats>,
+}
+
+impl InprocTransport {
+    pub fn new(port: Port<WireMsg>) -> InprocTransport {
+        InprocTransport { port, stats: Mutex::new(WireStats::new()) }
+    }
+
+    /// The underlying simulated link's counters (messages, logical bytes,
+    /// modelled busy time).
+    pub fn link_stats(&self) -> LinkStats {
+        self.port.stats()
+    }
+
+    fn record(&self, msg: &WireMsg, logical: usize) -> Result<(), String> {
+        let mut st = self.stats.lock().map_err(|_| "inproc stats poisoned")?;
+        st.record(MsgClass::of(msg), logical, 0);
+        Ok(())
+    }
+}
+
+/// Create a bidirectional paced in-process link; returns the two endpoints.
+pub fn pair(
+    stack: &'static NetStackModel,
+    line_rate: f64,
+    time_scale: f64,
+) -> (InprocTransport, InprocTransport) {
+    let (a, b) = link::<WireMsg>(stack, line_rate, time_scale);
+    (InprocTransport::new(a), InprocTransport::new(b))
+}
+
+impl Transport for InprocTransport {
+    fn send(&self, msg: WireMsg) -> Result<(), String> {
+        let logical = msg.wire_bytes();
+        self.record(&msg, logical)?;
+        self.port.send(msg, logical)
+    }
+
+    fn recv(&self) -> Result<WireMsg, String> {
+        let (msg, logical) = self.port.recv()?;
+        self.record(&msg, logical)?;
+        Ok(msg)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<WireMsg>, String> {
+        match self.port.recv_timeout(timeout)? {
+            None => Ok(None),
+            Some((msg, logical)) => {
+                self.record(&msg, logical)?;
+                Ok(Some(msg))
+            }
+        }
+    }
+
+    fn stats(&self) -> WireStats {
+        *self.stats.lock().expect("inproc stats poisoned")
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::Inproc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::stack::{FHBN, LINE_RATE_400G};
+    use crate::runtime::host::HostTensor;
+
+    #[test]
+    fn adapter_roundtrips_and_counts_logical_only() {
+        let (a, b) = pair(&FHBN, LINE_RATE_400G, 0.0);
+        let t = HostTensor::f32(vec![2, 2, 4], (0..16).map(|i| i as f32).collect());
+        let msg = WireMsg::AttnOut { layer: 1, out: t.clone() };
+        let logical = msg.wire_bytes() as u64;
+        a.send(msg).unwrap();
+        let got = b.recv().unwrap();
+        // zero-copy across the in-process wire: same Arc on both sides
+        match got {
+            WireMsg::AttnOut { ref out, .. } => assert!(out.shares_buffer(&t)),
+            _ => panic!(),
+        }
+        let st = a.stats();
+        let c = st.class(MsgClass::AttnOut);
+        assert_eq!((c.msgs, c.logical_bytes, c.serialized_bytes), (1, logical, 0));
+        assert_eq!(st.overhead_ratio(), None, "nothing serialized in-process");
+        assert_eq!(a.link_stats().bytes, logical);
+    }
+
+    #[test]
+    fn recv_timeout_expires() {
+        let (a, _b) = pair(&FHBN, LINE_RATE_400G, 0.0);
+        assert!(a.recv_timeout(Duration::from_millis(10)).unwrap().is_none());
+    }
+}

@@ -1,0 +1,242 @@
+//! Measured-vs-logical wire accounting, broken down by message class.
+//!
+//! Every transport counts each [`WireMsg`] it moves into a [`WireStats`]
+//! table under its [`MsgClass`], recording two byte counts side by side:
+//!
+//! * **logical** — [`WireMsg::wire_bytes`], the payload size the network
+//!   *model* charges (tensor bytes + small control fields). This is what
+//!   the serving simulator and the paced in-process link have always used.
+//! * **serialized** — the bytes a codec frame actually occupies on a real
+//!   socket (header + dtype/shape metadata + payload). Only serializing
+//!   transports ([`crate::net::tcp::TcpTransport`]) fill this in; the
+//!   in-process adapter leaves it at 0.
+//!
+//! Comparing the two per class validates the simulator's `wire_bytes()`
+//! model against reality on every `--transport tcp` run: serialized must be
+//! ≥ logical, with the overhead ratio bounded by the (small, fixed) framing
+//! metadata — see `ServeMetrics::wire_stats` and the `net_e2e` tests.
+
+use crate::workers::messages::WireMsg;
+
+/// Coarse message classes for wire accounting (the tensor-bearing protocol
+/// messages individually; the small KV-lifecycle/control messages pooled).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgClass {
+    StepQ,
+    StepKv,
+    Prefill,
+    AttnOut,
+    Control,
+}
+
+impl MsgClass {
+    pub const COUNT: usize = 5;
+    pub const ALL: [MsgClass; MsgClass::COUNT] = [
+        MsgClass::StepQ,
+        MsgClass::StepKv,
+        MsgClass::Prefill,
+        MsgClass::AttnOut,
+        MsgClass::Control,
+    ];
+
+    pub fn of(msg: &WireMsg) -> MsgClass {
+        match msg {
+            WireMsg::StepQ { .. } => MsgClass::StepQ,
+            WireMsg::StepKv { .. } => MsgClass::StepKv,
+            WireMsg::PrefillChunk { .. } => MsgClass::Prefill,
+            WireMsg::AttnOut { .. } => MsgClass::AttnOut,
+            WireMsg::Retire { .. }
+            | WireMsg::KvStatsReq
+            | WireMsg::KvStats { .. }
+            | WireMsg::WorkerError { .. }
+            | WireMsg::Shutdown => MsgClass::Control,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MsgClass::StepQ => "step_q",
+            MsgClass::StepKv => "step_kv",
+            MsgClass::Prefill => "prefill",
+            MsgClass::AttnOut => "attn_out",
+            MsgClass::Control => "control",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            MsgClass::StepQ => 0,
+            MsgClass::StepKv => 1,
+            MsgClass::Prefill => 2,
+            MsgClass::AttnOut => 3,
+            MsgClass::Control => 4,
+        }
+    }
+}
+
+/// Counters for one message class.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClassStats {
+    pub msgs: u64,
+    /// Modelled payload bytes (`WireMsg::wire_bytes`).
+    pub logical_bytes: u64,
+    /// Actual serialized frame bytes (0 on non-serializing transports).
+    pub serialized_bytes: u64,
+}
+
+impl ClassStats {
+    fn accumulate(&mut self, other: &ClassStats) {
+        self.msgs += other.msgs;
+        self.logical_bytes += other.logical_bytes;
+        self.serialized_bytes += other.serialized_bytes;
+    }
+}
+
+/// Per-class wire traffic through one transport endpoint (both directions:
+/// an endpoint counts every message it sends *and* receives, so the leader
+/// side of a link sees the link's full traffic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireStats {
+    classes: [ClassStats; MsgClass::COUNT],
+}
+
+impl Default for WireStats {
+    fn default() -> Self {
+        WireStats { classes: [ClassStats::default(); MsgClass::COUNT] }
+    }
+}
+
+impl WireStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Count one message of `class`.
+    pub fn record(&mut self, class: MsgClass, logical_bytes: usize, serialized_bytes: usize) {
+        let c = &mut self.classes[class.idx()];
+        c.msgs += 1;
+        c.logical_bytes += logical_bytes as u64;
+        c.serialized_bytes += serialized_bytes as u64;
+    }
+
+    pub fn class(&self, class: MsgClass) -> ClassStats {
+        self.classes[class.idx()]
+    }
+
+    /// Sum another endpoint's counters into this one (pool aggregation).
+    pub fn merge(&mut self, other: &WireStats) {
+        for c in MsgClass::ALL {
+            self.classes[c.idx()].accumulate(&other.classes[c.idx()]);
+        }
+    }
+
+    /// Traffic counted since `baseline` was snapshotted (counters are
+    /// monotonic, so per-class saturating subtraction is exact). Lets a
+    /// serve session report *its own* traffic even though transport
+    /// endpoints count from pipeline start.
+    pub fn delta_since(&self, baseline: &WireStats) -> WireStats {
+        let mut out = WireStats::new();
+        for c in MsgClass::ALL {
+            let now = self.classes[c.idx()];
+            let base = baseline.classes[c.idx()];
+            out.classes[c.idx()] = ClassStats {
+                msgs: now.msgs.saturating_sub(base.msgs),
+                logical_bytes: now.logical_bytes.saturating_sub(base.logical_bytes),
+                serialized_bytes: now.serialized_bytes.saturating_sub(base.serialized_bytes),
+            };
+        }
+        out
+    }
+
+    /// `(class, counters)` for every class (including empty ones).
+    pub fn iter(&self) -> impl Iterator<Item = (MsgClass, ClassStats)> + '_ {
+        MsgClass::ALL.iter().map(move |&c| (c, self.classes[c.idx()]))
+    }
+
+    /// Totals across classes.
+    pub fn total(&self) -> ClassStats {
+        let mut t = ClassStats::default();
+        for c in &self.classes {
+            t.accumulate(c);
+        }
+        t
+    }
+
+    /// serialized / logical across all traffic, when both were measured.
+    /// `None` until a serializing transport recorded something.
+    pub fn overhead_ratio(&self) -> Option<f64> {
+        let t = self.total();
+        if t.serialized_bytes == 0 || t.logical_bytes == 0 {
+            None
+        } else {
+            Some(t.serialized_bytes as f64 / t.logical_bytes as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::host::HostTensor;
+
+    #[test]
+    fn classes_cover_every_variant() {
+        let t = HostTensor::zeros_f32(vec![1, 1, 4]);
+        assert_eq!(
+            MsgClass::of(&WireMsg::StepQ {
+                layer: 0,
+                slots: vec![0],
+                q: t.clone(),
+                lens: vec![0],
+                seq_bucket: 8,
+                overlap: false,
+            }),
+            MsgClass::StepQ
+        );
+        assert_eq!(
+            MsgClass::of(&WireMsg::StepKv { layer: 0, k: t.clone(), v: t.clone() }),
+            MsgClass::StepKv
+        );
+        assert_eq!(MsgClass::of(&WireMsg::Retire { slot: 1 }), MsgClass::Control);
+        assert_eq!(MsgClass::of(&WireMsg::Shutdown), MsgClass::Control);
+        assert_eq!(
+            MsgClass::of(&WireMsg::AttnOut { layer: 0, out: t }),
+            MsgClass::AttnOut
+        );
+    }
+
+    #[test]
+    fn record_merge_total() {
+        let mut a = WireStats::new();
+        a.record(MsgClass::StepQ, 100, 120);
+        a.record(MsgClass::StepQ, 100, 120);
+        a.record(MsgClass::Control, 0, 12);
+        let mut b = WireStats::new();
+        b.record(MsgClass::AttnOut, 50, 0);
+        a.merge(&b);
+
+        assert_eq!(a.class(MsgClass::StepQ).msgs, 2);
+        assert_eq!(a.class(MsgClass::StepQ).logical_bytes, 200);
+        assert_eq!(a.class(MsgClass::StepQ).serialized_bytes, 240);
+        let t = a.total();
+        assert_eq!(t.msgs, 4);
+        assert_eq!(t.logical_bytes, 250);
+        assert_eq!(t.serialized_bytes, 252);
+        assert!((a.overhead_ratio().unwrap() - 252.0 / 250.0).abs() < 1e-12);
+        assert_eq!(WireStats::new().overhead_ratio(), None);
+    }
+
+    #[test]
+    fn delta_since_isolates_new_traffic() {
+        let mut w = WireStats::new();
+        w.record(MsgClass::StepQ, 100, 120);
+        let baseline = w;
+        w.record(MsgClass::StepQ, 100, 120);
+        w.record(MsgClass::AttnOut, 50, 60);
+        let d = w.delta_since(&baseline);
+        assert_eq!(d.class(MsgClass::StepQ).msgs, 1);
+        assert_eq!(d.class(MsgClass::StepQ).logical_bytes, 100);
+        assert_eq!(d.class(MsgClass::AttnOut).serialized_bytes, 60);
+        assert_eq!(w.delta_since(&w).total().msgs, 0);
+    }
+}

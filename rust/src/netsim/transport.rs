@@ -1,18 +1,24 @@
-//! In-process byte transport with simulated network pacing.
+//! In-process channel transport with simulated network pacing — one of the
+//! two wires behind the [`crate::net::Transport`] API.
 //!
-//! The real Lamina moves Q/KV/attention tensors between heterogeneous nodes
-//! over RDMA; this reproduction moves the *actual bytes* between worker
-//! threads (correctness is real) while pacing delivery with the calibrated
-//! [`NetStackModel`] (timing is simulated). A `time_scale` of 0 disables
-//! pacing for pure-functional tests; 1.0 reproduces the modelled latencies
-//! in wall-clock.
+//! The serving pipeline's leader↔worker links come in two flavours:
 //!
-//! Payloads may be zero-copy on the host side (`HostTensor` views share
-//! `Arc` buffers, so a send moves a pointer, mirroring RDMA's
-//! no-intermediate-copy property). The `bytes` argument to [`Port::send`]
-//! is therefore the *logical* wire size — callers pass
-//! `WireMsg::wire_bytes()` — and the modelled serialisation/contention
-//! charges are identical whether or not the host materialised a copy.
+//! * **this module** (via the [`crate::net::inproc`] adapter,
+//!   `--transport inproc`): payloads cross threads over an `mpsc` channel,
+//!   delivery is paced by the calibrated [`NetStackModel`], and byte
+//!   accounting is *logical* — the `bytes` argument to [`Port::send`] is
+//!   `WireMsg::wire_bytes()`, never a serialized size. Tensors stay
+//!   zero-copy (`HostTensor` views share `Arc` buffers, mirroring RDMA's
+//!   no-intermediate-copy property).
+//! * **`crate::net::tcp`** (`--transport tcp`): the same messages are
+//!   serialized through `net::codec` into length-prefixed checksummed
+//!   frames and carried by real loopback sockets, with *measured* frame
+//!   bytes recorded next to the logical model. That path validates this
+//!   one: the `net_e2e` tests assert bit-identical decode outputs and a
+//!   bounded measured/logical overhead ratio.
+//!
+//! A `time_scale` of 0 disables pacing for pure-functional tests; 1.0
+//! reproduces the modelled latencies in wall-clock.
 //!
 //! Each link serialises its transfers (a 400 Gbps NIC is a shared resource):
 //! a send occupies the link for `bytes / effective_bw`, and deliveries are

@@ -77,6 +77,26 @@ impl HostTensor {
         HostTensor::f32(shape, vec![0.0; n])
     }
 
+    /// Wrap an already-shared buffer without copying. The backing allocation
+    /// may be *larger* than the view (a reused scratch buffer, a codec read
+    /// buffer); the view covers the first `shape.product()` elements.
+    pub fn f32_arc(shape: Vec<usize>, data: Arc<[f32]>) -> Self {
+        assert!(
+            shape.iter().product::<usize>() <= data.len(),
+            "arc buffer smaller than view"
+        );
+        HostTensor { shape, data: Data::F32(data), offset: 0 }
+    }
+
+    /// i32 variant of [`HostTensor::f32_arc`].
+    pub fn i32_arc(shape: Vec<usize>, data: Arc<[i32]>) -> Self {
+        assert!(
+            shape.iter().product::<usize>() <= data.len(),
+            "arc buffer smaller than view"
+        );
+        HostTensor { shape, data: Data::I32(data), offset: 0 }
+    }
+
     pub fn dtype(&self) -> Dtype {
         match self.data {
             Data::F32(_) => Dtype::F32,

@@ -3,7 +3,8 @@
 //! partitioning — worker `w` of `W` owns `KH/W` KV heads of *all* requests).
 //!
 //! The worker is a thread with its own PJRT [`Engine`] (its "device"): it
-//! receives `StepQ`/`StepKv` messages over the simulated network, appends
+//! receives `StepQ`/`StepKv` messages over its [`Transport`] link (paced
+//! in-process channel or real TCP socket — see `crate::net`), appends
 //! K/V into its **block-paged arena** ([`PagedKvArena`]), runs the
 //! attention kernel (full, or partial+combine in overlap mode) and ships
 //! the output shard back. KV residency scales with allocated blocks — the
@@ -13,7 +14,7 @@
 //! internal waste for `ServeMetrics`.
 
 use crate::kvcache::{ArenaCfg, PagedKvArena};
-use crate::netsim::transport::Port;
+use crate::net::Transport;
 use crate::runtime::engine::Engine;
 use crate::runtime::host::HostTensor;
 
@@ -37,23 +38,24 @@ pub struct AttnWorkerCfg {
     pub kv_block_size: usize,
 }
 
-/// Run the worker loop until `Shutdown` or link closure. Intended to be the
-/// body of a dedicated thread (the Engine is created inside — PJRT handles
-/// are not `Send`).
-pub fn run_attn_worker(cfg: AttnWorkerCfg, port: Port<WireMsg>) {
+/// Run the worker loop until `Shutdown` or link closure, over any
+/// [`Transport`] (paced in-process channel or a real TCP socket — the
+/// protocol is identical). Intended to be the body of a dedicated thread
+/// (the Engine is created inside — PJRT handles are not `Send`).
+pub fn run_attn_worker<T: Transport>(cfg: AttnWorkerCfg, link: T) {
     let engine = match Engine::load(&cfg.artifacts_dir) {
         Ok(e) => e,
         Err(e) => {
-            let _ = port.send(WireMsg::WorkerError { msg: format!("engine load: {e:#}") }, 0);
+            let _ = link.send(WireMsg::WorkerError { msg: format!("engine load: {e:#}") });
             return;
         }
     };
-    if let Err(e) = worker_loop(&engine, &cfg, &port) {
-        let _ = port.send(WireMsg::WorkerError { msg: e }, 0);
+    if let Err(e) = worker_loop(&engine, &cfg, &link) {
+        let _ = link.send(WireMsg::WorkerError { msg: e });
     }
 }
 
-fn worker_loop(engine: &Engine, cfg: &AttnWorkerCfg, port: &Port<WireMsg>) -> Result<(), String> {
+fn worker_loop<T: Transport>(engine: &Engine, cfg: &AttnWorkerCfg, link: &T) -> Result<(), String> {
     // pre-compile this shard's attention entry points (lazy compiles would
     // otherwise spike the first decode steps' latency)
     let sfx = if cfg.n_shards == 1 { String::new() } else { format!("_w{}", cfg.n_shards) };
@@ -105,19 +107,14 @@ fn worker_loop(engine: &Engine, cfg: &AttnWorkerCfg, port: &Port<WireMsg>) -> Re
     };
 
     loop {
-        let Some((msg, _bytes)) = port
-            .recv_timeout(std::time::Duration::from_secs(60))
-            .map_err(|e| e.to_string())?
-        else {
+        let Some(msg) = link.recv_timeout(std::time::Duration::from_secs(60))? else {
             return Err("worker idle timeout".into());
         };
         match msg {
             WireMsg::Shutdown => return Ok(()),
             WireMsg::Retire { slot } => arena.retire(slot),
             WireMsg::KvStatsReq => {
-                let reply = WireMsg::KvStats { stats: arena.stats() };
-                let bytes = reply.wire_bytes();
-                port.send(reply, bytes).map_err(|e| e.to_string())?;
+                link.send(WireMsg::KvStats { stats: arena.stats() })?;
             }
             WireMsg::StepQ { layer, slots, q, lens, seq_bucket, overlap } => {
                 let bucket = q.shape()[0];
@@ -184,9 +181,7 @@ fn worker_loop(engine: &Engine, cfg: &AttnWorkerCfg, port: &Port<WireMsg>) -> Re
                         .map_err(|e| format!("attention: {e:#}"))?
                         .remove(0)
                 };
-                let bytes = out.byte_size();
-                port.send(WireMsg::AttnOut { layer, out }, bytes)
-                    .map_err(|e| e.to_string())?;
+                link.send(WireMsg::AttnOut { layer, out })?;
             }
             WireMsg::PrefillChunk { layer, slot, q, k, v, cached, valid, seq_bucket } => {
                 let t = q.shape()[0];
@@ -207,9 +202,7 @@ fn worker_loop(engine: &Engine, cfg: &AttnWorkerCfg, port: &Port<WireMsg>) -> Re
                     .remove(0);
                 // append the chunk's valid K/V rows at cached.. positions
                 arena.append_chunk(slot, layer, &k, &v, cached as usize, valid);
-                let bytes = out.byte_size();
-                port.send(WireMsg::AttnOut { layer, out }, bytes)
-                    .map_err(|e| e.to_string())?;
+                link.send(WireMsg::AttnOut { layer, out })?;
             }
             other => return Err(format!("unexpected message {other:?}")),
         }

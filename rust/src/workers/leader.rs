@@ -12,9 +12,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::kvcache::kv_blocks_needed;
 use crate::metrics::{KvCacheStats, ServeMetrics, StepBreakdown};
+use crate::net::{inproc, tcp, Transport, TransportKind};
 use crate::netsim::stack::{NetStackModel, LINE_RATE_400G};
-use crate::netsim::transport::{link, Port};
 use crate::runtime::engine::Engine;
 use crate::runtime::host::{copies, HostTensor};
 use crate::trace::Request;
@@ -45,6 +46,14 @@ pub struct PipelineOpts {
     pub use_prefill: bool,
     /// Token slots per KV block in the workers' paged arenas.
     pub kv_block_size: usize,
+    /// Which wire the leader↔worker links run over (`--transport`).
+    pub transport: TransportKind,
+    /// Per-worker KV block budget for admission control (`--kv-budget`).
+    /// `None` = admit unconditionally (the arena grows on demand). With a
+    /// budget, `serve` consults the workers' `KvStats` snapshot +
+    /// `kv_blocks_needed` before admitting and defers requests that would
+    /// overflow it (counted in `ServeMetrics::deferred_admissions`).
+    pub kv_block_budget: Option<usize>,
 }
 
 impl PipelineOpts {
@@ -60,13 +69,48 @@ impl PipelineOpts {
             max_waves: 2,
             use_prefill: true,
             kv_block_size: 16,
+            transport: TransportKind::Inproc,
+            kv_block_budget: None,
         }
     }
 }
 
 struct WorkerHandle {
-    port: Port<WireMsg>,
+    link: Box<dyn Transport>,
     thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Spawn one attention-worker thread connected over the configured
+/// transport: a paced in-process channel, or a real TCP loopback socket
+/// carrying serialized `net::codec` frames.
+fn spawn_worker(opts: &PipelineOpts, idx: usize, respawn: bool) -> Result<WorkerHandle> {
+    let cfg = AttnWorkerCfg {
+        artifacts_dir: opts.artifacts_dir.clone(),
+        shard: idx,
+        n_shards: opts.attn_workers,
+        // distinct physical slots for every wave's requests
+        slots: opts.slots * opts.max_waves,
+        kv_block_size: opts.kv_block_size,
+    };
+    let name = if respawn { format!("lamina-attn-{idx}-r") } else { format!("lamina-attn-{idx}") };
+    let builder = std::thread::Builder::new().name(name);
+    match opts.transport {
+        TransportKind::Inproc => {
+            let (leader_end, worker_end) =
+                inproc::pair(opts.stack, LINE_RATE_400G, opts.time_scale);
+            let thread = builder
+                .spawn(move || run_attn_worker(cfg, worker_end))
+                .context("spawn attention worker")?;
+            Ok(WorkerHandle { link: Box::new(leader_end), thread: Some(thread) })
+        }
+        TransportKind::Tcp => {
+            let (leader_end, worker_end) = tcp::pair().context("tcp loopback pair")?;
+            let thread = builder
+                .spawn(move || run_attn_worker(cfg, worker_end))
+                .context("spawn attention worker")?;
+            Ok(WorkerHandle { link: Box::new(leader_end), thread: Some(thread) })
+        }
+    }
 }
 
 /// One wave's per-slot decode state.
@@ -85,6 +129,9 @@ struct SlotState {
     generated: Vec<i32>,
     gen_target: usize,
     next_input: i32,
+    /// KV blocks (per worker) this request reserves at full context —
+    /// admission-control bookkeeping; 0 outside `serve`.
+    kv_reserved: usize,
 }
 
 impl SlotState {
@@ -100,6 +147,10 @@ pub struct DisaggPipeline {
     opts: PipelineOpts,
     /// network bytes sent per decode step (for breakdown accounting)
     step_net_bytes: std::cell::Cell<usize>,
+    /// Wire counters of links whose workers were replaced (fault
+    /// tolerance) — folded into `wire_stats` so pool totals survive
+    /// recovery.
+    retired_wire: crate::net::WireStats,
 }
 
 impl DisaggPipeline {
@@ -137,22 +188,15 @@ impl DisaggPipeline {
 
         let mut workers = Vec::new();
         for w in 0..opts.attn_workers {
-            let (leader_port, worker_port) = link::<WireMsg>(opts.stack, LINE_RATE_400G, opts.time_scale);
-            let cfg = AttnWorkerCfg {
-                artifacts_dir: opts.artifacts_dir.clone(),
-                shard: w,
-                n_shards: opts.attn_workers,
-                // distinct physical slots for every wave's requests
-                slots: opts.slots * opts.max_waves,
-                kv_block_size: opts.kv_block_size,
-            };
-            let thread = std::thread::Builder::new()
-                .name(format!("lamina-attn-{w}"))
-                .spawn(move || run_attn_worker(cfg, worker_port))
-                .context("spawn attention worker")?;
-            workers.push(WorkerHandle { port: leader_port, thread: Some(thread) });
+            workers.push(spawn_worker(&opts, w, false)?);
         }
-        Ok(DisaggPipeline { engine, workers, opts, step_net_bytes: std::cell::Cell::new(0) })
+        Ok(DisaggPipeline {
+            engine,
+            workers,
+            opts,
+            step_net_bytes: std::cell::Cell::new(0),
+            retired_wire: crate::net::WireStats::new(),
+        })
     }
 
     pub fn config(&self) -> &crate::runtime::manifest::ModelCfg {
@@ -180,9 +224,8 @@ impl DisaggPipeline {
                 seq_bucket,
                 overlap: self.opts.overlap,
             };
-            let bytes = msg.wire_bytes();
-            self.step_net_bytes.set(self.step_net_bytes.get() + bytes);
-            worker.port.send(msg, bytes).map_err(|e| anyhow!(e))?;
+            self.step_net_bytes.set(self.step_net_bytes.get() + msg.wire_bytes());
+            worker.link.send(msg).map_err(|e| anyhow!(e))?;
         }
         Ok(())
     }
@@ -197,9 +240,8 @@ impl DisaggPipeline {
                 k: slice_heads(k, wi * khs, khs),
                 v: slice_heads(v, wi * khs, khs),
             };
-            let bytes = msg.wire_bytes();
-            self.step_net_bytes.set(self.step_net_bytes.get() + bytes);
-            worker.port.send(msg, bytes).map_err(|e| anyhow!(e))?;
+            self.step_net_bytes.set(self.step_net_bytes.get() + msg.wire_bytes());
+            worker.link.send(msg).map_err(|e| anyhow!(e))?;
         }
         Ok(())
     }
@@ -211,7 +253,7 @@ impl DisaggPipeline {
         let hd = mc.head_dim;
         let mut shards: Vec<HostTensor> = Vec::with_capacity(w);
         for (wi, worker) in self.workers.iter().enumerate() {
-            let (msg, _) = worker.port.recv().map_err(|e| anyhow!(e))?;
+            let msg = worker.link.recv().map_err(|e| anyhow!(e))?;
             match msg {
                 WireMsg::AttnOut { layer: l, out: shard } => {
                     if l != layer {
@@ -246,9 +288,7 @@ impl DisaggPipeline {
     /// Free `slot`'s KV blocks on every attention worker (request retired).
     fn retire_slot(&self, slot: u32) -> Result<()> {
         for worker in &self.workers {
-            let msg = WireMsg::Retire { slot };
-            let bytes = msg.wire_bytes();
-            worker.port.send(msg, bytes).map_err(|e| anyhow!(e))?;
+            worker.link.send(WireMsg::Retire { slot }).map_err(|e| anyhow!(e))?;
         }
         Ok(())
     }
@@ -258,14 +298,11 @@ impl DisaggPipeline {
     /// block shrinks with the shard width).
     pub fn kv_stats(&self) -> Result<KvCacheStats> {
         for worker in &self.workers {
-            worker
-                .port
-                .send(WireMsg::KvStatsReq, 0)
-                .map_err(|e| anyhow!(e))?;
+            worker.link.send(WireMsg::KvStatsReq).map_err(|e| anyhow!(e))?;
         }
         let mut sum = KvCacheStats::default();
         for (wi, worker) in self.workers.iter().enumerate() {
-            let (msg, _) = worker.port.recv().map_err(|e| anyhow!(e))?;
+            let msg = worker.link.recv().map_err(|e| anyhow!(e))?;
             match msg {
                 WireMsg::KvStats { stats } => sum = sum.merge(&stats),
                 WireMsg::WorkerError { msg } => bail!("attention worker {wi}: {msg}"),
@@ -501,6 +538,23 @@ impl DisaggPipeline {
         Ok(next_token)
     }
 
+    /// Pool-wide wire-traffic accounting: per-message-class logical
+    /// (`wire_bytes()` model) and measured serialized bytes, summed over
+    /// every leader-side link endpoint since pipeline start. Serialized
+    /// bytes are only non-zero on serializing transports (`tcp`).
+    pub fn wire_stats(&self) -> crate::net::WireStats {
+        let mut sum = self.retired_wire;
+        for worker in &self.workers {
+            sum.merge(&worker.link.stats());
+        }
+        sum
+    }
+
+    /// The transport this pipeline was started with.
+    pub fn transport(&self) -> TransportKind {
+        self.opts.transport
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn send_prefill(
         &self,
@@ -528,9 +582,8 @@ impl DisaggPipeline {
                 valid,
                 seq_bucket,
             };
-            let bytes = msg.wire_bytes();
-            self.step_net_bytes.set(self.step_net_bytes.get() + bytes);
-            worker.port.send(msg, bytes).map_err(|e| anyhow!(e))?;
+            self.step_net_bytes.set(self.step_net_bytes.get() + msg.wire_bytes());
+            worker.link.send(msg).map_err(|e| anyhow!(e))?;
         }
         Ok(())
     }
@@ -548,6 +601,7 @@ impl DisaggPipeline {
             generated: vec![first],
             gen_target: steps,
             next_input: first,
+            kv_reserved: 0,
         }];
         while wave[0].generated.len() < steps {
             let (next, _) = self.decode_step(&mut wave, &[0])?;
@@ -582,6 +636,7 @@ impl DisaggPipeline {
                     generated: Vec::new(),
                     gen_target: steps,
                     next_input: p[0],
+                    kv_reserved: 0,
                 }
             })
             .collect();
@@ -627,13 +682,49 @@ impl DisaggPipeline {
             .collect();
         let mut metrics = ServeMetrics::new();
         let mut rng = crate::util::prng::Rng::new(0x1a31a);
+        let workers_n = self.workers.len().max(1);
+        // endpoint counters run from pipeline start; report only this
+        // session's traffic (snapshot before the first control-plane poll)
+        let wire_baseline = self.wire_stats();
+        // KV admission-control state: latest pool snapshot (refreshed every
+        // round) + running per-worker block reservation of live requests
+        // (each request is reserved its full-context footprint on admission;
+        // block counts are worker-invariant under head-level sharding)
+        let mut kv_snap = self.kv_stats()?;
+        let mut live_reserved: usize = 0;
 
         loop {
-            // admission: fill free slots round-robin across waves
+            // admission: fill free slots round-robin across waves; with a
+            // KV budget, a request that would overflow the workers' arenas
+            // is deferred until retirements free blocks (FIFO preserved)
+            let mut any_live = waves_state.iter().any(|w| !w.is_empty());
+            let mut admission_blocked = false;
             for (wi, ws) in waves_state.iter_mut().enumerate() {
+                if admission_blocked {
+                    break;
+                }
                 while let Some(&slot) = free_slots[wi].last() {
-                    let Some(r) = waiting.pop_front() else { break };
+                    let Some(r) = waiting.front().copied() else { break };
+                    let needed = kv_blocks_needed(&[r.max_context()], self.opts.kv_block_size);
+                    if let Some(budget) = self.opts.kv_block_budget {
+                        // worst-case per-worker residency if r joins: live
+                        // reservations (requests grow to full context) or
+                        // the measured snapshot, whichever is larger
+                        let in_use = kv_snap.blocks_in_use.div_ceil(workers_n);
+                        if any_live && live_reserved.max(in_use) + needed > budget {
+                            metrics.record_deferred_admission();
+                            admission_blocked = true;
+                            break;
+                        }
+                        // with no live request to wait for, admission
+                        // proceeds regardless (deferring could never free
+                        // blocks) — the budget is a back-pressure valve,
+                        // not a hard rejection
+                    }
+                    waiting.pop_front();
                     free_slots[wi].pop();
+                    live_reserved += needed;
+                    any_live = true;
                     let prompt: Vec<i32> = (0..r.prompt_tokens.max(1))
                         .map(|_| rng.range(1, mc.vocab as u64) as i32)
                         .collect();
@@ -649,6 +740,7 @@ impl DisaggPipeline {
                             generated: vec![first],
                             gen_target: r.gen_tokens,
                             next_input: first,
+                            kv_reserved: needed,
                         });
                     } else {
                         ws.push(SlotState {
@@ -659,6 +751,7 @@ impl DisaggPipeline {
                             generated: Vec::new(),
                             gen_target: r.gen_tokens,
                             next_input: prompt[0],
+                            kv_reserved: needed,
                         });
                     }
                 }
@@ -686,6 +779,7 @@ impl DisaggPipeline {
                     if s.done() {
                         free_slots[wi].push(s.cache_slot); // recycle KV slot
                         retired.push(s.cache_slot);
+                        live_reserved -= s.kv_reserved;
                         false
                     } else {
                         true
@@ -697,8 +791,10 @@ impl DisaggPipeline {
             // per-round KV occupancy snapshot, taken BEFORE retiring the
             // round's completed requests so kv_peak_blocks reflects true
             // residency (a request that finishes in its first round must
-            // still show up in the peak)
-            metrics.record_kv(self.kv_stats()?);
+            // still show up in the peak); the same snapshot feeds the next
+            // round's admission check
+            kv_snap = self.kv_stats()?;
+            metrics.record_kv(kv_snap);
 
             // now free the finished requests' KV blocks on every worker —
             // arena residency tracks live context, not slot capacity
@@ -706,6 +802,9 @@ impl DisaggPipeline {
                 self.retire_slot(slot)?;
             }
         }
+        // pool-wide wire accounting: measured serialized bytes next to the
+        // logical wire_bytes() model, per message class (this session only)
+        metrics.record_wire(&self.wire_stats().delta_since(&wire_baseline));
         Ok(metrics)
     }
 
@@ -715,7 +814,7 @@ impl DisaggPipeline {
     /// all its KV state (the head shard of every live request) is lost.
     pub fn kill_attn_worker(&mut self, idx: usize) {
         let w = &mut self.workers[idx];
-        let _ = w.port.send(WireMsg::Shutdown, 0);
+        let _ = w.link.send(WireMsg::Shutdown);
         if let Some(t) = w.thread.take() {
             let _ = t.join();
         }
@@ -732,20 +831,10 @@ impl DisaggPipeline {
         idx: usize,
         live: &[(u32, Vec<i32>)],
     ) -> Result<()> {
-        let (leader_port, worker_port) =
-            link::<WireMsg>(self.opts.stack, LINE_RATE_400G, self.opts.time_scale);
-        let cfg = AttnWorkerCfg {
-            artifacts_dir: self.opts.artifacts_dir.clone(),
-            shard: idx,
-            n_shards: self.opts.attn_workers,
-            slots: self.opts.slots * self.opts.max_waves,
-            kv_block_size: self.opts.kv_block_size,
-        };
-        let thread = std::thread::Builder::new()
-            .name(format!("lamina-attn-{idx}-r"))
-            .spawn(move || run_attn_worker(cfg, worker_port))
-            .context("respawn attention worker")?;
-        self.workers[idx] = WorkerHandle { port: leader_port, thread: Some(thread) };
+        // keep the failed link's traffic in the pool totals before the
+        // handle (and its counters) is replaced
+        self.retired_wire.merge(&self.workers[idx].link.stats());
+        self.workers[idx] = spawn_worker(&self.opts, idx, true)?;
         for (slot, tokens) in live {
             assert!(!tokens.is_empty());
             // re-prefill the full known token history; the final next-token
@@ -757,7 +846,7 @@ impl DisaggPipeline {
 
     pub fn shutdown(mut self) {
         for w in &self.workers {
-            let _ = w.port.send(WireMsg::Shutdown, 0);
+            let _ = w.link.send(WireMsg::Shutdown);
         }
         for w in &mut self.workers {
             if let Some(t) = w.thread.take() {

@@ -3,17 +3,33 @@
 //! These are the exact tensors the paper moves over the DCN each layer:
 //! q right after Q-Proj+RoPE (the overlap path), k/v at slice end, and the
 //! attention output back — plus the KV lifecycle control plane (`Retire`,
-//! `KvStats*`) the paged arena needs. Tensor payloads are `Arc`-backed
-//! [`HostTensor`] views, so a send moves a pointer on the host while
-//! [`WireMsg::wire_bytes`] still charges the *logical* payload size to the
-//! simulated network — the bytes really cross threads via
-//! `netsim::transport`, and the modelled latency is unchanged.
+//! `KvStats*`) the paged arena needs.
+//!
+//! A `WireMsg` is transport-agnostic: it crosses whichever
+//! [`crate::net::Transport`] the pipeline was started with.
+//!
+//! * Over the **in-process** link (`--transport inproc`,
+//!   `net::inproc` → `netsim::transport`), tensor payloads are `Arc`-backed
+//!   [`HostTensor`] views — a send moves a pointer on the host, mirroring
+//!   RDMA's no-intermediate-copy property — and [`WireMsg::wire_bytes`]
+//!   charges the *logical* payload size to the simulated network.
+//! * Over the **TCP** transport (`--transport tcp`, `net::tcp`), every
+//!   message is serialized through `net::codec` into a versioned,
+//!   length-prefixed, checksummed frame (12-byte header: magic, version,
+//!   type tag, payload length, FNV-1a checksum; tensors carry dtype/shape
+//!   metadata) and the transport records *measured* frame bytes next to
+//!   the same logical model — the per-class comparison lands in
+//!   `ServeMetrics::wire_stats`.
+//!
+//! `wire_bytes()` therefore stays the single logical-size model both
+//! transports account against; the codec's `encoded_len()` is the measured
+//! counterpart it is validated with.
 
 use crate::metrics::KvCacheStats;
 use crate::runtime::host::HostTensor;
 
 /// Messages on the leader↔worker link (one enum; the link is bidirectional).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum WireMsg {
     /// Query shard for one layer step. Arrives first; in overlap mode the
     /// worker immediately starts partial attention over its cached tokens.

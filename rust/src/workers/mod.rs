@@ -5,9 +5,14 @@
 //! through PJRT and drives the decode loop. The **attention workers**
 //! ([`attn_worker`]) are the memory-optimised pool: each owns a head shard
 //! (`KH/W` KV heads) of *every* request's KV cache and runs the attention
-//! artifacts for it. Tensors cross between them over the paced in-process
-//! network (`netsim::transport`), preserving the paper's §4.2.2 Q-early
-//! overlap and §4.3 staggered-wave pipelining.
+//! artifacts for it. Tensors cross between them over a pluggable
+//! [`crate::net::Transport`] — the paced in-process channel
+//! (`netsim::transport`, `--transport inproc`) or real TCP loopback
+//! sockets carrying serialized `net::codec` frames (`--transport tcp`) —
+//! preserving the paper's §4.2.2 Q-early overlap and §4.3 staggered-wave
+//! pipelining over either wire. Both worker loops are generic over the
+//! trait; the full decode + chunked-prefill session is bit-identical
+//! across transports (asserted by `tests/net_e2e.rs`).
 //!
 //! # Memory: block-paged KV arenas
 //!

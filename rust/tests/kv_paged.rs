@@ -103,7 +103,7 @@ fn pick_slots(rng: &mut Rng, n: usize) -> Vec<u32> {
     all
 }
 
-fn check_gather(arena: &PagedKvArena, dense: &DenseRef, rng: &mut Rng, tag: &str) {
+fn check_gather(arena: &mut PagedKvArena, dense: &DenseRef, rng: &mut Rng, tag: &str) {
     let bucket = rng.usize(1, SLOTS + 1);
     let mut slots = pick_slots(rng, bucket);
     for s in slots.iter_mut() {
@@ -194,7 +194,7 @@ fn run_case(seed: u64, block_size: usize, ops: usize) {
             }
         }
 
-        check_gather(&arena, &dense, &mut rng, &tag);
+        check_gather(&mut arena, &dense, &mut rng, &tag);
 
         // allocator invariant: blocks in use exactly cover cached tokens
         let table_lens: Vec<usize> = (0..SLOTS as u32).map(|s| arena.len_tokens(s)).collect();

@@ -1,0 +1,206 @@
+//! `net::codec` property tests: every `WireMsg` variant must round-trip
+//! bit-identically through the frame format under randomized shapes,
+//! dtypes, empty tensors and max-size control vectors — and corrupted or
+//! short-read input must yield a typed decode error (or "need more
+//! bytes"), never a panic. Uses the in-repo PRNG (no proptest offline).
+
+use lamina::metrics::KvCacheStats;
+use lamina::net::codec::{self, CodecError};
+use lamina::runtime::host::HostTensor;
+use lamina::util::prng::Rng;
+use lamina::workers::WireMsg;
+
+/// Random tensor with 1–4 dims (dims may be zero → empty tensors) in a
+/// random dtype.
+fn rand_tensor(rng: &mut Rng) -> HostTensor {
+    let ndim = rng.usize(1, 5);
+    let shape: Vec<usize> = (0..ndim)
+        .map(|_| if rng.chance(0.1) { 0 } else { rng.usize(1, 9) })
+        .collect();
+    let n: usize = shape.iter().product();
+    if rng.chance(0.25) {
+        let data: Vec<i32> = (0..n).map(|_| rng.next_u64() as i32).collect();
+        HostTensor::i32(shape, data)
+    } else {
+        // finite, non-NaN values so PartialEq is exact
+        let data: Vec<f32> = (0..n).map(|_| (rng.next_u64() as i32 as f32) * 0.5).collect();
+        HostTensor::f32(shape, data)
+    }
+}
+
+fn rand_msg(rng: &mut Rng) -> WireMsg {
+    match rng.usize(0, 9) {
+        0 => {
+            let rows = rng.usize(0, 5);
+            WireMsg::StepQ {
+                layer: rng.usize(0, 1 << 16),
+                slots: (0..rows).map(|_| rng.next_u64() as u32).collect(),
+                q: rand_tensor(rng),
+                lens: (0..rows).map(|_| rng.next_u64() as i32).collect(),
+                seq_bucket: rng.usize(0, 1 << 20),
+                overlap: rng.chance(0.5),
+            }
+        }
+        1 => WireMsg::StepKv { layer: rng.usize(0, 99), k: rand_tensor(rng), v: rand_tensor(rng) },
+        2 => WireMsg::PrefillChunk {
+            layer: rng.usize(0, 99),
+            slot: rng.next_u64() as u32,
+            q: rand_tensor(rng),
+            k: rand_tensor(rng),
+            v: rand_tensor(rng),
+            cached: rng.next_u64() as i32,
+            valid: rng.usize(0, 1 << 20),
+            seq_bucket: rng.usize(0, 1 << 20),
+        },
+        3 => WireMsg::AttnOut { layer: rng.usize(0, 99), out: rand_tensor(rng) },
+        4 => WireMsg::Retire { slot: rng.next_u64() as u32 },
+        5 => WireMsg::KvStatsReq,
+        6 => WireMsg::KvStats {
+            stats: KvCacheStats {
+                blocks_in_use: rng.usize(0, 1 << 30),
+                total_blocks: rng.usize(0, 1 << 30),
+                block_size: rng.usize(0, 1 << 16),
+                internal_waste_tokens: rng.usize(0, 1 << 30),
+            },
+        },
+        7 => {
+            let n = rng.usize(0, 200);
+            let text: String = (0..n).map(|_| char::from(b'a' + (rng.usize(0, 26) as u8))).collect();
+            WireMsg::WorkerError { msg: text }
+        }
+        _ => WireMsg::Shutdown,
+    }
+}
+
+#[test]
+fn prop_every_variant_roundtrips_bit_identically() {
+    let mut rng = Rng::new(0xc0dec);
+    for case in 0..500 {
+        let msg = rand_msg(&mut rng);
+        let mut buf = Vec::new();
+        let n = codec::encode(&msg, &mut buf);
+        assert_eq!(n, buf.len(), "case {case}: frame length");
+        assert_eq!(n, codec::encoded_len(&msg), "case {case}: encoded_len model");
+        let (got, used) = codec::decode_frame(&buf)
+            .unwrap_or_else(|e| panic!("case {case}: decode error {e}"))
+            .expect("complete frame");
+        assert_eq!(used, n, "case {case}: consumed bytes");
+        assert_eq!(got, msg, "case {case}: payload diverged");
+    }
+}
+
+#[test]
+fn max_size_control_vectors_roundtrip() {
+    // slots/lens at the protocol's practical maximum (one entry per batch
+    // row of the largest bucket, here pushed far beyond: 4096 entries)
+    let rows = 4096;
+    let msg = WireMsg::StepQ {
+        layer: usize::from(u16::MAX),
+        slots: (0..rows as u32).rev().collect(),
+        q: HostTensor::zeros_f32(vec![rows, 1, 8]),
+        lens: (0..rows as i32).map(|i| i - 2048).collect(),
+        seq_bucket: 1 << 20,
+        overlap: true,
+    };
+    let mut buf = Vec::new();
+    codec::encode(&msg, &mut buf);
+    let (got, _) = codec::decode_frame(&buf).unwrap().unwrap();
+    assert_eq!(got, msg);
+}
+
+#[test]
+fn empty_tensor_and_empty_vectors_roundtrip() {
+    let msg = WireMsg::StepQ {
+        layer: 0,
+        slots: Vec::new(),
+        q: HostTensor::f32(vec![0, 4, 8], Vec::new()),
+        lens: Vec::new(),
+        seq_bucket: 0,
+        overlap: false,
+    };
+    let mut buf = Vec::new();
+    codec::encode(&msg, &mut buf);
+    let (got, _) = codec::decode_frame(&buf).unwrap().unwrap();
+    assert_eq!(got, msg);
+}
+
+#[test]
+fn prop_short_reads_ask_for_more_never_panic() {
+    let mut rng = Rng::new(0x5caff);
+    for _ in 0..50 {
+        let msg = rand_msg(&mut rng);
+        let mut buf = Vec::new();
+        codec::encode(&msg, &mut buf);
+        // every strict prefix is "incomplete", not an error
+        for cut in [0, 1, 3, 4, 11, buf.len().saturating_sub(1)] {
+            let cut = cut.min(buf.len().saturating_sub(1));
+            assert_eq!(
+                codec::decode_frame(&buf[..cut]).expect("prefix must not error"),
+                None,
+                "prefix len {cut} of {}",
+                buf.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_corrupted_frames_error_not_panic() {
+    let mut rng = Rng::new(0xbadf00d);
+    for case in 0..200 {
+        let msg = rand_msg(&mut rng);
+        let mut buf = Vec::new();
+        codec::encode(&msg, &mut buf);
+        let i = rng.usize(0, buf.len());
+        let bit = 1u8 << rng.usize(0, 8);
+        let mut bad = buf.clone();
+        bad[i] ^= bit;
+        // a flipped bit may make the frame corrupt (Err), or — when it hits
+        // the length field — merely incomplete (Ok(None)); it must never
+        // decode as a valid frame, and must never panic
+        match codec::decode_frame(&bad) {
+            Ok(Some((got, _))) => {
+                assert_ne!(got, msg, "case {case}: corruption at byte {i} went unnoticed")
+            }
+            Ok(None) | Err(_) => {}
+        }
+    }
+}
+
+#[test]
+fn specific_corruptions_have_typed_errors() {
+    let mut buf = Vec::new();
+    codec::encode(&WireMsg::Retire { slot: 9 }, &mut buf);
+
+    let mut bad_magic = buf.clone();
+    bad_magic[0] ^= 0xff;
+    assert!(matches!(codec::decode_frame(&bad_magic), Err(CodecError::BadMagic(_))));
+
+    let mut bad_version = buf.clone();
+    bad_version[2] = 99;
+    assert!(matches!(codec::decode_frame(&bad_version), Err(CodecError::BadVersion(99))));
+
+    // the checksum covers the type tag, so a flipped tag is caught even
+    // though the payload bytes are untouched
+    let mut bad_tag = buf.clone();
+    bad_tag[3] = 8; // Shutdown's tag
+    assert!(matches!(codec::decode_frame(&bad_tag), Err(CodecError::BadChecksum { .. })));
+
+    let mut bad_payload = buf;
+    let last = bad_payload.len() - 1;
+    bad_payload[last] ^= 0x01;
+    assert!(matches!(
+        codec::decode_frame(&bad_payload),
+        Err(CodecError::BadChecksum { .. })
+    ));
+}
+
+#[test]
+fn giant_length_field_rejected_without_allocation() {
+    let mut buf = Vec::new();
+    codec::encode(&WireMsg::Shutdown, &mut buf);
+    // claim a multi-GiB payload: must be rejected as malformed, not
+    // buffered for ("need more bytes") or allocated
+    buf[4..8].copy_from_slice(&(u32::MAX).to_le_bytes());
+    assert!(matches!(codec::decode_frame(&buf), Err(CodecError::Malformed(_))));
+}

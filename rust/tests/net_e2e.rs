@@ -1,0 +1,300 @@
+//! Transport equivalence, end to end.
+//!
+//! Part 1 (always runs): a scripted decode+prefill-shaped `WireMsg` session
+//! driven over BOTH transports — the paced in-process channel and real TCP
+//! loopback sockets — must produce bit-identical replies, and the TCP
+//! side's measured serialized bytes must dominate the logical
+//! `wire_bytes()` model with a tightly bounded overhead ratio.
+//!
+//! Part 2 (needs `make artifacts`): the full tiny-model pipeline — greedy
+//! decode, chunked prefill + decode, and a continuous-batching serve — run
+//! under `--transport tcp` must match the in-process transport
+//! token-for-token, with the measured-vs-logical report populated in
+//! `ServeMetrics`, plus a KV-budget serve that exercises leader-side
+//! admission deferral.
+
+use std::path::PathBuf;
+
+use lamina::metrics::KvCacheStats;
+use lamina::net::{inproc, tcp, MsgClass, Transport, TransportKind, WireStats};
+use lamina::netsim::stack::{FHBN, LINE_RATE_400G};
+use lamina::runtime::host::HostTensor;
+use lamina::trace::Request;
+use lamina::workers::{DisaggPipeline, PipelineOpts, WireMsg};
+
+// ---------------------------------------------------------------------------
+// Part 1: protocol-level session over both transports (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+fn tensor(shape: &[usize], salt: f32) -> HostTensor {
+    let n: usize = shape.iter().product();
+    HostTensor::f32(
+        shape.to_vec(),
+        (0..n).map(|i| salt + (i as f32) * 0.125 - (i % 7) as f32).collect(),
+    )
+}
+
+/// Deterministic stand-in for an attention worker: combines StepQ+StepKv
+/// (or a PrefillChunk) into an output tensor by pure arithmetic, so replies
+/// depend only on the received bytes — any transport-level corruption or
+/// reordering would change them.
+fn scripted_worker<T: Transport>(link: T) {
+    let mut pending_q: Option<HostTensor> = None;
+    loop {
+        match link.recv().expect("worker recv") {
+            WireMsg::Shutdown => return,
+            WireMsg::Retire { .. } => {}
+            WireMsg::KvStatsReq => {
+                let stats = KvCacheStats {
+                    blocks_in_use: 3,
+                    total_blocks: 8,
+                    block_size: 16,
+                    internal_waste_tokens: 1,
+                };
+                link.send(WireMsg::KvStats { stats }).expect("worker send");
+            }
+            WireMsg::StepQ { q, .. } => pending_q = Some(q),
+            WireMsg::StepKv { layer, k, v } => {
+                let q = pending_q.take().expect("StepKv without StepQ");
+                let out: Vec<f32> = q
+                    .as_f32()
+                    .iter()
+                    .zip(k.as_f32().iter().cycle())
+                    .zip(v.as_f32().iter().cycle())
+                    .map(|((&a, &b), &c)| a + 2.0 * b - 0.5 * c)
+                    .collect();
+                let out = HostTensor::f32(q.shape().to_vec(), out);
+                link.send(WireMsg::AttnOut { layer, out }).expect("worker send");
+            }
+            WireMsg::PrefillChunk { layer, q, k, v, cached, valid, .. } => {
+                let bias = cached as f32 + valid as f32 * 0.25;
+                let out: Vec<f32> = q
+                    .as_f32()
+                    .iter()
+                    .zip(k.as_f32().iter().cycle())
+                    .zip(v.as_f32().iter().cycle())
+                    .map(|((&a, &b), &c)| a * 0.5 + b - c + bias)
+                    .collect();
+                let out = HostTensor::f32(q.shape().to_vec(), out);
+                link.send(WireMsg::AttnOut { layer, out }).expect("worker send");
+            }
+            other => panic!("unexpected message {other:?}"),
+        }
+    }
+}
+
+/// Drive a fixed decode + chunked-prefill-shaped session over `leader`,
+/// returning every reply (in order) plus the leader endpoint's wire stats.
+fn run_session<T: Transport + 'static>(leader: T, worker: T) -> (Vec<WireMsg>, WireStats) {
+    let h = std::thread::spawn(move || scripted_worker(worker));
+    let mut replies = Vec::new();
+
+    // decode steps: 3 layers × 2 steps
+    for step in 0..2i32 {
+        for layer in 0..3usize {
+            let salt = (step * 10) as f32 + layer as f32;
+            leader
+                .send(WireMsg::StepQ {
+                    layer,
+                    slots: vec![0, 1, u32::MAX, 3],
+                    q: tensor(&[4, 8, 16], salt),
+                    lens: vec![step, step, 0, step + 2],
+                    seq_bucket: 64,
+                    overlap: false,
+                })
+                .unwrap();
+            leader
+                .send(WireMsg::StepKv {
+                    layer,
+                    k: tensor(&[4, 4, 16], salt + 0.5),
+                    v: tensor(&[4, 4, 16], salt - 0.5),
+                })
+                .unwrap();
+            replies.push(leader.recv().unwrap());
+        }
+    }
+
+    // chunked prefill: 2 chunks on one slot
+    for (chunk, cached) in [(0i32, 0i32), (1, 8)] {
+        leader
+            .send(WireMsg::PrefillChunk {
+                layer: 0,
+                slot: 2,
+                q: tensor(&[8, 8, 16], 100.0 + chunk as f32),
+                k: tensor(&[8, 4, 16], 200.0 + chunk as f32),
+                v: tensor(&[8, 4, 16], 300.0 + chunk as f32),
+                cached,
+                valid: 8,
+                seq_bucket: 64,
+            })
+            .unwrap();
+        replies.push(leader.recv().unwrap());
+    }
+
+    // KV control plane
+    leader.send(WireMsg::KvStatsReq).unwrap();
+    replies.push(leader.recv().unwrap());
+    leader.send(WireMsg::Retire { slot: 2 }).unwrap();
+
+    leader.send(WireMsg::Shutdown).unwrap();
+    h.join().unwrap();
+    let stats = leader.stats();
+    (replies, stats)
+}
+
+#[test]
+fn session_bit_identical_across_transports() {
+    let (inproc_leader, inproc_worker) = inproc::pair(&FHBN, LINE_RATE_400G, 0.0);
+    let (tcp_leader, tcp_worker) = tcp::pair().expect("loopback pair");
+
+    let (replies_inproc, stats_inproc) = run_session(inproc_leader, inproc_worker);
+    let (replies_tcp, stats_tcp) = run_session(tcp_leader, tcp_worker);
+
+    // bit-identical replies: serialize→socket→deserialize changed nothing
+    assert_eq!(replies_inproc.len(), replies_tcp.len());
+    for (i, (a, b)) in replies_inproc.iter().zip(&replies_tcp).enumerate() {
+        assert_eq!(a, b, "reply {i} diverged between transports");
+    }
+
+    // both endpoints saw identical logical traffic
+    assert_eq!(stats_inproc.total().msgs, stats_tcp.total().msgs);
+    assert_eq!(stats_inproc.total().logical_bytes, stats_tcp.total().logical_bytes);
+    // the in-process link serializes nothing
+    assert_eq!(stats_inproc.total().serialized_bytes, 0);
+    assert_eq!(stats_inproc.overhead_ratio(), None);
+
+    // TCP measured ≥ logical on every class that saw traffic…
+    for (class, c) in stats_tcp.iter() {
+        if c.msgs == 0 {
+            continue;
+        }
+        assert!(
+            c.serialized_bytes >= c.logical_bytes,
+            "{}: measured {} < logical {}",
+            class.name(),
+            c.serialized_bytes,
+            c.logical_bytes
+        );
+    }
+    // …and on tensor-bearing classes the framing overhead is tiny
+    for class in [MsgClass::StepQ, MsgClass::StepKv, MsgClass::Prefill, MsgClass::AttnOut] {
+        let c = stats_tcp.class(class);
+        assert!(c.msgs > 0, "{} must have traffic", class.name());
+        let ratio = c.serialized_bytes as f64 / c.logical_bytes as f64;
+        assert!(
+            (1.0..1.15).contains(&ratio),
+            "{}: overhead ratio {ratio:.4} out of bounds",
+            class.name()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Part 2: the real tiny-model pipeline over TCP (needs artifacts)
+// ---------------------------------------------------------------------------
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping net e2e pipeline test: run `make artifacts` first");
+    }
+    ok
+}
+
+fn opts_with(transport: TransportKind) -> PipelineOpts {
+    PipelineOpts { transport, ..PipelineOpts::new(artifacts_dir()) }
+}
+
+#[test]
+fn tcp_pipeline_decode_and_prefill_bit_identical_to_inproc() {
+    if !have_artifacts() {
+        return;
+    }
+    let prompts: Vec<Vec<i32>> = vec![vec![1, 7, 42, 99, 3], vec![5, 6], vec![11; 12]];
+    let steps = 6;
+
+    let mut decoded: Vec<Vec<Vec<i32>>> = Vec::new();
+    let mut generated: Vec<Vec<i32>> = Vec::new();
+    for transport in [TransportKind::Inproc, TransportKind::Tcp] {
+        let pipe = DisaggPipeline::start(opts_with(transport)).expect("pipeline start");
+        decoded.push(pipe.decode(&prompts, steps).expect("decode"));
+        // chunked prefill + decode (the paper's transition protocol)
+        generated.push(pipe.generate(0, &prompts[2], steps).expect("generate"));
+        // TCP must actually have serialized traffic
+        let wire = pipe.wire_stats().total();
+        match transport {
+            TransportKind::Inproc => assert_eq!(wire.serialized_bytes, 0),
+            TransportKind::Tcp => {
+                assert!(wire.serialized_bytes > wire.logical_bytes);
+                // bucket-1 decode steps carry small tensors, so framing
+                // overhead is at its worst here; still tightly bounded
+                assert!(wire.serialized_bytes as f64 / wire.logical_bytes as f64 < 1.35);
+            }
+        }
+        pipe.shutdown();
+    }
+    assert_eq!(decoded[0], decoded[1], "decode tokens diverge across transports");
+    assert_eq!(generated[0], generated[1], "prefill+decode diverges across transports");
+}
+
+#[test]
+fn tcp_serve_session_reports_measured_vs_logical() {
+    if !have_artifacts() {
+        return;
+    }
+    let reqs: Vec<Request> = (0..10)
+        .map(|i| Request {
+            id: i,
+            prompt_tokens: 3 + (i as usize % 4) * 5,
+            gen_tokens: 2 + (i as usize % 3),
+        })
+        .collect();
+
+    let inproc_pipe = DisaggPipeline::start(opts_with(TransportKind::Inproc)).unwrap();
+    let m_inproc = inproc_pipe.serve(&reqs, 1).unwrap();
+    inproc_pipe.shutdown();
+
+    let tcp_pipe = DisaggPipeline::start(opts_with(TransportKind::Tcp)).unwrap();
+    let m_tcp = tcp_pipe.serve(&reqs, 1).unwrap();
+    tcp_pipe.shutdown();
+
+    // same workload semantics over either wire
+    assert_eq!(m_inproc.requests_completed, m_tcp.requests_completed);
+    assert_eq!(m_inproc.tokens_generated, m_tcp.tokens_generated);
+
+    // the serve metrics carry the per-class measured-vs-logical report
+    let wire = m_tcp.wire_stats();
+    for (class, c) in wire.iter() {
+        if c.msgs == 0 {
+            continue;
+        }
+        assert!(c.serialized_bytes >= c.logical_bytes, "{} under-measured", class.name());
+    }
+    let ratio = wire.overhead_ratio().expect("tcp serve must measure bytes");
+    assert!((1.0..1.35).contains(&ratio), "overhead ratio {ratio:.4}");
+    assert_eq!(m_inproc.wire_stats().overhead_ratio(), None);
+}
+
+#[test]
+fn kv_budget_defers_admissions_but_completes() {
+    if !have_artifacts() {
+        return;
+    }
+    let reqs: Vec<Request> = (0..12)
+        .map(|i| Request { id: i, prompt_tokens: 9 + (i as usize % 3) * 8, gen_tokens: 3 })
+        .collect();
+    // budget sized so only ~2 requests fit concurrently (block_size 16)
+    let opts = PipelineOpts { kv_block_budget: Some(4), ..opts_with(TransportKind::Inproc) };
+    let pipe = DisaggPipeline::start(opts).unwrap();
+    let m = pipe.serve(&reqs, 1).unwrap();
+    pipe.shutdown();
+    assert_eq!(m.requests_completed, 12, "budget must defer, not drop");
+    assert!(m.deferred_admissions() > 0, "tight budget must defer admissions");
+    // the budget kept worker residency bounded: peak blocks (summed over
+    // the 2 workers) within budget × workers
+    assert!(m.kv_peak_blocks() <= 4 * 2, "peak {} blocks", m.kv_peak_blocks());
+}

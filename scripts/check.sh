@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Repo-wide verification gate: release build, full test suite, and the
+# bench suite in quick mode (which also regenerates rust/BENCH_decode.json
+# with codec GB/s, TCP-loopback RTT and KV-gather rows).
+#
+# Usage: scripts/check.sh [--no-bench]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+  echo "== cargo bench (LAMINA_BENCH_QUICK=1) =="
+  LAMINA_BENCH_QUICK=1 cargo bench
+  echo "bench output: rust/BENCH_decode.json"
+fi
+
+echo "check.sh: all green"
