@@ -1,0 +1,180 @@
+//! The PJRT [`AttnBackend`]: gathers contiguous K/V from the arena and
+//! executes the AOT attention artifacts through the [`Engine`].
+//!
+//! This is the original attention-worker compute path, kept as the
+//! `--attn-backend engine` option: it stages a
+//! `[bucket, KH_s, seq_bucket, hd]` K/V pair per layer per step through
+//! [`PagedKvArena::gather`] (a host copy, charged to
+//! `runtime::host::copies`; the scratch pair is recycled across steps) and
+//! runs the compiled Pallas kernels on it. The entry-point names are
+//! resolved **once** at construction (they used to be `format!`ed per
+//! message on the decode hot loop).
+
+use std::path::Path;
+
+use crate::kvcache::PagedKvArena;
+use crate::runtime::engine::Engine;
+use crate::runtime::host::HostTensor;
+use crate::runtime::manifest::ModelCfg;
+
+use super::{AttnBackend, AttnBackendKind, ModelGeom, PartialState};
+
+pub struct EngineBackend {
+    engine: Engine,
+    /// This shard's KV heads / head dim (prefill reshapes need them).
+    khs: usize,
+    hd: usize,
+    /// Entry names, resolved once per worker (not per message).
+    attention_entry: String,
+    attn_prev_entry: String,
+    attn_combine_entry: String,
+    prefill_entry: String,
+}
+
+impl EngineBackend {
+    pub fn new(artifacts_dir: &Path, n_shards: usize) -> Result<EngineBackend, String> {
+        let engine = Engine::load(artifacts_dir).map_err(|e| format!("engine load: {e:#}"))?;
+        let mc = &engine.manifest.config;
+        if mc.kv_heads % n_shards != 0 {
+            return Err(format!(
+                "shards ({n_shards}) must divide kv heads ({})",
+                mc.kv_heads
+            ));
+        }
+        let khs = mc.kv_heads / n_shards;
+        let hd = mc.head_dim;
+        let sfx = if n_shards == 1 { String::new() } else { format!("_w{n_shards}") };
+        Ok(EngineBackend {
+            khs,
+            hd,
+            attention_entry: format!("attention{sfx}"),
+            attn_prev_entry: format!("attn_prev{sfx}"),
+            attn_combine_entry: format!("attn_combine{sfx}"),
+            prefill_entry: format!("prefill_attn{sfx}"),
+            engine,
+        })
+    }
+
+    pub fn config(&self) -> &ModelCfg {
+        &self.engine.manifest.config
+    }
+
+    pub fn geom(&self) -> ModelGeom {
+        ModelGeom::of(self.config())
+    }
+}
+
+impl AttnBackend for EngineBackend {
+    fn kind(&self) -> AttnBackendKind {
+        AttnBackendKind::Engine
+    }
+
+    /// Pre-compile this shard's attention entry points (lazy compiles would
+    /// otherwise spike the first decode steps' latency).
+    fn warmup(&mut self) -> Result<(), String> {
+        for e in &self.engine.manifest.entrypoints {
+            let mine = e.entry == self.attention_entry
+                || e.entry == self.attn_prev_entry
+                || e.entry == self.attn_combine_entry
+                || e.entry == self.prefill_entry;
+            if mine {
+                self.engine
+                    .execute_warm(&e.entry, e.batch, e.seq)
+                    .map_err(|err| format!("warmup {}: {err:#}", e.entry))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn attention(
+        &mut self,
+        arena: &mut PagedKvArena,
+        slots: &[u32],
+        layer: usize,
+        q: &HostTensor,
+        lens: &[i32],
+        seq_bucket: usize,
+    ) -> Result<HostTensor, String> {
+        let bucket = q.shape()[0];
+        let (kc, vc) = arena.gather(slots, layer, bucket, seq_bucket);
+        let lens_t = HostTensor::i32(vec![bucket], lens.to_vec());
+        Ok(self
+            .engine
+            .execute_raw(&self.attention_entry, bucket, Some(seq_bucket), &[q, &kc, &vc, &lens_t])
+            .map_err(|e| format!("{}: {e:#}", self.attention_entry))?
+            .remove(0))
+    }
+
+    fn attn_prev(
+        &mut self,
+        arena: &mut PagedKvArena,
+        slots: &[u32],
+        layer: usize,
+        q: &HostTensor,
+        lens: &[i32],
+        seq_bucket: usize,
+    ) -> Result<PartialState, String> {
+        let bucket = q.shape()[0];
+        let (kc, vc) = arena.gather(slots, layer, bucket, seq_bucket);
+        let lens_t = HostTensor::i32(vec![bucket], lens.to_vec());
+        let out = self
+            .engine
+            .execute_raw(&self.attn_prev_entry, bucket, Some(seq_bucket), &[q, &kc, &vc, &lens_t])
+            .map_err(|e| format!("{}: {e:#}", self.attn_prev_entry))?;
+        let mut it = out.into_iter();
+        let (Some(a), Some(s), Some(m)) = (it.next(), it.next(), it.next()) else {
+            return Err(format!("{}: output arity", self.attn_prev_entry));
+        };
+        Ok(PartialState { a, s, m })
+    }
+
+    fn attn_combine(
+        &mut self,
+        q: &HostTensor,
+        k: &HostTensor,
+        v: &HostTensor,
+        prev: &PartialState,
+    ) -> Result<HostTensor, String> {
+        let bucket = q.shape()[0];
+        Ok(self
+            .engine
+            .execute_raw(
+                &self.attn_combine_entry,
+                bucket,
+                None,
+                &[q, k, v, &prev.a, &prev.s, &prev.m],
+            )
+            .map_err(|e| format!("{}: {e:#}", self.attn_combine_entry))?
+            .remove(0))
+    }
+
+    fn prefill(
+        &mut self,
+        arena: &mut PagedKvArena,
+        slot: u32,
+        layer: usize,
+        q: &HostTensor,
+        k: &HostTensor,
+        v: &HostTensor,
+        cached: i32,
+        seq_bucket: usize,
+    ) -> Result<HostTensor, String> {
+        let t = q.shape()[0];
+        // gather this slot's cached prefix; drop the leading batch dim with
+        // a zero-copy reshape to the kernel's [KH_s, S, hd]
+        let (kc_b, vc_b) = arena.gather(&[slot], layer, 1, seq_bucket);
+        let kc = kc_b.reshape(vec![self.khs, seq_bucket, self.hd]);
+        let vc = vc_b.reshape(vec![self.khs, seq_bucket, self.hd]);
+        let lens_t = HostTensor::i32(vec![1], vec![cached]);
+        Ok(self
+            .engine
+            .execute_raw(
+                &self.prefill_entry,
+                t,
+                Some(seq_bucket),
+                &[q, &kc, &vc, &lens_t, k, v],
+            )
+            .map_err(|e| format!("{}: {e:#}", self.prefill_entry))?
+            .remove(0))
+    }
+}

@@ -1,0 +1,222 @@
+//! `kernels` — the attention-worker compute backends.
+//!
+//! The paper's attention workers are *bandwidth-bound*: each decode step
+//! reads the whole live KV working set once, so every extra byte the worker
+//! moves per step cuts directly into tokens/s. This module owns the two
+//! ways a worker can turn its paged KV arena + an incoming Q into an
+//! attention output shard, behind one [`AttnBackend`] trait:
+//!
+//! * [`EngineBackend`] (`--attn-backend engine`) — the PJRT path: the arena
+//!   **gathers** each step's `[bucket, KH_shard, seq_bucket, hd]` K/V into
+//!   a contiguous staging pair (a per-layer-per-step host copy, charged to
+//!   [`crate::runtime::host::copies`]) and executes the AOT Pallas
+//!   artifacts (`attention` / `attn_prev` / `attn_combine` /
+//!   `prefill_attn`) through the engine.
+//! * [`NativeBackend`] (`--attn-backend native`) — the block-table-native
+//!   path: the pure-Rust [`paged_attn`] kernel consumes the per-slot block
+//!   lists ([`crate::kvcache::arena::PagedKvArena::table_view`]) directly
+//!   and runs **online-softmax** attention over the arena's per-layer block
+//!   buffers in place ([`PagedKvArena::block_slices`] borrows, never
+//!   copies). No gather, no scratch K/V, zero per-step host copies — the
+//!   decode hot loop becomes genuinely bandwidth-shaped, like the paper's
+//!   memory-optimised attention devices.
+//!
+//! # The block-table data path
+//!
+//! A request slot's cache is a chain of fixed-size blocks
+//! (`block_size × hd` floats per KV head, contiguous per `(block, head)`),
+//! mapped by its `BlockTable`. The native kernel walks that chain in
+//! logical-token order: for batch row `b` with slot `s`, head `h`, group
+//! query `g`, it visits block `i` of `table(s)` covering token positions
+//! `[i·bs, i·bs + bs)`, stopping at the row's valid length. Each visit
+//! reads the block's K region once to score, then its V region once to
+//! accumulate — exactly one pass over the live KV bytes, which is the
+//! bandwidth lower bound.
+//!
+//! # The online-softmax recurrence
+//!
+//! Per query vector `q` and block of scores `s_t = q·k_t / √hd`
+//! (FlashAttention/flash-decoding style, also the recurrence the Pallas
+//! `_online_softmax_chunks` kernel uses):
+//!
+//! ```text
+//! m'   = max(m, max_t s_t)                 running max
+//! c    = exp(m − m')                       rescale factor for old state
+//! S'   = S·c + Σ_t exp(s_t − m')           stabilised denominator
+//! A'   = A·c + Σ_t exp(s_t − m') · v_t     stabilised numerator [hd]
+//! ```
+//!
+//! with `(A, S, m)` initialised to `(0, 0, −1e30)`; the final output is
+//! `A/S`. The *partial* form (`attn_prev`) returns `(A, S, m)` unnormalised
+//! so the paper's §4.2.2 overlap can fold the freshly projected token in
+//! later (`attn_combine`), and chunked prefill continues the same recurrence
+//! from the cached prefix into the chunk's causal tail. Because the
+//! recurrence re-associates the softmax sums, native outputs match the
+//! two-pass reference within ~1e-5 absolute rather than bit-for-bit
+//! (`tests/kernel_native.rs` documents and asserts the bound).
+//!
+//! The native kernel parallelises across the batch with
+//! [`crate::util::threadpool::scoped_map`] (rows are independent); outputs
+//! are bit-identical for any thread count, since each row's arithmetic is
+//! sequential and self-contained.
+
+pub mod engine_backend;
+pub mod paged_attn;
+pub mod reference;
+
+use crate::kvcache::PagedKvArena;
+use crate::runtime::host::HostTensor;
+use crate::runtime::manifest::ModelCfg;
+
+pub use engine_backend::EngineBackend;
+pub use paged_attn::{
+    combine_new_token, paged_attn, paged_attn_prev, paged_prefill, NativeBackend, NEG_INF,
+};
+
+/// Backend selector (the `--attn-backend` CLI flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AttnBackendKind {
+    /// PJRT artifacts over gathered contiguous K/V (the original path).
+    #[default]
+    Engine,
+    /// Pure-Rust block-table kernel reading the arena in place (zero
+    /// per-step KV copies; needs no artifacts on the worker).
+    Native,
+}
+
+impl AttnBackendKind {
+    pub fn parse(s: &str) -> Option<AttnBackendKind> {
+        match s {
+            "engine" => Some(AttnBackendKind::Engine),
+            "native" => Some(AttnBackendKind::Native),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AttnBackendKind::Engine => "engine",
+            AttnBackendKind::Native => "native",
+        }
+    }
+}
+
+/// Max-stabilised partial attention state carried from `StepQ` (where the
+/// overlap path computes attention over the *cached* tokens) to `StepKv`
+/// (where the new token is folded in): `a` = stabilised numerator
+/// `[bucket, H_shard, hd]`, `s` = stabilised denominator `[bucket, H_shard]`,
+/// `m` = running max `[bucket, H_shard]`.
+#[derive(Debug, Clone)]
+pub struct PartialState {
+    pub a: HostTensor,
+    pub s: HostTensor,
+    pub m: HostTensor,
+}
+
+/// Model geometry an attention worker needs to size its arena and run the
+/// native kernel. The engine backend derives it from the artifact manifest;
+/// the native backend can be handed one explicitly and then needs **no
+/// artifacts at all** (this is what makes worker-side tests and deployments
+/// artifact-free).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelGeom {
+    pub layers: usize,
+    /// Total KV heads of the model (the worker divides by its shard count).
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+}
+
+impl ModelGeom {
+    pub fn of(cfg: &ModelCfg) -> ModelGeom {
+        ModelGeom {
+            layers: cfg.layers,
+            kv_heads: cfg.kv_heads,
+            head_dim: cfg.head_dim,
+            max_seq: cfg.max_seq,
+        }
+    }
+}
+
+/// One attention worker's compute backend: everything between the wire
+/// messages and the attention math. All tensor conventions follow the wire
+/// protocol (`workers::messages`): `q` is `[bucket, H_shard, hd]`, step K/V
+/// are `[bucket, KH_shard, hd]`, prefill chunks are `[T, ·, hd]`, and
+/// outputs are `[bucket|T, H_shard, hd]`.
+///
+/// The arena is passed `&mut` because the engine backend's gather recycles
+/// its scratch buffers through the arena; the native backend only reads.
+#[allow(clippy::too_many_arguments)]
+pub trait AttnBackend {
+    fn kind(&self) -> AttnBackendKind;
+
+    /// Pre-compile / pre-warm whatever the backend lazily builds (removes
+    /// first-step latency spikes). Default: nothing to warm.
+    fn warmup(&mut self) -> Result<(), String> {
+        Ok(())
+    }
+
+    /// Full decode attention for one layer step, *after* the step's K/V has
+    /// been appended: row `b` attends the first `lens[b]` cached tokens of
+    /// its slot (`lens` already includes the appended token).
+    fn attention(
+        &mut self,
+        arena: &mut PagedKvArena,
+        slots: &[u32],
+        layer: usize,
+        q: &HostTensor,
+        lens: &[i32],
+        seq_bucket: usize,
+    ) -> Result<HostTensor, String>;
+
+    /// Overlap path, first half (§4.2.2): partial attention over the
+    /// *cached* tokens only (`lens[b]` valid, before this step's append).
+    fn attn_prev(
+        &mut self,
+        arena: &mut PagedKvArena,
+        slots: &[u32],
+        layer: usize,
+        q: &HostTensor,
+        lens: &[i32],
+        seq_bucket: usize,
+    ) -> Result<PartialState, String>;
+
+    /// Overlap path, second half: fold the newly projected `k`/`v`
+    /// (`[bucket, KH_shard, hd]`) into `prev` and normalise.
+    fn attn_combine(
+        &mut self,
+        q: &HostTensor,
+        k: &HostTensor,
+        v: &HostTensor,
+        prev: &PartialState,
+    ) -> Result<HostTensor, String>;
+
+    /// Chunked-prefill attention for ONE request (paper §5): every chunk row
+    /// attends the slot's `cached` prefix plus the chunk's causal prefix of
+    /// `k`/`v` (`[T, KH_shard, hd]`). Called *before* the chunk is appended.
+    fn prefill(
+        &mut self,
+        arena: &mut PagedKvArena,
+        slot: u32,
+        layer: usize,
+        q: &HostTensor,
+        k: &HostTensor,
+        v: &HostTensor,
+        cached: i32,
+        seq_bucket: usize,
+    ) -> Result<HostTensor, String>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [AttnBackendKind::Engine, AttnBackendKind::Native] {
+            assert_eq!(AttnBackendKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(AttnBackendKind::parse("cuda"), None);
+        assert_eq!(AttnBackendKind::default(), AttnBackendKind::Engine);
+    }
+}

@@ -1,0 +1,647 @@
+//! Block-table-native decode attention: pure-Rust online-softmax kernels
+//! that read the [`PagedKvArena`] **in place**.
+//!
+//! Where the engine path stages `[bucket, KH_s, seq_bucket, hd]` K/V copies
+//! per layer per step (the last host copy on the decode path before this
+//! module existed), these kernels take the per-slot block lists as an input
+//! and walk the arena's per-layer block buffers directly — each live KV
+//! byte is read exactly once and copied never. See the module docs of
+//! [`crate::kernels`] for the data path and the recurrence.
+//!
+//! All kernels are deterministic for any thread count: batch rows are
+//! independent and each row's arithmetic is sequential, so
+//! `threads = 1` and `threads = N` produce bit-identical outputs.
+
+use crate::kvcache::arena::PAD_SLOT;
+use crate::kvcache::PagedKvArena;
+use crate::runtime::host::HostTensor;
+use crate::util::threadpool::scoped_map;
+
+use super::{AttnBackend, AttnBackendKind, PartialState};
+
+/// Mask value for invalid positions; finite so softmax stays NaN-free
+/// (mirrors the Pallas kernels' `NEG_INF`).
+pub const NEG_INF: f32 = -1e30;
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+/// Online-softmax state for one query vector.
+struct Online<'a> {
+    m: f32,
+    ssum: f32,
+    acc: &'a mut [f32],
+}
+
+impl<'a> Online<'a> {
+    /// `acc` must be zeroed by the caller.
+    fn new(acc: &'a mut [f32]) -> Online<'a> {
+        Online { m: NEG_INF, ssum: 0.0, acc }
+    }
+
+    /// Fold one block of `cnt` scored tokens in: `scores[t]` with value rows
+    /// `vb[t*hd..][..hd]`.
+    fn fold_block(&mut self, scores: &[f32], vb: &[f32], cnt: usize, hd: usize) {
+        let mut bm = NEG_INF;
+        for &s in &scores[..cnt] {
+            if s > bm {
+                bm = s;
+            }
+        }
+        let m_new = if bm > self.m { bm } else { self.m };
+        let corr = (self.m - m_new).exp();
+        self.ssum *= corr;
+        for a in self.acc.iter_mut() {
+            *a *= corr;
+        }
+        for t in 0..cnt {
+            let e = (scores[t] - m_new).exp();
+            self.ssum += e;
+            let vt = &vb[t * hd..][..hd];
+            for (a, &v) in self.acc.iter_mut().zip(vt) {
+                *a += e * v;
+            }
+        }
+        self.m = m_new;
+    }
+
+    /// Fold a single extra token (score `s`, value `vt`) in.
+    fn fold_one(&mut self, s: f32, vt: &[f32]) {
+        let m_new = if s > self.m { s } else { self.m };
+        let corr = (self.m - m_new).exp();
+        self.ssum *= corr;
+        let e = (s - m_new).exp();
+        self.ssum += e;
+        for (a, &v) in self.acc.iter_mut().zip(vt) {
+            *a = *a * corr + e * v;
+        }
+        self.m = m_new;
+    }
+
+    /// Normalise `acc` in place (`A/S`); no-op on the empty state.
+    fn normalize(&mut self) {
+        if self.ssum > 0.0 {
+            let inv = 1.0 / self.ssum;
+            for a in self.acc.iter_mut() {
+                *a *= inv;
+            }
+        }
+    }
+}
+
+/// Run the online recurrence over one slot's cached prefix `[0, n)` for one
+/// (head, group-query): walks the block table in logical-token order,
+/// borrowing each block's K/V region from the arena (no copies).
+#[allow(clippy::too_many_arguments)]
+fn fold_cached(
+    st: &mut Online,
+    arena: &PagedKvArena,
+    slot: u32,
+    layer: usize,
+    head: usize,
+    qv: &[f32],
+    n: usize,
+    scale: f32,
+    scores: &mut [f32],
+) {
+    let bs = arena.block_size();
+    let hd = qv.len();
+    let table = arena.table_view(slot);
+    for (bi, &blk) in table.blocks().iter().enumerate() {
+        let tok0 = bi * bs;
+        if tok0 >= n {
+            break;
+        }
+        let cnt = bs.min(n - tok0);
+        let (kb, vb) = arena.block_slices(layer, blk, head);
+        for t in 0..cnt {
+            scores[t] = dot(qv, &kb[t * hd..][..hd]) * scale;
+        }
+        st.fold_block(scores, vb, cnt, hd);
+    }
+}
+
+/// Valid cached length of `slot` for a row: `len` clamped to the seq bucket
+/// and to what the table actually holds (pad rows → 0).
+fn row_n(arena: &PagedKvArena, slot: u32, len: i32, seq_bucket: usize) -> usize {
+    if slot == PAD_SLOT {
+        return 0;
+    }
+    (len.max(0) as usize)
+        .min(seq_bucket)
+        .min(arena.table_view(slot).len_tokens())
+}
+
+/// Full decode attention over the block tables — the native replacement for
+/// gather + `attention` artifact. Row `b` of `q` (`[bucket, H_s, hd]`)
+/// attends the first `lens[b]` cached tokens of `slots[b]` (`lens` includes
+/// this step's already-appended token). Pad rows yield zero rows, matching
+/// the engine path's output on zero-padded gathers. Returns
+/// `[bucket, H_s, hd]`.
+pub fn paged_attn(
+    arena: &PagedKvArena,
+    slots: &[u32],
+    layer: usize,
+    q: &HostTensor,
+    lens: &[i32],
+    seq_bucket: usize,
+    threads: usize,
+) -> HostTensor {
+    let shape = q.shape();
+    assert_eq!(shape.len(), 3, "q must be [bucket, H_s, hd]");
+    let (bucket, hs, hd) = (shape[0], shape[1], shape[2]);
+    assert_eq!(slots.len(), bucket);
+    assert_eq!(lens.len(), bucket);
+    let khs = arena.kv_heads();
+    assert_eq!(hd, arena.head_dim());
+    assert_eq!(hs % khs, 0, "query heads must divide into kv heads");
+    let g = hs / khs;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let qd = q.as_f32();
+    let bs = arena.block_size();
+
+    let rows: Vec<usize> = (0..bucket).collect();
+    let out_rows = scoped_map(threads, &rows, |&b| {
+        let mut out = vec![0.0f32; hs * hd];
+        let n = row_n(arena, slots[b], lens[b], seq_bucket);
+        if n == 0 {
+            return out;
+        }
+        let qrow = &qd[b * hs * hd..][..hs * hd];
+        let mut scores = vec![0.0f32; bs];
+        for h in 0..khs {
+            for gi in 0..g {
+                let qi = (h * g + gi) * hd;
+                let qv = &qrow[qi..qi + hd];
+                let acc = &mut out[qi..qi + hd];
+                let mut st = Online::new(acc);
+                fold_cached(&mut st, arena, slots[b], layer, h, qv, n, scale, &mut scores);
+                st.normalize();
+            }
+        }
+        out
+    });
+
+    let mut out = Vec::with_capacity(bucket * hs * hd);
+    for r in out_rows {
+        out.extend_from_slice(&r);
+    }
+    HostTensor::f32(vec![bucket, hs, hd], out)
+}
+
+/// Partial attention over the cached tokens only (overlap path, §4.2.2) —
+/// the native replacement for gather + `attn_prev` artifact. Returns the
+/// max-stabilised `(A, S, m)` state; rows with no cached tokens (including
+/// pad rows) yield `(0, 0, NEG_INF)`, exactly the reference's empty state.
+pub fn paged_attn_prev(
+    arena: &PagedKvArena,
+    slots: &[u32],
+    layer: usize,
+    q: &HostTensor,
+    lens: &[i32],
+    seq_bucket: usize,
+    threads: usize,
+) -> PartialState {
+    let shape = q.shape();
+    assert_eq!(shape.len(), 3, "q must be [bucket, H_s, hd]");
+    let (bucket, hs, hd) = (shape[0], shape[1], shape[2]);
+    assert_eq!(slots.len(), bucket);
+    assert_eq!(lens.len(), bucket);
+    let khs = arena.kv_heads();
+    assert_eq!(hd, arena.head_dim());
+    assert_eq!(hs % khs, 0, "query heads must divide into kv heads");
+    let g = hs / khs;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let qd = q.as_f32();
+    let bs = arena.block_size();
+
+    let rows: Vec<usize> = (0..bucket).collect();
+    let out_rows = scoped_map(threads, &rows, |&b| {
+        let mut a = vec![0.0f32; hs * hd];
+        let mut s = vec![0.0f32; hs];
+        let mut m = vec![NEG_INF; hs];
+        let n = row_n(arena, slots[b], lens[b], seq_bucket);
+        if n == 0 {
+            return (a, s, m);
+        }
+        let qrow = &qd[b * hs * hd..][..hs * hd];
+        let mut scores = vec![0.0f32; bs];
+        for h in 0..khs {
+            for gi in 0..g {
+                let hi = h * g + gi;
+                let qv = &qrow[hi * hd..][..hd];
+                let acc = &mut a[hi * hd..hi * hd + hd];
+                let mut st = Online::new(acc);
+                fold_cached(&mut st, arena, slots[b], layer, h, qv, n, scale, &mut scores);
+                s[hi] = st.ssum;
+                m[hi] = st.m;
+            }
+        }
+        (a, s, m)
+    });
+
+    let mut a = Vec::with_capacity(bucket * hs * hd);
+    let mut s = Vec::with_capacity(bucket * hs);
+    let mut m = Vec::with_capacity(bucket * hs);
+    for (ra, rs, rm) in out_rows {
+        a.extend_from_slice(&ra);
+        s.extend_from_slice(&rs);
+        m.extend_from_slice(&rm);
+    }
+    PartialState {
+        a: HostTensor::f32(vec![bucket, hs, hd], a),
+        s: HostTensor::f32(vec![bucket, hs], s),
+        m: HostTensor::f32(vec![bucket, hs], m),
+    }
+}
+
+/// Fold the newly generated token into a partial attention state and
+/// normalise — the native replacement for the `attn_combine` artifact.
+/// `q` `[bucket, H_s, hd]`, `k_new`/`v_new` `[bucket, KH_s, hd]`. O(B·H·hd)
+/// and serial (not worth fanning out).
+pub fn combine_new_token(
+    q: &HostTensor,
+    k_new: &HostTensor,
+    v_new: &HostTensor,
+    prev: &PartialState,
+) -> HostTensor {
+    let shape = q.shape();
+    let (bucket, hs, hd) = (shape[0], shape[1], shape[2]);
+    let khs = k_new.shape()[1];
+    let g = hs / khs;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let (qd, kd, vd) = (q.as_f32(), k_new.as_f32(), v_new.as_f32());
+    let (ad, sd, md) = (prev.a.as_f32(), prev.s.as_f32(), prev.m.as_f32());
+
+    let mut out = vec![0.0f32; bucket * hs * hd];
+    for b in 0..bucket {
+        for h in 0..khs {
+            let kn = &kd[(b * khs + h) * hd..][..hd];
+            let vn = &vd[(b * khs + h) * hd..][..hd];
+            for gi in 0..g {
+                let hi = h * g + gi;
+                let qv = &qd[(b * hs + hi) * hd..][..hd];
+                let s_new = dot(qv, kn) * scale;
+                let m_prev = md[b * hs + hi];
+                let m2 = if s_new > m_prev { s_new } else { m_prev };
+                let c_prev = (m_prev - m2).exp();
+                let c_new = (s_new - m2).exp();
+                let denom = sd[b * hs + hi] * c_prev + c_new;
+                let ap = &ad[(b * hs + hi) * hd..][..hd];
+                let o = &mut out[(b * hs + hi) * hd..][..hd];
+                for d in 0..hd {
+                    o[d] = (ap[d] * c_prev + vn[d] * c_new) / denom;
+                }
+            }
+        }
+    }
+    HostTensor::f32(vec![bucket, hs, hd], out)
+}
+
+/// Chunked-prefill attention for ONE request — the native replacement for
+/// gather + `prefill_attn` artifact. Chunk row `i` of `q` (`[T, H_s, hd]`)
+/// attends the slot's `cached` prefix (read in place from the block table)
+/// plus chunk tokens `0..=i` of `k_new`/`v_new` (`[T, KH_s, hd]`,
+/// causally). Must be called *before* the chunk is appended. Returns
+/// `[T, H_s, hd]` (padding rows beyond `valid` are computed like the
+/// artifact does — deterministically, and discarded by the leader).
+#[allow(clippy::too_many_arguments)]
+pub fn paged_prefill(
+    arena: &PagedKvArena,
+    slot: u32,
+    layer: usize,
+    q: &HostTensor,
+    k_new: &HostTensor,
+    v_new: &HostTensor,
+    cached: usize,
+    seq_bucket: usize,
+    threads: usize,
+) -> HostTensor {
+    let shape = q.shape();
+    assert_eq!(shape.len(), 3, "q must be [T, H_s, hd]");
+    let (t_rows, hs, hd) = (shape[0], shape[1], shape[2]);
+    let khs = arena.kv_heads();
+    assert_eq!(hd, arena.head_dim());
+    assert_eq!(hs % khs, 0, "query heads must divide into kv heads");
+    let g = hs / khs;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let (qd, kd, vd) = (q.as_f32(), k_new.as_f32(), v_new.as_f32());
+    let n = row_n(arena, slot, cached as i32, seq_bucket);
+    let bs = arena.block_size();
+
+    let rows: Vec<usize> = (0..t_rows).collect();
+    let out_rows = scoped_map(threads, &rows, |&i| {
+        let mut out = vec![0.0f32; hs * hd];
+        let qrow = &qd[i * hs * hd..][..hs * hd];
+        let mut scores = vec![0.0f32; bs];
+        for h in 0..khs {
+            for gi in 0..g {
+                let qi = (h * g + gi) * hd;
+                let qv = &qrow[qi..qi + hd];
+                let acc = &mut out[qi..qi + hd];
+                let mut st = Online::new(acc);
+                // cached prefix, in place from the block table
+                fold_cached(&mut st, arena, slot, layer, h, qv, n, scale, &mut scores);
+                // intra-chunk causal tail: chunk tokens 0..=i
+                for j in 0..=i {
+                    let kt = &kd[(j * khs + h) * hd..][..hd];
+                    let vt = &vd[(j * khs + h) * hd..][..hd];
+                    let s = dot(qv, kt) * scale;
+                    st.fold_one(s, vt);
+                }
+                st.normalize();
+            }
+        }
+        out
+    });
+
+    let mut out = Vec::with_capacity(t_rows * hs * hd);
+    for r in out_rows {
+        out.extend_from_slice(&r);
+    }
+    HostTensor::f32(vec![t_rows, hs, hd], out)
+}
+
+/// Validate a wire `q`, `layer`, and slot ids against the arena geometry
+/// (and, when given, the batch vectors) so a misconfigured worker reports a
+/// `WorkerError` string instead of panicking its thread on the kernel
+/// asserts or on an out-of-bounds arena index.
+fn check_shapes(
+    arena: &PagedKvArena,
+    q: &HostTensor,
+    layer: usize,
+    slots: &[u32],
+    batch: Option<&[i32]>,
+) -> Result<(), String> {
+    let shape = q.shape();
+    if shape.len() != 3 {
+        return Err(format!("q must be [rows, H_s, hd], got {shape:?}"));
+    }
+    let (hs, hd) = (shape[1], shape[2]);
+    if hd != arena.head_dim() {
+        return Err(format!(
+            "head_dim mismatch: q has {hd}, arena has {} (bad ModelGeom?)",
+            arena.head_dim()
+        ));
+    }
+    if hs == 0 || hs % arena.kv_heads() != 0 {
+        return Err(format!(
+            "query heads ({hs}) must divide into kv heads ({})",
+            arena.kv_heads()
+        ));
+    }
+    if layer >= arena.layers() {
+        return Err(format!("layer {layer} out of range ({} layers)", arena.layers()));
+    }
+    if let Some(&bad) = slots.iter().find(|&&s| s != PAD_SLOT && s as usize >= arena.slots()) {
+        return Err(format!("slot {bad} out of range ({} slots)", arena.slots()));
+    }
+    if let Some(lens) = batch {
+        if slots.len() != shape[0] || lens.len() != shape[0] {
+            return Err(format!(
+                "batch mismatch: q rows {}, slots {}, lens {}",
+                shape[0],
+                slots.len(),
+                lens.len()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Validate wire `k`/`v` against `q` (and the arena's shard heads when
+/// known): same row count and head_dim, equal shapes, and a KV-head count
+/// that divides the query heads. Keeps malformed `StepKv`/`PrefillChunk`
+/// payloads from panicking the worker (out-of-range rows) or silently
+/// producing zero output (`g == 0` when kv heads exceed query heads).
+fn check_kv(
+    q: &HostTensor,
+    k: &HostTensor,
+    v: &HostTensor,
+    shard_khs: Option<usize>,
+) -> Result<(), String> {
+    let (qs, ks, vs) = (q.shape(), k.shape(), v.shape());
+    if ks.len() != 3 || ks != vs {
+        return Err(format!("k/v must be matching [rows, KH_s, hd]: k {ks:?} v {vs:?}"));
+    }
+    if ks[0] != qs[0] || ks[2] != qs[2] {
+        return Err(format!("k/v rows/head_dim mismatch: q {qs:?} vs k {ks:?}"));
+    }
+    let kh = ks[1];
+    if kh == 0 || qs[1] % kh != 0 {
+        return Err(format!("kv heads ({kh}) must divide query heads ({})", qs[1]));
+    }
+    if let Some(khs) = shard_khs {
+        if kh != khs {
+            return Err(format!("kv heads ({kh}) != arena shard heads ({khs})"));
+        }
+    }
+    Ok(())
+}
+
+/// The block-table-native [`AttnBackend`]: runs the kernels above directly
+/// over the arena. Needs no artifacts, performs zero per-step host copies
+/// (nothing in this backend ever calls `copies::add`), and parallelises
+/// across the batch with `util::threadpool::scoped_map`.
+#[derive(Debug, Clone)]
+pub struct NativeBackend {
+    threads: usize,
+}
+
+impl NativeBackend {
+    /// Thread count: available parallelism, capped (attention rows are
+    /// short; beyond a handful of threads the spawn cost dominates).
+    pub fn new() -> NativeBackend {
+        let t = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        NativeBackend::with_threads(t.min(8))
+    }
+
+    pub fn with_threads(threads: usize) -> NativeBackend {
+        NativeBackend { threads: threads.max(1) }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::new()
+    }
+}
+
+impl AttnBackend for NativeBackend {
+    fn kind(&self) -> AttnBackendKind {
+        AttnBackendKind::Native
+    }
+
+    fn attention(
+        &mut self,
+        arena: &mut PagedKvArena,
+        slots: &[u32],
+        layer: usize,
+        q: &HostTensor,
+        lens: &[i32],
+        seq_bucket: usize,
+    ) -> Result<HostTensor, String> {
+        check_shapes(arena, q, layer, slots, Some(lens))?;
+        Ok(paged_attn(arena, slots, layer, q, lens, seq_bucket, self.threads))
+    }
+
+    fn attn_prev(
+        &mut self,
+        arena: &mut PagedKvArena,
+        slots: &[u32],
+        layer: usize,
+        q: &HostTensor,
+        lens: &[i32],
+        seq_bucket: usize,
+    ) -> Result<PartialState, String> {
+        check_shapes(arena, q, layer, slots, Some(lens))?;
+        Ok(paged_attn_prev(arena, slots, layer, q, lens, seq_bucket, self.threads))
+    }
+
+    fn attn_combine(
+        &mut self,
+        q: &HostTensor,
+        k: &HostTensor,
+        v: &HostTensor,
+        prev: &PartialState,
+    ) -> Result<HostTensor, String> {
+        if q.shape().len() != 3 {
+            return Err(format!("q must be [bucket, H_s, hd], got {:?}", q.shape()));
+        }
+        check_kv(q, k, v, None)?;
+        let heads = q.shape()[0] * q.shape()[1];
+        if prev.a.len() != q.len() || prev.s.len() != heads || prev.m.len() != heads {
+            return Err(format!(
+                "partial state mismatch: q {:?}, A {:?}, S {:?}",
+                q.shape(),
+                prev.a.shape(),
+                prev.s.shape()
+            ));
+        }
+        Ok(combine_new_token(q, k, v, prev))
+    }
+
+    fn prefill(
+        &mut self,
+        arena: &mut PagedKvArena,
+        slot: u32,
+        layer: usize,
+        q: &HostTensor,
+        k: &HostTensor,
+        v: &HostTensor,
+        cached: i32,
+        seq_bucket: usize,
+    ) -> Result<HostTensor, String> {
+        check_shapes(arena, q, layer, std::slice::from_ref(&slot), None)?;
+        check_kv(q, k, v, Some(arena.kv_heads()))?;
+        Ok(paged_prefill(
+            arena,
+            slot,
+            layer,
+            q,
+            k,
+            v,
+            cached.max(0) as usize,
+            seq_bucket,
+            self.threads,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::ArenaCfg;
+
+    fn arena_with(tokens: usize) -> (PagedKvArena, Vec<f32>) {
+        let mut arena = PagedKvArena::new(ArenaCfg {
+            layers: 1,
+            kv_heads: 2,
+            head_dim: 4,
+            max_seq: 64,
+            slots: 2,
+            block_size: 4,
+            initial_blocks: 2,
+        });
+        let mut all = Vec::new();
+        for t in 0..tokens {
+            let kv: Vec<f32> = (0..2 * 4).map(|i| ((t * 17 + i * 3) % 11) as f32 * 0.25 - 1.0).collect();
+            let kt = HostTensor::f32(vec![1, 2, 4], kv.clone());
+            arena.append_step(&[0], 0, &kt, &kt, &[t as i32]);
+            all.extend_from_slice(&kv);
+        }
+        (arena, all)
+    }
+
+    #[test]
+    fn single_token_attention_returns_its_value() {
+        // one cached token → softmax weight 1 → output == v of that token
+        let (arena, kv) = arena_with(1);
+        let q = HostTensor::f32(vec![1, 4, 4], (0..16).map(|i| i as f32 * 0.1).collect());
+        let out = paged_attn(&arena, &[0], 0, &q, &[1], 8, 1);
+        assert_eq!(out.shape(), &[1, 4, 4]);
+        let od = out.as_f32();
+        // H_s = 4, khs = 2 → G = 2: query heads 0,1 share kv head 0
+        for gi in 0..2 {
+            assert_eq!(&od[gi * 4..gi * 4 + 4], &kv[0..4], "kv head 0 group {gi}");
+            assert_eq!(&od[(2 + gi) * 4..(2 + gi) * 4 + 4], &kv[4..8], "kv head 1 group {gi}");
+        }
+    }
+
+    #[test]
+    fn pad_rows_are_zero() {
+        let (arena, _) = arena_with(5);
+        let q = HostTensor::f32(vec![2, 4, 4], vec![1.0; 32]);
+        let out = paged_attn(&arena, &[PAD_SLOT, 0], 0, &q, &[1, 5], 8, 2);
+        assert!(out.as_f32()[..16].iter().all(|&x| x == 0.0));
+        assert!(out.as_f32()[16..].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn prev_plus_combine_matches_full() {
+        let (mut arena, _) = arena_with(6);
+        let q = HostTensor::f32(vec![1, 4, 4], (0..16).map(|i| (i as f32 - 8.0) * 0.07).collect());
+        let prev = paged_attn_prev(&arena, &[0], 0, &q, &[6], 16, 1);
+        // append the "new" token, then full attention over 7
+        let kv: Vec<f32> = (0..8).map(|i| 0.3 - i as f32 * 0.11).collect();
+        let kt = HostTensor::f32(vec![1, 2, 4], kv.clone());
+        arena.append_step(&[0], 0, &kt, &kt, &[6]);
+        let full = paged_attn(&arena, &[0], 0, &q, &[7], 16, 1);
+        let comb = combine_new_token(&q, &kt, &kt, &prev);
+        for (a, b) in comb.as_f32().iter().zip(full.as_f32()) {
+            assert!((a - b).abs() <= 1e-5, "combine {a} vs full {b}");
+        }
+    }
+
+    #[test]
+    fn empty_prev_state_is_identity_for_combine() {
+        let (arena, _) = arena_with(0);
+        let q = HostTensor::f32(vec![1, 4, 4], vec![0.5; 16]);
+        let prev = paged_attn_prev(&arena, &[0], 0, &q, &[0], 8, 1);
+        assert!(prev.a.as_f32().iter().all(|&x| x == 0.0));
+        assert!(prev.s.as_f32().iter().all(|&x| x == 0.0));
+        assert!(prev.m.as_f32().iter().all(|&x| x == NEG_INF));
+        // combining the first token with the empty state returns v_new
+        let kv: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let kt = HostTensor::f32(vec![1, 2, 4], kv.clone());
+        let out = combine_new_token(&q, &kt, &kt, &prev);
+        let od = out.as_f32();
+        assert_eq!(&od[0..4], &kv[0..4]);
+        assert_eq!(&od[8..12], &kv[4..8]);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        let (arena, _) = arena_with(9);
+        let q = HostTensor::f32(vec![2, 4, 4], (0..32).map(|i| (i % 13) as f32 * 0.21 - 1.1).collect());
+        let a = paged_attn(&arena, &[0, 0], 0, &q, &[9, 4], 16, 1);
+        let b = paged_attn(&arena, &[0, 0], 0, &q, &[9, 4], 16, 4);
+        assert_eq!(a.as_f32(), b.as_f32(), "parallelism must not change bits");
+    }
+}

@@ -1,0 +1,263 @@
+//! Pure-Rust correctness oracles for the attention kernels — the Rust twin
+//! of `python/compile/kernels/ref.py`, consuming the *gathered* dense
+//! `[bucket, KH_s, seq, hd]` K/V the engine path stages.
+//!
+//! These are deliberately straightforward two-pass softmax implementations
+//! (mask → max → exp → normalise), used by `tests/kernel_native.rs` to
+//! validate the block-table-native kernels and by the bench suite as the
+//! "gather + reference" comparator. Because the native kernels use a
+//! one-pass online recurrence, agreement is within ~1e-5 absolute, not
+//! bit-exact (see the test file for the documented bound).
+
+use crate::runtime::host::HostTensor;
+
+use super::NEG_INF;
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Reference GQA decode attention. `q` `[B, H, hd]`, `k`/`v`
+/// `[B, KH, S, hd]` (first `lens[b]` rows valid), returns `[B, H, hd]`.
+/// Mirrors `decode_attention_ref`: masked scores become `NEG_INF` and still
+/// pass through the softmax (their weight underflows to zero). A row with
+/// `lens[b] <= 0` yields zeros, matching the native kernel's empty-row
+/// convention (the jnp oracle would return a uniform mean there, but that
+/// degenerate case never occurs on the wire — decode rows always attend at
+/// least the token just appended).
+pub fn decode_attention_ref(
+    q: &HostTensor,
+    k: &HostTensor,
+    v: &HostTensor,
+    lens: &[i32],
+) -> HostTensor {
+    let (b_n, hs, hd) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+    let (kh, s_n) = (k.shape()[1], k.shape()[2]);
+    let g = hs / kh;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let (qd, kd, vd) = (q.as_f32(), k.as_f32(), v.as_f32());
+    let mut out = vec![0.0f32; b_n * hs * hd];
+    let mut scores = vec![0.0f32; s_n];
+    for b in 0..b_n {
+        let n = (lens[b].max(0) as usize).min(s_n);
+        if n == 0 {
+            continue; // empty row stays zero, like paged_attn
+        }
+        for h in 0..kh {
+            let krow = &kd[(b * kh + h) * s_n * hd..][..s_n * hd];
+            let vrow = &vd[(b * kh + h) * s_n * hd..][..s_n * hd];
+            for gi in 0..g {
+                let hi = h * g + gi;
+                let qv = &qd[(b * hs + hi) * hd..][..hd];
+                let mut m = NEG_INF;
+                for t in 0..s_n {
+                    let sc = if t < n { dot(qv, &krow[t * hd..][..hd]) * scale } else { NEG_INF };
+                    scores[t] = sc;
+                    if sc > m {
+                        m = sc;
+                    }
+                }
+                let mut ssum = 0.0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - m).exp();
+                    ssum += *sc;
+                }
+                let o = &mut out[(b * hs + hi) * hd..][..hd];
+                for t in 0..s_n {
+                    let w = scores[t] / ssum;
+                    if w != 0.0 {
+                        for d in 0..hd {
+                            o[d] += w * vrow[t * hd + d];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    HostTensor::f32(vec![b_n, hs, hd], out)
+}
+
+/// Reference partial attention over cached tokens (overlap first half):
+/// returns the max-stabilised `(A, S, m)` with masked positions
+/// contributing zero (mirrors `partial_attention_ref`).
+pub fn partial_attention_ref(
+    q: &HostTensor,
+    k: &HostTensor,
+    v: &HostTensor,
+    lens: &[i32],
+) -> (HostTensor, HostTensor, HostTensor) {
+    let (b_n, hs, hd) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+    let (kh, s_n) = (k.shape()[1], k.shape()[2]);
+    let g = hs / kh;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let (qd, kd, vd) = (q.as_f32(), k.as_f32(), v.as_f32());
+    let mut a = vec![0.0f32; b_n * hs * hd];
+    let mut s = vec![0.0f32; b_n * hs];
+    let mut mv = vec![NEG_INF; b_n * hs];
+    let mut scores = vec![0.0f32; s_n];
+    for b in 0..b_n {
+        let n = (lens[b].max(0) as usize).min(s_n);
+        for h in 0..kh {
+            let krow = &kd[(b * kh + h) * s_n * hd..][..s_n * hd];
+            let vrow = &vd[(b * kh + h) * s_n * hd..][..s_n * hd];
+            for gi in 0..g {
+                let hi = h * g + gi;
+                let qv = &qd[(b * hs + hi) * hd..][..hd];
+                let mut m = NEG_INF;
+                for t in 0..n {
+                    let sc = dot(qv, &krow[t * hd..][..hd]) * scale;
+                    scores[t] = sc;
+                    if sc > m {
+                        m = sc;
+                    }
+                }
+                let arow = &mut a[(b * hs + hi) * hd..][..hd];
+                let mut ssum = 0.0f32;
+                for t in 0..n {
+                    let e = (scores[t] - m).exp();
+                    ssum += e;
+                    for d in 0..hd {
+                        arow[d] += e * vrow[t * hd + d];
+                    }
+                }
+                s[b * hs + hi] = ssum;
+                mv[b * hs + hi] = m;
+            }
+        }
+    }
+    (
+        HostTensor::f32(vec![b_n, hs, hd], a),
+        HostTensor::f32(vec![b_n, hs], s),
+        HostTensor::f32(vec![b_n, hs], mv),
+    )
+}
+
+/// Reference chunked-prefill attention for one request (mirrors
+/// `chunked_prefill_ref`): `q` `[T, H, hd]`, `k_cache`/`v_cache`
+/// `[KH, S, hd]` (first `cached` rows valid), `k_new`/`v_new`
+/// `[T, KH, hd]`. Chunk token `i` attends the cache prefix plus chunk
+/// tokens `0..=i`.
+pub fn chunked_prefill_ref(
+    q: &HostTensor,
+    k_cache: &HostTensor,
+    v_cache: &HostTensor,
+    cached: usize,
+    k_new: &HostTensor,
+    v_new: &HostTensor,
+) -> HostTensor {
+    let (t_n, hs, hd) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+    let (kh, s_n) = (k_cache.shape()[0], k_cache.shape()[1]);
+    let g = hs / kh;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let (qd, kcd, vcd) = (q.as_f32(), k_cache.as_f32(), v_cache.as_f32());
+    let (knd, vnd) = (k_new.as_f32(), v_new.as_f32());
+    let n = cached.min(s_n);
+    let mut out = vec![0.0f32; t_n * hs * hd];
+    let mut scores = vec![0.0f32; s_n + t_n];
+    for i in 0..t_n {
+        for h in 0..kh {
+            let kc = &kcd[h * s_n * hd..][..s_n * hd];
+            let vc = &vcd[h * s_n * hd..][..s_n * hd];
+            for gi in 0..g {
+                let hi = h * g + gi;
+                let qv = &qd[(i * hs + hi) * hd..][..hd];
+                // score the cache prefix, then the causal chunk prefix
+                let mut m = NEG_INF;
+                let mut cnt = 0;
+                for t in 0..n {
+                    let sc = dot(qv, &kc[t * hd..][..hd]) * scale;
+                    scores[cnt] = sc;
+                    cnt += 1;
+                    if sc > m {
+                        m = sc;
+                    }
+                }
+                for j in 0..=i {
+                    let sc = dot(qv, &knd[(j * kh + h) * hd..][..hd]) * scale;
+                    scores[cnt] = sc;
+                    cnt += 1;
+                    if sc > m {
+                        m = sc;
+                    }
+                }
+                let mut ssum = 0.0f32;
+                for sc in scores[..cnt].iter_mut() {
+                    *sc = (*sc - m).exp();
+                    ssum += *sc;
+                }
+                let o = &mut out[(i * hs + hi) * hd..][..hd];
+                for (t, &w) in scores[..cnt].iter().enumerate() {
+                    let w = w / ssum;
+                    let vt = if t < n {
+                        &vc[t * hd..][..hd]
+                    } else {
+                        &vnd[((t - n) * kh + h) * hd..][..hd]
+                    };
+                    for d in 0..hd {
+                        o[d] += w * vt[d];
+                    }
+                }
+            }
+        }
+    }
+    HostTensor::f32(vec![t_n, hs, hd], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_length_row_is_zero_like_the_native_kernel() {
+        let q = HostTensor::f32(vec![1, 2, 2], vec![1.0; 4]);
+        let kv = HostTensor::f32(vec![1, 1, 4, 2], vec![5.0; 8]);
+        let out = decode_attention_ref(&q, &kv, &kv, &[0]);
+        assert!(out.as_f32().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn single_valid_token_puts_full_weight_on_it() {
+        // B=1, H=2, KH=1, S=4, hd=2
+        let q = HostTensor::f32(vec![1, 2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let mut kv = vec![0.0f32; 4 * 2];
+        kv[0] = 3.0; // token 0
+        kv[1] = -2.0;
+        let k = HostTensor::f32(vec![1, 1, 4, 2], kv.clone());
+        let v = HostTensor::f32(vec![1, 1, 4, 2], kv);
+        let out = decode_attention_ref(&q, &k, &v, &[1]);
+        assert_eq!(out.as_f32(), &[3.0, -2.0, 3.0, -2.0]);
+    }
+
+    #[test]
+    fn partial_state_normalises_to_full_attention() {
+        // (A, S) from the partial oracle, normalised, equals the full oracle
+        // when every position participates
+        let q = HostTensor::f32(vec![1, 2, 2], vec![0.4, -0.3, 0.9, 0.1]);
+        let data: Vec<f32> = (0..1 * 1 * 4 * 2).map(|i| (i as f32) * 0.3 - 1.0).collect();
+        let k = HostTensor::f32(vec![1, 1, 4, 2], data.clone());
+        let v = HostTensor::f32(vec![1, 1, 4, 2], data);
+        let full = decode_attention_ref(&q, &k, &v, &[4]);
+        let (a, s, _m) = partial_attention_ref(&q, &k, &v, &[4]);
+        let (ad, sd) = (a.as_f32(), s.as_f32());
+        for hi in 0..2 {
+            for d in 0..2 {
+                let got = ad[hi * 2 + d] / sd[hi];
+                let want = full.as_f32()[hi * 2 + d];
+                assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_first_row_without_cache_attends_itself_only() {
+        let q = HostTensor::f32(vec![2, 2, 2], vec![0.5; 8]);
+        let kc = HostTensor::f32(vec![1, 4, 2], vec![0.0; 8]);
+        let vc = kc.clone();
+        let kn = HostTensor::f32(vec![2, 1, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let vn = kn.clone();
+        let out = chunked_prefill_ref(&q, &kc, &vc, 0, &kn, &vn);
+        // row 0 attends only chunk token 0 → out = v_new[0]
+        assert_eq!(&out.as_f32()[0..2], &[1.0, 2.0]);
+        assert_eq!(&out.as_f32()[2..4], &[1.0, 2.0]);
+    }
+}

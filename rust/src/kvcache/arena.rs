@@ -15,15 +15,18 @@
 //!   buffer resize); retired requests return their blocks to the pool, so
 //!   steady-state footprint tracks live context, not
 //!   `slots × max_waves × max_seq`.
-//! * **Block-granular copies.** A block's per-head region
-//!   (`block_size × hd` floats) is contiguous, so gather into the kernel's
-//!   `[bucket, KH_shard, seq_bucket, hd]` input is one `copy_from_slice`
-//!   per (row, head, block) — no element loops. Logical token order within
-//!   a head is preserved because blocks are copied in table order. Gather
-//!   *output* buffers are recycled across steps: the arena keeps the last
-//!   `[bucket, KH_s, seq, hd]` pair and rewrites it in place once the
-//!   caller has dropped the previous result (no per-step allocation on the
-//!   steady-state decode path).
+//! * **Two read paths.** The *native* attention backend
+//!   (`kernels::paged_attn`) reads blocks **in place** through the
+//!   read-only view API — [`PagedKvArena::table_view`] exposes a slot's
+//!   block list and [`PagedKvArena::block_slices`] borrows one
+//!   `(layer, block, head)` region (`block_size × hd` contiguous floats) —
+//!   so the steady-state decode path performs **zero** per-step KV copies.
+//!   The *engine* (PJRT) backend still needs contiguous inputs and uses
+//!   [`PagedKvArena::gather`]: one `copy_from_slice` per
+//!   (row, head, block) into a `[bucket, KH_shard, seq_bucket, hd]` staging
+//!   pair (charged to [`copies`]); gather output buffers are recycled
+//!   across steps — the arena keeps the last pair and rewrites it in place
+//!   once the caller has dropped the previous result.
 //! * **Blocks are zeroed when (re)assigned** to a slot, so gathers are
 //!   bit-identical to a dense zero-initialised reference cache (asserted by
 //!   the `kv_paged` property test) and recycled blocks can never leak KV
@@ -44,6 +47,26 @@ use crate::runtime::host::{copies, HostTensor};
 
 /// Sentinel slot id marking a padded batch row (no backing request).
 pub const PAD_SLOT: u32 = u32::MAX;
+
+/// Read-only snapshot of one slot's block table (see
+/// [`PagedKvArena::table_view`]).
+#[derive(Debug, Clone, Copy)]
+pub struct TableView<'a> {
+    blocks: &'a [BlockId],
+    len_tokens: usize,
+}
+
+impl<'a> TableView<'a> {
+    /// Physical block ids in logical-token order.
+    pub fn blocks(&self) -> &'a [BlockId] {
+        self.blocks
+    }
+
+    /// Cached tokens the table currently maps.
+    pub fn len_tokens(&self) -> usize {
+        self.len_tokens
+    }
+}
 
 /// Arena geometry and sizing.
 #[derive(Debug, Clone, Copy)]
@@ -113,6 +136,24 @@ impl PagedKvArena {
 
     pub fn block_size(&self) -> usize {
         self.cfg.block_size
+    }
+
+    /// KV heads of this shard (one worker's share of the model's KV heads).
+    pub fn kv_heads(&self) -> usize {
+        self.cfg.kv_heads
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.cfg.head_dim
+    }
+
+    pub fn layers(&self) -> usize {
+        self.cfg.layers
+    }
+
+    /// Request slots this arena addresses (the wire protocol's slot space).
+    pub fn slots(&self) -> usize {
+        self.tables.len()
     }
 
     /// Cached tokens currently held for `slot`.
@@ -220,10 +261,12 @@ impl PagedKvArena {
         }
     }
 
-    /// Assemble the kernel's contiguous `[bucket, KH_shard, seq_bucket, hd]`
-    /// K/V inputs. Copies whole per-head block regions (`block_size × hd`
-    /// floats each); positions past a slot's allocated blocks stay zero, as
-    /// do pad rows. Copied bytes are charged to [`copies`].
+    /// Assemble a contiguous `[bucket, KH_shard, seq_bucket, hd]` K/V input
+    /// pair — the **engine backend's** staging path (the native kernel
+    /// reads blocks in place via [`PagedKvArena::block_slices`] instead).
+    /// Copies whole per-head block regions (`block_size × hd` floats each);
+    /// positions past a slot's allocated blocks stay zero, as do pad rows.
+    /// Copied bytes are charged to [`copies`].
     ///
     /// The output buffers come from a reusable scratch pair: when the
     /// previous gather's tensors have been dropped, their allocation is
@@ -276,6 +319,28 @@ impl PagedKvArena {
             self.scratch = Some((ka, va));
         }
         (kt, vt)
+    }
+
+    // ---- read-only block views (the native kernel's zero-copy path) ------
+
+    /// Read-only view of `slot`'s logical-token → physical-block mapping
+    /// (shared by all layers). The native attention kernel iterates this in
+    /// order to visit the slot's KV in logical-token order without any
+    /// gather.
+    pub fn table_view(&self, slot: u32) -> TableView<'_> {
+        let t = &self.tables[slot as usize];
+        TableView { blocks: t.blocks(), len_tokens: t.len_tokens() }
+    }
+
+    /// Borrow the contiguous K and V regions of one `(layer, block, head)`:
+    /// `block_size × hd` floats each, covering token positions
+    /// `[i·block_size, (i+1)·block_size)` of whichever table slot owns
+    /// block `blk` at position `i`. This is the in-place read the native
+    /// kernel runs on — no bytes move, nothing is charged to [`copies`].
+    pub fn block_slices(&self, layer: usize, blk: BlockId, head: usize) -> (&[f32], &[f32]) {
+        let start = self.elem_offset(blk, head, 0);
+        let n = self.cfg.block_size * self.cfg.head_dim;
+        (&self.k[layer][start..start + n], &self.v[layer][start..start + n])
     }
 
     /// Hand back the cached scratch pair when it is big enough and no
@@ -522,6 +587,33 @@ mod tests {
         assert_eq!(big.shape(), &[3, 2, 16, 4]);
         assert_eq!(big.as_f32()[0], 1.0);
         assert!(big.as_f32()[2 * 16 * 4..4 * 16 * 4].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn block_views_borrow_written_kv_in_place() {
+        let mut a = tiny(); // block_size 4, kv_heads 2, hd 4
+        for t in 0..6 {
+            let k = step_kv(1, 2, 4, (10 * t) as f32);
+            let v = step_kv(1, 2, 4, (100 * t) as f32);
+            a.append_step(&[0], 0, &k, &v, &[t]);
+            a.append_step(&[0], 1, &k, &k, &[t]);
+        }
+        let view = a.table_view(0);
+        assert_eq!(view.len_tokens(), 6);
+        assert_eq!(view.blocks().len(), 2); // ceil(6/4)
+        // token 5 lives in block 1 at offset 1; head 1 of its K was written
+        // from step_kv(base 50) at src offset h*hd = 4 → values 54..58
+        let blk = view.blocks()[1];
+        let (kb, vb) = a.block_slices(0, blk, 1);
+        assert_eq!(kb.len(), 4 * 4);
+        assert_eq!(&kb[4..8], &[54., 55., 56., 57.]);
+        // V buffer is independent (base 500 at the same offset)
+        assert_eq!(&vb[4..8], &[504., 505., 506., 507.]);
+        // the view must alias the arena buffer, not copy: no `copies` charge
+        let before = copies::total();
+        let _ = a.block_slices(0, blk, 0);
+        let _ = a.table_view(0);
+        assert_eq!(copies::total(), before);
     }
 
     #[test]

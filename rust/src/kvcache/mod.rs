@@ -7,7 +7,7 @@ pub mod block;
 pub mod partition;
 pub mod table;
 
-pub use arena::{ArenaCfg, PagedKvArena, PAD_SLOT};
+pub use arena::{ArenaCfg, PagedKvArena, TableView, PAD_SLOT};
 pub use block::{AllocError, BlockAllocator, BlockId};
 pub use partition::{head_level, kv_blocks_needed, request_level, Partition};
 pub use table::{BlockTable, KvRegistry};

@@ -20,6 +20,7 @@ pub mod baseline;
 pub mod coordinator;
 pub mod devices;
 pub mod figures;
+pub mod kernels;
 pub mod kvcache;
 pub mod metrics;
 pub mod net;

@@ -11,6 +11,7 @@
 //! --workers N, --no-overlap, --waves N, --stack NAME, --time-scale X.
 
 use lamina::figures;
+use lamina::kernels::AttnBackendKind;
 use lamina::net::TransportKind;
 use lamina::netsim::stack::stack_by_name;
 use lamina::trace::{synthesize, trace_by_name, Request};
@@ -30,10 +31,11 @@ experiments (analytical, paper-scale):
 
 real pipeline (tiny model, PJRT end-to-end):
   decode  --prompt 1,7,42 --steps 16 [--workers N] [--no-overlap]
-          [--transport inproc|tcp]
+          [--transport inproc|tcp] [--attn-backend engine|native]
   serve   [--trace azure-conv] [--requests N] [--waves N]
           [--stack fhbn|nccl|nccl-nogdr|gloo] [--time-scale X]
-          [--transport inproc|tcp] [--kv-budget BLOCKS]
+          [--transport inproc|tcp] [--attn-backend engine|native]
+          [--kv-budget BLOCKS]
 
 flags:
   --requests N     trace subsample size for simulations (default 1000)
@@ -43,6 +45,10 @@ flags:
   --transport T    leader↔worker wire: inproc (paced channel, modelled
                    bytes) or tcp (real loopback sockets, serialized frames,
                    measured-vs-logical byte report)  (default inproc)
+  --attn-backend B attention-worker compute: engine (PJRT artifacts over
+                   gathered K/V) or native (pure-Rust block-table kernel
+                   reading the paged arena in place — zero per-step KV
+                   copies on the workers)  (default engine)
   --kv-budget N    per-worker KV block budget; admission defers requests
                    that would overflow it (default: unlimited)
 ";
@@ -50,7 +56,7 @@ flags:
 const SPEC: &[&str] = &[
     "requests!", "seed!", "results!", "artifacts!", "workers!", "no-overlap",
     "waves!", "stack!", "time-scale!", "prompt!", "steps!", "trace!",
-    "transport!", "kv-budget!", "help",
+    "transport!", "attn-backend!", "kv-budget!", "help",
 ];
 
 fn main() {
@@ -149,6 +155,7 @@ fn run(argv: &[String]) -> Result<(), String> {
             if m.deferred_admissions() > 0 {
                 println!("kv admission: {} deferrals (budget back-pressure)", m.deferred_admissions());
             }
+            println!("attn backend: {}", pipe.attn_backend().name());
             // measured-vs-logical wire accounting, per message class
             let transport = pipe.transport();
             let wt = m.wire_stats().total();
@@ -203,6 +210,10 @@ fn pipeline_opts(args: &Args, artifacts: &str) -> Result<PipelineOpts, String> {
     if let Some(t) = args.get("transport") {
         opts.transport = TransportKind::parse(t)
             .ok_or_else(|| format!("unknown transport '{t}' (use inproc|tcp)"))?;
+    }
+    if let Some(b) = args.get("attn-backend") {
+        opts.attn_backend = AttnBackendKind::parse(b)
+            .ok_or_else(|| format!("unknown attention backend '{b}' (use engine|native)"))?;
     }
     if args.has("kv-budget") {
         opts.kv_block_budget = Some(args.usize_or("kv-budget", 0).map_err(|e| e.to_string())?);

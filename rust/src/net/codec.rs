@@ -20,9 +20,22 @@
 //! **Tensor encoding.** A [`HostTensor`] payload is `dtype:u8` (0 = f32,
 //! 1 = i32), `ndim:u8`, `ndim × u32` dims, then the raw element bytes
 //! (4 bytes each, LE). Decoding builds the element buffer *directly* as an
-//! `Arc`-backed allocation (`chunks_exact(4) → collect::<Arc<[f32]>>()`),
-//! so the wire path is one copy in — receive buffer → tensor — and
-//! zero-copy from there on (every later send/clone moves the `Arc`).
+//! `Arc`-backed allocation, so the wire path is one copy in — receive
+//! buffer → tensor — and zero-copy from there on (every later send/clone
+//! moves the `Arc`).
+//!
+//! **f32/i32 encode fast path.** On little-endian targets the in-memory
+//! element representation *is* the wire representation, so tensor (and
+//! `slots`) payloads are encoded with one bulk byte-cast
+//! `extend_from_slice` — no per-element `to_le_bytes` loop with its
+//! per-push growth checks on the hot path (that loop previously bounded
+//! encode GB/s; see the `net/codec` rows in `BENCH_decode.json`, which
+//! keep the element-wise variant as a baseline). Big-endian targets fall
+//! back to the portable element-wise conversion
+//! ([`put_f32_le_elementwise`] & co.), bit-for-bit the same wire format.
+//! Decode keeps the single-pass `TrustedLen` collect straight into the
+//! `Arc` allocation on every target (see [`HostTensor`] docs: one copy in),
+//! where LE `from_le_bytes` is already a bit-level no-op.
 //!
 //! **Streaming.** [`decode_frame`] is incremental: given a prefix of the
 //! byte stream it returns `Ok(None)` ("need more bytes") until a full frame
@@ -128,33 +141,112 @@ fn put_tensor(out: &mut Vec<u8>, t: &HostTensor) {
     for &d in t.shape() {
         put_u32(out, d as u32);
     }
-    out.reserve(t.byte_size());
     match t.dtype() {
-        Dtype::F32 => {
-            for x in t.as_f32() {
-                out.extend_from_slice(&x.to_le_bytes());
-            }
-        }
-        Dtype::I32 => {
-            for x in t.as_i32() {
-                out.extend_from_slice(&x.to_le_bytes());
-            }
-        }
+        Dtype::F32 => put_f32_payload(out, t.as_f32()),
+        Dtype::I32 => put_i32_payload(out, t.as_i32()),
+    }
+}
+
+// ---- element-payload fast path (LE bulk byte-cast) ------------------------
+
+/// Portable element-wise LE conversion — the big-endian fallback and the
+/// bench suite's baseline for the bulk-cast fast path.
+pub fn put_f32_le_elementwise(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(4 * xs.len());
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// i32 twin of [`put_f32_le_elementwise`].
+pub fn put_i32_le_elementwise(out: &mut Vec<u8>, xs: &[i32]) {
+    out.reserve(4 * xs.len());
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Portable element-wise LE decode — fallback + bench baseline.
+pub fn get_f32_le_elementwise(bytes: &[u8]) -> Arc<[f32]> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// i32 twin of [`get_f32_le_elementwise`].
+pub fn get_i32_le_elementwise(bytes: &[u8]) -> Arc<[i32]> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+#[cfg(target_endian = "little")]
+fn put_f32_payload(out: &mut Vec<u8>, xs: &[f32]) {
+    // On LE targets the in-memory bytes ARE the wire bytes: one memcpy.
+    // SAFETY: every f32 bit pattern is a valid sequence of u8s, the cast
+    // only lowers alignment, and the length covers exactly `xs`.
+    let bytes =
+        unsafe { std::slice::from_raw_parts(xs.as_ptr().cast::<u8>(), std::mem::size_of_val(xs)) };
+    out.extend_from_slice(bytes);
+}
+
+#[cfg(target_endian = "little")]
+fn put_i32_payload(out: &mut Vec<u8>, xs: &[i32]) {
+    // SAFETY: as in `put_f32_payload`.
+    let bytes =
+        unsafe { std::slice::from_raw_parts(xs.as_ptr().cast::<u8>(), std::mem::size_of_val(xs)) };
+    out.extend_from_slice(bytes);
+}
+
+#[cfg(not(target_endian = "little"))]
+fn put_f32_payload(out: &mut Vec<u8>, xs: &[f32]) {
+    put_f32_le_elementwise(out, xs);
+}
+
+#[cfg(not(target_endian = "little"))]
+fn put_i32_payload(out: &mut Vec<u8>, xs: &[i32]) {
+    put_i32_le_elementwise(out, xs);
+}
+
+/// Decode stays the single-pass `chunks_exact → collect::<Arc<_>>` on every
+/// target: the `TrustedLen` collect writes the `Arc` allocation directly
+/// (one copy in, as documented), and on LE `from_le_bytes` is a bit-level
+/// no-op, so this *is* the bulk path — a byte-cast staging `Vec` would add
+/// a second copy (`From<Vec>` reallocates for the `Arc` header).
+fn get_f32_payload(bytes: &[u8]) -> Arc<[f32]> {
+    get_f32_le_elementwise(bytes)
+}
+
+/// See [`get_f32_payload`].
+fn get_i32_payload(bytes: &[u8]) -> Arc<[i32]> {
+    get_i32_le_elementwise(bytes)
+}
+
+#[cfg(target_endian = "little")]
+fn put_u32_payload(out: &mut Vec<u8>, xs: &[u32]) {
+    // SAFETY: as in `put_f32_payload`.
+    let bytes =
+        unsafe { std::slice::from_raw_parts(xs.as_ptr().cast::<u8>(), std::mem::size_of_val(xs)) };
+    out.extend_from_slice(bytes);
+}
+
+#[cfg(not(target_endian = "little"))]
+fn put_u32_payload(out: &mut Vec<u8>, xs: &[u32]) {
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
     }
 }
 
 fn put_u32_slice(out: &mut Vec<u8>, xs: &[u32]) {
     put_u32(out, xs.len() as u32);
-    for &x in xs {
-        put_u32(out, x);
-    }
+    put_u32_payload(out, xs);
 }
 
 fn put_i32_slice(out: &mut Vec<u8>, xs: &[i32]) {
     put_u32(out, xs.len() as u32);
-    for &x in xs {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
+    put_i32_payload(out, xs);
 }
 
 fn encode_payload(msg: &WireMsg, out: &mut Vec<u8>) {
@@ -323,21 +415,10 @@ fn get_tensor(r: &mut Reader) -> Result<HostTensor, CodecError> {
     }
     let bytes = r.take(4 * elems, "tensor data")?;
     match dtype {
-        0 => {
-            // one copy: receive buffer → the tensor's own Arc allocation
-            let data: Arc<[f32]> = bytes
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                .collect();
-            Ok(HostTensor::f32_arc(shape, data))
-        }
-        1 => {
-            let data: Arc<[i32]> = bytes
-                .chunks_exact(4)
-                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
-                .collect();
-            Ok(HostTensor::i32_arc(shape, data))
-        }
+        // one copy: receive buffer → the tensor's own Arc allocation
+        // (single-pass TrustedLen collect; LE from_le_bytes is a bit no-op)
+        0 => Ok(HostTensor::f32_arc(shape, get_f32_payload(bytes))),
+        1 => Ok(HostTensor::i32_arc(shape, get_i32_payload(bytes))),
         d => Err(CodecError::Malformed(format!("unknown tensor dtype {d}"))),
     }
 }
@@ -496,6 +577,52 @@ mod tests {
         // zero copies after the decode: a clone shares the buffer
         assert!(out.clone().shares_buffer(&out));
         assert_eq!(out.view_rows(1, 2).as_f32(), &[3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn f32_fast_path_bitwise_matches_elementwise() {
+        // tricky bit patterns: signed zero, denormal, infinities, NaN
+        let vals = vec![
+            0.0f32,
+            -0.0,
+            1.5,
+            -1e30,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::MIN_POSITIVE / 2.0,
+            -3.25e-12,
+        ];
+        let t = HostTensor::f32(vec![vals.len()], vals.clone());
+        let mut frame = Vec::new();
+        encode(&WireMsg::AttnOut { layer: 0, out: t }, &mut frame);
+        // the frame's payload tail must be exactly the element-wise bytes
+        let mut base = Vec::new();
+        put_f32_le_elementwise(&mut base, &vals);
+        assert!(frame.ends_with(&base), "bulk cast diverged from to_le_bytes");
+        // decode (fast path) and the element-wise decoder agree bit-for-bit
+        let (msg, _) = decode_frame(&frame).unwrap().unwrap();
+        let WireMsg::AttnOut { out, .. } = msg else { panic!() };
+        let ew = get_f32_le_elementwise(&base);
+        for ((a, b), c) in out.as_f32().iter().zip(&vals).zip(ew.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+    }
+
+    #[test]
+    fn i32_fast_path_bitwise_matches_elementwise() {
+        let vals = vec![0i32, -1, i32::MIN, i32::MAX, 0x0102_0304];
+        let t = HostTensor::i32(vec![vals.len()], vals.clone());
+        let mut frame = Vec::new();
+        encode(&WireMsg::AttnOut { layer: 0, out: t }, &mut frame);
+        let mut base = Vec::new();
+        put_i32_le_elementwise(&mut base, &vals);
+        assert!(frame.ends_with(&base));
+        let (msg, _) = decode_frame(&frame).unwrap().unwrap();
+        let WireMsg::AttnOut { out, .. } = msg else { panic!() };
+        assert_eq!(out.as_i32(), &vals[..]);
+        assert_eq!(&get_i32_le_elementwise(&base)[..], &vals[..]);
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Minimal thread-pool + actor mailboxes (no `tokio` offline).
 //!
 //! Lamina's workers are long-lived actor threads that exchange typed
-//! messages over `std::sync::mpsc` channels; short parallel jobs (e.g.
-//! sharded attention execution) use the scoped `ThreadPool`.
+//! messages over `std::sync::mpsc` channels; short parallel jobs with
+//! `'static` data use the [`ThreadPool`], and borrow-heavy fan-outs (the
+//! native attention kernel mapping over batch rows while borrowing the KV
+//! arena) use [`scoped_map`].
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -99,6 +101,51 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Parallel map over **borrowed** items: run `f` over each element of
+/// `items` on up to `threads` scoped threads, collecting results in order.
+///
+/// Unlike [`ThreadPool::map`], the closure and items may borrow local state
+/// (no `'static` bound) — this is what lets the native attention kernel
+/// fan out over batch rows while borrowing the KV arena in place. Work is
+/// distributed by an atomic cursor, so results are deterministic (each
+/// index is computed exactly once, by exactly one thread) and the output
+/// order always matches the input order. `threads <= 1` (or a single item)
+/// runs inline with no spawns.
+pub fn scoped_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let workers = threads.min(n);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().expect("scoped_map slot poisoned") = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("scoped_map slot poisoned")
+                .expect("scoped_map worker panicked")
+        })
+        .collect()
+}
+
 /// A typed actor: a thread with an inbox, processing messages until the
 /// sender side closes (or an Exit message the handler interprets).
 pub struct Actor<M: Send + 'static> {
@@ -193,6 +240,19 @@ mod tests {
         let pool = ThreadPool::new(2);
         let out: Vec<i32> = pool.map(Vec::<i32>::new(), |x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scoped_map_borrows_locals_and_preserves_order() {
+        let data: Vec<u64> = (0..100).collect();
+        let offset = 7u64; // borrowed by the closure — no 'static
+        let out = scoped_map(4, &data, |&x| x * 2 + offset);
+        assert_eq!(out, (0..100).map(|x| x * 2 + 7).collect::<Vec<_>>());
+        // inline path produces the same result
+        assert_eq!(scoped_map(1, &data, |&x| x * 2 + offset), out);
+        // more threads than items is fine
+        assert_eq!(scoped_map(16, &data[..2], |&x| x + 1), vec![1, 2]);
+        assert!(scoped_map(3, &[] as &[u64], |&x| x).is_empty());
     }
 
     #[test]

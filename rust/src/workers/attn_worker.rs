@@ -1,28 +1,47 @@
 //! Attention worker: owns a head shard of every request's KV cache and
-//! executes the L1 Pallas attention artifacts for it (paper §5: head-level
-//! partitioning — worker `w` of `W` owns `KH/W` KV heads of *all* requests).
+//! turns `StepQ`/`StepKv`/`PrefillChunk` traffic into attention output
+//! shards (paper §5: head-level partitioning — worker `w` of `W` owns
+//! `KH/W` KV heads of *all* requests).
 //!
-//! The worker is a thread with its own PJRT [`Engine`] (its "device"): it
-//! receives `StepQ`/`StepKv` messages over its [`Transport`] link (paced
-//! in-process channel or real TCP socket — see `crate::net`), appends
-//! K/V into its **block-paged arena** ([`PagedKvArena`]), runs the
-//! attention kernel (full, or partial+combine in overlap mode) and ships
-//! the output shard back. KV residency scales with allocated blocks — the
-//! arena grows on demand and frees a request's blocks on [`WireMsg::Retire`]
-//! — and the kernel's contiguous input is assembled with block-granular
-//! `copy_from_slice` gathers. [`WireMsg::KvStatsReq`] exposes occupancy and
-//! internal waste for `ServeMetrics`.
+//! The worker is a thread that receives wire messages over its
+//! [`Transport`] link (paced in-process channel or real TCP socket — see
+//! `crate::net`), appends K/V into its **block-paged arena**
+//! ([`PagedKvArena`]) and runs attention through a pluggable
+//! [`AttnBackend`] (`--attn-backend`):
+//!
+//! * `engine` — the PJRT path: gathers contiguous K/V from the arena (a
+//!   per-layer-per-step host copy) and executes the AOT Pallas artifacts.
+//! * `native` — the block-table-native path (`crate::kernels::paged_attn`):
+//!   reads the arena **in place** through its block views, so the decode
+//!   hot loop performs **zero** per-step KV copies — and needs no
+//!   artifacts on the worker at all (geometry comes from
+//!   [`ModelGeom`]).
+//!
+//! Hot-loop hygiene: entry-point names are resolved once per worker (in
+//! the engine backend) and the per-step `lens+1` vector comes from a
+//! reused scratch buffer — nothing is `format!`ed or re-allocated per
+//! message on the steady-state decode path.
+//!
+//! KV residency scales with allocated blocks — the arena grows on demand
+//! and frees a request's blocks on [`WireMsg::Retire`] — and
+//! [`WireMsg::KvStatsReq`] exposes occupancy and internal waste for
+//! `ServeMetrics`.
 
+use crate::kernels::{AttnBackend, AttnBackendKind, EngineBackend, NativeBackend, PartialState};
 use crate::kvcache::{ArenaCfg, PagedKvArena};
 use crate::net::Transport;
-use crate::runtime::engine::Engine;
 use crate::runtime::host::HostTensor;
+use crate::runtime::manifest::Manifest;
 
 use super::messages::WireMsg;
 
 /// Sentinel slot id marking a padded batch row (re-exported from the arena,
 /// which skips pad rows in appends and gathers).
 pub use crate::kvcache::arena::PAD_SLOT;
+
+/// Model geometry the worker sizes its arena with (re-exported from
+/// `crate::kernels`).
+pub use crate::kernels::ModelGeom;
 
 /// Worker configuration.
 #[derive(Debug, Clone)]
@@ -36,52 +55,78 @@ pub struct AttnWorkerCfg {
     pub slots: usize,
     /// Token slots per KV block in the paged arena.
     pub kv_block_size: usize,
+    /// Which compute backend runs the attention math.
+    pub backend: AttnBackendKind,
+    /// Model geometry for the native backend. `None` falls back to the
+    /// artifact manifest; the engine backend always uses its manifest.
+    pub geom: Option<ModelGeom>,
 }
 
 /// Run the worker loop until `Shutdown` or link closure, over any
 /// [`Transport`] (paced in-process channel or a real TCP socket — the
 /// protocol is identical). Intended to be the body of a dedicated thread
-/// (the Engine is created inside — PJRT handles are not `Send`).
+/// (the engine backend's PJRT handles are not `Send`).
 pub fn run_attn_worker<T: Transport>(cfg: AttnWorkerCfg, link: T) {
-    let engine = match Engine::load(&cfg.artifacts_dir) {
-        Ok(e) => e,
-        Err(e) => {
-            let _ = link.send(WireMsg::WorkerError { msg: format!("engine load: {e:#}") });
-            return;
+    let (mut backend, geom): (Box<dyn AttnBackend>, ModelGeom) = match cfg.backend {
+        AttnBackendKind::Engine => match EngineBackend::new(&cfg.artifacts_dir, cfg.n_shards) {
+            Ok(b) => {
+                let geom = b.geom();
+                (Box::new(b), geom)
+            }
+            Err(e) => {
+                let _ = link.send(WireMsg::WorkerError { msg: e });
+                return;
+            }
+        },
+        AttnBackendKind::Native => {
+            let geom = match cfg.geom {
+                Some(g) => g,
+                None => match Manifest::load(&cfg.artifacts_dir) {
+                    Ok(m) => ModelGeom::of(&m.config),
+                    Err(e) => {
+                        let _ = link.send(WireMsg::WorkerError {
+                            msg: format!(
+                                "native backend needs ModelGeom and the manifest fallback \
+                                 failed: {e}"
+                            ),
+                        });
+                        return;
+                    }
+                },
+            };
+            (Box::new(NativeBackend::new()), geom)
         }
     };
-    if let Err(e) = worker_loop(&engine, &cfg, &link) {
+    if let Err(e) = backend.warmup() {
+        let _ = link.send(WireMsg::WorkerError { msg: e });
+        return;
+    }
+    if let Err(e) = worker_loop(backend.as_mut(), geom, &cfg, &link) {
         let _ = link.send(WireMsg::WorkerError { msg: e });
     }
 }
 
-fn worker_loop<T: Transport>(engine: &Engine, cfg: &AttnWorkerCfg, link: &T) -> Result<(), String> {
-    // pre-compile this shard's attention entry points (lazy compiles would
-    // otherwise spike the first decode steps' latency)
-    let sfx = if cfg.n_shards == 1 { String::new() } else { format!("_w{}", cfg.n_shards) };
-    for e in &engine.manifest.entrypoints {
-        let mine = e.entry == format!("attention{sfx}")
-            || e.entry == format!("attn_prev{sfx}")
-            || e.entry == format!("attn_combine{sfx}")
-            || e.entry == format!("prefill_attn{sfx}");
-        if mine {
-            engine
-                .execute_warm(&e.entry, e.batch, e.seq)
-                .map_err(|err| format!("warmup {}: {err:#}", e.entry))?;
-        }
+fn worker_loop<T: Transport>(
+    backend: &mut dyn AttnBackend,
+    geom: ModelGeom,
+    cfg: &AttnWorkerCfg,
+    link: &T,
+) -> Result<(), String> {
+    if geom.kv_heads % cfg.n_shards != 0 {
+        return Err(format!(
+            "shards ({}) must divide kv heads ({})",
+            cfg.n_shards, geom.kv_heads
+        ));
     }
-    let mc = &engine.manifest.config;
-    assert_eq!(mc.kv_heads % cfg.n_shards, 0, "shards must divide kv heads");
-    let khs = mc.kv_heads / cfg.n_shards;
-    let hd = mc.head_dim;
+    let khs = geom.kv_heads / cfg.n_shards;
 
     // this shard's paged KV store: all layers, every request's head shard.
     // Starts at one block per slot and grows with live context.
     let mut arena = PagedKvArena::new(ArenaCfg {
-        layers: mc.layers,
+        layers: geom.layers,
         kv_heads: khs,
-        head_dim: hd,
-        max_seq: mc.max_seq,
+        head_dim: geom.head_dim,
+        max_seq: geom.max_seq,
         slots: cfg.slots,
         block_size: cfg.kv_block_size,
         initial_blocks: cfg.slots.max(1),
@@ -95,16 +140,13 @@ fn worker_loop<T: Transport>(engine: &Engine, cfg: &AttnWorkerCfg, link: &T) -> 
         lens: Vec<i32>,
         seq_bucket: usize,
         overlap: bool,
-        /// overlap mode: (a_prev, s_prev, m_prev) computed on q arrival
-        partial: Option<(HostTensor, HostTensor, HostTensor)>,
+        /// overlap mode: (A, S, m) over the cached tokens, computed on q
+        /// arrival (before this step's K/V exists)
+        partial: Option<PartialState>,
     }
     let mut pending: Option<Pending> = None;
-
-    let entry_sfx = if cfg.n_shards == 1 {
-        String::new()
-    } else {
-        format!("_w{}", cfg.n_shards)
-    };
+    // reused per-step scratch for the post-append lens (`lens[b] + 1`)
+    let mut lens1: Vec<i32> = Vec::new();
 
     loop {
         let Some(msg) = link.recv_timeout(std::time::Duration::from_secs(60))? else {
@@ -117,7 +159,6 @@ fn worker_loop<T: Transport>(engine: &Engine, cfg: &AttnWorkerCfg, link: &T) -> 
                 link.send(WireMsg::KvStats { stats: arena.stats() })?;
             }
             WireMsg::StepQ { layer, slots, q, lens, seq_bucket, overlap } => {
-                let bucket = q.shape()[0];
                 let mut p = Pending {
                     layer,
                     slots,
@@ -129,22 +170,14 @@ fn worker_loop<T: Transport>(engine: &Engine, cfg: &AttnWorkerCfg, link: &T) -> 
                 };
                 if overlap {
                     // partial attention over cached tokens, before k/v exist
-                    let (kc, vc) = arena.gather(&p.slots, layer, bucket, seq_bucket);
-                    let lens_t = HostTensor::i32(vec![bucket], p.lens.clone());
-                    let out = engine
-                        .execute_raw(
-                            &format!("attn_prev{entry_sfx}"),
-                            bucket,
-                            Some(seq_bucket),
-                            &[&p.q, &kc, &vc, &lens_t],
-                        )
-                        .map_err(|e| format!("attn_prev: {e:#}"))?;
-                    let mut it = out.into_iter();
-                    p.partial = Some((
-                        it.next().unwrap(),
-                        it.next().unwrap(),
-                        it.next().unwrap(),
-                    ));
+                    p.partial = Some(backend.attn_prev(
+                        &mut arena,
+                        &p.slots,
+                        layer,
+                        &p.q,
+                        &p.lens,
+                        seq_bucket,
+                    )?);
                 }
                 pending = Some(p);
             }
@@ -153,53 +186,22 @@ fn worker_loop<T: Transport>(engine: &Engine, cfg: &AttnWorkerCfg, link: &T) -> 
                 if p.layer != layer {
                     return Err(format!("layer mismatch: q@{} kv@{}", p.layer, layer));
                 }
-                let bucket = p.q.shape()[0];
                 // append k/v at position lens[b] for each active row
                 arena.append_step(&p.slots, layer, &k, &v, &p.lens);
                 let out = if p.overlap {
-                    let (a, s, m) = p.partial.as_ref().unwrap();
-                    engine
-                        .execute_raw(
-                            &format!("attn_combine{entry_sfx}"),
-                            bucket,
-                            None,
-                            &[&p.q, &k, &v, a, s, m],
-                        )
-                        .map_err(|e| format!("attn_combine: {e:#}"))?
-                        .remove(0)
+                    let prev = p.partial.as_ref().expect("overlap StepQ stored partial");
+                    backend.attn_combine(&p.q, &k, &v, prev)?
                 } else {
-                    let (kc, vc) = arena.gather(&p.slots, layer, bucket, p.seq_bucket);
-                    let lens1: Vec<i32> = p.lens.iter().map(|&l| l + 1).collect();
-                    let lens_t = HostTensor::i32(vec![bucket], lens1);
-                    engine
-                        .execute_raw(
-                            &format!("attention{entry_sfx}"),
-                            bucket,
-                            Some(p.seq_bucket),
-                            &[&p.q, &kc, &vc, &lens_t],
-                        )
-                        .map_err(|e| format!("attention: {e:#}"))?
-                        .remove(0)
+                    lens1.clear();
+                    lens1.extend(p.lens.iter().map(|&l| l + 1));
+                    backend.attention(&mut arena, &p.slots, layer, &p.q, &lens1, p.seq_bucket)?
                 };
                 link.send(WireMsg::AttnOut { layer, out })?;
             }
             WireMsg::PrefillChunk { layer, slot, q, k, v, cached, valid, seq_bucket } => {
-                let t = q.shape()[0];
-                // gather this slot's cached prefix; drop the leading batch
-                // dim with a zero-copy reshape to the kernel's [KH_s, S, hd]
-                let (kc_b, vc_b) = arena.gather(&[slot], layer, 1, seq_bucket);
-                let kc = kc_b.reshape(vec![khs, seq_bucket, hd]);
-                let vc = vc_b.reshape(vec![khs, seq_bucket, hd]);
-                let lens_t = HostTensor::i32(vec![1], vec![cached]);
-                let out = engine
-                    .execute_raw(
-                        &format!("prefill_attn{entry_sfx}"),
-                        t,
-                        Some(seq_bucket),
-                        &[&q, &kc, &vc, &lens_t, &k, &v],
-                    )
-                    .map_err(|e| format!("prefill_attn: {e:#}"))?
-                    .remove(0);
+                // attention over cached prefix + causal chunk, computed
+                // BEFORE the chunk's K/V lands in the arena
+                let out = backend.prefill(&mut arena, slot, layer, &q, &k, &v, cached, seq_bucket)?;
                 // append the chunk's valid K/V rows at cached.. positions
                 arena.append_chunk(slot, layer, &k, &v, cached as usize, valid);
                 link.send(WireMsg::AttnOut { layer, out })?;

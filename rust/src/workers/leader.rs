@@ -12,6 +12,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::kernels::AttnBackendKind;
 use crate::kvcache::kv_blocks_needed;
 use crate::metrics::{KvCacheStats, ServeMetrics, StepBreakdown};
 use crate::net::{inproc, tcp, Transport, TransportKind};
@@ -20,7 +21,7 @@ use crate::runtime::engine::Engine;
 use crate::runtime::host::{copies, HostTensor};
 use crate::trace::Request;
 
-use super::attn_worker::{run_attn_worker, AttnWorkerCfg, PAD_SLOT};
+use super::attn_worker::{run_attn_worker, AttnWorkerCfg, ModelGeom, PAD_SLOT};
 use super::messages::WireMsg;
 
 /// Pipeline options.
@@ -48,6 +49,11 @@ pub struct PipelineOpts {
     pub kv_block_size: usize,
     /// Which wire the leader↔worker links run over (`--transport`).
     pub transport: TransportKind,
+    /// Which compute backend the attention workers run (`--attn-backend`):
+    /// `engine` (PJRT artifacts over gathered K/V) or `native` (pure-Rust
+    /// block-table kernel reading the arena in place — zero per-step KV
+    /// copies on the workers).
+    pub attn_backend: AttnBackendKind,
     /// Per-worker KV block budget for admission control (`--kv-budget`).
     /// `None` = admit unconditionally (the arena grows on demand). With a
     /// budget, `serve` consults the workers' `KvStats` snapshot +
@@ -70,6 +76,7 @@ impl PipelineOpts {
             use_prefill: true,
             kv_block_size: 16,
             transport: TransportKind::Inproc,
+            attn_backend: AttnBackendKind::Engine,
             kv_block_budget: None,
         }
     }
@@ -83,7 +90,7 @@ struct WorkerHandle {
 /// Spawn one attention-worker thread connected over the configured
 /// transport: a paced in-process channel, or a real TCP loopback socket
 /// carrying serialized `net::codec` frames.
-fn spawn_worker(opts: &PipelineOpts, idx: usize, respawn: bool) -> Result<WorkerHandle> {
+fn spawn_worker(opts: &PipelineOpts, geom: ModelGeom, idx: usize, respawn: bool) -> Result<WorkerHandle> {
     let cfg = AttnWorkerCfg {
         artifacts_dir: opts.artifacts_dir.clone(),
         shard: idx,
@@ -91,6 +98,10 @@ fn spawn_worker(opts: &PipelineOpts, idx: usize, respawn: bool) -> Result<Worker
         // distinct physical slots for every wave's requests
         slots: opts.slots * opts.max_waves,
         kv_block_size: opts.kv_block_size,
+        backend: opts.attn_backend,
+        // the leader always has a manifest; handing the geometry over keeps
+        // native workers artifact-independent
+        geom: Some(geom),
     };
     let name = if respawn { format!("lamina-attn-{idx}-r") } else { format!("lamina-attn-{idx}") };
     let builder = std::thread::Builder::new().name(name);
@@ -175,7 +186,10 @@ impl DisaggPipeline {
                 mc.kv_heads
             );
         }
-        let shard_ok = opts.attn_workers == 1
+        // the native backend computes any shard width in pure Rust; only the
+        // engine backend depends on per-width attention artifacts
+        let shard_ok = opts.attn_backend == AttnBackendKind::Native
+            || opts.attn_workers == 1
             || engine
                 .manifest
                 .entrypoints
@@ -186,9 +200,10 @@ impl DisaggPipeline {
                 opts.attn_workers);
         }
 
+        let geom = ModelGeom::of(mc);
         let mut workers = Vec::new();
         for w in 0..opts.attn_workers {
-            workers.push(spawn_worker(&opts, w, false)?);
+            workers.push(spawn_worker(&opts, geom, w, false)?);
         }
         Ok(DisaggPipeline {
             engine,
@@ -555,6 +570,11 @@ impl DisaggPipeline {
         self.opts.transport
     }
 
+    /// The attention backend the workers were started with.
+    pub fn attn_backend(&self) -> AttnBackendKind {
+        self.opts.attn_backend
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn send_prefill(
         &self,
@@ -834,7 +854,8 @@ impl DisaggPipeline {
         // keep the failed link's traffic in the pool totals before the
         // handle (and its counters) is replaced
         self.retired_wire.merge(&self.workers[idx].link.stats());
-        self.workers[idx] = spawn_worker(&self.opts, idx, true)?;
+        let geom = ModelGeom::of(self.config());
+        self.workers[idx] = spawn_worker(&self.opts, geom, idx, true)?;
         for (slot, tokens) in live {
             assert!(!tokens.is_empty());
             // re-prefill the full known token history; the final next-token

@@ -6,7 +6,11 @@
 //! `KvStats*`) the paged arena needs.
 //!
 //! A `WireMsg` is transport-agnostic: it crosses whichever
-//! [`crate::net::Transport`] the pipeline was started with.
+//! [`crate::net::Transport`] the pipeline was started with. It is also
+//! backend-agnostic: the same `StepQ`/`StepKv`/`PrefillChunk` stream feeds
+//! either attention backend (`--attn-backend engine|native`) — the worker
+//! decides locally whether the tensors are gathered for a PJRT artifact or
+//! consumed in place by the block-table-native kernel.
 //!
 //! * Over the **in-process** link (`--transport inproc`,
 //!   `net::inproc` → `netsim::transport`), tensor payloads are `Arc`-backed

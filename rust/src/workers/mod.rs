@@ -22,9 +22,22 @@
 //! `BlockTable`. Resident memory scales with **allocated blocks** (live
 //! context), not `slots × max_waves × max_seq`: the arena grows on demand
 //! and the leader frees a request's blocks with `WireMsg::Retire` the
-//! moment it completes. Kernel inputs are assembled with block-granular
-//! `copy_from_slice` gathers, and `WireMsg::KvStatsReq` feeds occupancy +
+//! moment it completes. `WireMsg::KvStatsReq` feeds occupancy +
 //! internal-waste accounting into `ServeMetrics` every serve round.
+//!
+//! # Compute: pluggable attention backends
+//!
+//! The attention math runs through a [`crate::kernels::AttnBackend`]
+//! selected per worker by `--attn-backend`:
+//!
+//! * `native` — the block-table-native kernel (`kernels::paged_attn`)
+//!   consumes the arena's block tables directly and reads KV **in place**
+//!   with an online-softmax recurrence: no gather, no scratch K/V, zero
+//!   per-step host copies. Needs no PJRT artifacts on the worker.
+//! * `engine` — the PJRT path: the arena assembles contiguous
+//!   `[bucket, KH_s, seq_bucket, hd]` inputs with block-granular
+//!   `copy_from_slice` gathers (the staging copy, charged to
+//!   `runtime::host::copies`) and executes the AOT Pallas artifacts.
 //!
 //! # Transport: zero-copy wire path
 //!
@@ -32,9 +45,10 @@
 //! decode path the leader↔worker byte path performs **no host deep-copies**:
 //! Q/K/V staging uses full-range head slices (views), `WireMsg` sends move
 //! an `Arc`, and a single worker's attention output is returned without
-//! reassembly. Only genuine shard interleaving (W > 1) and kernel staging
-//! gathers copy, and both report what they moved through
-//! `runtime::host::copies` (see `cargo bench` → `BENCH_decode.json`).
+//! reassembly. Only genuine shard interleaving (W > 1) and the engine
+//! backend's staging gathers copy, and both report what they moved through
+//! `runtime::host::copies` — with the native backend the whole decode step
+//! charges **zero** bytes (see `cargo bench` → `BENCH_decode.json`).
 //! Simulated-network accounting is unchanged: `wire_bytes()` still charges
 //! the logical payload size to the modelled link.
 
@@ -42,6 +56,6 @@ pub mod attn_worker;
 pub mod leader;
 pub mod messages;
 
-pub use attn_worker::{AttnWorkerCfg, PAD_SLOT};
+pub use attn_worker::{run_attn_worker, AttnWorkerCfg, ModelGeom, PAD_SLOT};
 pub use leader::{DisaggPipeline, PipelineOpts};
 pub use messages::WireMsg;

@@ -1,0 +1,287 @@
+//! Native block-table kernel vs the gather + reference path.
+//!
+//! The native kernels (`kernels::paged_attn*`) read the paged arena in
+//! place with a **one-pass online-softmax** recurrence; the oracle
+//! (`kernels::reference`) consumes the arena's **gathered** dense K/V with
+//! a plain two-pass softmax. The two re-associate the softmax sums, so
+//! they are *not* bit-identical; floating-point reassociation on O(1)
+//! inputs perturbs results at the last few ulps.
+//!
+//! **Documented tolerance choice (per ISSUE 3):** we assert
+//! `|native − reference| ≤ 1e-5 · max(1, |reference|)`. Inputs are PRNG
+//! values in [-1, 1); normalised attention outputs are convex combinations
+//! of them (O(1), so the bound is effectively absolute 1e-5 there), while
+//! the *unnormalised* partial state `(A, S)` grows with the token count —
+//! the `max(1, |·|)` factor keeps the bound meaningful at ~100 f32 ulps for
+//! any magnitude. What IS asserted bit-exact: the native kernel against
+//! itself across thread counts (row arithmetic is sequential per row, so
+//! parallelism must not change a single bit).
+//!
+//! Sequences are randomised like `kv_paged.rs`: decode appends, prefill
+//! chunks, retirement and slot reuse over random lens/buckets/block sizes.
+
+use lamina::kernels::{
+    combine_new_token, paged_attn, paged_attn_prev, paged_prefill, reference,
+};
+use lamina::kvcache::{ArenaCfg, PagedKvArena, PAD_SLOT};
+use lamina::runtime::host::HostTensor;
+use lamina::util::prng::Rng;
+
+const LAYERS: usize = 2;
+const KHS: usize = 2;
+const G: usize = 2;
+const HS: usize = KHS * G;
+const HD: usize = 4;
+const MAX_SEQ: usize = 64;
+const SLOTS: usize = 5;
+const LEN_CAP: usize = 40;
+const TOL: f32 = 1e-5;
+
+fn rand_kv(rng: &mut Rng, rows: usize) -> HostTensor {
+    let data: Vec<f32> = (0..rows * KHS * HD).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+    HostTensor::f32(vec![rows, KHS, HD], data)
+}
+
+fn rand_q(rng: &mut Rng, rows: usize) -> HostTensor {
+    let data: Vec<f32> = (0..rows * HS * HD).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+    HostTensor::f32(vec![rows, HS, HD], data)
+}
+
+fn assert_close(got: &HostTensor, want: &HostTensor, tag: &str) {
+    assert_eq!(got.shape(), want.shape(), "{tag}: shape");
+    for (i, (a, b)) in got.as_f32().iter().zip(want.as_f32()).enumerate() {
+        let bound = TOL * b.abs().max(1.0);
+        assert!(
+            (a - b).abs() <= bound,
+            "{tag}: elem {i} native {a} vs reference {b} (|Δ| > {bound})"
+        );
+    }
+}
+
+/// Compare native full attention against gather + two-pass reference for a
+/// random wave, and assert thread-count bit-determinism.
+fn check_attention(arena: &mut PagedKvArena, lens: &[usize], rng: &mut Rng, tag: &str) {
+    let bucket = rng.usize(1, SLOTS + 1);
+    let mut slots: Vec<u32> = (0..SLOTS as u32).collect();
+    rng.shuffle(&mut slots);
+    slots.truncate(bucket);
+    let mut row_lens = vec![0i32; bucket];
+    for (b, s) in slots.iter_mut().enumerate() {
+        let have = lens[*s as usize];
+        if have == 0 || rng.chance(0.15) {
+            *s = PAD_SLOT;
+            // pads carry lens1 = 1 on the real wire (leader lens 0 + 1)
+            row_lens[b] = 1;
+        } else {
+            // attend a random valid prefix (usually everything cached)
+            row_lens[b] = if rng.chance(0.7) { have } else { rng.usize(1, have + 1) } as i32;
+        }
+    }
+    let seq_bucket = [16usize, 32, 64][rng.usize(0, 3)];
+    let layer = rng.usize(0, LAYERS);
+    let q = rand_q(rng, bucket);
+
+    let native = paged_attn(arena, &slots, layer, &q, &row_lens, seq_bucket, 1);
+    let native_mt = paged_attn(arena, &slots, layer, &q, &row_lens, seq_bucket, 4);
+    assert_eq!(
+        native.as_f32(),
+        native_mt.as_f32(),
+        "{tag}: thread count changed bits"
+    );
+
+    // reference path: gather into dense [bucket, KHS, seq, HD], two-pass.
+    // Clamp each row's lens to the seq bucket like the kernels' mask does.
+    let (kc, vc) = arena.gather(&slots, layer, bucket, seq_bucket);
+    let ref_lens: Vec<i32> = row_lens.iter().map(|&l| l.min(seq_bucket as i32)).collect();
+    let want = reference::decode_attention_ref(&q, &kc, &vc, &ref_lens);
+    assert_close(&native, &want, tag);
+}
+
+/// Overlap-path equivalence: `attn_prev` (before append) + `combine` (after)
+/// must match both the native full pass and the reference full pass.
+fn check_overlap(
+    arena: &mut PagedKvArena,
+    lens: &mut [usize],
+    rng: &mut Rng,
+    tag: &str,
+) {
+    // rows over live slots (no pads here; the wire sends pads lens 0 which
+    // both paths turn into "new token only" — covered by unit tests)
+    let bucket = rng.usize(1, SLOTS + 1);
+    let mut slots: Vec<u32> = (0..SLOTS as u32).collect();
+    rng.shuffle(&mut slots);
+    slots.truncate(bucket);
+    if slots.iter().any(|&s| lens[s as usize] + 1 > LEN_CAP) {
+        return;
+    }
+    let row_lens: Vec<i32> = slots.iter().map(|&s| lens[s as usize] as i32).collect();
+    let seq_bucket = 64;
+    let q = rand_q(rng, bucket);
+
+    let prev = paged_attn_prev(arena, &slots, 0, &q, &row_lens, seq_bucket, 2);
+
+    // reference partial over the gathered cache must agree
+    {
+        let (kc, vc) = arena.gather(&slots, 0, bucket, seq_bucket);
+        let (ra, rs, rm) = reference::partial_attention_ref(&q, &kc, &vc, &row_lens);
+        assert_close(&prev.a, &ra, &format!("{tag}: partial A"));
+        assert_close(&prev.s, &rs, &format!("{tag}: partial S"));
+        assert_close(&prev.m, &rm, &format!("{tag}: partial m"));
+    }
+
+    // append the step's K/V on every layer (protocol: layer 0 grows tables)
+    let mut step_k0 = None;
+    for layer in 0..LAYERS {
+        let k = rand_kv(rng, bucket);
+        let v = rand_kv(rng, bucket);
+        arena.append_step(&slots, layer, &k, &v, &row_lens);
+        if layer == 0 {
+            step_k0 = Some((k, v));
+        }
+    }
+    let (k0, v0) = step_k0.unwrap();
+
+    let combined = combine_new_token(&q, &k0, &v0, &prev);
+    let lens1: Vec<i32> = row_lens.iter().map(|&l| l + 1).collect();
+    let full = paged_attn(arena, &slots, 0, &q, &lens1, seq_bucket, 2);
+    assert_close(&combined, &full, &format!("{tag}: prev+combine vs full"));
+
+    for &s in &slots {
+        lens[s as usize] += 1;
+    }
+}
+
+/// Chunked prefill: native in-place kernel vs reference over gathered cache.
+fn check_prefill(arena: &mut PagedKvArena, lens: &mut [usize], rng: &mut Rng, tag: &str) {
+    let slot = rng.usize(0, SLOTS) as u32;
+    let cached = if rng.chance(0.4) { 0 } else { lens[slot as usize] };
+    let t = rng.usize(1, 7);
+    if cached + t > LEN_CAP {
+        return;
+    }
+    let seq_bucket = 64;
+    let q = rand_q(rng, t);
+    for layer in 0..LAYERS {
+        let k = rand_kv(rng, t);
+        let v = rand_kv(rng, t);
+        if layer == 0 {
+            // compute BEFORE append, exactly like the worker does
+            let native = paged_prefill(arena, slot, 0, &q, &k, &v, cached, seq_bucket, 2);
+            let native_mt = paged_prefill(arena, slot, 0, &q, &k, &v, cached, seq_bucket, 1);
+            assert_eq!(native.as_f32(), native_mt.as_f32(), "{tag}: prefill thread bits");
+            let (kc_b, vc_b) = arena.gather(&[slot], 0, 1, seq_bucket);
+            let kc = kc_b.reshape(vec![KHS, seq_bucket, HD]);
+            let vc = vc_b.reshape(vec![KHS, seq_bucket, HD]);
+            let n = if cached == 0 { 0 } else { cached.min(arena.len_tokens(slot)) };
+            let want = reference::chunked_prefill_ref(&q, &kc, &vc, n, &k, &v);
+            assert_close(&native, &want, &format!("{tag}: prefill"));
+        }
+        arena.append_chunk(slot, layer, &k, &v, cached, t);
+    }
+    lens[slot as usize] = cached + t;
+}
+
+fn run_case(seed: u64, block_size: usize, ops: usize) {
+    let mut rng = Rng::new(seed);
+    let mut arena = PagedKvArena::new(ArenaCfg {
+        layers: LAYERS,
+        kv_heads: KHS,
+        head_dim: HD,
+        max_seq: MAX_SEQ,
+        slots: SLOTS,
+        block_size,
+        initial_blocks: 2, // force on-demand growth
+    });
+    let mut lens = vec![0usize; SLOTS];
+
+    for op in 0..ops {
+        let tag = format!("bs={block_size} seed={seed:#x} op={op}");
+        match rng.usize(0, 100) {
+            // plain decode step: append on all layers, then compare full
+            // attention on a random layer
+            0..=44 => {
+                let bucket = rng.usize(1, SLOTS + 1);
+                let mut slots: Vec<u32> = (0..SLOTS as u32).collect();
+                rng.shuffle(&mut slots);
+                slots.truncate(bucket);
+                let mut step_lens = vec![0i32; bucket];
+                for (b, s) in slots.iter_mut().enumerate() {
+                    if rng.chance(0.2) || lens[*s as usize] + 1 > LEN_CAP {
+                        *s = PAD_SLOT;
+                    } else {
+                        step_lens[b] = lens[*s as usize] as i32;
+                    }
+                }
+                for layer in 0..LAYERS {
+                    let k = rand_kv(&mut rng, bucket);
+                    let v = rand_kv(&mut rng, bucket);
+                    arena.append_step(&slots, layer, &k, &v, &step_lens);
+                }
+                for &s in &slots {
+                    if s != PAD_SLOT {
+                        lens[s as usize] += 1;
+                    }
+                }
+                check_attention(&mut arena, &lens, &mut rng, &tag);
+            }
+            // overlap path (prev + combine) incl. its own appends
+            45..=64 => check_overlap(&mut arena, &mut lens, &mut rng, &tag),
+            // chunked prefill
+            65..=84 => check_prefill(&mut arena, &mut lens, &mut rng, &tag),
+            // retirement
+            85..=92 => {
+                let slot = rng.usize(0, SLOTS) as u32;
+                arena.retire(slot);
+                lens[slot as usize] = 0;
+            }
+            // slot reuse without retire (leader restarts at position 0)
+            _ => {
+                let slot = rng.usize(0, SLOTS);
+                lens[slot] = 0;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_native_kernel_matches_gather_plus_reference() {
+    for &bs in &[1usize, 4, 16] {
+        for rep in 0..4 {
+            run_case(0x7e57 + rep * 6151 + bs as u64, bs, 50);
+        }
+    }
+}
+
+#[test]
+fn native_attention_is_copy_free() {
+    use lamina::runtime::host::copies;
+    let mut arena = PagedKvArena::new(ArenaCfg {
+        layers: 1,
+        kv_heads: KHS,
+        head_dim: HD,
+        max_seq: MAX_SEQ,
+        slots: 2,
+        block_size: 4,
+        initial_blocks: 2,
+    });
+    let mut rng = Rng::new(0xc0ffee);
+    for t in 0..10 {
+        let k = rand_kv(&mut rng, 2);
+        arena.append_step(&[0, 1], 0, &k, &k, &[t, t]);
+    }
+    let q = rand_q(&mut rng, 2);
+    // `copies` is process-global and other tests run in parallel, so probe
+    // with a retry: a run of the native kernel during which the counter
+    // did not move proves the kernel itself charges nothing.
+    let mut clean = false;
+    for _ in 0..50 {
+        let before = copies::total();
+        let out = paged_attn(&arena, &[0, 1], 0, &q, &[10, 10], 16, 2);
+        assert_eq!(out.shape(), &[2, HS, HD]);
+        if copies::total() == before {
+            clean = true;
+            break;
+        }
+    }
+    assert!(clean, "native kernel must not charge host copies");
+}

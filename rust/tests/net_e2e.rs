@@ -15,12 +15,15 @@
 
 use std::path::PathBuf;
 
+use lamina::kernels::AttnBackendKind;
 use lamina::metrics::KvCacheStats;
 use lamina::net::{inproc, tcp, MsgClass, Transport, TransportKind, WireStats};
 use lamina::netsim::stack::{FHBN, LINE_RATE_400G};
 use lamina::runtime::host::HostTensor;
 use lamina::trace::Request;
-use lamina::workers::{DisaggPipeline, PipelineOpts, WireMsg};
+use lamina::workers::{
+    run_attn_worker, AttnWorkerCfg, DisaggPipeline, ModelGeom, PipelineOpts, WireMsg, PAD_SLOT,
+};
 
 // ---------------------------------------------------------------------------
 // Part 1: protocol-level session over both transports (no artifacts needed)
@@ -187,6 +190,134 @@ fn session_bit_identical_across_transports() {
             class.name()
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// Part 1b: a REAL attention worker on the native backend, artifact-free.
+// The worker runs `run_attn_worker` with `--attn-backend native` semantics
+// (pure-Rust block-table kernel; no PJRT, no artifacts, geometry handed in
+// explicitly) and is driven through a full decode + overlap + chunked-
+// prefill + KV-lifecycle session over BOTH transports. Replies must be
+// bit-identical: the native kernel is deterministic and the TCP codec is
+// bit-preserving.
+// ---------------------------------------------------------------------------
+
+fn native_worker_cfg() -> AttnWorkerCfg {
+    AttnWorkerCfg {
+        // deliberately nonexistent: the native backend must not need it
+        artifacts_dir: PathBuf::from("artifacts-does-not-exist"),
+        shard: 0,
+        n_shards: 1,
+        slots: 4,
+        kv_block_size: 4,
+        backend: AttnBackendKind::Native,
+        geom: Some(ModelGeom { layers: 2, kv_heads: 4, head_dim: 16, max_seq: 64 }),
+    }
+}
+
+/// Drive a full session against a real native-backend worker: chunked
+/// prefill on slot 0, decode steps (both plain and overlap mode) over a
+/// padded wave, and the KV control plane. Returns every reply in order.
+fn run_native_session<T: Transport + 'static>(leader: T, worker: T) -> Vec<WireMsg> {
+    let cfg = native_worker_cfg();
+    let h = std::thread::spawn(move || run_attn_worker(cfg, worker));
+    let mut replies = Vec::new();
+
+    // chunked prefill: 2 chunks × 3 tokens on slot 0, both layers each
+    let mut cached = 0i32;
+    for chunk in 0..2i32 {
+        for layer in 0..2usize {
+            let salt = 50.0 + chunk as f32 * 4.0 + layer as f32;
+            leader
+                .send(WireMsg::PrefillChunk {
+                    layer,
+                    slot: 0,
+                    q: tensor(&[3, 8, 16], salt),
+                    k: tensor(&[3, 4, 16], salt + 0.25),
+                    v: tensor(&[3, 4, 16], salt - 0.25),
+                    cached,
+                    valid: 3,
+                    seq_bucket: 16,
+                })
+                .unwrap();
+            replies.push(leader.recv().unwrap());
+        }
+        cached += 3;
+    }
+
+    // decode steps over a padded wave; overlap toggles per step (both the
+    // attention path and the attn_prev+combine path cross the wire)
+    let mut lens = [6i32, 0, 0];
+    for step in 0..4i32 {
+        let overlap = step % 2 == 1;
+        for layer in 0..2usize {
+            let salt = 7.0 + step as f32 * 3.0 + layer as f32;
+            leader
+                .send(WireMsg::StepQ {
+                    layer,
+                    slots: vec![0, 1, PAD_SLOT, 3],
+                    q: tensor(&[4, 8, 16], salt),
+                    lens: vec![lens[0], lens[1], 0, lens[2]],
+                    seq_bucket: 16,
+                    overlap,
+                })
+                .unwrap();
+            leader
+                .send(WireMsg::StepKv {
+                    layer,
+                    k: tensor(&[4, 4, 16], salt + 0.5),
+                    v: tensor(&[4, 4, 16], salt - 0.5),
+                })
+                .unwrap();
+            replies.push(leader.recv().unwrap());
+        }
+        for l in lens.iter_mut() {
+            *l += 1;
+        }
+    }
+
+    // KV control plane: occupancy, retire, occupancy again (ordered wire)
+    leader.send(WireMsg::KvStatsReq).unwrap();
+    replies.push(leader.recv().unwrap());
+    leader.send(WireMsg::Retire { slot: 0 }).unwrap();
+    leader.send(WireMsg::KvStatsReq).unwrap();
+    replies.push(leader.recv().unwrap());
+
+    leader.send(WireMsg::Shutdown).unwrap();
+    h.join().unwrap();
+    replies
+}
+
+#[test]
+fn native_backend_full_session_artifact_free_over_both_transports() {
+    let (inproc_leader, inproc_worker) = inproc::pair(&FHBN, LINE_RATE_400G, 0.0);
+    let (tcp_leader, tcp_worker) = tcp::pair().expect("loopback pair");
+
+    let replies_inproc = run_native_session(inproc_leader, inproc_worker);
+    let replies_tcp = run_native_session(tcp_leader, tcp_worker);
+
+    assert_eq!(replies_inproc.len(), replies_tcp.len());
+    for (i, (a, b)) in replies_inproc.iter().zip(&replies_tcp).enumerate() {
+        // no WorkerError slipped in as a "reply"
+        assert!(
+            matches!(a, WireMsg::AttnOut { .. } | WireMsg::KvStats { .. }),
+            "reply {i} is {a:?}"
+        );
+        assert_eq!(a, b, "native reply {i} diverged between transports");
+    }
+
+    // the KV lifecycle really happened: before the retire the worker held
+    // blocks for slot 0 (6 prefill + 4 decode = 10 tokens → 3 blocks of 4)
+    // plus slots 1 and 3 (4 tokens → 1 block each); after retiring slot 0
+    // its 3 blocks are back in the pool
+    let WireMsg::KvStats { stats: before } = &replies_inproc[replies_inproc.len() - 2] else {
+        panic!("expected KvStats");
+    };
+    let WireMsg::KvStats { stats: after } = &replies_inproc[replies_inproc.len() - 1] else {
+        panic!("expected KvStats");
+    };
+    assert_eq!(before.blocks_in_use, 3 + 1 + 1);
+    assert_eq!(after.blocks_in_use, 2);
 }
 
 // ---------------------------------------------------------------------------

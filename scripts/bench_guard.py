@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""Bench regression guard for the decode hot path.
+
+Compares the freshly generated ``rust/BENCH_decode.json`` against the
+committed ``rust/BENCH_baseline.json`` and fails when the decode path got
+slower or started copying again:
+
+* **ns/iter**: any decode-path row (``kv/``, ``kernel/``, ``e2e/``,
+  ``host/`` prefixes) more than 20% slower than baseline fails. A small
+  absolute slack (250 ns) keeps sub-microsecond rows from tripping on
+  scheduler noise in quick mode.
+* **copied bytes**: ``host_copy_bytes_per_iter`` may never *increase* for
+  any row — this is machine-independent and gates the tentpole invariant
+  (the paged-native decode step stays at **zero** copied KV bytes).
+
+Bench numbers are machine-specific, so the repo ships a ``bootstrap``
+baseline; the first run on a machine fills it with measured rows and later
+runs gate against them. ``--update`` rewrites the baseline explicitly.
+
+Usage: bench_guard.py BASELINE CURRENT [--update]
+"""
+
+import json
+import sys
+
+NS_REGRESSION = 1.20  # fail if > 20% slower
+NS_SLACK = 250.0      # ignore sub-noise absolute deltas (quick-mode jitter)
+NS_PREFIXES = ("kv/", "kernel/", "e2e/", "host/")
+
+
+def rows_by_name(doc):
+    return {r["name"]: r for r in doc.get("rows", [])}
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 2
+    baseline_path, current_path = argv[1], argv[2]
+    update = "--update" in argv[3:]
+
+    with open(current_path) as f:
+        current = json.load(f)
+
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        baseline = None
+
+    if update or baseline is None or baseline.get("bootstrap") or not baseline.get("rows"):
+        current = dict(current)
+        current.pop("bootstrap", None)
+        with open(baseline_path, "w") as f:
+            json.dump(current, f, indent=2)
+            f.write("\n")
+        why = "--update" if update else "bootstrap (no measured baseline yet)"
+        print(f"bench_guard: wrote baseline {baseline_path} ({why})")
+        return 0
+
+    base_rows = rows_by_name(baseline)
+    cur_rows = rows_by_name(current)
+    failures = []
+    checked = 0
+    new_rows = []
+
+    for name, cur in cur_rows.items():
+        base = base_rows.get(name)
+        if base is None:
+            new_rows.append(cur)  # no baseline yet: adopt below, gate next run
+            continue
+        checked += 1
+
+        if name.startswith(NS_PREFIXES):
+            b_ns, c_ns = float(base["ns_per_iter"]), float(cur["ns_per_iter"])
+            if c_ns > b_ns * NS_REGRESSION and c_ns - b_ns > NS_SLACK:
+                failures.append(
+                    f"{name}: {c_ns:.0f} ns/iter vs baseline {b_ns:.0f} "
+                    f"(+{(c_ns / b_ns - 1) * 100:.1f}% > {round((NS_REGRESSION - 1) * 100)}%)"
+                )
+
+        b_copy = base.get("host_copy_bytes_per_iter")
+        c_copy = cur.get("host_copy_bytes_per_iter")
+        if b_copy is not None and c_copy is not None and float(c_copy) > float(b_copy):
+            failures.append(
+                f"{name}: copied bytes grew {int(float(b_copy))} -> {int(float(c_copy))}"
+            )
+
+    # e2e/* rows are artifact-gated (benches skip them when rust/artifacts/
+    # is absent) — their absence is an environment difference, not a
+    # regression, so only warn. Artifact-free rows must never vanish.
+    for name in sorted(set(base_rows) - set(cur_rows)):
+        if name.startswith("e2e/"):
+            print(f"bench_guard: note — artifact-gated row missing (no artifacts?): {name}")
+        else:
+            failures.append(f"{name}: row disappeared from the bench output")
+
+    if failures:
+        print(f"bench_guard: {len(failures)} regression(s) over {checked} compared rows:")
+        for f_ in failures:
+            print(f"  FAIL {f_}")
+        print("(rerun with --update after an intentional change)")
+        return 1
+
+    if new_rows:
+        # adopt rows that have no baseline entry yet so they are gated from
+        # the next run on (and say so — silence would unguard new benches)
+        for r in new_rows:
+            print(f"bench_guard: adopting new row into baseline: {r['name']}")
+            baseline["rows"].append(r)
+        with open(baseline_path, "w") as f:
+            json.dump(baseline, f, indent=2)
+            f.write("\n")
+
+    print(f"bench_guard: OK — {checked} rows within bounds, no copy growth")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

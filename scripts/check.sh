@@ -1,7 +1,11 @@
 #!/usr/bin/env bash
-# Repo-wide verification gate: release build, full test suite, and the
-# bench suite in quick mode (which also regenerates rust/BENCH_decode.json
-# with codec GB/s, TCP-loopback RTT and KV-gather rows).
+# Repo-wide verification gate: release build, full test suite, the bench
+# suite in quick mode (which regenerates rust/BENCH_decode.json with codec
+# GB/s, TCP-loopback RTT, KV-gather and native-kernel decode-step rows),
+# and the bench regression guard (decode-path ns/iter must stay within 20%
+# of rust/BENCH_baseline.json and per-step copied bytes may never grow —
+# in particular the paged-native decode step must stay at ZERO copied KV
+# bytes).
 #
 # Usage: scripts/check.sh [--no-bench]
 set -euo pipefail
@@ -17,6 +21,9 @@ if [[ "${1:-}" != "--no-bench" ]]; then
   echo "== cargo bench (LAMINA_BENCH_QUICK=1) =="
   LAMINA_BENCH_QUICK=1 cargo bench
   echo "bench output: rust/BENCH_decode.json"
+
+  echo "== bench regression guard =="
+  python3 scripts/bench_guard.py rust/BENCH_baseline.json rust/BENCH_decode.json
 fi
 
 echo "check.sh: all green"
