@@ -14,21 +14,26 @@
 //!     (with and without gather-scratch reuse), plus zero-copy staging vs
 //!     legacy deep-copy staging
 //!   * native-kernel benches   → block-table-native decode attention (zero
-//!     copied KV bytes) vs gather + reference, and the e2e decode step on
-//!     both attention backends (needs artifacts)
+//!     copied KV bytes) vs gather + reference — at every KV storage dtype
+//!     (`kv=f32|f16|int8` rows; the quantized rows assert the ≥1.8×/≥3×
+//!     per-step bytes-read reduction) — plus the unrolled-vs-naive inner
+//!     loop delta and the e2e decode step on both attention backends
+//!     (needs artifacts)
 //!
 //! Env: LAMINA_BENCH_QUICK=1 shrinks budgets (CI smoke).
 //!
 //! Machine-readable output: the decode-path benches land in
-//! `rust/BENCH_decode.json` (name, ns/iter, host bytes copied per iter, KV
-//! blocks in use) so perf trajectory can be tracked across PRs.
+//! `rust/BENCH_decode.json` (name, mean+min ns/iter, host bytes copied per
+//! iter, KV bytes read per iter, KV blocks in use) so perf trajectory can
+//! be tracked across PRs; `scripts/bench_guard.py` gates decode-path rows
+//! on **min** ns/iter and on any growth in copied or read bytes.
 
 use lamina::baseline::vllm::{run_vllm, VllmConfig};
 use lamina::coordinator::batcher::ContinuousBatcher;
 use lamina::coordinator::sim::{run_lamina, wave_cost, LaminaConfig};
 use lamina::devices::specs::{H100, H20, LLAMA3_70B};
-use lamina::kernels::{paged_attn, reference, AttnBackendKind};
-use lamina::kvcache::{ArenaCfg, BlockAllocator, KvRegistry, PagedKvArena};
+use lamina::kernels::{axpy, dot, paged_attn, reference, AttnBackendKind, Par};
+use lamina::kvcache::{ArenaCfg, BlockAllocator, KvDtype, KvRegistry, PagedKvArena};
 use lamina::net::{codec, tcp, Transport};
 use lamina::netsim::stack::{FHBN, LINE_RATE_400G};
 use lamina::netsim::transport::link;
@@ -36,7 +41,7 @@ use lamina::opgraph::builder::{build_decode_graph, llama3_70b_shape, tiny_shape}
 use lamina::opgraph::schedule::emit_programs;
 use lamina::opgraph::slicer::split_at_attention;
 use lamina::runtime::engine::Engine;
-use lamina::runtime::host::{copies, HostTensor};
+use lamina::runtime::host::{copies, kv_reads, HostTensor};
 use lamina::trace::{fixed_length, synthesize, AZURE_CONV};
 use lamina::util::bench::{black_box, Bench};
 use lamina::util::json::Json;
@@ -53,44 +58,64 @@ fn copied_bytes(mut f: impl FnMut()) -> u64 {
     copies::total()
 }
 
-/// One `BENCH_decode.json` row.
-fn row(name: &str, ns_per_iter: f64, copy_bytes: u64, kv_blocks: usize) -> Json {
+/// KV-arena bytes read (native-kernel working set) by one invocation.
+fn kv_read_bytes(mut f: impl FnMut()) -> u64 {
+    kv_reads::reset();
+    f();
+    kv_reads::total()
+}
+
+/// One `BENCH_decode.json` row. `ns` is (mean, min) per iteration — the
+/// regression guard gates decode-path rows on **min** (the jitter-robust
+/// statistic; mean is kept for human trend-reading).
+fn row(name: &str, ns: (f64, f64), copy_bytes: u64, kv_blocks: usize) -> Json {
     Json::obj(vec![
         ("name", Json::str(name)),
-        ("ns_per_iter", Json::num(ns_per_iter)),
+        ("ns_per_iter", Json::num(ns.0)),
+        ("ns_per_iter_min", Json::num(ns.1)),
         ("host_copy_bytes_per_iter", Json::num(copy_bytes as f64)),
         ("kv_blocks_in_use", Json::num(kv_blocks as f64)),
     ])
 }
 
 /// A decode-step row: like [`row`] plus the derived tokens/s (the paper's
-/// headline unit for the attention hot loop).
+/// headline unit for the attention hot loop) and the per-step KV bytes
+/// **read** by the kernel (the bandwidth term quantized storage shrinks).
 fn row_step(
     name: &str,
-    ns_per_iter: f64,
+    ns: (f64, f64),
     copy_bytes: u64,
+    read_bytes: u64,
     kv_blocks: usize,
     tokens_per_iter: usize,
 ) -> Json {
     Json::obj(vec![
         ("name", Json::str(name)),
-        ("ns_per_iter", Json::num(ns_per_iter)),
+        ("ns_per_iter", Json::num(ns.0)),
+        ("ns_per_iter_min", Json::num(ns.1)),
         ("host_copy_bytes_per_iter", Json::num(copy_bytes as f64)),
+        ("kv_read_bytes_per_iter", Json::num(read_bytes as f64)),
         ("kv_blocks_in_use", Json::num(kv_blocks as f64)),
         (
             "tokens_per_s",
-            Json::num(tokens_per_iter as f64 / (ns_per_iter.max(1.0) * 1e-9)),
+            Json::num(tokens_per_iter as f64 / (ns.0.max(1.0) * 1e-9)),
         ),
     ])
 }
 
+/// Mean/min ns-per-iter pair of a bench result.
+fn ns_of(r: &lamina::util::bench::BenchResult) -> (f64, f64) {
+    (r.mean_s * 1e9, r.min_s * 1e9)
+}
+
 /// A net-path row: wire bytes moved per iteration + derived GB/s.
-fn row_net(name: &str, ns_per_iter: f64, wire_bytes: usize) -> Json {
+fn row_net(name: &str, ns: (f64, f64), wire_bytes: usize) -> Json {
     Json::obj(vec![
         ("name", Json::str(name)),
-        ("ns_per_iter", Json::num(ns_per_iter)),
+        ("ns_per_iter", Json::num(ns.0)),
+        ("ns_per_iter_min", Json::num(ns.1)),
         ("wire_bytes_per_iter", Json::num(wire_bytes as f64)),
-        ("gb_per_s", Json::num(wire_bytes as f64 / ns_per_iter.max(1.0))),
+        ("gb_per_s", Json::num(wire_bytes as f64 / ns.0.max(1.0))),
     ])
 }
 
@@ -224,21 +249,15 @@ fn bench_net(b: &mut Bench, rows: &mut Vec<Json>) {
     let frame_len = codec::encode(&msg, &mut frame);
 
     let mut scratch: Vec<u8> = Vec::with_capacity(frame_len);
-    let enc_ns = b
-        .run("net/codec encode StepKv 128KiB", || {
-            scratch.clear();
-            black_box(codec::encode(&msg, &mut scratch));
-        })
-        .mean_s
-        * 1e9;
+    let enc_ns = ns_of(b.run("net/codec encode StepKv 128KiB", || {
+        scratch.clear();
+        black_box(codec::encode(&msg, &mut scratch));
+    }));
     rows.push(row_net("net/codec encode StepKv 128KiB", enc_ns, frame_len));
 
-    let dec_ns = b
-        .run("net/codec decode StepKv 128KiB", || {
-            black_box(codec::decode_frame(&frame).unwrap().unwrap());
-        })
-        .mean_s
-        * 1e9;
+    let dec_ns = ns_of(b.run("net/codec decode StepKv 128KiB", || {
+        black_box(codec::decode_frame(&frame).unwrap().unwrap());
+    }));
     rows.push(row_net("net/codec decode StepKv 128KiB", dec_ns, frame_len));
 
     // the element-wise conversion the bulk-cast ENCODE fast path replaced,
@@ -248,15 +267,15 @@ fn bench_net(b: &mut Bench, rows: &mut Vec<Json>) {
     // isolates the frame/checksum overhead of the full decode row)
     let payload_bytes = 2 * t.byte_size();
     let mut base_buf: Vec<u8> = Vec::with_capacity(payload_bytes);
-    let base_enc_ns = b
-        .run("net/codec encode StepKv 128KiB (element-wise baseline)", || {
+    let base_enc_ns = ns_of(b.run(
+        "net/codec encode StepKv 128KiB (element-wise baseline)",
+        || {
             base_buf.clear();
             codec::put_f32_le_elementwise(&mut base_buf, t.as_f32());
             codec::put_f32_le_elementwise(&mut base_buf, t.as_f32());
             black_box(base_buf.len());
-        })
-        .mean_s
-        * 1e9;
+        },
+    ));
     rows.push(row_net(
         "net/codec encode StepKv 128KiB (element-wise baseline)",
         base_enc_ns,
@@ -264,12 +283,12 @@ fn bench_net(b: &mut Bench, rows: &mut Vec<Json>) {
     ));
 
     let raw: Vec<u8> = base_buf.clone();
-    let base_dec_ns = b
-        .run("net/codec decode StepKv 128KiB (element-wise baseline)", || {
+    let base_dec_ns = ns_of(b.run(
+        "net/codec decode StepKv 128KiB (element-wise baseline)",
+        || {
             black_box(codec::get_f32_le_elementwise(&raw));
-        })
-        .mean_s
-        * 1e9;
+        },
+    ));
     rows.push(row_net(
         "net/codec decode StepKv 128KiB (element-wise baseline)",
         base_dec_ns,
@@ -277,8 +296,8 @@ fn bench_net(b: &mut Bench, rows: &mut Vec<Json>) {
     ));
     eprintln!(
         "net/codec fast-path speedup: encode {:.2}×, decode {:.2}× vs element-wise",
-        base_enc_ns / enc_ns.max(1.0),
-        base_dec_ns / dec_ns.max(1.0)
+        base_enc_ns.0 / enc_ns.0.max(1.0),
+        base_dec_ns.0 / dec_ns.0.max(1.0)
     );
 
     // TCP loopback round-trip through real kernel sockets (serialized both
@@ -297,13 +316,10 @@ fn bench_net(b: &mut Bench, rows: &mut Vec<Json>) {
 
     let ctl = WireMsg::Retire { slot: 3 };
     let ctl_bytes = codec::encoded_len(&ctl);
-    let ctl_ns = b
-        .run("net/tcp loopback rtt control (16 B)", || {
-            leader.send(ctl.clone()).unwrap();
-            black_box(leader.recv().unwrap());
-        })
-        .mean_s
-        * 1e9;
+    let ctl_ns = ns_of(b.run("net/tcp loopback rtt control (16 B)", || {
+        leader.send(ctl.clone()).unwrap();
+        black_box(leader.recv().unwrap());
+    }));
     rows.push(row_net("net/tcp loopback rtt control (16 B)", ctl_ns, 2 * ctl_bytes));
 
     let out = WireMsg::AttnOut {
@@ -311,13 +327,10 @@ fn bench_net(b: &mut Bench, rows: &mut Vec<Json>) {
         out: HostTensor::f32(vec![8, 8, 64], vec![0.25; 8 * 8 * 64]),
     };
     let out_bytes = codec::encoded_len(&out);
-    let out_ns = b
-        .run("net/tcp loopback rtt AttnOut (16 KiB)", || {
-            leader.send(out.clone()).unwrap();
-            black_box(leader.recv().unwrap());
-        })
-        .mean_s
-        * 1e9;
+    let out_ns = ns_of(b.run("net/tcp loopback rtt AttnOut (16 KiB)", || {
+        leader.send(out.clone()).unwrap();
+        black_box(leader.recv().unwrap());
+    }));
     rows.push(row_net("net/tcp loopback rtt AttnOut (16 KiB)", out_ns, 2 * out_bytes));
 
     leader.send(WireMsg::Shutdown).unwrap();
@@ -399,6 +412,7 @@ fn bench_kv_paged(b: &mut Bench, rows: &mut Vec<Json>) -> f64 {
         slots: SLOTS,
         block_size: BS,
         initial_blocks: SLOTS,
+        dtype: KvDtype::F32,
     });
     let slot_ids: Vec<u32> = (0..SLOTS as u32).collect();
     let step = HostTensor::f32(
@@ -428,12 +442,9 @@ fn bench_kv_paged(b: &mut Bench, rows: &mut Vec<Json>) -> f64 {
 
     let kv_blocks = arena.stats().blocks_in_use;
 
-    let paged_ns = b
-        .run(&format!("kv/gather paged b{SLOTS} s{SEQ} (len {LEN})"), || {
-            black_box(arena.gather(&slot_ids, 0, SLOTS, SEQ));
-        })
-        .mean_s
-        * 1e9;
+    let paged_ns = ns_of(b.run(&format!("kv/gather paged b{SLOTS} s{SEQ} (len {LEN})"), || {
+        black_box(arena.gather(&slot_ids, 0, SLOTS, SEQ));
+    }));
     let paged_bytes = copied_bytes(|| {
         black_box(arena.gather(&slot_ids, 0, SLOTS, SEQ));
     });
@@ -447,12 +458,9 @@ fn bench_kv_paged(b: &mut Bench, rows: &mut Vec<Json>) -> f64 {
     // same gather with scratch reuse disabled: measures the per-step
     // [bucket, KH_s, seq, hd] allocation cost the reuse removes
     arena.set_scratch_reuse(false);
-    let fresh_ns = b
-        .run(&format!("kv/gather paged b{SLOTS} s{SEQ} (no scratch reuse)"), || {
-            black_box(arena.gather(&slot_ids, 0, SLOTS, SEQ));
-        })
-        .mean_s
-        * 1e9;
+    let fresh_ns = ns_of(b.run(&format!("kv/gather paged b{SLOTS} s{SEQ} (no scratch reuse)"), || {
+        black_box(arena.gather(&slot_ids, 0, SLOTS, SEQ));
+    }));
     rows.push(row(
         &format!("kv/gather paged b{SLOTS} s{SEQ} (no scratch reuse)"),
         fresh_ns,
@@ -461,12 +469,9 @@ fn bench_kv_paged(b: &mut Bench, rows: &mut Vec<Json>) -> f64 {
     ));
     arena.set_scratch_reuse(true);
 
-    let dense_ns = b
-        .run(&format!("kv/gather dense b{SLOTS} s{SEQ} (len {LEN})"), || {
-            black_box(dense_gather(&shards, &slot_ids, KHS, MAX_SEQ, HD, SLOTS, SEQ));
-        })
-        .mean_s
-        * 1e9;
+    let dense_ns = ns_of(b.run(&format!("kv/gather dense b{SLOTS} s{SEQ} (len {LEN})"), || {
+        black_box(dense_gather(&shards, &slot_ids, KHS, MAX_SEQ, HD, SLOTS, SEQ));
+    }));
     let dense_bytes = copied_bytes(|| {
         black_box(dense_gather(&shards, &slot_ids, KHS, MAX_SEQ, HD, SLOTS, SEQ));
     });
@@ -477,9 +482,12 @@ fn bench_kv_paged(b: &mut Bench, rows: &mut Vec<Json>) -> f64 {
         SLOTS * MAX_SEQ / BS, // dense residency in block-equivalents
     ));
 
-    // decode-append + retire lifecycle (allocator + zeroing + writes)
-    let cycle_ns = b
-        .run("kv/append 32 tokens + retire (paged)", || {
+    // decode-append + retire lifecycle (allocator + zeroing + writes),
+    // at every storage dtype (quantized appends pay convert/requant cost
+    // on the write path; the rows keep that honest)
+    for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
+        let name = format!("kv/append 32 tokens + retire (paged, kv={})", dtype.name());
+        let cycle_ns = ns_of(b.run(&name, || {
             let mut a = PagedKvArena::new(ArenaCfg {
                 layers: LAYERS,
                 kv_heads: KHS,
@@ -488,6 +496,7 @@ fn bench_kv_paged(b: &mut Bench, rows: &mut Vec<Json>) -> f64 {
                 slots: 1,
                 block_size: BS,
                 initial_blocks: 2,
+                dtype,
             });
             let one = step.take_batch(1);
             for t in 0..32 {
@@ -495,10 +504,9 @@ fn bench_kv_paged(b: &mut Bench, rows: &mut Vec<Json>) -> f64 {
             }
             a.retire(0);
             black_box(a.stats().blocks_in_use);
-        })
-        .mean_s
-        * 1e9;
-    rows.push(row("kv/append 32 tokens + retire (paged)", cycle_ns, 0, 0));
+        }));
+        rows.push(row(&name, cycle_ns, 0, 0));
+    }
 
     let ratio = dense_bytes as f64 / paged_bytes.max(1) as f64;
     eprintln!(
@@ -528,62 +536,136 @@ fn bench_kernels(b: &mut Bench, rows: &mut Vec<Json>) {
     const SEQ: usize = 256; // seq bucket the engine kernel would run at
     const MAX_SEQ: usize = 512;
 
-    let mut arena = PagedKvArena::new(ArenaCfg {
-        layers: 1,
-        kv_heads: KHS,
-        head_dim: HD,
-        max_seq: MAX_SEQ,
-        slots: SLOTS,
-        block_size: BS,
-        initial_blocks: SLOTS,
-    });
     let slot_ids: Vec<u32> = (0..SLOTS as u32).collect();
     let step = HostTensor::f32(
         vec![SLOTS, KHS, HD],
         (0..SLOTS * KHS * HD).map(|i| ((i % 97) as f32) * 0.02 - 1.0).collect(),
     );
-    for t in 0..LEN {
-        let lens = vec![t as i32; SLOTS];
-        arena.append_step(&slot_ids, 0, &step, &step, &lens);
-    }
-    let kv_blocks = arena.stats().blocks_in_use;
     let q = HostTensor::f32(
         vec![SLOTS, HS, HD],
         (0..SLOTS * HS * HD).map(|i| ((i % 89) as f32) * 0.025 - 1.1).collect(),
     );
     let lens = vec![LEN as i32; SLOTS];
 
-    let name = format!("kernel/decode-step paged-native b{SLOTS} s{SEQ} (len {LEN})");
-    let native_ns = b
-        .run(&name, || {
-            black_box(paged_attn(&arena, &slot_ids, 0, &q, &lens, SEQ, 4));
-        })
-        .mean_s
-        * 1e9;
-    let native_bytes = copied_bytes(|| {
-        black_box(paged_attn(&arena, &slot_ids, 0, &q, &lens, SEQ, 4));
-    });
-    assert_eq!(native_bytes, 0, "native kernel must not copy KV");
-    rows.push(row_step(&name, native_ns, native_bytes, kv_blocks, SLOTS));
+    // one arena per storage dtype, identical append streams: the kv=f16 /
+    // kv=int8 rows must show ≥1.8× / ≥3× fewer KV bytes read per step than
+    // kv=f32, all at ZERO copied bytes (the ISSUE 4 acceptance criterion,
+    // asserted right here so the bench run machine-checks it)
+    let mut read_by_dtype = Vec::new();
+    for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
+        let mut arena = PagedKvArena::new(ArenaCfg {
+            layers: 1,
+            kv_heads: KHS,
+            head_dim: HD,
+            max_seq: MAX_SEQ,
+            slots: SLOTS,
+            block_size: BS,
+            initial_blocks: SLOTS,
+            dtype,
+        });
+        for t in 0..LEN {
+            let step_lens = vec![t as i32; SLOTS];
+            arena.append_step(&slot_ids, 0, &step, &step, &step_lens);
+        }
+        let kv_blocks = arena.stats().blocks_in_use;
 
-    let name = format!("kernel/decode-step gather+ref b{SLOTS} s{SEQ} (len {LEN})");
-    let gather_ns = b
-        .run(&name, || {
-            let (kc, vc) = arena.gather(&slot_ids, 0, SLOTS, SEQ);
-            black_box(reference::decode_attention_ref(&q, &kc, &vc, &lens));
-        })
-        .mean_s
-        * 1e9;
-    let gather_bytes = copied_bytes(|| {
-        let (kc, vc) = arena.gather(&slot_ids, 0, SLOTS, SEQ);
-        black_box(reference::decode_attention_ref(&q, &kc, &vc, &lens));
-    });
-    assert!(gather_bytes > 0, "gather path must charge its staging copy");
-    rows.push(row_step(&name, gather_ns, gather_bytes, kv_blocks, SLOTS));
+        let name =
+            format!("kernel/decode-step paged-native kv={} b{SLOTS} s{SEQ} (len {LEN})", dtype.name());
+        let native_ns = ns_of(b.run(&name, || {
+            black_box(paged_attn(&arena, &slot_ids, 0, &q, &lens, SEQ, Par::Threads(4)));
+        }));
+        let native_bytes = copied_bytes(|| {
+            black_box(paged_attn(&arena, &slot_ids, 0, &q, &lens, SEQ, Par::Threads(4)));
+        });
+        let native_reads = kv_read_bytes(|| {
+            black_box(paged_attn(&arena, &slot_ids, 0, &q, &lens, SEQ, Par::Threads(4)));
+        });
+        assert_eq!(native_bytes, 0, "native kernel must not copy KV (kv={})", dtype.name());
+        assert!(native_reads > 0, "native kernel must charge its KV reads");
+        rows.push(row_step(&name, native_ns, native_bytes, native_reads, kv_blocks, SLOTS));
+        read_by_dtype.push((dtype, native_reads, native_ns.0));
 
+        if dtype == KvDtype::F32 {
+            // the engine-shaped comparator only needs the f32 arena
+            let name = format!("kernel/decode-step gather+ref b{SLOTS} s{SEQ} (len {LEN})");
+            let gather_ns = ns_of(b.run(&name, || {
+                let (kc, vc) = arena.gather(&slot_ids, 0, SLOTS, SEQ);
+                black_box(reference::decode_attention_ref(&q, &kc, &vc, &lens));
+            }));
+            let gather_bytes = copied_bytes(|| {
+                let (kc, vc) = arena.gather(&slot_ids, 0, SLOTS, SEQ);
+                black_box(reference::decode_attention_ref(&q, &kc, &vc, &lens));
+            });
+            assert!(gather_bytes > 0, "gather path must charge its staging copy");
+            rows.push(row_step(&name, gather_ns, gather_bytes, 0, kv_blocks, SLOTS));
+
+            // satellite: single-thread decode step, unrolled mul_add inner
+            // loops (the delta row vs the naive baseline below)
+            let name = format!("kernel/decode-step paged-native t1 b{SLOTS} s{SEQ} (len {LEN})");
+            let t1_ns = ns_of(b.run(&name, || {
+                black_box(paged_attn(&arena, &slot_ids, 0, &q, &lens, SEQ, Par::Threads(1)));
+            }));
+            rows.push(row_step(&name, t1_ns, 0, native_reads, kv_blocks, SLOTS));
+        }
+    }
+    let f32_reads = read_by_dtype[0].1 as f64;
+    for &(dtype, reads, ns) in &read_by_dtype[1..] {
+        let cut = f32_reads / reads.max(1) as f64;
+        let need = match dtype {
+            KvDtype::F16 => 1.8,
+            _ => 3.0,
+        };
+        assert!(
+            cut >= need,
+            "kv={} must cut per-step KV bytes read ≥{need}× vs f32 (got {cut:.2}×)",
+            dtype.name()
+        );
+        eprintln!(
+            "kernel/decode-step kv={}: {reads} B read/step ({cut:.2}× fewer than f32), {ns:.0} ns",
+            dtype.name()
+        );
+    }
+
+    // satellite: the scalar inner loops themselves — 4-lane mul_add unroll
+    // vs the naive sequential loop it replaced, single-threaded, on a
+    // decode-shaped workload (seq × hd dots + axpys)
+    let seq_w = 2048usize;
+    let kbuf: Vec<f32> = (0..seq_w * HD).map(|i| ((i % 101) as f32) * 0.019 - 0.95).collect();
+    let vbuf: Vec<f32> = (0..seq_w * HD).map(|i| ((i % 103) as f32) * 0.018 - 0.9).collect();
+    let qv: Vec<f32> = (0..HD).map(|i| (i as f32) * 0.013 - 0.4).collect();
+    let mut acc = vec![0.0f32; HD];
+
+    let unrolled = ns_of(b.run("kernel/inner-loop dot+axpy 4-lane mul_add t1", || {
+        acc.fill(0.0);
+        for t in 0..seq_w {
+            let s = dot(&qv, &kbuf[t * HD..][..HD]);
+            axpy(&mut acc, s * 1e-4, &vbuf[t * HD..][..HD]);
+        }
+        black_box(acc[0]);
+    }));
+    rows.push(row("kernel/inner-loop dot+axpy 4-lane mul_add t1", unrolled, 0, 0));
+
+    let naive = ns_of(b.run("kernel/inner-loop dot+axpy naive t1", || {
+        acc.fill(0.0);
+        for t in 0..seq_w {
+            let kr = &kbuf[t * HD..][..HD];
+            let mut s = 0.0f32;
+            for (x, y) in qv.iter().zip(kr) {
+                s += x * y;
+            }
+            let e = s * 1e-4;
+            for (a, y) in acc.iter_mut().zip(&vbuf[t * HD..][..HD]) {
+                *a += e * y;
+            }
+        }
+        black_box(acc[0]);
+    }));
+    rows.push(row("kernel/inner-loop dot+axpy naive t1", naive, 0, 0));
     eprintln!(
-        "kernel/decode-step copied KV bytes: native 0 vs gather {gather_bytes} \
-         (copy eliminated; native {native_ns:.0} ns vs gather+ref {gather_ns:.0} ns)"
+        "kernel/inner-loop: unrolled mul_add {:.0} ns vs naive {:.0} ns ({:.2}× single-thread)",
+        unrolled.0,
+        naive.0,
+        naive.0 / unrolled.0.max(1.0)
     );
 }
 
@@ -596,27 +678,21 @@ fn bench_host_staging(b: &mut Bench, rows: &mut Vec<Json>) {
     );
 
     // the seed's take_batch deep-copied; it is now an Arc view
-    let view_ns = b
-        .run("host/take_batch b8→b4 (arc view)", || {
-            black_box(t.take_batch(4));
-        })
-        .mean_s
-        * 1e9;
+    let view_ns = ns_of(b.run("host/take_batch b8→b4 (arc view)", || {
+        black_box(t.take_batch(4));
+    }));
     let view_bytes = copied_bytes(|| {
         black_box(t.take_batch(4));
     });
     rows.push(row("host/take_batch b8→b4 (arc view)", view_ns, view_bytes, 0));
 
     // legacy behavior, preserved here as the comparator
-    let legacy_ns = b
-        .run("host/take_batch b8→b4 (legacy deep copy)", || {
-            let row_elems = 4 * 64;
-            let d = t.as_f32()[..4 * row_elems].to_vec();
-            copies::add(d.len() * 4);
-            black_box(HostTensor::f32(vec![4, 4, 64], d));
-        })
-        .mean_s
-        * 1e9;
+    let legacy_ns = ns_of(b.run("host/take_batch b8→b4 (legacy deep copy)", || {
+        let row_elems = 4 * 64;
+        let d = t.as_f32()[..4 * row_elems].to_vec();
+        copies::add(d.len() * 4);
+        black_box(HostTensor::f32(vec![4, 4, 64], d));
+    }));
     let legacy_bytes = copied_bytes(|| {
         let row_elems = 4 * 64;
         let d = t.as_f32()[..4 * row_elems].to_vec();
@@ -691,12 +767,9 @@ fn bench_pipeline(b: &mut Bench, rows: &mut Vec<Json>) {
         let prompts: Vec<Vec<i32>> = (0..4).map(|i| vec![1 + i, 2, 3]).collect();
         pipe.decode(&prompts, 2).unwrap();
         let name = format!("e2e/decode-step b4 ({label})");
-        let ns = b
-            .run(&name, || {
-                black_box(pipe.decode(&prompts, 1).unwrap());
-            })
-            .mean_s
-            * 1e9;
+        let ns = ns_of(b.run(&name, || {
+            black_box(pipe.decode(&prompts, 1).unwrap());
+        }));
         // host bytes copied + KV blocks resident for one full decode pass
         let copy_bytes = copied_bytes(|| {
             black_box(pipe.decode(&prompts, 1).unwrap());
@@ -710,13 +783,18 @@ fn bench_pipeline(b: &mut Bench, rows: &mut Vec<Json>) {
     // the native backend the whole decode step performs no host KV copies;
     // the engine backend pays the per-layer gather. tokens/s + copied
     // bytes land in BENCH_decode.json as the tentpole's acceptance rows.
-    for (label, backend) in [
-        ("engine backend", AttnBackendKind::Engine),
-        ("native backend", AttnBackendKind::Native),
+    // The native backend additionally sweeps the KV storage dtype — same
+    // protocol, 2×/≈4× fewer KV bytes read per step on the worker.
+    for (label, backend, kv_dtype) in [
+        ("engine backend", AttnBackendKind::Engine, KvDtype::F32),
+        ("native backend", AttnBackendKind::Native, KvDtype::F32),
+        ("native backend kv=f16", AttnBackendKind::Native, KvDtype::F16),
+        ("native backend kv=int8", AttnBackendKind::Native, KvDtype::Int8),
     ] {
         let pipe = DisaggPipeline::start(PipelineOpts {
             attn_workers: 1,
             attn_backend: backend,
+            kv_dtype,
             ..PipelineOpts::new(artifacts_dir())
         })
         .expect("pipeline");
@@ -724,17 +802,17 @@ fn bench_pipeline(b: &mut Bench, rows: &mut Vec<Json>) {
         let prompts: Vec<Vec<i32>> = (0..4).map(|i| vec![1 + i, 2, 3]).collect();
         pipe.decode(&prompts, 2).unwrap();
         let name = format!("e2e/decode-step b4 w1 ({label})");
-        let ns = b
-            .run(&name, || {
-                black_box(pipe.decode(&prompts, 1).unwrap());
-            })
-            .mean_s
-            * 1e9;
+        let ns = ns_of(b.run(&name, || {
+            black_box(pipe.decode(&prompts, 1).unwrap());
+        }));
         let copy_bytes = copied_bytes(|| {
             black_box(pipe.decode(&prompts, 1).unwrap());
         });
+        let read_bytes = kv_read_bytes(|| {
+            black_box(pipe.decode(&prompts, 1).unwrap());
+        });
         let kv = pipe.kv_stats().expect("kv stats");
-        rows.push(row_step(&name, ns, copy_bytes, kv.blocks_in_use, 4));
+        rows.push(row_step(&name, ns, copy_bytes, read_bytes, kv.blocks_in_use, 4));
         if backend == AttnBackendKind::Native {
             assert_eq!(
                 copy_bytes, 0,

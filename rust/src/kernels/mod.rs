@@ -19,19 +19,38 @@
 //!   buffers in place ([`PagedKvArena::block_slices`] borrows, never
 //!   copies). No gather, no scratch K/V, zero per-step host copies — the
 //!   decode hot loop becomes genuinely bandwidth-shaped, like the paper's
-//!   memory-optimised attention devices.
+//!   memory-optimised attention devices. Batch fan-out runs on a
+//!   **persistent per-worker thread pool** (`util::threadpool::ScopedPool`,
+//!   owned by the backend) — no per-call thread spawns on the hot loop.
 //!
-//! # The block-table data path
+//! # The block-table data path — and where dequantization happens
 //!
 //! A request slot's cache is a chain of fixed-size blocks
-//! (`block_size × hd` floats per KV head, contiguous per `(block, head)`),
-//! mapped by its `BlockTable`. The native kernel walks that chain in
-//! logical-token order: for batch row `b` with slot `s`, head `h`, group
-//! query `g`, it visits block `i` of `table(s)` covering token positions
-//! `[i·bs, i·bs + bs)`, stopping at the row's valid length. Each visit
-//! reads the block's K region once to score, then its V region once to
-//! accumulate — exactly one pass over the live KV bytes, which is the
-//! bandwidth lower bound.
+//! (`block_size × hd` lanes per KV head, contiguous per `(block, head)`,
+//! stored in the arena's [`crate::kvcache::KvDtype`]: f32, f16, or int8
+//! with a per-region scale), mapped by its `BlockTable`. The native kernel
+//! walks that chain in logical-token order: for batch row `b` with slot
+//! `s`, head `h`, group query `g`, it visits block `i` of `table(s)`
+//! covering token positions `[i·bs, i·bs + bs)`, stopping at the row's
+//! valid length. Each visit reads the block's K region once to score, then
+//! its V region once to accumulate — exactly one pass over the live KV
+//! bytes, which is the bandwidth lower bound — and with quantized storage
+//! those are the *compact* bytes: dequantization happens **in-register
+//! inside the dot/axpy loops** (an f16 lane is bit-widened as consumed; an
+//! int8 K scale multiplies the score once per token, an int8 V scale folds
+//! into the accumulation weight), never through a staging buffer. Per-step
+//! KV bytes read drop 2× (f16) / ≈4× (int8) and are charged to
+//! `runtime::host::kv_reads` so `BENCH_decode.json` machine-checks the
+//! reduction.
+//!
+//! Quantization stays behind this boundary on purpose: the **wire is
+//! always f32**. K/V tensors arrive f32, the arena quantizes on append,
+//! and attention outputs leave f32 — so the leader, codec, transports and
+//! engine backend are dtype-oblivious, two workers may run different
+//! `--kv-dtype` settings, and the overlap path's `attn_combine` (which
+//! folds the *wire* K/V of the new token) is exact regardless of storage.
+//! The engine backend never sees compact lanes either: `gather` widens to
+//! f32 while staging.
 //!
 //! # The online-softmax recurrence
 //!
@@ -51,14 +70,19 @@
 //! so the paper's §4.2.2 overlap can fold the freshly projected token in
 //! later (`attn_combine`), and chunked prefill continues the same recurrence
 //! from the cached prefix into the chunk's causal tail. Because the
-//! recurrence re-associates the softmax sums, native outputs match the
+//! recurrence re-associates the softmax sums — and the unrolled
+//! `mul_add` inner loops re-associate the dots — native outputs match the
 //! two-pass reference within ~1e-5 absolute rather than bit-for-bit
-//! (`tests/kernel_native.rs` documents and asserts the bound).
+//! (`tests/kernel_native.rs` documents and asserts the bound, plus the
+//! derived f16/int8 storage-error bounds). Golden-token tests pin the
+//! `engine` backend precisely so kernel-level reassociation stays
+//! tolerance-tested, never bit-pinned.
 //!
-//! The native kernel parallelises across the batch with
-//! [`crate::util::threadpool::scoped_map`] (rows are independent); outputs
-//! are bit-identical for any thread count, since each row's arithmetic is
-//! sequential and self-contained.
+//! The native kernel parallelises across the batch via
+//! [`crate::util::threadpool::Par`] (rows are independent) — the backend
+//! uses its persistent pool; tests/benches sweep per-call thread counts.
+//! Outputs are bit-identical for any parallelism, since each row's
+//! arithmetic is sequential and self-contained.
 
 pub mod engine_backend;
 pub mod paged_attn;
@@ -70,8 +94,10 @@ use crate::runtime::manifest::ModelCfg;
 
 pub use engine_backend::EngineBackend;
 pub use paged_attn::{
-    combine_new_token, paged_attn, paged_attn_prev, paged_prefill, NativeBackend, NEG_INF,
+    axpy, combine_new_token, dot, paged_attn, paged_attn_prev, paged_prefill, NativeBackend,
+    NEG_INF,
 };
+pub use crate::util::threadpool::Par;
 
 /// Backend selector (the `--attn-backend` CLI flag).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]

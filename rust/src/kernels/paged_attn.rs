@@ -1,21 +1,43 @@
 //! Block-table-native decode attention: pure-Rust online-softmax kernels
-//! that read the [`PagedKvArena`] **in place**.
+//! that read the [`PagedKvArena`] **in place** — in whatever dtype the
+//! arena stores its blocks.
 //!
-//! Where the engine path stages `[bucket, KH_s, seq_bucket, hd]` K/V copies
-//! per layer per step (the last host copy on the decode path before this
-//! module existed), these kernels take the per-slot block lists as an input
-//! and walk the arena's per-layer block buffers directly — each live KV
-//! byte is read exactly once and copied never. See the module docs of
-//! [`crate::kernels`] for the data path and the recurrence.
+//! Where the engine path stages `[bucket, KH_s, seq_bucket, hd]` f32 K/V
+//! copies per layer per step (widening quantized storage on gather), these
+//! kernels take the per-slot block lists as input and walk the arena's
+//! per-layer block buffers directly: each live KV byte is read exactly
+//! once, copied never, and — with `--kv-dtype f16|int8` — **dequantized
+//! in-register** inside the dot/axpy inner loops ([`KvBlockRef`] lanes: an
+//! f16 lane is bit-converted as it is consumed; an int8 K region folds its
+//! per-(block, head) scale into the softmax scale, and a V region folds it
+//! into the accumulation weight), with no intermediate f32 staging buffer.
+//! Per-step KV bytes *read* therefore drop 2×/≈4× with the storage dtype;
+//! the per-row working set is charged to [`kv_reads`] so benches can prove
+//! it. See the module docs of [`crate::kernels`] for the data path and the
+//! recurrence.
 //!
-//! All kernels are deterministic for any thread count: batch rows are
-//! independent and each row's arithmetic is sequential, so
-//! `threads = 1` and `threads = N` produce bit-identical outputs.
+//! The scalar inner loops are unrolled into four accumulator lanes
+//! (autovectorizer-friendly), fused via `f32::mul_add` **only where the
+//! target actually has FMA** (x86-64 with `+fma`, aarch64) — on a
+//! baseline x86-64 target `mul_add` lowers to an `fmaf` libcall per lane,
+//! which would be slower than the naive loop, so those targets take a
+//! plain multiply-then-add unroll instead (see the `fma` helper). Either
+//! way the unroll reassociates sums relative to a naive loop — which
+//! is fine, because kernel agreement is tolerance-tested against the
+//! two-pass reference (`tests/kernel_native.rs`), never bit-pinned: the
+//! golden-token tests pin the `engine` backend's semantics precisely so
+//! kernel-level reassociation stays a tolerance question.
+//!
+//! All kernels are deterministic for any parallelism ([`Par`]): batch rows
+//! are independent and each row's arithmetic is sequential, so one thread,
+//! N scoped threads, and the persistent [`ScopedPool`] produce
+//! bit-identical outputs.
 
-use crate::kvcache::arena::PAD_SLOT;
+use crate::kvcache::arena::{KvBlockRef, PAD_SLOT};
+use crate::kvcache::quant::f16_bits_to_f32;
 use crate::kvcache::PagedKvArena;
-use crate::runtime::host::HostTensor;
-use crate::util::threadpool::scoped_map;
+use crate::runtime::host::{kv_reads, HostTensor};
+use crate::util::threadpool::{Par, ScopedPool};
 
 use super::{AttnBackend, AttnBackendKind, PartialState};
 
@@ -23,13 +45,148 @@ use super::{AttnBackend, AttnBackendKind, PartialState};
 /// (mirrors the Pallas kernels' `NEG_INF`).
 pub const NEG_INF: f32 = -1e30;
 
-#[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
-    let mut s = 0.0f32;
-    for (x, y) in a.iter().zip(b) {
-        s += x * y;
+/// `a*b + acc`, fused where fusing is free: `f32::mul_add` needs hardware
+/// FMA to be one instruction — without it LLVM must preserve the
+/// single-rounding semantics through an `fmaf` libcall per element, which
+/// would dominate the inner loops on baseline x86-64. Targets without FMA
+/// get the plain two-op form (double rounding; covered by the kernels'
+/// tolerance contract). The choice is compile-time per build, so outputs
+/// stay bit-identical across thread counts and executors.
+#[inline(always)]
+fn fma(a: f32, b: f32, acc: f32) -> f32 {
+    #[cfg(any(target_feature = "fma", target_arch = "aarch64"))]
+    {
+        a.mul_add(b, acc)
     }
-    s
+    #[cfg(not(any(target_feature = "fma", target_arch = "aarch64")))]
+    {
+        a * b + acc
+    }
+}
+
+/// Dot product with four accumulator lanes (fused via `fma` where the
+/// target has FMA) — the kernel's K inner
+/// loop (`pub` so the bench suite can pit it against a naive sequential
+/// loop; see `kernel/inner-loop` rows in `BENCH_decode.json`).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        s0 = fma(x[0], y[0], s0);
+        s1 = fma(x[1], y[1], s1);
+        s2 = fma(x[2], y[2], s2);
+        s3 = fma(x[3], y[3], s3);
+    }
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s0 = fma(*x, *y, s0);
+    }
+    (s0 + s1) + (s2 + s3)
+}
+
+/// `acc += e · v`, four lanes — the kernel's V inner loop (`pub`
+/// for the same bench comparison as [`dot`]).
+#[inline]
+pub fn axpy(acc: &mut [f32], e: f32, v: &[f32]) {
+    let mut cv = v.chunks_exact(4);
+    let mut i = 0;
+    for y in &mut cv {
+        acc[i] = fma(e, y[0], acc[i]);
+        acc[i + 1] = fma(e, y[1], acc[i + 1]);
+        acc[i + 2] = fma(e, y[2], acc[i + 2]);
+        acc[i + 3] = fma(e, y[3], acc[i + 3]);
+        i += 4;
+    }
+    for y in cv.remainder() {
+        acc[i] = fma(e, *y, acc[i]);
+        i += 1;
+    }
+}
+
+/// [`dot`] against bit-cast f16 lanes: each lane is widened in-register as
+/// it is consumed — no staging buffer.
+#[inline]
+fn dot_f16(a: &[f32], b: &[u16]) -> f32 {
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        s0 = fma(x[0], f16_bits_to_f32(y[0]), s0);
+        s1 = fma(x[1], f16_bits_to_f32(y[1]), s1);
+        s2 = fma(x[2], f16_bits_to_f32(y[2]), s2);
+        s3 = fma(x[3], f16_bits_to_f32(y[3]), s3);
+    }
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s0 = fma(*x, f16_bits_to_f32(*y), s0);
+    }
+    (s0 + s1) + (s2 + s3)
+}
+
+/// `acc += e · widen(v)` over f16 lanes, same 4-lane unroll as [`axpy`].
+#[inline]
+fn axpy_f16(acc: &mut [f32], e: f32, v: &[u16]) {
+    let mut cv = v.chunks_exact(4);
+    let mut i = 0;
+    for y in &mut cv {
+        acc[i] = fma(e, f16_bits_to_f32(y[0]), acc[i]);
+        acc[i + 1] = fma(e, f16_bits_to_f32(y[1]), acc[i + 1]);
+        acc[i + 2] = fma(e, f16_bits_to_f32(y[2]), acc[i + 2]);
+        acc[i + 3] = fma(e, f16_bits_to_f32(y[3]), acc[i + 3]);
+        i += 4;
+    }
+    for y in cv.remainder() {
+        acc[i] = fma(e, f16_bits_to_f32(*y), acc[i]);
+        i += 1;
+    }
+}
+
+/// [`dot`] against int8 codes: accumulates `q · code` and lets the caller
+/// multiply the region scale in once at the end (fewer multiplies than
+/// dequantizing every lane).
+#[inline]
+fn dot_i8(a: &[f32], b: &[i8]) -> f32 {
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        s0 = fma(x[0], y[0] as f32, s0);
+        s1 = fma(x[1], y[1] as f32, s1);
+        s2 = fma(x[2], y[2] as f32, s2);
+        s3 = fma(x[3], y[3] as f32, s3);
+    }
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s0 = fma(*x, *y as f32, s0);
+    }
+    (s0 + s1) + (s2 + s3)
+}
+
+/// `acc += (e·scale) · code` over int8 lanes — the V scale is folded into
+/// the accumulation weight, so the loop body is one fused op per lane;
+/// same 4-lane unroll as [`axpy`].
+#[inline]
+fn axpy_i8(acc: &mut [f32], e_scaled: f32, v: &[i8]) {
+    let mut cv = v.chunks_exact(4);
+    let mut i = 0;
+    for y in &mut cv {
+        acc[i] = fma(e_scaled, y[0] as f32, acc[i]);
+        acc[i + 1] = fma(e_scaled, y[1] as f32, acc[i + 1]);
+        acc[i + 2] = fma(e_scaled, y[2] as f32, acc[i + 2]);
+        acc[i + 3] = fma(e_scaled, y[3] as f32, acc[i + 3]);
+        i += 4;
+    }
+    for y in cv.remainder() {
+        acc[i] = fma(e_scaled, *y as f32, acc[i]);
+        i += 1;
+    }
+}
+
+/// One block's V lanes in storage dtype (int8 carries the region scale).
+#[derive(Clone, Copy)]
+enum VLanes<'a> {
+    F32(&'a [f32]),
+    F16(&'a [u16]),
+    I8(&'a [i8], f32),
 }
 
 /// Online-softmax state for one query vector.
@@ -46,8 +203,8 @@ impl<'a> Online<'a> {
     }
 
     /// Fold one block of `cnt` scored tokens in: `scores[t]` with value rows
-    /// `vb[t*hd..][..hd]`.
-    fn fold_block(&mut self, scores: &[f32], vb: &[f32], cnt: usize, hd: usize) {
+    /// `t·hd..` of `vb`, dequantized in-register per lane.
+    fn fold_block(&mut self, scores: &[f32], vb: VLanes<'_>, cnt: usize, hd: usize) {
         let mut bm = NEG_INF;
         for &s in &scores[..cnt] {
             if s > bm {
@@ -60,12 +217,27 @@ impl<'a> Online<'a> {
         for a in self.acc.iter_mut() {
             *a *= corr;
         }
-        for t in 0..cnt {
-            let e = (scores[t] - m_new).exp();
-            self.ssum += e;
-            let vt = &vb[t * hd..][..hd];
-            for (a, &v) in self.acc.iter_mut().zip(vt) {
-                *a += e * v;
+        match vb {
+            VLanes::F32(vb) => {
+                for t in 0..cnt {
+                    let e = (scores[t] - m_new).exp();
+                    self.ssum += e;
+                    axpy(self.acc, e, &vb[t * hd..][..hd]);
+                }
+            }
+            VLanes::F16(vb) => {
+                for t in 0..cnt {
+                    let e = (scores[t] - m_new).exp();
+                    self.ssum += e;
+                    axpy_f16(self.acc, e, &vb[t * hd..][..hd]);
+                }
+            }
+            VLanes::I8(vb, scale) => {
+                for t in 0..cnt {
+                    let e = (scores[t] - m_new).exp();
+                    self.ssum += e;
+                    axpy_i8(self.acc, e * scale, &vb[t * hd..][..hd]);
+                }
             }
         }
         self.m = m_new;
@@ -97,7 +269,8 @@ impl<'a> Online<'a> {
 
 /// Run the online recurrence over one slot's cached prefix `[0, n)` for one
 /// (head, group-query): walks the block table in logical-token order,
-/// borrowing each block's K/V region from the arena (no copies).
+/// borrowing each block's K/V region from the arena in the storage dtype
+/// (no copies; f16/int8 lanes are widened in-register).
 #[allow(clippy::too_many_arguments)]
 fn fold_cached(
     st: &mut Online,
@@ -119,11 +292,29 @@ fn fold_cached(
             break;
         }
         let cnt = bs.min(n - tok0);
-        let (kb, vb) = arena.block_slices(layer, blk, head);
-        for t in 0..cnt {
-            scores[t] = dot(qv, &kb[t * hd..][..hd]) * scale;
+        match arena.block_slices(layer, blk, head) {
+            KvBlockRef::F32 { k: kb, v: vb } => {
+                for t in 0..cnt {
+                    scores[t] = dot(qv, &kb[t * hd..][..hd]) * scale;
+                }
+                st.fold_block(scores, VLanes::F32(vb), cnt, hd);
+            }
+            KvBlockRef::F16 { k: kb, v: vb } => {
+                for t in 0..cnt {
+                    scores[t] = dot_f16(qv, &kb[t * hd..][..hd]) * scale;
+                }
+                st.fold_block(scores, VLanes::F16(vb), cnt, hd);
+            }
+            KvBlockRef::Int8 { k: kb, v: vb, k_scale, v_scale } => {
+                // fold the K region scale into the softmax scale: one
+                // multiply per score instead of one per lane
+                let ks = scale * k_scale;
+                for t in 0..cnt {
+                    scores[t] = dot_i8(qv, &kb[t * hd..][..hd]) * ks;
+                }
+                st.fold_block(scores, VLanes::I8(vb, v_scale), cnt, hd);
+            }
         }
-        st.fold_block(scores, vb, cnt, hd);
     }
 }
 
@@ -151,7 +342,7 @@ pub fn paged_attn(
     q: &HostTensor,
     lens: &[i32],
     seq_bucket: usize,
-    threads: usize,
+    par: Par<'_>,
 ) -> HostTensor {
     let shape = q.shape();
     assert_eq!(shape.len(), 3, "q must be [bucket, H_s, hd]");
@@ -167,12 +358,13 @@ pub fn paged_attn(
     let bs = arena.block_size();
 
     let rows: Vec<usize> = (0..bucket).collect();
-    let out_rows = scoped_map(threads, &rows, |&b| {
+    let out_rows = par.map(&rows, |&b| {
         let mut out = vec![0.0f32; hs * hd];
         let n = row_n(arena, slots[b], lens[b], seq_bucket);
         if n == 0 {
             return out;
         }
+        kv_reads::add(arena.kv_read_bytes(n));
         let qrow = &qd[b * hs * hd..][..hs * hd];
         let mut scores = vec![0.0f32; bs];
         for h in 0..khs {
@@ -206,7 +398,7 @@ pub fn paged_attn_prev(
     q: &HostTensor,
     lens: &[i32],
     seq_bucket: usize,
-    threads: usize,
+    par: Par<'_>,
 ) -> PartialState {
     let shape = q.shape();
     assert_eq!(shape.len(), 3, "q must be [bucket, H_s, hd]");
@@ -222,7 +414,7 @@ pub fn paged_attn_prev(
     let bs = arena.block_size();
 
     let rows: Vec<usize> = (0..bucket).collect();
-    let out_rows = scoped_map(threads, &rows, |&b| {
+    let out_rows = par.map(&rows, |&b| {
         let mut a = vec![0.0f32; hs * hd];
         let mut s = vec![0.0f32; hs];
         let mut m = vec![NEG_INF; hs];
@@ -230,6 +422,7 @@ pub fn paged_attn_prev(
         if n == 0 {
             return (a, s, m);
         }
+        kv_reads::add(arena.kv_read_bytes(n));
         let qrow = &qd[b * hs * hd..][..hs * hd];
         let mut scores = vec![0.0f32; bs];
         for h in 0..khs {
@@ -263,8 +456,9 @@ pub fn paged_attn_prev(
 
 /// Fold the newly generated token into a partial attention state and
 /// normalise — the native replacement for the `attn_combine` artifact.
-/// `q` `[bucket, H_s, hd]`, `k_new`/`v_new` `[bucket, KH_s, hd]`. O(B·H·hd)
-/// and serial (not worth fanning out).
+/// `q` `[bucket, H_s, hd]`, `k_new`/`v_new` `[bucket, KH_s, hd]` (wire
+/// tensors, always f32 — the new token never touches quantized storage
+/// before this). O(B·H·hd) and serial (not worth fanning out).
 pub fn combine_new_token(
     q: &HostTensor,
     k_new: &HostTensor,
@@ -321,7 +515,7 @@ pub fn paged_prefill(
     v_new: &HostTensor,
     cached: usize,
     seq_bucket: usize,
-    threads: usize,
+    par: Par<'_>,
 ) -> HostTensor {
     let shape = q.shape();
     assert_eq!(shape.len(), 3, "q must be [T, H_s, hd]");
@@ -336,8 +530,9 @@ pub fn paged_prefill(
     let bs = arena.block_size();
 
     let rows: Vec<usize> = (0..t_rows).collect();
-    let out_rows = scoped_map(threads, &rows, |&i| {
+    let out_rows = par.map(&rows, |&i| {
         let mut out = vec![0.0f32; hs * hd];
+        kv_reads::add(arena.kv_read_bytes(n));
         let qrow = &qd[i * hs * hd..][..hs * hd];
         let mut scores = vec![0.0f32; bs];
         for h in 0..khs {
@@ -348,7 +543,7 @@ pub fn paged_prefill(
                 let mut st = Online::new(acc);
                 // cached prefix, in place from the block table
                 fold_cached(&mut st, arena, slot, layer, h, qv, n, scale, &mut scores);
-                // intra-chunk causal tail: chunk tokens 0..=i
+                // intra-chunk causal tail: chunk tokens 0..=i (wire f32)
                 for j in 0..=i {
                     let kt = &kd[(j * khs + h) * hd..][..hd];
                     let vt = &vd[(j * khs + h) * hd..][..hd];
@@ -447,23 +642,30 @@ fn check_kv(
 
 /// The block-table-native [`AttnBackend`]: runs the kernels above directly
 /// over the arena. Needs no artifacts, performs zero per-step host copies
-/// (nothing in this backend ever calls `copies::add`), and parallelises
-/// across the batch with `util::threadpool::scoped_map`.
+/// (nothing in this backend ever calls `copies::add`), consumes quantized
+/// block storage natively, and parallelises across the batch on an owned
+/// **persistent** [`ScopedPool`] — worker threads are spawned once at
+/// backend construction and reused every layer step (no per-call spawns on
+/// the decode hot loop).
 #[derive(Debug, Clone)]
 pub struct NativeBackend {
-    threads: usize,
+    pool: std::sync::Arc<ScopedPool>,
 }
 
 impl NativeBackend {
     /// Thread count: available parallelism, capped (attention rows are
-    /// short; beyond a handful of threads the spawn cost dominates).
+    /// short; beyond a handful of threads coordination costs dominate).
     pub fn new() -> NativeBackend {
         let t = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         NativeBackend::with_threads(t.min(8))
     }
 
     pub fn with_threads(threads: usize) -> NativeBackend {
-        NativeBackend { threads: threads.max(1) }
+        NativeBackend { pool: std::sync::Arc::new(ScopedPool::new(threads.max(1))) }
+    }
+
+    fn par(&self) -> Par<'_> {
+        Par::Pool(self.pool.as_ref())
     }
 }
 
@@ -488,7 +690,7 @@ impl AttnBackend for NativeBackend {
         seq_bucket: usize,
     ) -> Result<HostTensor, String> {
         check_shapes(arena, q, layer, slots, Some(lens))?;
-        Ok(paged_attn(arena, slots, layer, q, lens, seq_bucket, self.threads))
+        Ok(paged_attn(arena, slots, layer, q, lens, seq_bucket, self.par()))
     }
 
     fn attn_prev(
@@ -501,7 +703,7 @@ impl AttnBackend for NativeBackend {
         seq_bucket: usize,
     ) -> Result<PartialState, String> {
         check_shapes(arena, q, layer, slots, Some(lens))?;
-        Ok(paged_attn_prev(arena, slots, layer, q, lens, seq_bucket, self.threads))
+        Ok(paged_attn_prev(arena, slots, layer, q, lens, seq_bucket, self.par()))
     }
 
     fn attn_combine(
@@ -549,7 +751,7 @@ impl AttnBackend for NativeBackend {
             v,
             cached.max(0) as usize,
             seq_bucket,
-            self.threads,
+            self.par(),
         ))
     }
 }
@@ -557,9 +759,13 @@ impl AttnBackend for NativeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::ArenaCfg;
+    use crate::kvcache::{ArenaCfg, KvDtype};
 
     fn arena_with(tokens: usize) -> (PagedKvArena, Vec<f32>) {
+        arena_with_dtype(tokens, KvDtype::F32)
+    }
+
+    fn arena_with_dtype(tokens: usize, dtype: KvDtype) -> (PagedKvArena, Vec<f32>) {
         let mut arena = PagedKvArena::new(ArenaCfg {
             layers: 1,
             kv_heads: 2,
@@ -568,6 +774,7 @@ mod tests {
             slots: 2,
             block_size: 4,
             initial_blocks: 2,
+            dtype,
         });
         let mut all = Vec::new();
         for t in 0..tokens {
@@ -584,7 +791,7 @@ mod tests {
         // one cached token → softmax weight 1 → output == v of that token
         let (arena, kv) = arena_with(1);
         let q = HostTensor::f32(vec![1, 4, 4], (0..16).map(|i| i as f32 * 0.1).collect());
-        let out = paged_attn(&arena, &[0], 0, &q, &[1], 8, 1);
+        let out = paged_attn(&arena, &[0], 0, &q, &[1], 8, Par::Threads(1));
         assert_eq!(out.shape(), &[1, 4, 4]);
         let od = out.as_f32();
         // H_s = 4, khs = 2 → G = 2: query heads 0,1 share kv head 0
@@ -598,7 +805,7 @@ mod tests {
     fn pad_rows_are_zero() {
         let (arena, _) = arena_with(5);
         let q = HostTensor::f32(vec![2, 4, 4], vec![1.0; 32]);
-        let out = paged_attn(&arena, &[PAD_SLOT, 0], 0, &q, &[1, 5], 8, 2);
+        let out = paged_attn(&arena, &[PAD_SLOT, 0], 0, &q, &[1, 5], 8, Par::Threads(2));
         assert!(out.as_f32()[..16].iter().all(|&x| x == 0.0));
         assert!(out.as_f32()[16..].iter().any(|&x| x != 0.0));
     }
@@ -607,12 +814,12 @@ mod tests {
     fn prev_plus_combine_matches_full() {
         let (mut arena, _) = arena_with(6);
         let q = HostTensor::f32(vec![1, 4, 4], (0..16).map(|i| (i as f32 - 8.0) * 0.07).collect());
-        let prev = paged_attn_prev(&arena, &[0], 0, &q, &[6], 16, 1);
+        let prev = paged_attn_prev(&arena, &[0], 0, &q, &[6], 16, Par::Threads(1));
         // append the "new" token, then full attention over 7
         let kv: Vec<f32> = (0..8).map(|i| 0.3 - i as f32 * 0.11).collect();
         let kt = HostTensor::f32(vec![1, 2, 4], kv.clone());
         arena.append_step(&[0], 0, &kt, &kt, &[6]);
-        let full = paged_attn(&arena, &[0], 0, &q, &[7], 16, 1);
+        let full = paged_attn(&arena, &[0], 0, &q, &[7], 16, Par::Threads(1));
         let comb = combine_new_token(&q, &kt, &kt, &prev);
         for (a, b) in comb.as_f32().iter().zip(full.as_f32()) {
             assert!((a - b).abs() <= 1e-5, "combine {a} vs full {b}");
@@ -623,7 +830,7 @@ mod tests {
     fn empty_prev_state_is_identity_for_combine() {
         let (arena, _) = arena_with(0);
         let q = HostTensor::f32(vec![1, 4, 4], vec![0.5; 16]);
-        let prev = paged_attn_prev(&arena, &[0], 0, &q, &[0], 8, 1);
+        let prev = paged_attn_prev(&arena, &[0], 0, &q, &[0], 8, Par::Threads(1));
         assert!(prev.a.as_f32().iter().all(|&x| x == 0.0));
         assert!(prev.s.as_f32().iter().all(|&x| x == 0.0));
         assert!(prev.m.as_f32().iter().all(|&x| x == NEG_INF));
@@ -637,11 +844,52 @@ mod tests {
     }
 
     #[test]
-    fn thread_count_does_not_change_bits() {
+    fn thread_count_and_pool_do_not_change_bits() {
         let (arena, _) = arena_with(9);
         let q = HostTensor::f32(vec![2, 4, 4], (0..32).map(|i| (i % 13) as f32 * 0.21 - 1.1).collect());
-        let a = paged_attn(&arena, &[0, 0], 0, &q, &[9, 4], 16, 1);
-        let b = paged_attn(&arena, &[0, 0], 0, &q, &[9, 4], 16, 4);
+        let a = paged_attn(&arena, &[0, 0], 0, &q, &[9, 4], 16, Par::Threads(1));
+        let b = paged_attn(&arena, &[0, 0], 0, &q, &[9, 4], 16, Par::Threads(4));
         assert_eq!(a.as_f32(), b.as_f32(), "parallelism must not change bits");
+        // the persistent pool must also be bit-identical, at any width
+        for width in [1usize, 2, 4, 7] {
+            let pool = ScopedPool::new(width);
+            let c = paged_attn(&arena, &[0, 0], 0, &q, &[9, 4], 16, Par::Pool(&pool));
+            assert_eq!(a.as_f32(), c.as_f32(), "pool({width}) changed bits");
+        }
+    }
+
+    #[test]
+    fn quantized_arena_attention_tracks_f32_within_storage_error() {
+        // same appended stream, three storage dtypes: outputs agree within
+        // the storage format's derived error bound (the tight derivation +
+        // property coverage lives in tests/kernel_native.rs)
+        let (a32, _) = arena_with_dtype(9, KvDtype::F32);
+        let (a16, _) = arena_with_dtype(9, KvDtype::F16);
+        let (a8, _) = arena_with_dtype(9, KvDtype::Int8);
+        let q = HostTensor::f32(vec![1, 4, 4], (0..16).map(|i| (i % 7) as f32 * 0.3 - 0.9).collect());
+        let o32 = paged_attn(&a32, &[0], 0, &q, &[9], 16, Par::Threads(1));
+        let o16 = paged_attn(&a16, &[0], 0, &q, &[9], 16, Par::Threads(1));
+        let o8 = paged_attn(&a8, &[0], 0, &q, &[9], 16, Par::Threads(1));
+        for ((x, y), z) in o32.as_f32().iter().zip(o16.as_f32()).zip(o8.as_f32()) {
+            assert!((x - y).abs() <= 1e-2, "f16 {y} vs f32 {x}");
+            assert!((x - z).abs() <= 2e-1, "int8 {z} vs f32 {x}");
+        }
+    }
+
+    #[test]
+    fn unrolled_dot_and_axpy_match_naive_within_ulps() {
+        let a: Vec<f32> = (0..19).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..19).map(|i| (i as f32 * 0.61).cos()).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() <= 1e-5 * naive.abs().max(1.0));
+        let mut acc = vec![0.5f32; 19];
+        let mut acc_ref = acc.clone();
+        axpy(&mut acc, 0.75, &b);
+        for (r, &y) in acc_ref.iter_mut().zip(&b) {
+            *r += 0.75 * y;
+        }
+        for (x, y) in acc.iter().zip(&acc_ref) {
+            assert!((x - y).abs() <= 1e-6, "{x} vs {y}");
+        }
     }
 }

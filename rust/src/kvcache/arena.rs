@@ -15,22 +15,41 @@
 //!   buffer resize); retired requests return their blocks to the pool, so
 //!   steady-state footprint tracks live context, not
 //!   `slots × max_waves × max_seq`.
+//! * **Dtype-generic block storage** ([`KvDtype`], the `--kv-dtype` flag).
+//!   Blocks are stored `f32` (bit-exact, the default), `f16` (bit-cast
+//!   `u16` lanes, software round-to-nearest-even — 2× fewer bytes), or
+//!   `int8` with one f32 scale per (block, head) K/V region maintained at
+//!   append time (≈4× fewer bytes; a later token that raises a region's
+//!   running max requantizes its codes in place — worst-case per-element
+//!   error is `(block_size/2)·maxabs/127` over a full chain of raises,
+//!   see [`super::quant`] for the derivation). Appends quantize **in
+//!   place**; nothing upstream changes: the wire protocol and codec stay
+//!   f32 (quantization is a worker-local storage decision) and the same
+//!   `--kv-budget` block budget now holds 2×/4× more tokens of context.
 //! * **Two read paths.** The *native* attention backend
 //!   (`kernels::paged_attn`) reads blocks **in place** through the
 //!   read-only view API — [`PagedKvArena::table_view`] exposes a slot's
 //!   block list and [`PagedKvArena::block_slices`] borrows one
-//!   `(layer, block, head)` region (`block_size × hd` contiguous floats) —
-//!   so the steady-state decode path performs **zero** per-step KV copies.
-//!   The *engine* (PJRT) backend still needs contiguous inputs and uses
-//!   [`PagedKvArena::gather`]: one `copy_from_slice` per
-//!   (row, head, block) into a `[bucket, KH_shard, seq_bucket, hd]` staging
-//!   pair (charged to [`copies`]); gather output buffers are recycled
-//!   across steps — the arena keeps the last pair and rewrites it in place
-//!   once the caller has dropped the previous result.
-//! * **Blocks are zeroed when (re)assigned** to a slot, so gathers are
-//!   bit-identical to a dense zero-initialised reference cache (asserted by
-//!   the `kv_paged` property test) and recycled blocks can never leak KV
-//!   across requests.
+//!   `(layer, block, head)` region as a dtype-tagged [`KvBlockRef`]
+//!   (`block_size × hd` contiguous lanes of the storage dtype, plus the
+//!   int8 scales) — the kernel dequantizes in-register inside its dot/axpy
+//!   loops, so the steady-state decode path performs **zero** per-step KV
+//!   copies *and* reads 2×/≈4× fewer bytes at f16/int8. The *engine*
+//!   (PJRT) backend still needs contiguous f32 inputs and uses
+//!   [`PagedKvArena::gather`], which **widens on read**: one decode per
+//!   (row, head, block) region into a `[bucket, KH_shard, seq_bucket, hd]`
+//!   f32 staging pair (charged to [`copies`]); gather output buffers are
+//!   recycled across steps.
+//! * **Blocks are zeroed when (re)assigned** to a slot (codes and int8
+//!   scales), so gathers are bit-identical to a dense zero-initialised
+//!   reference cache (asserted by the `kv_paged` property test) and
+//!   recycled blocks can never leak KV across requests.
+//!
+//! Accounting is reported in **blocks and bytes**: [`PagedKvArena::stats`]
+//! fills `KvCacheStats::{bytes_in_use, total_bytes}` from the storage
+//! dtype (including int8 scale overhead), so admission control and
+//! `ServeMetrics` see the capacity gain of quantized storage, not just a
+//! block count.
 //!
 //! Layer handling mirrors the wire protocol: one block table per slot is
 //! shared by all layers (every layer's buffer has capacity at the same
@@ -41,6 +60,9 @@
 use std::sync::Arc;
 
 use super::block::{BlockAllocator, BlockId};
+use super::quant::{
+    f16_bits_to_f32, f32_to_f16_bits, i8_decode, i8_encode, i8_scale_for, KvDtype,
+};
 use super::table::BlockTable;
 use crate::metrics::KvCacheStats;
 use crate::runtime::host::{copies, HostTensor};
@@ -68,6 +90,22 @@ impl<'a> TableView<'a> {
     }
 }
 
+/// Borrowed K and V regions of one `(layer, block, head)` in the arena's
+/// **storage dtype** — `block_size × hd` contiguous lanes each, covering
+/// token positions `[i·block_size, (i+1)·block_size)` of whichever table
+/// slot owns the block at position `i`. This is the native kernel's
+/// zero-copy read: nothing moves, nothing is charged to [`copies`]; the
+/// kernel widens lanes in-register (f16 bit convert, int8 `code × scale`)
+/// inside its dot/axpy loops.
+#[derive(Debug, Clone, Copy)]
+pub enum KvBlockRef<'a> {
+    F32 { k: &'a [f32], v: &'a [f32] },
+    /// Bit-cast IEEE binary16 lanes.
+    F16 { k: &'a [u16], v: &'a [u16] },
+    /// Symmetric int8 codes with this region's per-(block, head) scales.
+    Int8 { k: &'a [i8], v: &'a [i8], k_scale: f32, v_scale: f32 },
+}
+
 /// Arena geometry and sizing.
 #[derive(Debug, Clone, Copy)]
 pub struct ArenaCfg {
@@ -84,6 +122,18 @@ pub struct ArenaCfg {
     pub block_size: usize,
     /// Blocks to preallocate (the arena grows past this on demand).
     pub initial_blocks: usize,
+    /// Storage dtype of the block buffers (`--kv-dtype`, default f32).
+    pub dtype: KvDtype,
+}
+
+/// Per-layer K/V block buffers in the arena's storage dtype. Int8 carries
+/// one f32 scale per (block, head) region for K and V separately
+/// (`[total_blocks × kv_heads]` per layer).
+#[derive(Debug)]
+enum Store {
+    F32 { k: Vec<Vec<f32>>, v: Vec<Vec<f32>> },
+    F16 { k: Vec<Vec<u16>>, v: Vec<Vec<u16>> },
+    Int8 { k: Vec<Vec<i8>>, v: Vec<Vec<i8>>, ks: Vec<Vec<f32>>, vs: Vec<Vec<f32>> },
 }
 
 /// Paged KV store for one attention worker (one head shard, all layers).
@@ -91,10 +141,7 @@ pub struct ArenaCfg {
 pub struct PagedKvArena {
     cfg: ArenaCfg,
     alloc: BlockAllocator,
-    /// Per layer: K buffer `[total_blocks, kv_heads, block_size, head_dim]`.
-    k: Vec<Vec<f32>>,
-    /// Per layer: V buffer, same layout as `k`.
-    v: Vec<Vec<f32>>,
+    store: Store,
     /// Per slot: logical-token → physical-block mapping.
     tables: Vec<BlockTable>,
     /// Reusable gather output buffers (K, V). A gather hands the caller an
@@ -114,10 +161,26 @@ impl PagedKvArena {
         assert!(cfg.block_size > 0, "block_size must be positive");
         let initial = cfg.initial_blocks.max(1);
         let elems = initial * cfg.kv_heads * cfg.block_size * cfg.head_dim;
+        let scales = initial * cfg.kv_heads;
+        let store = match cfg.dtype {
+            KvDtype::F32 => Store::F32 {
+                k: (0..cfg.layers).map(|_| vec![0.0; elems]).collect(),
+                v: (0..cfg.layers).map(|_| vec![0.0; elems]).collect(),
+            },
+            KvDtype::F16 => Store::F16 {
+                k: (0..cfg.layers).map(|_| vec![0u16; elems]).collect(),
+                v: (0..cfg.layers).map(|_| vec![0u16; elems]).collect(),
+            },
+            KvDtype::Int8 => Store::Int8 {
+                k: (0..cfg.layers).map(|_| vec![0i8; elems]).collect(),
+                v: (0..cfg.layers).map(|_| vec![0i8; elems]).collect(),
+                ks: (0..cfg.layers).map(|_| vec![0.0; scales]).collect(),
+                vs: (0..cfg.layers).map(|_| vec![0.0; scales]).collect(),
+            },
+        };
         PagedKvArena {
             alloc: BlockAllocator::new(initial, cfg.block_size),
-            k: (0..cfg.layers).map(|_| vec![0.0; elems]).collect(),
-            v: (0..cfg.layers).map(|_| vec![0.0; elems]).collect(),
+            store,
             tables: vec![BlockTable::default(); cfg.slots],
             scratch: None,
             reuse_scratch: true,
@@ -151,6 +214,11 @@ impl PagedKvArena {
         self.cfg.layers
     }
 
+    /// Storage dtype of the block buffers.
+    pub fn dtype(&self) -> KvDtype {
+        self.cfg.dtype
+    }
+
     /// Request slots this arena addresses (the wire protocol's slot space).
     pub fn slots(&self) -> usize {
         self.tables.len()
@@ -161,12 +229,42 @@ impl PagedKvArena {
         self.tables[slot as usize].len_tokens()
     }
 
-    /// Bytes of K+V buffer currently resident across all layers.
-    pub fn resident_bytes(&self) -> usize {
-        2 * self.cfg.layers * self.alloc.total_blocks() * self.block_elems() * 4
+    /// Bytes of one `(block, head)` K *or* V region as stored — lanes plus
+    /// the int8 scale. The unit of the native kernel's per-step read
+    /// traffic.
+    pub fn region_bytes(&self) -> usize {
+        self.cfg.block_size * self.cfg.head_dim * self.cfg.dtype.elem_bytes()
+            + self.cfg.dtype.scale_bytes()
     }
 
-    /// Accounting snapshot (blocks in use, capacity, internal waste).
+    /// Bytes one block occupies across all shard heads, K and V (the
+    /// per-block unit `KvCacheStats` bytes accounting is built from).
+    pub fn block_bytes(&self) -> usize {
+        2 * self.cfg.kv_heads * self.region_bytes()
+    }
+
+    /// Bytes the native kernel must read to cover `tokens` cached tokens of
+    /// one slot: every allocated block's K and V regions across all shard
+    /// heads, including int8 scales. This is the per-row unique working set
+    /// — group queries revisit the same bytes through cache, and one layer
+    /// step reads it exactly once.
+    pub fn kv_read_bytes(&self, tokens: usize) -> usize {
+        if tokens == 0 {
+            return 0;
+        }
+        tokens.div_ceil(self.cfg.block_size) * self.block_bytes()
+    }
+
+    /// Bytes of K+V buffer currently resident across all layers (scales
+    /// included for int8).
+    pub fn resident_bytes(&self) -> usize {
+        self.cfg.layers * self.alloc.total_blocks() * self.block_bytes()
+    }
+
+    /// Accounting snapshot: blocks in use/capacity, internal waste, and the
+    /// same occupancy in **bytes** (dtype-aware, per layer × per block) so
+    /// admission control and `ServeMetrics` see quantized storage's
+    /// capacity gain.
     pub fn stats(&self) -> KvCacheStats {
         let lens: Vec<usize> = self
             .tables
@@ -174,11 +272,14 @@ impl PagedKvArena {
             .map(|t| t.len_tokens())
             .filter(|&l| l > 0)
             .collect();
+        let per_block = self.cfg.layers * self.block_bytes();
         KvCacheStats {
             blocks_in_use: self.alloc.used_blocks(),
             total_blocks: self.alloc.total_blocks(),
             block_size: self.cfg.block_size,
             internal_waste_tokens: self.alloc.internal_waste(&lens),
+            bytes_in_use: self.alloc.used_blocks() * per_block,
+            total_bytes: self.alloc.total_blocks() * per_block,
         }
     }
 
@@ -189,8 +290,9 @@ impl PagedKvArena {
     }
 
     /// Append one decode step's K/V `[bucket, KH_shard, hd]` at position
-    /// `lens[b]` for each non-pad row. At `layer == 0` the slot's table
-    /// grows (and a write at position 0 first retires any stale table).
+    /// `lens[b]` for each non-pad row, quantizing into the storage dtype in
+    /// place. At `layer == 0` the slot's table grows (and a write at
+    /// position 0 first retires any stale table).
     pub fn append_step(
         &mut self,
         slots: &[u32],
@@ -218,10 +320,8 @@ impl PagedKvArena {
                 .locate(pos, self.cfg.block_size)
                 .expect("append beyond table: StepKv without layer-0 growth");
             for h in 0..khs {
-                let dst = self.elem_offset(blk, h, off);
                 let src = (b * khs + h) * hd;
-                self.k[layer][dst..dst + hd].copy_from_slice(&kd[src..src + hd]);
-                self.v[layer][dst..dst + hd].copy_from_slice(&vd[src..src + hd]);
+                self.write_row(layer, blk, h, off, &kd[src..src + hd], &vd[src..src + hd]);
             }
         }
     }
@@ -253,20 +353,20 @@ impl PagedKvArena {
                 .locate(cached + i, self.cfg.block_size)
                 .expect("chunk beyond table: PrefillChunk without layer-0 growth");
             for h in 0..khs {
-                let dst = self.elem_offset(blk, h, off);
                 let src = (i * khs + h) * hd;
-                self.k[layer][dst..dst + hd].copy_from_slice(&kd[src..src + hd]);
-                self.v[layer][dst..dst + hd].copy_from_slice(&vd[src..src + hd]);
+                self.write_row(layer, blk, h, off, &kd[src..src + hd], &vd[src..src + hd]);
             }
         }
     }
 
-    /// Assemble a contiguous `[bucket, KH_shard, seq_bucket, hd]` K/V input
-    /// pair — the **engine backend's** staging path (the native kernel
-    /// reads blocks in place via [`PagedKvArena::block_slices`] instead).
-    /// Copies whole per-head block regions (`block_size × hd` floats each);
-    /// positions past a slot's allocated blocks stay zero, as do pad rows.
-    /// Copied bytes are charged to [`copies`].
+    /// Assemble a contiguous `[bucket, KH_shard, seq_bucket, hd]` **f32**
+    /// K/V input pair — the **engine backend's** staging path (the native
+    /// kernel reads blocks in place via [`PagedKvArena::block_slices`]
+    /// instead). Decodes whole per-head block regions (widening f16/int8
+    /// storage back to f32 — the engine path always sees f32 regardless of
+    /// the storage dtype); positions past a slot's allocated blocks stay
+    /// zero, as do pad rows. Copied (written) bytes are charged to
+    /// [`copies`].
     ///
     /// The output buffers come from a reusable scratch pair: when the
     /// previous gather's tensors have been dropped, their allocation is
@@ -294,18 +394,36 @@ impl PagedKvArena {
                 if slot == PAD_SLOT {
                     continue;
                 }
-                let table = &self.tables[slot as usize];
                 for h in 0..khs {
-                    for (bi, &blk) in table.blocks().iter().enumerate() {
+                    for (bi, &blk) in self.tables[slot as usize].blocks().iter().enumerate() {
                         let tok0 = bi * bs;
                         if tok0 >= seq_bucket {
                             break;
                         }
                         let n = bs.min(seq_bucket - tok0) * hd;
-                        let src = self.elem_offset(blk, h, 0);
                         let dst = b * row + h * seq_bucket * hd + tok0 * hd;
-                        k[dst..dst + n].copy_from_slice(&self.k[layer][src..src + n]);
-                        v[dst..dst + n].copy_from_slice(&self.v[layer][src..src + n]);
+                        match self.block_slices(layer, blk, h) {
+                            KvBlockRef::F32 { k: kb, v: vb } => {
+                                k[dst..dst + n].copy_from_slice(&kb[..n]);
+                                v[dst..dst + n].copy_from_slice(&vb[..n]);
+                            }
+                            KvBlockRef::F16 { k: kb, v: vb } => {
+                                for (o, &b16) in k[dst..dst + n].iter_mut().zip(&kb[..n]) {
+                                    *o = f16_bits_to_f32(b16);
+                                }
+                                for (o, &b16) in v[dst..dst + n].iter_mut().zip(&vb[..n]) {
+                                    *o = f16_bits_to_f32(b16);
+                                }
+                            }
+                            KvBlockRef::Int8 { k: kb, v: vb, k_scale, v_scale } => {
+                                for (o, &c) in k[dst..dst + n].iter_mut().zip(&kb[..n]) {
+                                    *o = i8_decode(c, k_scale);
+                                }
+                                for (o, &c) in v[dst..dst + n].iter_mut().zip(&vb[..n]) {
+                                    *o = i8_decode(c, v_scale);
+                                }
+                            }
+                        }
                         copied_elems += 2 * n;
                     }
                 }
@@ -332,15 +450,31 @@ impl PagedKvArena {
         TableView { blocks: t.blocks(), len_tokens: t.len_tokens() }
     }
 
-    /// Borrow the contiguous K and V regions of one `(layer, block, head)`:
-    /// `block_size × hd` floats each, covering token positions
-    /// `[i·block_size, (i+1)·block_size)` of whichever table slot owns
-    /// block `blk` at position `i`. This is the in-place read the native
-    /// kernel runs on — no bytes move, nothing is charged to [`copies`].
-    pub fn block_slices(&self, layer: usize, blk: BlockId, head: usize) -> (&[f32], &[f32]) {
+    /// Borrow the K and V regions of one `(layer, block, head)` in the
+    /// storage dtype — see [`KvBlockRef`]. No bytes move; nothing is
+    /// charged to [`copies`].
+    pub fn block_slices(&self, layer: usize, blk: BlockId, head: usize) -> KvBlockRef<'_> {
         let start = self.elem_offset(blk, head, 0);
         let n = self.cfg.block_size * self.cfg.head_dim;
-        (&self.k[layer][start..start + n], &self.v[layer][start..start + n])
+        match &self.store {
+            Store::F32 { k, v } => KvBlockRef::F32 {
+                k: &k[layer][start..start + n],
+                v: &v[layer][start..start + n],
+            },
+            Store::F16 { k, v } => KvBlockRef::F16 {
+                k: &k[layer][start..start + n],
+                v: &v[layer][start..start + n],
+            },
+            Store::Int8 { k, v, ks, vs } => {
+                let si = self.scale_index(blk, head);
+                KvBlockRef::Int8 {
+                    k: &k[layer][start..start + n],
+                    v: &v[layer][start..start + n],
+                    k_scale: ks[layer][si],
+                    v_scale: vs[layer][si],
+                }
+            }
+        }
     }
 
     /// Hand back the cached scratch pair when it is big enough and no
@@ -366,6 +500,55 @@ impl PagedKvArena {
         blk as usize * self.block_elems()
             + head * self.cfg.block_size * self.cfg.head_dim
             + tok * self.cfg.head_dim
+    }
+
+    /// Index of (block, head) in a per-layer int8 scale vector.
+    fn scale_index(&self, blk: BlockId, head: usize) -> usize {
+        blk as usize * self.cfg.kv_heads + head
+    }
+
+    /// Quantize one token row's K and V (`hd` f32 values each) into the
+    /// storage at `(layer, blk, head, off)`. For int8, a row whose max
+    /// |value| exceeds the region's running scale first requantizes the
+    /// region's existing codes at the new scale (total per-element error
+    /// stays ≤ `(block_size/2)·maxabs/127` over a full chain of raises;
+    /// see [`super::quant`] for the derivation).
+    fn write_row(
+        &mut self,
+        layer: usize,
+        blk: BlockId,
+        head: usize,
+        off: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        let dst = self.elem_offset(blk, head, off);
+        let hd = self.cfg.head_dim;
+        let region = self.elem_offset(blk, head, 0);
+        let region_n = self.cfg.block_size * hd;
+        let si = self.scale_index(blk, head);
+        match &mut self.store {
+            Store::F32 { k, v } => {
+                k[layer][dst..dst + hd].copy_from_slice(k_row);
+                v[layer][dst..dst + hd].copy_from_slice(v_row);
+            }
+            Store::F16 { k, v } => {
+                for (o, &x) in k[layer][dst..dst + hd].iter_mut().zip(k_row) {
+                    *o = f32_to_f16_bits(x);
+                }
+                for (o, &x) in v[layer][dst..dst + hd].iter_mut().zip(v_row) {
+                    *o = f32_to_f16_bits(x);
+                }
+            }
+            Store::Int8 { k, v, ks, vs } => {
+                let kl = &mut k[layer];
+                let sl = &mut ks[layer];
+                write_row_i8(kl, sl, si, region, region_n, dst, k_row);
+                let vl = &mut v[layer];
+                let sl = &mut vs[layer];
+                write_row_i8(vl, sl, si, region, region_n, dst, v_row);
+            }
+        }
     }
 
     /// Grow `slot`'s table to cover `tokens` positions, allocating (and
@@ -400,19 +583,89 @@ impl PagedKvArena {
         let extra = n.max(self.alloc.total_blocks() / 2).max(4);
         self.alloc.grow(extra);
         let elems = self.alloc.total_blocks() * self.block_elems();
-        for l in 0..self.cfg.layers {
-            self.k[l].resize(elems, 0.0);
-            self.v[l].resize(elems, 0.0);
+        let scales = self.alloc.total_blocks() * self.cfg.kv_heads;
+        match &mut self.store {
+            Store::F32 { k, v } => {
+                for l in 0..self.cfg.layers {
+                    k[l].resize(elems, 0.0);
+                    v[l].resize(elems, 0.0);
+                }
+            }
+            Store::F16 { k, v } => {
+                for l in 0..self.cfg.layers {
+                    k[l].resize(elems, 0);
+                    v[l].resize(elems, 0);
+                }
+            }
+            Store::Int8 { k, v, ks, vs } => {
+                for l in 0..self.cfg.layers {
+                    k[l].resize(elems, 0);
+                    v[l].resize(elems, 0);
+                    ks[l].resize(scales, 0.0);
+                    vs[l].resize(scales, 0.0);
+                }
+            }
         }
     }
 
     fn zero_block(&mut self, blk: BlockId) {
         let n = self.block_elems();
         let start = blk as usize * n;
-        for l in 0..self.cfg.layers {
-            self.k[l][start..start + n].fill(0.0);
-            self.v[l][start..start + n].fill(0.0);
+        let s0 = blk as usize * self.cfg.kv_heads;
+        let s1 = s0 + self.cfg.kv_heads;
+        match &mut self.store {
+            Store::F32 { k, v } => {
+                for l in 0..self.cfg.layers {
+                    k[l][start..start + n].fill(0.0);
+                    v[l][start..start + n].fill(0.0);
+                }
+            }
+            Store::F16 { k, v } => {
+                for l in 0..self.cfg.layers {
+                    k[l][start..start + n].fill(0);
+                    v[l][start..start + n].fill(0);
+                }
+            }
+            Store::Int8 { k, v, ks, vs } => {
+                for l in 0..self.cfg.layers {
+                    k[l][start..start + n].fill(0);
+                    v[l][start..start + n].fill(0);
+                    ks[l][s0..s1].fill(0.0);
+                    vs[l][s0..s1].fill(0.0);
+                }
+            }
         }
+    }
+}
+
+/// Int8 row write into one (block, head) region of a layer buffer:
+/// maintains the region's running scale, requantizing existing codes in
+/// place when the incoming row raises the max |value|.
+fn write_row_i8(
+    codes: &mut [i8],
+    scales: &mut [f32],
+    si: usize,
+    region: usize,
+    region_n: usize,
+    dst: usize,
+    row: &[f32],
+) {
+    let maxabs = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let s_old = scales[si];
+    if maxabs > s_old * 127.0 {
+        let s_new = i8_scale_for(maxabs);
+        if s_old > 0.0 {
+            // re-code the whole region (zeros stay zero) at the new scale
+            let ratio = s_old / s_new;
+            for c in codes[region..region + region_n].iter_mut() {
+                *c = (*c as f32 * ratio).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        scales[si] = s_new;
+    }
+    let s = scales[si];
+    for (o, &x) in codes[dst..dst + row.len()].iter_mut().zip(row) {
+        *o = i8_encode(x, s);
     }
 }
 
@@ -421,6 +674,10 @@ mod tests {
     use super::*;
 
     fn tiny() -> PagedKvArena {
+        tiny_with(KvDtype::F32)
+    }
+
+    fn tiny_with(dtype: KvDtype) -> PagedKvArena {
         PagedKvArena::new(ArenaCfg {
             layers: 2,
             kv_heads: 2,
@@ -429,6 +686,7 @@ mod tests {
             slots: 3,
             block_size: 4,
             initial_blocks: 2,
+            dtype,
         })
     }
 
@@ -591,7 +849,7 @@ mod tests {
 
     #[test]
     fn block_views_borrow_written_kv_in_place() {
-        let mut a = tiny(); // block_size 4, kv_heads 2, hd 4
+        let mut a = tiny(); // block_size 4, kv_heads 2, hd 4, f32 storage
         for t in 0..6 {
             let k = step_kv(1, 2, 4, (10 * t) as f32);
             let v = step_kv(1, 2, 4, (100 * t) as f32);
@@ -604,7 +862,9 @@ mod tests {
         // token 5 lives in block 1 at offset 1; head 1 of its K was written
         // from step_kv(base 50) at src offset h*hd = 4 → values 54..58
         let blk = view.blocks()[1];
-        let (kb, vb) = a.block_slices(0, blk, 1);
+        let KvBlockRef::F32 { k: kb, v: vb } = a.block_slices(0, blk, 1) else {
+            panic!("f32 arena must expose f32 block refs");
+        };
         assert_eq!(kb.len(), 4 * 4);
         assert_eq!(&kb[4..8], &[54., 55., 56., 57.]);
         // V buffer is independent (base 500 at the same offset)
@@ -614,6 +874,79 @@ mod tests {
         let _ = a.block_slices(0, blk, 0);
         let _ = a.table_view(0);
         assert_eq!(copies::total(), before);
+    }
+
+    #[test]
+    fn quantized_block_views_expose_storage_lanes() {
+        // f16 arena: stored lanes are the bit-converted values
+        let mut a = tiny_with(KvDtype::F16);
+        let vals = HostTensor::f32(vec![1, 2, 4], vec![0.5, -1.25, 3.0, 0.0, 2.0, -0.75, 8.0, 1.5]);
+        a.append_step(&[0], 0, &vals, &vals, &[0]);
+        let blk = a.table_view(0).blocks()[0];
+        let KvBlockRef::F16 { k, .. } = a.block_slices(0, blk, 0) else {
+            panic!("f16 arena must expose f16 block refs");
+        };
+        assert_eq!(f16_bits_to_f32(k[0]), 0.5);
+        assert_eq!(f16_bits_to_f32(k[1]), -1.25);
+
+        // int8 arena: codes + per-region scale decode back within scale/2
+        let mut a = tiny_with(KvDtype::Int8);
+        a.append_step(&[0], 0, &vals, &vals, &[0]);
+        let blk = a.table_view(0).blocks()[0];
+        let KvBlockRef::Int8 { k, k_scale, .. } = a.block_slices(0, blk, 0) else {
+            panic!("int8 arena must expose int8 block refs");
+        };
+        assert!((k_scale - 3.0 / 127.0).abs() < 1e-7, "scale from row maxabs");
+        assert!((i8_decode(k[0], k_scale) - 0.5).abs() <= k_scale * 0.5);
+        assert!((i8_decode(k[2], k_scale) - 3.0).abs() <= k_scale * 0.5);
+    }
+
+    #[test]
+    fn int8_scale_grows_and_requantizes_in_place() {
+        let mut a = tiny_with(KvDtype::Int8);
+        // token 0: small values set a small scale
+        let small = HostTensor::f32(vec![1, 2, 4], vec![0.1; 8]);
+        a.append_step(&[0], 0, &small, &small, &[0]);
+        // token 1 (same block): 100× larger values must raise the scale and
+        // keep token 0 decodable within the NEW scale's error bound
+        let big = HostTensor::f32(vec![1, 2, 4], vec![10.0; 8]);
+        a.append_step(&[0], 0, &big, &big, &[1]);
+        let blk = a.table_view(0).blocks()[0];
+        let KvBlockRef::Int8 { k, k_scale, .. } = a.block_slices(0, blk, 0) else {
+            panic!()
+        };
+        assert!((k_scale - 10.0 / 127.0).abs() < 1e-6);
+        // one raise: old rounding (≤ s_old/2) + re-rounding (≤ s_new/2)
+        // ≤ s_new = maxabs/127 (a full chain would scale with block_size)
+        let bound = 10.0 / 127.0;
+        assert!((i8_decode(k[0], k_scale) - 0.1).abs() <= bound, "old token survives");
+        assert!((i8_decode(k[4], k_scale) - 10.0).abs() <= bound * 0.5, "new token fresh");
+    }
+
+    #[test]
+    fn stats_report_bytes_per_dtype() {
+        for (dtype, region) in [
+            (KvDtype::F32, 4 * 4 * 4),
+            (KvDtype::F16, 4 * 4 * 2),
+            (KvDtype::Int8, 4 * 4 + 4),
+        ] {
+            let mut a = tiny_with(dtype);
+            assert_eq!(a.region_bytes(), region, "{dtype:?}");
+            assert_eq!(a.block_bytes(), 2 * 2 * region);
+            let k = step_kv(1, 2, 4, 1.0);
+            for t in 0..5 {
+                a.append_step(&[0], 0, &k, &k, &[t]);
+            }
+            let s = a.stats();
+            assert_eq!(s.blocks_in_use, 2); // ceil(5/4)
+            // bytes = blocks × layers × block_bytes
+            assert_eq!(s.bytes_in_use, 2 * 2 * a.block_bytes());
+            assert_eq!(s.total_bytes, s.total_blocks * 2 * a.block_bytes());
+            assert_eq!(a.resident_bytes(), s.total_bytes);
+            // kernel working set for 5 tokens: 2 blocks × K+V × heads
+            assert_eq!(a.kv_read_bytes(5), 2 * a.block_bytes());
+            assert_eq!(a.kv_read_bytes(0), 0);
+        }
     }
 
     #[test]

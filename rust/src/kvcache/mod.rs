@@ -1,13 +1,16 @@
 //! KV-cache substrate: paged block allocation, per-request block tables,
-//! the block-paged arena backing the live attention workers, and the
-//! head-/request-level partitioning strategies of paper §5/Fig. 9.
+//! the block-paged arena backing the live attention workers (with
+//! f32/f16/int8 block storage — see [`quant`]), and the head-/request-level
+//! partitioning strategies of paper §5/Fig. 9.
 
 pub mod arena;
 pub mod block;
 pub mod partition;
+pub mod quant;
 pub mod table;
 
-pub use arena::{ArenaCfg, PagedKvArena, TableView, PAD_SLOT};
+pub use arena::{ArenaCfg, KvBlockRef, PagedKvArena, TableView, PAD_SLOT};
 pub use block::{AllocError, BlockAllocator, BlockId};
-pub use partition::{head_level, kv_blocks_needed, request_level, Partition};
+pub use partition::{head_level, kv_blocks_needed, kv_bytes_needed, request_level, Partition};
+pub use quant::KvDtype;
 pub use table::{BlockTable, KvRegistry};

@@ -79,6 +79,19 @@ pub fn kv_blocks_needed(seq_lens: &[usize], block_size: usize) -> usize {
     seq_lens.iter().map(|&l| l.div_ceil(block_size)).sum()
 }
 
+/// The same requirement in **bytes**: blocks × the arena's per-block byte
+/// size (`PagedKvArena::block_bytes × layers` for a full worker footprint).
+/// With quantized block storage (`--kv-dtype f16|int8`) the byte size of a
+/// block shrinks 2×/≈4×, so a fixed byte budget admits proportionally more
+/// context. NOTE: admission control currently budgets *blocks*
+/// (`kv_blocks_needed` in the leader) and the `ServeMetrics` byte view
+/// comes from `PagedKvArena::stats()` — this helper is the building block
+/// for the byte-denominated `--kv-budget` filed in the ROADMAP, not yet
+/// wired into the serve path.
+pub fn kv_bytes_needed(seq_lens: &[usize], block_size: usize, bytes_per_block: usize) -> usize {
+    kv_blocks_needed(seq_lens, block_size) * bytes_per_block
+}
+
 /// Request-level partitioning: requests greedily assigned (longest-first) to
 /// the least-loaded worker — the strongest reasonable baseline; still
 /// imbalanced for skewed length distributions.
@@ -164,6 +177,15 @@ mod tests {
         assert_eq!(kv_blocks_needed(&[1, 16, 17], 16), 4);
         // per-request rounding: 2×(15 tokens) needs 2 blocks, not ceil(30/16)
         assert_eq!(kv_blocks_needed(&[15, 15], 16), 2);
+    }
+
+    #[test]
+    fn kv_bytes_follow_blocks() {
+        // same block count, byte need scales with the storage dtype's
+        // per-block size (f32 4096 B vs int8 ~1028+scale per region etc.)
+        assert_eq!(kv_bytes_needed(&[1, 16, 17], 16, 4096), 4 * 4096);
+        assert_eq!(kv_bytes_needed(&[1, 16, 17], 16, 1056), 4 * 1056);
+        assert_eq!(kv_bytes_needed(&[], 16, 4096), 0);
     }
 
     #[test]

@@ -1,0 +1,279 @@
+//! KV block quantization: the storage dtypes a [`super::PagedKvArena`] can
+//! keep its block buffers in, plus the software f32↔f16 and f32↔int8
+//! conversions (no external half-float crate in the offline toolchain).
+//!
+//! The paper's decode attention is memory-bandwidth-bound, so the bytes the
+//! kernel reads per step — and the KV a fixed arena budget can hold — are
+//! the two remaining levers after the copy elimination of PRs 1–3. Storing
+//! blocks compactly attacks both at once:
+//!
+//! * **f16** — IEEE 754 binary16 kept as bit-cast `u16` lanes. Lossy once
+//!   on append (round-to-nearest-even, ≤ 2⁻¹¹ relative error for values in
+//!   the f16 normal range), exact to widen back. Halves block bytes.
+//! * **int8** — symmetric linear quantization with **one f32 scale per
+//!   (block, head)** K region and V region, maintained at append time: the
+//!   scale is `maxabs / 127`, and when a later token in the same block
+//!   raises the running max, the region's existing codes are requantized
+//!   in place. Each requantization re-rounds earlier codes, adding up to
+//!   `s_new/2` of error, so the worst-case per-element error is
+//!   **block_size-dependent**: one initial rounding plus at most
+//!   `block_size − 1` raises, each ≤ `maxabs_final/254`, i.e.
+//!   `≤ (block_size/2)·maxabs/127` if every row in a region sets a new
+//!   max (`2·maxabs/127` at block_size 4, `8·maxabs/127` at the default
+//!   16). Typical error is far smaller — raises are records of a random
+//!   sequence (~H(block_size) of them) and roundings are random-signed —
+//!   but bounds derived from this module must be stated per block size
+//!   (`tests/kernel_native.rs` and `tests/kv_quant.rs` derive and assert
+//!   theirs at block_size 4). Quarters block bytes (+4 B per region for
+//!   the scale).
+//!
+//! Quantization is a **worker-local storage decision**: the wire protocol,
+//! codec, and engine (PJRT) backend stay f32 — appends quantize on the way
+//! in, `gather` widens on the way out, and only the native kernel consumes
+//! the compact lanes directly (dequantizing in-register inside its
+//! dot/axpy loops — see `kernels::paged_attn`).
+
+/// Storage dtype of a KV arena's block buffers (`--kv-dtype`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvDtype {
+    /// 4 B/elem, bit-exact storage (the PR-3 behaviour; default).
+    #[default]
+    F32,
+    /// 2 B/elem IEEE binary16, software convert (no_std-external-crate-free).
+    F16,
+    /// 1 B/elem symmetric int8 + one f32 scale per (block, head) region.
+    Int8,
+}
+
+impl KvDtype {
+    pub fn parse(s: &str) -> Option<KvDtype> {
+        match s {
+            "f32" => Some(KvDtype::F32),
+            "f16" => Some(KvDtype::F16),
+            "int8" => Some(KvDtype::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::F16 => "f16",
+            KvDtype::Int8 => "int8",
+        }
+    }
+
+    /// Bytes per stored KV element.
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::F16 => 2,
+            KvDtype::Int8 => 1,
+        }
+    }
+
+    /// Extra bytes per (block, head) K or V region (the int8 scale).
+    pub fn scale_bytes(self) -> usize {
+        match self {
+            KvDtype::Int8 => 4,
+            _ => 0,
+        }
+    }
+}
+
+// ---- f32 ↔ f16 (IEEE 754 binary16 as u16 bits) ----------------------------
+
+/// Convert f32 → f16 bits with round-to-nearest-even.
+///
+/// Edge cases follow IEEE narrowing: NaN stays NaN (quiet bit forced,
+/// top mantissa payload bits kept), ±inf and ±0 are preserved, values
+/// ≥ 65520 overflow to ±inf, values below the f16 subnormal range
+/// round to ±0, and the f16 subnormal range (|x| < 2⁻¹⁴) is rounded
+/// correctly rather than flushed.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let abs = b & 0x7fff_ffff;
+    if abs >= 0x7f80_0000 {
+        // inf / NaN: keep NaN-ness (force the quiet bit so a payload that
+        // shifts away cannot turn a NaN into inf)
+        let payload = if abs > 0x7f80_0000 { 0x0200 | ((abs >> 13) as u16 & 0x03ff) } else { 0 };
+        return sign | 0x7c00 | payload;
+    }
+    if abs >= 0x4780_0000 {
+        // ≥ 2^16: past the largest finite f16 even before rounding
+        return sign | 0x7c00;
+    }
+    let e = (abs >> 23) as i32; // biased f32 exponent
+    let m = abs & 0x007f_ffff;
+    if e > 112 {
+        // normal f16: rebias exponent, round 13 mantissa bits away (RNE).
+        // A mantissa carry propagates into the exponent; at e == 142 that
+        // correctly yields inf (values in [65520, 65536) round up).
+        let mut out = (((e - 112) as u32) << 10) | (m >> 13);
+        let round = m & 0x1fff;
+        if round > 0x1000 || (round == 0x1000 && (out & 1) == 1) {
+            out += 1;
+        }
+        return sign | out as u16;
+    }
+    if e < 102 {
+        // below half the smallest f16 subnormal (2⁻²⁵): rounds to ±0.
+        // (Covers all f32 subnormals too.)
+        return sign;
+    }
+    // f16 subnormal: value = m16 · 2⁻²⁴ with m16 = round(1.m · 2^(e-102))
+    let full = m | 0x0080_0000; // implicit bit
+    let shift = (126 - e) as u32; // 14..=24
+    let halfway = 1u32 << (shift - 1);
+    let rem = full & ((1 << shift) - 1);
+    let mut m16 = full >> shift;
+    if rem > halfway || (rem == halfway && (m16 & 1) == 1) {
+        m16 += 1; // may carry to 0x0400 = smallest normal — still correct
+    }
+    sign | m16 as u16
+}
+
+/// Widen f16 bits → f32. Exact for every f16 value (binary16 ⊂ binary32);
+/// NaN payloads and signs are preserved.
+#[inline]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // ±0
+        }
+        // subnormal: normalise into f32's larger exponent range
+        let mut e = 113u32; // f32 biased exponent of 2⁻¹⁴
+        let mut m = man;
+        while m & 0x0400 == 0 {
+            m <<= 1;
+            e -= 1;
+        }
+        return f32::from_bits(sign | (e << 23) | ((m & 0x03ff) << 13));
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+// ---- f32 ↔ int8 with per-region scale -------------------------------------
+
+/// Symmetric scale for a region whose max |value| is `maxabs`: codes span
+/// the full ±127 range at any magnitude (scales work from 1e-30 to 1e30).
+#[inline]
+pub fn i8_scale_for(maxabs: f32) -> f32 {
+    maxabs / 127.0
+}
+
+/// Quantize one value at `scale` (round-to-nearest, clamped to ±127).
+/// `scale == 0` means the region is all-zero so far.
+#[inline]
+pub fn i8_encode(x: f32, scale: f32) -> i8 {
+    if scale == 0.0 {
+        return 0;
+    }
+    (x / scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Dequantize one code.
+#[inline]
+pub fn i8_decode(c: i8, scale: f32) -> f32 {
+    c as f32 * scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt(x: f32) -> f32 {
+        f16_bits_to_f32(f32_to_f16_bits(x))
+    }
+
+    #[test]
+    fn f16_exact_values_roundtrip_bitwise() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 6.103515625e-5] {
+            assert_eq!(rt(x).to_bits(), x.to_bits(), "f16-representable {x} must be exact");
+        }
+    }
+
+    #[test]
+    fn f16_specials() {
+        assert_eq!(rt(f32::INFINITY), f32::INFINITY);
+        assert_eq!(rt(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(rt(f32::NAN).is_nan());
+        assert!(rt(f32::from_bits(0x7f80_0001)).is_nan(), "sig NaN stays NaN");
+        assert_eq!(rt(-0.0).to_bits(), (-0.0f32).to_bits(), "signed zero kept");
+        // overflow → inf, underflow → 0 (sign kept)
+        assert_eq!(rt(1e9), f32::INFINITY);
+        assert_eq!(rt(-1e9), f32::NEG_INFINITY);
+        assert_eq!(rt(65520.0), f32::INFINITY, "≥65520 rounds to inf");
+        assert_eq!(rt(65519.0), 65504.0, "<65520 rounds to max finite");
+        assert_eq!(rt(1e-30).to_bits(), 0.0f32.to_bits());
+        assert_eq!(rt(-1e-30).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn f16_subnormal_range() {
+        let smallest = 5.960464477539063e-8; // 2⁻²⁴
+        assert_eq!(rt(smallest), smallest);
+        assert_eq!(rt(smallest * 3.0), smallest * 3.0);
+        // exactly half the smallest subnormal ties-to-even down to zero
+        assert_eq!(rt(smallest / 2.0), 0.0);
+        // just above half rounds up to the smallest subnormal
+        assert_eq!(rt(smallest * 0.6), smallest);
+    }
+
+    #[test]
+    fn f16_relative_error_bound_on_normals() {
+        // |x - rt(x)| ≤ 2⁻¹¹ · |x| over the f16 normal range
+        let mut x = 7.0e-5f32;
+        while x < 6.0e4 {
+            for s in [1.0f32, -1.0] {
+                let v = x * s * 1.2345;
+                let err = (rt(v) - v).abs();
+                assert!(err <= v.abs() * 4.8829e-4, "x={v} err={err}");
+            }
+            x *= 1.7;
+        }
+    }
+
+    #[test]
+    fn i8_roundtrip_error_bound_at_any_magnitude() {
+        for &mag in &[1e-30f32, 1e-3, 1.0, 47.0, 1e12, 1e30] {
+            let scale = i8_scale_for(mag);
+            for i in -10..=10 {
+                let x = mag * (i as f32) / 10.0;
+                let err = (i8_decode(i8_encode(x, scale), scale) - x).abs();
+                assert!(err <= scale * 0.5 + mag * 1e-6, "mag={mag} x={x} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_zero_scale_is_all_zero() {
+        assert_eq!(i8_encode(0.0, 0.0), 0);
+        assert_eq!(i8_decode(0, 0.0), 0.0);
+        // clamp guards against values above the scale's max
+        assert_eq!(i8_encode(1e10, 1.0), 127);
+        assert_eq!(i8_encode(-1e10, 1.0), -127);
+    }
+
+    #[test]
+    fn dtype_parse_and_sizes() {
+        for d in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
+            assert_eq!(KvDtype::parse(d.name()), Some(d));
+        }
+        assert_eq!(KvDtype::parse("fp8"), None);
+        assert_eq!(KvDtype::default(), KvDtype::F32);
+        assert_eq!(
+            (KvDtype::F32.elem_bytes(), KvDtype::F16.elem_bytes(), KvDtype::Int8.elem_bytes()),
+            (4, 2, 1)
+        );
+        assert_eq!(KvDtype::Int8.scale_bytes(), 4);
+        assert_eq!(KvDtype::F16.scale_bytes(), 0);
+    }
+}

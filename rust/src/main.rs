@@ -32,10 +32,11 @@ experiments (analytical, paper-scale):
 real pipeline (tiny model, PJRT end-to-end):
   decode  --prompt 1,7,42 --steps 16 [--workers N] [--no-overlap]
           [--transport inproc|tcp] [--attn-backend engine|native]
+          [--kv-dtype f32|f16|int8]
   serve   [--trace azure-conv] [--requests N] [--waves N]
           [--stack fhbn|nccl|nccl-nogdr|gloo] [--time-scale X]
           [--transport inproc|tcp] [--attn-backend engine|native]
-          [--kv-budget BLOCKS]
+          [--kv-budget BLOCKS] [--kv-dtype f32|f16|int8]
 
 flags:
   --requests N     trace subsample size for simulations (default 1000)
@@ -51,12 +52,17 @@ flags:
                    copies on the workers)  (default engine)
   --kv-budget N    per-worker KV block budget; admission defers requests
                    that would overflow it (default: unlimited)
+  --kv-dtype D     KV block storage on the attention workers: f32
+                   (bit-exact, default), f16 (2× fewer KV bytes), or int8
+                   with per-block scales (≈4× fewer). Worker-local — the
+                   wire stays f32; the native backend reads the compact
+                   blocks directly
 ";
 
 const SPEC: &[&str] = &[
     "requests!", "seed!", "results!", "artifacts!", "workers!", "no-overlap",
     "waves!", "stack!", "time-scale!", "prompt!", "steps!", "trace!",
-    "transport!", "attn-backend!", "kv-budget!", "help",
+    "transport!", "attn-backend!", "kv-budget!", "kv-dtype!", "help",
 ];
 
 fn main() {
@@ -152,6 +158,14 @@ fn run(argv: &[String]) -> Result<(), String> {
                 kv.total_blocks,
                 kv.internal_waste_tokens
             );
+            // byte view (dtype-aware): where f16/int8 storage shows up
+            println!(
+                "kv bytes [{}]: peak {} B  last round {}/{} B resident",
+                pipe.kv_dtype().name(),
+                m.kv_peak_bytes(),
+                kv.bytes_in_use,
+                kv.total_bytes
+            );
             if m.deferred_admissions() > 0 {
                 println!("kv admission: {} deferrals (budget back-pressure)", m.deferred_admissions());
             }
@@ -217,6 +231,10 @@ fn pipeline_opts(args: &Args, artifacts: &str) -> Result<PipelineOpts, String> {
     }
     if args.has("kv-budget") {
         opts.kv_block_budget = Some(args.usize_or("kv-budget", 0).map_err(|e| e.to_string())?);
+    }
+    if let Some(d) = args.get("kv-dtype") {
+        opts.kv_dtype = lamina::kvcache::KvDtype::parse(d)
+            .ok_or_else(|| format!("unknown kv dtype '{d}' (use f32|f16|int8)"))?;
     }
     Ok(opts)
 }

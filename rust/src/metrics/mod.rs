@@ -13,12 +13,23 @@ use crate::util::stats::{Percentiles, Welford};
 /// fragmentation: token slots allocated in partially-filled tail blocks.
 /// External fragmentation is impossible by construction (fixed-size
 /// blocks).
+///
+/// Occupancy is reported in blocks **and bytes**: with quantized block
+/// storage (`--kv-dtype f16|int8`) a block is 2×/≈4× smaller, so the
+/// byte view is what shows the capacity gain on a fixed arena budget
+/// (block counts alone cannot). `bytes_in_use`/`total_bytes` are
+/// dtype-aware (int8 scale overhead included) and sum across workers
+/// like the block counts.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct KvCacheStats {
     pub blocks_in_use: usize,
     pub total_blocks: usize,
     pub block_size: usize,
     pub internal_waste_tokens: usize,
+    /// Resident bytes of live blocks (all layers, K+V, incl. int8 scales).
+    pub bytes_in_use: usize,
+    /// Resident bytes of the whole arena (allocated capacity).
+    pub total_bytes: usize,
 }
 
 impl KvCacheStats {
@@ -37,6 +48,8 @@ impl KvCacheStats {
         self.total_blocks += other.total_blocks;
         self.internal_waste_tokens += other.internal_waste_tokens;
         self.block_size = self.block_size.max(other.block_size);
+        self.bytes_in_use += other.bytes_in_use;
+        self.total_bytes += other.total_bytes;
         self
     }
 }
@@ -86,6 +99,7 @@ pub struct ServeMetrics {
     sched_s: Welford,
     kv: KvCacheStats,
     kv_peak_blocks: usize,
+    kv_peak_bytes: usize,
     wire: WireStats,
     deferred_admissions: u64,
 }
@@ -111,9 +125,11 @@ impl ServeMetrics {
         self.requests_completed += n;
     }
 
-    /// Record a KV-arena snapshot (keeps the latest, tracks peak usage).
+    /// Record a KV-arena snapshot (keeps the latest, tracks peak usage in
+    /// blocks and bytes).
     pub fn record_kv(&mut self, s: KvCacheStats) {
         self.kv_peak_blocks = self.kv_peak_blocks.max(s.blocks_in_use);
+        self.kv_peak_bytes = self.kv_peak_bytes.max(s.bytes_in_use);
         self.kv = s;
     }
 
@@ -125,6 +141,12 @@ impl ServeMetrics {
     /// Peak KV blocks in use across all recorded snapshots.
     pub fn kv_peak_blocks(&self) -> usize {
         self.kv_peak_blocks
+    }
+
+    /// Peak resident KV bytes across all recorded snapshots (dtype-aware:
+    /// halves/quarters under f16/int8 block storage at the same context).
+    pub fn kv_peak_bytes(&self) -> usize {
+        self.kv_peak_bytes
     }
 
     /// Sum a transport endpoint's wire counters into this run's totals.
@@ -272,15 +294,21 @@ mod tests {
             total_blocks: 16,
             block_size: 16,
             internal_waste_tokens: 5,
+            bytes_in_use: 10 * 4096,
+            total_bytes: 16 * 4096,
         });
         m.record_kv(KvCacheStats {
             blocks_in_use: 3,
             total_blocks: 16,
             block_size: 16,
             internal_waste_tokens: 1,
+            bytes_in_use: 3 * 4096,
+            total_bytes: 16 * 4096,
         });
         assert_eq!(m.kv_stats().blocks_in_use, 3);
         assert_eq!(m.kv_peak_blocks(), 10);
+        assert_eq!(m.kv_peak_bytes(), 10 * 4096);
+        assert_eq!(m.kv_stats().bytes_in_use, 3 * 4096);
         assert!((m.kv_stats().utilization() - 3.0 / 16.0).abs() < 1e-12);
     }
 
@@ -291,17 +319,23 @@ mod tests {
             total_blocks: 8,
             block_size: 16,
             internal_waste_tokens: 2,
+            bytes_in_use: 4 * 1056,
+            total_bytes: 8 * 1056,
         };
         let b = KvCacheStats {
             blocks_in_use: 1,
             total_blocks: 8,
             block_size: 16,
             internal_waste_tokens: 7,
+            bytes_in_use: 1056,
+            total_bytes: 8 * 1056,
         };
         let m = a.merge(&b);
         assert_eq!(m.blocks_in_use, 5);
         assert_eq!(m.total_blocks, 16);
         assert_eq!(m.internal_waste_tokens, 9);
         assert_eq!(m.block_size, 16);
+        assert_eq!(m.bytes_in_use, 5 * 1056);
+        assert_eq!(m.total_bytes, 16 * 1056);
     }
 }

@@ -6,7 +6,7 @@
 //! ```text
 //! offset  size  field
 //! 0       2     magic           0x1A31 (LE) — stream resync guard
-//! 2       1     version         FORMAT_VERSION (currently 1)
+//! 2       1     version         FORMAT_VERSION (currently 2)
 //! 3       1     msg type tag    0..=8, one per WireMsg variant
 //! 4       4     payload length  u32 LE (bytes after the 12-byte header)
 //! 8       4     checksum        u32 LE, FNV-1a over version ‖ tag ‖ payload
@@ -57,7 +57,9 @@ use crate::workers::messages::WireMsg;
 /// First two bytes of every frame.
 pub const MAGIC: u16 = 0x1A31;
 /// Current frame-format version.
-pub const FORMAT_VERSION: u8 = 1;
+/// v2: `KvStats` payload gained `bytes_in_use`/`total_bytes` (the
+/// dtype-aware byte view of arena occupancy under `--kv-dtype`).
+pub const FORMAT_VERSION: u8 = 2;
 /// Fixed frame header size in bytes.
 pub const HEADER_LEN: usize = 12;
 
@@ -285,6 +287,8 @@ fn encode_payload(msg: &WireMsg, out: &mut Vec<u8>) {
             put_u64(out, stats.total_blocks as u64);
             put_u32(out, stats.block_size as u32);
             put_u64(out, stats.internal_waste_tokens as u64);
+            put_u64(out, stats.bytes_in_use as u64);
+            put_u64(out, stats.total_bytes as u64);
         }
         WireMsg::WorkerError { msg } => {
             put_u32(out, msg.len() as u32);
@@ -327,7 +331,7 @@ pub fn encoded_len(msg: &WireMsg) -> usize {
             WireMsg::AttnOut { out, .. } => 4 + tensor(out),
             WireMsg::Retire { .. } => 4,
             WireMsg::KvStatsReq => 0,
-            WireMsg::KvStats { .. } => 8 + 8 + 4 + 8,
+            WireMsg::KvStats { .. } => 8 + 8 + 4 + 8 + 8 + 8,
             WireMsg::WorkerError { msg } => 4 + msg.len(),
             WireMsg::Shutdown => 0,
         }
@@ -465,6 +469,8 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
                 total_blocks: r.u64("total_blocks")? as usize,
                 block_size: r.u32("block_size")? as usize,
                 internal_waste_tokens: r.u64("internal_waste")? as usize,
+                bytes_in_use: r.u64("bytes_in_use")? as usize,
+                total_bytes: r.u64("total_bytes")? as usize,
             };
             WireMsg::KvStats { stats }
         }
@@ -546,6 +552,8 @@ mod tests {
                 total_blocks: 9,
                 block_size: 16,
                 internal_waste_tokens: 5,
+                bytes_in_use: 3 * 1056,
+                total_bytes: 9 * 1056,
             },
         };
         assert_eq!(roundtrip(&s), s);

@@ -38,6 +38,35 @@ pub mod copies {
     }
 }
 
+/// Process-wide accounting of KV-arena **bytes read** by the native
+/// attention kernels (the decode path's bandwidth term, distinct from
+/// [`copies`] which counts bytes *moved*).
+///
+/// Charged per batch row per layer step with the row's unique working set
+/// (`PagedKvArena::kv_read_bytes`): every visited block's K and V regions
+/// across all shard heads, in the arena's *storage* dtype — so f16/int8
+/// block storage shows up directly as a 2×/≈4× drop. `cargo bench`
+/// resets/reads this around the decode hot loop to report
+/// `kv_read_bytes_per_iter` in `BENCH_decode.json`, where the reduction is
+/// machine-checked.
+pub mod kv_reads {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static READ_BYTES: AtomicU64 = AtomicU64::new(0);
+
+    pub fn add(bytes: usize) {
+        READ_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn total() -> u64 {
+        READ_BYTES.load(Ordering::Relaxed)
+    }
+
+    pub fn reset() {
+        READ_BYTES.store(0, Ordering::Relaxed);
+    }
+}
+
 /// Element type of a [`HostTensor`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dtype {

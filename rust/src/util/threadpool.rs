@@ -4,7 +4,12 @@
 //! messages over `std::sync::mpsc` channels; short parallel jobs with
 //! `'static` data use the [`ThreadPool`], and borrow-heavy fan-outs (the
 //! native attention kernel mapping over batch rows while borrowing the KV
-//! arena) use [`scoped_map`].
+//! arena) use [`scoped_map`] — or, on the decode hot loop, a persistent
+//! [`ScopedPool`] that keeps its worker threads alive across calls instead
+//! of spawning per invocation (the PR-3 follow-up: `scoped_map`'s per-call
+//! spawn cost is fine at tiny-model scale but measurable at big batch).
+//! [`Par`] is the call-site selector between the two; both produce
+//! bit-identical, input-ordered results for any thread count.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -146,6 +151,228 @@ where
         .collect()
 }
 
+// ---- persistent scoped pool ----------------------------------------------
+
+/// A lifetime-erased pointer to the per-call worker body. Only sent while
+/// [`ScopedPool::map`] blocks on its completion latch, which guarantees the
+/// pointee outlives every use (the standard scoped-executor contract).
+struct ScopedJob {
+    body: *const (dyn Fn() + Sync),
+}
+// SAFETY: the pointee is `Sync` (shared by reference across workers) and
+// `map` does not return until every dispatched job has signalled the latch,
+// so the erased borrow never dangles.
+unsafe impl Send for ScopedJob {}
+
+/// Countdown latch a `map` call waits on: (remaining jobs, wakeup).
+struct Latch {
+    left: Mutex<usize>,
+    cv: std::sync::Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { left: Mutex::new(n), cv: std::sync::Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut left = self.left.lock().expect("latch poisoned");
+        *left -= 1;
+        if *left == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut left = self.left.lock().expect("latch poisoned");
+        while *left > 0 {
+            left = self.cv.wait(left).expect("latch poisoned");
+        }
+    }
+}
+
+/// A **persistent** scoped executor: `threads` long-lived workers that run
+/// borrow-friendly parallel maps without any per-call `thread::spawn`.
+///
+/// Semantically identical to [`scoped_map`] — work is distributed by an
+/// atomic cursor, each index is computed exactly once by exactly one
+/// thread, results come back in input order, and because each item's
+/// arithmetic is sequential the output is **bit-identical for any thread
+/// count** (including the inline `threads <= 1` path). What changes is the
+/// lifecycle: the native attention backend creates one pool per worker at
+/// startup and reuses it every layer step, so the decode hot loop pays a
+/// channel send + latch wait instead of `threads` thread spawns per call.
+pub struct ScopedPool {
+    tx: Option<Sender<ScopedJob>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for ScopedPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ScopedPool").field("threads", &self.workers.len()).finish()
+    }
+}
+
+impl ScopedPool {
+    pub fn new(threads: usize) -> ScopedPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<ScopedJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("lamina-scoped-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("scoped pool lock poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            // SAFETY: see `ScopedJob` — the dispatching
+                            // `map` call is blocked on the latch until this
+                            // body returns, so the borrow is live. The
+                            // catch keeps the worker alive even if a body
+                            // unwinds (the body's own latch guard has
+                            // already signalled completion).
+                            Ok(job) => {
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| unsafe {
+                                        (&*job.body)()
+                                    }),
+                                );
+                            }
+                            Err(_) => break, // pool dropped: shutdown
+                        }
+                    })
+                    .expect("spawn scoped pool worker")
+            })
+            .collect();
+        ScopedPool { tx: Some(tx), workers }
+    }
+
+    /// Worker threads this pool keeps alive.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Parallel map over borrowed items on the persistent workers,
+    /// collecting results in input order. `f` may borrow local state (no
+    /// `'static` bound). Single-threaded pools and single items run inline.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        let n = items.len();
+        if self.workers.len() <= 1 || n <= 1 {
+            return items.iter().map(f).collect();
+        }
+        let jobs = self.workers.len().min(n);
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let panicked = std::sync::atomic::AtomicBool::new(false);
+        let latch = Latch::new(jobs);
+        {
+            let body = || {
+                // a panicking `f` must still release the latch, or `map`
+                // (and the caller's borrowed stack) would wait forever
+                struct Release<'a>(&'a Latch);
+                impl Drop for Release<'_> {
+                    fn drop(&mut self) {
+                        self.0.count_down();
+                    }
+                }
+                let _release = Release(&latch);
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        f(&items[i])
+                    }));
+                    match r {
+                        Ok(r) => {
+                            *slots[i].lock().expect("scoped pool slot poisoned") = Some(r)
+                        }
+                        Err(_) => {
+                            panicked.store(true, Ordering::Release);
+                            break;
+                        }
+                    }
+                }
+            };
+            let erased: &(dyn Fn() + Sync) = &body;
+            // erase the stack lifetime; sound because of the latch wait below
+            let erased: *const (dyn Fn() + Sync) = unsafe { std::mem::transmute(erased) };
+            let tx = self.tx.as_ref().expect("scoped pool shut down");
+            for _ in 0..jobs {
+                tx.send(ScopedJob { body: erased }).expect("scoped pool workers gone");
+            }
+            latch.wait();
+        }
+        assert!(
+            !panicked.load(Ordering::Acquire),
+            "scoped pool worker panicked"
+        );
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .expect("scoped pool slot poisoned")
+                    .expect("scoped pool left a slot unfilled")
+            })
+            .collect()
+    }
+}
+
+impl Drop for ScopedPool {
+    fn drop(&mut self) {
+        self.tx.take(); // closes the channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// How a kernel fans out over batch rows: per-call scoped threads (the
+/// PR-3 behaviour, kept for tests/benches that sweep thread counts) or a
+/// persistent [`ScopedPool`]. Both are deterministic and bit-identical for
+/// the same input.
+#[derive(Clone, Copy)]
+pub enum Par<'a> {
+    /// Spawn up to `n` scoped threads for this call ([`scoped_map`]).
+    Threads(usize),
+    /// Run on a long-lived pool (no per-call spawns).
+    Pool(&'a ScopedPool),
+}
+
+impl std::fmt::Debug for Par<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Par::Threads(n) => write!(f, "Par::Threads({n})"),
+            Par::Pool(p) => write!(f, "Par::Pool({})", p.threads()),
+        }
+    }
+}
+
+impl Par<'_> {
+    /// Parallel map over borrowed items, in input order (see the variants).
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        match self {
+            Par::Threads(n) => scoped_map(*n, items, f),
+            Par::Pool(p) => p.map(items, f),
+        }
+    }
+}
+
 /// A typed actor: a thread with an inbox, processing messages until the
 /// sender side closes (or an Exit message the handler interprets).
 pub struct Actor<M: Send + 'static> {
@@ -253,6 +480,51 @@ mod tests {
         // more threads than items is fine
         assert_eq!(scoped_map(16, &data[..2], |&x| x + 1), vec![1, 2]);
         assert!(scoped_map(3, &[] as &[u64], |&x| x).is_empty());
+    }
+
+    #[test]
+    fn scoped_pool_matches_scoped_map_bit_for_bit() {
+        let pool = ScopedPool::new(4);
+        let data: Vec<f64> = (0..257).map(|i| i as f64 * 0.731).collect();
+        let f = |&x: &f64| (x.sin() * 1e6).mul_add(0.125, x);
+        let spawned = scoped_map(4, &data, f);
+        let pooled = pool.map(&data, f);
+        assert_eq!(spawned, pooled, "pool must not change results or order");
+        // reuse across calls, varying sizes (incl. inline paths)
+        for n in [0usize, 1, 2, 31] {
+            assert_eq!(pool.map(&data[..n], f), scoped_map(3, &data[..n], f));
+        }
+        assert_eq!(Par::Pool(&pool).map(&data, f), Par::Threads(2).map(&data, f));
+    }
+
+    #[test]
+    fn scoped_pool_borrows_locals() {
+        let pool = ScopedPool::new(3);
+        let offset = 41u64; // borrowed, no 'static
+        let data: Vec<u64> = (0..64).collect();
+        let out = pool.map(&data, |&x| x + offset);
+        assert_eq!(out, (41..105).collect::<Vec<_>>());
+        assert_eq!(pool.threads(), 3);
+    }
+
+    #[test]
+    fn scoped_pool_single_thread_runs_inline() {
+        let pool = ScopedPool::new(1);
+        let data = [1u32, 2, 3];
+        assert_eq!(pool.map(&data, |&x| x * 2), vec![2, 4, 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped pool worker panicked")]
+    fn scoped_pool_propagates_worker_panics() {
+        let pool = ScopedPool::new(2);
+        let data: Vec<u32> = (0..16).collect();
+        let _ = pool.map(&data, |&x| {
+            if x == 7 {
+                panic!("boom");
+            }
+            x
+        });
     }
 
     #[test]

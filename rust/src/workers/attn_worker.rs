@@ -24,11 +24,18 @@
 //!
 //! KV residency scales with allocated blocks — the arena grows on demand
 //! and frees a request's blocks on [`WireMsg::Retire`] — and
-//! [`WireMsg::KvStatsReq`] exposes occupancy and internal waste for
-//! `ServeMetrics`.
+//! [`WireMsg::KvStatsReq`] exposes occupancy and internal waste (in blocks
+//! **and bytes**) for `ServeMetrics`.
+//!
+//! The arena's block storage dtype is a per-worker choice
+//! (`--kv-dtype f32|f16|int8`, [`AttnWorkerCfg::kv_dtype`]): appends
+//! quantize in place and the native backend reads the compact lanes
+//! directly, halving/quartering both per-step KV bytes read and resident
+//! bytes per cached token. The wire is unaffected — K/V arrive f32 and
+//! outputs leave f32 either way.
 
 use crate::kernels::{AttnBackend, AttnBackendKind, EngineBackend, NativeBackend, PartialState};
-use crate::kvcache::{ArenaCfg, PagedKvArena};
+use crate::kvcache::{ArenaCfg, KvDtype, PagedKvArena};
 use crate::net::Transport;
 use crate::runtime::host::HostTensor;
 use crate::runtime::manifest::Manifest;
@@ -55,6 +62,10 @@ pub struct AttnWorkerCfg {
     pub slots: usize,
     /// Token slots per KV block in the paged arena.
     pub kv_block_size: usize,
+    /// Storage dtype of the paged arena's block buffers (`--kv-dtype`):
+    /// f32 (bit-exact), f16 (2× fewer KV bytes), or int8 with per-block
+    /// scales (≈4× fewer). Worker-local; the wire stays f32.
+    pub kv_dtype: KvDtype,
     /// Which compute backend runs the attention math.
     pub backend: AttnBackendKind,
     /// Model geometry for the native backend. `None` falls back to the
@@ -130,6 +141,7 @@ fn worker_loop<T: Transport>(
         slots: cfg.slots,
         block_size: cfg.kv_block_size,
         initial_blocks: cfg.slots.max(1),
+        dtype: cfg.kv_dtype,
     });
 
     // state carried from StepQ to StepKv

@@ -13,7 +13,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::kernels::AttnBackendKind;
-use crate::kvcache::kv_blocks_needed;
+use crate::kvcache::{kv_blocks_needed, KvDtype};
 use crate::metrics::{KvCacheStats, ServeMetrics, StepBreakdown};
 use crate::net::{inproc, tcp, Transport, TransportKind};
 use crate::netsim::stack::{NetStackModel, LINE_RATE_400G};
@@ -47,6 +47,13 @@ pub struct PipelineOpts {
     pub use_prefill: bool,
     /// Token slots per KV block in the workers' paged arenas.
     pub kv_block_size: usize,
+    /// Storage dtype of the workers' KV block buffers (`--kv-dtype`):
+    /// f32 (default), f16, or int8 with per-block scales. A worker-local
+    /// storage decision — the wire and the leader stay f32 — that
+    /// halves/quarters per-step KV bytes read by the native backend and
+    /// resident bytes per cached token (so a fixed `--kv-budget` holds
+    /// proportionally more context; `ServeMetrics` reports the byte view).
+    pub kv_dtype: KvDtype,
     /// Which wire the leader↔worker links run over (`--transport`).
     pub transport: TransportKind,
     /// Which compute backend the attention workers run (`--attn-backend`):
@@ -75,6 +82,7 @@ impl PipelineOpts {
             max_waves: 2,
             use_prefill: true,
             kv_block_size: 16,
+            kv_dtype: KvDtype::F32,
             transport: TransportKind::Inproc,
             attn_backend: AttnBackendKind::Engine,
             kv_block_budget: None,
@@ -98,6 +106,7 @@ fn spawn_worker(opts: &PipelineOpts, geom: ModelGeom, idx: usize, respawn: bool)
         // distinct physical slots for every wave's requests
         slots: opts.slots * opts.max_waves,
         kv_block_size: opts.kv_block_size,
+        kv_dtype: opts.kv_dtype,
         backend: opts.attn_backend,
         // the leader always has a manifest; handing the geometry over keeps
         // native workers artifact-independent
@@ -573,6 +582,11 @@ impl DisaggPipeline {
     /// The attention backend the workers were started with.
     pub fn attn_backend(&self) -> AttnBackendKind {
         self.opts.attn_backend
+    }
+
+    /// The KV block storage dtype the workers' arenas run.
+    pub fn kv_dtype(&self) -> KvDtype {
+        self.opts.kv_dtype
     }
 
     #[allow(clippy::too_many_arguments)]

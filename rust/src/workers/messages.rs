@@ -12,6 +12,15 @@
 //! decides locally whether the tensors are gathered for a PJRT artifact or
 //! consumed in place by the block-table-native kernel.
 //!
+//! The wire is also **storage-dtype-agnostic**: K/V tensors always travel
+//! f32 regardless of the workers' `--kv-dtype`. Quantization (f16/int8
+//! block storage) is a worker-local decision applied at arena *append* —
+//! keeping the protocol stable lets workers with different storage dtypes
+//! coexist in one pool, keeps `attn_combine`'s new-token math exact, and
+//! avoids coupling the codec to storage formats that only exist on one
+//! side of the link. Only the `KvStats` snapshot reflects the dtype, via
+//! its `bytes_in_use`/`total_bytes` fields.
+//!
 //! * Over the **in-process** link (`--transport inproc`,
 //!   `net::inproc` → `netsim::transport`), tensor payloads are `Arc`-backed
 //!   [`HostTensor`] views — a send moves a pointer on the host, mirroring
@@ -105,7 +114,7 @@ impl WireMsg {
             WireMsg::AttnOut { out, .. } => out.byte_size(),
             WireMsg::Retire { .. } => 4,
             WireMsg::KvStatsReq => 0,
-            WireMsg::KvStats { .. } => 32,
+            WireMsg::KvStats { .. } => 48,
             WireMsg::WorkerError { msg } => msg.len(),
             WireMsg::Shutdown => 0,
         }
@@ -131,7 +140,7 @@ mod tests {
         assert_eq!(WireMsg::Shutdown.wire_bytes(), 0);
         assert_eq!(WireMsg::Retire { slot: 3 }.wire_bytes(), 4);
         assert_eq!(WireMsg::KvStatsReq.wire_bytes(), 0);
-        assert_eq!(WireMsg::KvStats { stats: KvCacheStats::default() }.wire_bytes(), 32);
+        assert_eq!(WireMsg::KvStats { stats: KvCacheStats::default() }.wire_bytes(), 48);
     }
 
     #[test]

@@ -19,11 +19,14 @@
 //! Each worker keeps its shard in a [`crate::kvcache::PagedKvArena`] — per
 //! layer, one contiguous `[total_blocks, KH_shard, block_size, hd]` K and V
 //! buffer carved into fixed-size blocks, mapped per request slot by a
-//! `BlockTable`. Resident memory scales with **allocated blocks** (live
-//! context), not `slots × max_waves × max_seq`: the arena grows on demand
-//! and the leader frees a request's blocks with `WireMsg::Retire` the
-//! moment it completes. `WireMsg::KvStatsReq` feeds occupancy +
-//! internal-waste accounting into `ServeMetrics` every serve round.
+//! `BlockTable`, stored in the worker's `--kv-dtype` (f32, f16, or int8
+//! with per-block scales — appends quantize in place; the wire stays f32).
+//! Resident memory scales with **allocated blocks** (live context), not
+//! `slots × max_waves × max_seq`: the arena grows on demand and the leader
+//! frees a request's blocks with `WireMsg::Retire` the moment it
+//! completes. `WireMsg::KvStatsReq` feeds occupancy + internal-waste
+//! accounting — in blocks and dtype-aware **bytes** — into `ServeMetrics`
+//! every serve round.
 //!
 //! # Compute: pluggable attention backends
 //!
@@ -33,10 +36,13 @@
 //! * `native` — the block-table-native kernel (`kernels::paged_attn`)
 //!   consumes the arena's block tables directly and reads KV **in place**
 //!   with an online-softmax recurrence: no gather, no scratch K/V, zero
-//!   per-step host copies. Needs no PJRT artifacts on the worker.
-//! * `engine` — the PJRT path: the arena assembles contiguous
-//!   `[bucket, KH_s, seq_bucket, hd]` inputs with block-granular
-//!   `copy_from_slice` gathers (the staging copy, charged to
+//!   per-step host copies — and with quantized storage it reads the
+//!   compact f16/int8 lanes natively (dequantize-in-register), cutting
+//!   per-step KV bytes read 2×/≈4×. Needs no PJRT artifacts on the
+//!   worker; batch fan-out runs on a persistent per-worker thread pool.
+//! * `engine` — the PJRT path: the arena assembles contiguous f32
+//!   `[bucket, KH_s, seq_bucket, hd]` inputs with block-granular gathers
+//!   that widen quantized storage on read (the staging copy, charged to
 //!   `runtime::host::copies`) and executes the AOT Pallas artifacts.
 //!
 //! # Transport: zero-copy wire path

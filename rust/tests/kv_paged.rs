@@ -4,7 +4,7 @@
 //! the live pipeline's golden tests rely on, checked here without PJRT
 //! artifacts. Uses the in-repo PRNG (no proptest offline).
 
-use lamina::kvcache::{kv_blocks_needed, ArenaCfg, PagedKvArena, PAD_SLOT};
+use lamina::kvcache::{kv_blocks_needed, ArenaCfg, KvDtype, PagedKvArena, PAD_SLOT};
 use lamina::runtime::host::HostTensor;
 use lamina::util::prng::Rng;
 
@@ -130,6 +130,7 @@ fn run_case(seed: u64, block_size: usize, ops: usize) {
         slots: SLOTS,
         block_size,
         initial_blocks: 2, // force on-demand growth
+        dtype: KvDtype::F32,
     });
     let mut dense = DenseRef::new();
     // the leader's view of each slot's cached length
@@ -227,6 +228,7 @@ fn paged_memory_scales_with_live_context_not_capacity() {
         slots: BIG_SLOTS,
         block_size: 16,
         initial_blocks: BIG_SLOTS,
+        dtype: KvDtype::F32,
     });
     let slots: Vec<u32> = (0..BIG_SLOTS as u32).collect();
     let k = HostTensor::zeros_f32(vec![BIG_SLOTS, KHS, HD]);
@@ -252,6 +254,33 @@ fn paged_memory_scales_with_live_context_not_capacity() {
 }
 
 #[test]
+fn quantized_storage_multiplies_capacity_at_fixed_bytes() {
+    // same geometry, three dtypes: resident bytes per block drop 2×/≈4×,
+    // which is exactly the capacity gain a fixed --kv-budget (in bytes)
+    // sees under quantized storage
+    let mk = |dtype: KvDtype| {
+        PagedKvArena::new(ArenaCfg {
+            layers: 2,
+            kv_heads: KHS,
+            head_dim: 64,
+            max_seq: MAX_SEQ,
+            slots: 1,
+            block_size: 16,
+            initial_blocks: 4,
+            dtype,
+        })
+    };
+    let f32b = mk(KvDtype::F32).resident_bytes() as f64;
+    let f16b = mk(KvDtype::F16).resident_bytes() as f64;
+    let i8b = mk(KvDtype::Int8).resident_bytes() as f64;
+    assert!((f32b / f16b - 2.0).abs() < 1e-9, "f16 must halve resident bytes");
+    assert!(f32b / i8b >= 3.8, "int8 must ~quarter resident bytes (got {:.2}×)", f32b / i8b);
+    // and the stats snapshot carries the same byte view
+    let a = mk(KvDtype::Int8);
+    assert_eq!(a.stats().total_bytes, a.resident_bytes());
+}
+
+#[test]
 fn gather_truncates_consistently_when_bucket_smaller_than_context() {
     // seq_bucket below the cached length: both caches expose exactly the
     // first seq_bucket tokens
@@ -263,6 +292,7 @@ fn gather_truncates_consistently_when_bucket_smaller_than_context() {
         slots: 1,
         block_size: 4,
         initial_blocks: 1,
+        dtype: KvDtype::F32,
     });
     let mut dense = DenseRef::new();
     let mut rng = Rng::new(0x7b1234);

@@ -1,0 +1,255 @@
+//! KV block quantization round-trips (ISSUE 4 satellite): property tests
+//! for the f32↔f16 and f32↔int8-with-scale encode/decode pairs, plus a
+//! full arena append/gather/retire/reuse lifecycle at each storage dtype.
+//!
+//! Bounds asserted here:
+//! * f16 round-trip: `|x − rt(x)| ≤ 2⁻¹¹·|x|` for normals in the f16
+//!   range; exact for f16-representable values; NaN/±0/±inf semantics;
+//!   correct subnormal rounding and overflow/underflow behaviour.
+//! * int8 round-trip at a region scale `s = maxabs/127`: fresh writes
+//!   within `s/2`; each in-block requantization adds ≤ `s_new/2`, so the
+//!   worst case over a full chain of raises is `(block_size/2)·maxabs/127`
+//!   (see `kvcache::quant`) — the lifecycle test runs at block_size 4 and
+//!   asserts the end-to-end gather stays within `2·maxabs/127` (+25%
+//!   headroom for f32 rounding).
+
+use lamina::kvcache::quant::{
+    f16_bits_to_f32, f32_to_f16_bits, i8_decode, i8_encode, i8_scale_for,
+};
+use lamina::kvcache::{ArenaCfg, KvDtype, PagedKvArena};
+use lamina::runtime::host::HostTensor;
+use lamina::util::prng::Rng;
+
+const KHS: usize = 2;
+const HD: usize = 8;
+const MAX_SEQ: usize = 64;
+const SLOTS: usize = 4;
+const LEN_CAP: usize = 48;
+
+fn rt16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[test]
+fn prop_f16_roundtrip_error_bound_across_magnitudes() {
+    let mut rng = Rng::new(0xf16f16);
+    for _ in 0..20_000 {
+        // log-uniform magnitudes across the f16 normal range, both signs
+        let exp = rng.f64() * 28.0 - 13.0; // 2^-13 .. 2^15
+        let x = ((rng.f64() * 2.0 - 1.0) as f32) * (2.0f64.powf(exp) as f32);
+        let y = rt16(x);
+        let ax = x.abs();
+        if ax >= 6.104e-5 && ax <= 65504.0 {
+            assert!(
+                (y - x).abs() <= ax * 4.8829e-4,
+                "normal-range x={x} rt={y}"
+            );
+        } else if ax < 6.104e-5 {
+            // subnormal range: absolute error ≤ half the subnormal step
+            assert!((y - x).abs() <= 2.981e-8, "subnormal x={x} rt={y}");
+        }
+        // round-trip is idempotent: rt(rt(x)) == rt(x) bitwise
+        assert_eq!(rt16(y).to_bits(), y.to_bits(), "x={x}");
+    }
+}
+
+#[test]
+fn prop_f16_specials_and_monotonicity() {
+    // specials
+    assert!(rt16(f32::NAN).is_nan());
+    assert_eq!(rt16(f32::INFINITY), f32::INFINITY);
+    assert_eq!(rt16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    assert_eq!(rt16(0.0).to_bits(), 0.0f32.to_bits());
+    assert_eq!(rt16(-0.0).to_bits(), (-0.0f32).to_bits());
+    // conversion is monotone over a dense sweep (rounding must never
+    // reorder values — a requirement for score ordering under f16 KV)
+    let mut rng = Rng::new(0x5160);
+    let mut vals: Vec<f32> = (0..4096).map(|_| ((rng.f64() * 2.0 - 1.0) * 100.0) as f32).collect();
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut prev = f32::NEG_INFINITY;
+    for &x in &vals {
+        let y = rt16(x);
+        assert!(y >= prev, "monotonicity broken at {x}: {y} < {prev}");
+        prev = y;
+    }
+}
+
+#[test]
+fn prop_int8_roundtrip_full_range_scales() {
+    let mut rng = Rng::new(0x18a7e);
+    for _ in 0..5_000 {
+        // magnitudes from 1e-30 to 1e30: scales must keep working
+        let exp = rng.f64() * 200.0 - 100.0;
+        let maxabs = (10.0f64.powf(exp * 0.3) as f32).max(1e-30);
+        let scale = i8_scale_for(maxabs);
+        assert!(scale > 0.0 && scale.is_finite(), "scale for {maxabs}");
+        for _ in 0..8 {
+            let x = ((rng.f64() * 2.0 - 1.0) as f32) * maxabs;
+            let c = i8_encode(x, scale);
+            let y = i8_decode(c, scale);
+            assert!(
+                (y - x).abs() <= scale * 0.5 + maxabs * 1e-6,
+                "maxabs={maxabs} x={x} y={y}"
+            );
+        }
+        // the extremes use the full code range
+        assert_eq!(i8_encode(maxabs, scale), 127);
+        assert_eq!(i8_encode(-maxabs, scale), -127);
+    }
+}
+
+fn mk(dtype: KvDtype, block_size: usize) -> PagedKvArena {
+    PagedKvArena::new(ArenaCfg {
+        layers: 2,
+        kv_heads: KHS,
+        head_dim: HD,
+        max_seq: MAX_SEQ,
+        slots: SLOTS,
+        block_size,
+        initial_blocks: 2,
+        dtype,
+    })
+}
+
+fn rand_kv(rng: &mut Rng, rows: usize, mag: f32) -> HostTensor {
+    let data: Vec<f32> = (0..rows * KHS * HD)
+        .map(|_| ((rng.f64() * 2.0 - 1.0) as f32) * mag)
+        .collect();
+    HostTensor::f32(vec![rows, KHS, HD], data)
+}
+
+/// Arena lifecycle at one dtype: random appends (decode + chunks),
+/// retires, and slot reuse; after every mutation a gather must match the
+/// f32 ground-truth arena within the dtype's per-element bound.
+fn run_lifecycle(seed: u64, dtype: KvDtype, block_size: usize, per_elem_bound: impl Fn(f32) -> f32) {
+    let mut rng = Rng::new(seed);
+    let mut gold = mk(KvDtype::F32, block_size);
+    let mut quant = mk(dtype, block_size);
+    let mut lens = vec![0usize; SLOTS];
+    // per-slot magnitude so int8 bounds can reference the stream's maxabs
+    let mag = 2.5f32;
+
+    for op in 0..80 {
+        match rng.usize(0, 10) {
+            0..=4 => {
+                // decode step on a random subset
+                let slots: Vec<u32> = (0..SLOTS as u32)
+                    .filter(|_| rng.chance(0.7))
+                    .collect();
+                if slots.is_empty() || slots.iter().any(|&s| lens[s as usize] + 1 > LEN_CAP) {
+                    continue;
+                }
+                let step_lens: Vec<i32> =
+                    slots.iter().map(|&s| lens[s as usize] as i32).collect();
+                for layer in 0..2 {
+                    let k = rand_kv(&mut rng, slots.len(), mag);
+                    let v = rand_kv(&mut rng, slots.len(), mag);
+                    gold.append_step(&slots, layer, &k, &v, &step_lens);
+                    quant.append_step(&slots, layer, &k, &v, &step_lens);
+                }
+                for &s in &slots {
+                    lens[s as usize] += 1;
+                }
+            }
+            5..=6 => {
+                // prefill chunk
+                let slot = rng.usize(0, SLOTS) as u32;
+                let cached = if rng.chance(0.5) { 0 } else { lens[slot as usize] };
+                let t = rng.usize(1, 6);
+                if cached + t > LEN_CAP {
+                    continue;
+                }
+                for layer in 0..2 {
+                    let k = rand_kv(&mut rng, t, mag);
+                    let v = rand_kv(&mut rng, t, mag);
+                    gold.append_chunk(slot, layer, &k, &v, cached, t);
+                    quant.append_chunk(slot, layer, &k, &v, cached, t);
+                }
+                lens[slot as usize] = cached + t;
+            }
+            7 => {
+                let slot = rng.usize(0, SLOTS) as u32;
+                gold.retire(slot);
+                quant.retire(slot);
+                lens[slot as usize] = 0;
+            }
+            _ => {
+                // slot reuse without retire
+                let slot = rng.usize(0, SLOTS);
+                lens[slot] = 0;
+            }
+        }
+
+        // gather both and compare element-wise within the storage bound
+        let slots: Vec<u32> = (0..SLOTS as u32).collect();
+        let layer = rng.usize(0, 2);
+        let (gk, gv) = gold.gather(&slots, layer, SLOTS, MAX_SEQ);
+        let (qk, qv) = quant.gather(&slots, layer, SLOTS, MAX_SEQ);
+        for (which, g, q) in [("K", &gk, &qk), ("V", &gv, &qv)] {
+            for (i, (a, b)) in g.as_f32().iter().zip(q.as_f32()).enumerate() {
+                let bound = per_elem_bound(*a);
+                assert!(
+                    (a - b).abs() <= bound,
+                    "dtype={} op={op} {which}[{i}]: gold {a} vs quant {b} (> {bound})",
+                    dtype.name()
+                );
+                // zeros (pads, retired, beyond-len) must be exactly zero in
+                // both arenas — quantization must never leak stale bytes
+                if *a == 0.0 {
+                    assert_eq!(*b, 0.0, "dtype={} op={op} {which}[{i}] stale", dtype.name());
+                }
+            }
+        }
+    }
+    // full retire drains both arenas identically
+    for s in 0..SLOTS as u32 {
+        gold.retire(s);
+        quant.retire(s);
+    }
+    assert_eq!(quant.stats().blocks_in_use, 0);
+    assert_eq!(quant.stats().bytes_in_use, 0);
+}
+
+#[test]
+fn prop_arena_lifecycle_f32_is_bit_exact() {
+    for rep in 0..2 {
+        run_lifecycle(0x1f32 + rep * 7919, KvDtype::F32, 4, |_| 0.0);
+    }
+}
+
+#[test]
+fn prop_arena_lifecycle_f16_within_relative_bound() {
+    for rep in 0..2 {
+        // RNE: ≤ 2⁻¹¹ relative per element
+        run_lifecycle(0x1f16 + rep * 7919, KvDtype::F16, 4, |x| x.abs() * 4.8829e-4 + 1e-9);
+    }
+}
+
+#[test]
+fn prop_arena_lifecycle_int8_within_scale_bound() {
+    for rep in 0..2 {
+        // per-element worst case ≤ 2·maxabs/127 with maxabs ≤ 2.5
+        // (block_size-bounded requant chain, see module docs); 25%
+        // headroom over the exactly-tight bound for f32 rounding
+        run_lifecycle(0x11e8 + rep * 7919, KvDtype::Int8, 4, |_| 2.5 * 2.5 / 127.0);
+    }
+}
+
+#[test]
+fn int8_gather_is_idempotent_once_scales_settle() {
+    // two gathers without interleaved appends must be bit-identical (the
+    // decode path gathers every layer step at the engine backend)
+    let mut rng = Rng::new(0x1de);
+    let mut a = mk(KvDtype::Int8, 4);
+    for t in 0..10 {
+        let k = rand_kv(&mut rng, SLOTS, 1.0);
+        a.append_step(&[0, 1, 2, 3], 0, &k, &k, &[t, t, t, t]);
+    }
+    let (k1, v1) = a.gather(&[0, 1, 2, 3], 0, SLOTS, 32);
+    let (s1k, s1v) = (k1.as_f32().to_vec(), v1.as_f32().to_vec());
+    drop(k1);
+    drop(v1);
+    let (k2, v2) = a.gather(&[0, 1, 2, 3], 0, SLOTS, 32);
+    assert_eq!(&s1k[..], k2.as_f32());
+    assert_eq!(&s1v[..], v2.as_f32());
+}

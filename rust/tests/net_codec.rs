@@ -61,6 +61,8 @@ fn rand_msg(rng: &mut Rng) -> WireMsg {
                 total_blocks: rng.usize(0, 1 << 30),
                 block_size: rng.usize(0, 1 << 16),
                 internal_waste_tokens: rng.usize(0, 1 << 30),
+                bytes_in_use: rng.usize(0, 1 << 40),
+                total_bytes: rng.usize(0, 1 << 40),
             },
         },
         7 => {

@@ -21,6 +21,7 @@ use lamina::net::{inproc, tcp, MsgClass, Transport, TransportKind, WireStats};
 use lamina::netsim::stack::{FHBN, LINE_RATE_400G};
 use lamina::runtime::host::HostTensor;
 use lamina::trace::Request;
+use lamina::kvcache::KvDtype;
 use lamina::workers::{
     run_attn_worker, AttnWorkerCfg, DisaggPipeline, ModelGeom, PipelineOpts, WireMsg, PAD_SLOT,
 };
@@ -53,6 +54,8 @@ fn scripted_worker<T: Transport>(link: T) {
                     total_blocks: 8,
                     block_size: 16,
                     internal_waste_tokens: 1,
+                    bytes_in_use: 3 * 4096,
+                    total_bytes: 8 * 4096,
                 };
                 link.send(WireMsg::KvStats { stats }).expect("worker send");
             }
@@ -202,7 +205,7 @@ fn session_bit_identical_across_transports() {
 // bit-preserving.
 // ---------------------------------------------------------------------------
 
-fn native_worker_cfg() -> AttnWorkerCfg {
+fn native_worker_cfg(kv_dtype: KvDtype) -> AttnWorkerCfg {
     AttnWorkerCfg {
         // deliberately nonexistent: the native backend must not need it
         artifacts_dir: PathBuf::from("artifacts-does-not-exist"),
@@ -210,6 +213,7 @@ fn native_worker_cfg() -> AttnWorkerCfg {
         n_shards: 1,
         slots: 4,
         kv_block_size: 4,
+        kv_dtype,
         backend: AttnBackendKind::Native,
         geom: Some(ModelGeom { layers: 2, kv_heads: 4, head_dim: 16, max_seq: 64 }),
     }
@@ -218,8 +222,8 @@ fn native_worker_cfg() -> AttnWorkerCfg {
 /// Drive a full session against a real native-backend worker: chunked
 /// prefill on slot 0, decode steps (both plain and overlap mode) over a
 /// padded wave, and the KV control plane. Returns every reply in order.
-fn run_native_session<T: Transport + 'static>(leader: T, worker: T) -> Vec<WireMsg> {
-    let cfg = native_worker_cfg();
+fn run_native_session<T: Transport + 'static>(leader: T, worker: T, dtype: KvDtype) -> Vec<WireMsg> {
+    let cfg = native_worker_cfg(dtype);
     let h = std::thread::spawn(move || run_attn_worker(cfg, worker));
     let mut replies = Vec::new();
 
@@ -293,8 +297,8 @@ fn native_backend_full_session_artifact_free_over_both_transports() {
     let (inproc_leader, inproc_worker) = inproc::pair(&FHBN, LINE_RATE_400G, 0.0);
     let (tcp_leader, tcp_worker) = tcp::pair().expect("loopback pair");
 
-    let replies_inproc = run_native_session(inproc_leader, inproc_worker);
-    let replies_tcp = run_native_session(tcp_leader, tcp_worker);
+    let replies_inproc = run_native_session(inproc_leader, inproc_worker, KvDtype::F32);
+    let replies_tcp = run_native_session(tcp_leader, tcp_worker, KvDtype::F32);
 
     assert_eq!(replies_inproc.len(), replies_tcp.len());
     for (i, (a, b)) in replies_inproc.iter().zip(&replies_tcp).enumerate() {
@@ -318,6 +322,61 @@ fn native_backend_full_session_artifact_free_over_both_transports() {
     };
     assert_eq!(before.blocks_in_use, 3 + 1 + 1);
     assert_eq!(after.blocks_in_use, 2);
+    // the byte view agrees with the block view: 2 layers × (2·KH_s·region)
+    // per block at f32 (4·16·4 B regions, KH_s = 4)
+    let block_bytes = 2 * 2 * 4 * (4 * 16 * 4);
+    assert_eq!(before.bytes_in_use, 5 * block_bytes);
+    assert_eq!(after.bytes_in_use, 2 * block_bytes);
+}
+
+/// The same artifact-free session on quantized workers: the wire protocol
+/// is unchanged (all tensors still f32), both transports stay
+/// bit-identical to each other, outputs stay close to the f32-storage
+/// session, and the KvStats byte view shrinks 2×/≈4× at the same block
+/// occupancy.
+#[test]
+fn native_backend_quantized_session_over_both_transports() {
+    let (l32, w32) = inproc::pair(&FHBN, LINE_RATE_400G, 0.0);
+    let base = run_native_session(l32, w32, KvDtype::F32);
+    let WireMsg::KvStats { stats: base_before } = &base[base.len() - 2] else {
+        panic!("expected KvStats");
+    };
+
+    // int8 at this geometry: 4·16 B codes + 4 B scale per region vs 256 B
+    // f32 → 3.76× (the scale overhead is proportionally larger at small
+    // blocks; the big-block bench rows clear ≥3.9×)
+    for (dtype, min_cut) in [(KvDtype::F16, 2.0), (KvDtype::Int8, 3.7)] {
+        let (inproc_leader, inproc_worker) = inproc::pair(&FHBN, LINE_RATE_400G, 0.0);
+        let (tcp_leader, tcp_worker) = tcp::pair().expect("loopback pair");
+        let a = run_native_session(inproc_leader, inproc_worker, dtype);
+        let b = run_native_session(tcp_leader, tcp_worker, dtype);
+        assert_eq!(a, b, "kv={} replies diverged between transports", dtype.name());
+
+        // every attention reply is a real finite f32 tensor of the same
+        // shape as the f32-storage session (numeric error bounds are
+        // asserted with controlled inputs in tests/kernel_native.rs; this
+        // session's large synthetic magnitudes only validate the protocol)
+        for (i, (qa, qb)) in a.iter().zip(&base).enumerate() {
+            if let (WireMsg::AttnOut { out: oa, .. }, WireMsg::AttnOut { out: ob, .. }) = (qa, qb) {
+                assert_eq!(oa.shape(), ob.shape(), "kv={} reply {i} shape", dtype.name());
+                assert!(
+                    oa.as_f32().iter().all(|x| x.is_finite()),
+                    "kv={} reply {i} must stay finite",
+                    dtype.name()
+                );
+            }
+        }
+
+        // same blocks, fewer bytes
+        let WireMsg::KvStats { stats } = &a[a.len() - 2] else { panic!("expected KvStats") };
+        assert_eq!(stats.blocks_in_use, base_before.blocks_in_use);
+        let cut = base_before.bytes_in_use as f64 / stats.bytes_in_use as f64;
+        assert!(
+            cut >= min_cut,
+            "kv={} bytes_in_use cut {cut:.2}× < {min_cut}×",
+            dtype.name()
+        );
+    }
 }
 
 // ---------------------------------------------------------------------------
