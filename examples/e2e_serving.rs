@@ -40,7 +40,7 @@ struct RunResult {
 }
 
 fn run(label: &str, opts: PipelineOpts, reqs: &[Request], waves: usize) -> anyhow::Result<RunResult> {
-    let pipe = DisaggPipeline::start(opts)?;
+    let mut pipe = DisaggPipeline::start(opts)?;
     let mut m = pipe.serve(reqs, waves)?;
     let r = RunResult {
         label: label.to_string(),

@@ -9,7 +9,7 @@ use lamina::workers::{DisaggPipeline, PipelineOpts};
 fn main() -> anyhow::Result<()> {
     let artifacts = std::env::var("LAMINA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     println!("loading artifacts from {artifacts}/ ...");
-    let pipe = DisaggPipeline::start(PipelineOpts::new(&artifacts))?;
+    let mut pipe = DisaggPipeline::start(PipelineOpts::new(&artifacts))?;
     let cfg = pipe.config().clone();
     println!(
         "model '{}': {} layers, d={}, {} heads ({} kv), {} params",

@@ -19,6 +19,9 @@
 //!     per-step bytes-read reduction) — plus the unrolled-vs-naive inner
 //!     loop delta and the e2e decode step on both attention backends
 //!     (needs artifacts)
+//!   * serving-engine benches  → `e2e/continuous-batching` vs the legacy
+//!     wave driver on a mixed-length trace (tokens/s; asserts the
+//!     step-driven scheduler is no slower — needs artifacts)
 //!
 //! Env: LAMINA_BENCH_QUICK=1 shrinks budgets (CI smoke).
 //!
@@ -42,7 +45,7 @@ use lamina::opgraph::schedule::emit_programs;
 use lamina::opgraph::slicer::split_at_attention;
 use lamina::runtime::engine::Engine;
 use lamina::runtime::host::{copies, kv_reads, HostTensor};
-use lamina::trace::{fixed_length, synthesize, AZURE_CONV};
+use lamina::trace::{fixed_length, synthesize, Request, AZURE_CONV};
 use lamina::util::bench::{black_box, Bench};
 use lamina::util::json::Json;
 use lamina::workers::{DisaggPipeline, PipelineOpts, WireMsg};
@@ -757,7 +760,7 @@ fn bench_runtime(b: &mut Bench) {
 
 fn bench_pipeline(b: &mut Bench, rows: &mut Vec<Json>) {
     for (label, overlap) in [("overlap", true), ("sequential", false)] {
-        let pipe = DisaggPipeline::start(PipelineOpts {
+        let mut pipe = DisaggPipeline::start(PipelineOpts {
             overlap,
             ..PipelineOpts::new(artifacts_dir())
         })
@@ -791,7 +794,7 @@ fn bench_pipeline(b: &mut Bench, rows: &mut Vec<Json>) {
         ("native backend kv=f16", AttnBackendKind::Native, KvDtype::F16),
         ("native backend kv=int8", AttnBackendKind::Native, KvDtype::Int8),
     ] {
-        let pipe = DisaggPipeline::start(PipelineOpts {
+        let mut pipe = DisaggPipeline::start(PipelineOpts {
             attn_workers: 1,
             attn_backend: backend,
             kv_dtype,
@@ -820,6 +823,73 @@ fn bench_pipeline(b: &mut Bench, rows: &mut Vec<Json>) {
             );
         }
         pipe.shutdown();
+    }
+
+    // continuous-batching engine vs the legacy wave driver on a mixed-
+    // length trace (ISSUE 5 acceptance row): same requests, same FIFO
+    // admission order, bit-identical per-request tokens — the step-driven
+    // scheduler repacks retiring slots at iteration granularity while the
+    // wave driver keeps the per-wave group structure, so half-empty waves
+    // step alone. tokens/s is decode-phase tokens over end-to-end wall
+    // clock; each driver runs twice and the faster (warm) run is scored.
+    {
+        let reqs: Vec<Request> = (0..12)
+            .map(|i| Request {
+                id: i,
+                prompt_tokens: 2 + (i as usize % 5) * 3,
+                gen_tokens: 2 + (i as usize % 7) * 2,
+            })
+            .collect();
+        let mut tps = Vec::new();
+        for (name, wave_mode) in [
+            ("e2e/continuous-batching serve 12req mixed-len", false),
+            ("e2e/serve wave-driver 12req mixed-len", true),
+        ] {
+            let mut pipe = DisaggPipeline::start(PipelineOpts {
+                slots: 4, // small groups → real admission + repacking churn
+                ..PipelineOpts::new(artifacts_dir())
+            })
+            .expect("pipeline");
+            pipe.decode(&[vec![1, 2, 3]], 2).unwrap(); // warm the buckets
+            let mut best_ns = f64::INFINITY;
+            let mut mean_ns = 0.0;
+            let mut tokens = 0u64;
+            const RUNS: usize = 2;
+            for _ in 0..RUNS {
+                let t0 = std::time::Instant::now();
+                let m = if wave_mode {
+                    pipe.serve_waves(&reqs, 2).expect("serve")
+                } else {
+                    pipe.serve(&reqs, 2).expect("serve")
+                };
+                let ns = t0.elapsed().as_secs_f64() * 1e9;
+                assert_eq!(m.requests_completed, reqs.len() as u64);
+                tokens = m.tokens_generated;
+                best_ns = best_ns.min(ns);
+                mean_ns += ns / RUNS as f64;
+            }
+            pipe.shutdown();
+            rows.push(row_step(name, (mean_ns, best_ns), 0, 0, 0, tokens as usize));
+            tps.push(tokens as f64 / (best_ns * 1e-9));
+            println!(
+                "{name:<44} {best_ns:>12.0} ns/run (best)  {tokens} decode tokens  \
+                 {:.1} tok/s",
+                tokens as f64 / (best_ns * 1e-9)
+            );
+        }
+        eprintln!(
+            "e2e/continuous-batching vs wave driver: {:.1} vs {:.1} tok/s ({:.2}×)",
+            tps[0],
+            tps[1],
+            tps[0] / tps[1].max(1e-9)
+        );
+        assert!(
+            tps[0] >= tps[1] * 0.98,
+            "continuous batching must not serve slower than the wave driver \
+             ({:.1} vs {:.1} tok/s)",
+            tps[0],
+            tps[1]
+        );
     }
 
     // JSON substrate on a real manifest (startup path)

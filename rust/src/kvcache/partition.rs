@@ -83,11 +83,10 @@ pub fn kv_blocks_needed(seq_lens: &[usize], block_size: usize) -> usize {
 /// size (`PagedKvArena::block_bytes × layers` for a full worker footprint).
 /// With quantized block storage (`--kv-dtype f16|int8`) the byte size of a
 /// block shrinks 2×/≈4×, so a fixed byte budget admits proportionally more
-/// context. NOTE: admission control currently budgets *blocks*
-/// (`kv_blocks_needed` in the leader) and the `ServeMetrics` byte view
-/// comes from `PagedKvArena::stats()` — this helper is the building block
-/// for the byte-denominated `--kv-budget` filed in the ROADMAP, not yet
-/// wired into the serve path.
+/// context. This is the unit the scheduler's byte-denominated `--kv-budget`
+/// reserves in (`scheduler::KvBudget::Bytes`; the per-worker per-block
+/// byte size comes from the pool's `KvStats` snapshot) — blocks remain
+/// available as the legacy `--kv-budget-blocks` spelling.
 pub fn kv_bytes_needed(seq_lens: &[usize], block_size: usize, bytes_per_block: usize) -> usize {
     kv_blocks_needed(seq_lens, block_size) * bytes_per_block
 }

@@ -27,6 +27,7 @@ pub mod net;
 pub mod netsim;
 pub mod opgraph;
 pub mod runtime;
+pub mod scheduler;
 pub mod trace;
 pub mod util;
 pub mod workers;

@@ -13,6 +13,7 @@
 use lamina::figures;
 use lamina::kernels::AttnBackendKind;
 use lamina::net::TransportKind;
+use lamina::scheduler::AdmissionKind;
 use lamina::netsim::stack::stack_by_name;
 use lamina::trace::{synthesize, trace_by_name, Request};
 use lamina::util::cli::Args;
@@ -36,7 +37,9 @@ real pipeline (tiny model, PJRT end-to-end):
   serve   [--trace azure-conv] [--requests N] [--waves N]
           [--stack fhbn|nccl|nccl-nogdr|gloo] [--time-scale X]
           [--transport inproc|tcp] [--attn-backend engine|native]
-          [--kv-budget BLOCKS] [--kv-dtype f32|f16|int8]
+          [--admission fifo|sjf] [--kv-budget BYTES]
+          [--kv-budget-blocks N] [--kv-dtype f32|f16|int8]
+          [--wave-driver]
 
 flags:
   --requests N     trace subsample size for simulations (default 1000)
@@ -50,19 +53,32 @@ flags:
                    gathered K/V) or native (pure-Rust block-table kernel
                    reading the paged arena in place — zero per-step KV
                    copies on the workers)  (default engine)
-  --kv-budget N    per-worker KV block budget; admission defers requests
-                   that would overflow it (default: unlimited)
+  --admission P    scheduler admission order: fifo (arrival order) or sjf
+                   (shortest job first among deferred admissions, with
+                   FIFO aging so nothing starves)  (default fifo)
+  --kv-budget N    per-worker KV budget in BYTES; admission defers
+                   requests that would overflow it (default: unlimited).
+                   Bytes budget mixed --kv-dtype pools correctly
+  --kv-budget-blocks N  the same budget in blocks (legacy spelling);
+                   --kv-budget wins when both are given
   --kv-dtype D     KV block storage on the attention workers: f32
                    (bit-exact, default), f16 (2× fewer KV bytes), or int8
                    with per-block scales (≈4× fewer). Worker-local — the
                    wire stays f32; the native backend reads the compact
                    blocks directly
+  --wave-driver    serve with the legacy wave-partitioned grouping
+                   (comparison only; the step-driven scheduler is default)
+
+serve drives the request-lifecycle engine (submit → step → drain):
+requests join and leave the running batch at iteration granularity, and
+invalid requests are rejected individually instead of aborting the run.
 ";
 
 const SPEC: &[&str] = &[
     "requests!", "seed!", "results!", "artifacts!", "workers!", "no-overlap",
     "waves!", "stack!", "time-scale!", "prompt!", "steps!", "trace!",
-    "transport!", "attn-backend!", "kv-budget!", "kv-dtype!", "help",
+    "transport!", "attn-backend!", "admission!", "kv-budget!",
+    "kv-budget-blocks!", "kv-dtype!", "wave-driver", "help",
 ];
 
 fn main() {
@@ -106,7 +122,7 @@ fn run(argv: &[String]) -> Result<(), String> {
                 .collect::<Result<_, _>>()?;
             let steps = args.usize_or("steps", 16).map_err(|e| e.to_string())?;
             let opts = pipeline_opts(&args, &artifacts)?;
-            let pipe = DisaggPipeline::start(opts).map_err(|e| format!("{e:#}"))?;
+            let mut pipe = DisaggPipeline::start(opts).map_err(|e| format!("{e:#}"))?;
             let t0 = std::time::Instant::now();
             let out = pipe.decode(&[prompt.clone()], steps).map_err(|e| format!("{e:#}"))?;
             let dt = t0.elapsed().as_secs_f64();
@@ -124,18 +140,33 @@ fn run(argv: &[String]) -> Result<(), String> {
         "serve" => {
             let opts = pipeline_opts(&args, &artifacts)?;
             let waves = args.usize_or("waves", 2).map_err(|e| e.to_string())?;
-            let pipe = DisaggPipeline::start(opts).map_err(|e| format!("{e:#}"))?;
+            let wave_driver = args.has("wave-driver");
+            let mut pipe = DisaggPipeline::start(opts).map_err(|e| format!("{e:#}"))?;
             let reqs = tiny_trace(&args, n_requests, seed, pipe.config().max_seq - 1)?;
             println!(
-                "serving {} requests on the tiny model ({} waves)...",
+                "serving {} requests on the tiny model ({} scheduler, capacity {} waves)...",
                 reqs.len(),
+                if wave_driver { "wave-driver" } else { "continuous-batching" },
                 waves
             );
-            let mut m = pipe.serve(&reqs, waves).map_err(|e| format!("{e:#}"))?;
+            let mut m = if wave_driver {
+                pipe.serve_waves(&reqs, waves).map_err(|e| format!("{e:#}"))?
+            } else {
+                pipe.serve(&reqs, waves).map_err(|e| format!("{e:#}"))?
+            };
             println!("completed:   {}", m.requests_completed);
+            if m.rejected_submissions() > 0 {
+                println!("rejected:    {} invalid request(s) skipped at submit", m.rejected_submissions());
+            }
             println!("tokens:      {}", m.tokens_generated);
             println!("throughput:  {:.1} tok/s", m.throughput());
             println!("mean batch:  {:.2}", m.mean_batch());
+            println!(
+                "requests:    mean queue {}  mean TTFT {}  mean {:.1} tokens/req",
+                fmt_duration(m.mean_queue_s()),
+                fmt_duration(m.mean_ttft_s()),
+                m.mean_request_tokens()
+            );
             println!(
                 "TBT: mean {}  p50 {}  p99 {}",
                 fmt_duration(m.mean_tbt()),
@@ -166,7 +197,15 @@ fn run(argv: &[String]) -> Result<(), String> {
                 kv.bytes_in_use,
                 kv.total_bytes
             );
-            if m.deferred_admissions() > 0 {
+            if m.kv_budget_blocks().is_some() || m.kv_budget_bytes().is_some() {
+                println!(
+                    "kv budget [{}]: {} blocks/worker ≈ {} B/worker  ({} deferrals)",
+                    pipe.admission().name(),
+                    m.kv_budget_blocks().map_or("?".into(), |b| b.to_string()),
+                    m.kv_budget_bytes().map_or("?".into(), |b| b.to_string()),
+                    m.deferred_admissions()
+                );
+            } else if m.deferred_admissions() > 0 {
                 println!("kv admission: {} deferrals (budget back-pressure)", m.deferred_admissions());
             }
             println!("attn backend: {}", pipe.attn_backend().name());
@@ -229,8 +268,16 @@ fn pipeline_opts(args: &Args, artifacts: &str) -> Result<PipelineOpts, String> {
         opts.attn_backend = AttnBackendKind::parse(b)
             .ok_or_else(|| format!("unknown attention backend '{b}' (use engine|native)"))?;
     }
+    if let Some(a) = args.get("admission") {
+        opts.admission = AdmissionKind::parse(a)
+            .ok_or_else(|| format!("unknown admission policy '{a}' (use fifo|sjf)"))?;
+    }
     if args.has("kv-budget") {
-        opts.kv_block_budget = Some(args.usize_or("kv-budget", 0).map_err(|e| e.to_string())?);
+        opts.kv_byte_budget = Some(args.usize_or("kv-budget", 0).map_err(|e| e.to_string())?);
+    }
+    if args.has("kv-budget-blocks") {
+        opts.kv_block_budget =
+            Some(args.usize_or("kv-budget-blocks", 0).map_err(|e| e.to_string())?);
     }
     if let Some(d) = args.get("kv-dtype") {
         opts.kv_dtype = lamina::kvcache::KvDtype::parse(d)

@@ -1,8 +1,12 @@
 //! Serving metrics: token throughput, time-between-tokens (TBT), batch-size
 //! tracking, the per-component latency breakdown of Fig. 12, paged
 //! KV-cache accounting (blocks in use, capacity, internal waste) reported
-//! by the attention workers' arenas, and per-message-class wire accounting
-//! (logical `wire_bytes()` model vs measured serialized frame bytes).
+//! by the attention workers' arenas, per-message-class wire accounting
+//! (logical `wire_bytes()` model vs measured serialized frame bytes), and —
+//! since the request-lifecycle engine — per-request serving quality:
+//! queueing delay (submit → admission), TTFT (submit → first generated
+//! token), tokens per request, submit-time rejections, and the session's
+//! KV admission budget reported in **both** units (blocks and bytes).
 
 use crate::net::WireStats;
 use crate::util::stats::{Percentiles, Welford};
@@ -102,6 +106,14 @@ pub struct ServeMetrics {
     kv_peak_bytes: usize,
     wire: WireStats,
     deferred_admissions: u64,
+    // per-request lifecycle aggregates (request-lifecycle engine)
+    queue_s: Welford,
+    ttft_s: Welford,
+    request_tokens: Welford,
+    rejected_submissions: u64,
+    // the session's KV admission budget, per worker, in both units
+    kv_budget_blocks: Option<usize>,
+    kv_budget_bytes: Option<usize>,
 }
 
 impl ServeMetrics {
@@ -168,6 +180,61 @@ impl ServeMetrics {
     /// Admissions deferred by leader-side KV admission control.
     pub fn deferred_admissions(&self) -> u64 {
         self.deferred_admissions
+    }
+
+    /// Record one completed request's lifecycle: queueing delay (submit →
+    /// admission), TTFT (submit → first generated token, when one exists),
+    /// and its output token count.
+    pub fn record_request(&mut self, queue_s: f64, ttft_s: Option<f64>, tokens: u64) {
+        self.queue_s.add(queue_s);
+        if let Some(t) = ttft_s {
+            self.ttft_s.add(t);
+        }
+        self.request_tokens.add(tokens as f64);
+    }
+
+    /// Mean submit→admission delay across completed requests.
+    pub fn mean_queue_s(&self) -> f64 {
+        self.queue_s.mean()
+    }
+
+    /// Mean submit→first-token latency across completed requests.
+    pub fn mean_ttft_s(&self) -> f64 {
+        self.ttft_s.mean()
+    }
+
+    /// Mean output tokens per completed request.
+    pub fn mean_request_tokens(&self) -> f64 {
+        self.request_tokens.mean()
+    }
+
+    /// Count one request rejected with a typed `SubmitError` (the run
+    /// continues — rejection is per request, not per session).
+    pub fn record_rejection(&mut self) {
+        self.rejected_submissions += 1;
+    }
+
+    /// Requests rejected at submit time.
+    pub fn rejected_submissions(&self) -> u64 {
+        self.rejected_submissions
+    }
+
+    /// Record the session's per-worker KV admission budget in both units
+    /// (whichever unit the budget was given in, the other is derived from
+    /// the workers' dtype-aware per-block byte size).
+    pub fn set_kv_budget(&mut self, blocks: Option<usize>, bytes: Option<usize>) {
+        self.kv_budget_blocks = blocks;
+        self.kv_budget_bytes = bytes;
+    }
+
+    /// The session's KV budget in blocks per worker (if budgeted).
+    pub fn kv_budget_blocks(&self) -> Option<usize> {
+        self.kv_budget_blocks
+    }
+
+    /// The session's KV budget in bytes per worker (if budgeted).
+    pub fn kv_budget_bytes(&self) -> Option<usize> {
+        self.kv_budget_bytes
     }
 
     /// Aggregate throughput in tokens/second.
@@ -270,6 +337,28 @@ mod tests {
         assert_eq!(m.kv_peak_blocks(), 0);
         assert_eq!(m.wire_stats().total().msgs, 0);
         assert_eq!(m.deferred_admissions(), 0);
+        assert_eq!(m.rejected_submissions(), 0);
+        assert_eq!(m.mean_queue_s(), 0.0);
+        assert_eq!(m.mean_ttft_s(), 0.0);
+        assert_eq!(m.kv_budget_blocks(), None);
+        assert_eq!(m.kv_budget_bytes(), None);
+    }
+
+    #[test]
+    fn request_lifecycle_aggregates() {
+        let mut m = ServeMetrics::new();
+        m.record_request(0.010, Some(0.030), 4);
+        m.record_request(0.030, None, 8); // cancelled-before-first-token shape
+        m.record_request(0.020, Some(0.050), 6);
+        assert!((m.mean_queue_s() - 0.020).abs() < 1e-12);
+        assert!((m.mean_ttft_s() - 0.040).abs() < 1e-12); // only the Some()s
+        assert!((m.mean_request_tokens() - 6.0).abs() < 1e-12);
+        m.record_rejection();
+        m.record_rejection();
+        assert_eq!(m.rejected_submissions(), 2);
+        m.set_kv_budget(Some(4), Some(4 * 4096));
+        assert_eq!(m.kv_budget_blocks(), Some(4));
+        assert_eq!(m.kv_budget_bytes(), Some(16384));
     }
 
     #[test]

@@ -1,0 +1,815 @@
+//! Request-lifecycle scheduler: the control plane of the continuous-
+//! batching engine (Orca-style iteration-level scheduling over the paged
+//! KV arena, replacing the wave-bound `serve` surface).
+//!
+//! The scheduler owns everything the *caller* used to own under the old
+//! API — physical cache slots, admission, and step composition — and
+//! nothing the *workers* own (KV blocks live in the arenas; the leader
+//! relays `Retire` messages when the scheduler retires a request). It is
+//! pure bookkeeping: no engine, no transport, no tensors. The leader's
+//! `step()` asks it what to run (admissions, one prefill chunk, or the
+//! decode batch), executes that against the model, and feeds the results
+//! back through `note_*` calls. That split keeps the whole lifecycle —
+//! admission order, teacher forcing, slot recycling, KV reservations,
+//! starvation behavior — property-testable without PJRT artifacts
+//! (`tests/scheduler.rs`).
+//!
+//! Lifecycle (see [`state`] for the state machine):
+//!
+//! * `submit` validates per request (typed [`SubmitError`]) and queues it.
+//! * `admit` pulls from the waiting queue in [`AdmissionPolicy`] order,
+//!   assigns a physical slot from the free pool, and reserves the
+//!   request's full-context KV footprint against the budget ([`KvBudget`]
+//!   in blocks or **bytes** — bytes are the right unit when workers store
+//!   quantized blocks). The old escape hatch survives: with no live
+//!   request, admission proceeds regardless of the budget (deferring could
+//!   never free blocks).
+//! * `decode_plan` composes the iteration's batch groups:
+//!   [`GroupMode::Packed`] repacks the running set at iteration
+//!   granularity (continuous batching); [`GroupMode::ByWave`] reproduces
+//!   the legacy wave partitioning (slot-range groups) and survives only
+//!   for the wave driver loop and its comparison benches.
+//! * `note_decode` / `note_prefill_chunk` apply results; a finished
+//!   request releases its slot and reservation immediately and lands in
+//!   the retirement queue the leader drains into `Retire` wire messages.
+
+pub mod policy;
+pub mod state;
+
+pub use policy::{AdmissionKind, AdmissionPolicy, Candidate, Fifo, Sjf};
+pub use state::{FinishReason, RequestId, RequestState, RequestStatus, StepOutcome, SubmitError};
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::Instant;
+
+use crate::kvcache::kv_blocks_needed;
+
+/// How the running set is composed into decode batch groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupMode {
+    /// Continuous batching: the running requests are packed into groups of
+    /// at most `group_slots` in admission order, repacking every iteration
+    /// as requests retire. The default.
+    Packed,
+    /// Legacy staggered-wave partitioning: a request decodes with the wave
+    /// its physical slot belongs to (`slot / group_slots`), so half-empty
+    /// waves step alone. Kept for the wave driver loop and benches.
+    ByWave,
+}
+
+/// KV admission budget, per attention worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvBudget {
+    Unlimited,
+    /// Legacy block-denominated budget (`--kv-budget-blocks`).
+    Blocks(usize),
+    /// Byte-denominated budget (`--kv-budget`): correct under mixed
+    /// `--kv-dtype` pools, where a block's byte size differs per worker.
+    Bytes(usize),
+}
+
+/// Per-worker arena occupancy the admission check consults (derived from
+/// the latest merged `KvStats` snapshot by the caller).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvOccupancy {
+    /// Blocks in use on one worker (pool total / workers, rounded up).
+    pub blocks_in_use: usize,
+    /// Bytes in use on one worker.
+    pub bytes_in_use: usize,
+}
+
+/// Scheduler configuration (fixed per session).
+#[derive(Debug, Clone, Copy)]
+pub struct SchedCfg {
+    /// Per-request context ceiling (prompt + generation target).
+    pub max_context: usize,
+    /// Physical cache slots this session may occupy.
+    pub total_slots: usize,
+    /// Decode batch-group cap (the engine's largest practical batch).
+    pub group_slots: usize,
+    pub grouping: GroupMode,
+    /// Default path for multi-token prompts: chunked prefill (`true`) or
+    /// teacher-forced decode (`false`). Overridable per request.
+    pub use_prefill: bool,
+    /// Token slots per KV block (the reservation quantum).
+    pub kv_block_size: usize,
+    /// Bytes one block occupies on ONE worker, all layers, K+V (the
+    /// blocks→bytes conversion for budget accounting and reporting).
+    pub block_bytes: usize,
+    pub budget: KvBudget,
+}
+
+/// One decode-batch row the leader must execute.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeRow {
+    pub id: RequestId,
+    /// Physical cache slot on the attention workers.
+    pub slot: u32,
+    /// Cached tokens before this step.
+    pub len: i32,
+    /// Input token for this step.
+    pub input: i32,
+    /// Whether this step's output is a *generated* token (false while the
+    /// row is still teacher-forcing prompt tokens) — the decode-phase
+    /// token count `ServeMetrics` records.
+    pub emits: bool,
+}
+
+/// The next prefill chunk to run (one per engine iteration).
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillStep {
+    pub id: RequestId,
+    pub slot: u32,
+    /// Prompt tokens already in the KV cache.
+    pub cached: usize,
+}
+
+struct Entry {
+    id: RequestId,
+    prompt: Vec<i32>,
+    gen_target: usize,
+    use_prefill: bool,
+    state: RequestState,
+    slot: u32,
+    /// Prompt tokens already consumed as decode inputs (teacher forcing).
+    fed: usize,
+    /// Cached tokens (context length so far).
+    len: i32,
+    next_input: i32,
+    generated: Vec<i32>,
+    /// Prompt tokens already prefilled into the KV cache.
+    prefill_cached: usize,
+    /// Full-context KV reservation, per worker.
+    needed_blocks: usize,
+    needed_bytes: usize,
+    waited_rounds: u32,
+    submitted_at: Instant,
+    admitted_at: Option<Instant>,
+    first_token_at: Option<Instant>,
+}
+
+impl Entry {
+    fn decode_row(&self) -> DecodeRow {
+        DecodeRow {
+            id: self.id,
+            slot: self.slot,
+            len: self.len,
+            input: self.next_input,
+            emits: self.fed >= self.prompt.len(),
+        }
+    }
+}
+
+/// The request-lifecycle scheduler (see module docs).
+pub struct Scheduler {
+    cfg: SchedCfg,
+    policy: Box<dyn AdmissionPolicy>,
+    next_id: RequestId,
+    entries: BTreeMap<RequestId, Entry>,
+    /// Submission order (FIFO view handed to the policy).
+    waiting: VecDeque<RequestId>,
+    /// Admission order; stable while requests retire around each other.
+    running: Vec<RequestId>,
+    /// LIFO free pool, initialized descending so slots hand out as 0,1,2…
+    free_slots: Vec<u32>,
+    /// Full-context KV reservation of all live requests, per worker.
+    reserved_blocks: usize,
+    reserved_bytes: usize,
+    /// Finished requests whose `Retire` the leader has not sent yet (only
+    /// requests that materialized KV on the workers).
+    retire_queue: Vec<(RequestId, u32)>,
+    /// ALL finish events not yet reported to the driver — including
+    /// requests that never wrote KV and therefore queue no Retire.
+    finished_events: Vec<RequestId>,
+    deferred_total: u64,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedCfg, policy: Box<dyn AdmissionPolicy>) -> Self {
+        assert!(cfg.total_slots > 0, "need at least one slot");
+        assert!(cfg.group_slots > 0, "need a positive group size");
+        assert!(cfg.kv_block_size > 0, "need a positive block size");
+        Scheduler {
+            free_slots: (0..cfg.total_slots as u32).rev().collect(),
+            cfg,
+            policy,
+            next_id: 0,
+            entries: BTreeMap::new(),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            reserved_blocks: 0,
+            reserved_bytes: 0,
+            retire_queue: Vec::new(),
+            finished_events: Vec::new(),
+            deferred_total: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> &SchedCfg {
+        &self.cfg
+    }
+
+    /// The id the next `submit` will be assigned.
+    pub fn next_request_id(&self) -> RequestId {
+        self.next_id
+    }
+
+    /// Start assigning ids at `next` (monotone). Session resets use this to
+    /// keep ids unique across a pipeline's lifetime, so a stale id from an
+    /// earlier session polls as unknown instead of aliasing a new request.
+    pub fn resume_ids_at(&mut self, next: RequestId) {
+        debug_assert!(next >= self.next_id, "request ids must stay monotone");
+        self.next_id = next;
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    // ---- submission -------------------------------------------------------
+
+    /// Validate and queue a request (prefill mode from [`SchedCfg`]).
+    pub fn submit(&mut self, prompt: Vec<i32>, gen_target: usize) -> Result<RequestId, SubmitError> {
+        let mode = self.cfg.use_prefill;
+        self.submit_with_mode(prompt, gen_target, mode)
+    }
+
+    /// Validate and queue a request with an explicit prompt-processing mode
+    /// (`use_prefill = false` forces teacher-forced decode — the golden
+    /// `decode` semantics).
+    pub fn submit_with_mode(
+        &mut self,
+        prompt: Vec<i32>,
+        gen_target: usize,
+        use_prefill: bool,
+    ) -> Result<RequestId, SubmitError> {
+        if prompt.is_empty() {
+            return Err(SubmitError::EmptyPrompt);
+        }
+        let ctx = prompt.len() + gen_target;
+        if ctx > self.cfg.max_context {
+            return Err(SubmitError::ContextTooLong { requested: ctx, max: self.cfg.max_context });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let needed_blocks = kv_blocks_needed(&[ctx], self.cfg.kv_block_size);
+        self.entries.insert(
+            id,
+            Entry {
+                id,
+                gen_target,
+                use_prefill,
+                state: RequestState::Queued,
+                slot: 0,
+                fed: 0,
+                len: 0,
+                next_input: 0,
+                generated: Vec::new(),
+                prefill_cached: 0,
+                needed_blocks,
+                needed_bytes: needed_blocks * self.cfg.block_bytes,
+                waited_rounds: 0,
+                submitted_at: Instant::now(),
+                admitted_at: None,
+                first_token_at: None,
+                prompt,
+            },
+        );
+        self.waiting.push_back(id);
+        Ok(id)
+    }
+
+    // ---- admission --------------------------------------------------------
+
+    /// Run one admission round against the latest per-worker occupancy.
+    /// Returns `(admitted, deferred)` — `deferred` is true when the KV
+    /// budget blocked the policy's pick (counted once per round, as the
+    /// wave loop did).
+    pub fn admit(&mut self, occ: KvOccupancy) -> (usize, bool) {
+        let mut admitted = 0usize;
+        let mut deferred = false;
+        // one candidate snapshot serves every pick of the round: costs and
+        // ages are static within a round, and admissions are mirrored by
+        // removing the picked entry (FIFO order preserved)
+        let mut candidates: Vec<Candidate> = self
+            .waiting
+            .iter()
+            .map(|&id| {
+                let e = &self.entries[&id];
+                Candidate {
+                    id,
+                    cost_tokens: e.prompt.len() + e.gen_target,
+                    waited_rounds: e.waited_rounds,
+                }
+            })
+            .collect();
+        while !self.free_slots.is_empty() && !candidates.is_empty() {
+            let Some(pick) = self.policy.pick(&candidates) else { break };
+            let id = candidates[pick].id;
+            let (needed_blocks, needed_bytes) = {
+                let e = &self.entries[&id];
+                (e.needed_blocks, e.needed_bytes)
+            };
+            // worst-case residency if this request joins: live full-context
+            // reservations or the measured snapshot, whichever is larger
+            let fits = match self.cfg.budget {
+                KvBudget::Unlimited => true,
+                KvBudget::Blocks(b) => {
+                    self.reserved_blocks.max(occ.blocks_in_use) + needed_blocks <= b
+                }
+                KvBudget::Bytes(b) => {
+                    self.reserved_bytes.max(occ.bytes_in_use) + needed_bytes <= b
+                }
+            };
+            // escape hatch: with nothing live, deferring could never free
+            // blocks — the budget is a back-pressure valve, not a hard cap
+            if !fits && !self.running.is_empty() {
+                deferred = true;
+                self.deferred_total += 1;
+                break;
+            }
+            candidates.remove(pick);
+            let idx = self.waiting.iter().position(|&w| w == id).expect("picked id is waiting");
+            self.waiting.remove(idx);
+            let slot = self.free_slots.pop().expect("checked non-empty");
+            self.reserved_blocks += needed_blocks;
+            self.reserved_bytes += needed_bytes;
+            let e = self.entries.get_mut(&id).expect("picked id exists");
+            e.slot = slot;
+            e.admitted_at = Some(Instant::now());
+            let mut done_at_admission = false;
+            if e.use_prefill && e.prompt.len() > 1 {
+                e.state = RequestState::Prefilling;
+            } else {
+                e.state = RequestState::Decoding;
+                e.next_input = e.prompt[0];
+                e.fed = 1;
+                // a zero-target single-token request has nothing to run
+                done_at_admission = e.fed >= e.prompt.len() && e.gen_target == 0;
+            }
+            self.running.push(id);
+            admitted += 1;
+            if done_at_admission {
+                self.finish(id, FinishReason::Completed);
+            }
+        }
+        // age whoever is still waiting (the SJF anti-starvation clock) —
+        // but only on rounds where the policy actually passed them over
+        // (someone else was admitted, or the budget deferred the pick).
+        // Slot-bound rounds age nobody: under sustained full-slot load the
+        // whole queue would otherwise age past the bound and force SJF
+        // into permanent FIFO order.
+        if admitted > 0 || deferred {
+            for &id in &self.waiting {
+                if let Some(e) = self.entries.get_mut(&id) {
+                    e.waited_rounds += 1;
+                }
+            }
+        }
+        (admitted, deferred)
+    }
+
+    // ---- step composition -------------------------------------------------
+
+    /// The next prefill chunk to run, if any request is mid-prefill
+    /// (admission order; one chunk per engine iteration).
+    pub fn next_prefill(&self) -> Option<PrefillStep> {
+        self.running.iter().find_map(|&id| {
+            let e = &self.entries[&id];
+            if e.state == RequestState::Prefilling {
+                Some(PrefillStep { id, slot: e.slot, cached: e.prefill_cached })
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Up to `cap` prompt tokens starting at the request's prefill cursor.
+    pub fn prompt_chunk(&self, id: RequestId, cap: usize) -> Vec<i32> {
+        let e = &self.entries[&id];
+        let end = (e.prefill_cached + cap.max(1)).min(e.prompt.len());
+        e.prompt[e.prefill_cached..end].to_vec()
+    }
+
+    /// Compose this iteration's decode batch groups (see [`GroupMode`]).
+    pub fn decode_plan(&self) -> Vec<Vec<DecodeRow>> {
+        let cap = self.cfg.group_slots;
+        let mut groups: Vec<Vec<DecodeRow>> = Vec::new();
+        match self.cfg.grouping {
+            GroupMode::Packed => {
+                for &id in &self.running {
+                    let e = &self.entries[&id];
+                    if e.state != RequestState::Decoding {
+                        continue;
+                    }
+                    if groups.last().map_or(true, |g| g.len() >= cap) {
+                        groups.push(Vec::new());
+                    }
+                    groups.last_mut().expect("pushed above").push(e.decode_row());
+                }
+            }
+            GroupMode::ByWave => {
+                let waves = self.cfg.total_slots.div_ceil(cap).max(1);
+                let mut by_wave: Vec<Vec<DecodeRow>> = vec![Vec::new(); waves];
+                for &id in &self.running {
+                    let e = &self.entries[&id];
+                    if e.state != RequestState::Decoding {
+                        continue;
+                    }
+                    let w = (e.slot as usize / cap).min(waves - 1);
+                    by_wave[w].push(e.decode_row());
+                }
+                by_wave.retain(|g| !g.is_empty());
+                groups = by_wave;
+            }
+        }
+        groups
+    }
+
+    // ---- execution feedback -----------------------------------------------
+
+    /// Apply one executed prefill chunk: `consumed` prompt tokens landed in
+    /// the KV cache; `next_token` is the model's prediction after the
+    /// chunk's last row (meaningful on the final chunk — the request's
+    /// first generated token).
+    pub fn note_prefill_chunk(&mut self, id: RequestId, consumed: usize, next_token: i32) {
+        let finished = {
+            let e = self.entries.get_mut(&id).expect("note_prefill_chunk: unknown request");
+            debug_assert_eq!(e.state, RequestState::Prefilling);
+            e.prefill_cached += consumed;
+            if e.prefill_cached >= e.prompt.len() {
+                e.state = RequestState::Decoding;
+                e.len = e.prompt.len() as i32;
+                e.fed = e.prompt.len();
+                e.next_input = next_token;
+                if e.gen_target > 0 {
+                    e.generated.push(next_token);
+                    e.first_token_at.get_or_insert_with(Instant::now);
+                }
+                e.generated.len() >= e.gen_target
+            } else {
+                false
+            }
+        };
+        if finished {
+            self.finish(id, FinishReason::Completed);
+        }
+    }
+
+    /// Apply one decode-step result for one row: advance teacher forcing or
+    /// collect the generated token, retiring the request when it reaches
+    /// its target.
+    pub fn note_decode(&mut self, id: RequestId, produced: i32) {
+        let finished = {
+            let e = self.entries.get_mut(&id).expect("note_decode: unknown request");
+            debug_assert_eq!(e.state, RequestState::Decoding);
+            e.len += 1;
+            if e.fed < e.prompt.len() {
+                e.next_input = e.prompt[e.fed];
+                e.fed += 1;
+            } else {
+                if e.generated.len() < e.gen_target {
+                    e.generated.push(produced);
+                    e.first_token_at.get_or_insert_with(Instant::now);
+                }
+                e.next_input = produced;
+            }
+            e.fed >= e.prompt.len() && e.generated.len() >= e.gen_target
+        };
+        if finished {
+            self.finish(id, FinishReason::Completed);
+        }
+    }
+
+    fn finish(&mut self, id: RequestId, reason: FinishReason) {
+        let (slot, blocks, bytes, wrote_kv) = {
+            let e = self.entries.get_mut(&id).expect("finish: unknown request");
+            debug_assert!(e.state.is_live());
+            e.state = RequestState::Finished(reason);
+            (e.slot, e.needed_blocks, e.needed_bytes, e.len > 0 || e.prefill_cached > 0)
+        };
+        self.running.retain(|&r| r != id);
+        self.free_slots.push(slot);
+        self.reserved_blocks -= blocks;
+        self.reserved_bytes -= bytes;
+        // only requests that materialized KV owe the workers a Retire. A
+        // freed-but-never-written slot must NOT queue one: the slot can be
+        // re-assigned before the leader sends the pending Retire, and the
+        // stale Retire would wipe the next occupant's first appends.
+        if wrote_kv {
+            self.retire_queue.push((id, slot));
+        }
+        // the finish EVENT is reported regardless, so the driver's
+        // outcome/metrics see every finish, not just the KV-writing ones
+        self.finished_events.push(id);
+    }
+
+    /// Requests retired since the last call, with the physical slot whose
+    /// KV blocks the leader must free on every worker (`WireMsg::Retire`).
+    pub fn take_retirements(&mut self) -> Vec<(RequestId, u32)> {
+        std::mem::take(&mut self.retire_queue)
+    }
+
+    /// Re-queue a retirement whose wire send failed; the leader retries on
+    /// the next step and surfaces the transport error there.
+    pub fn push_retirement(&mut self, id: RequestId, slot: u32) {
+        self.retire_queue.push((id, slot));
+    }
+
+    /// ALL finish events since the last call (superset of the retirement
+    /// ids: includes finishes that never wrote KV).
+    pub fn take_finished(&mut self) -> Vec<RequestId> {
+        std::mem::take(&mut self.finished_events)
+    }
+
+    /// Cancel a request. Queued → dropped before admission; live → retired
+    /// as `Finished(Cancelled)` (its `Retire` reaches the workers on the
+    /// next step). Returns false for unknown or already-finished ids.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        match self.entries.get(&id).map(|e| e.state) {
+            Some(RequestState::Queued) => {
+                self.waiting.retain(|&w| w != id);
+                self.entries.get_mut(&id).expect("checked").state =
+                    RequestState::Finished(FinishReason::Cancelled);
+                true
+            }
+            Some(s) if s.is_live() => {
+                self.finish(id, FinishReason::Cancelled);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    // ---- observation ------------------------------------------------------
+
+    pub fn poll(&self, id: RequestId) -> Option<RequestStatus> {
+        let e = self.entries.get(&id)?;
+        Some(RequestStatus {
+            id,
+            state: e.state,
+            tokens: e.generated.clone(),
+            queue_s: e
+                .admitted_at
+                .map(|t| t.saturating_duration_since(e.submitted_at).as_secs_f64()),
+            ttft_s: e
+                .first_token_at
+                .map(|t| t.saturating_duration_since(e.submitted_at).as_secs_f64()),
+        })
+    }
+
+    /// `(queue_s, ttft_s, tokens)` of a *completed* request, for
+    /// `ServeMetrics` (None for live, cancelled, or unknown ids).
+    pub fn lifecycle(&self, id: RequestId) -> Option<(f64, Option<f64>, usize)> {
+        let e = self.entries.get(&id)?;
+        if e.state != RequestState::Finished(FinishReason::Completed) {
+            return None;
+        }
+        let queue_s = e
+            .admitted_at?
+            .saturating_duration_since(e.submitted_at)
+            .as_secs_f64();
+        let ttft_s = e
+            .first_token_at
+            .map(|t| t.saturating_duration_since(e.submitted_at).as_secs_f64());
+        Some((queue_s, ttft_s, e.generated.len()))
+    }
+
+    /// No waiting and no live requests (finished entries may remain
+    /// pollable until [`Self::clear_finished`]).
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.running.is_empty()
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Live (admitted, unfinished) requests.
+    pub fn live(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn free_slot_count(&self) -> usize {
+        self.free_slots.len()
+    }
+
+    /// Per-worker KV blocks reserved by live requests (full-context).
+    pub fn reserved_blocks(&self) -> usize {
+        self.reserved_blocks
+    }
+
+    pub fn reserved_bytes(&self) -> usize {
+        self.reserved_bytes
+    }
+
+    /// Admissions the KV budget has deferred so far.
+    pub fn deferred_total(&self) -> u64 {
+        self.deferred_total
+    }
+
+    /// Drop finished entries (long-running sessions; polling them ends).
+    pub fn clear_finished(&mut self) {
+        self.entries.retain(|_, e| !e.state.is_finished());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(slots: usize, group: usize, grouping: GroupMode, budget: KvBudget) -> SchedCfg {
+        SchedCfg {
+            max_context: 128,
+            total_slots: slots,
+            group_slots: group,
+            grouping,
+            use_prefill: true,
+            kv_block_size: 4,
+            block_bytes: 64,
+            budget,
+        }
+    }
+
+    fn sched(slots: usize, group: usize, grouping: GroupMode, budget: KvBudget) -> Scheduler {
+        Scheduler::new(cfg(slots, group, grouping, budget), AdmissionKind::Fifo.build())
+    }
+
+    #[test]
+    fn submit_validates_per_request() {
+        let mut s = sched(2, 2, GroupMode::Packed, KvBudget::Unlimited);
+        assert_eq!(s.submit(vec![], 4), Err(SubmitError::EmptyPrompt));
+        assert_eq!(
+            s.submit(vec![1; 100], 100),
+            Err(SubmitError::ContextTooLong { requested: 200, max: 128 })
+        );
+        // a rejected request does not consume an id or queue space
+        assert_eq!(s.waiting_len(), 0);
+        let id = s.submit(vec![1, 2, 3], 4).unwrap();
+        assert_eq!(s.poll(id).unwrap().state, RequestState::Queued);
+        assert_eq!(s.waiting_len(), 1);
+    }
+
+    #[test]
+    fn admission_assigns_slots_in_order_and_reserves() {
+        let mut s = sched(2, 2, GroupMode::Packed, KvBudget::Blocks(100));
+        let a = s.submit(vec![1; 4], 4).unwrap(); // ctx 8 → 2 blocks
+        let b = s.submit(vec![2; 4], 4).unwrap();
+        let c = s.submit(vec![3; 4], 4).unwrap();
+        let (admitted, deferred) = s.admit(KvOccupancy::default());
+        assert_eq!((admitted, deferred), (2, false)); // slot-bound, not budget
+        assert_eq!(s.poll(a).unwrap().state, RequestState::Prefilling);
+        assert_eq!(s.poll(b).unwrap().state, RequestState::Prefilling);
+        assert_eq!(s.poll(c).unwrap().state, RequestState::Queued);
+        assert_eq!(s.reserved_blocks(), 4);
+        assert_eq!(s.reserved_bytes(), 4 * 64);
+        assert_eq!(s.free_slot_count(), 0);
+        // slots hand out as 0, 1, …
+        assert_eq!(s.next_prefill().unwrap().slot, 0);
+    }
+
+    #[test]
+    fn budget_defers_with_live_requests_and_escape_hatches_alone() {
+        let mut s = sched(4, 4, GroupMode::Packed, KvBudget::Blocks(3));
+        // needs 4 blocks > budget 3, but nothing is live → escape hatch
+        let big = s.submit(vec![1; 12], 4).unwrap();
+        let (admitted, deferred) = s.admit(KvOccupancy::default());
+        assert_eq!((admitted, deferred), (1, false));
+        assert!(s.poll(big).unwrap().state.is_live());
+        // now a second request must defer (4 reserved > 3 already)
+        let small = s.submit(vec![1; 2], 1).unwrap();
+        let (admitted, deferred) = s.admit(KvOccupancy::default());
+        assert_eq!((admitted, deferred), (0, true));
+        assert_eq!(s.poll(small).unwrap().state, RequestState::Queued);
+        assert_eq!(s.deferred_total(), 1);
+    }
+
+    #[test]
+    fn teacher_forcing_feeds_prompt_then_emits() {
+        let mut s = Scheduler::new(
+            SchedCfg { use_prefill: false, ..cfg(1, 1, GroupMode::Packed, KvBudget::Unlimited) },
+            AdmissionKind::Fifo.build(),
+        );
+        let id = s.submit(vec![10, 11, 12], 2).unwrap();
+        s.admit(KvOccupancy::default());
+        // step 1: input 10 @ len 0, not emitting
+        let rows = s.decode_plan();
+        assert_eq!(rows.len(), 1);
+        let r = rows[0][0];
+        assert_eq!((r.input, r.len, r.emits), (10, 0, false));
+        s.note_decode(id, 900);
+        // step 2: teacher-forced input 11
+        let r = s.decode_plan()[0][0];
+        assert_eq!((r.input, r.len, r.emits), (11, 1, false));
+        s.note_decode(id, 901);
+        // step 3: last prompt token fed; output now counts
+        let r = s.decode_plan()[0][0];
+        assert_eq!((r.input, r.len, r.emits), (12, 2, true));
+        s.note_decode(id, 902);
+        // step 4: free-running on the generated token
+        let r = s.decode_plan()[0][0];
+        assert_eq!((r.input, r.len, r.emits), (902, 3, true));
+        s.note_decode(id, 903);
+        let st = s.poll(id).unwrap();
+        assert_eq!(st.state, RequestState::Finished(FinishReason::Completed));
+        assert_eq!(st.tokens, vec![902, 903]);
+        assert_eq!(s.take_retirements(), vec![(id, 0)]);
+        assert!(s.is_idle());
+        assert_eq!(s.free_slot_count(), 1);
+        assert_eq!(s.reserved_blocks(), 0);
+    }
+
+    #[test]
+    fn prefill_chunks_then_first_token() {
+        let mut s = sched(1, 1, GroupMode::Packed, KvBudget::Unlimited);
+        let id = s.submit(vec![1, 2, 3, 4, 5], 2).unwrap();
+        s.admit(KvOccupancy::default());
+        let p = s.next_prefill().unwrap();
+        assert_eq!((p.id, p.cached), (id, 0));
+        assert_eq!(s.prompt_chunk(id, 3), vec![1, 2, 3]);
+        s.note_prefill_chunk(id, 3, 0);
+        let p = s.next_prefill().unwrap();
+        assert_eq!(p.cached, 3);
+        assert_eq!(s.prompt_chunk(id, 3), vec![4, 5]);
+        s.note_prefill_chunk(id, 2, 77); // final chunk → first token
+        assert!(s.next_prefill().is_none());
+        let st = s.poll(id).unwrap();
+        assert_eq!(st.state, RequestState::Decoding);
+        assert_eq!(st.tokens, vec![77]);
+        // decode continues from the prompt's full length
+        let r = s.decode_plan()[0][0];
+        assert_eq!((r.input, r.len, r.emits), (77, 5, true));
+        s.note_decode(id, 78);
+        assert_eq!(s.poll(id).unwrap().tokens, vec![77, 78]);
+        assert!(s.poll(id).unwrap().state.is_finished());
+    }
+
+    #[test]
+    fn grouping_packs_vs_waves() {
+        let mk = |grouping| {
+            let mut s = Scheduler::new(
+                SchedCfg { use_prefill: false, ..cfg(4, 2, grouping, KvBudget::Unlimited) },
+                AdmissionKind::Fifo.build(),
+            );
+            for i in 0..3 {
+                s.submit(vec![i as i32 + 1], 4).unwrap();
+            }
+            s.admit(KvOccupancy::default());
+            s
+        };
+        // packed: [2, 1]
+        let s = mk(GroupMode::Packed);
+        let plan = s.decode_plan();
+        assert_eq!(plan.iter().map(|g| g.len()).collect::<Vec<_>>(), vec![2, 1]);
+        // by-wave: slots 0,1 → wave 0; slot 2 → wave 1
+        let s = mk(GroupMode::ByWave);
+        let plan = s.decode_plan();
+        assert_eq!(plan.iter().map(|g| g.len()).collect::<Vec<_>>(), vec![2, 1]);
+        assert_eq!(plan[1][0].slot, 2);
+    }
+
+    #[test]
+    fn cancel_in_every_state() {
+        let mut s = sched(1, 1, GroupMode::Packed, KvBudget::Unlimited);
+        let first = s.submit(vec![1, 2], 4).unwrap();
+        let second = s.submit(vec![1, 2, 3], 4).unwrap();
+        s.admit(KvOccupancy::default()); // admits `first` only (1 slot)
+        assert!(s.cancel(second)); // still Queued → dropped from the queue
+        assert_eq!(s.poll(second).unwrap().state, RequestState::Finished(FinishReason::Cancelled));
+        assert!(s.cancel(first)); // live → retired
+        assert_eq!(
+            s.poll(first).unwrap().state,
+            RequestState::Finished(FinishReason::Cancelled)
+        );
+        assert!(!s.cancel(first)); // idempotent
+        assert!(s.is_idle());
+        assert_eq!(s.free_slot_count(), 1);
+        assert_eq!(s.reserved_blocks(), 0);
+        // neither request ever wrote KV (`first` was cancelled before its
+        // first prefill chunk), so neither owes the workers a Retire —
+        // a stale Retire could wipe the slot's next occupant
+        assert_eq!(s.take_retirements().len(), 0);
+    }
+
+    #[test]
+    fn cancel_after_kv_writes_queues_a_retire() {
+        let mut s = sched(1, 1, GroupMode::Packed, KvBudget::Unlimited);
+        let id = s.submit(vec![1, 2, 3, 4, 5], 8).unwrap();
+        s.admit(KvOccupancy::default());
+        s.note_prefill_chunk(id, 3, 0); // KV materialized on the workers
+        assert!(s.cancel(id));
+        assert_eq!(s.take_retirements(), vec![(id, 0)]);
+        assert_eq!(s.free_slot_count(), 1);
+    }
+
+    #[test]
+    fn ids_resume_across_sessions() {
+        let mut s = sched(1, 1, GroupMode::Packed, KvBudget::Unlimited);
+        let a = s.submit(vec![1], 1).unwrap();
+        let mut s2 = sched(1, 1, GroupMode::Packed, KvBudget::Unlimited);
+        s2.resume_ids_at(s.next_request_id());
+        let b = s2.submit(vec![2], 1).unwrap();
+        assert!(b > a, "ids must stay unique across sessions");
+        assert!(s2.poll(a).is_none(), "stale ids poll as unknown");
+    }
+}

@@ -1,0 +1,179 @@
+//! Pluggable admission policies (`--admission fifo|sjf`).
+//!
+//! The [`crate::scheduler::Scheduler`] asks the policy which waiting
+//! request to *try* next; the scheduler itself owns the fit check (free
+//! slot + KV budget). If the pick does not fit, the admission round stops —
+//! head-of-line blocking in whatever order the policy chose — and the event
+//! counts as a deferred admission. This keeps the budget semantics of the
+//! old wave loop (including its no-live-requests escape hatch, which lives
+//! in the scheduler, not here) while making the *order* pluggable.
+//!
+//! * [`Fifo`] — strict arrival order; a blocked head blocks everyone
+//!   behind it. The old `serve` behavior.
+//! * [`Sjf`] — shortest job (full context = prompt + generation target)
+//!   first among the deferred backlog, so short requests flow around a big
+//!   one that is waiting for KV headroom. Starvation-proof by aging: once a
+//!   request has been passed over [`Sjf::max_wait_rounds`] times it regains
+//!   strict FIFO priority, and nothing may be admitted ahead of it until it
+//!   fits (`tests/scheduler.rs` property-tests this under a continuous
+//!   arrival stream).
+
+use super::state::RequestId;
+
+/// A waiting request as the policy sees it. The slice passed to
+/// [`AdmissionPolicy::pick`] preserves FIFO (submission) order.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    pub id: RequestId,
+    /// Full-context cost in tokens (prompt + generation target) — the KV
+    /// footprint the request will reserve.
+    pub cost_tokens: usize,
+    /// Admission rounds this request has already been passed over.
+    pub waited_rounds: u32,
+}
+
+/// Admission-order strategy. Implementations must be deterministic: the
+/// same candidate slice must always produce the same pick (continuous and
+/// wave-grouped sessions replay admission identically in tests).
+pub trait AdmissionPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Index (into the FIFO-ordered `waiting` slice) of the request to try
+    /// admitting next, or `None` to admit nothing this round.
+    fn pick(&mut self, waiting: &[Candidate]) -> Option<usize>;
+}
+
+/// First-in-first-out (the legacy order).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fifo;
+
+impl AdmissionPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick(&mut self, waiting: &[Candidate]) -> Option<usize> {
+        if waiting.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+}
+
+/// Shortest-job-first among deferred admissions, with FIFO aging.
+#[derive(Debug, Clone, Copy)]
+pub struct Sjf {
+    /// After this many passed-over rounds a request regains strict FIFO
+    /// priority (anti-starvation; see module docs).
+    pub max_wait_rounds: u32,
+}
+
+impl Default for Sjf {
+    fn default() -> Self {
+        Sjf { max_wait_rounds: DEFAULT_SJF_MAX_WAIT_ROUNDS }
+    }
+}
+
+/// Default aging bound: generous enough that SJF gets real reordering room,
+/// small enough that a starved request is forced within tens of iterations.
+pub const DEFAULT_SJF_MAX_WAIT_ROUNDS: u32 = 32;
+
+impl AdmissionPolicy for Sjf {
+    fn name(&self) -> &'static str {
+        "sjf"
+    }
+
+    fn pick(&mut self, waiting: &[Candidate]) -> Option<usize> {
+        if waiting.is_empty() {
+            return None;
+        }
+        // aging: the FIFO-oldest request that has waited past the bound is
+        // tried first, and (because a failed fit ends the round) nothing
+        // can be admitted around it anymore.
+        if let Some((i, _)) = waiting
+            .iter()
+            .enumerate()
+            .find(|(_, c)| c.waited_rounds >= self.max_wait_rounds)
+        {
+            return Some(i);
+        }
+        waiting
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, c)| (c.cost_tokens, *i)) // tie → FIFO
+            .map(|(i, _)| i)
+    }
+}
+
+/// CLI-selectable policy kind (`--admission`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionKind {
+    Fifo,
+    Sjf,
+}
+
+impl AdmissionKind {
+    pub fn parse(s: &str) -> Option<AdmissionKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Some(AdmissionKind::Fifo),
+            "sjf" => Some(AdmissionKind::Sjf),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmissionKind::Fifo => "fifo",
+            AdmissionKind::Sjf => "sjf",
+        }
+    }
+
+    pub fn build(self) -> Box<dyn AdmissionPolicy> {
+        match self {
+            AdmissionKind::Fifo => Box::new(Fifo),
+            AdmissionKind::Sjf => Box::new(Sjf::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(id: RequestId, cost: usize, waited: u32) -> Candidate {
+        Candidate { id, cost_tokens: cost, waited_rounds: waited }
+    }
+
+    #[test]
+    fn fifo_always_head() {
+        let mut p = Fifo;
+        assert_eq!(p.pick(&[]), None);
+        assert_eq!(p.pick(&[cand(7, 100, 0), cand(8, 1, 50)]), Some(0));
+    }
+
+    #[test]
+    fn sjf_picks_cheapest_with_fifo_tiebreak() {
+        let mut p = Sjf::default();
+        assert_eq!(p.pick(&[]), None);
+        assert_eq!(p.pick(&[cand(0, 90, 0), cand(1, 10, 0), cand(2, 10, 0)]), Some(1));
+    }
+
+    #[test]
+    fn sjf_aging_forces_fifo() {
+        let mut p = Sjf { max_wait_rounds: 5 };
+        // the old expensive head regains priority once it has waited enough
+        assert_eq!(p.pick(&[cand(0, 90, 5), cand(1, 10, 0)]), Some(0));
+        // below the bound, SJF order applies
+        assert_eq!(p.pick(&[cand(0, 90, 4), cand(1, 10, 0)]), Some(1));
+    }
+
+    #[test]
+    fn kind_parse_and_build() {
+        assert_eq!(AdmissionKind::parse("FIFO"), Some(AdmissionKind::Fifo));
+        assert_eq!(AdmissionKind::parse("sjf"), Some(AdmissionKind::Sjf));
+        assert_eq!(AdmissionKind::parse("lifo"), None);
+        assert_eq!(AdmissionKind::Fifo.build().name(), "fifo");
+        assert_eq!(AdmissionKind::Sjf.build().name(), "sjf");
+    }
+}

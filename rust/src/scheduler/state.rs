@@ -1,0 +1,106 @@
+//! Request-lifecycle types of the continuous-batching engine.
+//!
+//! A request moves through a small state machine owned by the
+//! [`crate::scheduler::Scheduler`]:
+//!
+//! ```text
+//! submit() ─▶ Queued ─admit─▶ Prefilling ─last chunk─▶ Decoding ─target─▶ Finished{Completed}
+//!               │                (teacher-forced requests skip Prefilling)        ▲
+//!               └────────────────────────── cancel() ──────────────▶ Finished{Cancelled}
+//! ```
+//!
+//! Validation happens **per request at submit time** ([`SubmitError`]): an
+//! invalid request is rejected without touching the rest of the session —
+//! the old wave-bound `serve` aborted the whole run on the first oversized
+//! request.
+
+pub type RequestId = u64;
+
+/// Why a request left the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated its full token target.
+    Completed,
+    /// Cancelled by the caller before completing.
+    Cancelled,
+}
+
+/// Lifecycle state (see the module diagram).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    /// Submitted, waiting for admission (no slot, no KV reservation).
+    Queued,
+    /// Admitted; the prompt is streaming into the KV cache chunk by chunk.
+    Prefilling,
+    /// In the running decode batch (teacher-forcing any unconsumed prompt).
+    Decoding,
+    /// Retired; its slot and KV reservation are back in the pools.
+    Finished(FinishReason),
+}
+
+impl RequestState {
+    pub fn is_finished(self) -> bool {
+        matches!(self, RequestState::Finished(_))
+    }
+
+    /// Admitted and holding a slot (prefilling or decoding).
+    pub fn is_live(self) -> bool {
+        matches!(self, RequestState::Prefilling | RequestState::Decoding)
+    }
+}
+
+/// Typed per-request rejection at `submit` time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    EmptyPrompt,
+    /// prompt + generation target exceeds the model's context window.
+    ContextTooLong { requested: usize, max: usize },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::EmptyPrompt => write!(f, "empty prompt"),
+            SubmitError::ContextTooLong { requested, max } => write!(
+                f,
+                "request context {requested} (prompt + generation) exceeds the model max {max}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// What one engine iteration ([`step`](crate::workers::DisaggPipeline::step))
+/// did.
+#[derive(Debug, Clone, Default)]
+pub struct StepOutcome {
+    /// Requests admitted from the waiting queue this iteration.
+    pub admitted: usize,
+    /// The KV budget blocked at least one admission this iteration.
+    pub deferred: bool,
+    /// A prefill chunk ran for this request (prefill preempts decode for
+    /// one iteration, exactly like the wave loop's inline prompt pass).
+    pub prefilled: Option<RequestId>,
+    /// Batch rows decoded (across all groups).
+    pub decoded_rows: usize,
+    /// Decode groups executed (Packed: ceil(running/group); ByWave: waves).
+    pub decode_groups: usize,
+    /// Requests that finished (and whose KV was retired) this iteration.
+    pub finished: Vec<RequestId>,
+    /// Nothing left to do: no waiting and no live requests.
+    pub idle: bool,
+}
+
+/// Snapshot returned by `poll`.
+#[derive(Debug, Clone)]
+pub struct RequestStatus {
+    pub id: RequestId,
+    pub state: RequestState,
+    /// Tokens generated so far (the full output once finished).
+    pub tokens: Vec<i32>,
+    /// submit → admission, seconds (`None` until admitted).
+    pub queue_s: Option<f64>,
+    /// submit → first generated token, seconds (`None` until it exists).
+    pub ttft_s: Option<f64>,
+}

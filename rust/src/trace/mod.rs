@@ -101,6 +101,25 @@ fn hash_name(name: &str) -> u64 {
     })
 }
 
+/// Synthesize the serve driver's dummy prompt tokens for `reqs`: one
+/// request → `prompt_tokens` random ids in `[1, vocab)`. The traces carry
+/// lengths only (like the paper's), so token *content* is synthetic — but
+/// it is drawn from one shared stream in request order, which makes a
+/// request's prompt a function of its position in the trace, **not** of
+/// admission order. Under the continuous-batching engine that invariance
+/// is what lets FIFO sessions reproduce the old wave-mode serve
+/// bit-for-bit, and SJF sessions stay comparable per request.
+pub fn synth_prompts(reqs: &[Request], vocab: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    reqs.iter()
+        .map(|r| {
+            (0..r.prompt_tokens.max(1))
+                .map(|_| rng.range(1, vocab as u64) as i32)
+                .collect()
+        })
+        .collect()
+}
+
 /// Fixed-length workload for the microbench figures (12 & 14).
 pub fn fixed_length(n: usize, context: usize, gen: usize) -> Vec<Request> {
     (0..n)
@@ -166,6 +185,23 @@ mod tests {
         let reqs = fixed_length(8, 4096, 64);
         assert!(reqs.iter().all(|r| r.prompt_tokens == 4096 && r.gen_tokens == 64));
         assert_eq!(reqs.len(), 8);
+    }
+
+    #[test]
+    fn synth_prompts_deterministic_per_position() {
+        let reqs = vec![
+            Request { id: 0, prompt_tokens: 5, gen_tokens: 2 },
+            Request { id: 1, prompt_tokens: 3, gen_tokens: 2 },
+        ];
+        let a = synth_prompts(&reqs, 512, 7);
+        let b = synth_prompts(&reqs, 512, 7);
+        assert_eq!(a, b);
+        assert_eq!(a[0].len(), 5);
+        assert_eq!(a[1].len(), 3);
+        assert!(a.iter().flatten().all(|&t| (1..512).contains(&t)));
+        // zero-length prompts are clamped to one token (as serve always did)
+        let z = synth_prompts(&[Request { id: 0, prompt_tokens: 0, gen_tokens: 1 }], 16, 1);
+        assert_eq!(z[0].len(), 1);
     }
 
     #[test]

@@ -3,26 +3,70 @@
 //! "compute-optimised device"), attention on worker threads (the
 //! "memory-optimised pool"), tensors crossing the simulated network.
 //!
-//! Supports the paper's §4.2.2 overlap (send Q early, partial attention on
-//! the workers, combine on K/V arrival) and §4.3 two-wave staggered
-//! pipelining (wave B's slices execute while wave A's attention is in
-//! flight on the worker threads).
+//! # Serving surface: a step-driven, request-lifecycle engine
+//!
+//! Since the continuous-batching redesign the *engine*, not the caller,
+//! owns slots, admission, and step composition. The public surface is
+//! request-lifecycle-shaped:
+//!
+//! * [`DisaggPipeline::submit`] — validate one request (typed
+//!   [`SubmitError`], per request — an invalid request no longer aborts a
+//!   run) and queue it.
+//! * [`DisaggPipeline::step`] — one engine iteration: admit from the
+//!   waiting queue (pluggable [`crate::scheduler::AdmissionPolicy`],
+//!   KV-budget aware in blocks or bytes), then run **either** one chunked-
+//!   prefill pass for the oldest mid-prefill request **or** one decode
+//!   iteration over the running batch, then retire finishes (freeing their
+//!   KV blocks on every worker) — so requests join and leave the running
+//!   batch at *iteration* granularity.
+//! * [`DisaggPipeline::poll`] / [`DisaggPipeline::cancel`] — observe or
+//!   abort an individual request at any point of its lifecycle.
+//! * [`DisaggPipeline::drain`] — step until idle and take the session's
+//!   [`ServeMetrics`] (throughput, TBT, per-request queue time and TTFT,
+//!   KV and wire accounting).
+//!
+//! The scheduling *brain* lives in [`crate::scheduler`] — pure
+//! bookkeeping, property-tested without artifacts; this module only
+//! executes its plans against the engine and the attention workers.
+//! Physical cache slots are an internal concern now: callers never pick
+//! slot ids, and the slot→wire mapping (`StepQ.slots`,
+//! `PrefillChunk.slot`, `Retire.slot`) is unchanged on the workers.
+//!
+//! `serve` survives as a thin driver loop over submit/step/drain (the CLI
+//! and metrics report); `serve_waves` drives the same engine with the
+//! legacy wave-partitioned grouping for comparison benches. `decode`
+//! (teacher-forced golden semantics) and `generate` (chunked prefill +
+//! decode) are drivers over the same surface.
+//!
+//! The paper's §4.2.2 overlap (send Q early, partial attention on the
+//! workers, combine on K/V arrival) and §5 chunked prefill are unchanged
+//! underneath; §4.3's staggered waves survive only as the
+//! [`GroupMode::ByWave`] driver grouping.
 
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::kernels::AttnBackendKind;
-use crate::kvcache::{kv_blocks_needed, KvDtype};
+use crate::kvcache::KvDtype;
 use crate::metrics::{KvCacheStats, ServeMetrics, StepBreakdown};
 use crate::net::{inproc, tcp, Transport, TransportKind};
 use crate::netsim::stack::{NetStackModel, LINE_RATE_400G};
 use crate::runtime::engine::Engine;
 use crate::runtime::host::{copies, HostTensor};
+use crate::scheduler::{
+    AdmissionKind, DecodeRow, GroupMode, KvBudget, KvOccupancy, RequestId, RequestStatus,
+    SchedCfg, Scheduler, StepOutcome, SubmitError,
+};
 use crate::trace::Request;
 
 use super::attn_worker::{run_attn_worker, AttnWorkerCfg, ModelGeom, PAD_SLOT};
 use super::messages::WireMsg;
+
+/// Seed of the serve driver's synthetic prompt stream (`trace::synth_prompts`);
+/// fixed so FIFO continuous-batching sessions reproduce the historical
+/// wave-mode serve token-for-token.
+const SERVE_PROMPT_SEED: u64 = 0x1a31a;
 
 /// Pipeline options.
 #[derive(Debug, Clone)]
@@ -35,15 +79,17 @@ pub struct PipelineOpts {
     pub stack: &'static NetStackModel,
     /// Network pacing factor (0 = functional only, 1 = modelled latencies).
     pub time_scale: f64,
-    /// Batch slots (max concurrent requests per wave).
+    /// Decode batch-group size (max rows per engine decode call).
     pub slots: usize,
     /// Pre-compile every leader entry point at start (removes multi-ms
     /// lazy-compile spikes from the first requests' tail latency).
     pub warmup: bool,
-    /// Maximum staggered waves `serve` may run (sizes the KV slot pools).
+    /// Physical-slot head-room factor: the engine may hold up to
+    /// `slots × max_waves` live requests (sizes the workers' KV slot
+    /// pools; the name is historical — waves are gone from the API).
     pub max_waves: usize,
-    /// Use the chunked-prefill path for prompts in `serve` (paper §5);
-    /// otherwise prompts are teacher-forced through the decode path.
+    /// Use the chunked-prefill path for prompts (paper §5); otherwise
+    /// prompts are teacher-forced through the decode path.
     pub use_prefill: bool,
     /// Token slots per KV block in the workers' paged arenas.
     pub kv_block_size: usize,
@@ -61,11 +107,22 @@ pub struct PipelineOpts {
     /// block-table kernel reading the arena in place — zero per-step KV
     /// copies on the workers).
     pub attn_backend: AttnBackendKind,
-    /// Per-worker KV block budget for admission control (`--kv-budget`).
-    /// `None` = admit unconditionally (the arena grows on demand). With a
-    /// budget, `serve` consults the workers' `KvStats` snapshot +
-    /// `kv_blocks_needed` before admitting and defers requests that would
-    /// overflow it (counted in `ServeMetrics::deferred_admissions`).
+    /// Admission-order policy of the request scheduler (`--admission`):
+    /// `fifo` (arrival order, the legacy behavior) or `sjf` (shortest job
+    /// first among deferred admissions, with FIFO aging so nothing
+    /// starves).
+    pub admission: AdmissionKind,
+    /// Per-worker KV **byte** budget (`--kv-budget`). The preferred unit:
+    /// with quantized block storage a block's byte size differs per
+    /// worker, so bytes budget mixed `--kv-dtype` pools correctly. Takes
+    /// precedence over `kv_block_budget` when both are set.
+    pub kv_byte_budget: Option<usize>,
+    /// Per-worker KV **block** budget (`--kv-budget-blocks`, the legacy
+    /// spelling). `None` (and no byte budget) = admit unconditionally.
+    /// With a budget, admission consults the workers' `KvStats` snapshot +
+    /// the live full-context reservations and defers requests that would
+    /// overflow (counted in `ServeMetrics::deferred_admissions`; both
+    /// budget units are reported in `ServeMetrics`).
     pub kv_block_budget: Option<usize>,
 }
 
@@ -85,6 +142,8 @@ impl PipelineOpts {
             kv_dtype: KvDtype::F32,
             transport: TransportKind::Inproc,
             attn_backend: AttnBackendKind::Engine,
+            admission: AdmissionKind::Fifo,
+            kv_byte_budget: None,
             kv_block_budget: None,
         }
     }
@@ -103,7 +162,7 @@ fn spawn_worker(opts: &PipelineOpts, geom: ModelGeom, idx: usize, respawn: bool)
         artifacts_dir: opts.artifacts_dir.clone(),
         shard: idx,
         n_shards: opts.attn_workers,
-        // distinct physical slots for every wave's requests
+        // the engine may keep up to slots × max_waves requests live
         slots: opts.slots * opts.max_waves,
         kv_block_size: opts.kv_block_size,
         kv_dtype: opts.kv_dtype,
@@ -133,31 +192,18 @@ fn spawn_worker(opts: &PipelineOpts, geom: ModelGeom, idx: usize, respawn: bool)
     }
 }
 
-/// One wave's per-slot decode state.
-#[derive(Debug, Clone)]
-struct SlotState {
-    /// Front-end request id; surfaced by `LAMINA_STEP_TRACE=1` step traces.
-    request_id: u64,
-    /// physical KV cache slot on the attention workers — stable for the
-    /// request's lifetime (wave positions shift as requests retire).
-    cache_slot: u32,
-    /// prompt tokens not yet consumed (fed teacher-forcing through decode)
-    pending_prompt: Vec<i32>,
-    /// cached tokens so far
-    len: i32,
-    /// tokens generated so far (output)
-    generated: Vec<i32>,
-    gen_target: usize,
-    next_input: i32,
-    /// KV blocks (per worker) this request reserves at full context —
-    /// admission-control bookkeeping; 0 outside `serve`.
-    kv_reserved: usize,
-}
-
-impl SlotState {
-    fn done(&self) -> bool {
-        self.pending_prompt.is_empty() && self.generated.len() >= self.gen_target
-    }
+/// One serving session's engine-side state: the scheduler (control plane)
+/// plus per-session accounting. Reset by [`DisaggPipeline::begin_session`].
+struct Session {
+    sched: Scheduler,
+    metrics: ServeMetrics,
+    /// Latest pool-wide KvStats snapshot (feeds the next admission round).
+    kv_snap: KvCacheStats,
+    /// Endpoint wire counters at session start (report this session only).
+    wire_baseline: crate::net::WireStats,
+    /// KV budget in both units (for `ServeMetrics` reporting).
+    budget_blocks: Option<usize>,
+    budget_bytes: Option<usize>,
 }
 
 /// The disaggregated serving pipeline.
@@ -171,11 +217,14 @@ pub struct DisaggPipeline {
     /// tolerance) — folded into `wire_stats` so pool totals survive
     /// recovery.
     retired_wire: crate::net::WireStats,
+    /// The current serving session (always present after `start`).
+    session: Option<Session>,
 }
 
 impl DisaggPipeline {
-    /// Start the pipeline: loads the leader engine and spawns the attention
-    /// worker threads (each builds its own engine).
+    /// Start the pipeline: loads the leader engine, spawns the attention
+    /// worker threads (each builds its own engine), and opens the default
+    /// continuous-batching session.
     pub fn start(opts: PipelineOpts) -> Result<Self> {
         let engine = Engine::load(&opts.artifacts_dir)?;
         if opts.warmup {
@@ -214,13 +263,17 @@ impl DisaggPipeline {
         for w in 0..opts.attn_workers {
             workers.push(spawn_worker(&opts, geom, w, false)?);
         }
-        Ok(DisaggPipeline {
+        let mut pipe = DisaggPipeline {
             engine,
             workers,
             opts,
             step_net_bytes: std::cell::Cell::new(0),
             retired_wire: crate::net::WireStats::new(),
-        })
+            session: None,
+        };
+        let waves = pipe.opts.max_waves;
+        pipe.begin_session(GroupMode::Packed, waves)?;
+        Ok(pipe)
     }
 
     pub fn config(&self) -> &crate::runtime::manifest::ModelCfg {
@@ -229,6 +282,282 @@ impl DisaggPipeline {
 
     pub fn engine_stats(&self) -> crate::runtime::engine::EngineStats {
         self.engine.snapshot_stats()
+    }
+
+    // ---- session lifecycle ------------------------------------------------
+
+    /// Open a fresh serving session: a new scheduler (grouping + slot
+    /// capacity `slots × waves`), fresh metrics, and a fresh wire/KV
+    /// baseline. The previous session must be idle (no live requests);
+    /// its finished requests stop being pollable. Drivers (`serve`,
+    /// `decode`, `generate`, tests) call this; plain `submit`/`step` users
+    /// keep the default session opened at `start` (Packed, full capacity).
+    pub fn begin_session(&mut self, grouping: GroupMode, waves: usize) -> Result<()> {
+        if let Some(s) = &self.session {
+            if !s.sched.is_idle() {
+                bail!("cannot reset the serving session while requests are live");
+            }
+        }
+        assert!(waves >= 1, "need at least one wave of slots");
+        assert!(
+            waves <= self.opts.max_waves,
+            "waves {waves} exceed max_waves {} (slot pools)",
+            self.opts.max_waves
+        );
+        // endpoint counters run from pipeline start; the session reports
+        // only its own traffic — snapshot BEFORE the first control-plane
+        // poll so the poll itself is accounted (as the wave loop did)
+        let wire_baseline = self.wire_stats();
+        let budget = match (self.opts.kv_byte_budget, self.opts.kv_block_budget) {
+            (Some(bytes), _) => KvBudget::Bytes(bytes),
+            (None, Some(blocks)) => KvBudget::Blocks(blocks),
+            (None, None) => KvBudget::Unlimited,
+        };
+        // the startup snapshot feeds only budget accounting (occupancy +
+        // the per-worker block byte size for unit conversion); without a
+        // budget, skip the control-plane round-trip entirely
+        let kv_snap = if budget == KvBudget::Unlimited {
+            KvCacheStats::default()
+        } else {
+            self.kv_stats()?
+        };
+        // per-worker bytes of one block (all layers, K+V, dtype-aware):
+        // the merged snapshot sums blocks and bytes across workers, so the
+        // ratio is exactly one worker-shard block
+        let block_bytes =
+            if kv_snap.total_blocks > 0 { kv_snap.total_bytes / kv_snap.total_blocks } else { 0 };
+        let (budget_blocks, budget_bytes) = match budget {
+            KvBudget::Unlimited => (None, None),
+            KvBudget::Blocks(b) => (Some(b), (block_bytes > 0).then_some(b * block_bytes)),
+            KvBudget::Bytes(b) => ((block_bytes > 0).then(|| b / block_bytes), Some(b)),
+        };
+        let mc = &self.engine.manifest.config;
+        let mut sched = Scheduler::new(
+            SchedCfg {
+                max_context: mc.max_seq - 1,
+                total_slots: self.opts.slots * waves,
+                group_slots: self.opts.slots,
+                grouping,
+                use_prefill: self.opts.use_prefill,
+                kv_block_size: self.opts.kv_block_size,
+                block_bytes,
+                budget,
+            },
+            self.opts.admission.build(),
+        );
+        // ids stay unique across sessions: a stale id from the previous
+        // session must poll as unknown, never alias a new request
+        if let Some(prev) = &self.session {
+            sched.resume_ids_at(prev.sched.next_request_id());
+        }
+        self.session = Some(Session {
+            sched,
+            metrics: ServeMetrics::new(),
+            kv_snap,
+            wire_baseline,
+            budget_blocks,
+            budget_bytes,
+        });
+        Ok(())
+    }
+
+    fn session_ref(&self) -> &Session {
+        self.session.as_ref().expect("serving session exists after start")
+    }
+
+    fn session_mut(&mut self) -> &mut Session {
+        self.session.as_mut().expect("serving session exists after start")
+    }
+
+    // ---- request-lifecycle API (the primary serving surface) --------------
+
+    /// Validate and queue one request: `prompt` is processed per the
+    /// session default (chunked prefill or teacher-forced decode), then
+    /// `gen_tokens` tokens are greedy-decoded. Returns the request's id,
+    /// or a typed per-request [`SubmitError`] — the session is untouched
+    /// either way.
+    pub fn submit(&mut self, prompt: Vec<i32>, gen_tokens: usize) -> Result<RequestId, SubmitError> {
+        self.session_mut().sched.submit(prompt, gen_tokens)
+    }
+
+    /// [`Self::submit`] with an explicit prompt-processing mode
+    /// (`use_prefill = false` forces the teacher-forced golden `decode`
+    /// semantics regardless of the session default).
+    pub fn submit_with_mode(
+        &mut self,
+        prompt: Vec<i32>,
+        gen_tokens: usize,
+        use_prefill: bool,
+    ) -> Result<RequestId, SubmitError> {
+        self.session_mut().sched.submit_with_mode(prompt, gen_tokens, use_prefill)
+    }
+
+    /// One engine iteration: admit, then one prefill chunk **or** one
+    /// decode pass over the running batch (grouped by the session's
+    /// [`GroupMode`]), then retire finishes and refresh the KV snapshot.
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        let workers_n = self.workers.len().max(1);
+        let mut outcome = StepOutcome::default();
+
+        // flush retirements left over from a failed cancel-time send
+        // BEFORE admission can reassign the freed slot — a stale Retire
+        // sent after the new occupant's appends would wipe its KV
+        let leftover = self.session_mut().sched.take_retirements();
+        self.send_retirements(&leftover)?;
+
+        // admission against the latest per-worker occupancy
+        {
+            let s = self.session_mut();
+            let occ = KvOccupancy {
+                blocks_in_use: s.kv_snap.blocks_in_use.div_ceil(workers_n),
+                bytes_in_use: s.kv_snap.bytes_in_use.div_ceil(workers_n),
+            };
+            let (admitted, deferred) = s.sched.admit(occ);
+            if deferred {
+                s.metrics.record_deferred_admission();
+            }
+            outcome.admitted = admitted;
+            outcome.deferred = deferred;
+        }
+
+        // one prefill chunk (admission order), or one decode iteration
+        let next_prefill = self.session_ref().sched.next_prefill();
+        if let Some(p) = next_prefill {
+            let cap = self.max_batch_bucket()?;
+            let chunk = self.session_ref().sched.prompt_chunk(p.id, cap);
+            let next = self.exec_prefill_chunk(p.slot, &chunk, p.cached)?;
+            self.session_mut().sched.note_prefill_chunk(p.id, chunk.len(), next);
+            outcome.prefilled = Some(p.id);
+        } else {
+            let plan = self.session_ref().sched.decode_plan();
+            for rows in plan {
+                if rows.is_empty() {
+                    continue;
+                }
+                // only decode-phase tokens count toward serving metrics
+                let emitting = rows.iter().filter(|r| r.emits).count();
+                let (next, bd) = self.decode_step_rows(&rows)?;
+                let s = self.session_mut();
+                for (row, &tok) in rows.iter().zip(next.iter()) {
+                    s.sched.note_decode(row.id, tok);
+                }
+                if emitting > 0 {
+                    s.metrics.record_step(emitting, bd);
+                }
+                outcome.decoded_rows += rows.len();
+                outcome.decode_groups += 1;
+            }
+        }
+
+        // retire finishes: finish EVENTS (all finishes) drive outcome and
+        // per-request metrics; RETIREMENTS (only finishes that materialized
+        // KV) drive the Retire wire messages.
+        let finished_ids = self.session_mut().sched.take_finished();
+        let retires = self.session_mut().sched.take_retirements();
+        let did_work = outcome.admitted > 0
+            || outcome.prefilled.is_some()
+            || outcome.decoded_rows > 0
+            || !finished_ids.is_empty()
+            || !retires.is_empty();
+        // A snapshot costs one control-plane round-trip per worker, so only
+        // refresh when it is consumed: every productive step when the KV
+        // budget is bounded (admission reads it), otherwise only on steps
+        // that retire something. Occupancy is non-decreasing between
+        // retires and the snapshot lands before the Retire messages, so
+        // retire-step snapshots still capture the exact peak.
+        let budget_bounded =
+            !matches!(self.session_ref().sched.cfg().budget, KvBudget::Unlimited);
+        if did_work && (budget_bounded || !retires.is_empty()) {
+            let snap = self.kv_stats()?;
+            let s = self.session_mut();
+            s.kv_snap = snap;
+            s.metrics.record_kv(snap);
+        }
+        self.send_retirements(&retires)?;
+        let mut completed = 0u64;
+        for &id in &finished_ids {
+            let s = self.session_mut();
+            if let Some((queue_s, ttft_s, tokens)) = s.sched.lifecycle(id) {
+                s.metrics.record_request(queue_s, ttft_s, tokens as u64);
+                completed += 1;
+            }
+            outcome.finished.push(id);
+        }
+        let s = self.session_mut();
+        s.metrics.record_completion(completed);
+        outcome.idle = s.sched.is_idle();
+        Ok(outcome)
+    }
+
+    /// Send `Retire` for each pending retirement; on a send failure the
+    /// failed entry AND everything not yet sent are re-queued so a later
+    /// step retries them (never silently dropped), and the transport error
+    /// propagates.
+    fn send_retirements(&mut self, retires: &[(RequestId, u32)]) -> Result<()> {
+        for i in 0..retires.len() {
+            let (_, slot) = retires[i];
+            if let Err(e) = self.retire_slot(slot) {
+                let s = self.session_mut();
+                for &(rid, rslot) in &retires[i..] {
+                    s.sched.push_retirement(rid, rslot);
+                }
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    /// Observe a request: lifecycle state, tokens generated so far, queue
+    /// delay and TTFT once known. `None` for ids the current session does
+    /// not know.
+    pub fn poll(&self, id: RequestId) -> Option<RequestStatus> {
+        self.session.as_ref().and_then(|s| s.sched.poll(id))
+    }
+
+    /// Cancel a request (queued → dropped; live → retired as
+    /// `Finished(Cancelled)` with its KV blocks freed on the workers
+    /// immediately).
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        let cancelled = self.session.as_mut().map_or(false, |s| s.sched.cancel(id));
+        if cancelled {
+            // flush the retirement NOW (wire order is FIFO, so this is
+            // race-free while the slot is still unassigned). A failed send
+            // is re-queued and retried at the START of the next step —
+            // i.e. still before admission could hand the slot out — where
+            // the transport error surfaces through step()'s Result.
+            let retired = self.session_mut().sched.take_retirements();
+            let _ = self.send_retirements(&retired);
+        }
+        cancelled
+    }
+
+    /// Drop finished requests' bookkeeping (prompt and output buffers);
+    /// their ids stop being pollable. Long-running submit/step servers
+    /// should call this after consuming outputs — otherwise completed
+    /// entries accumulate for the session's lifetime. The `serve` driver
+    /// does it automatically.
+    pub fn clear_finished(&mut self) {
+        if let Some(s) = &mut self.session {
+            s.sched.clear_finished();
+        }
+    }
+
+    /// Step until the session is idle, then take its metrics (wire delta
+    /// and KV-budget report included). Finished requests stay pollable
+    /// until the next `begin_session`.
+    pub fn drain(&mut self) -> Result<ServeMetrics> {
+        loop {
+            if self.step()?.idle {
+                break;
+            }
+        }
+        let wire = self.wire_stats();
+        let s = self.session_mut();
+        let mut m = std::mem::take(&mut s.metrics);
+        m.record_wire(&wire.delta_since(&s.wire_baseline));
+        m.set_kv_budget(s.budget_blocks, s.budget_bytes);
+        s.wire_baseline = wire;
+        Ok(m)
     }
 
     // ---- attention round-trip -------------------------------------------
@@ -336,15 +665,16 @@ impl DisaggPipeline {
         Ok(sum)
     }
 
-    // ---- one decode step for one wave -----------------------------------
+    // ---- one decode iteration for one batch group -------------------------
 
-    /// Execute one full decode step for the given wave. Returns the next
-    /// token per active row and the step's breakdown.
-    fn decode_step(&self, wave: &mut [SlotState], active: &[usize]) -> Result<(Vec<i32>, StepBreakdown)> {
+    /// Execute one full decode step for the given batch rows (the
+    /// scheduler's plan). Returns the next token per row and the step's
+    /// breakdown.
+    fn decode_step_rows(&self, rows: &[DecodeRow]) -> Result<(Vec<i32>, StepBreakdown)> {
         let mc = self.config();
         let step_t0 = Instant::now();
         self.step_net_bytes.set(0);
-        let b = active.len();
+        let b = rows.len();
         let bucket = self
             .engine
             .manifest
@@ -356,13 +686,12 @@ impl DisaggPipeline {
         let mut lens = vec![0i32; bucket];
         let mut slots = vec![PAD_SLOT; bucket];
         let mut max_len_after = 1usize;
-        for (i, &si) in active.iter().enumerate() {
-            let s = &wave[si];
-            tokens[i] = s.next_input;
-            pos[i] = s.len;
-            lens[i] = s.len;
-            slots[i] = s.cache_slot;
-            max_len_after = max_len_after.max(s.len as usize + 1);
+        for (i, r) in rows.iter().enumerate() {
+            tokens[i] = r.input;
+            pos[i] = r.len;
+            lens[i] = r.len;
+            slots[i] = r.slot;
+            max_len_after = max_len_after.max(r.len as usize + 1);
         }
         let seq_bucket = self
             .engine
@@ -371,7 +700,7 @@ impl DisaggPipeline {
             .ok_or_else(|| anyhow!("context {max_len_after} exceeds max seq bucket"))?;
 
         if step_trace_enabled() {
-            let ids: Vec<u64> = active.iter().map(|&si| wave[si].request_id).collect();
+            let ids: Vec<RequestId> = rows.iter().map(|r| r.id).collect();
             eprintln!(
                 "[step-trace] reqs={ids:?} slots={slots:?} lens={lens:?} \
                  bucket={bucket} seq_bucket={seq_bucket}"
@@ -452,114 +781,109 @@ impl DisaggPipeline {
         unreachable!("loop returns at last layer");
     }
 
-    /// Advance a wave by one decode step: pick active slots, run the step,
-    /// apply teacher forcing for unconsumed prompt tokens, collect outputs.
-    fn step_wave(&self, wave: &mut Vec<SlotState>) -> Result<Option<StepBreakdown>> {
-        let active: Vec<usize> = (0..wave.len()).filter(|&i| !wave[i].done()).collect();
-        if active.is_empty() {
-            return Ok(None);
-        }
-        let (next, bd) = self.decode_step(wave, &active)?;
-        for (row, &si) in active.iter().enumerate() {
-            let s = &mut wave[si];
-            s.len += 1;
-            let produced = next[row];
-            s.next_input = if let Some(tok) = s.pending_prompt.first().copied() {
-                s.pending_prompt.remove(0);
-                tok
-            } else {
-                if s.generated.len() < s.gen_target {
-                    s.generated.push(produced);
-                }
-                produced
-            };
-        }
-        Ok(Some(bd))
-    }
-
     // ---- chunked prefill (paper §5) ---------------------------------------
 
-    /// Prefill `prompt` for cache slot `slot` in chunks of the largest batch
-    /// bucket, returning the first generated token. The KV lands on the
-    /// attention workers layer-by-layer exactly as the paper's transition
-    /// protocol streams it.
-    pub fn prefill(&self, slot: u32, prompt: &[i32]) -> Result<i32> {
+    /// Execute ONE chunked-prefill pass for `slot`: `chunk` holds prompt
+    /// tokens for positions `cached..cached+chunk.len()`. Returns the
+    /// model's next-token prediction after the chunk's last valid row (the
+    /// request's first generated token once the final chunk lands). The KV
+    /// lands on the attention workers layer-by-layer exactly as the
+    /// paper's transition protocol streams it.
+    fn exec_prefill_chunk(&self, slot: u32, chunk: &[i32], cached: usize) -> Result<i32> {
         let mc = self.config().clone();
-        assert!(!prompt.is_empty());
-        let chunk = *self
+        let valid = chunk.len();
+        assert!(valid > 0, "empty prefill chunk");
+        let bucket = self
             .engine
             .manifest
-            .batch_buckets
-            .iter()
-            .max()
-            .ok_or_else(|| anyhow!("no batch buckets"))?;
+            .batch_bucket(valid)
+            .ok_or_else(|| anyhow!("chunk exceeds buckets"))?;
+        let seq_bucket = self
+            .engine
+            .manifest
+            .seq_bucket(cached + bucket)
+            .ok_or_else(|| anyhow!("prompt exceeds context window"))?;
+
+        let mut tokens = vec![0i32; bucket];
+        let mut pos = vec![0i32; bucket];
+        for i in 0..valid {
+            tokens[i] = chunk[i];
+            pos[i] = (cached + i) as i32;
+        }
+        for (i, p) in pos.iter_mut().enumerate().skip(valid) {
+            *p = (cached + i) as i32; // padding rows: harmless positions
+        }
+        let tokens_t = HostTensor::i32(vec![bucket], tokens);
+        let pos_t = HostTensor::i32(vec![bucket], pos);
+
+        let mut outs = self.engine.execute(
+            "slice_first",
+            bucket,
+            None,
+            &[&tokens_t, &pos_t],
+            &first_weight_names(),
+        )?;
+        let (mut q, mut k, mut v, mut resid) = take4(&mut outs)?;
+        let mut next_token = 0i32;
+
+        for layer in 0..mc.layers {
+            self.send_prefill(layer, slot, &q, &k, &v, cached as i32, valid, seq_bucket)?;
+            let attn_out = self.recv_attn(layer, bucket)?;
+            if layer + 1 < mc.layers {
+                let mut outs = self.engine.execute(
+                    "slice_mid",
+                    bucket,
+                    None,
+                    &[&attn_out, &resid, &pos_t],
+                    &mid_weight_names(layer),
+                )?;
+                let (q2, k2, v2, r2) = take4(&mut outs)?;
+                q = q2;
+                k = k2;
+                v = v2;
+                resid = r2;
+            } else {
+                let outs = self.engine.execute(
+                    "slice_last",
+                    bucket,
+                    None,
+                    &[&attn_out, &resid],
+                    &last_weight_names(mc.layers),
+                )?;
+                let next = &outs[1];
+                next_token = next.as_i32()[valid - 1];
+            }
+        }
+        Ok(next_token)
+    }
+
+    /// Prefill `prompt` into cache slot `slot` in chunks of the largest
+    /// batch bucket, returning the first generated token. Low-level: the
+    /// engine normally drives prefill chunk-by-chunk through `step`; this
+    /// whole-prompt form is the KV *rebuild* path (worker recovery replays
+    /// known token history through it — see [`Self::recover_attn_worker`]).
+    pub fn prefill(&self, slot: u32, prompt: &[i32]) -> Result<i32> {
+        assert!(!prompt.is_empty());
+        let chunk = self.max_batch_bucket()?;
         let mut cached = 0usize;
         let mut next_token = 0i32;
         while cached < prompt.len() {
-            let valid = (prompt.len() - cached).min(chunk);
-            let bucket = self
-                .engine
-                .manifest
-                .batch_bucket(valid)
-                .ok_or_else(|| anyhow!("chunk exceeds buckets"))?;
-            let seq_bucket = self
-                .engine
-                .manifest
-                .seq_bucket(cached + bucket)
-                .ok_or_else(|| anyhow!("prompt exceeds context window"))?;
-
-            let mut tokens = vec![0i32; bucket];
-            let mut pos = vec![0i32; bucket];
-            for i in 0..valid {
-                tokens[i] = prompt[cached + i];
-                pos[i] = (cached + i) as i32;
-            }
-            for (i, p) in pos.iter_mut().enumerate().skip(valid) {
-                *p = (cached + i) as i32; // padding rows: harmless positions
-            }
-            let tokens_t = HostTensor::i32(vec![bucket], tokens);
-            let pos_t = HostTensor::i32(vec![bucket], pos);
-
-            let mut outs = self.engine.execute(
-                "slice_first",
-                bucket,
-                None,
-                &[&tokens_t, &pos_t],
-                &first_weight_names(),
-            )?;
-            let (mut q, mut k, mut v, mut resid) = take4(&mut outs)?;
-
-            for layer in 0..mc.layers {
-                self.send_prefill(layer, slot, &q, &k, &v, cached as i32, valid, seq_bucket)?;
-                let attn_out = self.recv_attn(layer, bucket)?;
-                if layer + 1 < mc.layers {
-                    let mut outs = self.engine.execute(
-                        "slice_mid",
-                        bucket,
-                        None,
-                        &[&attn_out, &resid, &pos_t],
-                        &mid_weight_names(layer),
-                    )?;
-                    let (q2, k2, v2, r2) = take4(&mut outs)?;
-                    q = q2;
-                    k = k2;
-                    v = v2;
-                    resid = r2;
-                } else {
-                    let outs = self.engine.execute(
-                        "slice_last",
-                        bucket,
-                        None,
-                        &[&attn_out, &resid],
-                        &last_weight_names(mc.layers),
-                    )?;
-                    let next = &outs[1];
-                    next_token = next.as_i32()[valid - 1];
-                }
-            }
-            cached += valid;
+            let take = (prompt.len() - cached).min(chunk);
+            next_token = self.exec_prefill_chunk(slot, &prompt[cached..cached + take], cached)?;
+            cached += take;
         }
         Ok(next_token)
+    }
+
+    /// Largest batch bucket: the chunked-prefill chunk size.
+    fn max_batch_bucket(&self) -> Result<usize> {
+        self.engine
+            .manifest
+            .batch_buckets
+            .iter()
+            .copied()
+            .max()
+            .ok_or_else(|| anyhow!("no batch buckets"))
     }
 
     /// Pool-wide wire-traffic accounting: per-message-class logical
@@ -587,6 +911,11 @@ impl DisaggPipeline {
     /// The KV block storage dtype the workers' arenas run.
     pub fn kv_dtype(&self) -> KvDtype {
         self.opts.kv_dtype
+    }
+
+    /// The admission policy the scheduler runs.
+    pub fn admission(&self) -> AdmissionKind {
+        self.opts.admission
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -622,224 +951,93 @@ impl DisaggPipeline {
         Ok(())
     }
 
-    /// Prefill-then-decode: run the prompt through the chunked prefill path,
-    /// then greedy-decode `steps` tokens. Must produce exactly the same
-    /// tokens as the teacher-forced `decode` path (asserted in tests).
-    pub fn generate(&self, slot: u32, prompt: &[i32], steps: usize) -> Result<Vec<i32>> {
-        let first = self.prefill(slot, prompt)?;
-        let mut wave = vec![SlotState {
-            request_id: slot as u64,
-            cache_slot: slot,
-            pending_prompt: Vec::new(),
-            len: prompt.len() as i32,
-            generated: vec![first],
-            gen_target: steps,
-            next_input: first,
-            kv_reserved: 0,
-        }];
-        while wave[0].generated.len() < steps {
-            let (next, _) = self.decode_step(&mut wave, &[0])?;
-            let s = &mut wave[0];
-            s.len += 1;
-            s.generated.push(next[0]);
-            s.next_input = next[0];
-        }
-        let mut out = wave.remove(0).generated;
-        out.truncate(steps);
-        Ok(out)
-    }
+    // ---- driver loops over the request-lifecycle API ----------------------
 
-    // ---- public decoding APIs --------------------------------------------
-
-    /// Greedy-decode `steps` tokens for each prompt (single wave, batch =
-    /// prompts.len(), must fit in the slot count). Returns generated ids.
-    pub fn decode(&self, prompts: &[Vec<i32>], steps: usize) -> Result<Vec<Vec<i32>>> {
-        if prompts.len() > self.opts.slots {
-            bail!("batch {} exceeds slots {}", prompts.len(), self.opts.slots);
+    /// Greedy-decode `steps` tokens for each prompt with the golden
+    /// teacher-forced semantics (prompts feed through the decode path).
+    /// A driver loop: submit every prompt, drain, collect outputs. Bit-
+    /// identical to the historical wave-bound `decode` for any batch that
+    /// fits one group (per-request tokens are batch-invariant, so larger
+    /// batches queue instead of erroring).
+    pub fn decode(&mut self, prompts: &[Vec<i32>], steps: usize) -> Result<Vec<Vec<i32>>> {
+        let waves = self.opts.max_waves;
+        self.begin_session(GroupMode::Packed, waves)?;
+        let mut ids = Vec::with_capacity(prompts.len());
+        for p in prompts {
+            match self.submit_with_mode(p.clone(), steps, false) {
+                Ok(id) => ids.push(id),
+                Err(e) => {
+                    // roll the partial batch back: leaving queued requests
+                    // behind would wedge the next begin_session
+                    for &id in &ids {
+                        self.cancel(id);
+                    }
+                    return Err(anyhow!("decode: {e}"));
+                }
+            }
         }
-        let mut wave: Vec<SlotState> = prompts
+        self.drain()?;
+        Ok(ids
             .iter()
-            .enumerate()
-            .map(|(i, p)| {
-                assert!(!p.is_empty(), "empty prompt");
-                SlotState {
-                    request_id: i as u64,
-                    cache_slot: i as u32,
-                    pending_prompt: p[1..].to_vec(),
-                    len: 0,
-                    generated: Vec::new(),
-                    gen_target: steps,
-                    next_input: p[0],
-                    kv_reserved: 0,
-                }
-            })
-            .collect();
-        while self.step_wave(&mut wave)?.is_some() {}
-        Ok(wave.into_iter().map(|s| s.generated).collect())
+            .map(|&id| self.poll(id).expect("just submitted").tokens)
+            .collect())
     }
 
-    /// Serve a request list with continuous batching across `waves`
-    /// staggered waves. Requests use synthetic prompts of the declared
-    /// lengths (the traces carry lengths only, like the paper's). Slot-based
-    /// admission: a waiting request joins as soon as a slot in some wave
-    /// frees up (iteration-granularity batching).
-    pub fn serve(&self, requests: &[Request], waves: usize) -> Result<ServeMetrics> {
-        let mc = self.config();
-        assert!(waves >= 1, "need at least one wave");
-        assert!(
-            waves <= self.opts.max_waves,
-            "waves {waves} exceed max_waves {} (slot pools)",
-            self.opts.max_waves
-        );
-        let max_ctx = mc.max_seq - 1;
-        for r in requests {
-            if r.max_context() > max_ctx {
-                bail!(
-                    "request {} context {} exceeds tiny-model max {max_ctx}",
-                    r.id,
-                    r.max_context()
-                );
+    /// Prefill-then-decode for one prompt: chunked prefill populates the
+    /// KV cache, then `steps` tokens are greedy-decoded. Must produce
+    /// exactly the same tokens as the teacher-forced `decode` path
+    /// (asserted in tests). The engine picks the slot.
+    pub fn generate(&mut self, prompt: &[i32], steps: usize) -> Result<Vec<i32>> {
+        let waves = self.opts.max_waves;
+        self.begin_session(GroupMode::Packed, waves)?;
+        let id = self
+            .submit_with_mode(prompt.to_vec(), steps, true)
+            .map_err(|e| anyhow!("generate: {e}"))?;
+        self.drain()?;
+        Ok(self.poll(id).expect("just submitted").tokens)
+    }
+
+    /// Serve a request list with continuous batching: a thin driver loop
+    /// over submit/step/drain (kept for the CLI and metrics report).
+    /// Requests use synthetic prompts of the declared lengths (the traces
+    /// carry lengths only, like the paper's). `waves` only scales the
+    /// engine's live-request capacity to `slots × waves`; batch
+    /// composition is iteration-granular regardless. Invalid requests are
+    /// rejected individually (`ServeMetrics::rejected_submissions`) — the
+    /// run no longer aborts.
+    pub fn serve(&mut self, requests: &[Request], waves: usize) -> Result<ServeMetrics> {
+        self.serve_with(requests, waves, GroupMode::Packed)
+    }
+
+    /// The legacy wave-partitioned driver: same engine, same admission,
+    /// but decode groups follow the physical slot ranges (wave `w` = slots
+    /// `[w·slots, (w+1)·slots)`), so half-empty waves step alone exactly
+    /// like the old wave-bound loop. Survives only for comparison — the
+    /// `e2e/continuous-batching` bench rows measure what iteration-level
+    /// repacking buys over it.
+    pub fn serve_waves(&mut self, requests: &[Request], waves: usize) -> Result<ServeMetrics> {
+        self.serve_with(requests, waves, GroupMode::ByWave)
+    }
+
+    fn serve_with(
+        &mut self,
+        requests: &[Request],
+        waves: usize,
+        grouping: GroupMode,
+    ) -> Result<ServeMetrics> {
+        let vocab = self.config().vocab;
+        self.begin_session(grouping, waves)?;
+        let prompts = crate::trace::synth_prompts(requests, vocab, SERVE_PROMPT_SEED);
+        for (r, prompt) in requests.iter().zip(prompts) {
+            if let Err(e) = self.submit(prompt, r.gen_tokens) {
+                eprintln!("serve: rejecting request {}: {e}", r.id);
+                self.session_mut().metrics.record_rejection();
             }
         }
-        let mut waiting: std::collections::VecDeque<Request> =
-            requests.iter().copied().collect();
-        let mut waves_state: Vec<Vec<SlotState>> = (0..waves).map(|_| Vec::new()).collect();
-        // physical cache slots are partitioned across waves and recycled via
-        // a per-wave free list (stable for each request's lifetime)
-        let mut free_slots: Vec<Vec<u32>> = (0..waves)
-            .map(|w| {
-                (0..self.opts.slots as u32)
-                    .map(|s| (w * self.opts.slots) as u32 + s)
-                    .rev()
-                    .collect()
-            })
-            .collect();
-        let mut metrics = ServeMetrics::new();
-        let mut rng = crate::util::prng::Rng::new(0x1a31a);
-        let workers_n = self.workers.len().max(1);
-        // endpoint counters run from pipeline start; report only this
-        // session's traffic (snapshot before the first control-plane poll)
-        let wire_baseline = self.wire_stats();
-        // KV admission-control state: latest pool snapshot (refreshed every
-        // round) + running per-worker block reservation of live requests
-        // (each request is reserved its full-context footprint on admission;
-        // block counts are worker-invariant under head-level sharding)
-        let mut kv_snap = self.kv_stats()?;
-        let mut live_reserved: usize = 0;
-
-        loop {
-            // admission: fill free slots round-robin across waves; with a
-            // KV budget, a request that would overflow the workers' arenas
-            // is deferred until retirements free blocks (FIFO preserved)
-            let mut any_live = waves_state.iter().any(|w| !w.is_empty());
-            let mut admission_blocked = false;
-            for (wi, ws) in waves_state.iter_mut().enumerate() {
-                if admission_blocked {
-                    break;
-                }
-                while let Some(&slot) = free_slots[wi].last() {
-                    let Some(r) = waiting.front().copied() else { break };
-                    let needed = kv_blocks_needed(&[r.max_context()], self.opts.kv_block_size);
-                    if let Some(budget) = self.opts.kv_block_budget {
-                        // worst-case per-worker residency if r joins: live
-                        // reservations (requests grow to full context) or
-                        // the measured snapshot, whichever is larger
-                        let in_use = kv_snap.blocks_in_use.div_ceil(workers_n);
-                        if any_live && live_reserved.max(in_use) + needed > budget {
-                            metrics.record_deferred_admission();
-                            admission_blocked = true;
-                            break;
-                        }
-                        // with no live request to wait for, admission
-                        // proceeds regardless (deferring could never free
-                        // blocks) — the budget is a back-pressure valve,
-                        // not a hard rejection
-                    }
-                    waiting.pop_front();
-                    free_slots[wi].pop();
-                    live_reserved += needed;
-                    any_live = true;
-                    let prompt: Vec<i32> = (0..r.prompt_tokens.max(1))
-                        .map(|_| rng.range(1, mc.vocab as u64) as i32)
-                        .collect();
-                    if self.opts.use_prefill && prompt.len() > 1 {
-                        // chunked prefill populates the KV cache; the first
-                        // generated token comes out of the prefill pass
-                        let first = self.prefill(slot, &prompt)?;
-                        ws.push(SlotState {
-                            request_id: r.id,
-                            cache_slot: slot,
-                            pending_prompt: Vec::new(),
-                            len: prompt.len() as i32,
-                            generated: vec![first],
-                            gen_target: r.gen_tokens,
-                            next_input: first,
-                            kv_reserved: needed,
-                        });
-                    } else {
-                        ws.push(SlotState {
-                            request_id: r.id,
-                            cache_slot: slot,
-                            pending_prompt: prompt[1..].to_vec(),
-                            len: 0,
-                            generated: Vec::new(),
-                            gen_target: r.gen_tokens,
-                            next_input: prompt[0],
-                            kv_reserved: needed,
-                        });
-                    }
-                }
-            }
-            if waves_state.iter().all(|w| w.is_empty()) && waiting.is_empty() {
-                break;
-            }
-
-            // one round: step every wave (worker threads overlap waves'
-            // attention with the leader's slices of the other wave)
-            let mut retired: Vec<u32> = Vec::new();
-            for (wi, ws) in waves_state.iter_mut().enumerate() {
-                let decoding = ws
-                    .iter()
-                    .filter(|s| s.pending_prompt.is_empty() && !s.done())
-                    .count();
-                if let Some(bd) = self.step_wave(ws)? {
-                    // only decode-phase tokens count toward serving metrics
-                    if decoding > 0 {
-                        metrics.record_step(decoding, bd);
-                    }
-                }
-                let before = ws.len();
-                ws.retain(|s| {
-                    if s.done() {
-                        free_slots[wi].push(s.cache_slot); // recycle KV slot
-                        retired.push(s.cache_slot);
-                        live_reserved -= s.kv_reserved;
-                        false
-                    } else {
-                        true
-                    }
-                });
-                metrics.record_completion((before - ws.len()) as u64);
-            }
-
-            // per-round KV occupancy snapshot, taken BEFORE retiring the
-            // round's completed requests so kv_peak_blocks reflects true
-            // residency (a request that finishes in its first round must
-            // still show up in the peak); the same snapshot feeds the next
-            // round's admission check
-            kv_snap = self.kv_stats()?;
-            metrics.record_kv(kv_snap);
-
-            // now free the finished requests' KV blocks on every worker —
-            // arena residency tracks live context, not slot capacity
-            for slot in retired {
-                self.retire_slot(slot)?;
-            }
-        }
-        // pool-wide wire accounting: measured serialized bytes next to the
-        // logical wire_bytes() model, per message class (this session only)
-        metrics.record_wire(&self.wire_stats().delta_since(&wire_baseline));
-        Ok(metrics)
+        let m = self.drain()?;
+        // cap per-request bookkeeping; a fresh driver run repolls nothing
+        self.clear_finished();
+        Ok(m)
     }
 
     // ---- fault tolerance (paper §5) ---------------------------------------

@@ -5,14 +5,44 @@
 //! through PJRT and drives the decode loop. The **attention workers**
 //! ([`attn_worker`]) are the memory-optimised pool: each owns a head shard
 //! (`KH/W` KV heads) of *every* request's KV cache and runs the attention
-//! artifacts for it. Tensors cross between them over a pluggable
+//! math for it. Tensors cross between them over a pluggable
 //! [`crate::net::Transport`] — the paced in-process channel
 //! (`netsim::transport`, `--transport inproc`) or real TCP loopback
 //! sockets carrying serialized `net::codec` frames (`--transport tcp`) —
-//! preserving the paper's §4.2.2 Q-early overlap and §4.3 staggered-wave
-//! pipelining over either wire. Both worker loops are generic over the
-//! trait; the full decode + chunked-prefill session is bit-identical
-//! across transports (asserted by `tests/net_e2e.rs`).
+//! preserving the paper's §4.2.2 Q-early overlap over either wire. Both
+//! worker loops are generic over the trait; the full decode +
+//! chunked-prefill session is bit-identical across transports (asserted
+//! by `tests/net_e2e.rs`).
+//!
+//! # Serving: a request-lifecycle engine (continuous batching)
+//!
+//! The leader's public surface is step-driven and request-shaped — the
+//! engine owns slots, admission, and step composition; callers own
+//! nothing but their request ids:
+//!
+//! ```text
+//!   submit() ─▶ Queued ─admit─▶ Prefilling ─last chunk─▶ Decoding ─target─▶ Finished{Completed}
+//!                 │               (teacher-forced requests skip Prefilling)        ▲
+//!                 └──────────────────────── cancel() ───────────────▶ Finished{Cancelled}
+//!
+//!   step()  =  admit (policy + KV budget)  →  one prefill chunk │ one decode
+//!              iteration over the running batch  →  retire finishes
+//! ```
+//!
+//! Requests join and leave the running batch at **iteration** granularity
+//! (Orca-style continuous batching). The scheduling control plane — the
+//! waiting queue, the per-request state machine above, the dynamic slot
+//! pool, and the pluggable admission policy (`--admission fifo|sjf`,
+//! budget in KV blocks or bytes) — lives in [`crate::scheduler`] and is
+//! property-tested without artifacts; this module executes its plans.
+//!
+//! **Who owns slots now:** the scheduler hands each admitted request a
+//! physical cache slot from a free pool and recycles it at retirement.
+//! The slot→wire mapping (`StepQ.slots`, `PrefillChunk.slot`,
+//! `Retire.slot`) is unchanged — attention workers are oblivious to the
+//! redesign. The paper's §4.3 staggered waves survive only as a driver
+//! loop (`serve_waves`, `GroupMode::ByWave`) for comparison benches;
+//! `serve` itself is a thin driver over submit/step/drain.
 //!
 //! # Memory: block-paged KV arenas
 //!

@@ -2,14 +2,17 @@
 //!
 //! The Rust coordinator loads the AOT artifacts (L2 slices + L1 Pallas
 //! attention lowered to HLO), spawns head-sharded attention workers, and
-//! greedy-decodes the golden prompts. The produced tokens must equal
-//! `golden.json`, which python generated with the *unsliced* reference
-//! model — proving slicing + disaggregation + head sharding + (optionally)
-//! overlap are all semantics-preserving.
+//! greedy-decodes the golden prompts through the request-lifecycle engine
+//! (`submit`/`step`/`poll`/`drain`; `decode`/`generate`/`serve` are driver
+//! loops over it). The produced tokens must equal `golden.json`, which
+//! python generated with the *unsliced* reference model — proving slicing
+//! + disaggregation + head sharding + (optionally) overlap + the
+//! continuous-batching scheduler are all semantics-preserving.
 
 use std::path::PathBuf;
 
 use lamina::netsim::stack::NCCL;
+use lamina::scheduler::{FinishReason, GroupMode, RequestState, SubmitError};
 use lamina::trace::Request;
 use lamina::util::json::Json;
 use lamina::workers::{DisaggPipeline, PipelineOpts};
@@ -59,7 +62,7 @@ fn run_golden(overlap: bool, attn_workers: usize) {
         attn_workers,
         ..PipelineOpts::new(artifacts_dir())
     };
-    let pipe = DisaggPipeline::start(opts).expect("pipeline start");
+    let mut pipe = DisaggPipeline::start(opts).expect("pipeline start");
     let out = pipe.decode(&g.prompts, g.steps).expect("decode");
     pipe.shutdown();
     assert_eq!(out, g.generated, "decoded tokens diverge from golden (overlap={overlap}, workers={attn_workers})");
@@ -88,11 +91,12 @@ fn golden_decode_overlap_single_worker() {
 #[test]
 fn decode_batch_invariance() {
     // A prompt's decode must not depend on its batch-mates (KV isolation
-    // across slots on the attention workers).
+    // across slots on the attention workers) — also the property that
+    // makes continuous-batching output equal wave-mode output.
     if !have_artifacts() {
         return;
     }
-    let pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
+    let mut pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
     let solo = pipe.decode(&[vec![7, 8, 9]], 6).unwrap();
     let pair = pipe
         .decode(&[vec![7, 8, 9], vec![100, 3, 100, 55]], 6)
@@ -106,7 +110,7 @@ fn decode_deterministic_across_runs() {
     if !have_artifacts() {
         return;
     }
-    let pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
+    let mut pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
     let a = pipe.decode(&[vec![5, 6]], 5).unwrap();
     let b = pipe.decode(&[vec![5, 6]], 5).unwrap();
     pipe.shutdown();
@@ -116,7 +120,8 @@ fn decode_deterministic_across_runs() {
 #[test]
 fn serve_small_trace_with_metrics() {
     // Continuous-batching serve over mixed-length requests, with paced NCCL
-    // networking; verifies completions and sane metrics.
+    // networking; verifies completions and sane metrics (including the new
+    // per-request queue/TTFT aggregates).
     if !have_artifacts() {
         return;
     }
@@ -125,7 +130,7 @@ fn serve_small_trace_with_metrics() {
         time_scale: 1.0, // real modelled network pacing
         ..PipelineOpts::new(artifacts_dir())
     };
-    let pipe = DisaggPipeline::start(opts).unwrap();
+    let mut pipe = DisaggPipeline::start(opts).unwrap();
     let reqs: Vec<Request> = (0..12)
         .map(|i| Request {
             id: i,
@@ -136,19 +141,23 @@ fn serve_small_trace_with_metrics() {
     let metrics = pipe.serve(&reqs, 1).unwrap();
     pipe.shutdown();
     assert_eq!(metrics.requests_completed, 12);
+    assert_eq!(metrics.rejected_submissions(), 0);
     // first tokens come out of the prefill pass (not decode steps), so the
     // decode-step token count is below the total generation volume
     assert!(metrics.tokens_generated > 0);
     assert!(metrics.throughput() > 0.0);
     assert!(metrics.mean_tbt() > 0.0);
+    // per-request lifecycle metrics are populated
+    assert!(metrics.mean_ttft_s() > 0.0);
+    assert!(metrics.mean_request_tokens() >= 2.0);
 }
 
 #[test]
-fn serve_two_waves_staggered() {
+fn serve_capacity_scaled_by_waves() {
     if !have_artifacts() {
         return;
     }
-    let pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
+    let mut pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
     let reqs: Vec<Request> = (0..10)
         .map(|i| Request { id: i, prompt_tokens: 4, gen_tokens: 3 })
         .collect();
@@ -158,32 +167,67 @@ fn serve_two_waves_staggered() {
 }
 
 #[test]
-fn oversized_context_rejected() {
+fn wave_driver_matches_continuous_serve() {
+    // The legacy wave-partitioned driver is a grouping change only: same
+    // engine, same admission, same completions and token volume.
     if !have_artifacts() {
         return;
     }
-    let pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
-    let huge = [Request { id: 0, prompt_tokens: 10_000, gen_tokens: 4 }];
-    assert!(pipe.serve(&huge, 1).is_err());
+    let reqs: Vec<Request> = (0..14)
+        .map(|i| Request {
+            id: i,
+            prompt_tokens: 2 + (i as usize % 6) * 4,
+            gen_tokens: 1 + (i as usize % 5),
+        })
+        .collect();
+    let mut pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
+    let cont = pipe.serve(&reqs, 2).unwrap();
+    let wave = pipe.serve_waves(&reqs, 2).unwrap();
     pipe.shutdown();
+    assert_eq!(cont.requests_completed, wave.requests_completed);
+    assert_eq!(cont.tokens_generated, wave.tokens_generated);
+}
+
+#[test]
+fn oversized_context_rejected_per_request() {
+    // Satellite: up-front whole-trace validation is gone; an invalid
+    // request fails with a typed SubmitError at submit time and the rest
+    // of the run proceeds.
+    if !have_artifacts() {
+        return;
+    }
+    let mut pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
+    let max = pipe.config().max_seq - 1;
+    let err = pipe.submit(vec![1; 17], 10_000).unwrap_err();
+    assert!(matches!(err, SubmitError::ContextTooLong { max: m, .. } if m == max));
+    assert_eq!(pipe.submit(vec![], 4), Err(SubmitError::EmptyPrompt));
+    // one bad request no longer aborts the whole serve run
+    let reqs = [
+        Request { id: 0, prompt_tokens: 10_000, gen_tokens: 4 },
+        Request { id: 1, prompt_tokens: 4, gen_tokens: 3 },
+    ];
+    let m = pipe.serve(&reqs, 1).unwrap();
+    pipe.shutdown();
+    assert_eq!(m.requests_completed, 1);
+    assert_eq!(m.rejected_submissions(), 1);
 }
 
 #[test]
 fn prefill_then_decode_matches_teacher_forced_golden() {
     // The chunked-prefill transition (paper §5) must be semantics-preserving:
-    // prefill(prompt) + decode == the golden teacher-forced decode.
+    // generate(prompt) [prefill + decode] == the golden teacher-forced decode.
     if !have_artifacts() {
         return;
     }
     let g = load_golden();
     for overlap in [false, true] {
-        let pipe = DisaggPipeline::start(PipelineOpts {
+        let mut pipe = DisaggPipeline::start(PipelineOpts {
             overlap,
             ..PipelineOpts::new(artifacts_dir())
         })
         .unwrap();
         for (i, (prompt, want)) in g.prompts.iter().zip(&g.generated).enumerate() {
-            let out = pipe.generate(i as u32, prompt, g.steps).unwrap();
+            let out = pipe.generate(prompt, g.steps).unwrap();
             assert_eq!(&out, want, "prompt {i} (overlap={overlap})");
         }
         pipe.shutdown();
@@ -198,9 +242,9 @@ fn prefill_long_prompt_multi_chunk() {
     if !have_artifacts() {
         return;
     }
-    let pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
+    let mut pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
     let prompt: Vec<i32> = (0..37).map(|i| (i * 13 + 1) % 512).collect();
-    let via_prefill = pipe.generate(0, &prompt, 8).unwrap();
+    let via_prefill = pipe.generate(&prompt, 8).unwrap();
     let via_decode = pipe.decode(&[prompt.clone()], 8).unwrap();
     pipe.shutdown();
     assert_eq!(via_prefill, via_decode[0]);
@@ -211,7 +255,7 @@ fn serve_with_prefill_path() {
     if !have_artifacts() {
         return;
     }
-    let pipe = DisaggPipeline::start(PipelineOpts {
+    let mut pipe = DisaggPipeline::start(PipelineOpts {
         use_prefill: true,
         ..PipelineOpts::new(artifacts_dir())
     })
@@ -235,7 +279,7 @@ fn serve_slot_recycling_no_cross_contamination() {
     if !have_artifacts() {
         return;
     }
-    let pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
+    let mut pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
     let reqs: Vec<Request> = (0..24)
         .map(|i| Request { id: i, prompt_tokens: 5, gen_tokens: 3 })
         .collect();
@@ -246,6 +290,167 @@ fn serve_slot_recycling_no_cross_contamination() {
     pipe.shutdown();
     assert_eq!(out, g.generated);
 }
+
+// ---------------------------------------------------------------------------
+// the request-lifecycle API itself (tentpole acceptance)
+// ---------------------------------------------------------------------------
+
+/// A scripted mixed-arrival session through submit/step/poll/drain must
+/// produce bit-identical per-request tokens to the old wave path — here
+/// asserted against (1) per-request solo generate (the strongest ground
+/// truth: no batching at all) and (2) the legacy ByWave grouping, for both
+/// attention backends. `tests/net_e2e.rs` covers the transport axis; the
+/// engine-vs-native axis cannot share goldens (they agree to ~1e-5, not
+/// bit-exact), so each backend is compared against its own solo runs.
+#[test]
+fn continuous_batching_bit_identical_to_wave_and_solo() {
+    use lamina::kernels::AttnBackendKind;
+    use lamina::net::TransportKind;
+    if !have_artifacts() {
+        return;
+    }
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![1, 7, 42, 99, 3],
+        vec![5, 6],
+        vec![11; 12],
+        vec![9, 8, 7, 6],
+        vec![2; 7],
+        vec![3, 1, 4, 1, 5, 9],
+    ];
+    let gens = [6usize, 3, 5, 2, 4, 6];
+
+    for backend in [AttnBackendKind::Engine, AttnBackendKind::Native] {
+        // ground truth: each prompt alone (prefill + decode), no batching
+        let mut solo = Vec::new();
+        {
+            let mut pipe = DisaggPipeline::start(PipelineOpts {
+                attn_backend: backend,
+                ..PipelineOpts::new(artifacts_dir())
+            })
+            .unwrap();
+            for (p, &g) in prompts.iter().zip(&gens) {
+                solo.push(pipe.generate(p, g).unwrap());
+            }
+            pipe.shutdown();
+        }
+        // grouping × transport: the scripted session must match the solo
+        // ground truth bit-for-bit on every combination
+        for (grouping, transport) in [
+            (GroupMode::Packed, TransportKind::Inproc),
+            (GroupMode::ByWave, TransportKind::Inproc),
+            (GroupMode::Packed, TransportKind::Tcp),
+        ] {
+            let mut pipe = DisaggPipeline::start(PipelineOpts {
+                attn_backend: backend,
+                transport,
+                slots: 2, // force real queueing + group churn
+                ..PipelineOpts::new(artifacts_dir())
+            })
+            .unwrap();
+            pipe.begin_session(grouping, 2).unwrap();
+            // mixed arrivals: three up front, the rest joining mid-flight
+            let mut ids = Vec::new();
+            for i in 0..3 {
+                ids.push(pipe.submit(prompts[i].clone(), gens[i]).unwrap());
+            }
+            for i in 3..prompts.len() {
+                pipe.step().unwrap();
+                pipe.step().unwrap();
+                ids.push(pipe.submit(prompts[i].clone(), gens[i]).unwrap());
+            }
+            let metrics = pipe.drain().unwrap();
+            assert_eq!(metrics.requests_completed, prompts.len() as u64);
+            for (i, id) in ids.iter().enumerate() {
+                let st = pipe.poll(*id).unwrap();
+                assert_eq!(st.state, RequestState::Finished(FinishReason::Completed));
+                assert_eq!(
+                    st.tokens, solo[i],
+                    "request {i} diverged ({backend:?}, {grouping:?}, {transport:?})"
+                );
+                assert!(st.queue_s.is_some() && st.ttft_s.is_some());
+            }
+            pipe.shutdown();
+        }
+    }
+}
+
+#[test]
+fn step_outcomes_expose_the_lifecycle() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
+    let id = pipe.submit(vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10], 2).unwrap();
+    assert_eq!(pipe.poll(id).unwrap().state, RequestState::Queued);
+    // first step admits and runs the first prefill chunk
+    let o = pipe.step().unwrap();
+    assert_eq!(o.admitted, 1);
+    assert_eq!(o.prefilled, Some(id));
+    assert!(!o.idle);
+    assert_eq!(pipe.poll(id).unwrap().state, RequestState::Prefilling);
+    // run to completion
+    let m = pipe.drain().unwrap();
+    assert_eq!(m.requests_completed, 1);
+    let st = pipe.poll(id).unwrap();
+    assert_eq!(st.state, RequestState::Finished(FinishReason::Completed));
+    assert_eq!(st.tokens.len(), 2);
+    // idle steps are no-ops
+    let o = pipe.step().unwrap();
+    assert!(o.idle && o.admitted == 0 && o.decoded_rows == 0);
+    pipe.shutdown();
+}
+
+#[test]
+fn cancel_mid_flight_frees_capacity() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
+    let keep = pipe.submit(vec![1, 2, 3], 6).unwrap();
+    let kill = pipe.submit(vec![4, 5, 6, 7], 40).unwrap(); // would run long
+    pipe.step().unwrap();
+    pipe.step().unwrap();
+    assert!(pipe.cancel(kill));
+    let m = pipe.drain().unwrap();
+    // the cancelled request completes nothing; the other finishes normally
+    assert_eq!(m.requests_completed, 1);
+    assert_eq!(
+        pipe.poll(kill).unwrap().state,
+        RequestState::Finished(FinishReason::Cancelled)
+    );
+    assert_eq!(pipe.poll(keep).unwrap().tokens.len(), 6);
+    // its KV really was retired on the workers
+    let kv = pipe.kv_stats().unwrap();
+    pipe.shutdown();
+    assert_eq!(kv.blocks_in_use, 0, "cancelled request leaked KV blocks");
+}
+
+#[test]
+fn drain_frees_all_kv_blocks() {
+    // Satellite (c), pipeline half: after submit/retire churn and a drain,
+    // no KvStats leaks — every block is back in the workers' pools.
+    if !have_artifacts() {
+        return;
+    }
+    let mut pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
+    let reqs: Vec<Request> = (0..16)
+        .map(|i| Request {
+            id: i,
+            prompt_tokens: 4 + (i as usize % 6) * 5,
+            gen_tokens: 1 + (i as usize % 4),
+        })
+        .collect();
+    let m = pipe.serve(&reqs, 2).unwrap();
+    assert_eq!(m.requests_completed, 16);
+    let kv = pipe.kv_stats().unwrap();
+    pipe.shutdown();
+    assert_eq!(kv.blocks_in_use, 0, "leaked KV blocks after drain");
+    assert_eq!(kv.bytes_in_use, 0, "leaked KV bytes after drain");
+}
+
+// ---------------------------------------------------------------------------
+// fault tolerance (paper §5)
+// ---------------------------------------------------------------------------
 
 #[test]
 fn attention_worker_failover_preserves_decode() {
@@ -262,21 +467,20 @@ fn attention_worker_failover_preserves_decode() {
     let half = g.steps / 2;
 
     // first half of the decode
-    let first_half = pipe.generate(0, prompt, half).unwrap();
+    let first_half = pipe.generate(prompt, half).unwrap();
     assert_eq!(&first_half, &want[..half]);
 
     // catastrophe: attention worker 1 dies, losing its head shard
     pipe.kill_attn_worker(1);
 
-    // recovery: front-end replays prompt + generated tokens
+    // recovery: front-end replays prompt + generated tokens into slot 0
+    // (the rebuild path keeps the explicit-slot prefill)
     let mut known: Vec<i32> = prompt.clone();
     known.extend_from_slice(&first_half);
     pipe.recover_attn_worker(1, &[(0, known.clone())]).unwrap();
 
     // continue decoding the second half from the rebuilt cache
-    let rest = pipe
-        .generate(0, &known, g.steps - half)
-        .unwrap();
+    let rest = pipe.generate(&known, g.steps - half).unwrap();
     pipe.shutdown();
     assert_eq!(&rest, &want[half..], "post-failover tokens diverge");
 }
@@ -289,15 +493,15 @@ fn model_worker_failover_is_stateless() {
         return;
     }
     let g = load_golden();
-    let pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
+    let mut pipe = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
     let half = g.steps / 2;
-    let first = pipe.generate(0, &g.prompts[0], half).unwrap();
+    let first = pipe.generate(&g.prompts[0], half).unwrap();
     pipe.shutdown(); // model worker "fails"; KV is notionally lost with it
 
-    let pipe2 = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
+    let mut pipe2 = DisaggPipeline::start(PipelineOpts::new(artifacts_dir())).unwrap();
     let mut known = g.prompts[0].clone();
     known.extend_from_slice(&first);
-    let rest = pipe2.generate(0, &known, g.steps - half).unwrap();
+    let rest = pipe2.generate(&known, g.steps - half).unwrap();
     pipe2.shutdown();
     assert_eq!(&rest, &g.generated[0][half..]);
 }

@@ -410,10 +410,10 @@ fn tcp_pipeline_decode_and_prefill_bit_identical_to_inproc() {
     let mut decoded: Vec<Vec<Vec<i32>>> = Vec::new();
     let mut generated: Vec<Vec<i32>> = Vec::new();
     for transport in [TransportKind::Inproc, TransportKind::Tcp] {
-        let pipe = DisaggPipeline::start(opts_with(transport)).expect("pipeline start");
+        let mut pipe = DisaggPipeline::start(opts_with(transport)).expect("pipeline start");
         decoded.push(pipe.decode(&prompts, steps).expect("decode"));
         // chunked prefill + decode (the paper's transition protocol)
-        generated.push(pipe.generate(0, &prompts[2], steps).expect("generate"));
+        generated.push(pipe.generate(&prompts[2], steps).expect("generate"));
         // TCP must actually have serialized traffic
         let wire = pipe.wire_stats().total();
         match transport {
@@ -444,11 +444,11 @@ fn tcp_serve_session_reports_measured_vs_logical() {
         })
         .collect();
 
-    let inproc_pipe = DisaggPipeline::start(opts_with(TransportKind::Inproc)).unwrap();
+    let mut inproc_pipe = DisaggPipeline::start(opts_with(TransportKind::Inproc)).unwrap();
     let m_inproc = inproc_pipe.serve(&reqs, 1).unwrap();
     inproc_pipe.shutdown();
 
-    let tcp_pipe = DisaggPipeline::start(opts_with(TransportKind::Tcp)).unwrap();
+    let mut tcp_pipe = DisaggPipeline::start(opts_with(TransportKind::Tcp)).unwrap();
     let m_tcp = tcp_pipe.serve(&reqs, 1).unwrap();
     tcp_pipe.shutdown();
 
@@ -477,9 +477,10 @@ fn kv_budget_defers_admissions_but_completes() {
     let reqs: Vec<Request> = (0..12)
         .map(|i| Request { id: i, prompt_tokens: 9 + (i as usize % 3) * 8, gen_tokens: 3 })
         .collect();
-    // budget sized so only ~2 requests fit concurrently (block_size 16)
+    // legacy block-denominated budget, sized so only ~2 requests fit
+    // concurrently (block_size 16)
     let opts = PipelineOpts { kv_block_budget: Some(4), ..opts_with(TransportKind::Inproc) };
-    let pipe = DisaggPipeline::start(opts).unwrap();
+    let mut pipe = DisaggPipeline::start(opts).unwrap();
     let m = pipe.serve(&reqs, 1).unwrap();
     pipe.shutdown();
     assert_eq!(m.requests_completed, 12, "budget must defer, not drop");
@@ -487,4 +488,39 @@ fn kv_budget_defers_admissions_but_completes() {
     // the budget kept worker residency bounded: peak blocks (summed over
     // the 2 workers) within budget × workers
     assert!(m.kv_peak_blocks() <= 4 * 2, "peak {} blocks", m.kv_peak_blocks());
+    // the metrics report the budget in BOTH units
+    assert_eq!(m.kv_budget_blocks(), Some(4));
+    assert!(m.kv_budget_bytes().unwrap() > 0);
+}
+
+#[test]
+fn kv_byte_budget_equivalent_to_blocks_and_reported() {
+    // Satellite: byte-denominated --kv-budget. A byte budget worth exactly
+    // 4 blocks must behave like the 4-block legacy budget (defer, bound
+    // residency, complete everything) and report both units.
+    if !have_artifacts() {
+        return;
+    }
+    // probe the per-worker per-block byte size from a pool snapshot
+    let probe = DisaggPipeline::start(opts_with(TransportKind::Inproc)).unwrap();
+    let snap = probe.kv_stats().unwrap();
+    let block_bytes = snap.total_bytes / snap.total_blocks.max(1);
+    probe.shutdown();
+    assert!(block_bytes > 0);
+
+    let reqs: Vec<Request> = (0..12)
+        .map(|i| Request { id: i, prompt_tokens: 9 + (i as usize % 3) * 8, gen_tokens: 3 })
+        .collect();
+    let opts = PipelineOpts {
+        kv_byte_budget: Some(4 * block_bytes),
+        ..opts_with(TransportKind::Inproc)
+    };
+    let mut pipe = DisaggPipeline::start(opts).unwrap();
+    let m = pipe.serve(&reqs, 1).unwrap();
+    pipe.shutdown();
+    assert_eq!(m.requests_completed, 12, "byte budget must defer, not drop");
+    assert!(m.deferred_admissions() > 0, "tight byte budget must defer admissions");
+    assert!(m.kv_peak_blocks() <= 4 * 2, "peak {} blocks", m.kv_peak_blocks());
+    assert_eq!(m.kv_budget_bytes(), Some(4 * block_bytes));
+    assert_eq!(m.kv_budget_blocks(), Some(4));
 }

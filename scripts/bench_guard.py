@@ -1,9 +1,9 @@
 #!/usr/bin/env python3
 """Bench regression guard for the decode hot path.
 
-Compares the freshly generated ``rust/BENCH_decode.json`` against the
-committed ``rust/BENCH_baseline.json`` and fails when the decode path got
-slower or started moving bytes again:
+Compares the freshly generated ``rust/BENCH_decode.json`` against this
+machine's entry in the committed ``rust/BENCH_baseline.json`` and fails
+when the decode path got slower or started moving bytes again:
 
 * **ns/iter**: any decode-path row (``kv/``, ``kernel/``, ``e2e/``,
   ``host/`` prefixes) more than 20% slower than baseline fails. Rows are
@@ -20,19 +20,38 @@ slower or started moving bytes again:
   2×/≈4× per-step bytes-read reduction can't silently regress; the
   absolute ≥1.8×/≥3× ratios are asserted inside the bench binary itself).
 
-Bench numbers are machine-specific, so the repo ships a ``bootstrap``
-baseline; the first run on a machine fills it with measured rows and later
-runs gate against them. ``--update`` rewrites the baseline explicitly.
+Bench numbers are machine-specific, so baselines are stored **per
+machine**, keyed by hostname::
+
+    {"format": "per-machine-v1", "machines": {"runner-a": {...rows...}}}
+
+The first run on a machine bootstraps its own entry (other machines'
+entries are untouched), so the never-grows gates stay meaningful on shared
+CI runners where jobs land on different hosts. Legacy single-machine
+baseline files (a bare ``{"rows": [...]}`` doc) are migrated in place: a
+measured legacy doc becomes the current host's entry; a bootstrap marker
+just becomes the empty per-machine skeleton. ``--update`` rewrites this
+machine's entry explicitly.
 
 Usage: bench_guard.py BASELINE CURRENT [--update]
 """
 
 import json
+import socket
 import sys
 
 NS_REGRESSION = 1.20  # fail if > 20% slower
 NS_SLACK = 250.0      # ignore sub-noise absolute deltas (quick-mode jitter)
 NS_PREFIXES = ("kv/", "kernel/", "e2e/", "host/")
+FORMAT = "per-machine-v1"
+NOTE = (
+    "Per-machine bench baselines (keyed by hostname). Bench numbers are "
+    "machine-specific: the first scripts/check.sh run on a host fills in "
+    "that host's entry from rust/BENCH_decode.json; later runs on the same "
+    "host gate decode-path ns/iter (>20% regression fails) and per-step "
+    "copied/read bytes (any increase fails) against it. Use "
+    "`scripts/bench_guard.py ... --update` after an intentional perf change."
+)
 # Row families renamed when the kv-dtype sweep landed (PR 4): an old
 # measured baseline may still carry these names; they migrate with a note
 # instead of failing the "row disappeared" check. Any OTHER vanished row
@@ -48,6 +67,10 @@ BYTE_FIELDS = (
 )
 
 
+def hostname():
+    return socket.gethostname() or "unknown-host"
+
+
 def rows_by_name(doc):
     return {r["name"]: r for r in doc.get("rows", [])}
 
@@ -60,33 +83,65 @@ def gate_ns(base, cur):
     return float(base["ns_per_iter"]), float(cur["ns_per_iter"]), "mean"
 
 
+def load_baseline(path, host):
+    """Load the baseline file; return (whole_doc, this_host_entry, migrated).
+
+    Handles the per-machine format, legacy single-machine docs (migrated
+    to this host's entry when they carry measured rows — `migrated` is
+    True so the caller rewrites the file in the new format), and missing
+    or corrupt files (fresh skeleton).
+    """
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        doc = None
+
+    skeleton = {"format": FORMAT, "note": NOTE, "machines": {}}
+    if doc is None:
+        return skeleton, None, False
+    if isinstance(doc.get("machines"), dict):
+        doc.setdefault("format", FORMAT)
+        doc.setdefault("note", NOTE)
+        return doc, doc["machines"].get(host), False
+    # legacy single-machine file
+    if doc.get("bootstrap") or not doc.get("rows"):
+        return skeleton, None, False
+    entry = {k: v for k, v in doc.items() if k not in ("bootstrap", "note")}
+    skeleton["machines"][host] = entry
+    print(f"bench_guard: migrated legacy baseline to per-machine entry '{host}'")
+    return skeleton, entry, True
+
+
+def write(path, doc):
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+
+
 def main(argv):
     if len(argv) < 3:
         print(__doc__)
         return 2
     baseline_path, current_path = argv[1], argv[2]
     update = "--update" in argv[3:]
+    host = hostname()
 
     with open(current_path) as f:
         current = json.load(f)
 
-    try:
-        with open(baseline_path) as f:
-            baseline = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        baseline = None
+    doc, entry, migrated = load_baseline(baseline_path, host)
 
-    if update or baseline is None or baseline.get("bootstrap") or not baseline.get("rows"):
-        current = dict(current)
-        current.pop("bootstrap", None)
-        with open(baseline_path, "w") as f:
-            json.dump(current, f, indent=2)
-            f.write("\n")
-        why = "--update" if update else "bootstrap (no measured baseline yet)"
-        print(f"bench_guard: wrote baseline {baseline_path} ({why})")
+    if update or entry is None or not entry.get("rows"):
+        fresh = dict(current)
+        fresh.pop("bootstrap", None)
+        doc["machines"][host] = fresh
+        write(baseline_path, doc)
+        why = "--update" if update else "bootstrap (no measured baseline for this host yet)"
+        print(f"bench_guard: wrote baseline for '{host}' in {baseline_path} ({why})")
         return 0
 
-    base_rows = rows_by_name(baseline)
+    base_rows = rows_by_name(entry)
     cur_rows = rows_by_name(current)
     failures = []
     checked = 0
@@ -134,26 +189,27 @@ def main(argv):
             failures.append(f"{name}: row disappeared from the bench output")
 
     if failures:
-        print(f"bench_guard: {len(failures)} regression(s) over {checked} compared rows:")
+        print(f"bench_guard: {len(failures)} regression(s) over {checked} compared rows "
+              f"(host '{host}'):")
         for f_ in failures:
             print(f"  FAIL {f_}")
         print("(rerun with --update after an intentional change)")
         return 1
 
-    if new_rows or stale:
+    if new_rows or stale or migrated:
         # adopt rows that have no baseline entry yet so they are gated from
         # the next run on (and say so — silence would unguard new benches),
-        # and drop schema-migrated stale names
+        # drop schema-migrated stale names, and persist a legacy→per-machine
+        # format migration
         for r in new_rows:
-            print(f"bench_guard: adopting new row into baseline: {r['name']}")
-            baseline["rows"].append(r)
+            print(f"bench_guard: adopting new row into '{host}' baseline: {r['name']}")
+            entry["rows"].append(r)
         if stale:
-            baseline["rows"] = [r for r in baseline["rows"] if r["name"] not in stale]
-        with open(baseline_path, "w") as f:
-            json.dump(baseline, f, indent=2)
-            f.write("\n")
+            entry["rows"] = [r for r in entry["rows"] if r["name"] not in stale]
+        doc["machines"][host] = entry
+        write(baseline_path, doc)
 
-    print(f"bench_guard: OK — {checked} rows within bounds, no byte growth")
+    print(f"bench_guard: OK — {checked} rows within bounds on '{host}', no byte growth")
     return 0
 
 
