@@ -8,9 +8,10 @@
 //! per-layer block buffers directly: each live KV byte is read exactly
 //! once, copied never, and — with `--kv-dtype f16|int8` — **dequantized
 //! in-register** inside the dot/axpy inner loops ([`KvBlockRef`] lanes: an
-//! f16 lane is bit-converted as it is consumed; an int8 K region folds its
-//! per-(block, head) scale into the softmax scale, and a V region folds it
-//! into the accumulation weight), with no intermediate f32 staging buffer.
+//! f16 region is bulk-widened one stack tile at a time via the chunked
+//! branchless widen in [`crate::kvcache::quant`]; an int8 K region folds
+//! its per-(block, head) scale into the softmax scale, and a V region
+//! folds it into the accumulation weight), with no heap staging buffer.
 //! Per-step KV bytes *read* therefore drop 2×/≈4× with the storage dtype;
 //! the per-row working set is charged to [`kv_reads`] so benches can prove
 //! it. See the module docs of [`crate::kernels`] for the data path and the
@@ -34,7 +35,7 @@
 //! bit-identical outputs.
 
 use crate::kvcache::arena::{KvBlockRef, PAD_SLOT};
-use crate::kvcache::quant::f16_bits_to_f32;
+use crate::kvcache::quant::f16_bits_widen;
 use crate::kvcache::PagedKvArena;
 use crate::runtime::host::{kv_reads, HostTensor};
 use crate::util::threadpool::{Par, ScopedPool};
@@ -104,40 +105,81 @@ pub fn axpy(acc: &mut [f32], e: f32, v: &[f32]) {
     }
 }
 
-/// [`dot`] against bit-cast f16 lanes: each lane is widened in-register as
-/// it is consumed — no staging buffer.
+/// f16 widen tile: lanes bulk-widened at a time. One cache line of f32 —
+/// big enough to amortize the widen, small enough to zero-init for free.
+const F16_TILE: usize = 32;
+
+/// [`dot`] against bit-cast f16 lanes. Lanes are widened a [`F16_TILE`] at
+/// a time through the chunked bulk widen ([`f16_bits_widen`], the
+/// branchless multiply-rebias form) into a stack tile, replacing the old
+/// per-lane branchy widen that ROADMAP flagged as the f16 decode
+/// bottleneck. The fma quads then consume the tile in exactly the order
+/// the per-lane version used (4 accumulator lanes, remainder into `s0`),
+/// so results stay bit-identical — the widen itself is exact.
 #[inline]
 fn dot_f16(a: &[f32], b: &[u16]) -> f32 {
-    let mut ca = a.chunks_exact(4);
-    let mut cb = b.chunks_exact(4);
+    let mut buf = [0.0f32; F16_TILE];
     let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for (x, y) in (&mut ca).zip(&mut cb) {
-        s0 = fma(x[0], f16_bits_to_f32(y[0]), s0);
-        s1 = fma(x[1], f16_bits_to_f32(y[1]), s1);
-        s2 = fma(x[2], f16_bits_to_f32(y[2]), s2);
-        s3 = fma(x[3], f16_bits_to_f32(y[3]), s3);
+    let mut i = 0;
+    while i + F16_TILE <= b.len() {
+        f16_bits_widen(&b[i..i + F16_TILE], &mut buf);
+        let x = &a[i..i + F16_TILE];
+        for c in 0..F16_TILE / 4 {
+            s0 = fma(x[4 * c], buf[4 * c], s0);
+            s1 = fma(x[4 * c + 1], buf[4 * c + 1], s1);
+            s2 = fma(x[4 * c + 2], buf[4 * c + 2], s2);
+            s3 = fma(x[4 * c + 3], buf[4 * c + 3], s3);
+        }
+        i += F16_TILE;
     }
-    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
-        s0 = fma(*x, f16_bits_to_f32(*y), s0);
+    let r = b.len() - i;
+    f16_bits_widen(&b[i..], &mut buf[..r]);
+    let x = &a[i..];
+    let mut j = 0;
+    while j + 4 <= r {
+        s0 = fma(x[j], buf[j], s0);
+        s1 = fma(x[j + 1], buf[j + 1], s1);
+        s2 = fma(x[j + 2], buf[j + 2], s2);
+        s3 = fma(x[j + 3], buf[j + 3], s3);
+        j += 4;
+    }
+    while j < r {
+        s0 = fma(x[j], buf[j], s0);
+        j += 1;
     }
     (s0 + s1) + (s2 + s3)
 }
 
-/// `acc += e · widen(v)` over f16 lanes, same 4-lane unroll as [`axpy`].
+/// `acc += e · widen(v)` over f16 lanes: bulk-widen per [`F16_TILE`] like
+/// [`dot_f16`], then the same 4-lane [`axpy`] unroll over the tile
+/// (bit-identical op order to the per-lane version).
 #[inline]
 fn axpy_f16(acc: &mut [f32], e: f32, v: &[u16]) {
-    let mut cv = v.chunks_exact(4);
+    let mut buf = [0.0f32; F16_TILE];
     let mut i = 0;
-    for y in &mut cv {
-        acc[i] = fma(e, f16_bits_to_f32(y[0]), acc[i]);
-        acc[i + 1] = fma(e, f16_bits_to_f32(y[1]), acc[i + 1]);
-        acc[i + 2] = fma(e, f16_bits_to_f32(y[2]), acc[i + 2]);
-        acc[i + 3] = fma(e, f16_bits_to_f32(y[3]), acc[i + 3]);
-        i += 4;
+    while i + F16_TILE <= v.len() {
+        f16_bits_widen(&v[i..i + F16_TILE], &mut buf);
+        for c in 0..F16_TILE / 4 {
+            acc[i + 4 * c] = fma(e, buf[4 * c], acc[i + 4 * c]);
+            acc[i + 4 * c + 1] = fma(e, buf[4 * c + 1], acc[i + 4 * c + 1]);
+            acc[i + 4 * c + 2] = fma(e, buf[4 * c + 2], acc[i + 4 * c + 2]);
+            acc[i + 4 * c + 3] = fma(e, buf[4 * c + 3], acc[i + 4 * c + 3]);
+        }
+        i += F16_TILE;
     }
-    for y in cv.remainder() {
-        acc[i] = fma(e, f16_bits_to_f32(*y), acc[i]);
-        i += 1;
+    let r = v.len() - i;
+    f16_bits_widen(&v[i..], &mut buf[..r]);
+    let mut j = 0;
+    while j + 4 <= r {
+        acc[i + j] = fma(e, buf[j], acc[i + j]);
+        acc[i + j + 1] = fma(e, buf[j + 1], acc[i + j + 1]);
+        acc[i + j + 2] = fma(e, buf[j + 2], acc[i + j + 2]);
+        acc[i + j + 3] = fma(e, buf[j + 3], acc[i + j + 3]);
+        j += 4;
+    }
+    while j < r {
+        acc[i + j] = fma(e, buf[j], acc[i + j]);
+        j += 1;
     }
 }
 

@@ -44,12 +44,24 @@
 //!   scales), so gathers are bit-identical to a dense zero-initialised
 //!   reference cache (asserted by the `kv_paged` property test) and
 //!   recycled blocks can never leak KV across requests.
+//! * **Blocks are refcounted and sharable** (prefix caching).
+//!   [`PagedKvArena::map_prefix`] maps the blocks covering the first
+//!   `tokens` positions of one slot into another slot read-only — no
+//!   payload moves, each block just gains a reference — and retirement
+//!   decrements, so a shared prompt's KV stays resident until the last
+//!   holder leaves. Writes are **copy-on-write**: the first append into a
+//!   shared block clones its payload (all layers, K+V, int8 scales) into
+//!   a private block first, so sharers never observe each other's
+//!   appends and every gather stays bit-identical to an unshared arena.
 //!
 //! Accounting is reported in **blocks and bytes**: [`PagedKvArena::stats`]
 //! fills `KvCacheStats::{bytes_in_use, total_bytes}` from the storage
 //! dtype (including int8 scale overhead), so admission control and
 //! `ServeMetrics` see the capacity gain of quantized storage, not just a
-//! block count.
+//! block count. Under sharing the *logical* view (`blocks_in_use`, summed
+//! per table) and the *physical* view (`physical_blocks_in_use`, distinct
+//! resident blocks) diverge — their ratio is the prefix-cache dedup
+//! factor.
 //!
 //! Layer handling mirrors the wire protocol: one block table per slot is
 //! shared by all layers (every layer's buffer has capacity at the same
@@ -264,7 +276,11 @@ impl PagedKvArena {
     /// Accounting snapshot: blocks in use/capacity, internal waste, and the
     /// same occupancy in **bytes** (dtype-aware, per layer × per block) so
     /// admission control and `ServeMetrics` see quantized storage's
-    /// capacity gain.
+    /// capacity gain. `blocks_in_use`/`bytes_in_use` are the **logical**
+    /// view (blocks mapped by tables, counting a shared block once per
+    /// mapper); `physical_blocks_in_use`/`physical_bytes_in_use` count
+    /// distinct resident blocks — equal without sharing, and their ratio
+    /// is the prefix-cache dedup factor.
     pub fn stats(&self) -> KvCacheStats {
         let lens: Vec<usize> = self
             .tables
@@ -272,21 +288,47 @@ impl PagedKvArena {
             .map(|t| t.len_tokens())
             .filter(|&l| l > 0)
             .collect();
+        let logical: usize = self.tables.iter().map(|t| t.blocks().len()).sum();
         let per_block = self.cfg.layers * self.block_bytes();
         KvCacheStats {
-            blocks_in_use: self.alloc.used_blocks(),
+            blocks_in_use: logical,
             total_blocks: self.alloc.total_blocks(),
             block_size: self.cfg.block_size,
             internal_waste_tokens: self.alloc.internal_waste(&lens),
-            bytes_in_use: self.alloc.used_blocks() * per_block,
+            bytes_in_use: logical * per_block,
             total_bytes: self.alloc.total_blocks() * per_block,
+            physical_blocks_in_use: self.alloc.used_blocks(),
+            physical_bytes_in_use: self.alloc.used_blocks() * per_block,
         }
     }
 
-    /// Free every block owned by `slot` (request retirement). Idempotent.
+    /// Free every block owned by `slot` (request retirement): one reference
+    /// is dropped per block — a block shared with other slots stays
+    /// resident for them. Idempotent.
     pub fn retire(&mut self, slot: u32) {
         let table = &mut self.tables[slot as usize];
         table.free(&mut self.alloc);
+    }
+
+    /// Map the blocks covering the first `tokens` positions of `src_slot`'s
+    /// cache into `dst_slot` as a shared read-only prefix (a prefix-cache
+    /// hit): each covering block gains one reference and **no payload
+    /// moves**. Any stale table on `dst_slot` is retired first. Later
+    /// appends into a shared block (either slot's) are copy-on-write, so
+    /// the two slots can never observe each other's writes.
+    pub fn map_prefix(&mut self, dst_slot: u32, src_slot: u32, tokens: usize) {
+        assert_ne!(dst_slot, src_slot, "cannot map a slot's prefix onto itself");
+        assert!(tokens <= self.cfg.max_seq, "map_prefix beyond max_seq");
+        let src = &self.tables[src_slot as usize];
+        assert!(
+            tokens <= src.len_tokens(),
+            "map_prefix of {tokens} tokens from slot {src_slot} holding only {}",
+            src.len_tokens()
+        );
+        let n = self.alloc.blocks_for_tokens(tokens);
+        let blocks: Vec<BlockId> = src.blocks()[..n].to_vec();
+        self.retire(dst_slot);
+        self.tables[dst_slot as usize].map_shared(&blocks, tokens, &mut self.alloc);
     }
 
     /// Append one decode step's K/V `[bucket, KH_shard, hd]` at position
@@ -315,6 +357,7 @@ impl PagedKvArena {
                     self.retire(slot);
                 }
                 self.grow_slot(slot as usize, pos + 1);
+                self.make_exclusive(slot as usize, pos, pos + 1);
             }
             let (blk, off) = self.tables[slot as usize]
                 .locate(pos, self.cfg.block_size)
@@ -347,6 +390,7 @@ impl PagedKvArena {
                 self.retire(slot);
             }
             self.grow_slot(slot as usize, cached + valid);
+            self.make_exclusive(slot as usize, cached, cached + valid);
         }
         for i in 0..valid {
             let (blk, off) = self.tables[slot as usize]
@@ -571,6 +615,62 @@ impl PagedKvArena {
             let fresh: Vec<BlockId> = self.tables[slot].blocks()[have..].to_vec();
             for blk in fresh {
                 self.zero_block(blk);
+            }
+        }
+    }
+
+    /// Make every block covering positions `[from, to)` of `slot`
+    /// exclusively owned before a write lands there: a block still shared
+    /// with another table is cloned (payload of **all** layers, K and V,
+    /// plus int8 scales) into a private block first — the copy-on-write
+    /// step. Blocks already exclusive are untouched, so the unshared fast
+    /// path costs one refcount load per written block.
+    fn make_exclusive(&mut self, slot: usize, from: usize, to: usize) {
+        if from >= to {
+            return;
+        }
+        let bs = self.cfg.block_size;
+        for bi in from / bs..=(to - 1) / bs {
+            let blk = self.tables[slot].blocks()[bi];
+            if !self.alloc.is_shared(blk) {
+                continue;
+            }
+            self.ensure_free(1);
+            let fresh = self.alloc.alloc().expect("arena invariant: ensure_free preceded alloc");
+            self.clone_block(blk, fresh);
+            let old = self.tables[slot].replace_block(bi, fresh);
+            debug_assert_eq!(old, blk);
+            self.alloc.release(blk);
+        }
+    }
+
+    /// Copy `src`'s payload into `dst`: every layer's K and V region across
+    /// all shard heads, plus the int8 per-(block, head) scales.
+    fn clone_block(&mut self, src: BlockId, dst: BlockId) {
+        let n = self.block_elems();
+        let (s, d) = (src as usize * n, dst as usize * n);
+        let heads = self.cfg.kv_heads;
+        let (ss, ds) = (src as usize * heads, dst as usize * heads);
+        match &mut self.store {
+            Store::F32 { k, v } => {
+                for l in 0..self.cfg.layers {
+                    k[l].copy_within(s..s + n, d);
+                    v[l].copy_within(s..s + n, d);
+                }
+            }
+            Store::F16 { k, v } => {
+                for l in 0..self.cfg.layers {
+                    k[l].copy_within(s..s + n, d);
+                    v[l].copy_within(s..s + n, d);
+                }
+            }
+            Store::Int8 { k, v, ks, vs } => {
+                for l in 0..self.cfg.layers {
+                    k[l].copy_within(s..s + n, d);
+                    v[l].copy_within(s..s + n, d);
+                    ks[l].copy_within(ss..ss + heads, ds);
+                    vs[l].copy_within(ss..ss + heads, ds);
+                }
             }
         }
     }
@@ -959,5 +1059,114 @@ mod tests {
         // 5 tokens over 2 blocks → 3 wasted tail slots
         assert_eq!(a.stats().internal_waste_tokens, 3);
         assert_eq!(a.stats().blocks_in_use, 2);
+    }
+
+    #[test]
+    fn map_prefix_shares_blocks_and_stats_split_logical_physical() {
+        let mut a = tiny(); // block_size 4, 2 layers
+        for t in 0..8 {
+            let k = step_kv(1, 2, 4, t as f32);
+            for layer in 0..2 {
+                a.append_step(&[0], layer, &k, &k, &[t]);
+            }
+        }
+        a.map_prefix(1, 0, 8); // share both blocks
+        a.map_prefix(2, 0, 8);
+        let s = a.stats();
+        assert_eq!(s.blocks_in_use, 6, "logical: 2 blocks × 3 tables");
+        assert_eq!(s.physical_blocks_in_use, 2, "physical: one copy");
+        assert_eq!(s.bytes_in_use, 6 * 2 * a.block_bytes());
+        assert_eq!(s.physical_bytes_in_use, 2 * 2 * a.block_bytes());
+        // both sharers gather the donor's KV bit-identically
+        let (g0, _) = a.gather(&[0], 0, 1, 8);
+        let (g1, _) = a.gather(&[1], 0, 1, 8);
+        assert_eq!(g0.as_f32(), g1.as_f32());
+        // donor retires first: blocks stay resident for the sharers
+        a.retire(0);
+        assert_eq!(a.stats().physical_blocks_in_use, 2);
+        let (g2, _) = a.gather(&[2], 0, 1, 8);
+        assert_eq!(g2.as_f32(), g0.as_f32());
+        a.retire(1);
+        a.retire(2);
+        assert_eq!(a.stats().physical_blocks_in_use, 0, "last holder frees");
+    }
+
+    #[test]
+    fn cow_append_into_shared_tail_clones_not_clobbers() {
+        let mut a = tiny(); // block_size 4
+        for t in 0..6 {
+            let k = step_kv(1, 2, 4, (10 * t) as f32);
+            for layer in 0..2 {
+                a.append_step(&[0], layer, &k, &k, &[t]);
+            }
+        }
+        // share a partial tail: 6 tokens = block 0 full + block 1 half
+        a.map_prefix(1, 0, 6);
+        let donor_before: Vec<f32> = a.gather(&[0], 1, 1, 8).0.as_f32().to_vec();
+
+        // sharer appends token 6 → lands in the shared tail block → CoW
+        let k6 = step_kv(1, 2, 4, 777.0);
+        for layer in 0..2 {
+            a.append_step(&[1], layer, &k6, &k6, &[6]);
+        }
+        assert_eq!(a.stats().physical_blocks_in_use, 3, "tail block cloned");
+        // the donor's KV (every layer) is untouched by the sharer's append
+        assert_eq!(a.gather(&[0], 1, 1, 8).0.as_f32(), &donor_before[..]);
+        // the sharer sees the inherited prefix plus its own token
+        let (g, _) = a.gather(&[1], 0, 1, 8);
+        let gd = g.as_f32();
+        assert_eq!(&gd[5 * 4..5 * 4 + 4], &[50., 51., 52., 53.], "inherited");
+        assert_eq!(&gd[6 * 4..6 * 4 + 4], &[777., 778., 779., 780.], "own");
+
+        // and the donor appending its own token 6 now needs no further CoW
+        // (its tail went exclusive again when the sharer left it)
+        for layer in 0..2 {
+            a.append_step(&[0], layer, &k6, &k6, &[6]);
+        }
+        assert_eq!(a.stats().physical_blocks_in_use, 3, "no second clone");
+        a.retire(0);
+        a.retire(1);
+        assert_eq!(a.stats().physical_blocks_in_use, 0, "no leaked blocks");
+    }
+
+    #[test]
+    fn cow_clones_int8_scales_with_codes() {
+        let mut a = tiny_with(KvDtype::Int8);
+        let small = HostTensor::f32(vec![1, 2, 4], vec![0.1; 8]);
+        a.append_step(&[0], 0, &small, &small, &[0]);
+        a.append_step(&[0], 1, &small, &small, &[0]);
+        a.map_prefix(1, 0, 1);
+        // the sharer's append raises the scale in ITS clone only
+        let big = HostTensor::f32(vec![1, 2, 4], vec![10.0; 8]);
+        a.append_step(&[1], 0, &big, &big, &[1]);
+        a.append_step(&[1], 1, &big, &big, &[1]);
+        let donor_blk = a.table_view(0).blocks()[0];
+        let sharer_blk = a.table_view(1).blocks()[0];
+        assert_ne!(donor_blk, sharer_blk);
+        let KvBlockRef::Int8 { k_scale: donor_scale, .. } = a.block_slices(0, donor_blk, 0) else {
+            panic!()
+        };
+        let KvBlockRef::Int8 { k, k_scale, .. } = a.block_slices(0, sharer_blk, 0) else {
+            panic!()
+        };
+        assert!((donor_scale - 0.1 / 127.0).abs() < 1e-9, "donor scale untouched");
+        assert!((k_scale - 10.0 / 127.0).abs() < 1e-6, "clone requantized");
+        // the inherited token survived the clone + requantize
+        assert!((i8_decode(k[0], k_scale) - 0.1).abs() <= 10.0 / 127.0);
+    }
+
+    #[test]
+    fn map_prefix_resets_stale_destination() {
+        let mut a = tiny();
+        let k = step_kv(1, 2, 4, 1.0);
+        for t in 0..5 {
+            a.append_step(&[0], 0, &k, &k, &[t]);
+            a.append_step(&[1], 0, &k, &k, &[t]);
+        }
+        assert_eq!(a.stats().physical_blocks_in_use, 4);
+        // mapping over slot 1 retires its private blocks first
+        a.map_prefix(1, 0, 4);
+        assert_eq!(a.stats().physical_blocks_in_use, 2);
+        assert_eq!(a.len_tokens(1), 4);
     }
 }

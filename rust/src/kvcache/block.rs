@@ -3,9 +3,15 @@
 //!
 //! KV memory on each attention worker is divided into fixed-size blocks of
 //! `block_size` token slots; requests own chains of blocks via
-//! [`super::table::BlockTable`]. The allocator is a simple free-list with
-//! O(1) alloc/free and exact accounting — fragmentation can only be
-//! *internal* (tail of the last block), which `internal_waste` reports.
+//! [`super::table::BlockTable`]. The allocator is a free-list with O(1)
+//! alloc/free, exact accounting, and a **per-block reference count**:
+//! several block tables may map the same physical block read-only (prefix
+//! sharing), [`BlockAllocator::retain`] adds a reference, and
+//! [`BlockAllocator::release`] decrements — a block returns to the free
+//! list only when its last reference drops. Writers must check
+//! [`BlockAllocator::ref_count`] first and copy-on-write shared blocks
+//! (see `super::arena`). Fragmentation can only be *internal* (tail of the
+//! last block), which `internal_waste` reports.
 
 /// Identifier of a physical KV block on one worker.
 pub type BlockId = u32;
@@ -14,6 +20,8 @@ pub type BlockId = u32;
 pub struct BlockAllocator {
     block_size: usize,
     free: Vec<BlockId>,
+    /// Reference count per block id; 0 = on the free list.
+    refs: Vec<u32>,
     total: usize,
 }
 
@@ -39,6 +47,7 @@ impl BlockAllocator {
             block_size,
             // LIFO free list: hot blocks are reused first (cache-friendly)
             free: (0..total_blocks as BlockId).rev().collect(),
+            refs: vec![0; total_blocks],
             total: total_blocks,
         }
     }
@@ -76,26 +85,58 @@ impl BlockAllocator {
     pub fn grow(&mut self, extra: usize) {
         let start = self.total as BlockId;
         self.free.extend((start..start + extra as BlockId).rev());
+        self.refs.resize(self.total + extra, 0);
         self.total += extra;
     }
 
     pub fn alloc(&mut self) -> Result<BlockId, AllocError> {
-        self.free
+        let b = self
+            .free
             .pop()
-            .ok_or(AllocError { requested: 1, available: 0 })
+            .ok_or(AllocError { requested: 1, available: 0 })?;
+        self.refs[b as usize] = 1;
+        Ok(b)
     }
 
     pub fn alloc_n(&mut self, n: usize) -> Result<Vec<BlockId>, AllocError> {
         if self.free.len() < n {
             return Err(AllocError { requested: n, available: self.free.len() });
         }
-        Ok((0..n).map(|_| self.free.pop().unwrap()).collect())
+        Ok((0..n)
+            .map(|_| {
+                let b = self.free.pop().unwrap();
+                self.refs[b as usize] = 1;
+                b
+            })
+            .collect())
     }
 
+    /// Add one reference to a live block (prefix sharing: another table now
+    /// maps it read-only).
+    pub fn retain(&mut self, block: BlockId) {
+        debug_assert!(self.refs[block as usize] > 0, "retain of free block {block}");
+        self.refs[block as usize] += 1;
+    }
+
+    /// References currently held on `block` (0 = free).
+    pub fn ref_count(&self, block: BlockId) -> u32 {
+        self.refs[block as usize]
+    }
+
+    /// Does more than one table map `block`? (Writers must copy-on-write.)
+    pub fn is_shared(&self, block: BlockId) -> bool {
+        self.refs[block as usize] > 1
+    }
+
+    /// Drop one reference; the block returns to the free list when the last
+    /// reference goes away.
     pub fn release(&mut self, block: BlockId) {
         debug_assert!((block as usize) < self.total);
-        debug_assert!(!self.free.contains(&block), "double free of block {block}");
-        self.free.push(block);
+        debug_assert!(self.refs[block as usize] > 0, "double free of block {block}");
+        self.refs[block as usize] -= 1;
+        if self.refs[block as usize] == 0 {
+            self.free.push(block);
+        }
     }
 
     pub fn release_all(&mut self, blocks: &[BlockId]) {
@@ -195,5 +236,46 @@ mod tests {
         let b = a.alloc().unwrap();
         a.release(b);
         a.release(b);
+    }
+
+    #[test]
+    fn retain_defers_free_until_last_release() {
+        let mut a = BlockAllocator::new(2, 4);
+        let b = a.alloc().unwrap();
+        assert_eq!(a.ref_count(b), 1);
+        assert!(!a.is_shared(b));
+        a.retain(b);
+        a.retain(b);
+        assert_eq!(a.ref_count(b), 3);
+        assert!(a.is_shared(b));
+        a.release(b);
+        a.release(b);
+        assert_eq!(a.free_blocks(), 1, "still one reference held");
+        assert_eq!(a.used_blocks(), 1);
+        a.release(b);
+        assert_eq!(a.ref_count(b), 0);
+        assert_eq!(a.free_blocks(), 2, "last release frees the block");
+    }
+
+    #[test]
+    fn grown_blocks_carry_refcounts() {
+        let mut a = BlockAllocator::new(1, 4);
+        let _b0 = a.alloc().unwrap();
+        a.grow(2);
+        let b = a.alloc().unwrap();
+        assert_eq!(a.ref_count(b), 1);
+        a.retain(b);
+        a.release(b);
+        a.release(b);
+        assert_eq!(a.free_blocks(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn retain_of_free_block_debug_panics() {
+        let mut a = BlockAllocator::new(2, 4);
+        let b = a.alloc().unwrap();
+        a.release(b);
+        a.retain(b);
     }
 }

@@ -2,15 +2,38 @@
 //! the block-paged arena backing the live attention workers (with
 //! f32/f16/int8 block storage — see [`quant`]), and the head-/request-level
 //! partitioning strategies of paper §5/Fig. 9.
+//!
+//! Physical blocks are **refcounted and sharable** ([`block`]): several
+//! requests' tables may map the same block read-only, which is what makes
+//! prompt-prefix dedup possible on the memory-bound attention tier — the
+//! capacity lever Lamina's economics turn on (a worker's achievable batch
+//! is whatever its arena can hold). The moving parts:
+//!
+//! * [`block`] — free-list allocator with per-block refcounts: `retain`
+//!   adds a mapping, `release` decrements and frees on the last drop.
+//! * [`table`] — per-request chains; `map_shared` mirrors a donor's prefix
+//!   chain, `replace_block` swaps in a private clone on first write.
+//! * [`arena`] — owns the payloads: `map_prefix` wires a shared prefix
+//!   slot-to-slot, appends **copy-on-write** into shared tails, and
+//!   `stats()` reports logical vs physical occupancy so dedup is
+//!   observable end to end.
+//! * [`prefix`] — the leader-side trie keyed on prompt tokens at block
+//!   granularity that *finds* reusable prefixes at admission.
+//!
+//! Sharing is always block-aligned and capped below the full prompt, so a
+//! cache hit still prefills ≥ 1 token; a cache miss is bit-identical to a
+//! run with the index disabled.
 
 pub mod arena;
 pub mod block;
 pub mod partition;
+pub mod prefix;
 pub mod quant;
 pub mod table;
 
 pub use arena::{ArenaCfg, KvBlockRef, PagedKvArena, TableView, PAD_SLOT};
 pub use block::{AllocError, BlockAllocator, BlockId};
 pub use partition::{head_level, kv_blocks_needed, kv_bytes_needed, request_level, Partition};
+pub use prefix::{PrefixHit, PrefixIndex};
 pub use quant::KvDtype;
 pub use table::{BlockTable, KvRegistry};

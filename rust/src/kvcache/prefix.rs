@@ -1,0 +1,232 @@
+//! Leader-side prefix index: a trie over prompt tokens at **block
+//! granularity** that finds reusable KV prefixes at admission time.
+//!
+//! Prefix caching is the standard capacity multiplier of modern serving
+//! stacks (vLLM/SGLang lineage): fleets share system prompts, so the first
+//! N·block_size prompt tokens of a new request often already sit, fully
+//! prefilled, in another live request's paged KV. The index maps
+//! `prompt tokens → (sharable tokens, donor request)`; the leader then
+//! sends one `MapBlocks` message per worker instead of re-prefilling those
+//! tokens, and every worker's arena refcounts the donor's blocks into the
+//! new slot ([`super::arena::PagedKvArena::map_prefix`]).
+//!
+//! Design points:
+//!
+//! * **Block-granular keys.** Trie edges are exact `block_size`-token
+//!   chunks — KV can only be shared in whole blocks (a partial tail block
+//!   would put donor and sharer writes in the same physical block).
+//! * **Holders, not blocks.** Each node records the *live requests* whose
+//!   registered prompt passes through it. The leader resolves a donor id
+//!   to that request's current slot; no physical block ids live here (they
+//!   differ per worker). A request is registered only once its prefill
+//!   completed (KV durable) and removed on finish/cancel/preempt, so a
+//!   donor's blocks are always resident when a hit is returned.
+//! * **Always leave ≥ 1 token to prefill.** A hit is capped at
+//!   `floor((prompt_len − 1) / block_size)` blocks: the decode path needs
+//!   at least one real prefill token to produce the first logits, and the
+//!   cap keeps a full-prompt hit from degenerating into an empty chunk.
+//!
+//! The index is advisory: a miss (or a disabled index) leaves the
+//! admission path bit-identical to a build without it.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+/// A successful prefix lookup: `tokens` sharable tokens (a multiple of
+/// `block_size`) held by live request `donor`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixHit {
+    pub tokens: usize,
+    pub donor: u64,
+}
+
+#[derive(Debug, Default)]
+struct Node {
+    /// Edges are exact block_size-token chunks. BTreeMap for deterministic
+    /// iteration (stable donor choice across runs).
+    children: BTreeMap<Box<[i32]>, Node>,
+    /// Live requests whose registered prefix passes through this node.
+    holders: BTreeSet<u64>,
+}
+
+impl Node {
+    fn is_empty(&self) -> bool {
+        self.children.is_empty() && self.holders.is_empty()
+    }
+}
+
+/// Trie over registered prompt prefixes at block granularity.
+#[derive(Debug)]
+pub struct PrefixIndex {
+    block_size: usize,
+    root: Node,
+    /// id → the block-aligned token prefix it registered (walked again on
+    /// removal).
+    paths: HashMap<u64, Vec<i32>>,
+}
+
+impl PrefixIndex {
+    pub fn new(block_size: usize) -> Self {
+        assert!(block_size > 0);
+        PrefixIndex { block_size, root: Node::default(), paths: HashMap::new() }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Requests currently registered as potential donors.
+    pub fn registered(&self) -> usize {
+        self.paths.len()
+    }
+
+    /// Longest registered prefix of `prompt`, capped at `max_blocks` blocks
+    /// and always at least one token short of the full prompt. Returns the
+    /// sharable token count and a deterministic donor (smallest live id
+    /// holding the deepest matched node).
+    pub fn lookup(&self, prompt: &[i32], max_blocks: usize) -> Option<PrefixHit> {
+        let bs = self.block_size;
+        let cap = max_blocks.min(prompt.len().saturating_sub(1) / bs);
+        let mut node = &self.root;
+        let mut best: Option<PrefixHit> = None;
+        for (depth, chunk) in prompt.chunks_exact(bs).take(cap).enumerate() {
+            match node.children.get(chunk) {
+                Some(child) => {
+                    if let Some(&donor) = child.holders.first() {
+                        best = Some(PrefixHit { tokens: (depth + 1) * bs, donor });
+                    }
+                    node = child;
+                }
+                None => break,
+            }
+        }
+        best
+    }
+
+    /// Register `id` as holding durable KV for `prompt` (call once its
+    /// prefill has completed). Only whole blocks are indexed; prompts
+    /// shorter than one block register nothing.
+    pub fn insert(&mut self, id: u64, prompt: &[i32]) {
+        debug_assert!(!self.paths.contains_key(&id), "request {id} registered twice");
+        let bs = self.block_size;
+        let aligned = prompt.len() / bs * bs;
+        if aligned == 0 {
+            return;
+        }
+        let mut node = &mut self.root;
+        for chunk in prompt[..aligned].chunks_exact(bs) {
+            node = node.children.entry(chunk.into()).or_default();
+            node.holders.insert(id);
+        }
+        self.paths.insert(id, prompt[..aligned].to_vec());
+    }
+
+    /// Drop `id` from every node on its registered path (finish, cancel or
+    /// preempt — its KV is no longer guaranteed resident). Unknown ids are
+    /// a no-op, so callers can remove unconditionally.
+    pub fn remove(&mut self, id: u64) {
+        let Some(path) = self.paths.remove(&id) else {
+            return;
+        };
+        fn walk(node: &mut Node, chunks: &mut std::slice::ChunksExact<i32>, id: u64) {
+            let Some(chunk) = chunks.next() else {
+                return;
+            };
+            if let Some(child) = node.children.get_mut(chunk) {
+                child.holders.remove(&id);
+                walk(child, chunks, id);
+                if child.is_empty() {
+                    node.children.remove(chunk);
+                }
+            }
+        }
+        walk(&mut self.root, &mut path.chunks_exact(self.block_size), id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prompt(chunks: &[&[i32]]) -> Vec<i32> {
+        chunks.concat()
+    }
+
+    #[test]
+    fn miss_on_empty_index_and_short_prompts() {
+        let mut ix = PrefixIndex::new(4);
+        assert_eq!(ix.lookup(&[1, 2, 3, 4, 5], usize::MAX), None);
+        // sub-block prompts register nothing
+        ix.insert(1, &[1, 2, 3]);
+        assert_eq!(ix.registered(), 0);
+        assert_eq!(ix.lookup(&[1, 2, 3, 4, 5], usize::MAX), None);
+    }
+
+    #[test]
+    fn hit_is_block_aligned_and_longest_match() {
+        let mut ix = PrefixIndex::new(4);
+        let sys: &[i32] = &[9, 9, 9, 9, 8, 8, 8, 8];
+        ix.insert(7, &prompt(&[sys, &[1, 2, 3]])); // registers 2 blocks
+        // same 2 shared blocks, different suffix
+        let q = prompt(&[sys, &[4, 5, 6]]);
+        assert_eq!(ix.lookup(&q, usize::MAX), Some(PrefixHit { tokens: 8, donor: 7 }));
+        // only the first block matches
+        let q = prompt(&[&sys[..4], &[0, 0, 0, 0, 1]]);
+        assert_eq!(ix.lookup(&q, usize::MAX), Some(PrefixHit { tokens: 4, donor: 7 }));
+        // divergence inside the first block: miss
+        assert_eq!(ix.lookup(&[9, 9, 9, 1, 2, 2, 2, 2, 3], usize::MAX), None);
+    }
+
+    #[test]
+    fn hit_never_covers_the_whole_prompt() {
+        let mut ix = PrefixIndex::new(4);
+        ix.insert(1, &[5, 5, 5, 5, 6, 6, 6, 6]);
+        // identical prompt: cap leaves the last block to prefill
+        let hit = ix.lookup(&[5, 5, 5, 5, 6, 6, 6, 6], usize::MAX).unwrap();
+        assert_eq!(hit.tokens, 4, "≥1 token must remain for prefill");
+        // block-aligned-plus-one can take both blocks
+        let hit = ix.lookup(&[5, 5, 5, 5, 6, 6, 6, 6, 7], usize::MAX).unwrap();
+        assert_eq!(hit.tokens, 8);
+        // caller's block cap also binds
+        let hit = ix.lookup(&[5, 5, 5, 5, 6, 6, 6, 6, 7], 1).unwrap();
+        assert_eq!(hit.tokens, 4);
+    }
+
+    #[test]
+    fn donor_is_smallest_live_holder_and_repoints_on_removal() {
+        let mut ix = PrefixIndex::new(2);
+        let p: &[i32] = &[1, 1, 2, 2, 3];
+        ix.insert(20, p);
+        ix.insert(10, p);
+        assert_eq!(ix.lookup(p, usize::MAX), Some(PrefixHit { tokens: 4, donor: 10 }));
+        ix.remove(10);
+        assert_eq!(ix.lookup(p, usize::MAX), Some(PrefixHit { tokens: 4, donor: 20 }));
+        ix.remove(20);
+        assert_eq!(ix.lookup(p, usize::MAX), None);
+        assert_eq!(ix.registered(), 0);
+        ix.remove(20); // unknown id: no-op
+    }
+
+    #[test]
+    fn removal_prunes_only_unshared_nodes() {
+        let mut ix = PrefixIndex::new(2);
+        ix.insert(1, &[7, 7, 1, 1, 0]); // [7,7] → [1,1]
+        ix.insert(2, &[7, 7, 2, 2, 0]); // [7,7] → [2,2]
+        ix.remove(1);
+        // the shared first block survives via request 2
+        assert_eq!(ix.lookup(&[7, 7, 9], usize::MAX), Some(PrefixHit { tokens: 2, donor: 2 }));
+        // request 1's private branch is gone
+        assert_eq!(ix.lookup(&[7, 7, 1, 1, 9], usize::MAX).unwrap().tokens, 2);
+        ix.remove(2);
+        assert!(ix.root.is_empty(), "empty index leaves no nodes behind");
+    }
+
+    #[test]
+    fn deep_match_requires_holder_on_the_deep_node() {
+        let mut ix = PrefixIndex::new(2);
+        ix.insert(1, &[4, 4, 5, 5]); // holders at depth 1 and 2
+        ix.remove(1);
+        ix.insert(2, &[4, 4]); // holder at depth 1 only
+        let hit = ix.lookup(&[4, 4, 5, 5, 6], usize::MAX).unwrap();
+        assert_eq!((hit.tokens, hit.donor), (2, 2), "depth-2 node has no live holder");
+    }
+}

@@ -160,6 +160,50 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
     f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
 }
 
+/// Branchless single-lane widen used by [`f16_bits_widen`]. Same result,
+/// bit for bit, as [`f16_bits_to_f32`], but shaped for auto-vectorization:
+/// the exponent rebias (including subnormals) is one exact multiply by
+/// 2¹¹², and the inf/NaN fixup is a select instead of a branch.
+///
+/// Why the multiply works: `(h & 0x7fff) << 13` re-interprets the f16
+/// exponent/mantissa as an f32 with the same *unbiased* exponent minus
+/// 112 (bias 15 vs 127, mantissa left-aligned). Scaling by 2¹¹² restores
+/// the value exactly — f16 subnormals land as f32 *normals* (m·2⁻²⁴ ≥
+/// 2⁻²⁴ ≫ f32's min normal), so no lane loses bits. Only exp = 0x1f
+/// (inf/NaN) comes out finite and needs the patch-up.
+#[inline]
+fn f16_widen_lane(h: u16) -> f32 {
+    let bits = ((h & 0x7fff) as u32) << 13;
+    let widened = (f32::from_bits(bits) * f32::from_bits((127 + 112) << 23)).to_bits();
+    // exp == 0x1f ⇔ bits ≥ 0x7c00 << 13: rebuild inf/NaN (payload kept)
+    let special = 0x7f80_0000 | (bits & 0x007f_e000);
+    let mag = if bits >= 0x0f80_0000 { special } else { widened };
+    f32::from_bits(mag | (((h & 0x8000) as u32) << 16))
+}
+
+/// Bulk f16 → f32 widen: `dst[i] = f32(src[i])`, bit-identical to mapping
+/// [`f16_bits_to_f32`] per lane.
+///
+/// The scalar widen's exponent branches made it the f16 decode-path
+/// bottleneck (per-lane widen inside the native kernel's dot/axpy loops);
+/// this processes fixed-width chunks of [`f16_widen_lane`] so the
+/// compiler can keep the whole pipeline — mask, multiply, select — in
+/// SIMD registers. The `kernel/f16_widen_*` bench rows measure the delta.
+pub fn f16_bits_widen(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    const CHUNK: usize = 16;
+    let mut s = src.chunks_exact(CHUNK);
+    let mut d = dst.chunks_exact_mut(CHUNK);
+    for (sc, dc) in (&mut s).zip(&mut d) {
+        for i in 0..CHUNK {
+            dc[i] = f16_widen_lane(sc[i]);
+        }
+    }
+    for (dd, &h) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *dd = f16_widen_lane(h);
+    }
+}
+
 // ---- f32 ↔ int8 with per-region scale -------------------------------------
 
 /// Symmetric scale for a region whose max |value| is `maxabs`: codes span
@@ -238,6 +282,34 @@ mod tests {
                 assert!(err <= v.abs() * 4.8829e-4, "x={v} err={err}");
             }
             x *= 1.7;
+        }
+    }
+
+    #[test]
+    fn bulk_widen_bit_identical_to_scalar_for_every_f16() {
+        // all 65536 bit patterns, in one bulk call crossing chunk bounds
+        let src: Vec<u16> = (0..=u16::MAX).collect();
+        let mut dst = vec![0.0f32; src.len()];
+        f16_bits_widen(&src, &mut dst);
+        for (&h, &f) in src.iter().zip(&dst) {
+            assert_eq!(
+                f.to_bits(),
+                f16_bits_to_f32(h).to_bits(),
+                "lane {h:#06x} diverged from the scalar widen"
+            );
+        }
+    }
+
+    #[test]
+    fn bulk_widen_remainder_lanes() {
+        // lengths around the chunk width exercise the remainder path
+        for n in [0usize, 1, 15, 16, 17, 31, 33] {
+            let src: Vec<u16> = (0..n as u16).map(|i| 0x3c00 + i).collect();
+            let mut dst = vec![0.0f32; n];
+            f16_bits_widen(&src, &mut dst);
+            for (&h, &f) in src.iter().zip(&dst) {
+                assert_eq!(f.to_bits(), f16_bits_to_f32(h).to_bits());
+            }
         }
     }
 

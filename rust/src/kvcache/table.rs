@@ -1,5 +1,12 @@
 //! Per-request block tables mapping logical token positions to physical KV
 //! blocks, plus the request-level cache registry an attention worker keeps.
+//!
+//! With refcounted blocks (see [`super::block`]) a table may *share* a
+//! prefix of another table's blocks read-only ([`BlockTable::map_shared`]);
+//! [`BlockTable::free`] drops one reference per block, and a writer that
+//! must mutate a shared block swaps in a private clone via
+//! [`BlockTable::replace_block`] (the copy-on-write step lives in
+//! `super::arena`, which owns the block payloads).
 
 use super::block::{AllocError, BlockAllocator, BlockId};
 
@@ -48,7 +55,28 @@ impl BlockTable {
         Ok(())
     }
 
-    /// Release every block back to the allocator.
+    /// Map an existing chain of physical blocks into this (empty) table as
+    /// a shared read-only prefix of `tokens` token slots. Each block gains
+    /// one reference; the donor table keeps its own.
+    pub fn map_shared(&mut self, blocks: &[BlockId], tokens: usize, alloc: &mut BlockAllocator) {
+        debug_assert!(self.blocks.is_empty() && self.len_tokens == 0, "map into non-empty table");
+        debug_assert!(tokens <= blocks.len() * alloc.block_size());
+        for &b in blocks {
+            alloc.retain(b);
+        }
+        self.blocks.extend_from_slice(blocks);
+        self.len_tokens = tokens;
+    }
+
+    /// Swap the block at chain index `idx` for a private copy (the
+    /// copy-on-write step). Returns the previously mapped block so the
+    /// caller can drop its reference after cloning the payload.
+    pub fn replace_block(&mut self, idx: usize, with: BlockId) -> BlockId {
+        std::mem::replace(&mut self.blocks[idx], with)
+    }
+
+    /// Drop one reference on every mapped block (blocks whose last
+    /// reference this was return to the allocator's free list).
     pub fn free(&mut self, alloc: &mut BlockAllocator) {
         alloc.release_all(&self.blocks);
         self.blocks.clear();
@@ -150,6 +178,37 @@ mod tests {
         t.free(&mut a);
         assert_eq!(a.free_blocks(), 5);
         assert_eq!(t.len_tokens(), 0);
+    }
+
+    #[test]
+    fn map_shared_refcounts_and_free() {
+        let mut a = BlockAllocator::new(4, 4);
+        let mut donor = BlockTable::default();
+        donor.grow_to(8, &mut a).unwrap(); // 2 blocks
+        let mut t = BlockTable::default();
+        t.map_shared(&donor.blocks()[..2], 6, &mut a);
+        assert_eq!(t.len_tokens(), 6);
+        assert_eq!(t.blocks(), donor.blocks());
+        assert_eq!(a.used_blocks(), 2, "sharing allocates nothing");
+        // donor goes away first: blocks stay live for the sharer
+        donor.free(&mut a);
+        assert_eq!(a.used_blocks(), 2);
+        let (b, o) = t.locate(5, 4).unwrap();
+        assert_eq!((b, o), (t.blocks()[1], 1));
+        t.free(&mut a);
+        assert_eq!(a.free_blocks(), 4);
+    }
+
+    #[test]
+    fn replace_block_swaps_chain_entry() {
+        let mut a = BlockAllocator::new(4, 4);
+        let mut t = BlockTable::default();
+        t.grow_to(8, &mut a).unwrap();
+        let fresh = a.alloc().unwrap();
+        let old = t.replace_block(1, fresh);
+        assert_eq!(t.blocks()[1], fresh);
+        assert_ne!(old, fresh);
+        assert_eq!(t.len_tokens(), 8, "length untouched by the swap");
     }
 
     #[test]

@@ -39,7 +39,7 @@ real pipeline (tiny model, PJRT end-to-end):
           [--transport inproc|tcp] [--attn-backend engine|native]
           [--admission fifo|sjf] [--kv-budget BYTES]
           [--kv-budget-blocks N] [--kv-dtype f32|f16|int8]
-          [--wave-driver]
+          [--prefix-cache on|off] [--overcommit] [--wave-driver]
 
 flags:
   --requests N     trace subsample size for simulations (default 1000)
@@ -66,6 +66,14 @@ flags:
                    with per-block scales (≈4× fewer). Worker-local — the
                    wire stays f32; the native backend reads the compact
                    blocks directly
+  --prefix-cache M prompt-prefix sharing: on = map shared prompt blocks
+                   from a live donor request (refcounted, copy-on-write)
+                   instead of re-prefilling them; off = disabled (default).
+                   A cache miss is bit-identical to off
+  --overcommit     reserve prompt-only KV at admission and grow block by
+                   block; budget pressure preempts the newest request back
+                   to the queue (it resumes with identical output). Only
+                   meaningful with --kv-budget[-blocks]
   --wave-driver    serve with the legacy wave-partitioned grouping
                    (comparison only; the step-driven scheduler is default)
 
@@ -78,7 +86,8 @@ const SPEC: &[&str] = &[
     "requests!", "seed!", "results!", "artifacts!", "workers!", "no-overlap",
     "waves!", "stack!", "time-scale!", "prompt!", "steps!", "trace!",
     "transport!", "attn-backend!", "admission!", "kv-budget!",
-    "kv-budget-blocks!", "kv-dtype!", "wave-driver", "help",
+    "kv-budget-blocks!", "kv-dtype!", "prefix-cache!", "overcommit",
+    "wave-driver", "help",
 ];
 
 fn main() {
@@ -197,6 +206,20 @@ fn run(argv: &[String]) -> Result<(), String> {
                 kv.bytes_in_use,
                 kv.total_bytes
             );
+            // physical view: where prefix sharing shows up (logical ÷
+            // physical is the dedup factor)
+            if m.prefix_hits() > 0 {
+                println!(
+                    "prefix cache: {} hits  {} tokens mapped  peak physical {} B (logical {} B)",
+                    m.prefix_hits(),
+                    m.prefix_hit_tokens(),
+                    m.kv_peak_physical_bytes(),
+                    m.kv_peak_bytes()
+                );
+            }
+            if m.preemptions() > 0 {
+                println!("kv overcommit: {} preemptions (budget pressure)", m.preemptions());
+            }
             if m.kv_budget_blocks().is_some() || m.kv_budget_bytes().is_some() {
                 println!(
                     "kv budget [{}]: {} blocks/worker ≈ {} B/worker  ({} deferrals)",
@@ -283,6 +306,14 @@ fn pipeline_opts(args: &Args, artifacts: &str) -> Result<PipelineOpts, String> {
         opts.kv_dtype = lamina::kvcache::KvDtype::parse(d)
             .ok_or_else(|| format!("unknown kv dtype '{d}' (use f32|f16|int8)"))?;
     }
+    if let Some(p) = args.get("prefix-cache") {
+        opts.prefix_cache = match p.to_ascii_lowercase().as_str() {
+            "on" => true,
+            "off" => false,
+            _ => return Err(format!("unknown prefix-cache mode '{p}' (use on|off)")),
+        };
+    }
+    opts.overcommit = args.has("overcommit");
     Ok(opts)
 }
 

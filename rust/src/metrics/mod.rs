@@ -24,16 +24,28 @@ use crate::util::stats::{Percentiles, Welford};
 /// (block counts alone cannot). `bytes_in_use`/`total_bytes` are
 /// dtype-aware (int8 scale overhead included) and sum across workers
 /// like the block counts.
+///
+/// With refcounted prefix sharing the **logical** view (`blocks_in_use`:
+/// blocks mapped by request tables, a shared block counted once per
+/// mapper) and the **physical** view (`physical_blocks_in_use`: distinct
+/// resident blocks) diverge; logical ÷ physical is the dedup factor the
+/// prefix cache achieves. Without sharing the two are equal.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct KvCacheStats {
+    /// Logical blocks mapped by live request tables (shared blocks counted
+    /// once per mapping table).
     pub blocks_in_use: usize,
     pub total_blocks: usize,
     pub block_size: usize,
     pub internal_waste_tokens: usize,
-    /// Resident bytes of live blocks (all layers, K+V, incl. int8 scales).
+    /// Logical resident bytes (all layers, K+V, incl. int8 scales).
     pub bytes_in_use: usize,
     /// Resident bytes of the whole arena (allocated capacity).
     pub total_bytes: usize,
+    /// Distinct physical blocks holding live KV (≤ `blocks_in_use`).
+    pub physical_blocks_in_use: usize,
+    /// Distinct physical resident bytes (≤ `bytes_in_use`).
+    pub physical_bytes_in_use: usize,
 }
 
 impl KvCacheStats {
@@ -54,6 +66,8 @@ impl KvCacheStats {
         self.block_size = self.block_size.max(other.block_size);
         self.bytes_in_use += other.bytes_in_use;
         self.total_bytes += other.total_bytes;
+        self.physical_blocks_in_use += other.physical_blocks_in_use;
+        self.physical_bytes_in_use += other.physical_bytes_in_use;
         self
     }
 }
@@ -104,8 +118,12 @@ pub struct ServeMetrics {
     kv: KvCacheStats,
     kv_peak_blocks: usize,
     kv_peak_bytes: usize,
+    kv_peak_physical_bytes: usize,
     wire: WireStats,
     deferred_admissions: u64,
+    prefix_hits: u64,
+    prefix_hit_tokens: u64,
+    preemptions: u64,
     // per-request lifecycle aggregates (request-lifecycle engine)
     queue_s: Welford,
     ttft_s: Welford,
@@ -142,6 +160,7 @@ impl ServeMetrics {
     pub fn record_kv(&mut self, s: KvCacheStats) {
         self.kv_peak_blocks = self.kv_peak_blocks.max(s.blocks_in_use);
         self.kv_peak_bytes = self.kv_peak_bytes.max(s.bytes_in_use);
+        self.kv_peak_physical_bytes = self.kv_peak_physical_bytes.max(s.physical_bytes_in_use);
         self.kv = s;
     }
 
@@ -159,6 +178,12 @@ impl ServeMetrics {
     /// halves/quarters under f16/int8 block storage at the same context).
     pub fn kv_peak_bytes(&self) -> usize {
         self.kv_peak_bytes
+    }
+
+    /// Peak **physical** resident KV bytes across all recorded snapshots —
+    /// the footprint after prefix-sharing dedup (≤ [`Self::kv_peak_bytes`]).
+    pub fn kv_peak_physical_bytes(&self) -> usize {
+        self.kv_peak_physical_bytes
     }
 
     /// Sum a transport endpoint's wire counters into this run's totals.
@@ -180,6 +205,33 @@ impl ServeMetrics {
     /// Admissions deferred by leader-side KV admission control.
     pub fn deferred_admissions(&self) -> u64 {
         self.deferred_admissions
+    }
+
+    /// Count one prefix-cache hit that mapped `tokens` prompt tokens from a
+    /// donor request instead of re-prefilling them.
+    pub fn record_prefix_hit(&mut self, tokens: usize) {
+        self.prefix_hits += 1;
+        self.prefix_hit_tokens += tokens as u64;
+    }
+
+    /// Admissions that mapped a shared prompt prefix.
+    pub fn prefix_hits(&self) -> u64 {
+        self.prefix_hits
+    }
+
+    /// Prompt tokens served from the prefix cache instead of prefill.
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.prefix_hit_tokens
+    }
+
+    /// Count requests preempted back to the queue by KV pressure.
+    pub fn record_preemptions(&mut self, n: u64) {
+        self.preemptions += n;
+    }
+
+    /// Requests preempted by overcommit pressure relief.
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
     }
 
     /// Record one completed request's lifecycle: queueing delay (submit →
@@ -385,6 +437,8 @@ mod tests {
             internal_waste_tokens: 5,
             bytes_in_use: 10 * 4096,
             total_bytes: 16 * 4096,
+            physical_blocks_in_use: 6,
+            physical_bytes_in_use: 6 * 4096,
         });
         m.record_kv(KvCacheStats {
             blocks_in_use: 3,
@@ -393,10 +447,14 @@ mod tests {
             internal_waste_tokens: 1,
             bytes_in_use: 3 * 4096,
             total_bytes: 16 * 4096,
+            physical_blocks_in_use: 3,
+            physical_bytes_in_use: 3 * 4096,
         });
         assert_eq!(m.kv_stats().blocks_in_use, 3);
         assert_eq!(m.kv_peak_blocks(), 10);
         assert_eq!(m.kv_peak_bytes(), 10 * 4096);
+        assert_eq!(m.kv_peak_physical_bytes(), 6 * 4096, "peak tracks the deduped view");
+        assert_eq!(m.kv_stats().physical_blocks_in_use, 3);
         assert_eq!(m.kv_stats().bytes_in_use, 3 * 4096);
         assert!((m.kv_stats().utilization() - 3.0 / 16.0).abs() < 1e-12);
     }
@@ -410,6 +468,8 @@ mod tests {
             internal_waste_tokens: 2,
             bytes_in_use: 4 * 1056,
             total_bytes: 8 * 1056,
+            physical_blocks_in_use: 2,
+            physical_bytes_in_use: 2 * 1056,
         };
         let b = KvCacheStats {
             blocks_in_use: 1,
@@ -418,6 +478,8 @@ mod tests {
             internal_waste_tokens: 7,
             bytes_in_use: 1056,
             total_bytes: 8 * 1056,
+            physical_blocks_in_use: 1,
+            physical_bytes_in_use: 1056,
         };
         let m = a.merge(&b);
         assert_eq!(m.blocks_in_use, 5);
@@ -426,5 +488,7 @@ mod tests {
         assert_eq!(m.block_size, 16);
         assert_eq!(m.bytes_in_use, 5 * 1056);
         assert_eq!(m.total_bytes, 16 * 1056);
+        assert_eq!(m.physical_blocks_in_use, 3);
+        assert_eq!(m.physical_bytes_in_use, 3 * 1056);
     }
 }

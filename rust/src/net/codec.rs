@@ -6,8 +6,8 @@
 //! ```text
 //! offset  size  field
 //! 0       2     magic           0x1A31 (LE) — stream resync guard
-//! 2       1     version         FORMAT_VERSION (currently 2)
-//! 3       1     msg type tag    0..=8, one per WireMsg variant
+//! 2       1     version         FORMAT_VERSION (currently 3)
+//! 3       1     msg type tag    0..=9, one per WireMsg variant
 //! 4       4     payload length  u32 LE (bytes after the 12-byte header)
 //! 8       4     checksum        u32 LE, FNV-1a over version ‖ tag ‖ payload
 //! 12      n     payload         variant-specific, all integers LE
@@ -59,7 +59,10 @@ pub const MAGIC: u16 = 0x1A31;
 /// Current frame-format version.
 /// v2: `KvStats` payload gained `bytes_in_use`/`total_bytes` (the
 /// dtype-aware byte view of arena occupancy under `--kv-dtype`).
-pub const FORMAT_VERSION: u8 = 2;
+/// v3: new `MapBlocks` message (tag 9, prefix sharing: map a donor slot's
+/// block chain into a destination slot) and `KvStats` gained the
+/// `physical_blocks_in_use`/`physical_bytes_in_use` dedup view.
+pub const FORMAT_VERSION: u8 = 3;
 /// Fixed frame header size in bytes.
 pub const HEADER_LEN: usize = 12;
 
@@ -121,6 +124,7 @@ fn tag_of(msg: &WireMsg) -> u8 {
         WireMsg::KvStats { .. } => 6,
         WireMsg::WorkerError { .. } => 7,
         WireMsg::Shutdown => 8,
+        WireMsg::MapBlocks { .. } => 9,
     }
 }
 
@@ -289,12 +293,19 @@ fn encode_payload(msg: &WireMsg, out: &mut Vec<u8>) {
             put_u64(out, stats.internal_waste_tokens as u64);
             put_u64(out, stats.bytes_in_use as u64);
             put_u64(out, stats.total_bytes as u64);
+            put_u64(out, stats.physical_blocks_in_use as u64);
+            put_u64(out, stats.physical_bytes_in_use as u64);
         }
         WireMsg::WorkerError { msg } => {
             put_u32(out, msg.len() as u32);
             out.extend_from_slice(msg.as_bytes());
         }
         WireMsg::Shutdown => {}
+        WireMsg::MapBlocks { slot, src_slot, tokens } => {
+            put_u32(out, *slot);
+            put_u32(out, *src_slot);
+            put_u32(out, *tokens as u32);
+        }
     }
 }
 
@@ -331,9 +342,10 @@ pub fn encoded_len(msg: &WireMsg) -> usize {
             WireMsg::AttnOut { out, .. } => 4 + tensor(out),
             WireMsg::Retire { .. } => 4,
             WireMsg::KvStatsReq => 0,
-            WireMsg::KvStats { .. } => 8 + 8 + 4 + 8 + 8 + 8,
+            WireMsg::KvStats { .. } => 8 + 8 + 4 + 8 + 8 + 8 + 8 + 8,
             WireMsg::WorkerError { msg } => 4 + msg.len(),
             WireMsg::Shutdown => 0,
+            WireMsg::MapBlocks { .. } => 4 + 4 + 4,
         }
 }
 
@@ -471,6 +483,8 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
                 internal_waste_tokens: r.u64("internal_waste")? as usize,
                 bytes_in_use: r.u64("bytes_in_use")? as usize,
                 total_bytes: r.u64("total_bytes")? as usize,
+                physical_blocks_in_use: r.u64("physical_blocks_in_use")? as usize,
+                physical_bytes_in_use: r.u64("physical_bytes_in_use")? as usize,
             };
             WireMsg::KvStats { stats }
         }
@@ -482,6 +496,12 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
             WireMsg::WorkerError { msg }
         }
         8 => WireMsg::Shutdown,
+        9 => {
+            let slot = r.u32("slot")?;
+            let src_slot = r.u32("src_slot")?;
+            let tokens = r.u32("tokens")? as usize;
+            WireMsg::MapBlocks { slot, src_slot, tokens }
+        }
         t => return Err(CodecError::UnknownType(t)),
     };
     r.finish()?;
@@ -554,9 +574,13 @@ mod tests {
                 internal_waste_tokens: 5,
                 bytes_in_use: 3 * 1056,
                 total_bytes: 9 * 1056,
+                physical_blocks_in_use: 2,
+                physical_bytes_in_use: 2 * 1056,
             },
         };
         assert_eq!(roundtrip(&s), s);
+        let m = WireMsg::MapBlocks { slot: 3, src_slot: 0, tokens: 96 };
+        assert_eq!(roundtrip(&m), m);
     }
 
     #[test]

@@ -46,6 +46,7 @@ impl MsgClass {
             WireMsg::PrefillChunk { .. } => MsgClass::Prefill,
             WireMsg::AttnOut { .. } => MsgClass::AttnOut,
             WireMsg::Retire { .. }
+            | WireMsg::MapBlocks { .. }
             | WireMsg::KvStatsReq
             | WireMsg::KvStats { .. }
             | WireMsg::WorkerError { .. }

@@ -19,11 +19,11 @@
 //! * `submit` validates per request (typed [`SubmitError`]) and queues it.
 //! * `admit` pulls from the waiting queue in [`AdmissionPolicy`] order,
 //!   assigns a physical slot from the free pool, and reserves the
-//!   request's full-context KV footprint against the budget ([`KvBudget`]
-//!   in blocks or **bytes** — bytes are the right unit when workers store
-//!   quantized blocks). The old escape hatch survives: with no live
-//!   request, admission proceeds regardless of the budget (deferring could
-//!   never free blocks).
+//!   request's KV footprint against the budget ([`KvBudget`] in blocks or
+//!   **bytes** — bytes are the right unit when workers store quantized
+//!   blocks). The old escape hatch survives: with no live request,
+//!   admission proceeds regardless of the budget (deferring could never
+//!   free blocks).
 //! * `decode_plan` composes the iteration's batch groups:
 //!   [`GroupMode::Packed`] repacks the running set at iteration
 //!   granularity (continuous batching); [`GroupMode::ByWave`] reproduces
@@ -32,6 +32,24 @@
 //! * `note_decode` / `note_prefill_chunk` apply results; a finished
 //!   request releases its slot and reservation immediately and lands in
 //!   the retirement queue the leader drains into `Retire` wire messages.
+//!
+//! # Overcommit (`SchedCfg::overcommit`)
+//!
+//! The default reservation is **full context** (prompt + generation
+//! target): admission can never over-subscribe the arena, but short-lived
+//! requests strand headroom they will never touch. With `overcommit` on,
+//! admission reserves only the *prompt* footprint and the reservation then
+//! grows **block by block** as the context actually grows (`note_*`
+//! feedback). The budget can now be exceeded transiently; the relief valve
+//! is [`Scheduler::pressure_preempt`]: when live reservations (or the
+//! measured arena occupancy) cross the budget, a victim picked by
+//! [`AdmissionPolicy::pick_victim`] (default: last admitted) is preempted —
+//! its KV is retired through the normal `Retire` path, its generated
+//! tokens ride along as a *replay* suffix, and it re-enters the waiting
+//! queue at the **front**. On re-admission it re-prefills prompt + replay
+//! and keeps decoding; greedy decode is deterministic, so the final output
+//! is bit-identical to an unpreempted run. The last live request is never
+//! preempted (forward progress), mirroring the admission escape hatch.
 
 pub mod policy;
 pub mod state;
@@ -97,6 +115,10 @@ pub struct SchedCfg {
     /// blocks→bytes conversion for budget accounting and reporting).
     pub block_bytes: usize,
     pub budget: KvBudget,
+    /// Reserve prompt-only KV at admission and grow block-by-block, with
+    /// preempt-and-requeue as the pressure valve (see module docs). Off:
+    /// conservative full-context reservations, no preemption.
+    pub overcommit: bool,
 }
 
 /// One decode-batch row the leader must execute.
@@ -137,9 +159,15 @@ struct Entry {
     len: i32,
     next_input: i32,
     generated: Vec<i32>,
-    /// Prompt tokens already prefilled into the KV cache.
+    /// Leading `generated` tokens that survived a preemption: on
+    /// re-admission they are *replayed* (re-prefilled / re-teacher-forced)
+    /// after the prompt, so the effective prompt is
+    /// `prompt ⧺ generated[..promoted]`. Zero for never-preempted requests.
+    promoted: usize,
+    /// Effective-prompt tokens already prefilled into the KV cache.
     prefill_cached: usize,
-    /// Full-context KV reservation, per worker.
+    /// Current KV reservation, per worker: full context by default,
+    /// prompt-only-then-grown under overcommit.
     needed_blocks: usize,
     needed_bytes: usize,
     waited_rounds: u32,
@@ -149,13 +177,28 @@ struct Entry {
 }
 
 impl Entry {
+    /// Prompt plus replayed-generation length: everything that must be in
+    /// the KV cache before the request free-runs.
+    fn eff_prompt_len(&self) -> usize {
+        self.prompt.len() + self.promoted
+    }
+
+    /// Token at position `i` of the effective prompt.
+    fn eff_prompt_at(&self, i: usize) -> i32 {
+        if i < self.prompt.len() {
+            self.prompt[i]
+        } else {
+            self.generated[i - self.prompt.len()]
+        }
+    }
+
     fn decode_row(&self) -> DecodeRow {
         DecodeRow {
             id: self.id,
             slot: self.slot,
             len: self.len,
             input: self.next_input,
-            emits: self.fed >= self.prompt.len(),
+            emits: self.fed >= self.eff_prompt_len(),
         }
     }
 }
@@ -181,7 +224,11 @@ pub struct Scheduler {
     /// ALL finish events not yet reported to the driver — including
     /// requests that never wrote KV and therefore queue no Retire.
     finished_events: Vec<RequestId>,
+    /// Admissions not yet observed by the leader (it probes these for
+    /// prefix-cache hits before their first prefill chunk).
+    admitted_events: Vec<RequestId>,
     deferred_total: u64,
+    preempted_total: u64,
 }
 
 impl Scheduler {
@@ -201,7 +248,9 @@ impl Scheduler {
             reserved_bytes: 0,
             retire_queue: Vec::new(),
             finished_events: Vec::new(),
+            admitted_events: Vec::new(),
             deferred_total: 0,
+            preempted_total: 0,
         }
     }
 
@@ -252,7 +301,10 @@ impl Scheduler {
         }
         let id = self.next_id;
         self.next_id += 1;
-        let needed_blocks = kv_blocks_needed(&[ctx], self.cfg.kv_block_size);
+        // overcommit: reserve only what prefill will certainly write; the
+        // reservation grows with the context (see grow_reservation)
+        let reserve_tokens = if self.cfg.overcommit { prompt.len() } else { ctx };
+        let needed_blocks = kv_blocks_needed(&[reserve_tokens], self.cfg.kv_block_size);
         self.entries.insert(
             id,
             Entry {
@@ -265,6 +317,7 @@ impl Scheduler {
                 len: 0,
                 next_input: 0,
                 generated: Vec::new(),
+                promoted: 0,
                 prefill_cached: 0,
                 needed_blocks,
                 needed_bytes: needed_blocks * self.cfg.block_bytes,
@@ -338,16 +391,17 @@ impl Scheduler {
             e.slot = slot;
             e.admitted_at = Some(Instant::now());
             let mut done_at_admission = false;
-            if e.use_prefill && e.prompt.len() > 1 {
+            if e.use_prefill && e.eff_prompt_len() > 1 {
                 e.state = RequestState::Prefilling;
             } else {
                 e.state = RequestState::Decoding;
                 e.next_input = e.prompt[0];
                 e.fed = 1;
                 // a zero-target single-token request has nothing to run
-                done_at_admission = e.fed >= e.prompt.len() && e.gen_target == 0;
+                done_at_admission = e.fed >= e.eff_prompt_len() && e.gen_target == 0;
             }
             self.running.push(id);
+            self.admitted_events.push(id);
             admitted += 1;
             if done_at_admission {
                 self.finish(id, FinishReason::Completed);
@@ -384,11 +438,12 @@ impl Scheduler {
         })
     }
 
-    /// Up to `cap` prompt tokens starting at the request's prefill cursor.
+    /// Up to `cap` effective-prompt tokens (prompt, then any post-preempt
+    /// replay suffix) starting at the request's prefill cursor.
     pub fn prompt_chunk(&self, id: RequestId, cap: usize) -> Vec<i32> {
         let e = &self.entries[&id];
-        let end = (e.prefill_cached + cap.max(1)).min(e.prompt.len());
-        e.prompt[e.prefill_cached..end].to_vec()
+        let end = (e.prefill_cached + cap.max(1)).min(e.eff_prompt_len());
+        (e.prefill_cached..end).map(|i| e.eff_prompt_at(i)).collect()
     }
 
     /// Compose this iteration's decode batch groups (see [`GroupMode`]).
@@ -437,12 +492,12 @@ impl Scheduler {
             let e = self.entries.get_mut(&id).expect("note_prefill_chunk: unknown request");
             debug_assert_eq!(e.state, RequestState::Prefilling);
             e.prefill_cached += consumed;
-            if e.prefill_cached >= e.prompt.len() {
+            if e.prefill_cached >= e.eff_prompt_len() {
                 e.state = RequestState::Decoding;
-                e.len = e.prompt.len() as i32;
-                e.fed = e.prompt.len();
+                e.len = e.eff_prompt_len() as i32;
+                e.fed = e.eff_prompt_len();
                 e.next_input = next_token;
-                if e.gen_target > 0 {
+                if e.generated.len() < e.gen_target {
                     e.generated.push(next_token);
                     e.first_token_at.get_or_insert_with(Instant::now);
                 }
@@ -453,6 +508,8 @@ impl Scheduler {
         };
         if finished {
             self.finish(id, FinishReason::Completed);
+        } else {
+            self.grow_reservation(id);
         }
     }
 
@@ -464,8 +521,10 @@ impl Scheduler {
             let e = self.entries.get_mut(&id).expect("note_decode: unknown request");
             debug_assert_eq!(e.state, RequestState::Decoding);
             e.len += 1;
-            if e.fed < e.prompt.len() {
-                e.next_input = e.prompt[e.fed];
+            if e.fed < e.eff_prompt_len() {
+                // teacher forcing: prompt tokens, then (after a preemption)
+                // the replay suffix — those outputs were already collected
+                e.next_input = e.eff_prompt_at(e.fed);
                 e.fed += 1;
             } else {
                 if e.generated.len() < e.gen_target {
@@ -474,10 +533,12 @@ impl Scheduler {
                 }
                 e.next_input = produced;
             }
-            e.fed >= e.prompt.len() && e.generated.len() >= e.gen_target
+            e.fed >= e.eff_prompt_len() && e.generated.len() >= e.gen_target
         };
         if finished {
             self.finish(id, FinishReason::Completed);
+        } else {
+            self.grow_reservation(id);
         }
     }
 
@@ -502,6 +563,168 @@ impl Scheduler {
         // the finish EVENT is reported regardless, so the driver's
         // outcome/metrics see every finish, not just the KV-writing ones
         self.finished_events.push(id);
+    }
+
+    /// Overcommit only: keep the reservation one block ahead of the tokens
+    /// actually cached, so `reserved_*` tracks real occupancy instead of
+    /// the full-context worst case. Capped by the submit-time context
+    /// validation (len never exceeds prompt + target ≤ max_context).
+    fn grow_reservation(&mut self, id: RequestId) {
+        if !self.cfg.overcommit {
+            return;
+        }
+        let bb = self.cfg.block_bytes;
+        let e = self.entries.get_mut(&id).expect("grow_reservation: unknown request");
+        debug_assert!(e.state.is_live());
+        let held = (e.len as usize).max(e.prefill_cached);
+        let need = kv_blocks_needed(&[held + 1], self.cfg.kv_block_size);
+        if need > e.needed_blocks {
+            let extra = need - e.needed_blocks;
+            e.needed_blocks = need;
+            e.needed_bytes += extra * bb;
+            self.reserved_blocks += extra;
+            self.reserved_bytes += extra * bb;
+        }
+    }
+
+    // ---- prefix cache & preemption ----------------------------------------
+
+    /// Admissions since the last call, in admission order. The leader
+    /// probes these against its prefix index before their first prefill
+    /// chunk runs.
+    pub fn take_admitted(&mut self) -> Vec<RequestId> {
+        std::mem::take(&mut self.admitted_events)
+    }
+
+    /// The token sequence whose KV the request's slot holds once its
+    /// prefill completes: the prompt plus any replay suffix from a
+    /// preemption. This is the key the leader's prefix index operates on.
+    pub fn effective_prompt(&self, id: RequestId) -> Option<Vec<i32>> {
+        let e = self.entries.get(&id)?;
+        let mut p = e.prompt.clone();
+        p.extend_from_slice(&e.generated[..e.promoted]);
+        Some(p)
+    }
+
+    /// Physical slot of a live request.
+    pub fn slot_of(&self, id: RequestId) -> Option<u32> {
+        let e = self.entries.get(&id)?;
+        e.state.is_live().then_some(e.slot)
+    }
+
+    /// Record that the first `tokens` effective-prompt tokens are already
+    /// resident in the slot's KV (the leader mapped a donor's blocks via
+    /// `MapBlocks`); prefill resumes after them. Must precede the first
+    /// prefill chunk and leave at least one token to prefill.
+    pub fn set_prefix_cached(&mut self, id: RequestId, tokens: usize) {
+        let e = self.entries.get_mut(&id).expect("set_prefix_cached: unknown request");
+        debug_assert_eq!(e.state, RequestState::Prefilling);
+        debug_assert_eq!(e.prefill_cached, 0, "prefix mapping must precede prefill");
+        debug_assert!(tokens < e.eff_prompt_len(), "a hit must leave ≥ 1 token to prefill");
+        e.prefill_cached = tokens;
+    }
+
+    /// Preempt a live request: release its slot and reservation, queue a
+    /// `Retire` for any KV it materialized, and push it back to the FRONT
+    /// of the waiting queue (a victim re-admits before new arrivals, so
+    /// preemption cannot starve it). Generated tokens are preserved as a
+    /// replay suffix and re-prefilled on re-admission; see module docs.
+    /// Returns false for queued, finished, or unknown ids.
+    pub fn preempt(&mut self, id: RequestId) -> bool {
+        match self.entries.get(&id).map(|e| e.state) {
+            Some(s) if s.is_live() => {}
+            _ => return false,
+        }
+        let (slot, blocks, bytes, wrote_kv) = {
+            let e = &self.entries[&id];
+            (e.slot, e.needed_blocks, e.needed_bytes, e.len > 0 || e.prefill_cached > 0)
+        };
+        self.running.retain(|&r| r != id);
+        self.free_slots.push(slot);
+        self.reserved_blocks -= blocks;
+        self.reserved_bytes -= bytes;
+        if wrote_kv {
+            self.retire_queue.push((id, slot));
+        }
+        let e = self.entries.get_mut(&id).expect("checked above");
+        // The newest generated token (if any) was emitted but never fed
+        // back through attention — its KV does not exist. Drop it; the
+        // resumed prefill re-predicts it from the same context, and greedy
+        // decode is deterministic, so the final output is unchanged.
+        if e.generated.len() > e.promoted {
+            e.generated.pop();
+        }
+        e.promoted = e.generated.len();
+        e.state = RequestState::Queued;
+        e.fed = 0;
+        e.len = 0;
+        e.next_input = 0;
+        e.prefill_cached = 0;
+        let reserve_tokens = if self.cfg.overcommit {
+            e.eff_prompt_len()
+        } else {
+            e.prompt.len() + e.gen_target
+        };
+        e.needed_blocks = kv_blocks_needed(&[reserve_tokens], self.cfg.kv_block_size);
+        e.needed_bytes = e.needed_blocks * self.cfg.block_bytes;
+        self.waiting.push_front(id);
+        self.preempted_total += 1;
+        true
+    }
+
+    /// Overcommit pressure valve: while live reservations (or the measured
+    /// occupancy snapshot) exceed the budget and more than one request is
+    /// live, preempt victims picked by [`AdmissionPolicy::pick_victim`].
+    /// Returns the preempted ids in eviction order. The snapshot cannot
+    /// observe the releases mid-loop, so each victim's reservation is
+    /// discounted from it — one stale reading must not cascade into
+    /// evicting everything.
+    pub fn pressure_preempt(&mut self, occ: KvOccupancy) -> Vec<RequestId> {
+        if !self.cfg.overcommit {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let (mut occ_blocks, mut occ_bytes) = (occ.blocks_in_use, occ.bytes_in_use);
+        loop {
+            let over = match self.cfg.budget {
+                KvBudget::Unlimited => false,
+                KvBudget::Blocks(b) => self.reserved_blocks.max(occ_blocks) > b,
+                KvBudget::Bytes(b) => self.reserved_bytes.max(occ_bytes) > b,
+            };
+            if !over || self.running.len() <= 1 {
+                break;
+            }
+            let candidates: Vec<Candidate> = self
+                .running
+                .iter()
+                .map(|&id| {
+                    let e = &self.entries[&id];
+                    Candidate {
+                        id,
+                        cost_tokens: e.prompt.len() + e.gen_target,
+                        waited_rounds: e.waited_rounds,
+                    }
+                })
+                .collect();
+            let Some(pick) = self.policy.pick_victim(&candidates) else { break };
+            let vid = candidates[pick].id;
+            let (vb, vby) = {
+                let e = &self.entries[&vid];
+                (e.needed_blocks, e.needed_bytes)
+            };
+            if !self.preempt(vid) {
+                break;
+            }
+            occ_blocks = occ_blocks.saturating_sub(vb);
+            occ_bytes = occ_bytes.saturating_sub(vby);
+            out.push(vid);
+        }
+        out
+    }
+
+    /// Requests preempted by KV pressure so far.
+    pub fn preempted_total(&self) -> u64 {
+        self.preempted_total
     }
 
     /// Requests retired since the last call, with the physical slot whose
@@ -594,7 +817,8 @@ impl Scheduler {
         self.free_slots.len()
     }
 
-    /// Per-worker KV blocks reserved by live requests (full-context).
+    /// Per-worker KV blocks reserved by live requests (full-context by
+    /// default; prompt-then-grown under overcommit).
     pub fn reserved_blocks(&self) -> usize {
         self.reserved_blocks
     }
@@ -628,6 +852,7 @@ mod tests {
             kv_block_size: 4,
             block_bytes: 64,
             budget,
+            overcommit: false,
         }
     }
 
@@ -800,6 +1025,190 @@ mod tests {
         assert!(s.cancel(id));
         assert_eq!(s.take_retirements(), vec![(id, 0)]);
         assert_eq!(s.free_slot_count(), 1);
+    }
+
+    /// Drive a scheduler to idle against a deterministic stand-in model:
+    /// with L tokens in the cache, the next prediction is `100 + L`. That
+    /// depends only on context *length*, so prefill, teacher forcing, and
+    /// post-preemption replay all agree on every token. Optionally preempt
+    /// `victim` after its `n`-th decode note.
+    fn drive(s: &mut Scheduler, preempt: Option<(RequestId, usize)>, chunk: usize) {
+        let mut noted = 0usize;
+        for _ in 0..10_000 {
+            if s.is_idle() {
+                return;
+            }
+            s.admit(KvOccupancy::default());
+            if let Some(p) = s.next_prefill() {
+                let n = s.prompt_chunk(p.id, chunk).len();
+                s.note_prefill_chunk(p.id, n, 100 + (p.cached + n) as i32);
+                continue;
+            }
+            for g in s.decode_plan() {
+                for r in g {
+                    s.note_decode(r.id, 100 + r.len + 1);
+                    if let Some((vid, at)) = preempt {
+                        if r.id == vid {
+                            noted += 1;
+                            if noted == at {
+                                assert!(s.preempt(vid));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        panic!("drive did not converge");
+    }
+
+    #[test]
+    fn overcommit_reserves_prompt_only_then_grows_per_block() {
+        let mut s = Scheduler::new(
+            SchedCfg { overcommit: true, ..cfg(1, 1, GroupMode::Packed, KvBudget::Unlimited) },
+            AdmissionKind::Fifo.build(),
+        );
+        // ctx 10 → 3 blocks full-context, but only blocks(4) = 1 up front
+        let id = s.submit(vec![1, 2, 3, 4], 6).unwrap();
+        s.admit(KvOccupancy::default());
+        assert_eq!(s.reserved_blocks(), 1);
+        s.note_prefill_chunk(id, 4, 105); // cache holds 4 → next step needs block 2
+        assert_eq!(s.reserved_blocks(), 2);
+        for _ in 0..3 {
+            let r = s.decode_plan()[0][0];
+            s.note_decode(id, 100 + r.len + 1);
+        }
+        // len 7 → one block ahead covers token 8, still 2 blocks
+        assert_eq!(s.reserved_blocks(), 2);
+        let r = s.decode_plan()[0][0];
+        s.note_decode(id, 100 + r.len + 1); // len 8 → block 3
+        assert_eq!(s.reserved_blocks(), 3);
+        let r = s.decode_plan()[0][0];
+        s.note_decode(id, 100 + r.len + 1); // target reached
+        assert!(s.poll(id).unwrap().state.is_finished());
+        assert_eq!((s.reserved_blocks(), s.reserved_bytes()), (0, 0));
+    }
+
+    #[test]
+    fn preempt_conserves_slots_reservations_and_retires() {
+        let mut s = Scheduler::new(
+            SchedCfg { overcommit: true, ..cfg(2, 2, GroupMode::Packed, KvBudget::Unlimited) },
+            AdmissionKind::Fifo.build(),
+        );
+        let a = s.submit(vec![1; 4], 4).unwrap();
+        let b = s.submit(vec![2; 4], 4).unwrap();
+        s.admit(KvOccupancy::default());
+        s.take_admitted();
+        let before = s.reserved_blocks();
+        s.note_prefill_chunk(a, 2, 0); // A materializes KV mid-prefill
+        assert!(s.preempt(a));
+        assert_eq!(s.poll(a).unwrap().state, RequestState::Queued);
+        assert_eq!(s.free_slot_count(), 1);
+        assert_eq!(s.reserved_blocks(), before - 1);
+        assert_eq!(s.take_retirements(), vec![(a, 0)]);
+        assert_eq!(s.preempted_total(), 1);
+        // not live → not preemptable; B is untouched
+        assert!(!s.preempt(a));
+        assert!(s.poll(b).unwrap().state.is_live());
+        // the victim re-admits at the head of the queue and re-prefills
+        // from scratch (its retired KV is gone)
+        let c = s.submit(vec![3; 4], 4).unwrap();
+        s.admit(KvOccupancy::default());
+        assert_eq!(s.take_admitted(), vec![a]); // a, not c: front of the queue
+        assert_eq!(s.poll(a).unwrap().state, RequestState::Prefilling);
+        assert_eq!(s.next_prefill().map(|p| p.cached), Some(0));
+        assert_eq!(s.poll(c).unwrap().state, RequestState::Queued);
+    }
+
+    #[test]
+    fn preempted_request_completes_with_identical_output() {
+        for use_prefill in [true, false] {
+            for preempt_at in [1, 3] {
+                let mk = || {
+                    Scheduler::new(
+                        SchedCfg {
+                            use_prefill,
+                            overcommit: true,
+                            ..cfg(2, 2, GroupMode::Packed, KvBudget::Unlimited)
+                        },
+                        AdmissionKind::Fifo.build(),
+                    )
+                };
+                let mut reference = mk();
+                let id = reference.submit(vec![1, 2, 3, 4, 5], 5).unwrap();
+                drive(&mut reference, None, 2);
+                let want = reference.poll(id).unwrap().tokens;
+                assert_eq!(want.len(), 5);
+
+                let mut s = mk();
+                let id = s.submit(vec![1, 2, 3, 4, 5], 5).unwrap();
+                // keep a second request live so the preempted one competes
+                s.submit(vec![9, 9], 3).unwrap();
+                drive(&mut s, Some((id, preempt_at)), 2);
+                assert_eq!(
+                    s.poll(id).unwrap().tokens,
+                    want,
+                    "use_prefill={use_prefill} preempt_at={preempt_at}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pressure_preempt_evicts_newest_until_under_budget_never_the_last() {
+        let mut s = Scheduler::new(
+            SchedCfg { overcommit: true, ..cfg(3, 3, GroupMode::Packed, KvBudget::Blocks(3)) },
+            AdmissionKind::Fifo.build(),
+        );
+        let ids: Vec<_> = (0..3).map(|i| s.submit(vec![i; 4], 8).unwrap()).collect();
+        s.admit(KvOccupancy::default()); // 3 × 1 prompt block = budget
+        assert_eq!(s.live(), 3);
+        assert!(s.pressure_preempt(KvOccupancy::default()).is_empty(), "at budget, not over");
+        // growth pushes past the budget → newest victim goes back to queued
+        s.note_prefill_chunk(ids[0], 4, 0);
+        assert_eq!(s.reserved_blocks(), 4);
+        assert_eq!(s.pressure_preempt(KvOccupancy::default()), vec![ids[2]]);
+        assert_eq!(s.poll(ids[2]).unwrap().state, RequestState::Queued);
+        assert_eq!(s.reserved_blocks(), 3);
+        // a hopeless budget still never evicts the last live request
+        let mut s = Scheduler::new(
+            SchedCfg { overcommit: true, ..cfg(1, 1, GroupMode::Packed, KvBudget::Blocks(1)) },
+            AdmissionKind::Fifo.build(),
+        );
+        let id = s.submit(vec![1; 8], 4).unwrap();
+        s.admit(KvOccupancy::default()); // escape hatch: 2 blocks > budget 1
+        assert!(s.pressure_preempt(KvOccupancy::default()).is_empty());
+        assert!(s.poll(id).unwrap().state.is_live());
+        // and the valve is inert without overcommit
+        let mut s = sched(2, 2, GroupMode::Packed, KvBudget::Blocks(1));
+        s.submit(vec![1; 8], 4).unwrap();
+        s.admit(KvOccupancy::default());
+        assert!(s.pressure_preempt(KvOccupancy { blocks_in_use: 99, bytes_in_use: 0 }).is_empty());
+    }
+
+    #[test]
+    fn prefix_cached_admission_skips_mapped_tokens() {
+        let mut s = sched(1, 1, GroupMode::Packed, KvBudget::Unlimited);
+        let id = s.submit(vec![1, 2, 3, 4, 5, 6, 7, 8], 2).unwrap();
+        s.admit(KvOccupancy::default());
+        assert_eq!(s.take_admitted(), vec![id]);
+        assert!(s.take_admitted().is_empty(), "admission events drain");
+        assert_eq!(s.effective_prompt(id).unwrap().len(), 8);
+        assert_eq!(s.slot_of(id), Some(0));
+        s.set_prefix_cached(id, 4); // leader mapped the first block from a donor
+        let p = s.next_prefill().unwrap();
+        assert_eq!(p.cached, 4);
+        assert_eq!(s.prompt_chunk(id, 16), vec![5, 6, 7, 8]);
+        s.note_prefill_chunk(id, 4, 77);
+        let st = s.poll(id).unwrap();
+        assert_eq!((st.state, st.tokens.as_slice()), (RequestState::Decoding, &[77][..]));
+        assert_eq!(s.decode_plan()[0][0].len, 8);
+        // mapped-but-never-prefilled KV still owes the workers a Retire
+        let mut s = sched(1, 1, GroupMode::Packed, KvBudget::Unlimited);
+        let id = s.submit(vec![1, 2, 3, 4, 5, 6, 7, 8], 2).unwrap();
+        s.admit(KvOccupancy::default());
+        s.set_prefix_cached(id, 4);
+        s.cancel(id);
+        assert_eq!(s.take_retirements(), vec![(id, 0)]);
     }
 
     #[test]

@@ -41,6 +41,16 @@ pub trait AdmissionPolicy: Send {
     /// Index (into the FIFO-ordered `waiting` slice) of the request to try
     /// admitting next, or `None` to admit nothing this round.
     fn pick(&mut self, waiting: &[Candidate]) -> Option<usize>;
+
+    /// Index (into the admission-ordered `running` slice) of the request to
+    /// preempt when the KV arena is over budget, or `None` to preempt
+    /// nothing. The default evicts the most recently admitted request
+    /// (LIFO): it has the least KV invested, so re-prefilling it wastes the
+    /// fewest tokens, and the oldest requests keep their forward-progress
+    /// guarantee. Must be deterministic, like [`Self::pick`].
+    fn pick_victim(&mut self, running: &[Candidate]) -> Option<usize> {
+        running.len().checked_sub(1)
+    }
 }
 
 /// First-in-first-out (the legacy order).
@@ -166,6 +176,15 @@ mod tests {
         assert_eq!(p.pick(&[cand(0, 90, 5), cand(1, 10, 0)]), Some(0));
         // below the bound, SJF order applies
         assert_eq!(p.pick(&[cand(0, 90, 4), cand(1, 10, 0)]), Some(1));
+    }
+
+    #[test]
+    fn default_victim_is_last_admitted() {
+        let mut p = Fifo;
+        assert_eq!(p.pick_victim(&[]), None);
+        assert_eq!(p.pick_victim(&[cand(3, 8, 0), cand(5, 2, 0)]), Some(1));
+        let mut p = Sjf::default();
+        assert_eq!(p.pick_victim(&[cand(3, 8, 0), cand(5, 2, 0)]), Some(1));
     }
 
     #[test]

@@ -5,9 +5,15 @@
 //!
 //! ```text
 //! submit() ─▶ Queued ─admit─▶ Prefilling ─last chunk─▶ Decoding ─target─▶ Finished{Completed}
-//!               │                (teacher-forced requests skip Prefilling)        ▲
-//!               └────────────────────────── cancel() ──────────────▶ Finished{Cancelled}
+//!               ▲ │              (teacher-forced requests skip Prefilling)  │     ▲
+//!               │ └──────────────────────── cancel() ───────┼──────────────┼──▶ Finished{Cancelled}
+//!               └────────────────────────── preempt() ◀─────┴──────────────┘
 //! ```
+//!
+//! `preempt()` (overcommit pressure relief) sends a live request back to
+//! the *front* of the waiting queue with its generated tokens intact; on
+//! re-admission it re-prefills prompt + generated and continues, so its
+//! final output is identical to an unpreempted run.
 //!
 //! Validation happens **per request at submit time** ([`SubmitError`]): an
 //! invalid request is rejected without touching the rest of the session —
@@ -88,6 +94,9 @@ pub struct StepOutcome {
     pub decode_groups: usize,
     /// Requests that finished (and whose KV was retired) this iteration.
     pub finished: Vec<RequestId>,
+    /// Requests preempted back to the waiting queue by KV pressure this
+    /// iteration (overcommit mode only).
+    pub preempted: Vec<RequestId>,
     /// Nothing left to do: no waiting and no live requests.
     pub idle: bool,
 }

@@ -167,6 +167,9 @@ fn worker_loop<T: Transport>(
         match msg {
             WireMsg::Shutdown => return Ok(()),
             WireMsg::Retire { slot } => arena.retire(slot),
+            WireMsg::MapBlocks { slot, src_slot, tokens } => {
+                arena.map_prefix(slot, src_slot, tokens);
+            }
             WireMsg::KvStatsReq => {
                 link.send(WireMsg::KvStats { stats: arena.stats() })?;
             }

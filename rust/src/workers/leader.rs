@@ -25,6 +25,13 @@
 //!   [`ServeMetrics`] (throughput, TBT, per-request queue time and TTFT,
 //!   KV and wire accounting).
 //!
+//! With `--prefix-cache`, admission probes a block-granular
+//! [`PrefixIndex`] of live prefilled prompts and maps hits slot-to-slot
+//! (`WireMsg::MapBlocks`, refcounted + copy-on-write on the workers)
+//! instead of re-prefilling; with `--overcommit`, admission reserves
+//! prompt-only KV and budget pressure preempts victims back to the queue
+//! (their outputs unchanged — see the scheduler module docs).
+//!
 //! The scheduling *brain* lives in [`crate::scheduler`] — pure
 //! bookkeeping, property-tested without artifacts; this module only
 //! executes its plans against the engine and the attention workers.
@@ -48,15 +55,15 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::kernels::AttnBackendKind;
-use crate::kvcache::KvDtype;
+use crate::kvcache::{KvDtype, PrefixIndex};
 use crate::metrics::{KvCacheStats, ServeMetrics, StepBreakdown};
 use crate::net::{inproc, tcp, Transport, TransportKind};
 use crate::netsim::stack::{NetStackModel, LINE_RATE_400G};
 use crate::runtime::engine::Engine;
 use crate::runtime::host::{copies, HostTensor};
 use crate::scheduler::{
-    AdmissionKind, DecodeRow, GroupMode, KvBudget, KvOccupancy, RequestId, RequestStatus,
-    SchedCfg, Scheduler, StepOutcome, SubmitError,
+    AdmissionKind, DecodeRow, GroupMode, KvBudget, KvOccupancy, RequestId, RequestState,
+    RequestStatus, SchedCfg, Scheduler, StepOutcome, SubmitError,
 };
 use crate::trace::Request;
 
@@ -124,6 +131,18 @@ pub struct PipelineOpts {
     /// overflow (counted in `ServeMetrics::deferred_admissions`; both
     /// budget units are reported in `ServeMetrics`).
     pub kv_block_budget: Option<usize>,
+    /// Prompt-prefix sharing (`--prefix-cache`): index live requests'
+    /// prefilled prompts in a block-granular trie and, on a hit, map the
+    /// donor's KV blocks into the new request's slot (refcounted, CoW on
+    /// divergence) instead of re-prefilling them. A miss leaves the
+    /// admission path bit-identical to a build without the index.
+    pub prefix_cache: bool,
+    /// Block-granular KV overcommit (`--overcommit`): admission reserves
+    /// prompt-only KV and reservations grow with the context; when live
+    /// usage crosses the budget, the scheduler preempts victims back to
+    /// the queue (their KV retired, output unchanged on resume). Only
+    /// meaningful with a KV budget.
+    pub overcommit: bool,
 }
 
 impl PipelineOpts {
@@ -145,6 +164,8 @@ impl PipelineOpts {
             admission: AdmissionKind::Fifo,
             kv_byte_budget: None,
             kv_block_budget: None,
+            prefix_cache: false,
+            overcommit: false,
         }
     }
 }
@@ -197,6 +218,10 @@ fn spawn_worker(opts: &PipelineOpts, geom: ModelGeom, idx: usize, respawn: bool)
 struct Session {
     sched: Scheduler,
     metrics: ServeMetrics,
+    /// Block-granular prompt-prefix index (`Some` iff `--prefix-cache`):
+    /// holds every live request whose prefill completed; admissions probe
+    /// it and map hits from the donor's slot instead of re-prefilling.
+    prefix: Option<PrefixIndex>,
     /// Latest pool-wide KvStats snapshot (feeds the next admission round).
     kv_snap: KvCacheStats,
     /// Endpoint wire counters at session start (report this session only).
@@ -342,6 +367,7 @@ impl DisaggPipeline {
                 kv_block_size: self.opts.kv_block_size,
                 block_bytes,
                 budget,
+                overcommit: self.opts.overcommit,
             },
             self.opts.admission.build(),
         );
@@ -353,6 +379,7 @@ impl DisaggPipeline {
         self.session = Some(Session {
             sched,
             metrics: ServeMetrics::new(),
+            prefix: self.opts.prefix_cache.then(|| PrefixIndex::new(self.opts.kv_block_size)),
             kv_snap,
             wire_baseline,
             budget_blocks,
@@ -420,13 +447,54 @@ impl DisaggPipeline {
             outcome.deferred = deferred;
         }
 
+        // prefix-cache probe for this round's admissions: on a hit, map
+        // the donor's shared prompt blocks into the new slot instead of
+        // re-prefilling them. MapBlocks goes out before any Retire this
+        // step can queue, and wire order is FIFO per link, so the
+        // refcounts land while the donor's blocks are still resident.
+        let admitted_ids = self.session_mut().sched.take_admitted();
+        if self.session_ref().prefix.is_some() {
+            for id in admitted_ids {
+                let hit = {
+                    let s = self.session_ref();
+                    // only requests awaiting their first prefill chunk can
+                    // skip work (teacher-forced/single-token paths cannot)
+                    if s.sched.poll(id).map(|st| st.state) != Some(RequestState::Prefilling) {
+                        continue;
+                    }
+                    let prompt = s.sched.effective_prompt(id).expect("just admitted");
+                    s.prefix.as_ref().expect("checked").lookup(&prompt, usize::MAX)
+                };
+                let Some(hit) = hit else { continue };
+                let s = self.session_ref();
+                let (Some(src), Some(dst)) = (s.sched.slot_of(hit.donor), s.sched.slot_of(id))
+                else {
+                    continue;
+                };
+                self.map_blocks(dst, src, hit.tokens)?;
+                let s = self.session_mut();
+                s.sched.set_prefix_cached(id, hit.tokens);
+                s.metrics.record_prefix_hit(hit.tokens);
+            }
+        }
+
         // one prefill chunk (admission order), or one decode iteration
         let next_prefill = self.session_ref().sched.next_prefill();
         if let Some(p) = next_prefill {
             let cap = self.max_batch_bucket()?;
             let chunk = self.session_ref().sched.prompt_chunk(p.id, cap);
             let next = self.exec_prefill_chunk(p.slot, &chunk, p.cached)?;
-            self.session_mut().sched.note_prefill_chunk(p.id, chunk.len(), next);
+            let s = self.session_mut();
+            s.sched.note_prefill_chunk(p.id, chunk.len(), next);
+            // prefill complete → the prompt's KV is durable on every
+            // worker: index this request as a prefix donor (dropped again
+            // on finish/cancel/preempt)
+            if s.sched.poll(p.id).map(|st| st.state) == Some(RequestState::Decoding) {
+                if let Some(ix) = s.prefix.as_mut() {
+                    let prompt = s.sched.effective_prompt(p.id).expect("live");
+                    ix.insert(p.id, &prompt);
+                }
+            }
             outcome.prefilled = Some(p.id);
         } else {
             let plan = self.session_ref().sched.decode_plan();
@@ -446,6 +514,27 @@ impl DisaggPipeline {
                 }
                 outcome.decoded_rows += rows.len();
                 outcome.decode_groups += 1;
+            }
+        }
+
+        // overcommit pressure valve: preempt victims until the budget
+        // holds again. Their Retires queue now and go out with this
+        // step's batch; blocks a sharer mapped stay resident (refcounts).
+        {
+            let s = self.session_mut();
+            let occ = KvOccupancy {
+                blocks_in_use: s.kv_snap.blocks_in_use.div_ceil(workers_n),
+                bytes_in_use: s.kv_snap.bytes_in_use.div_ceil(workers_n),
+            };
+            let preempted = s.sched.pressure_preempt(occ);
+            if !preempted.is_empty() {
+                s.metrics.record_preemptions(preempted.len() as u64);
+                if let Some(ix) = s.prefix.as_mut() {
+                    for &id in &preempted {
+                        ix.remove(id);
+                    }
+                }
+                outcome.preempted = preempted;
             }
         }
 
@@ -477,6 +566,9 @@ impl DisaggPipeline {
         let mut completed = 0u64;
         for &id in &finished_ids {
             let s = self.session_mut();
+            if let Some(ix) = s.prefix.as_mut() {
+                ix.remove(id); // retired KV must stop being a donor
+            }
             if let Some((queue_s, ttft_s, tokens)) = s.sched.lifecycle(id) {
                 s.metrics.record_request(queue_s, ttft_s, tokens as u64);
                 completed += 1;
@@ -520,6 +612,9 @@ impl DisaggPipeline {
     pub fn cancel(&mut self, id: RequestId) -> bool {
         let cancelled = self.session.as_mut().map_or(false, |s| s.sched.cancel(id));
         if cancelled {
+            if let Some(ix) = self.session.as_mut().and_then(|s| s.prefix.as_mut()) {
+                ix.remove(id);
+            }
             // flush the retirement NOW (wire order is FIFO, so this is
             // race-free while the slot is still unassigned). A failed send
             // is re-queued and retried at the START of the next step —
@@ -642,6 +737,19 @@ impl DisaggPipeline {
     fn retire_slot(&self, slot: u32) -> Result<()> {
         for worker in &self.workers {
             worker.link.send(WireMsg::Retire { slot }).map_err(|e| anyhow!(e))?;
+        }
+        Ok(())
+    }
+
+    /// Map the first `tokens` of `src_slot`'s KV into `dst_slot` on every
+    /// attention worker (refcounted prefix sharing — slot-relative, so one
+    /// message fits all workers despite per-worker block ids).
+    fn map_blocks(&self, dst_slot: u32, src_slot: u32, tokens: usize) -> Result<()> {
+        for worker in &self.workers {
+            worker
+                .link
+                .send(WireMsg::MapBlocks { slot: dst_slot, src_slot, tokens })
+                .map_err(|e| anyhow!(e))?;
         }
         Ok(())
     }

@@ -89,7 +89,16 @@ pub enum WireMsg {
     AttnOut { layer: usize, out: HostTensor },
     /// The request in `slot` completed: free its KV blocks (leader →
     /// worker). Idempotent; a later occupant of the slot re-allocates.
+    /// With refcounted blocks this *decrements* — blocks shared with other
+    /// slots via `MapBlocks` stay resident for them.
     Retire { slot: u32 },
+    /// Prefix sharing (leader → worker): map the first
+    /// `ceil(tokens / block_size)` blocks of `src_slot`'s chain into `slot`
+    /// read-only, covering `tokens` cached token slots. Slot layouts are
+    /// mirrored across workers (each holds its KV-head shard of *every*
+    /// request), so a slot-relative message needs no physical block ids on
+    /// the wire. The destination writes copy-on-write.
+    MapBlocks { slot: u32, src_slot: u32, tokens: usize },
     /// Ask for a KV-arena accounting snapshot (leader → worker).
     KvStatsReq,
     /// KV-arena accounting snapshot (worker → leader).
@@ -114,9 +123,10 @@ impl WireMsg {
             WireMsg::AttnOut { out, .. } => out.byte_size(),
             WireMsg::Retire { .. } => 4,
             WireMsg::KvStatsReq => 0,
-            WireMsg::KvStats { .. } => 48,
+            WireMsg::KvStats { .. } => 64,
             WireMsg::WorkerError { msg } => msg.len(),
             WireMsg::Shutdown => 0,
+            WireMsg::MapBlocks { .. } => 12,
         }
     }
 }
@@ -140,7 +150,8 @@ mod tests {
         assert_eq!(WireMsg::Shutdown.wire_bytes(), 0);
         assert_eq!(WireMsg::Retire { slot: 3 }.wire_bytes(), 4);
         assert_eq!(WireMsg::KvStatsReq.wire_bytes(), 0);
-        assert_eq!(WireMsg::KvStats { stats: KvCacheStats::default() }.wire_bytes(), 48);
+        assert_eq!(WireMsg::KvStats { stats: KvCacheStats::default() }.wire_bytes(), 64);
+        assert_eq!(WireMsg::MapBlocks { slot: 1, src_slot: 0, tokens: 32 }.wire_bytes(), 12);
     }
 
     #[test]

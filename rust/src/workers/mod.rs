@@ -58,6 +58,16 @@
 //! accounting — in blocks and dtype-aware **bytes** — into `ServeMetrics`
 //! every serve round.
 //!
+//! Blocks are refcounted, so with `--prefix-cache` the stats carry two
+//! views: **logical** (`blocks_in_use` — block-table entries summed over
+//! slots, what capacity planning reserves against) and **physical**
+//! (`physical_blocks_in_use` — distinct resident blocks, what the memory
+//! actually holds). Logical ÷ physical is the prefix-sharing dedup
+//! factor; with sharing off the two are equal. `WireMsg::MapBlocks` maps
+//! a donor slot's prompt prefix into a new slot (refcount + copy-on-write
+//! divergence), and `Retire` *releases* references rather than freeing —
+//! a shared block survives until its last holder retires.
+//!
 //! # Compute: pluggable attention backends
 //!
 //! The attention math runs through a [`crate::kernels::AttnBackend`]

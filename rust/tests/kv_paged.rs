@@ -1,7 +1,11 @@
 //! Paged-KV correctness: the block-paged arena must be **bit-identical** to
 //! a dense zero-initialised reference cache under any interleaving of
-//! decode appends, prefill chunks, slot reuse and retirement — the property
-//! the live pipeline's golden tests rely on, checked here without PJRT
+//! decode appends, prefill chunks, slot reuse, retirement — and (ISSUE 6)
+//! shared-prefix mapping with copy-on-write divergence: a `map_prefix`
+//! mirror copies the donor's covering blocks in the dense model, after
+//! which no interleaving of appends on either slot may let one slot
+//! observe the other's writes, and refcounted retirement must return
+//! every physical block exactly once. Checked here without PJRT
 //! artifacts. Uses the in-repo PRNG (no proptest offline).
 
 use lamina::kvcache::{kv_blocks_needed, ArenaCfg, KvDtype, PagedKvArena, PAD_SLOT};
@@ -70,6 +74,24 @@ impl DenseRef {
         }
     }
 
+    /// Dense mirror of `map_prefix`: the destination physically shares the
+    /// donor's covering blocks, so it sees the donor's bytes for the whole
+    /// covered range (`positions` = covering blocks × block size) — donor
+    /// residue past the mapped token count included.
+    fn map_from(&mut self, dst: u32, src: u32, positions: usize) {
+        let sk = self.k[src as usize].clone();
+        let sv = self.v[src as usize].clone();
+        self.reset(dst);
+        for layer in 0..LAYERS {
+            for h in 0..KHS {
+                let base = (layer * KHS + h) * MAX_SEQ * HD;
+                let n = positions * HD;
+                self.k[dst as usize][base..base + n].copy_from_slice(&sk[base..base + n]);
+                self.v[dst as usize][base..base + n].copy_from_slice(&sv[base..base + n]);
+            }
+        }
+    }
+
     fn gather(&self, slots: &[u32], layer: usize, bucket: usize, seq: usize) -> (Vec<f32>, Vec<f32>) {
         let row = KHS * seq * HD;
         let mut k = vec![0.0f32; bucket * row];
@@ -120,7 +142,10 @@ fn check_gather(arena: &mut PagedKvArena, dense: &DenseRef, rng: &mut Rng, tag: 
     assert_eq!(pv.as_f32(), &dv[..], "{tag}: V diverges (layer {layer}, seq {seq})");
 }
 
-fn run_case(seed: u64, block_size: usize, ops: usize) {
+/// With `cow`, ~7% of ops map a random prefix of one slot into another
+/// (the prefix-cache hit path); returns whether physical sharing was ever
+/// observed so the caller can assert coverage across repetitions.
+fn run_case(seed: u64, block_size: usize, ops: usize, cow: bool) -> bool {
     let mut rng = Rng::new(seed);
     let mut arena = PagedKvArena::new(ArenaCfg {
         layers: LAYERS,
@@ -135,6 +160,7 @@ fn run_case(seed: u64, block_size: usize, ops: usize) {
     let mut dense = DenseRef::new();
     // the leader's view of each slot's cached length
     let mut lens = vec![0usize; SLOTS];
+    let mut shared_seen = false;
 
     for op in 0..ops {
         let tag = format!("bs={block_size} seed={seed:#x} op={op}");
@@ -186,6 +212,21 @@ fn run_case(seed: u64, block_size: usize, ops: usize) {
                 dense.reset(slot);
                 lens[slot as usize] = 0;
             }
+            // prefix-cache hit: share a donor prefix copy-on-write (any
+            // token count — the arena must handle mid-block tails even
+            // though the leader only issues block-aligned hits)
+            87..=93 if cow => {
+                let pair = pick_slots(&mut rng, 2);
+                let (src, dst) = (pair[0], pair[1]);
+                let srclen = lens[src as usize];
+                if srclen == 0 {
+                    continue;
+                }
+                let tokens = rng.usize(1, srclen + 1);
+                arena.map_prefix(dst, src, tokens);
+                dense.map_from(dst, src, tokens.div_ceil(block_size) * block_size);
+                lens[dst as usize] = tokens;
+            }
             // slot reuse without retire: the leader just starts a new
             // request at position 0 (decode path); the stale table must be
             // replaced by the arena's position-0 reset
@@ -199,21 +240,122 @@ fn run_case(seed: u64, block_size: usize, ops: usize) {
 
         // allocator invariant: blocks in use exactly cover cached tokens
         let table_lens: Vec<usize> = (0..SLOTS as u32).map(|s| arena.len_tokens(s)).collect();
+        let st = arena.stats();
         assert_eq!(
-            arena.stats().blocks_in_use,
+            st.blocks_in_use,
             kv_blocks_needed(&table_lens, block_size),
             "{tag}: block accounting"
         );
+        // refcount invariant: distinct resident blocks never exceed the
+        // logical (per-mapper) count, and the byte views stay proportional
+        assert!(
+            st.physical_blocks_in_use <= st.blocks_in_use,
+            "{tag}: physical blocks exceed logical"
+        );
+        assert_eq!(
+            st.physical_bytes_in_use * st.blocks_in_use,
+            st.bytes_in_use * st.physical_blocks_in_use,
+            "{tag}: physical/logical byte views disagree"
+        );
+        shared_seen |= st.physical_blocks_in_use < st.blocks_in_use;
     }
+
+    // no physical leaks: retiring every slot returns every block, shared
+    // or not, exactly once
+    for s in 0..SLOTS as u32 {
+        arena.retire(s);
+    }
+    let end = arena.stats();
+    assert_eq!(end.blocks_in_use, 0, "seed {seed:#x}: leaked logical blocks");
+    assert_eq!(end.physical_blocks_in_use, 0, "seed {seed:#x}: leaked physical blocks");
+    shared_seen
 }
 
 #[test]
 fn prop_paged_gather_bit_identical_to_dense() {
     for &bs in &[1usize, 4, 16] {
         for rep in 0..6 {
-            run_case(0x9a6ed + rep * 7919 + bs as u64, bs, 60);
+            run_case(0x9a6ed + rep * 7919 + bs as u64, bs, 60, false);
         }
     }
+}
+
+#[test]
+fn prop_cow_shared_prefixes_bit_identical_and_leak_free() {
+    let mut shared_seen = false;
+    for &bs in &[1usize, 4, 16] {
+        for rep in 0..4 {
+            shared_seen |= run_case(0xc0de5 + rep * 104_729 + bs as u64, bs, 80, true);
+        }
+    }
+    assert!(shared_seen, "churn never exercised physical sharing");
+}
+
+#[test]
+fn cow_divergence_isolates_slots_and_refcounts_free_lazily() {
+    // share → both slots diverge into the shared mid-block tail → retire
+    // donor → sharer intact → retire sharer → every block free
+    let bs = 4;
+    let mut arena = PagedKvArena::new(ArenaCfg {
+        layers: LAYERS,
+        kv_heads: KHS,
+        head_dim: HD,
+        max_seq: MAX_SEQ,
+        slots: 2,
+        block_size: bs,
+        initial_blocks: 1,
+        dtype: KvDtype::F32,
+    });
+    let mut dense = DenseRef::new();
+    let mut rng = Rng::new(0xc0_11ab);
+
+    // donor (slot 0): 6 tokens — 2 blocks, the second half-full
+    for layer in 0..LAYERS {
+        let k = rand_tensor(&mut rng, 6);
+        let v = rand_tensor(&mut rng, 6);
+        arena.append_chunk(0, layer, &k, &v, 0, 6);
+        dense.append_chunk(0, layer, &k, &v, 0, 6);
+    }
+    arena.map_prefix(1, 0, 6);
+    dense.map_from(1, 0, 8); // 2 covering blocks = 8 positions
+    let st = arena.stats();
+    assert_eq!(st.blocks_in_use, 4, "logical: 2 blocks per slot");
+    assert_eq!(st.physical_blocks_in_use, 2, "physical: both resident blocks shared");
+
+    // both slots append at position 6 — inside the shared tail block. The
+    // first writer must copy-on-write; neither may see the other's token.
+    for layer in 0..LAYERS {
+        let k = rand_tensor(&mut rng, 2);
+        let v = rand_tensor(&mut rng, 2);
+        arena.append_step(&[0, 1], layer, &k, &v, &[6, 6]);
+        dense.append_step(&[0, 1], layer, &k, &v, &[6, 6]);
+    }
+    let st = arena.stats();
+    assert_eq!(st.blocks_in_use, 4);
+    assert_eq!(st.physical_blocks_in_use, 3, "divergence must clone exactly one block");
+    for slot in [0u32, 1] {
+        let (pk, pv) = arena.gather(&[slot], 0, 1, 8);
+        let (dk, dv) = dense.gather(&[slot], 0, 1, 8);
+        assert_eq!(pk.as_f32(), &dk[..], "slot {slot} K diverged after CoW");
+        assert_eq!(pv.as_f32(), &dv[..], "slot {slot} V diverged after CoW");
+    }
+
+    // the donor retires; the still-shared head block survives for slot 1
+    arena.retire(0);
+    dense.reset(0);
+    let st = arena.stats();
+    assert_eq!(st.blocks_in_use, 2);
+    assert_eq!(st.physical_blocks_in_use, 2);
+    for layer in 0..LAYERS {
+        let (pk, _) = arena.gather(&[1], layer, 1, 8);
+        let (dk, _) = dense.gather(&[1], layer, 1, 8);
+        assert_eq!(pk.as_f32(), &dk[..], "sharer lost data when the donor retired");
+    }
+
+    arena.retire(1);
+    let st = arena.stats();
+    assert_eq!(st.blocks_in_use, 0);
+    assert_eq!(st.physical_blocks_in_use, 0, "last holder must free shared blocks");
 }
 
 #[test]

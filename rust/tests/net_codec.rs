@@ -1,8 +1,12 @@
 //! `net::codec` property tests: every `WireMsg` variant must round-trip
 //! bit-identically through the frame format under randomized shapes,
-//! dtypes, empty tensors and max-size control vectors — and corrupted or
-//! short-read input must yield a typed decode error (or "need more
-//! bytes"), never a panic. Uses the in-repo PRNG (no proptest offline).
+//! dtypes, empty tensors and max-size control vectors — and corrupted,
+//! truncated or short-read input must yield a typed decode error (or
+//! "need more bytes"), never a panic and never a silent wrong decode.
+//! Corruption coverage spans single-bit flips, multi-byte rewrites,
+//! lying length fields, random truncation points, and corruption inside
+//! a later frame of a batched stream. Uses the in-repo PRNG (no
+//! proptest offline).
 
 use lamina::metrics::KvCacheStats;
 use lamina::net::codec::{self, CodecError};
@@ -29,7 +33,7 @@ fn rand_tensor(rng: &mut Rng) -> HostTensor {
 }
 
 fn rand_msg(rng: &mut Rng) -> WireMsg {
-    match rng.usize(0, 9) {
+    match rng.usize(0, 10) {
         0 => {
             let rows = rng.usize(0, 5);
             WireMsg::StepQ {
@@ -63,9 +67,16 @@ fn rand_msg(rng: &mut Rng) -> WireMsg {
                 internal_waste_tokens: rng.usize(0, 1 << 30),
                 bytes_in_use: rng.usize(0, 1 << 40),
                 total_bytes: rng.usize(0, 1 << 40),
+                physical_blocks_in_use: rng.usize(0, 1 << 30),
+                physical_bytes_in_use: rng.usize(0, 1 << 40),
             },
         },
-        7 => {
+        7 => WireMsg::MapBlocks {
+            slot: rng.next_u64() as u32,
+            src_slot: rng.next_u64() as u32,
+            tokens: rng.usize(0, 1 << 20),
+        },
+        8 => {
             let n = rng.usize(0, 200);
             let text: String = (0..n).map(|_| char::from(b'a' + (rng.usize(0, 26) as u8))).collect();
             WireMsg::WorkerError { msg: text }
@@ -193,6 +204,140 @@ fn specific_corruptions_have_typed_errors() {
     bad_payload[last] ^= 0x01;
     assert!(matches!(
         codec::decode_frame(&bad_payload),
+        Err(CodecError::BadChecksum { .. })
+    ));
+}
+
+#[test]
+fn map_blocks_roundtrips_and_any_body_corruption_is_checksummed() {
+    let msg = WireMsg::MapBlocks { slot: 7, src_slot: 3, tokens: 129 };
+    let mut buf = Vec::new();
+    codec::encode(&msg, &mut buf);
+    // fixed 12-byte payload: exactly 12 bytes larger than an empty frame
+    let mut empty = Vec::new();
+    codec::encode(&WireMsg::Shutdown, &mut empty);
+    assert_eq!(buf.len(), empty.len() + 12);
+    let (got, used) = codec::decode_frame(&buf).unwrap().unwrap();
+    assert_eq!(used, buf.len());
+    assert_eq!(got, msg);
+    // every byte past the length field (checksum + payload) is covered:
+    // flipping any of them must surface as a checksum mismatch, never a
+    // silently different slot/src_slot/tokens mapping
+    for i in 8..buf.len() {
+        let mut bad = buf.clone();
+        bad[i] ^= 0x40;
+        assert!(
+            matches!(codec::decode_frame(&bad), Err(CodecError::BadChecksum { .. })),
+            "flipped byte {i} was not caught"
+        );
+    }
+}
+
+#[test]
+fn prop_multibyte_mutations_never_panic_or_misdecode() {
+    // harsher than single-bit flips: rewrite 1–8 random bytes to random
+    // values (may hit magic, version, tag, length, checksum, or payload)
+    let mut rng = Rng::new(0xf0e2);
+    for case in 0..300 {
+        let msg = rand_msg(&mut rng);
+        let mut buf = Vec::new();
+        codec::encode(&msg, &mut buf);
+        let mut bad = buf.clone();
+        let hits = rng.usize(1, 9);
+        let mut changed = false;
+        for _ in 0..hits {
+            let i = rng.usize(0, bad.len());
+            let v = rng.next_u64() as u8;
+            changed |= bad[i] != v;
+            bad[i] = v;
+        }
+        match codec::decode_frame(&bad) {
+            Ok(Some((got, _))) => {
+                if changed {
+                    assert_ne!(got, msg, "case {case}: mutation went unnoticed")
+                }
+            }
+            Ok(None) | Err(_) => {}
+        }
+    }
+}
+
+#[test]
+fn prop_random_truncations_are_incomplete_never_panic() {
+    // any strict prefix — header-split, length-split, or mid-payload —
+    // means "read more", never an error and never a partial decode
+    let mut rng = Rng::new(0x7a011c);
+    for _ in 0..100 {
+        let msg = rand_msg(&mut rng);
+        let mut buf = Vec::new();
+        codec::encode(&msg, &mut buf);
+        for _ in 0..8 {
+            let cut = rng.usize(0, buf.len());
+            assert_eq!(
+                codec::decode_frame(&buf[..cut]).expect("prefix must not error"),
+                None,
+                "prefix len {cut} of {}",
+                buf.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_lying_length_fields_are_caught() {
+    let mut rng = Rng::new(0x11e5);
+    for case in 0..200 {
+        let msg = rand_msg(&mut rng);
+        let mut buf = Vec::new();
+        codec::encode(&msg, &mut buf);
+        let plen = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]);
+        // understate: the decoder checksums a short payload — mismatch
+        if plen > 0 {
+            let mut lie = buf.clone();
+            let short = rng.usize(0, plen as usize) as u32;
+            lie[4..8].copy_from_slice(&short.to_le_bytes());
+            match codec::decode_frame(&lie) {
+                Ok(Some((got, _))) => {
+                    assert_ne!(got, msg, "case {case}: understated length decoded as original")
+                }
+                Ok(None) | Err(_) => {}
+            }
+        }
+        // overstate + pad garbage: the padded tail joins the checksummed
+        // payload, so the original frame must not be reconstructed
+        let mut lie = buf.clone();
+        let pad = rng.usize(1, 64);
+        lie[4..8].copy_from_slice(&(plen + pad as u32).to_le_bytes());
+        for _ in 0..pad {
+            let b = rng.next_u64() as u8;
+            lie.push(b);
+        }
+        match codec::decode_frame(&lie) {
+            Ok(Some((got, _))) => {
+                assert_ne!(got, msg, "case {case}: overstated length decoded as original")
+            }
+            Ok(None) | Err(_) => {}
+        }
+    }
+}
+
+#[test]
+fn corruption_in_second_frame_does_not_poison_the_first() {
+    // batched writes put many frames in one buffer; a corrupt later frame
+    // must not prevent decoding the intact frames before it
+    let first = WireMsg::Retire { slot: 4 };
+    let second = WireMsg::MapBlocks { slot: 9, src_slot: 4, tokens: 64 };
+    let mut buf = Vec::new();
+    codec::encode(&first, &mut buf);
+    let split = buf.len();
+    codec::encode(&second, &mut buf);
+    let last = buf.len() - 1;
+    buf[last] ^= 0x10; // corrupt the second frame's tail
+    let (got, used) = codec::decode_frame(&buf).unwrap().unwrap();
+    assert_eq!(got, first);
+    assert_eq!(used, split);
+    assert!(matches!(
+        codec::decode_frame(&buf[used..]),
         Err(CodecError::BadChecksum { .. })
     ));
 }

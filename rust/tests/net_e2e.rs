@@ -56,6 +56,8 @@ fn scripted_worker<T: Transport>(link: T) {
                     internal_waste_tokens: 1,
                     bytes_in_use: 3 * 4096,
                     total_bytes: 8 * 4096,
+                    physical_blocks_in_use: 3,
+                    physical_bytes_in_use: 3 * 4096,
                 };
                 link.send(WireMsg::KvStats { stats }).expect("worker send");
             }

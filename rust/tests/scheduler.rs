@@ -15,6 +15,11 @@
 //! * (c) slot/reservation conservation across submit/cancel/retire churn:
 //!   after a drain, every slot and every reserved block/byte is back in
 //!   the pools (the leader-side KvStats half lives in e2e_pipeline).
+//! * (d) preemption (ISSUE 6): a preempted-and-resumed request produces
+//!   the exact token stream of an unpreempted run (replay re-prefill +
+//!   re-predict of the dropped token), and random preemption churn —
+//!   stacked on cancel churn, with block-granular overcommit on —
+//!   conserves slots and reservations.
 
 use lamina::scheduler::{
     AdmissionKind, FinishReason, GroupMode, KvBudget, KvOccupancy, RequestId, RequestState,
@@ -32,6 +37,7 @@ fn cfg(slots: usize, group: usize, grouping: GroupMode, budget: KvBudget) -> Sch
         kv_block_size: 4,
         block_bytes: 64,
         budget,
+        overcommit: false,
     }
 }
 
@@ -290,6 +296,123 @@ fn conservation_across_submit_cancel_retire_churn() {
         for id in &completed {
             assert!(seen.contains(id), "completed request {id} never retired its KV");
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (d) preemption: output identity + conservation under churn
+// ---------------------------------------------------------------------------
+
+#[test]
+fn preempted_outputs_match_unpreempted_run() {
+    // `(at, victim)`: before iteration `at`, preempt request `victim`.
+    // The mock model's token depends only on (id, context length), exactly
+    // like the deterministic pipeline, so replay must reconstruct the same
+    // stream — including the emitted-but-unfed token dropped at preemption.
+    let run = |script: &[(usize, usize)]| {
+        let mut s = Scheduler::new(
+            SchedCfg { overcommit: true, ..cfg(4, 2, GroupMode::Packed, KvBudget::Blocks(16)) },
+            AdmissionKind::Fifo.build(),
+        );
+        let spec = [(5usize, 3usize), (2, 6), (12, 2), (7, 4)];
+        let mut ids = Vec::new();
+        for (i, &(plen, gen)) in spec.iter().enumerate() {
+            let prompt: Vec<i32> = (0..plen).map(|t| (i * 100 + t) as i32).collect();
+            ids.push(s.submit(prompt, gen).unwrap());
+        }
+        let mut iter = 0;
+        let mut preempted = 0u32;
+        while !s.is_idle() {
+            for &(at, victim) in script {
+                if iter == at && s.preempt(ids[victim]) {
+                    preempted += 1;
+                }
+            }
+            mock_step(&mut s, 4);
+            iter += 1;
+            assert!(iter < 100_000, "scheduler failed to drain (livelock)");
+        }
+        if !script.is_empty() {
+            assert!(preempted > 0, "the script must actually preempt something");
+        }
+        ids.iter()
+            .map(|&id| {
+                let st = s.poll(id).unwrap();
+                assert_eq!(st.state, RequestState::Finished(FinishReason::Completed));
+                st.tokens
+            })
+            .collect::<Vec<_>>()
+    };
+    let base = run(&[]);
+    // mid-prefill victim, mid-decode victim, two victims, double-preempt
+    assert_eq!(run(&[(1, 0)]), base);
+    assert_eq!(run(&[(2, 1), (5, 0)]), base);
+    assert_eq!(run(&[(3, 2), (6, 2)]), base);
+}
+
+#[test]
+fn conservation_with_preemption_and_overcommit_churn() {
+    // The cancel-churn conservation property, hardened two ways: random
+    // preempts land in any state, and overcommit reserves prompt-only then
+    // grows per block — reservations must still drain to exactly zero.
+    for seed in [11u64, 12, 13] {
+        let total_slots = 4;
+        let mut s = Scheduler::new(
+            SchedCfg {
+                overcommit: true,
+                ..cfg(total_slots, 2, GroupMode::Packed, KvBudget::Blocks(32))
+            },
+            AdmissionKind::Fifo.build(),
+        );
+        let mut rng = Rng::new(seed);
+        let mut submitted: Vec<RequestId> = Vec::new();
+        let mut retired: Vec<(RequestId, u32)> = Vec::new();
+        for _ in 0..600 {
+            if rng.chance(0.5) {
+                let plen = rng.usize(1, 10);
+                let gen = rng.usize(1, 6);
+                submitted.push(s.submit(vec![1; plen], gen).unwrap());
+            }
+            if rng.chance(0.15) && !submitted.is_empty() {
+                let victim = submitted[rng.usize(0, submitted.len())];
+                s.cancel(victim);
+            }
+            if rng.chance(0.2) && !submitted.is_empty() {
+                let victim = submitted[rng.usize(0, submitted.len())];
+                s.preempt(victim); // false on non-live victims; must be inert
+            }
+            assert!(s.live() + s.free_slot_count() == total_slots);
+            retired.extend(mock_step(&mut s, 4));
+        }
+        retired.extend(drain(&mut s, 4));
+
+        assert_eq!(s.free_slot_count(), total_slots, "leaked slots (seed {seed})");
+        assert_eq!(s.reserved_blocks(), 0, "leaked block reservations");
+        assert_eq!(s.reserved_bytes(), 0, "leaked byte reservations");
+        assert_eq!(s.live(), 0);
+        assert_eq!(s.waiting_len(), 0);
+        for id in &submitted {
+            assert!(s.poll(*id).unwrap().state.is_finished(), "request {id} not finished");
+        }
+        // With preemption a request may retire several times (each eviction
+        // releases its blocks); every retire must still name an admitted
+        // request and an in-range slot, and every completed request must
+        // have released its final KV.
+        let mut seen = std::collections::BTreeSet::new();
+        for (id, slot) in &retired {
+            assert!((*slot as usize) < total_slots, "retired an out-of-range slot");
+            assert!(
+                s.poll(*id).unwrap().queue_s.is_some(),
+                "request {id} retired without ever being admitted"
+            );
+            seen.insert(*id);
+        }
+        for id in submitted.iter().filter(|&&id| {
+            s.poll(id).unwrap().state == RequestState::Finished(FinishReason::Completed)
+        }) {
+            assert!(seen.contains(id), "completed request {id} never retired its KV");
+        }
+        assert!(s.preempted_total() > 0, "churn must land some preemptions (seed {seed})");
     }
 }
 

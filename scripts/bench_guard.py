@@ -64,6 +64,7 @@ RENAMED_ROWS = (
 BYTE_FIELDS = (
     ("host_copy_bytes_per_iter", "copied bytes"),
     ("kv_read_bytes_per_iter", "KV bytes read"),
+    ("kv_physical_peak_bytes", "peak physical KV bytes"),
 )
 
 
