@@ -13,6 +13,7 @@
 use std::path::Path;
 
 use crate::kvcache::PagedKvArena;
+use crate::obs;
 use crate::runtime::engine::Engine;
 use crate::runtime::host::HostTensor;
 use crate::runtime::manifest::ModelCfg;
@@ -95,6 +96,7 @@ impl AttnBackend for EngineBackend {
         lens: &[i32],
         seq_bucket: usize,
     ) -> Result<HostTensor, String> {
+        let _sp = obs::span("kernel", "engine_attention").arg("layer", layer as i64);
         let bucket = q.shape()[0];
         let (kc, vc) = arena.gather(slots, layer, bucket, seq_bucket);
         let lens_t = HostTensor::i32(vec![bucket], lens.to_vec());
@@ -114,6 +116,7 @@ impl AttnBackend for EngineBackend {
         lens: &[i32],
         seq_bucket: usize,
     ) -> Result<PartialState, String> {
+        let _sp = obs::span("kernel", "engine_attn_prev").arg("layer", layer as i64);
         let bucket = q.shape()[0];
         let (kc, vc) = arena.gather(slots, layer, bucket, seq_bucket);
         let lens_t = HostTensor::i32(vec![bucket], lens.to_vec());
@@ -135,6 +138,7 @@ impl AttnBackend for EngineBackend {
         v: &HostTensor,
         prev: &PartialState,
     ) -> Result<HostTensor, String> {
+        let _sp = obs::span("kernel", "engine_attn_combine");
         let bucket = q.shape()[0];
         Ok(self
             .engine
@@ -159,6 +163,7 @@ impl AttnBackend for EngineBackend {
         cached: i32,
         seq_bucket: usize,
     ) -> Result<HostTensor, String> {
+        let _sp = obs::span("kernel", "engine_prefill").arg("layer", layer as i64);
         let t = q.shape()[0];
         // gather this slot's cached prefix; drop the leading batch dim with
         // a zero-copy reshape to the kernel's [KH_s, S, hd]

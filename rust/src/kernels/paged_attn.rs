@@ -37,6 +37,7 @@
 use crate::kvcache::arena::{KvBlockRef, PAD_SLOT};
 use crate::kvcache::quant::f16_bits_widen;
 use crate::kvcache::PagedKvArena;
+use crate::obs;
 use crate::runtime::host::{kv_reads, HostTensor};
 use crate::util::threadpool::{Par, ScopedPool};
 
@@ -732,6 +733,7 @@ impl AttnBackend for NativeBackend {
         seq_bucket: usize,
     ) -> Result<HostTensor, String> {
         check_shapes(arena, q, layer, slots, Some(lens))?;
+        let _sp = obs::span("kernel", "paged_attn").arg("layer", layer as i64);
         Ok(paged_attn(arena, slots, layer, q, lens, seq_bucket, self.par()))
     }
 
@@ -745,6 +747,7 @@ impl AttnBackend for NativeBackend {
         seq_bucket: usize,
     ) -> Result<PartialState, String> {
         check_shapes(arena, q, layer, slots, Some(lens))?;
+        let _sp = obs::span("kernel", "paged_attn_prev").arg("layer", layer as i64);
         Ok(paged_attn_prev(arena, slots, layer, q, lens, seq_bucket, self.par()))
     }
 
@@ -768,6 +771,7 @@ impl AttnBackend for NativeBackend {
                 prev.s.shape()
             ));
         }
+        let _sp = obs::span("kernel", "combine_new_token");
         Ok(combine_new_token(q, k, v, prev))
     }
 
@@ -784,6 +788,7 @@ impl AttnBackend for NativeBackend {
     ) -> Result<HostTensor, String> {
         check_shapes(arena, q, layer, std::slice::from_ref(&slot), None)?;
         check_kv(q, k, v, Some(arena.kv_heads()))?;
+        let _sp = obs::span("kernel", "paged_prefill").arg("layer", layer as i64);
         Ok(paged_prefill(
             arena,
             slot,

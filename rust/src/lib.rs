@@ -25,6 +25,7 @@ pub mod kvcache;
 pub mod metrics;
 pub mod net;
 pub mod netsim;
+pub mod obs;
 pub mod opgraph;
 pub mod runtime;
 pub mod scheduler;

@@ -13,6 +13,7 @@
 use lamina::figures;
 use lamina::kernels::AttnBackendKind;
 use lamina::net::TransportKind;
+use lamina::obs;
 use lamina::scheduler::AdmissionKind;
 use lamina::netsim::stack::stack_by_name;
 use lamina::trace::{synthesize, trace_by_name, Request};
@@ -40,6 +41,11 @@ real pipeline (tiny model, PJRT end-to-end):
           [--admission fifo|sjf] [--kv-budget BYTES]
           [--kv-budget-blocks N] [--kv-dtype f32|f16|int8]
           [--prefix-cache on|off] [--overcommit] [--wave-driver]
+          [--step-trace] [--trace-out FILE] [--metrics-dump]
+  trace-smoke  artifact-free scripted serve session (real native-backend
+          attention worker) emitting a full leader/wire/worker/kernel span
+          tree: --steps N, --trace-out FILE, --kill-worker exercises the
+          mid-session worker-death drop-safety path
 
 flags:
   --requests N     trace subsample size for simulations (default 1000)
@@ -76,6 +82,18 @@ flags:
                    meaningful with --kv-budget[-blocks]
   --wave-driver    serve with the legacy wave-partitioned grouping
                    (comparison only; the step-driven scheduler is default)
+  --step-trace     emit one structured event per decode step (request ids,
+                   slots, context lens, buckets) through the obs tracer;
+                   without --trace-out the events stream to stderr as JSONL
+                   at session end (replaces the old LAMINA_STEP_TRACE env)
+  --trace-out F    record the session's span timeline and write it to F:
+                   Chrome trace_event JSON (load in Perfetto or
+                   chrome://tracing), or a JSONL event stream when F ends
+                   in .jsonl
+  --metrics-dump   print a Prometheus-style snapshot of the obs metrics
+                   registry after the serve report
+  --kill-worker    trace-smoke only: kill the attention worker mid-session
+                   (drop-safety exercise; the trace must stay well-formed)
 
 serve drives the request-lifecycle engine (submit → step → drain):
 requests join and leave the running batch at iteration granularity, and
@@ -87,7 +105,8 @@ const SPEC: &[&str] = &[
     "waves!", "stack!", "time-scale!", "prompt!", "steps!", "trace!",
     "transport!", "attn-backend!", "admission!", "kv-budget!",
     "kv-budget-blocks!", "kv-dtype!", "prefix-cache!", "overcommit",
-    "wave-driver", "help",
+    "wave-driver", "step-trace", "trace-out!", "metrics-dump",
+    "kill-worker", "help",
 ];
 
 fn main() {
@@ -150,6 +169,12 @@ fn run(argv: &[String]) -> Result<(), String> {
             let opts = pipeline_opts(&args, &artifacts)?;
             let waves = args.usize_or("waves", 2).map_err(|e| e.to_string())?;
             let wave_driver = args.has("wave-driver");
+            let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+            let tracing = trace_out.is_some() || args.has("step-trace");
+            if tracing {
+                // before pipeline start, so worker spin-up lands on the tape
+                obs::trace::start();
+            }
             let mut pipe = DisaggPipeline::start(opts).map_err(|e| format!("{e:#}"))?;
             let reqs = tiny_trace(&args, n_requests, seed, pipe.config().max_seq - 1)?;
             println!(
@@ -176,10 +201,25 @@ fn run(argv: &[String]) -> Result<(), String> {
                 fmt_duration(m.mean_ttft_s()),
                 m.mean_request_tokens()
             );
+            if m.requests_completed > 0 {
+                println!(
+                    "queue: p50 {}  p95 {}  p99 {}",
+                    fmt_duration(m.p50_queue_s()),
+                    fmt_duration(m.p95_queue_s()),
+                    fmt_duration(m.p99_queue_s())
+                );
+                println!(
+                    "TTFT:  p50 {}  p95 {}  p99 {}",
+                    fmt_duration(m.p50_ttft_s()),
+                    fmt_duration(m.p95_ttft_s()),
+                    fmt_duration(m.p99_ttft_s())
+                );
+            }
             println!(
-                "TBT: mean {}  p50 {}  p99 {}",
+                "TBT: mean {}  p50 {}  p95 {}  p99 {}",
                 fmt_duration(m.mean_tbt()),
                 fmt_duration(m.p50_tbt()),
+                fmt_duration(m.p95_tbt()),
                 fmt_duration(m.p99_tbt())
             );
             let bd = m.mean_breakdown();
@@ -264,6 +304,47 @@ fn run(argv: &[String]) -> Result<(), String> {
                 );
             }
             pipe.shutdown();
+            if tracing {
+                let events = obs::trace::stop();
+                let dropped = obs::trace::dropped();
+                if let Some(path) = &trace_out {
+                    write_trace(path, &events)?;
+                    println!(
+                        "trace: {} events -> {}{}",
+                        events.len(),
+                        path.display(),
+                        if dropped > 0 { format!("  ({dropped} dropped)") } else { String::new() }
+                    );
+                } else {
+                    // --step-trace alone: stream the per-step events
+                    let steps: Vec<_> =
+                        events.iter().filter(|e| e.name == "step-trace").cloned().collect();
+                    eprint!("{}", obs::export::jsonl(&steps));
+                }
+            }
+            if args.has("metrics-dump") {
+                print!("{}", obs::export::prometheus(&obs::registry().snapshot()));
+            }
+            Ok(())
+        }
+        "trace-smoke" => {
+            let steps = args.usize_or("steps", 8).map_err(|e| e.to_string())?;
+            let kill = args.has("kill-worker");
+            let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+            obs::trace::start();
+            let rep = lamina::workers::run_trace_smoke(steps, kill)?;
+            let events = obs::trace::stop();
+            println!(
+                "trace-smoke: {} decode steps  {} replies  worker_died={}  {} events",
+                rep.decode_steps,
+                rep.replies,
+                rep.worker_died,
+                events.len()
+            );
+            if let Some(path) = &trace_out {
+                write_trace(path, &events)?;
+                println!("trace written to {}", path.display());
+            }
             Ok(())
         }
         id => {
@@ -314,7 +395,19 @@ fn pipeline_opts(args: &Args, artifacts: &str) -> Result<PipelineOpts, String> {
         };
     }
     opts.overcommit = args.has("overcommit");
+    opts.step_trace = args.has("step-trace");
     Ok(opts)
+}
+
+/// Write a captured trace to `path` in the format its extension picks:
+/// `.jsonl` → one event per line, anything else → Chrome `trace_event`.
+fn write_trace(path: &std::path::Path, events: &[obs::TraceEvent]) -> Result<(), String> {
+    let r = if path.extension().is_some_and(|e| e == "jsonl") {
+        obs::export::write_jsonl(path, events)
+    } else {
+        obs::export::write_chrome_trace(path, events)
+    };
+    r.map_err(|e| format!("write {}: {e}", path.display()))
 }
 
 /// A trace scaled down to the tiny model's context window: real trace shape,

@@ -1,15 +1,59 @@
-//! Serving metrics: token throughput, time-between-tokens (TBT), batch-size
-//! tracking, the per-component latency breakdown of Fig. 12, paged
-//! KV-cache accounting (blocks in use, capacity, internal waste) reported
-//! by the attention workers' arenas, per-message-class wire accounting
-//! (logical `wire_bytes()` model vs measured serialized frame bytes), and —
-//! since the request-lifecycle engine — per-request serving quality:
-//! queueing delay (submit → admission), TTFT (submit → first generated
-//! token), tokens per request, submit-time rejections, and the session's
-//! KV admission budget reported in **both** units (blocks and bytes).
+//! Serving metrics, published through the **obs registry**.
+//!
+//! [`ServeMetrics`] is the per-session aggregator — token throughput,
+//! time-between-tokens (TBT), batch-size tracking, the per-component
+//! latency breakdown of Fig. 12, paged KV-cache accounting, wire
+//! accounting (logical `wire_bytes()` model vs measured serialized frame
+//! bytes), and per-request serving quality: queueing delay (submit →
+//! admission), TTFT (submit → first generated token), inter-token latency
+//! — each now with p50/p95/p99 (exact [`Percentiles`], not just means).
+//!
+//! The [`crate::obs::registry`] is the **single source of truth** for
+//! cross-cutting counters and gauges: every `record_*` call here also
+//! streams into registry metrics (`serve.tbt_ns`, `serve.ttft_ns`,
+//! `serve.queue_ns` histograms; `serve.tokens`, `serve.requests`,
+//! `serve.rejected`, `serve.preemptions` counters; `kv.*` occupancy
+//! gauges), alongside the re-homed `runtime::host` byte counters
+//! (`host.copied_bytes`, `kv.read_bytes`). A registry snapshot therefore
+//! reflects the live session at any instant — `--metrics-dump` and ROADMAP
+//! item 5's `/metrics` endpoint read it without touching this struct —
+//! while `ServeMetrics` itself keeps the take-and-reset session-report
+//! semantics the leader's `drain()` relies on. [`ServeMetrics::publish_registry`]
+//! refreshes the end-of-session gauge view at drain time.
+
+use std::sync::OnceLock;
 
 use crate::net::WireStats;
+use crate::obs::{self, Counter, Gauge, Histogram};
 use crate::util::stats::{Percentiles, Welford};
+
+/// Process-wide registry handles, resolved once and cached (the hot-path
+/// cost of a `record_*` publication is the atomic op, not a map lookup).
+mod reg {
+    use super::*;
+
+    macro_rules! cell {
+        ($fn_name:ident, $ty:ident, $method:ident, $name:expr) => {
+            pub(super) fn $fn_name() -> &'static $ty {
+                static C: OnceLock<$ty> = OnceLock::new();
+                C.get_or_init(|| obs::registry().$method($name))
+            }
+        };
+    }
+
+    cell!(tbt_ns, Histogram, histogram, "serve.tbt_ns");
+    cell!(ttft_ns, Histogram, histogram, "serve.ttft_ns");
+    cell!(queue_ns, Histogram, histogram, "serve.queue_ns");
+    cell!(tokens, Counter, counter, "serve.tokens");
+    cell!(requests, Counter, counter, "serve.requests");
+    cell!(rejected, Counter, counter, "serve.rejected");
+    cell!(preemptions, Counter, counter, "serve.preemptions");
+    cell!(kv_blocks, Gauge, gauge, "kv.blocks_in_use");
+    cell!(kv_bytes, Gauge, gauge, "kv.bytes_in_use");
+    cell!(kv_physical_bytes, Gauge, gauge, "kv.physical_bytes_in_use");
+    cell!(kv_peak_blocks, Gauge, gauge, "kv.peak_blocks");
+    cell!(kv_peak_bytes, Gauge, gauge, "kv.peak_bytes");
+}
 
 /// Snapshot of paged KV-cache occupancy, summed across attention workers.
 ///
@@ -125,8 +169,8 @@ pub struct ServeMetrics {
     prefix_hit_tokens: u64,
     preemptions: u64,
     // per-request lifecycle aggregates (request-lifecycle engine)
-    queue_s: Welford,
-    ttft_s: Welford,
+    queue_s: Percentiles,
+    ttft_s: Percentiles,
     request_tokens: Welford,
     rejected_submissions: u64,
     // the session's KV admission budget, per worker, in both units
@@ -143,6 +187,8 @@ impl ServeMetrics {
     pub fn record_step(&mut self, batch: usize, bd: StepBreakdown) {
         self.tokens_generated += batch as u64;
         self.wall_s += bd.total_s;
+        reg::tokens().add(batch as u64);
+        reg::tbt_ns().record_secs(bd.total_s);
         self.tbt.add(bd.total_s);
         self.batch.add(batch as f64);
         self.model_s.add(bd.model_s);
@@ -153,6 +199,7 @@ impl ServeMetrics {
 
     pub fn record_completion(&mut self, n: u64) {
         self.requests_completed += n;
+        reg::requests().add(n);
     }
 
     /// Record a KV-arena snapshot (keeps the latest, tracks peak usage in
@@ -161,6 +208,9 @@ impl ServeMetrics {
         self.kv_peak_blocks = self.kv_peak_blocks.max(s.blocks_in_use);
         self.kv_peak_bytes = self.kv_peak_bytes.max(s.bytes_in_use);
         self.kv_peak_physical_bytes = self.kv_peak_physical_bytes.max(s.physical_bytes_in_use);
+        reg::kv_blocks().set(s.blocks_in_use as i64);
+        reg::kv_bytes().set(s.bytes_in_use as i64);
+        reg::kv_physical_bytes().set(s.physical_bytes_in_use as i64);
         self.kv = s;
     }
 
@@ -227,6 +277,7 @@ impl ServeMetrics {
     /// Count requests preempted back to the queue by KV pressure.
     pub fn record_preemptions(&mut self, n: u64) {
         self.preemptions += n;
+        reg::preemptions().add(n);
     }
 
     /// Requests preempted by overcommit pressure relief.
@@ -239,20 +290,50 @@ impl ServeMetrics {
     /// and its output token count.
     pub fn record_request(&mut self, queue_s: f64, ttft_s: Option<f64>, tokens: u64) {
         self.queue_s.add(queue_s);
+        reg::queue_ns().record_secs(queue_s);
         if let Some(t) = ttft_s {
             self.ttft_s.add(t);
+            reg::ttft_ns().record_secs(t);
         }
         self.request_tokens.add(tokens as f64);
     }
 
     /// Mean submit→admission delay across completed requests.
     pub fn mean_queue_s(&self) -> f64 {
-        self.queue_s.mean()
+        if self.queue_s.is_empty() { 0.0 } else { self.queue_s.mean() }
     }
 
     /// Mean submit→first-token latency across completed requests.
     pub fn mean_ttft_s(&self) -> f64 {
-        self.ttft_s.mean()
+        if self.ttft_s.is_empty() { 0.0 } else { self.ttft_s.mean() }
+    }
+
+    /// Queueing-delay percentiles across completed requests (NaN when no
+    /// request completed — callers guard before printing).
+    pub fn p50_queue_s(&mut self) -> f64 {
+        self.queue_s.p50()
+    }
+
+    pub fn p95_queue_s(&mut self) -> f64 {
+        self.queue_s.p95()
+    }
+
+    pub fn p99_queue_s(&mut self) -> f64 {
+        self.queue_s.p99()
+    }
+
+    /// TTFT percentiles across completed requests that generated a token
+    /// (NaN when none did).
+    pub fn p50_ttft_s(&mut self) -> f64 {
+        self.ttft_s.p50()
+    }
+
+    pub fn p95_ttft_s(&mut self) -> f64 {
+        self.ttft_s.p95()
+    }
+
+    pub fn p99_ttft_s(&mut self) -> f64 {
+        self.ttft_s.p99()
     }
 
     /// Mean output tokens per completed request.
@@ -264,6 +345,7 @@ impl ServeMetrics {
     /// continues — rejection is per request, not per session).
     pub fn record_rejection(&mut self) {
         self.rejected_submissions += 1;
+        reg::rejected().inc();
     }
 
     /// Requests rejected at submit time.
@@ -310,8 +392,24 @@ impl ServeMetrics {
         self.tbt.p99()
     }
 
+    pub fn p95_tbt(&mut self) -> f64 {
+        self.tbt.p95()
+    }
+
     pub fn p50_tbt(&mut self) -> f64 {
         self.tbt.p50()
+    }
+
+    /// Refresh the registry's end-of-session gauge view (KV occupancy and
+    /// peaks). Counters and histograms stream at `record_*` time; gauges
+    /// for peak values only settle once the session drains, so the leader
+    /// calls this from `drain()` before handing the metrics out.
+    pub fn publish_registry(&self) {
+        reg::kv_blocks().set(self.kv.blocks_in_use as i64);
+        reg::kv_bytes().set(self.kv.bytes_in_use as i64);
+        reg::kv_physical_bytes().set(self.kv.physical_bytes_in_use as i64);
+        reg::kv_peak_blocks().set(self.kv_peak_blocks as i64);
+        reg::kv_peak_bytes().set(self.kv_peak_bytes as i64);
     }
 
     pub fn steps(&self) -> u64 {
@@ -411,6 +509,20 @@ mod tests {
         m.set_kv_budget(Some(4), Some(4 * 4096));
         assert_eq!(m.kv_budget_blocks(), Some(4));
         assert_eq!(m.kv_budget_bytes(), Some(16384));
+    }
+
+    #[test]
+    fn request_lifecycle_percentiles() {
+        let mut m = ServeMetrics::new();
+        for i in 1..=100 {
+            m.record_request(i as f64 * 1e-3, Some(i as f64 * 2e-3), 4);
+        }
+        assert!((m.p50_queue_s() - 0.0505).abs() < 1e-4);
+        assert!(m.p99_queue_s() > 0.098);
+        assert!((m.p95_ttft_s() - 0.1901).abs() < 1e-4);
+        // no steps recorded → TBT percentiles are NaN, means stay 0-guarded
+        assert!(m.p95_tbt().is_nan());
+        assert!((m.mean_queue_s() - 0.0505).abs() < 1e-4);
     }
 
     #[test]

@@ -28,6 +28,7 @@ use std::time::{Duration, Instant};
 
 use super::stats::{MsgClass, WireStats};
 use super::{codec, Transport, TransportKind};
+use crate::obs;
 use crate::workers::messages::WireMsg;
 
 const READ_CHUNK: usize = 64 * 1024;
@@ -88,6 +89,8 @@ impl TcpTransport {
     }
 
     fn recv_inner(&self, timeout: Option<Duration>) -> Result<Option<WireMsg>, String> {
+        // spans socket wait + deframe; on the calling thread's track
+        let _sp = obs::span("wire", "tcp_recv");
         let mut r = self.reader.lock().map_err(|_| "tcp reader poisoned".to_string())?;
         let deadline = timeout.map(|t| Instant::now() + t);
         let mut chunk = [0u8; READ_CHUNK];
@@ -161,6 +164,7 @@ impl Transport for TcpTransport {
     fn send(&self, msg: WireMsg) -> Result<(), String> {
         let class = MsgClass::of(&msg);
         let logical = msg.wire_bytes();
+        let _sp = obs::span("wire", "tcp_send").arg("bytes", logical as i64);
         let mut w = self.writer.lock().map_err(|_| "tcp writer poisoned".to_string())?;
         w.scratch.clear();
         let frame = codec::encode(&msg, &mut w.scratch);

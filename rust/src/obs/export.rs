@@ -1,0 +1,170 @@
+//! Exporters: Chrome `trace_event` JSON, JSONL event stream, Prometheus
+//! text — all built on `util::json` (no serde in the offline toolchain).
+//!
+//! * [`chrome_trace`] — the `{"traceEvents": [...]}` document Perfetto and
+//!   `chrome://tracing` load: complete events (`ph:"X"`, `ts`/`dur` in
+//!   microseconds), thread-scoped instants (`ph:"i"`, `"s":"t"`), and
+//!   `thread_name` metadata naming track 0 `leader` and track *i*+1
+//!   `attn-worker-i`. Everything is `pid` 1; `tid` is the obs track.
+//! * [`jsonl`] — one compact JSON object per line per event, in capture
+//!   order; the `--step-trace` output format, greppable and streamable.
+//! * [`prometheus`] — `# TYPE`-annotated exposition text of a registry
+//!   snapshot: counters, gauges, and histograms as cumulative `_bucket`
+//!   series (only non-empty buckets are emitted; `le` is the bucket's
+//!   upper bound, so quantile error stays within the histogram's 12.5%
+//!   contract) plus `_sum`/`_count`. ROADMAP item 5's `/metrics` endpoint
+//!   serves this string verbatim.
+//!
+//! File writers are atomic: content is assembled in memory, written to a
+//! `.tmp` sibling, fsynced and renamed into place — a crash mid-export
+//! leaves the previous file intact, never a torn one.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::registry::{bucket_bounds, RegistrySnapshot};
+use super::trace::{ArgVal, TraceEvent};
+
+fn args_json(args: &[(&'static str, ArgVal)]) -> Json {
+    Json::Obj(
+        args.iter()
+            .map(|(k, v)| {
+                (
+                    k.to_string(),
+                    match v {
+                        ArgVal::I(i) => Json::num(*i as f64),
+                        ArgVal::S(s) => Json::str(s.clone()),
+                    },
+                )
+            })
+            .collect(),
+    )
+}
+
+fn event_json(e: &TraceEvent, chrome: bool) -> Json {
+    let mut pairs = vec![
+        ("name", Json::str(e.name.as_ref())),
+        ("cat", Json::str(e.cat)),
+        ("ph", Json::str(e.ph.to_string())),
+        ("ts", Json::num(e.ts_us)),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(e.track as f64)),
+    ];
+    if e.ph == 'X' {
+        pairs.push(("dur", Json::num(e.dur_us)));
+    }
+    if chrome && e.ph == 'i' {
+        pairs.push(("s", Json::str("t"))); // thread-scoped instant
+    }
+    if !e.args.is_empty() {
+        pairs.push(("args", args_json(&e.args)));
+    }
+    Json::obj(pairs)
+}
+
+/// Human-readable name for an obs track (leader / attn-worker-N).
+pub fn track_name(track: u64) -> String {
+    if track == 0 {
+        "leader".to_string()
+    } else {
+        format!("attn-worker-{}", track - 1)
+    }
+}
+
+/// Render events as a Chrome `trace_event` JSON document.
+pub fn chrome_trace(events: &[TraceEvent]) -> String {
+    let mut tracks: Vec<u64> = events.iter().map(|e| e.track).collect();
+    tracks.sort_unstable();
+    tracks.dedup();
+    let mut evs: Vec<Json> = Vec::with_capacity(events.len() + tracks.len());
+    for &t in &tracks {
+        evs.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("ts", Json::num(0.0)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(t as f64)),
+            ("args", Json::obj(vec![("name", Json::str(track_name(t)))])),
+        ]));
+    }
+    for e in events {
+        evs.push(event_json(e, true));
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(evs))]).dump()
+}
+
+/// Render events as one compact JSON object per line.
+pub fn jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&event_json(e, false).dump());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write `data` via tmp-file + rename so a crash never leaves a torn file.
+fn write_atomic(path: &Path, data: &str) -> std::io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(data.as_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+/// Write a Perfetto-loadable trace file (atomically).
+pub fn write_chrome_trace(path: &Path, events: &[TraceEvent]) -> std::io::Result<()> {
+    write_atomic(path, &chrome_trace(events))
+}
+
+/// Write a JSONL event stream (atomically).
+pub fn write_jsonl(path: &Path, events: &[TraceEvent]) -> std::io::Result<()> {
+    write_atomic(path, &jsonl(events))
+}
+
+/// `lamina_`-prefixed Prometheus metric name (non-alphanumerics → `_`).
+fn sanitize(name: &str) -> String {
+    let mut s = String::with_capacity(name.len() + 7);
+    s.push_str("lamina_");
+    for c in name.chars() {
+        s.push(if c.is_ascii_alphanumeric() { c } else { '_' });
+    }
+    s
+}
+
+/// Render a registry snapshot in Prometheus exposition format.
+pub fn prometheus(snap: &RegistrySnapshot) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        let n = sanitize(name);
+        let _ = writeln!(out, "# TYPE {n} counter");
+        let _ = writeln!(out, "{n} {v}");
+    }
+    for (name, v) in &snap.gauges {
+        let n = sanitize(name);
+        let _ = writeln!(out, "# TYPE {n} gauge");
+        let _ = writeln!(out, "{n} {v}");
+    }
+    for (name, h) in &snap.histograms {
+        let n = sanitize(name);
+        let _ = writeln!(out, "# TYPE {n} histogram");
+        let mut cum = 0u64;
+        for (i, &c) in h.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            let (_, hi) = bucket_bounds(i);
+            let _ = writeln!(out, "{n}_bucket{{le=\"{hi}\"}} {cum}");
+        }
+        let _ = writeln!(out, "{n}_bucket{{le=\"+Inf\"}} {}", h.count);
+        let _ = writeln!(out, "{n}_sum {}", h.sum);
+        let _ = writeln!(out, "{n}_count {}", h.count);
+    }
+    out
+}

@@ -1,0 +1,65 @@
+//! Unified observability: metrics registry, span tracing, exporters.
+//!
+//! The paper's whole argument is about *where time and bytes go* — attention
+//! on memory-optimized devices, everything else on compute-optimized ones,
+//! joined by a wire that must stay cheap. This module is how the repo proves
+//! that claim on every run instead of arguing from end-of-run aggregates:
+//!
+//! * [`registry`] — a global, thread-safe table of named **counters**,
+//!   **gauges** and log-bucketed **histograms**. Handles are `Arc`-backed
+//!   atomics: callers resolve a name once (typically into a `OnceLock`) and
+//!   the hot path is a single relaxed `fetch_add` — no locks, no formatting.
+//!   The process-wide byte meters (`runtime::host::copies` / `kv_reads`) and
+//!   the `ServeMetrics` per-session aggregates all publish here, making the
+//!   registry the single source of truth a future `/metrics` endpoint
+//!   (ROADMAP item 5) serves verbatim.
+//! * [`trace`] — scoped-timer **span tracing** over the decode iteration:
+//!   admit → prefill-chunk / decode dispatch → per-worker wire send/recv →
+//!   kernel compute → combine → sample → retire, tagged with request id,
+//!   slot, worker shard and layer. Disabled (the default) a span is one
+//!   relaxed atomic load and an all-`None` struct — nothing allocates,
+//!   nothing locks. Spans record themselves on `Drop`, so a panicking
+//!   worker (the failover path) still closes its open spans during unwind
+//!   and the event buffer stays well-formed; the buffer is bounded
+//!   ([`trace::MAX_EVENTS`]) and *truncates* under pressure rather than
+//!   growing without bound or corrupting output.
+//! * [`export`] — renderers over the captured data, all on `util::json`
+//!   (no serde in the offline toolchain): a Chrome `trace_event` JSON file
+//!   (`--trace-out trace.json`, loadable in Perfetto / `chrome://tracing`;
+//!   leader is tid 0, attention worker *i* is tid *i*+1), a line-per-event
+//!   JSONL stream (the `--step-trace` surface), and a Prometheus-style text
+//!   snapshot of the registry (`--metrics-dump`).
+//!
+//! # Naming conventions
+//!
+//! Metric names are dot-separated lowercase paths with a unit suffix:
+//! `host.copied_bytes`, `kv.read_bytes`, `serve.tbt_ns`, `serve.tokens`,
+//! `kv.blocks_in_use`. The Prometheus exporter prefixes `lamina_` and maps
+//! every non-alphanumeric character to `_`. Span categories are one of
+//! `leader`, `sched`, `wire`, `worker`, `kernel`; span names are the
+//! function-level phase (`decode-step`, `send_q`, `paged_attn`, …).
+//!
+//! # Overhead contract
+//!
+//! With tracing disabled, an instrumented call site costs one relaxed
+//! atomic load (the `obs/span disabled` bench row pins it); the end-to-end
+//! contract — instrumented-but-disabled decode step within 2% of the raw
+//! kernel — is asserted inside `benches.rs` (`obs/decode-step` rows) and
+//! regression-gated by `scripts/bench_guard.py`. Registry handles held in
+//! `OnceLock` statics cost one relaxed `fetch_add` per update.
+
+pub mod export;
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    registry, Counter, Gauge, HistoSnapshot, Histogram, Registry, RegistrySnapshot,
+};
+pub use trace::{instant, set_thread_track, span, ArgVal, Span, TraceEvent};
+
+/// Poison-immune mutex lock: observability must keep working (and never
+/// double-panic) after a worker thread died mid-update, so every obs lock
+/// goes through here instead of `.unwrap()`.
+pub(crate) fn lock<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}

@@ -1,0 +1,445 @@
+//! Global metrics registry: named counters, gauges and log-bucketed
+//! histograms with atomic hot paths.
+//!
+//! A metric handle ([`Counter`], [`Gauge`], [`Histogram`]) is a clonable
+//! `Arc` around atomics. [`Registry::counter`]/`gauge`/`histogram` resolve
+//! a name to its handle under a short-lived mutex (get-or-create, names are
+//! stable for the process lifetime); call sites cache the handle — usually
+//! in a `OnceLock` static — so updates never touch the registry map again.
+//!
+//! Histograms are HDR-style base-2 log buckets with [`HIST_SUB_BITS`]
+//! sub-bucket bits per octave: values 0..8 are exact, above that each
+//! octave splits into 8 sub-buckets, bounding the relative quantile error
+//! at 1/8 = 12.5%. 496 buckets cover the full `u64` range, so nanosecond
+//! latencies and byte counts share one shape. Recording is three relaxed
+//! `fetch_add`s; snapshots are read-only and mergeable across shards.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::lock;
+
+/// Sub-bucket bits per octave (8 sub-buckets → ≤12.5% relative error).
+pub const HIST_SUB_BITS: u32 = 3;
+const SUB: u64 = 1 << HIST_SUB_BITS;
+/// Total bucket count covering all of `u64` (62 octaves × 8 sub-buckets).
+pub const HIST_BUCKETS: usize = (64 - HIST_SUB_BITS as usize + 1) * SUB as usize;
+
+/// Bucket index for a recorded value.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros(); // >= HIST_SUB_BITS
+        let shift = msb - HIST_SUB_BITS;
+        let octave = (msb - HIST_SUB_BITS + 1) as u64;
+        (octave * SUB + ((v >> shift) - SUB)) as usize
+    }
+}
+
+/// Half-open `[lo, hi)` value range of bucket `i`. The topmost bucket's
+/// upper bound saturates at `u64::MAX` (it would otherwise be 2^64).
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    let i = i as u64;
+    if i < SUB {
+        (i, i + 1)
+    } else {
+        let octave = i / SUB;
+        let shift = (octave - 1) as u32;
+        let lo = (SUB + i % SUB) << shift;
+        (lo, lo.saturating_add(1u64 << shift))
+    }
+}
+
+/// Monotone event counter. `Clone` shares the underlying cell.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-value gauge (signed: deltas may go negative).
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, v: i64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.set(0);
+    }
+}
+
+#[derive(Debug)]
+struct HistoCell {
+    buckets: Vec<AtomicU64>, // HIST_BUCKETS long
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+/// Log-bucketed histogram. `Clone` shares the underlying cells.
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistoCell>);
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram(Arc::new(HistoCell {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }))
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.0.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in seconds as integer nanoseconds (the unit every
+    /// `*_ns` histogram uses).
+    #[inline]
+    pub fn record_secs(&self, s: f64) {
+        self.record(if s <= 0.0 { 0 } else { (s * 1e9) as u64 });
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy. Concurrent recording keeps working; a snapshot
+    /// taken mid-record may be ahead/behind by in-flight updates (the three
+    /// per-record adds are individually atomic, not a transaction).
+    pub fn snapshot(&self) -> HistoSnapshot {
+        HistoSnapshot {
+            counts: self.0.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.0.count.load(Ordering::Relaxed),
+            sum: self.0.sum.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        for b in &self.0.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.0.count.store(0, Ordering::Relaxed);
+        self.0.sum.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Immutable histogram state: per-bucket counts + total count/sum.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistoSnapshot {
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistoSnapshot {
+    pub fn empty() -> HistoSnapshot {
+        HistoSnapshot { counts: vec![0; HIST_BUCKETS], count: 0, sum: 0 }
+    }
+
+    /// Bucket-wise sum (shard merge — the same operation `KvCacheStats`
+    /// uses across workers).
+    pub fn merge(&self, other: &HistoSnapshot) -> HistoSnapshot {
+        HistoSnapshot {
+            counts: self
+                .counts
+                .iter()
+                .zip(&other.counts)
+                .map(|(a, b)| a + b)
+                .collect(),
+            count: self.count + other.count,
+            sum: self.sum + other.sum,
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate: midpoint of the bucket holding the rank-`q`
+    /// sample (relative error ≤ 1/2^`HIST_SUB_BITS`). NaN when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                let (lo, hi) = bucket_bounds(i);
+                return if hi == u64::MAX {
+                    lo as f64
+                } else {
+                    (lo as f64 + hi as f64) / 2.0
+                };
+            }
+        }
+        f64::NAN // unreachable when counts/count agree
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+/// Name → handle tables. One global instance lives behind [`registry`];
+/// separate instances exist only in tests.
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Counter>>,
+    gauges: Mutex<BTreeMap<String, Gauge>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            histograms: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Get-or-create the counter `name`. Cache the returned handle; this
+    /// call takes the registry lock.
+    pub fn counter(&self, name: &str) -> Counter {
+        lock(&self.counters)
+            .entry(name.to_string())
+            .or_insert_with(|| Counter(Arc::new(AtomicU64::new(0))))
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        lock(&self.gauges)
+            .entry(name.to_string())
+            .or_insert_with(|| Gauge(Arc::new(AtomicI64::new(0))))
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Histogram {
+        lock(&self.histograms)
+            .entry(name.to_string())
+            .or_insert_with(Histogram::new)
+            .clone()
+    }
+
+    /// Point-in-time copy of every registered metric (deterministically
+    /// ordered — the maps are `BTreeMap`s).
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        RegistrySnapshot {
+            counters: lock(&self.counters)
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            gauges: lock(&self.gauges)
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            histograms: lock(&self.histograms)
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+
+    /// Zero every metric, keeping registrations (cached handles stay
+    /// valid). Test/bench scaffolding — a serving process never resets.
+    pub fn reset(&self) {
+        for c in lock(&self.counters).values() {
+            c.reset();
+        }
+        for g in lock(&self.gauges).values() {
+            g.reset();
+        }
+        for h in lock(&self.histograms).values() {
+            h.reset();
+        }
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+/// Deterministic value snapshot of a [`Registry`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegistrySnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub histograms: BTreeMap<String, HistoSnapshot>,
+}
+
+/// The process-wide registry.
+pub fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: these unit tests only use process-local `Registry::new()`
+    // instances and the pure bucket math — never `registry()` —
+    // so they cannot interfere with other lib tests running in parallel
+    // (the shared-registry behavior is covered by `tests/obs.rs`, which
+    // serializes itself).
+
+    #[test]
+    fn bucket_roundtrip_exhaustive_small() {
+        for v in 0u64..4096 {
+            let (lo, hi) = bucket_bounds(bucket_index(v));
+            assert!(lo <= v && v < hi, "v={v} not in [{lo},{hi})");
+        }
+    }
+
+    #[test]
+    fn bucket_roundtrip_powers_and_extremes() {
+        for e in 3..64u32 {
+            for d in [-1i64, 0, 1] {
+                let v = (1u128 << e) as i128 + d as i128;
+                if v < 0 || v > u64::MAX as i128 {
+                    continue;
+                }
+                let v = v as u64;
+                let (lo, hi) = bucket_bounds(bucket_index(v));
+                assert!(lo <= v, "v={v} lo={lo}");
+                assert!(v < hi || hi == u64::MAX, "v={v} hi={hi}");
+            }
+        }
+        let (lo, hi) = bucket_bounds(bucket_index(u64::MAX));
+        assert_eq!(hi, u64::MAX, "top bucket saturates");
+        assert!(lo <= u64::MAX);
+    }
+
+    #[test]
+    fn bucket_relative_error_bound() {
+        for i in 0..HIST_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            if hi == u64::MAX {
+                continue; // saturated top bucket
+            }
+            let width = hi - lo;
+            assert!(
+                width <= (lo / SUB).max(1),
+                "bucket {i} [{lo},{hi}) wider than {}% of lo",
+                100 / SUB
+            );
+        }
+    }
+
+    #[test]
+    fn bucket_bounds_are_contiguous() {
+        let mut expect = 0u64;
+        for i in 0..HIST_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert_eq!(lo, expect, "bucket {i} not contiguous");
+            assert!(hi > lo);
+            if hi == u64::MAX {
+                assert_eq!(i, HIST_BUCKETS - 1);
+                break;
+            }
+            expect = hi;
+        }
+    }
+
+    #[test]
+    fn local_registry_counter_gauge_histogram() {
+        let r = Registry::new();
+        let c = r.counter("c");
+        c.add(3);
+        c.inc();
+        assert_eq!(r.counter("c").get(), 4, "same name, same cell");
+        let g = r.gauge("g");
+        g.set(7);
+        g.add(-2);
+        assert_eq!(g.get(), 5);
+        let h = r.histogram("h");
+        h.record(5);
+        h.record(5);
+        h.record(100);
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.sum, 110);
+        assert_eq!(s.counts[bucket_index(5)], 2);
+        let snap = r.snapshot();
+        assert_eq!(snap.counters["c"], 4);
+        assert_eq!(snap.gauges["g"], 5);
+        r.reset();
+        assert_eq!(c.get(), 0, "cached handle sees the reset");
+        assert_eq!(h.snapshot().count, 0);
+    }
+
+    #[test]
+    fn quantiles_small_values_exact_bucket() {
+        let r = Registry::new();
+        let h = r.histogram("q");
+        for v in [1u64, 2, 3, 4, 5, 6, 7] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        // values < 8 land in exact unit buckets: p50 of 1..=7 is bucket 4,
+        // whose midpoint is 4.5
+        assert!((s.p50() - 4.5).abs() < 1e-9, "p50={}", s.p50());
+        assert!((s.quantile(1.0) - 7.5).abs() < 1e-9);
+        assert!((s.mean() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_is_nan() {
+        let s = HistoSnapshot::empty();
+        assert!(s.mean().is_nan());
+        assert!(s.p50().is_nan());
+    }
+}

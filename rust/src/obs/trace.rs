@@ -1,0 +1,211 @@
+//! Span tracing: scoped timers over the decode pipeline.
+//!
+//! A [`Span`] measures one phase of work on one thread ("track"): the
+//! leader is track 0, attention worker *i* is track *i*+1 (workers call
+//! [`set_thread_track`] on startup). Spans nest naturally — creation
+//! order on a track is the nesting order, and the Chrome `trace_event`
+//! renderers reconstruct the stack from `ts`/`dur`.
+//!
+//! # Cost model
+//!
+//! Tracing is **off** by default. A disabled [`span`] call is one relaxed
+//! atomic load returning `Span(None)` — no clock read, no allocation, no
+//! lock; `.arg(..)` on it is a no-op. Enabled spans read the monotonic
+//! clock twice and push one event into a global bounded buffer under a
+//! mutex at `Drop` time.
+//!
+//! # Panic/drop safety (the failover contract)
+//!
+//! Events are recorded in `Drop`, which runs during unwinding, so a worker
+//! that dies mid-step closes its open spans before the thread dies; the
+//! sink mutex is poison-immune (`obs::lock`), so one panicked writer never
+//! wedges tracing for everyone else. The buffer is bounded at
+//! [`MAX_EVENTS`]: under pressure new events are *dropped and counted*
+//! ([`dropped`]), never partially written — exporters always see a
+//! well-formed event list.
+
+use std::borrow::Cow;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::lock;
+
+/// Event-buffer capacity. ~40 events per decode step across 2 layers keeps
+/// multi-thousand-step sessions inside the cap; longer sessions truncate
+/// (see [`dropped`]) instead of growing without bound.
+pub const MAX_EVENTS: usize = 1 << 18;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static SINK: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static TRACK: Cell<u64> = Cell::new(0);
+}
+
+/// Monotonic epoch shared by every track (first use pins it).
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+#[inline]
+fn now_us() -> f64 {
+    epoch().elapsed().as_secs_f64() * 1e6
+}
+
+/// A span/instant argument value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgVal {
+    I(i64),
+    S(String),
+}
+
+/// One recorded event: a complete span (`ph == 'X'`, with duration) or an
+/// instant marker (`ph == 'i'`). Field names mirror the Chrome
+/// `trace_event` format the exporter writes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub name: Cow<'static, str>,
+    pub cat: &'static str,
+    pub ph: char,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub track: u64,
+    pub args: Vec<(&'static str, ArgVal)>,
+}
+
+/// Clear the buffer and enable collection.
+pub fn start() {
+    let _ = epoch();
+    lock(&SINK).clear();
+    DROPPED.store(0, Ordering::Relaxed);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Disable collection and drain the captured events.
+pub fn stop() -> Vec<TraceEvent> {
+    ENABLED.store(false, Ordering::SeqCst);
+    std::mem::take(&mut *lock(&SINK))
+}
+
+/// Is collection currently enabled? (One relaxed load — callers may guard
+/// arg-building work behind this.)
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Events discarded since [`start`] because the buffer was full.
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Set this thread's track id (leader = 0 is the default; attention worker
+/// `shard` calls `set_thread_track(shard + 1)` at startup).
+pub fn set_thread_track(track: u64) {
+    TRACK.with(|t| t.set(track));
+}
+
+fn push(ev: TraceEvent) {
+    // A span that outlives `stop()` (e.g. a worker draining during
+    // shutdown) is silently discarded — the exported file is already cut.
+    if !enabled() {
+        return;
+    }
+    let mut sink = lock(&SINK);
+    if sink.len() >= MAX_EVENTS {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    sink.push(ev);
+}
+
+/// A scoped timer; records a complete event on `Drop`. Disabled spans are
+/// `None` inside and free to construct/drop.
+#[must_use = "a span measures until it is dropped — bind it to a `_sp` local"]
+pub struct Span(Option<SpanInner>);
+
+struct SpanInner {
+    name: Cow<'static, str>,
+    cat: &'static str,
+    start_us: f64,
+    track: u64,
+    args: Vec<(&'static str, ArgVal)>,
+}
+
+/// Open a span in category `cat`. The returned guard records on drop.
+#[inline]
+pub fn span(cat: &'static str, name: impl Into<Cow<'static, str>>) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    Span(Some(SpanInner {
+        name: name.into(),
+        cat,
+        start_us: now_us(),
+        track: TRACK.with(|t| t.get()),
+        args: Vec::new(),
+    }))
+}
+
+impl Span {
+    /// Attach an integer argument (builder-style; no-op when disabled).
+    #[inline]
+    pub fn arg(mut self, key: &'static str, v: i64) -> Span {
+        if let Some(s) = self.0.as_mut() {
+            s.args.push((key, ArgVal::I(v)));
+        }
+        self
+    }
+
+    /// Attach a string argument (only materialize the string when
+    /// [`enabled`] — guard expensive formatting at the call site).
+    #[inline]
+    pub fn arg_str(mut self, key: &'static str, v: impl Into<String>) -> Span {
+        if let Some(s) = self.0.as_mut() {
+            s.args.push((key, ArgVal::S(v.into())));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(s) = self.0.take() {
+            let end = now_us();
+            push(TraceEvent {
+                name: s.name,
+                cat: s.cat,
+                ph: 'X',
+                ts_us: s.start_us,
+                dur_us: (end - s.start_us).max(0.0),
+                track: s.track,
+                args: s.args,
+            });
+        }
+    }
+}
+
+/// Record a point-in-time marker with arguments. Callers building
+/// non-trivial `args` should guard on [`enabled`] first.
+pub fn instant(
+    cat: &'static str,
+    name: impl Into<Cow<'static, str>>,
+    args: Vec<(&'static str, ArgVal)>,
+) {
+    if !enabled() {
+        return;
+    }
+    push(TraceEvent {
+        name: name.into(),
+        cat,
+        ph: 'i',
+        ts_us: now_us(),
+        dur_us: 0.0,
+        track: TRACK.with(|t| t.get()),
+        args,
+    });
+}

@@ -20,21 +20,31 @@ use std::sync::Arc;
 /// cross-shard head slicing, KV-cache gathers, attention-output assembly).
 /// Zero-copy views add nothing. `cargo bench` resets/reads this around the
 /// decode hot loop to report bytes-copied-per-step in `BENCH_decode.json`.
+///
+/// The storage is the obs registry counter `host.copied_bytes`
+/// (`crate::obs::registry`), so the same number shows up in every registry
+/// snapshot / Prometheus dump; this module keeps the historical `add` /
+/// `total` / `reset` API over a cached handle (one relaxed `fetch_add`
+/// per call — identical hot-path cost to the old private atomic).
 pub mod copies {
-    use std::sync::atomic::{AtomicU64, Ordering};
+    use crate::obs::{self, Counter};
+    use std::sync::OnceLock;
 
-    static COPIED_BYTES: AtomicU64 = AtomicU64::new(0);
+    fn cell() -> &'static Counter {
+        static C: OnceLock<Counter> = OnceLock::new();
+        C.get_or_init(|| obs::registry().counter("host.copied_bytes"))
+    }
 
     pub fn add(bytes: usize) {
-        COPIED_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+        cell().add(bytes as u64);
     }
 
     pub fn total() -> u64 {
-        COPIED_BYTES.load(Ordering::Relaxed)
+        cell().get()
     }
 
     pub fn reset() {
-        COPIED_BYTES.store(0, Ordering::Relaxed);
+        cell().reset();
     }
 }
 
@@ -49,21 +59,29 @@ pub mod copies {
 /// resets/reads this around the decode hot loop to report
 /// `kv_read_bytes_per_iter` in `BENCH_decode.json`, where the reduction is
 /// machine-checked.
+///
+/// Like [`copies`], the storage is the obs registry counter
+/// `kv.read_bytes`; the historical `add`/`total`/`reset` API is preserved
+/// over a cached handle.
 pub mod kv_reads {
-    use std::sync::atomic::{AtomicU64, Ordering};
+    use crate::obs::{self, Counter};
+    use std::sync::OnceLock;
 
-    static READ_BYTES: AtomicU64 = AtomicU64::new(0);
+    fn cell() -> &'static Counter {
+        static C: OnceLock<Counter> = OnceLock::new();
+        C.get_or_init(|| obs::registry().counter("kv.read_bytes"))
+    }
 
     pub fn add(bytes: usize) {
-        READ_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+        cell().add(bytes as u64);
     }
 
     pub fn total() -> u64 {
-        READ_BYTES.load(Ordering::Relaxed)
+        cell().get()
     }
 
     pub fn reset() {
-        READ_BYTES.store(0, Ordering::Relaxed);
+        cell().reset();
     }
 }
 

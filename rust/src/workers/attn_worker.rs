@@ -37,6 +37,7 @@
 use crate::kernels::{AttnBackend, AttnBackendKind, EngineBackend, NativeBackend, PartialState};
 use crate::kvcache::{ArenaCfg, KvDtype, PagedKvArena};
 use crate::net::Transport;
+use crate::obs;
 use crate::runtime::host::HostTensor;
 use crate::runtime::manifest::Manifest;
 
@@ -78,6 +79,9 @@ pub struct AttnWorkerCfg {
 /// protocol is identical). Intended to be the body of a dedicated thread
 /// (the engine backend's PJRT handles are not `Send`).
 pub fn run_attn_worker<T: Transport>(cfg: AttnWorkerCfg, link: T) {
+    // every span/instant this thread records lands on the worker's own
+    // timeline track (leader is track 0)
+    obs::set_thread_track(cfg.shard as u64 + 1);
     let (mut backend, geom): (Box<dyn AttnBackend>, ModelGeom) = match cfg.backend {
         AttnBackendKind::Engine => match EngineBackend::new(&cfg.artifacts_dir, cfg.n_shards) {
             Ok(b) => {
@@ -166,7 +170,10 @@ fn worker_loop<T: Transport>(
         };
         match msg {
             WireMsg::Shutdown => return Ok(()),
-            WireMsg::Retire { slot } => arena.retire(slot),
+            WireMsg::Retire { slot } => {
+                let _sp = obs::span("worker", "retire").arg("slot", slot as i64);
+                arena.retire(slot);
+            }
             WireMsg::MapBlocks { slot, src_slot, tokens } => {
                 arena.map_prefix(slot, src_slot, tokens);
             }
@@ -185,6 +192,7 @@ fn worker_loop<T: Transport>(
                 };
                 if overlap {
                     // partial attention over cached tokens, before k/v exist
+                    let _sp = obs::span("worker", "attn_prev").arg("layer", layer as i64);
                     p.partial = Some(backend.attn_prev(
                         &mut arena,
                         &p.slots,
@@ -197,6 +205,7 @@ fn worker_loop<T: Transport>(
                 pending = Some(p);
             }
             WireMsg::StepKv { layer, k, v } => {
+                let _sp = obs::span("worker", "decode-attn").arg("layer", layer as i64);
                 let p = pending.take().ok_or("StepKv without StepQ")?;
                 if p.layer != layer {
                     return Err(format!("layer mismatch: q@{} kv@{}", p.layer, layer));
@@ -214,6 +223,10 @@ fn worker_loop<T: Transport>(
                 link.send(WireMsg::AttnOut { layer, out })?;
             }
             WireMsg::PrefillChunk { layer, slot, q, k, v, cached, valid, seq_bucket } => {
+                let _sp = obs::span("worker", "prefill")
+                    .arg("layer", layer as i64)
+                    .arg("slot", slot as i64)
+                    .arg("valid", valid as i64);
                 // attention over cached prefix + causal chunk, computed
                 // BEFORE the chunk's K/V lands in the arena
                 let out = backend.prefill(&mut arena, slot, layer, &q, &k, &v, cached, seq_bucket)?;

@@ -59,6 +59,7 @@ use crate::kvcache::{KvDtype, PrefixIndex};
 use crate::metrics::{KvCacheStats, ServeMetrics, StepBreakdown};
 use crate::net::{inproc, tcp, Transport, TransportKind};
 use crate::netsim::stack::{NetStackModel, LINE_RATE_400G};
+use crate::obs;
 use crate::runtime::engine::Engine;
 use crate::runtime::host::{copies, HostTensor};
 use crate::scheduler::{
@@ -143,6 +144,12 @@ pub struct PipelineOpts {
     /// the queue (their KV retired, output unchanged on resume). Only
     /// meaningful with a KV budget.
     pub overcommit: bool,
+    /// Structured per-decode-step tracing (`--step-trace`): emit one obs
+    /// instant event per decode iteration carrying request ids, slots,
+    /// context lengths and buckets (the old `LAMINA_STEP_TRACE` eprintln,
+    /// now a JSONL-exportable event). Records only while `obs::trace`
+    /// collection is enabled (the CLI enables it for the run).
+    pub step_trace: bool,
 }
 
 impl PipelineOpts {
@@ -166,6 +173,7 @@ impl PipelineOpts {
             kv_block_budget: None,
             prefix_cache: false,
             overcommit: false,
+            step_trace: false,
         }
     }
 }
@@ -423,6 +431,7 @@ impl DisaggPipeline {
     /// decode pass over the running batch (grouped by the session's
     /// [`GroupMode`]), then retire finishes and refresh the KV snapshot.
     pub fn step(&mut self) -> Result<StepOutcome> {
+        let _sp_step = obs::span("leader", "step");
         let workers_n = self.workers.len().max(1);
         let mut outcome = StepOutcome::default();
 
@@ -434,6 +443,7 @@ impl DisaggPipeline {
 
         // admission against the latest per-worker occupancy
         {
+            let _sp = obs::span("sched", "admit");
             let s = self.session_mut();
             let occ = KvOccupancy {
                 blocks_in_use: s.kv_snap.blocks_in_use.div_ceil(workers_n),
@@ -497,7 +507,10 @@ impl DisaggPipeline {
             }
             outcome.prefilled = Some(p.id);
         } else {
-            let plan = self.session_ref().sched.decode_plan();
+            let plan = {
+                let _sp = obs::span("sched", "decode_plan");
+                self.session_ref().sched.decode_plan()
+            };
             for rows in plan {
                 if rows.is_empty() {
                     continue;
@@ -521,6 +534,7 @@ impl DisaggPipeline {
         // holds again. Their Retires queue now and go out with this
         // step's batch; blocks a sharer mapped stay resident (refcounts).
         {
+            let _sp = obs::span("sched", "pressure_preempt");
             let s = self.session_mut();
             let occ = KvOccupancy {
                 blocks_in_use: s.kv_snap.blocks_in_use.div_ceil(workers_n),
@@ -541,6 +555,7 @@ impl DisaggPipeline {
         // retire finishes: finish EVENTS (all finishes) drive outcome and
         // per-request metrics; RETIREMENTS (only finishes that materialized
         // KV) drive the Retire wire messages.
+        let _sp_retire = obs::span("sched", "retire");
         let finished_ids = self.session_mut().sched.take_finished();
         let retires = self.session_mut().sched.take_retirements();
         let did_work = outcome.admitted > 0
@@ -651,6 +666,7 @@ impl DisaggPipeline {
         let mut m = std::mem::take(&mut s.metrics);
         m.record_wire(&wire.delta_since(&s.wire_baseline));
         m.set_kv_budget(s.budget_blocks, s.budget_bytes);
+        m.publish_registry();
         s.wire_baseline = wire;
         Ok(m)
     }
@@ -659,6 +675,7 @@ impl DisaggPipeline {
 
     fn send_q(&self, layer: usize, slots: &[u32], q: &HostTensor, lens: &[i32],
               seq_bucket: usize) -> Result<()> {
+        let _sp = obs::span("wire", "send_q").arg("layer", layer as i64);
         let mc = self.config();
         let w = self.workers.len();
         let hs = mc.heads / w;
@@ -679,6 +696,7 @@ impl DisaggPipeline {
     }
 
     fn send_kv(&self, layer: usize, k: &HostTensor, v: &HostTensor) -> Result<()> {
+        let _sp = obs::span("wire", "send_kv").arg("layer", layer as i64);
         let mc = self.config();
         let w = self.workers.len();
         let khs = mc.kv_heads / w;
@@ -695,6 +713,9 @@ impl DisaggPipeline {
     }
 
     fn recv_attn(&self, layer: usize, bucket: usize) -> Result<HostTensor> {
+        let _sp = obs::span("wire", "recv_attn")
+            .arg("layer", layer as i64)
+            .arg("workers", self.workers.len() as i64);
         let mc = self.config();
         let w = self.workers.len();
         let hs = mc.heads / w;
@@ -735,6 +756,7 @@ impl DisaggPipeline {
 
     /// Free `slot`'s KV blocks on every attention worker (request retired).
     fn retire_slot(&self, slot: u32) -> Result<()> {
+        let _sp = obs::span("wire", "retire").arg("slot", slot as i64);
         for worker in &self.workers {
             worker.link.send(WireMsg::Retire { slot }).map_err(|e| anyhow!(e))?;
         }
@@ -745,6 +767,10 @@ impl DisaggPipeline {
     /// attention worker (refcounted prefix sharing — slot-relative, so one
     /// message fits all workers despite per-worker block ids).
     fn map_blocks(&self, dst_slot: u32, src_slot: u32, tokens: usize) -> Result<()> {
+        let _sp = obs::span("wire", "map_blocks")
+            .arg("dst", dst_slot as i64)
+            .arg("src", src_slot as i64)
+            .arg("tokens", tokens as i64);
         for worker in &self.workers {
             worker
                 .link
@@ -758,6 +784,7 @@ impl DisaggPipeline {
     /// per-shard stats (block counts add across shards; the byte size of a
     /// block shrinks with the shard width).
     pub fn kv_stats(&self) -> Result<KvCacheStats> {
+        let _sp = obs::span("wire", "kv_stats");
         for worker in &self.workers {
             worker.link.send(WireMsg::KvStatsReq).map_err(|e| anyhow!(e))?;
         }
@@ -807,11 +834,22 @@ impl DisaggPipeline {
             .seq_bucket(max_len_after)
             .ok_or_else(|| anyhow!("context {max_len_after} exceeds max seq bucket"))?;
 
-        if step_trace_enabled() {
+        let _sp_decode = obs::span("leader", "decode-step")
+            .arg("rows", b as i64)
+            .arg("bucket", bucket as i64)
+            .arg("seq_bucket", seq_bucket as i64);
+        if self.opts.step_trace && obs::trace::enabled() {
             let ids: Vec<RequestId> = rows.iter().map(|r| r.id).collect();
-            eprintln!(
-                "[step-trace] reqs={ids:?} slots={slots:?} lens={lens:?} \
-                 bucket={bucket} seq_bucket={seq_bucket}"
+            obs::instant(
+                "leader",
+                "step-trace",
+                vec![
+                    ("reqs", obs::ArgVal::S(format!("{ids:?}"))),
+                    ("slots", obs::ArgVal::S(format!("{slots:?}"))),
+                    ("lens", obs::ArgVal::S(format!("{lens:?}"))),
+                    ("bucket", obs::ArgVal::I(bucket as i64)),
+                    ("seq_bucket", obs::ArgVal::I(seq_bucket as i64)),
+                ],
             );
         }
 
@@ -823,6 +861,7 @@ impl DisaggPipeline {
 
         // slice_first
         let t0 = Instant::now();
+        let sp = obs::span("leader", "slice_first");
         let mut outs = self.engine.execute(
             "slice_first",
             bucket,
@@ -830,6 +869,7 @@ impl DisaggPipeline {
             &[&tokens_t, &pos_t],
             &first_weight_names(),
         )?;
+        drop(sp);
         model_s += t0.elapsed().as_secs_f64();
         let (mut q, mut k, mut v, mut resid) = take4(&mut outs)?;
 
@@ -843,6 +883,7 @@ impl DisaggPipeline {
 
             let t2 = Instant::now();
             if layer + 1 < mc.layers {
+                let sp = obs::span("leader", "slice_mid").arg("layer", layer as i64);
                 let mut outs = self.engine.execute(
                     "slice_mid",
                     bucket,
@@ -850,6 +891,7 @@ impl DisaggPipeline {
                     &[&attn_out, &resid, &pos_t],
                     &mid_weight_names(layer),
                 )?;
+                drop(sp);
                 model_s += t2.elapsed().as_secs_f64();
                 let (q2, k2, v2, r2) = take4(&mut outs)?;
                 q = q2;
@@ -857,6 +899,7 @@ impl DisaggPipeline {
                 v = v2;
                 resid = r2;
             } else {
+                let sp = obs::span("leader", "slice_last").arg("layer", layer as i64);
                 let outs = self.engine.execute(
                     "slice_last",
                     bucket,
@@ -864,6 +907,7 @@ impl DisaggPipeline {
                     &[&attn_out, &resid],
                     &last_weight_names(mc.layers),
                 )?;
+                drop(sp);
                 model_s += t2.elapsed().as_secs_f64();
                 let next = outs
                     .into_iter()
@@ -881,8 +925,10 @@ impl DisaggPipeline {
                     sched_s: (total - model_s - attn_wait_s - net_model_s).max(0.0),
                     total_s: total,
                 };
+                let sp_sample = obs::span("leader", "sample").arg("rows", b as i64);
                 let mut next_tokens = next.as_i32()[..bucket].to_vec();
                 next_tokens.truncate(b.max(1));
+                drop(sp_sample);
                 return Ok((next_tokens, bd));
             }
         }
@@ -898,6 +944,10 @@ impl DisaggPipeline {
     /// lands on the attention workers layer-by-layer exactly as the
     /// paper's transition protocol streams it.
     fn exec_prefill_chunk(&self, slot: u32, chunk: &[i32], cached: usize) -> Result<i32> {
+        let _sp = obs::span("leader", "prefill-chunk")
+            .arg("slot", slot as i64)
+            .arg("cached", cached as i64)
+            .arg("valid", chunk.len() as i64);
         let mc = self.config().clone();
         let valid = chunk.len();
         assert!(valid > 0, "empty prefill chunk");
@@ -1038,6 +1088,9 @@ impl DisaggPipeline {
         valid: usize,
         seq_bucket: usize,
     ) -> Result<()> {
+        let _sp = obs::span("wire", "send_prefill")
+            .arg("layer", layer as i64)
+            .arg("slot", slot as i64);
         let mc = self.config();
         let w = self.workers.len();
         let hs = mc.heads / w;
@@ -1195,13 +1248,6 @@ impl DisaggPipeline {
             }
         }
     }
-}
-
-/// `LAMINA_STEP_TRACE=1` logs every decode step's request ids, cache slots
-/// and context lengths (checked once, cached).
-fn step_trace_enabled() -> bool {
-    static ON: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
-    *ON.get_or_init(|| std::env::var_os("LAMINA_STEP_TRACE").is_some())
 }
 
 /// Slice heads `[h0, h0+n)` out of `[B, H, hd]`. The full-range slice (the

@@ -101,7 +101,9 @@
 pub mod attn_worker;
 pub mod leader;
 pub mod messages;
+pub mod smoke;
 
 pub use attn_worker::{run_attn_worker, AttnWorkerCfg, ModelGeom, PAD_SLOT};
 pub use leader::{DisaggPipeline, PipelineOpts};
 pub use messages::WireMsg;
+pub use smoke::{run_trace_smoke, SmokeReport};

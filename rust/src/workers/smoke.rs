@@ -1,0 +1,204 @@
+//! Artifact-free trace smoke session: a scripted leader driving ONE real
+//! attention worker (`run_attn_worker`, native backend, in-process
+//! transport), instrumented with the same obs span vocabulary the real
+//! pipeline emits.
+//!
+//! Purpose: CI and the `lamina trace-smoke` subcommand need a serve-shaped
+//! session that produces a full leader + wire + worker + kernel span tree
+//! **without PJRT artifacts** (the real leader needs `make artifacts`).
+//! The worker and kernel spans here are genuine — they come from the
+//! instrumentation inside `attn_worker` and `NativeBackend`, running on a
+//! real paged-KV arena — only the leader's model slices are scripted
+//! (synthetic Q/K/V instead of PJRT outputs).
+//!
+//! `kill_worker_mid` poisons the protocol halfway through (a `StepKv`
+//! with no preceding `StepQ`), making the worker loop error out and die
+//! mid-session — the drop-safety contract says its open spans still close
+//! via `Drop` and the exported trace stays well-formed.
+
+use crate::kernels::AttnBackendKind;
+use crate::kvcache::KvDtype;
+use crate::net::{inproc, Transport};
+use crate::netsim::stack::{FHBN, LINE_RATE_400G};
+use crate::obs::{self, ArgVal};
+use crate::runtime::host::HostTensor;
+
+use super::messages::WireMsg;
+use super::{run_attn_worker, AttnWorkerCfg, ModelGeom, PAD_SLOT};
+
+/// What the scripted session did (the trace itself lives in `obs::trace`;
+/// callers `start()` before and `stop()` after).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SmokeReport {
+    /// Completed decode iterations (each spans both layers).
+    pub decode_steps: usize,
+    /// Attention replies received (prefill + decode).
+    pub replies: usize,
+    /// The worker died mid-session (only with `kill_worker_mid`).
+    pub worker_died: bool,
+}
+
+fn tensor(shape: &[usize], salt: f32) -> HostTensor {
+    let n: usize = shape.iter().product();
+    HostTensor::f32(
+        shape.to_vec(),
+        (0..n).map(|i| salt + (i as f32) * 0.125 - (i % 7) as f32).collect(),
+    )
+}
+
+/// Geometry of the smoke model (small enough to run anywhere, big enough
+/// that every wire/kernel path sees real work).
+const LAYERS: usize = 2;
+const SEQ_BUCKET: usize = 64;
+
+/// Run the scripted session: one chunked-prefill pass on slot 0, then
+/// `steps` decode iterations over a padded 3-row batch, then shutdown.
+/// With `kill_worker_mid` the protocol is poisoned halfway instead and the
+/// session reports a dead worker rather than erroring.
+pub fn run_trace_smoke(steps: usize, kill_worker_mid: bool) -> Result<SmokeReport, String> {
+    // context = 3 prefill tokens + one appended token per step; keep it
+    // inside the smoke arena's max_seq
+    let steps = steps.min(SEQ_BUCKET - 4);
+    let (leader, worker) = inproc::pair(&FHBN, LINE_RATE_400G, 0.0);
+    let cfg = AttnWorkerCfg {
+        // deliberately nonexistent: the native backend must not need it
+        artifacts_dir: std::path::PathBuf::from("artifacts-not-needed"),
+        shard: 0,
+        n_shards: 1,
+        slots: 4,
+        kv_block_size: 4,
+        kv_dtype: KvDtype::F32,
+        backend: AttnBackendKind::Native,
+        geom: Some(ModelGeom {
+            layers: LAYERS,
+            kv_heads: 4,
+            head_dim: 16,
+            max_seq: SEQ_BUCKET,
+        }),
+    };
+    let h = std::thread::spawn(move || run_attn_worker(cfg, worker));
+
+    let mut replies = 0usize;
+    let mut worker_died = false;
+
+    let recv_reply = |layer: usize| -> Result<Option<WireMsg>, String> {
+        let _sp = obs::span("wire", "recv_attn").arg("layer", layer as i64);
+        match leader.recv()? {
+            WireMsg::AttnOut { .. } => Ok(None),
+            WireMsg::WorkerError { msg } => Ok(Some(WireMsg::WorkerError { msg })),
+            other => Err(format!("unexpected reply {other:?}")),
+        }
+    };
+
+    // one chunked-prefill pass on slot 0 (3 tokens, every layer)
+    {
+        let _sp = obs::span("leader", "prefill-chunk")
+            .arg("slot", 0)
+            .arg("cached", 0)
+            .arg("valid", 3);
+        for layer in 0..LAYERS {
+            let salt = 50.0 + layer as f32;
+            {
+                let _sp = obs::span("wire", "send_prefill").arg("layer", layer as i64).arg("slot", 0);
+                leader.send(WireMsg::PrefillChunk {
+                    layer,
+                    slot: 0,
+                    q: tensor(&[3, 8, 16], salt),
+                    k: tensor(&[3, 4, 16], salt + 0.25),
+                    v: tensor(&[3, 4, 16], salt - 0.25),
+                    cached: 0,
+                    valid: 3,
+                    seq_bucket: SEQ_BUCKET,
+                })?;
+            }
+            if let Some(WireMsg::WorkerError { msg }) = recv_reply(layer)? {
+                return Err(format!("worker during prefill: {msg}"));
+            }
+            replies += 1;
+        }
+    }
+
+    // decode iterations over a padded batch: slot 0 continues its context,
+    // slots 1 and 3 decode from empty, row 2 is padding
+    let mut lens = [3i32, 0, 0];
+    let mut decode_steps = 0usize;
+    'steps: for step in 0..steps {
+        let kill_now = kill_worker_mid && step == steps / 2;
+        let slots = vec![0u32, 1, PAD_SLOT, 3];
+        let lens_v = vec![lens[0], lens[1], 0, lens[2]];
+        let _sp_step = obs::span("leader", "decode-step")
+            .arg("rows", 3)
+            .arg("bucket", 4)
+            .arg("seq_bucket", SEQ_BUCKET as i64);
+        if obs::trace::enabled() {
+            obs::instant(
+                "leader",
+                "step-trace",
+                vec![
+                    ("reqs", ArgVal::S(format!("{:?}", [0u64, 1, 2]))),
+                    ("slots", ArgVal::S(format!("{slots:?}"))),
+                    ("lens", ArgVal::S(format!("{lens_v:?}"))),
+                    ("bucket", ArgVal::I(4)),
+                    ("seq_bucket", ArgVal::I(SEQ_BUCKET as i64)),
+                ],
+            );
+        }
+        for layer in 0..LAYERS {
+            let salt = 7.0 + step as f32 * 3.0 + layer as f32;
+            if kill_now && layer == 1 {
+                // poison the protocol: StepKv without StepQ errors the
+                // worker loop out mid-session
+                let _sp = obs::span("wire", "send_kv").arg("layer", layer as i64);
+                leader.send(WireMsg::StepKv {
+                    layer,
+                    k: tensor(&[4, 4, 16], salt + 0.5),
+                    v: tensor(&[4, 4, 16], salt - 0.5),
+                })?;
+                drop(_sp);
+                match recv_reply(layer)? {
+                    Some(WireMsg::WorkerError { .. }) => {
+                        worker_died = true;
+                        break 'steps;
+                    }
+                    _ => return Err("poisoned worker must report an error".into()),
+                }
+            }
+            {
+                let _sp = obs::span("wire", "send_q").arg("layer", layer as i64);
+                leader.send(WireMsg::StepQ {
+                    layer,
+                    slots: slots.clone(),
+                    q: tensor(&[4, 8, 16], salt),
+                    lens: lens_v.clone(),
+                    seq_bucket: SEQ_BUCKET,
+                    overlap: false,
+                })?;
+            }
+            {
+                let _sp = obs::span("wire", "send_kv").arg("layer", layer as i64);
+                leader.send(WireMsg::StepKv {
+                    layer,
+                    k: tensor(&[4, 4, 16], salt + 0.5),
+                    v: tensor(&[4, 4, 16], salt - 0.5),
+                })?;
+            }
+            if let Some(WireMsg::WorkerError { msg }) = recv_reply(layer)? {
+                return Err(format!("worker during decode: {msg}"));
+            }
+            replies += 1;
+        }
+        decode_steps += 1;
+        for l in lens.iter_mut() {
+            *l += 1;
+        }
+    }
+
+    if !worker_died {
+        let _sp = obs::span("wire", "retire").arg("slot", 0);
+        leader.send(WireMsg::Retire { slot: 0 })?;
+        drop(_sp);
+        leader.send(WireMsg::Shutdown)?;
+    }
+    let _ = h.join();
+    Ok(SmokeReport { decode_steps, replies, worker_died })
+}

@@ -1,0 +1,247 @@
+//! Shared-registry behavior of the obs metrics layer: get-or-create
+//! identity across call sites, snapshot/reset determinism under real
+//! `ScopedPool` concurrency, histogram merge laws, and the Prometheus
+//! exposition text.
+//!
+//! These tests exercise the PROCESS-GLOBAL `obs::registry()` (the lib unit
+//! tests deliberately stick to local `Registry::new()` instances), so the
+//! whole binary serializes through one mutex and every test uses metric
+//! names no other test touches.
+
+use std::sync::Mutex;
+
+use lamina::obs::registry::{bucket_bounds, bucket_index, HIST_BUCKETS};
+use lamina::obs::{self, HistoSnapshot};
+use lamina::util::threadpool::ScopedPool;
+
+/// Global-registry tests must not interleave: `Registry::reset()` zeroes
+/// every metric in the process.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn global_registry_handles_share_cells() {
+    let _g = guard();
+    let c1 = obs::registry().counter("test_obs.share.counter");
+    let c2 = obs::registry().counter("test_obs.share.counter");
+    c1.add(5);
+    c2.add(2);
+    assert_eq!(c1.get(), 7, "two lookups of one name share the cell");
+
+    let h1 = obs::registry().histogram("test_obs.share.histo");
+    let h2 = obs::registry().histogram("test_obs.share.histo");
+    h1.record(10);
+    h2.record(20);
+    assert_eq!(h1.count(), 2);
+
+    let g1 = obs::registry().gauge("test_obs.share.gauge");
+    obs::registry().gauge("test_obs.share.gauge").set(42);
+    assert_eq!(g1.get(), 42);
+}
+
+#[test]
+fn concurrent_counter_and_histogram_updates_are_lossless() {
+    let _g = guard();
+    let c = obs::registry().counter("test_obs.conc.counter");
+    let h = obs::registry().histogram("test_obs.conc.histo");
+    c.reset();
+    h.reset();
+
+    const WORKERS: usize = 8;
+    const PER_WORKER: u64 = 5_000;
+    let pool = ScopedPool::new(WORKERS);
+    let items: Vec<usize> = (0..WORKERS).collect();
+    pool.map(&items, |&w| {
+        // every worker resolves its own handles through the registry map
+        // (the get-or-create path) and then hammers the shared atomics
+        let c = obs::registry().counter("test_obs.conc.counter");
+        let h = obs::registry().histogram("test_obs.conc.histo");
+        for i in 0..PER_WORKER {
+            c.inc();
+            h.record(w as u64 * PER_WORKER + i);
+        }
+    });
+
+    let total = WORKERS as u64 * PER_WORKER;
+    assert_eq!(c.get(), total, "no lost counter increments");
+    let s = h.snapshot();
+    assert_eq!(s.count, total, "no lost histogram records");
+    assert_eq!(
+        s.counts.iter().sum::<u64>(),
+        total,
+        "bucket counts account for every record"
+    );
+    // sum of 0..total recorded exactly once
+    assert_eq!(s.sum, total * (total - 1) / 2);
+}
+
+#[test]
+fn snapshot_then_reset_is_deterministic() {
+    let _g = guard();
+    let c = obs::registry().counter("test_obs.reset.counter");
+    let gauge = obs::registry().gauge("test_obs.reset.gauge");
+    let h = obs::registry().histogram("test_obs.reset.histo");
+    c.reset();
+    gauge.reset();
+    h.reset();
+
+    c.add(9);
+    gauge.set(-3);
+    h.record(100);
+    h.record(200);
+
+    let snap = obs::registry().snapshot();
+    assert_eq!(snap.counters["test_obs.reset.counter"], 9);
+    assert_eq!(snap.gauges["test_obs.reset.gauge"], -3);
+    assert_eq!(snap.histograms["test_obs.reset.histo"].count, 2);
+    assert_eq!(snap.histograms["test_obs.reset.histo"].sum, 300);
+
+    // a snapshot is a value: mutating after does not change it
+    c.add(1);
+    assert_eq!(snap.counters["test_obs.reset.counter"], 9);
+
+    obs::registry().reset();
+    let snap2 = obs::registry().snapshot();
+    assert_eq!(snap2.counters["test_obs.reset.counter"], 0);
+    assert_eq!(snap2.gauges["test_obs.reset.gauge"], 0);
+    assert_eq!(snap2.histograms["test_obs.reset.histo"].count, 0);
+    // registrations survive reset and cached handles stay wired up
+    c.inc();
+    assert_eq!(
+        obs::registry().snapshot().counters["test_obs.reset.counter"],
+        1
+    );
+}
+
+#[test]
+fn histogram_merge_matches_combined_recording() {
+    let _g = guard();
+    let a = obs::registry().histogram("test_obs.merge.a");
+    let b = obs::registry().histogram("test_obs.merge.b");
+    let both = obs::registry().histogram("test_obs.merge.both");
+    a.reset();
+    b.reset();
+    both.reset();
+
+    // deterministic pseudo-random values spanning many octaves
+    let mut x = 0x12345u64;
+    for i in 0..2_000u64 {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let v = x >> (x % 50); // values from full-range down to tiny
+        if i % 2 == 0 {
+            a.record(v);
+        } else {
+            b.record(v);
+        }
+        both.record(v);
+    }
+
+    let merged = a.snapshot().merge(&b.snapshot());
+    assert_eq!(merged, both.snapshot(), "merge == recording into one histogram");
+    // merge with empty is identity
+    assert_eq!(a.snapshot().merge(&HistoSnapshot::empty()), a.snapshot());
+    // quantiles of the merged shard-view match the combined view
+    let q_merged = merged.quantile(0.9);
+    let q_both = both.snapshot().quantile(0.9);
+    assert_eq!(q_merged.to_bits(), q_both.to_bits());
+}
+
+#[test]
+fn quantile_relative_error_within_bucket_contract() {
+    let _g = guard();
+    let h = obs::registry().histogram("test_obs.err.histo");
+    h.reset();
+    // record an exact arithmetic ramp; the p50 estimate (bucket midpoint)
+    // must sit within the 12.5% relative-error bound of the true median
+    for v in 1..=10_000u64 {
+        h.record(v);
+    }
+    let s = h.snapshot();
+    let true_median = 5_000.0;
+    let est = s.p50();
+    assert!(
+        (est - true_median).abs() / true_median <= 0.125 + 1e-9,
+        "p50 estimate {est} vs true {true_median}"
+    );
+    let true_p99 = 9_900.0;
+    let est99 = s.p99();
+    assert!(
+        (est99 - true_p99).abs() / true_p99 <= 0.125 + 1e-9,
+        "p99 estimate {est99} vs true {true_p99}"
+    );
+}
+
+#[test]
+fn bucket_index_stays_in_table() {
+    // pure math, no registry — belt-and-braces on the table extremes
+    for v in [0u64, 1, 7, 8, 9, 1 << 20, u64::MAX / 2, u64::MAX - 1, u64::MAX] {
+        let i = bucket_index(v);
+        assert!(i < HIST_BUCKETS, "v={v} -> bucket {i}");
+        let (lo, hi) = bucket_bounds(i);
+        assert!(lo <= v && (v < hi || hi == u64::MAX));
+    }
+}
+
+#[test]
+fn prometheus_exposition_shape() {
+    let _g = guard();
+    let c = obs::registry().counter("test_obs.prom.counter");
+    let gauge = obs::registry().gauge("test_obs.prom.gauge");
+    let h = obs::registry().histogram("test_obs.prom.histo_ns");
+    c.reset();
+    gauge.reset();
+    h.reset();
+    c.add(12);
+    gauge.set(-7);
+    h.record(5);
+    h.record(5);
+    h.record(1_000);
+
+    let text = obs::export::prometheus(&obs::registry().snapshot());
+    assert!(text.contains("# TYPE lamina_test_obs_prom_counter counter"));
+    assert!(text.contains("lamina_test_obs_prom_counter 12"));
+    assert!(text.contains("# TYPE lamina_test_obs_prom_gauge gauge"));
+    assert!(text.contains("lamina_test_obs_prom_gauge -7"));
+    assert!(text.contains("# TYPE lamina_test_obs_prom_histo_ns histogram"));
+    // value 5 is an exact unit bucket [5,6): cumulative 2 at le="6"
+    assert!(text.contains("lamina_test_obs_prom_histo_ns_bucket{le=\"6\"} 2"));
+    assert!(text.contains("lamina_test_obs_prom_histo_ns_bucket{le=\"+Inf\"} 3"));
+    assert!(text.contains("lamina_test_obs_prom_histo_ns_sum 1010"));
+    assert!(text.contains("lamina_test_obs_prom_histo_ns_count 3"));
+
+    // cumulative bucket series is monotone nondecreasing
+    let mut last = 0u64;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("lamina_test_obs_prom_histo_ns_bucket{le=\"") {
+            if rest.starts_with("+Inf") {
+                continue;
+            }
+            let cum: u64 = rest.split("} ").nth(1).unwrap().parse().unwrap();
+            assert!(cum >= last, "cumulative buckets must not decrease");
+            last = cum;
+        }
+    }
+    assert_eq!(last, 3);
+}
+
+#[test]
+fn serve_metric_names_are_registered_by_metrics_module() {
+    let _g = guard();
+    // ServeMetrics streams into these registry names at record time; a
+    // rename there without updating dashboards/docs should fail loudly
+    let mut m = lamina::metrics::ServeMetrics::new();
+    m.record_request(0.010, Some(0.025), 8);
+    m.record_rejection();
+    let snap = obs::registry().snapshot();
+    for name in ["serve.queue_ns", "serve.ttft_ns"] {
+        assert!(
+            snap.histograms.contains_key(name),
+            "missing histogram {name}"
+        );
+    }
+    assert!(snap.counters.contains_key("serve.rejected"));
+    assert!(snap.histograms["serve.queue_ns"].count >= 1);
+}

@@ -1,0 +1,242 @@
+//! Golden tests for the tracing pipeline: the artifact-free smoke session
+//! (`run_trace_smoke` — a real attention worker + native kernel over the
+//! in-process transport) must emit a well-formed, Perfetto-parseable trace
+//! with monotone timestamps and properly nested spans, on the happy path
+//! AND when the worker dies mid-session.
+//!
+//! The trace sink is process-global, so every test here serializes through
+//! one mutex and fully owns start()/stop() while holding it.
+
+use std::sync::Mutex;
+
+use lamina::obs::{self, trace, ArgVal, TraceEvent};
+use lamina::util::json::Json;
+use lamina::workers::run_trace_smoke;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Check stack discipline per track: sorted by start time, every span must
+/// either nest inside the enclosing open span or start at/after its end —
+/// partial overlap (`a.ts < b.ts < a.end < b.end`) is malformed.
+fn assert_nested(events: &[TraceEvent]) {
+    let mut tracks: Vec<u64> = events.iter().map(|e| e.track).collect();
+    tracks.sort_unstable();
+    tracks.dedup();
+    // float tolerance: span end timestamps are measured out-of-order with
+    // sibling starts, so allow a microsecond of clock slop
+    const TOL: f64 = 1.0;
+    for t in tracks {
+        let mut spans: Vec<&TraceEvent> =
+            events.iter().filter(|e| e.track == t && e.ph == 'X').collect();
+        spans.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us));
+        let mut stack: Vec<f64> = Vec::new(); // open span end times
+        for s in spans {
+            assert!(s.dur_us >= 0.0, "negative duration on {}", s.name);
+            let end = s.ts_us + s.dur_us;
+            while let Some(&top) = stack.last() {
+                if s.ts_us >= top - TOL {
+                    stack.pop(); // enclosing span already closed
+                } else {
+                    assert!(
+                        end <= top + TOL,
+                        "span {} [{}, {end}] straddles enclosing span end {top} on track {t}",
+                        s.name,
+                        s.ts_us
+                    );
+                    break;
+                }
+            }
+            stack.push(end);
+        }
+    }
+}
+
+fn cats_of(events: &[TraceEvent]) -> Vec<&'static str> {
+    let mut cats: Vec<&'static str> = events.iter().map(|e| e.cat).collect();
+    cats.sort_unstable();
+    cats.dedup();
+    cats
+}
+
+#[test]
+fn smoke_session_emits_well_formed_trace() {
+    let _g = guard();
+    trace::start();
+    let report = run_trace_smoke(8, false).expect("smoke session");
+    let events = trace::stop();
+
+    assert_eq!(report.decode_steps, 8);
+    assert!(!report.worker_died);
+    assert_eq!(trace::dropped(), 0);
+    assert!(!events.is_empty());
+
+    // spans are recorded at Drop, so per-track capture order is end-time
+    // order (an outer span lands AFTER its children); the monotone clock
+    // makes those end stamps nondecreasing within a track
+    let mut last_end = std::collections::BTreeMap::new();
+    for e in &events {
+        let end = e.ts_us + e.dur_us;
+        let prev = last_end.entry(e.track).or_insert(f64::NEG_INFINITY);
+        assert!(
+            end >= *prev,
+            "event {} closes out of order on track {}",
+            e.name,
+            e.track
+        );
+        *prev = end;
+    }
+
+    assert_nested(&events);
+
+    // the full vocabulary shows up: leader phases, wire sends/recvs, the
+    // worker's message handling, and the native kernel underneath
+    let cats = cats_of(&events);
+    for want in ["leader", "wire", "worker", "kernel"] {
+        assert!(cats.contains(&want), "missing category {want} in {cats:?}");
+    }
+    // worker spans land on the worker's own track (shard 0 -> track 1)
+    assert!(
+        events.iter().any(|e| e.cat == "worker" && e.track == 1),
+        "worker spans must use track 1"
+    );
+    assert!(
+        events.iter().any(|e| e.cat == "kernel" && e.track == 1),
+        "kernel spans run on the worker thread"
+    );
+    // step-trace instants carry the structured scheduler view
+    let steps: Vec<&TraceEvent> =
+        events.iter().filter(|e| e.name == "step-trace").collect();
+    assert_eq!(steps.len(), 8, "one instant per decode iteration");
+    for s in &steps {
+        assert_eq!(s.ph, 'i');
+        assert!(s.args.iter().any(|(k, _)| *k == "slots"));
+        assert!(s
+            .args
+            .iter()
+            .any(|(k, v)| *k == "seq_bucket" && *v == ArgVal::I(64)));
+    }
+}
+
+#[test]
+fn chrome_trace_export_parses_and_names_tracks() {
+    let _g = guard();
+    trace::start();
+    run_trace_smoke(4, false).expect("smoke session");
+    let events = trace::stop();
+
+    let doc = Json::parse(&obs::export::chrome_trace(&events)).expect("valid JSON");
+    let evs = doc.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(evs.len() > events.len(), "events + thread_name metadata");
+
+    let mut names = Vec::new();
+    for e in evs {
+        match e.get("ph").as_str().unwrap() {
+            "M" => {
+                assert_eq!(e.get("name").as_str(), Some("thread_name"));
+                names.push(e.get("args").get("name").as_str().unwrap().to_string());
+            }
+            "X" => {
+                assert!(e.get("dur").as_f64().unwrap() >= 0.0);
+                assert!(e.get("ts").as_f64().is_some());
+                assert_eq!(e.get("pid").as_i64(), Some(1));
+            }
+            "i" => {
+                assert_eq!(e.get("s").as_str(), Some("t"), "thread-scoped instant");
+            }
+            other => panic!("unexpected phase {other}"),
+        }
+    }
+    assert!(names.contains(&"leader".to_string()));
+    assert!(names.contains(&"attn-worker-0".to_string()));
+
+    // the JSONL stream parses line-by-line too
+    let jsonl = obs::export::jsonl(&events);
+    let mut lines = 0;
+    for line in jsonl.lines() {
+        let e = Json::parse(line).expect("valid JSONL line");
+        assert!(e.get("name").as_str().is_some());
+        lines += 1;
+    }
+    assert_eq!(lines, events.len());
+}
+
+#[test]
+fn worker_death_truncates_cleanly() {
+    let _g = guard();
+    trace::start();
+    let report = run_trace_smoke(8, true).expect("kill session still returns Ok");
+    let events = trace::stop();
+
+    assert!(report.worker_died, "poisoned protocol must kill the worker");
+    assert!(report.decode_steps < 8, "session was cut short");
+    assert!(!events.is_empty());
+    // the truncated trace is still structurally sound: parseable export,
+    // nested spans, worker/kernel activity present up to the death point
+    assert_nested(&events);
+    let cats = cats_of(&events);
+    for want in ["leader", "wire", "worker", "kernel"] {
+        assert!(cats.contains(&want), "missing category {want} after death");
+    }
+    Json::parse(&obs::export::chrome_trace(&events)).expect("truncated trace parses");
+}
+
+#[test]
+fn panicking_scope_still_records_its_span() {
+    let _g = guard();
+    trace::start();
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {})); // keep the test log quiet
+    let r = std::panic::catch_unwind(|| {
+        let _sp = obs::span("leader", "doomed").arg("step", 1);
+        panic!("mid-span failure");
+    });
+    std::panic::set_hook(prev);
+    assert!(r.is_err());
+    let events = trace::stop();
+    let doomed = events
+        .iter()
+        .find(|e| e.name == "doomed")
+        .expect("span closed during unwinding");
+    assert_eq!(doomed.ph, 'X');
+    assert!(doomed.dur_us >= 0.0);
+    assert!(doomed.args.iter().any(|(k, v)| *k == "step" && *v == ArgVal::I(1)));
+}
+
+#[test]
+fn disabled_tracing_records_nothing() {
+    let _g = guard();
+    // make sure we're stopped, then emit under disabled tracing
+    let _ = trace::stop();
+    {
+        let _sp = obs::span("leader", "invisible").arg("x", 1);
+        obs::instant("leader", "also-invisible", vec![]);
+    }
+    assert!(!trace::enabled());
+    // a later session must not see the disabled-time events
+    trace::start();
+    {
+        let _sp = obs::span("leader", "visible");
+    }
+    let events = trace::stop();
+    assert!(events.iter().all(|e| e.name != "invisible"));
+    assert!(events.iter().all(|e| e.name != "also-invisible"));
+    assert_eq!(events.iter().filter(|e| e.name == "visible").count(), 1);
+}
+
+#[test]
+fn spans_dropped_after_stop_are_discarded() {
+    let _g = guard();
+    trace::start();
+    let sp = obs::span("leader", "straggler");
+    let events = trace::stop();
+    drop(sp); // worker draining after shutdown: silently discarded
+    assert!(events.iter().all(|e| e.name != "straggler"));
+    // and the next session stays clean
+    trace::start();
+    let next = trace::stop();
+    assert!(next.iter().all(|e| e.name != "straggler"));
+}

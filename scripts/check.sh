@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
-# Repo-wide verification gate: release build, full test suite, the bench
-# suite in quick mode (which regenerates rust/BENCH_decode.json with codec
-# GB/s, TCP-loopback RTT, KV-gather and native-kernel decode-step rows),
-# and the bench regression guard (decode-path ns/iter must stay within 20%
-# of rust/BENCH_baseline.json and per-step copied bytes may never grow —
-# in particular the paged-native decode step must stay at ZERO copied KV
-# bytes).
+# Repo-wide verification gate: release build, full test suite, the obs
+# trace-emission smoke (an artifact-free scripted session must export a
+# Perfetto-parseable trace — happy path AND worker-death truncation), the
+# bench suite in quick mode (which regenerates rust/BENCH_decode.json with
+# codec GB/s, TCP-loopback RTT, KV-gather, native-kernel decode-step and
+# obs-overhead rows), and the bench regression guard (decode-path ns/iter
+# must stay within 20% of rust/BENCH_baseline.json and per-step copied
+# bytes may never grow — in particular the paged-native decode step must
+# stay at ZERO copied KV bytes).
 #
 # Usage: scripts/check.sh [--no-bench]
 set -euo pipefail
@@ -16,6 +18,16 @@ cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== trace-emission smoke (exporter + validator) =="
+TRACE_TMP="$(mktemp -d)"
+trap 'rm -rf "$TRACE_TMP"' EXIT
+target/release/lamina trace-smoke --steps 6 --trace-out "$TRACE_TMP/trace.json"
+python3 scripts/validate_trace.py "$TRACE_TMP/trace.json"
+# a worker dying mid-session must still leave a well-formed (truncated) trace
+target/release/lamina trace-smoke --steps 6 --kill-worker \
+  --trace-out "$TRACE_TMP/trace-kill.json"
+python3 scripts/validate_trace.py "$TRACE_TMP/trace-kill.json"
 
 if [[ "${1:-}" != "--no-bench" ]]; then
   echo "== cargo bench (LAMINA_BENCH_QUICK=1) =="

@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Validate a Lamina Chrome trace_event file (``lamina ... --trace-out``).
+
+Checks the structural contract Perfetto/chrome://tracing rely on, so CI
+catches a malformed exporter before a human ever loads a trace:
+
+* the file is valid JSON with a non-empty ``traceEvents`` array;
+* every event carries ``name``/``ph``/``ts``/``pid``/``tid`` with sane
+  types; complete events (``ph == "X"``) carry a non-negative ``dur``;
+* per ``tid`` (obs track = one thread), complete spans obey stack
+  discipline: sorted by start time, a span either nests inside the
+  enclosing open span or starts after it ends — partial overlap means the
+  span tree is corrupt;
+* spans are recorded at drop time, so per-track *end* timestamps must be
+  nondecreasing in capture order (the monotone-clock invariant);
+* ``thread_name`` metadata names every track that has events;
+* the expected category vocabulary is present (``--require-cats``,
+  default ``leader,wire,worker,kernel`` — pass an empty string to skip,
+  e.g. for single-process traces with no worker).
+
+Usage: validate_trace.py TRACE.json [--require-cats leader,wire,...]
+
+Exits non-zero with a description of the first violation. Stdlib only.
+"""
+
+import json
+import sys
+
+# span end-vs-sibling-start measurements come from separate clock reads;
+# allow a microsecond of slop before calling the nesting corrupt
+TOL_US = 1.0
+
+DEFAULT_CATS = "leader,wire,worker,kernel"
+
+
+def fail(msg):
+    print(f"validate_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    opts = [a for a in sys.argv[1:] if a.startswith("--")]
+    if len(args) != 1:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    require_cats = DEFAULT_CATS
+    for o in opts:
+        if o.startswith("--require-cats"):
+            require_cats = o.split("=", 1)[1] if "=" in o else ""
+        else:
+            fail(f"unknown option {o}")
+
+    path = args[0]
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: {e}")
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("traceEvents missing or empty")
+
+    named_tracks = set()
+    tracks = {}  # tid -> list of (ts, dur, name) complete spans, capture order
+    last_end = {}  # tid -> last recorded end timestamp (capture order)
+    cats = set()
+    n_spans = 0
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            fail(f"event {i} is not an object")
+        ph = e.get("ph")
+        name = e.get("name")
+        if not isinstance(name, str) or not name:
+            fail(f"event {i} has no name")
+        if not isinstance(e.get("ts"), (int, float)):
+            fail(f"event {i} ({name}) has no numeric ts")
+        if "pid" not in e or "tid" not in e:
+            fail(f"event {i} ({name}) missing pid/tid")
+        tid = e["tid"]
+        if ph == "M":
+            if name == "thread_name":
+                named_tracks.add(tid)
+            continue
+        if "cat" in e:
+            cats.add(e["cat"])
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                fail(f"span {name} (event {i}) has bad dur {dur!r}")
+            tracks.setdefault(tid, []).append((e["ts"], dur, name))
+            end = e["ts"] + dur
+            prev = last_end.get(tid)
+            if prev is not None and end < prev - TOL_US:
+                fail(
+                    f"track {tid}: span {name} ends at {end} before the "
+                    f"previously recorded end {prev} (drop order broken)"
+                )
+            last_end[tid] = max(prev, end) if prev is not None else end
+            n_spans += 1
+        elif ph == "i":
+            if e.get("s") not in (None, "t", "p", "g"):
+                fail(f"instant {name} has bad scope {e.get('s')!r}")
+        else:
+            fail(f"event {i} ({name}) has unsupported phase {ph!r}")
+
+    if n_spans == 0:
+        fail("no complete ('X') spans in trace")
+
+    for tid, spans in tracks.items():
+        if tid not in named_tracks:
+            fail(f"track {tid} has spans but no thread_name metadata")
+        # stack discipline per track: sort by start, keep a stack of open
+        # span end times; a span must close before its enclosing span does
+        spans = sorted(spans, key=lambda s: s[0])
+        stack = []
+        for ts, dur, name in spans:
+            end = ts + dur
+            while stack and ts >= stack[-1] - TOL_US:
+                stack.pop()
+            if stack and end > stack[-1] + TOL_US:
+                fail(
+                    f"track {tid}: span {name} [{ts}, {end}] straddles the "
+                    f"enclosing span's end {stack[-1]}"
+                )
+            stack.append(end)
+
+    if require_cats:
+        want = {c.strip() for c in require_cats.split(",") if c.strip()}
+        missing = want - cats
+        if missing:
+            fail(f"missing categories {sorted(missing)} (have {sorted(cats)})")
+
+    print(
+        f"validate_trace: OK: {len(events)} events, {n_spans} spans on "
+        f"{len(tracks)} track(s), cats {sorted(cats)}"
+    )
+
+
+if __name__ == "__main__":
+    main()
