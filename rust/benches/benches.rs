@@ -144,6 +144,7 @@ fn main() {
     bench_kernels(&mut b, &mut rows);
     bench_host_staging(&mut b, &mut rows);
     bench_obs(&mut b, &mut rows);
+    bench_failover(&mut b, &mut rows);
     if artifacts_dir().join("manifest.json").exists() {
         bench_runtime(&mut b);
         bench_pipeline(&mut b, &mut rows);
@@ -958,6 +959,96 @@ fn bench_obs(b: &mut Bench, rows: &mut Vec<Json>) {
         instr.1,
         (instr.1 / raw.1.max(1.0) - 1.0) * 100.0
     );
+}
+
+// ---- failover: worker death → recovery cost (artifact-free) ---------------
+
+/// Whole-session chaos benchmark: a scripted multi-request session with a
+/// worker link killed mid-decode, auto-recovery on. Each iteration runs
+/// detection → preempt-replay-rebuild → drain and must end bit-identical
+/// to the fault-free golden pass with zero leaked KV blocks — so the
+/// `failover/recovery` row times *verified* recoveries, not just survived
+/// ones. Detection latency and tokens replayed come from the session's own
+/// `failover.*` registry deltas; `recovered_tokens_per_s` is the headline
+/// end-to-end rate (all generated tokens over faulted wall-clock).
+fn bench_failover(b: &mut Bench, rows: &mut Vec<Json>) {
+    use lamina::net::FaultPlan;
+    use lamina::workers::{run_chaos, ChaosCfg};
+
+    // golden pass: the bit-identity reference and the healthy-path cost of
+    // the same session with fault injection compiled in but disabled
+    let mut cfg = ChaosCfg::default();
+    let golden = run_chaos(&cfg).expect("golden chaos session");
+    assert_eq!(golden.worker_deaths, 0, "golden run must be fault-free");
+    assert_eq!(golden.leaked_blocks, 0);
+    let session_tokens: usize = golden.outputs.iter().map(Vec::len).sum();
+
+    // hand-measured whole-session iterations (each spawns worker threads
+    // and a replacement; Bench::run's calibration loop would over-sample)
+    let iters = if b.is_quick() { 3 } else { 12 };
+
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let r = run_chaos(&cfg).expect("healthy chaos session");
+        assert_eq!(r.outputs, golden.outputs);
+    }
+    let healthy_ns = t0.elapsed().as_secs_f64() * 1e9 / iters as f64;
+
+    // kill worker 1's link mid-decode (per link: ~6 prefill sends, then 4
+    // per decode iteration — send #20 lands in decode iteration ~4 of 7)
+    cfg.fault_plan = Some(FaultPlan::parse("worker=1,kill-send=20").expect("fault plan"));
+    let det = lamina::obs::registry().histogram("failover.detection_ns");
+    let det0 = det.snapshot();
+    let mut sum_ns = 0.0f64;
+    let mut min_ns = f64::INFINITY;
+    let mut deaths = 0u64;
+    let mut replayed = 0u64;
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        let r = run_chaos(&cfg).expect("killed session must auto-recover");
+        let per = t0.elapsed().as_secs_f64() * 1e9;
+        assert_eq!(r.outputs, golden.outputs, "recovered output must be bit-identical");
+        assert_eq!(r.leaked_blocks, 0, "recovery leaked KV blocks");
+        assert!(r.worker_deaths >= 1 && r.recoveries >= 1, "kill schedule never fired");
+        deaths += r.worker_deaths;
+        replayed += r.tokens_replayed;
+        sum_ns += per;
+        min_ns = min_ns.min(per);
+    }
+    let faulted = (sum_ns / iters as f64, min_ns);
+    let det1 = det.snapshot();
+    let detection_ns = if det1.count > det0.count {
+        (det1.sum - det0.sum) as f64 / (det1.count - det0.count) as f64
+    } else {
+        0.0
+    };
+
+    eprintln!(
+        "failover/recovery: healthy session {:.2} ms → killed+recovered {:.2} ms \
+         ({:.1} deaths/iter, {:.1} tokens replayed/iter, detection {:.0} ns)",
+        healthy_ns / 1e6,
+        faulted.0 / 1e6,
+        deaths as f64 / iters as f64,
+        replayed as f64 / iters as f64,
+        detection_ns
+    );
+
+    rows.push(Json::obj(vec![
+        ("name", Json::str("failover/recovery")),
+        ("ns_per_iter", Json::num(faulted.0)),
+        ("ns_per_iter_min", Json::num(faulted.1)),
+        ("host_copy_bytes_per_iter", Json::num(0.0)),
+        ("healthy_session_ns", Json::num(healthy_ns)),
+        ("detection_ns_mean", Json::num(detection_ns)),
+        (
+            "tokens_replayed_per_iter",
+            Json::num(replayed as f64 / iters as f64),
+        ),
+        (
+            "recovered_tokens_per_s",
+            Json::num(session_tokens as f64 / (faulted.0.max(1.0) * 1e-9)),
+        ),
+    ]));
 }
 
 // ---- PJRT runtime (real artifacts) ----------------------------------------

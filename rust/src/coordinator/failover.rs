@@ -1,81 +1,191 @@
-//! Fault tolerance (paper §5):
+//! Failure detection and recovery policy for the disaggregated decode
+//! path (paper §5).
 //!
-//! * **model workers are stateless** — all request state (the KV caches)
-//!   lives on the attention workers, so a failed model worker is replaced by
-//!   a spare and decoding continues without losing progress;
-//! * **attention-worker failure** loses KV shards — the cache is rebuilt by
-//!   re-running the prompt + already-generated tokens (kept in the service
-//!   front-end) through the prefill path on the surviving pool.
+//! The paper's claim: model-attention disaggregation stays viable under
+//! component failure. **Model workers are stateless** — all request state
+//! (the KV caches) lives on the attention workers, so a failed leader is
+//! replaced and the front-end replays from its token history (pinned by
+//! `model_worker_failover_is_stateless` in `e2e_pipeline`). An
+//! **attention-worker failure** loses that worker's KV head-shard of
+//! *every* live request; the leader rebuilds it by replaying each
+//! request's effective prompt (prompt ⧺ tokens generated so far) through
+//! the ordinary chunked-prefill path onto a replacement worker.
+//!
+//! This module is the *policy* half of that story — the mechanism lives
+//! in [`crate::workers::leader`], which drives real links. The live
+//! protocol, end to end:
+//!
+//! 1. **Deadline** — every leader-side blocking receive runs under
+//!    [`HealthPolicy::recv_deadline`] instead of blocking forever.
+//! 2. **Retry/backoff** — a deadline expiry alone does not condemn a
+//!    worker (the wire may just be slow): [`HealthTracker`] allows
+//!    [`HealthPolicy::recv_retries`] further attempts, each deadline
+//!    scaled by [`HealthPolicy::backoff`], before giving up. Any healthy
+//!    message resets the worker's strike count. Fatal link errors —
+//!    [`TransportError::Disconnected`], [`TransportError::Codec`] (framing
+//!    is unrecoverable) — and `WireMsg::WorkerError` reports skip the
+//!    retry ladder entirely.
+//! 3. **Declare dead** — the failure is classified as a [`DeathCause`]
+//!    and surfaced as a typed [`WorkerDeath`] (never a panic; the
+//!    `failover.worker_deaths` / `failover.detection_ns` metrics record
+//!    it).
+//! 4. **Preempt-replay-rebuild** — the leader marks the shard lost,
+//!    preempts every live request through the scheduler's promoted-token
+//!    replay (PR 6 machinery: requeued at the queue front, effective
+//!    prompt = prompt ⧺ generated-so-far), respawns a replacement worker,
+//!    discards in-flight traffic on the surviving links (a `KvStatsReq`
+//!    round-trip is the FIFO barrier), and resumes serving. Re-prefill
+//!    happens through the normal admission path; recovered output is
+//!    bit-identical to an unfailed run on the native backend (asserted by
+//!    the `net_fault` chaos suite and the scripted `fault-smoke`).
+//!
+//! The analytical half ([`kv_rebuild_time`], [`lost_fraction`]) keeps the
+//! paper-model cost estimates: rebuild is prefill-shaped and takes
+//! seconds, not hours, which is what makes discard-and-replay a sane
+//! policy at all.
+
+use std::time::Duration;
 
 use crate::devices::roofline::mtime;
 use crate::devices::specs::{DeviceSpec, LlmSpec};
+use crate::net::TransportError;
 
-/// Worker health state tracked by the global scheduler.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum WorkerState {
-    Healthy,
-    Failed,
-    /// Replacement spun up, KV rebuild in progress (attention workers only).
-    Rebuilding,
+/// Leader-side health policy knobs (CLI: `--recv-deadline-ms`,
+/// `--recv-retries`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthPolicy {
+    /// Per-attempt receive deadline for worker replies.
+    pub recv_deadline: Duration,
+    /// Extra attempts after the first expiry before declaring death.
+    pub recv_retries: u32,
+    /// Deadline multiplier per retry (exponential backoff).
+    pub backoff: f64,
 }
 
-/// Pool membership + spare tracking for one worker class.
-#[derive(Debug)]
-pub struct WorkerPool {
-    pub name: &'static str,
-    states: Vec<WorkerState>,
-    spares: usize,
+impl Default for HealthPolicy {
+    fn default() -> HealthPolicy {
+        HealthPolicy {
+            // generous against CI scheduling noise; a real deployment
+            // would tune this near the p99.9 step latency
+            recv_deadline: Duration::from_secs(5),
+            recv_retries: 2,
+            backoff: 2.0,
+        }
+    }
 }
 
+impl HealthPolicy {
+    /// Deadline for the `attempt`-th receive try (0-based): the base
+    /// deadline scaled by `backoff^attempt`, saturating sanely.
+    pub fn attempt_deadline(&self, attempt: u32) -> Duration {
+        let scale = self.backoff.max(1.0).powi(attempt.min(16) as i32);
+        self.recv_deadline.mul_f64(scale)
+    }
+
+    /// Total attempts a blocking receive makes before declaring death.
+    pub fn attempts(&self) -> u32 {
+        self.recv_retries + 1
+    }
+}
+
+/// Why a worker was declared dead.
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct FailoverError(pub String);
+pub enum DeathCause {
+    /// All receive attempts timed out — the worker (or its link) hangs.
+    Hang,
+    /// The link reported the peer gone.
+    Disconnected,
+    /// The worker sent bytes that failed frame validation.
+    Corrupt,
+    /// The worker reported a fatal error of its own (`WorkerError`).
+    Protocol(String),
+}
 
-impl std::fmt::Display for FailoverError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{}", self.0)
+impl DeathCause {
+    /// Stable low-cardinality label (metrics / spans).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeathCause::Hang => "hang",
+            DeathCause::Disconnected => "disconnected",
+            DeathCause::Corrupt => "corrupt",
+            DeathCause::Protocol(_) => "protocol",
+        }
+    }
+
+    /// Classify a transport error (used once retries are exhausted for
+    /// `TimedOut`; fatal errors classify immediately).
+    pub fn of_transport(e: &TransportError) -> DeathCause {
+        match e {
+            TransportError::TimedOut => DeathCause::Hang,
+            TransportError::Disconnected { .. } => DeathCause::Disconnected,
+            TransportError::Codec(_) => DeathCause::Corrupt,
+            TransportError::Io { msg, .. } => DeathCause::Protocol(msg.clone()),
+        }
     }
 }
 
-impl std::error::Error for FailoverError {}
-
-impl WorkerPool {
-    pub fn new(name: &'static str, workers: usize, spares: usize) -> Self {
-        WorkerPool { name, states: vec![WorkerState::Healthy; workers], spares }
-    }
-
-    pub fn healthy(&self) -> usize {
-        self.states.iter().filter(|s| **s == WorkerState::Healthy).count()
-    }
-
-    pub fn size(&self) -> usize {
-        self.states.len()
-    }
-
-    pub fn state(&self, i: usize) -> WorkerState {
-        self.states[i]
-    }
-
-    pub fn fail(&mut self, i: usize) {
-        self.states[i] = WorkerState::Failed;
-    }
-
-    /// Swap in a spare for a failed worker. Model workers become healthy
-    /// immediately (stateless); attention workers enter Rebuilding.
-    pub fn replace(&mut self, i: usize, stateless: bool) -> Result<(), FailoverError> {
-        if self.states[i] != WorkerState::Failed {
-            return Err(FailoverError(format!("{} worker {i} is not failed", self.name)));
+impl std::fmt::Display for DeathCause {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeathCause::Protocol(msg) => write!(f, "protocol: {msg}"),
+            other => f.write_str(other.name()),
         }
-        if self.spares == 0 {
-            return Err(FailoverError(format!("{} pool out of spares", self.name)));
-        }
-        self.spares -= 1;
-        self.states[i] = if stateless { WorkerState::Healthy } else { WorkerState::Rebuilding };
-        Ok(())
+    }
+}
+
+/// Typed "worker `worker` is dead" failure the leader propagates instead
+/// of panicking; `step()` catches it and runs recovery.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerDeath {
+    pub worker: usize,
+    pub cause: DeathCause,
+}
+
+impl std::fmt::Display for WorkerDeath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "attention worker {} declared dead: {}", self.worker, self.cause)
+    }
+}
+
+impl std::error::Error for WorkerDeath {}
+
+/// Per-worker strike bookkeeping for the retry ladder. One tracker per
+/// worker link lives on the leader; strikes accumulate across *separate*
+/// receives too (a worker that limps from deadline to deadline without
+/// ever completing a step is also dead, even if each call squeaks by).
+#[derive(Debug, Clone, Default)]
+pub struct HealthTracker {
+    strikes: u32,
+}
+
+/// Verdict of [`HealthTracker::on_timeout`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Try again with [`HealthPolicy::attempt_deadline`] of the returned
+    /// attempt number.
+    Retry(u32),
+    /// Retries exhausted: declare the worker dead.
+    Dead,
+}
+
+impl HealthTracker {
+    /// A message arrived: the worker is alive, forget prior strikes.
+    pub fn on_alive(&mut self) {
+        self.strikes = 0;
     }
 
-    pub fn finish_rebuild(&mut self, i: usize) {
-        assert_eq!(self.states[i], WorkerState::Rebuilding);
-        self.states[i] = WorkerState::Healthy;
+    /// A receive deadline expired; decide whether to retry or declare.
+    pub fn on_timeout(&mut self, policy: &HealthPolicy) -> Verdict {
+        self.strikes += 1;
+        if self.strikes >= policy.attempts() {
+            Verdict::Dead
+        } else {
+            Verdict::Retry(self.strikes)
+        }
+    }
+
+    pub fn strikes(&self) -> u32 {
+        self.strikes
     }
 }
 
@@ -111,39 +221,68 @@ pub fn lost_fraction(workers: usize) -> f64 {
 mod tests {
     use super::*;
     use crate::devices::specs::{H100, LLAMA3_70B};
+    use crate::net::CodecError;
 
     #[test]
-    fn model_worker_swap_is_instant() {
-        let mut pool = WorkerPool::new("model", 2, 1);
-        pool.fail(0);
-        assert_eq!(pool.healthy(), 1);
-        pool.replace(0, true).unwrap();
-        assert_eq!(pool.healthy(), 2);
-        assert_eq!(pool.state(0), WorkerState::Healthy);
+    fn backoff_ladder_scales_deadlines() {
+        let p = HealthPolicy {
+            recv_deadline: Duration::from_millis(100),
+            recv_retries: 2,
+            backoff: 2.0,
+        };
+        assert_eq!(p.attempts(), 3);
+        assert_eq!(p.attempt_deadline(0), Duration::from_millis(100));
+        assert_eq!(p.attempt_deadline(1), Duration::from_millis(200));
+        assert_eq!(p.attempt_deadline(2), Duration::from_millis(400));
+        // backoff < 1 never shrinks the deadline
+        let flat = HealthPolicy { backoff: 0.5, ..p };
+        assert_eq!(flat.attempt_deadline(3), Duration::from_millis(100));
     }
 
     #[test]
-    fn attention_worker_rebuilds() {
-        let mut pool = WorkerPool::new("attn", 4, 1);
-        pool.fail(2);
-        pool.replace(2, false).unwrap();
-        assert_eq!(pool.state(2), WorkerState::Rebuilding);
-        assert_eq!(pool.healthy(), 3);
-        pool.finish_rebuild(2);
-        assert_eq!(pool.healthy(), 4);
+    fn tracker_retries_then_declares_then_resets() {
+        let p = HealthPolicy {
+            recv_deadline: Duration::from_millis(10),
+            recv_retries: 2,
+            backoff: 1.0,
+        };
+        let mut t = HealthTracker::default();
+        assert_eq!(t.on_timeout(&p), Verdict::Retry(1));
+        assert_eq!(t.on_timeout(&p), Verdict::Retry(2));
+        assert_eq!(t.on_timeout(&p), Verdict::Dead);
+        t.on_alive();
+        assert_eq!(t.strikes(), 0);
+        assert_eq!(t.on_timeout(&p), Verdict::Retry(1));
     }
 
     #[test]
-    fn no_spares_errors() {
-        let mut pool = WorkerPool::new("model", 2, 0);
-        pool.fail(1);
-        assert!(pool.replace(1, true).is_err());
+    fn zero_retries_declares_immediately() {
+        let p = HealthPolicy {
+            recv_deadline: Duration::from_millis(10),
+            recv_retries: 0,
+            backoff: 1.0,
+        };
+        let mut t = HealthTracker::default();
+        assert_eq!(t.on_timeout(&p), Verdict::Dead);
     }
 
     #[test]
-    fn replace_healthy_rejected() {
-        let mut pool = WorkerPool::new("model", 2, 1);
-        assert!(pool.replace(0, true).is_err());
+    fn death_causes_classify_and_label() {
+        assert_eq!(DeathCause::of_transport(&TransportError::TimedOut), DeathCause::Hang);
+        assert_eq!(
+            DeathCause::of_transport(&TransportError::Disconnected { mid_frame: true }),
+            DeathCause::Disconnected
+        );
+        assert_eq!(
+            DeathCause::of_transport(&TransportError::Codec(CodecError::BadChecksum {
+                want: 1,
+                got: 2
+            })),
+            DeathCause::Corrupt
+        );
+        let d = WorkerDeath { worker: 3, cause: DeathCause::Hang };
+        assert_eq!(d.to_string(), "attention worker 3 declared dead: hang");
+        assert_eq!(DeathCause::Protocol("x".into()).name(), "protocol");
     }
 
     #[test]

@@ -46,6 +46,13 @@ real pipeline (tiny model, PJRT end-to-end):
           attention worker) emitting a full leader/wire/worker/kernel span
           tree: --steps N, --trace-out FILE, --kill-worker exercises the
           mid-session worker-death drop-safety path
+  fault-smoke  artifact-free chaos/failover session (real scheduler + real
+          native attention workers, deterministic pseudo-model): runs a
+          golden pass, then the same session under --fault-plan, and
+          asserts recovered output is bit-identical with zero leaked KV
+          blocks; prints the failover.* metrics. Flags: --transport,
+          --fault-plan PLAN, --no-recover (typed failure instead of
+          recovery), --workers N (1|2|4)
 
 flags:
   --requests N     trace subsample size for simulations (default 1000)
@@ -94,6 +101,21 @@ flags:
                    registry after the serve report
   --kill-worker    trace-smoke only: kill the attention worker mid-session
                    (drop-safety exercise; the trace must stay well-formed)
+  --fault-plan P   deterministic fault schedule for the leader↔worker
+                   links, comma-separated key=value pairs: seed=N,
+                   worker=I (arm one link; default all), kill-send=N /
+                   kill-recv=N (sever the link at the Nth operation),
+                   drop=P (per-send loss probability — the message
+                   vanishes and the link dies with it), corrupt=P
+                   (per-recv frame corruption), delay-us=N. Zero cost
+                   when absent (links are never wrapped)
+  --recv-deadline-ms N  per-attempt worker recv deadline before a retry
+                   strike (default 5000)
+  --recv-retries N timeouts tolerated before declaring a worker dead
+                   (default 2; each retry's deadline doubles)
+  --no-recover     disable automatic worker-death recovery: the first
+                   declared death surfaces as a typed error instead of
+                   preempt-replay-rebuild
 
 serve drives the request-lifecycle engine (submit → step → drain):
 requests join and leave the running batch at iteration granularity, and
@@ -106,7 +128,8 @@ const SPEC: &[&str] = &[
     "transport!", "attn-backend!", "admission!", "kv-budget!",
     "kv-budget-blocks!", "kv-dtype!", "prefix-cache!", "overcommit",
     "wave-driver", "step-trace", "trace-out!", "metrics-dump",
-    "kill-worker", "help",
+    "kill-worker", "fault-plan!", "recv-deadline-ms!", "recv-retries!",
+    "no-recover", "help",
 ];
 
 fn main() {
@@ -272,6 +295,14 @@ fn run(argv: &[String]) -> Result<(), String> {
                 println!("kv admission: {} deferrals (budget back-pressure)", m.deferred_admissions());
             }
             println!("attn backend: {}", pipe.attn_backend().name());
+            if m.worker_deaths() > 0 {
+                println!(
+                    "failover: {} worker death(s)  {} tokens replayed  mean recovery {}",
+                    m.worker_deaths(),
+                    m.tokens_replayed(),
+                    fmt_duration(m.mean_recovery_s())
+                );
+            }
             // measured-vs-logical wire accounting, per message class
             let transport = pipe.transport();
             let wt = m.wire_stats().total();
@@ -347,6 +378,75 @@ fn run(argv: &[String]) -> Result<(), String> {
             }
             Ok(())
         }
+        "fault-smoke" => {
+            let mut cfg = lamina::workers::ChaosCfg::default();
+            if let Some(t) = args.get("transport") {
+                cfg.transport = TransportKind::parse(t)
+                    .ok_or_else(|| format!("unknown transport '{t}' (use inproc|tcp)"))?;
+            }
+            let workers = args.usize_or("workers", cfg.workers).map_err(|e| e.to_string())?;
+            if ![1, 2, 4].contains(&workers) {
+                return Err(format!("--workers {workers}: must divide 4 KV heads (1|2|4)"));
+            }
+            cfg.workers = workers;
+            cfg.auto_recover = !args.has("no-recover");
+            parse_health(args.get("recv-deadline-ms"), args.get("recv-retries"), &mut cfg.health)?;
+            let plan = args
+                .get("fault-plan")
+                .map(lamina::net::FaultPlan::parse)
+                .transpose()?;
+
+            // golden pass: same session, no faults — the bit-identity ref
+            let golden = lamina::workers::run_chaos(&cfg).map_err(|f| f.to_string())?;
+            println!(
+                "golden: {} requests x {} tokens over {} ({} engine steps)",
+                golden.outputs.len(),
+                cfg.gen_tokens,
+                cfg.transport.name(),
+                golden.steps
+            );
+            let Some(plan) = plan else {
+                println!("no --fault-plan given: golden pass only");
+                return Ok(());
+            };
+
+            cfg.fault_plan = Some(plan);
+            match lamina::workers::run_chaos(&cfg) {
+                Ok(r) => {
+                    let identical = r.outputs == golden.outputs;
+                    println!(
+                        "faulted: {} worker death(s)  {} recovery(s)  {} tokens replayed  \
+                         {} engine steps",
+                        r.worker_deaths, r.recoveries, r.tokens_replayed, r.steps
+                    );
+                    println!(
+                        "recovered output bit-identical: {}   leaked KV blocks: {}",
+                        identical, r.leaked_blocks
+                    );
+                    print_failover_metrics();
+                    if !identical {
+                        return Err("recovered output diverged from the golden run".into());
+                    }
+                    if r.leaked_blocks != 0 {
+                        return Err(format!("{} KV blocks leaked", r.leaked_blocks));
+                    }
+                }
+                Err(f) => {
+                    println!(
+                        "faulted session aborted (typed): {}   leaked KV blocks: {}",
+                        f.death, f.leaked_blocks
+                    );
+                    print_failover_metrics();
+                    if cfg.auto_recover {
+                        return Err(format!("session failed to recover: {}", f.death));
+                    }
+                    if f.leaked_blocks != 0 {
+                        return Err(format!("{} KV blocks leaked on abort", f.leaked_blocks));
+                    }
+                }
+            }
+            Ok(())
+        }
         id => {
             let j = figures::run(id, n_requests, seed)?;
             figures::save(id, &j, &results_dir).map_err(|e| e.to_string())?;
@@ -394,9 +494,48 @@ fn pipeline_opts(args: &Args, artifacts: &str) -> Result<PipelineOpts, String> {
             _ => return Err(format!("unknown prefix-cache mode '{p}' (use on|off)")),
         };
     }
+    if let Some(p) = args.get("fault-plan") {
+        opts.fault_plan = Some(lamina::net::FaultPlan::parse(p)?);
+    }
+    parse_health(args.get("recv-deadline-ms"), args.get("recv-retries"), &mut opts.health)?;
+    opts.auto_recover = !args.has("no-recover");
     opts.overcommit = args.has("overcommit");
     opts.step_trace = args.has("step-trace");
     Ok(opts)
+}
+
+/// Apply the --recv-deadline-ms / --recv-retries overrides to a
+/// [`HealthPolicy`](lamina::coordinator::failover::HealthPolicy).
+fn parse_health(
+    deadline_ms: Option<&str>,
+    retries: Option<&str>,
+    health: &mut lamina::coordinator::failover::HealthPolicy,
+) -> Result<(), String> {
+    if let Some(ms) = deadline_ms {
+        let ms: u64 = ms.parse().map_err(|_| format!("bad --recv-deadline-ms '{ms}'"))?;
+        health.recv_deadline = std::time::Duration::from_millis(ms.max(1));
+    }
+    if let Some(r) = retries {
+        health.recv_retries = r.parse().map_err(|_| format!("bad --recv-retries '{r}'"))?;
+    }
+    Ok(())
+}
+
+/// Print the failover.* slice of the metrics registry snapshot (the
+/// acceptance surface: deaths and recovery latency must be visible here).
+fn print_failover_metrics() {
+    let snap = obs::registry().snapshot();
+    let text = obs::export::prometheus(&snap);
+    let mut any = false;
+    for line in text.lines() {
+        if line.contains("failover") {
+            println!("{line}");
+            any = true;
+        }
+    }
+    if !any {
+        println!("(no failover metrics recorded)");
+    }
 }
 
 /// Write a captured trace to `path` in the format its extension picks:

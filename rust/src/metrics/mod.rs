@@ -53,6 +53,27 @@ mod reg {
     cell!(kv_physical_bytes, Gauge, gauge, "kv.physical_bytes_in_use");
     cell!(kv_peak_blocks, Gauge, gauge, "kv.peak_blocks");
     cell!(kv_peak_bytes, Gauge, gauge, "kv.peak_bytes");
+    cell!(worker_deaths, Counter, counter, "failover.worker_deaths");
+    cell!(recoveries, Counter, counter, "failover.recoveries");
+    cell!(retries, Counter, counter, "failover.retries");
+    cell!(tokens_replayed, Counter, counter, "failover.tokens_replayed");
+    cell!(detection_ns, Histogram, histogram, "failover.detection_ns");
+    cell!(recovery_ns, Histogram, histogram, "failover.recovery_ns");
+}
+
+/// Registry-only publication from the leader's wire path: one receive
+/// deadline expired and the health ladder granted a retry. No session
+/// aggregate — the wire helpers run below the `ServeMetrics` layer.
+pub fn note_failover_retry() {
+    reg::retries().inc();
+}
+
+/// Registry-only publication: a worker was declared dead after
+/// `detection_s` seconds of deadline/retry ladder (or immediately on a
+/// fatal link error).
+pub fn note_worker_death(detection_s: f64) {
+    reg::worker_deaths().inc();
+    reg::detection_ns().record_secs(detection_s);
 }
 
 /// Snapshot of paged KV-cache occupancy, summed across attention workers.
@@ -168,6 +189,10 @@ pub struct ServeMetrics {
     prefix_hits: u64,
     prefix_hit_tokens: u64,
     preemptions: u64,
+    // failover aggregates: completed live recoveries in this session
+    worker_deaths: u64,
+    tokens_replayed: u64,
+    recovery_s: Welford,
     // per-request lifecycle aggregates (request-lifecycle engine)
     queue_s: Percentiles,
     ttft_s: Percentiles,
@@ -283,6 +308,34 @@ impl ServeMetrics {
     /// Requests preempted by overcommit pressure relief.
     pub fn preemptions(&self) -> u64 {
         self.preemptions
+    }
+
+    /// Record a completed worker-death recovery: the replacement is up,
+    /// every live request was preempted for replay (`tokens_replayed` =
+    /// Σ effective-prompt lengths re-prefilled), and serving resumed
+    /// after `recovery_s` seconds.
+    pub fn record_recovery(&mut self, tokens_replayed: u64, recovery_s: f64) {
+        self.worker_deaths += 1;
+        self.tokens_replayed += tokens_replayed;
+        self.recovery_s.add(recovery_s);
+        reg::recoveries().inc();
+        reg::tokens_replayed().add(tokens_replayed);
+        reg::recovery_ns().record_secs(recovery_s);
+    }
+
+    /// Worker deaths recovered from in this session.
+    pub fn worker_deaths(&self) -> u64 {
+        self.worker_deaths
+    }
+
+    /// Tokens re-prefilled by recovery replays in this session.
+    pub fn tokens_replayed(&self) -> u64 {
+        self.tokens_replayed
+    }
+
+    /// Mean seconds per recovery (0 when none happened).
+    pub fn mean_recovery_s(&self) -> f64 {
+        self.recovery_s.mean()
     }
 
     /// Record one completed request's lifecycle: queueing delay (submit →

@@ -1,0 +1,415 @@
+//! Deterministic fault injection for the leader↔worker wire.
+//!
+//! [`FaultTransport`] wraps any [`Transport`] and perturbs it according to
+//! a seed-driven [`FaultPlan`]: dropping a send (the message vanishes and
+//! the link dies with it — a peer crash with in-flight loss), delaying
+//! receives, corrupting a received frame (surfaced as a
+//! [`TransportError::Codec`] — exactly what a checksum failure on a real
+//! wire looks like), or killing the link outright after a scheduled
+//! message count. Every decision comes from a private xorshift64* stream
+//! seeded by the plan, so a given `(plan, message sequence)` always
+//! misbehaves identically — chaos tests replay bit-for-bit.
+//!
+//! Every injected fault is *detectable*: the system assumes reliable FIFO
+//! links (TCP, in-process channels), so silent loss without link failure
+//! is outside the operating contract — a swallowed `Retire` would leak KV
+//! blocks with no error anywhere. Faults here therefore always end in a
+//! typed link failure the leader's death detection can see.
+//!
+//! A *kill* drops the inner transport object. For TCP that closes the
+//! socket and for inproc it drops the `Port`, so the remote worker
+//! genuinely observes a disconnect and exits — the fault is not merely
+//! simulated on the leader side. A *corrupt* also kills the link after
+//! reporting the codec error, honoring the error-plane contract that
+//! framing is unrecoverable after a bad frame.
+//!
+//! Zero cost when disabled: the leader only wraps links when a
+//! `--fault-plan` is armed (see `PipelineOpts::fault_plan`), so the
+//! healthy hot path never pays the wrapper's atomics. Respawned
+//! replacement workers are never fault-wrapped — a plan fires once,
+//! which keeps kill-and-recover chaos runs terminating.
+//!
+//! [`DeadTransport`] is the degenerate wrapper: every operation reports
+//! the peer as gone. The leader swaps it in to script a deterministic
+//! worker death at an exact point in a session (`inject_worker_death`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::{Transport, TransportError, TransportKind, WireStats};
+use crate::obs;
+use crate::workers::messages::WireMsg;
+
+/// Seed-driven fault schedule for one (or every) worker link.
+///
+/// Parsed from the CLI `--fault-plan` spec: comma-separated `key=value`
+/// pairs, e.g. `seed=7,worker=1,kill-recv=20,drop=0.01`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// RNG seed for the probabilistic faults (drop/corrupt).
+    pub seed: u64,
+    /// Which worker index to arm; `None` arms every link.
+    pub worker: Option<usize>,
+    /// Kill the link just before the Nth send (1-based).
+    pub kill_send: Option<u64>,
+    /// Kill the link just before the Nth receive (1-based).
+    pub kill_recv: Option<u64>,
+    /// Per-send probability of dropping the message. The send reports
+    /// success but the message vanishes and the link dies with it (a
+    /// peer crash with in-flight loss) — the caller observes the failure
+    /// on a later operation, never a silent gap.
+    pub drop_p: f64,
+    /// Per-recv probability of corrupting the frame (codec error + link
+    /// kill).
+    pub corrupt_p: f64,
+    /// Fixed extra latency injected before every receive.
+    pub delay: Option<Duration>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 1,
+            worker: None,
+            kill_send: None,
+            kill_recv: None,
+            drop_p: 0.0,
+            corrupt_p: 0.0,
+            delay: None,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse the `--fault-plan` spec. Unknown keys and malformed values
+    /// are errors (a typo'd chaos plan silently doing nothing would make
+    /// a fault test vacuous).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault-plan: expected key=value, got `{part}`"))?;
+            let int = || val.parse::<u64>().map_err(|_| format!("fault-plan: bad {key}={val}"));
+            let prob = || {
+                val.parse::<f64>()
+                    .ok()
+                    .filter(|p| (0.0..=1.0).contains(p))
+                    .ok_or_else(|| format!("fault-plan: {key} must be a probability, got {val}"))
+            };
+            match key {
+                "seed" => plan.seed = int()?,
+                "worker" => plan.worker = Some(int()? as usize),
+                "kill-send" => plan.kill_send = Some(int()?.max(1)),
+                "kill-recv" => plan.kill_recv = Some(int()?.max(1)),
+                "drop" => plan.drop_p = prob()?,
+                "corrupt" => plan.corrupt_p = prob()?,
+                "delay-us" => plan.delay = Some(Duration::from_micros(int()?)),
+                _ => return Err(format!("fault-plan: unknown key `{key}`")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Should the link to `worker` be wrapped under this plan?
+    pub fn applies_to(&self, worker: usize) -> bool {
+        self.worker.map_or(true, |w| w == worker)
+    }
+
+    /// True when the plan can actually do something (a plan with no
+    /// armed fault keeps the link unwrapped).
+    pub fn is_armed(&self) -> bool {
+        self.kill_send.is_some()
+            || self.kill_recv.is_some()
+            || self.drop_p > 0.0
+            || self.corrupt_p > 0.0
+            || self.delay.is_some()
+    }
+}
+
+/// xorshift64* step; the high bits make a decent uniform stream.
+fn xorshift(state: &mut u64) -> u64 {
+    let mut x = *state;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *state = x;
+    x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+}
+
+/// Uniform draw in [0, 1).
+fn unit(state: &mut u64) -> f64 {
+    (xorshift(state) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Fault-injecting [`Transport`] wrapper. See the module docs.
+pub struct FaultTransport {
+    /// `None` once the plan killed the link.
+    inner: Mutex<Option<Box<dyn Transport>>>,
+    plan: FaultPlan,
+    rng: Mutex<u64>,
+    sends: AtomicU64,
+    recvs: AtomicU64,
+    kind: TransportKind,
+    /// Stats snapshot kept across the kill so `wire_stats()` reporting
+    /// survives the link's death.
+    last_stats: Mutex<WireStats>,
+}
+
+impl FaultTransport {
+    /// Wrap `inner` under `plan`. `salt` decorrelates the RNG streams of
+    /// links sharing one plan (the leader passes the worker index).
+    pub fn new(inner: Box<dyn Transport>, plan: FaultPlan, salt: u64) -> FaultTransport {
+        let kind = inner.kind();
+        // splitmix-style seed scramble so seed=0 / equal salts still
+        // yield distinct non-zero states
+        let mut s = plan.seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        s = (s ^ (s >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        FaultTransport {
+            inner: Mutex::new(Some(inner)),
+            plan,
+            rng: Mutex::new(s | 1),
+            sends: AtomicU64::new(0),
+            recvs: AtomicU64::new(0),
+            kind,
+            last_stats: Mutex::new(WireStats::new()),
+        }
+    }
+
+    /// Kill the link now: snapshot stats, drop the inner transport (the
+    /// peer sees a genuine disconnect), and fail the current op.
+    fn kill(&self, guard: &mut Option<Box<dyn Transport>>) -> TransportError {
+        if let Some(t) = guard.take() {
+            *obs::lock(&self.last_stats) = t.stats();
+            obs::instant("wire", "fault_kill", vec![]);
+        }
+        TransportError::Disconnected { mid_frame: false }
+    }
+
+    fn roll(&self, p: f64) -> bool {
+        p > 0.0 && unit(&mut obs::lock(&self.rng)) < p
+    }
+}
+
+impl Transport for FaultTransport {
+    fn send(&self, msg: WireMsg) -> Result<(), TransportError> {
+        let n = self.sends.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut inner = obs::lock(&self.inner);
+        if self.plan.kill_send.is_some_and(|k| n >= k) {
+            return Err(self.kill(&mut inner));
+        }
+        let Some(t) = inner.as_ref() else {
+            return Err(TransportError::Disconnected { mid_frame: false });
+        };
+        if self.roll(self.plan.drop_p) {
+            obs::instant("wire", "fault_drop", vec![]);
+            // the message vanishes AND the link dies with it: the send
+            // itself "succeeds" (async send to a peer that just crashed),
+            // the loss surfaces as a disconnect on the next operation
+            let _ = self.kill(&mut inner);
+            return Ok(());
+        }
+        t.send(msg)
+    }
+
+    fn recv(&self) -> Result<WireMsg, TransportError> {
+        // delegate through recv_timeout-with-None shape: same fault logic
+        let n = self.recvs.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(d) = self.plan.delay {
+            std::thread::sleep(d);
+        }
+        let mut inner = obs::lock(&self.inner);
+        if self.plan.kill_recv.is_some_and(|k| n >= k) {
+            return Err(self.kill(&mut inner));
+        }
+        let Some(t) = inner.as_ref() else {
+            return Err(TransportError::Disconnected { mid_frame: false });
+        };
+        let msg = t.recv()?;
+        if self.roll(self.plan.corrupt_p) {
+            let _ = self.kill(&mut inner); // framing is lost: link dies with the frame
+            return Err(TransportError::Codec(super::CodecError::BadChecksum {
+                want: 0,
+                got: !0,
+            }));
+        }
+        Ok(msg)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<WireMsg>, TransportError> {
+        let n = self.recvs.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(d) = self.plan.delay {
+            std::thread::sleep(d);
+        }
+        let mut inner = obs::lock(&self.inner);
+        if self.plan.kill_recv.is_some_and(|k| n >= k) {
+            return Err(self.kill(&mut inner));
+        }
+        let Some(t) = inner.as_ref() else {
+            return Err(TransportError::Disconnected { mid_frame: false });
+        };
+        let Some(msg) = t.recv_timeout(timeout)? else {
+            return Ok(None);
+        };
+        if self.roll(self.plan.corrupt_p) {
+            let _ = self.kill(&mut inner);
+            return Err(TransportError::Codec(super::CodecError::BadChecksum {
+                want: 0,
+                got: !0,
+            }));
+        }
+        Ok(Some(msg))
+    }
+
+    fn stats(&self) -> WireStats {
+        match obs::lock(&self.inner).as_ref() {
+            Some(t) => {
+                let st = t.stats();
+                *obs::lock(&self.last_stats) = st;
+                st
+            }
+            None => *obs::lock(&self.last_stats),
+        }
+    }
+
+    fn kind(&self) -> TransportKind {
+        self.kind
+    }
+}
+
+/// A link whose peer is already gone: every operation reports
+/// `Disconnected`. Swapped in by the leader's `inject_worker_death` to
+/// script a death at an exact session point, and usable anywhere a
+/// guaranteed-dead `Transport` is needed.
+pub struct DeadTransport {
+    kind: TransportKind,
+    stats: WireStats,
+}
+
+impl DeadTransport {
+    /// `stats` preserves the dead link's traffic history for reporting.
+    pub fn new(kind: TransportKind, stats: WireStats) -> DeadTransport {
+        DeadTransport { kind, stats }
+    }
+}
+
+impl Transport for DeadTransport {
+    fn send(&self, _msg: WireMsg) -> Result<(), TransportError> {
+        Err(TransportError::Disconnected { mid_frame: false })
+    }
+
+    fn recv(&self) -> Result<WireMsg, TransportError> {
+        Err(TransportError::Disconnected { mid_frame: false })
+    }
+
+    fn recv_timeout(&self, _timeout: Duration) -> Result<Option<WireMsg>, TransportError> {
+        Err(TransportError::Disconnected { mid_frame: false })
+    }
+
+    fn stats(&self) -> WireStats {
+        self.stats
+    }
+
+    fn kind(&self) -> TransportKind {
+        self.kind
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::stack::{FHBN, LINE_RATE_400G};
+
+    fn inproc_boxed() -> (Box<dyn Transport>, Box<dyn Transport>) {
+        let (a, b) = super::super::inproc::pair(&FHBN, LINE_RATE_400G, 0.0);
+        (Box::new(a), Box::new(b))
+    }
+
+    #[test]
+    fn plan_parse_roundtrip_and_errors() {
+        let p = FaultPlan::parse("seed=7, worker=1, kill-recv=20, drop=0.25, delay-us=50")
+            .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.worker, Some(1));
+        assert_eq!(p.kill_recv, Some(20));
+        assert_eq!(p.drop_p, 0.25);
+        assert_eq!(p.delay, Some(Duration::from_micros(50)));
+        assert!(p.is_armed());
+        assert!(p.applies_to(1) && !p.applies_to(0));
+
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("drop=1.5").is_err());
+        assert!(FaultPlan::parse("kill-send").is_err());
+        let noop = FaultPlan::parse("seed=3").unwrap();
+        assert!(!noop.is_armed());
+        assert!(noop.applies_to(0) && noop.applies_to(5));
+    }
+
+    #[test]
+    fn kill_after_n_sends_disconnects_both_sides() {
+        let (a, b) = inproc_boxed();
+        let plan = FaultPlan::parse("kill-send=3").unwrap();
+        let faulty = FaultTransport::new(a, plan, 0);
+        faulty.send(WireMsg::KvStatsReq).unwrap();
+        faulty.send(WireMsg::KvStatsReq).unwrap();
+        assert_eq!(
+            faulty.send(WireMsg::KvStatsReq),
+            Err(TransportError::Disconnected { mid_frame: false })
+        );
+        // the peer's port was genuinely dropped, not just error-mapped
+        assert!(b.recv_timeout(Duration::from_millis(50)).unwrap().is_some());
+        assert!(b.recv_timeout(Duration::from_millis(50)).unwrap().is_some());
+        assert_eq!(b.recv(), Err(TransportError::Disconnected { mid_frame: false }));
+        // stats survive the kill
+        assert_eq!(faulty.stats().total().msgs, 2);
+    }
+
+    #[test]
+    fn corrupt_is_codec_error_then_dead() {
+        let (a, b) = inproc_boxed();
+        let plan = FaultPlan::parse("seed=11,corrupt=1.0").unwrap();
+        let faulty = FaultTransport::new(a, plan, 0);
+        b.send(WireMsg::KvStatsReq).unwrap();
+        match faulty.recv() {
+            Err(TransportError::Codec(_)) => {}
+            other => panic!("expected codec fault, got {other:?}"),
+        }
+        assert_eq!(faulty.recv(), Err(TransportError::Disconnected { mid_frame: false }));
+    }
+
+    #[test]
+    fn drop_schedule_is_seed_deterministic_and_kills_the_link() {
+        // deliveries before the first drop fires (killing the link)
+        let run = |seed: u64| -> u64 {
+            let (a, b) = inproc_boxed();
+            let plan = FaultPlan { seed, drop_p: 0.25, ..FaultPlan::default() };
+            let faulty = FaultTransport::new(a, plan, 3);
+            let mut delivered = 0u64;
+            loop {
+                if faulty.send(WireMsg::KvStatsReq).is_err() {
+                    break; // an earlier drop already killed the link
+                }
+                match b.recv_timeout(Duration::from_millis(50)) {
+                    Ok(Some(_)) => delivered += 1,
+                    // the drop genuinely severed the wire: the peer sees
+                    // a disconnect, not a silent gap
+                    _ => break,
+                }
+                assert!(delivered < 10_000, "drop never fired");
+            }
+            delivered
+        };
+        let first = run(42);
+        assert_eq!(first, run(42), "same seed must replay identically");
+        assert!((43..49).any(|s| run(s) != first), "seeds must decorrelate");
+    }
+
+    #[test]
+    fn dead_transport_always_disconnected() {
+        let d = DeadTransport::new(TransportKind::Inproc, WireStats::new());
+        assert!(d.send(WireMsg::Shutdown).is_err());
+        assert_eq!(d.recv(), Err(TransportError::Disconnected { mid_frame: false }));
+        assert_eq!(d.kind(), TransportKind::Inproc);
+    }
+}

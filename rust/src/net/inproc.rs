@@ -8,15 +8,31 @@
 //! adapter adds the per-message-class [`WireStats`] table the leader
 //! reports, with `serialized_bytes` left at 0 — nothing is serialized here;
 //! the TCP transport is what measures real frames.
+//!
+//! The netsim layer reports failures as strings (it is transport-agnostic
+//! and predates the typed error plane); this adapter maps them into
+//! [`TransportError`]: a dropped peer `Port` becomes `Disconnected`
+//! (always `mid_frame: false` — messages cross whole, there are no
+//! frames to truncate), anything else is an `Io` with the channel text.
 
 use std::sync::Mutex;
 use std::time::Duration;
 
 use super::stats::{MsgClass, WireStats};
-use super::{Transport, TransportKind};
+use super::{Transport, TransportError, TransportKind};
 use crate::netsim::stack::NetStackModel;
 use crate::netsim::transport::{link, LinkStats, Port};
+use crate::obs;
 use crate::workers::messages::WireMsg;
+
+/// Map a netsim channel error string onto the typed plane.
+fn map_err(e: String) -> TransportError {
+    if e.contains("dropped") || e.contains("disconnected") {
+        TransportError::Disconnected { mid_frame: false }
+    } else {
+        TransportError::Io { op: "inproc", kind: std::io::ErrorKind::Other, msg: e }
+    }
+}
 
 /// [`Transport`] adapter over one paced in-process [`Port`].
 pub struct InprocTransport {
@@ -35,10 +51,8 @@ impl InprocTransport {
         self.port.stats()
     }
 
-    fn record(&self, msg: &WireMsg, logical: usize) -> Result<(), String> {
-        let mut st = self.stats.lock().map_err(|_| "inproc stats poisoned")?;
-        st.record(MsgClass::of(msg), logical, 0);
-        Ok(())
+    fn record(&self, msg: &WireMsg, logical: usize) {
+        obs::lock(&self.stats).record(MsgClass::of(msg), logical, 0);
     }
 }
 
@@ -53,30 +67,30 @@ pub fn pair(
 }
 
 impl Transport for InprocTransport {
-    fn send(&self, msg: WireMsg) -> Result<(), String> {
+    fn send(&self, msg: WireMsg) -> Result<(), TransportError> {
         let logical = msg.wire_bytes();
-        self.record(&msg, logical)?;
-        self.port.send(msg, logical)
+        self.record(&msg, logical);
+        self.port.send(msg, logical).map_err(map_err)
     }
 
-    fn recv(&self) -> Result<WireMsg, String> {
-        let (msg, logical) = self.port.recv()?;
-        self.record(&msg, logical)?;
+    fn recv(&self) -> Result<WireMsg, TransportError> {
+        let (msg, logical) = self.port.recv().map_err(map_err)?;
+        self.record(&msg, logical);
         Ok(msg)
     }
 
-    fn recv_timeout(&self, timeout: Duration) -> Result<Option<WireMsg>, String> {
-        match self.port.recv_timeout(timeout)? {
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<WireMsg>, TransportError> {
+        match self.port.recv_timeout(timeout).map_err(map_err)? {
             None => Ok(None),
             Some((msg, logical)) => {
-                self.record(&msg, logical)?;
+                self.record(&msg, logical);
                 Ok(Some(msg))
             }
         }
     }
 
     fn stats(&self) -> WireStats {
-        *self.stats.lock().expect("inproc stats poisoned")
+        *obs::lock(&self.stats)
     }
 
     fn kind(&self) -> TransportKind {
@@ -114,5 +128,16 @@ mod tests {
     fn recv_timeout_expires() {
         let (a, _b) = pair(&FHBN, LINE_RATE_400G, 0.0);
         assert!(a.recv_timeout(Duration::from_millis(10)).unwrap().is_none());
+    }
+
+    #[test]
+    fn dropped_peer_is_typed_disconnect() {
+        let (a, b) = pair(&FHBN, LINE_RATE_400G, 0.0);
+        drop(b);
+        assert_eq!(a.recv(), Err(TransportError::Disconnected { mid_frame: false }));
+        assert_eq!(
+            a.send(WireMsg::Shutdown),
+            Err(TransportError::Disconnected { mid_frame: false })
+        );
     }
 }

@@ -16,10 +16,43 @@
 //!   checksummed frames; see the `codec` docs for the exact header
 //!   layout), written to a kernel TCP socket, and deserialized on the far
 //!   side into `Arc`-backed tensors (one copy in, zero after).
+//! * [`fault`] — a deterministic, seed-driven fault-injection wrapper
+//!   ([`fault::FaultTransport`]) that drops, delays, corrupts, or kills a
+//!   link after a scheduled message count, over either transport. Zero
+//!   cost when no plan is armed (the leader only wraps links when
+//!   `--fault-plan` is given).
 //! * [`stats`] — per-message-class accounting shared by both:
 //!   `logical_bytes` (the model) next to `serialized_bytes` (measured
 //!   frames), so every `--transport tcp` run checks the simulator's
 //!   `wire_bytes()` model against what a real wire carries.
+//!
+//! # Error plane
+//!
+//! Every fallible `Transport` method returns a typed [`TransportError`]:
+//!
+//! * [`TransportError::TimedOut`] — a deadline elapsed inside `recv`
+//!   (only produced by deadline-aware wrappers; `recv_timeout` itself
+//!   signals expiry as `Ok(None)` so expiry is not an error).
+//! * [`TransportError::Disconnected`] — the peer is gone. `mid_frame`
+//!   distinguishes an abrupt death that truncated a frame in flight from
+//!   a close on a clean frame boundary. Either way the link is dead; the
+//!   leader treats this as a declared worker death, never a retry.
+//! * [`TransportError::Codec`] — the peer sent a frame that failed
+//!   validation ([`codec::CodecError`]: bad magic/version/checksum,
+//!   truncated or malformed payload). The stream is unrecoverable after
+//!   this (framing is lost), so the leader also treats it as fatal for
+//!   the link.
+//! * [`TransportError::Io`] — an OS-level socket/channel error, tagged
+//!   with the operation that hit it.
+//!
+//! The attention-worker loop distinguishes link errors (peer gone —
+//! exit silently, nobody is listening) from protocol errors (report a
+//! `WireMsg::WorkerError` back to the leader, then exit). The leader
+//! side never panics on any of these: wire errors flow through
+//! [`crate::coordinator::failover`]'s detection policy
+//! (deadline → bounded retry/backoff → declare dead) and, on a declared
+//! death, into preempt-replay-rebuild recovery (see
+//! [`crate::workers::leader`]).
 //!
 //! The leader and worker loops are generic over `Transport`
 //! ([`crate::workers`]), selected at startup by
@@ -28,6 +61,7 @@
 //! (asserted by the `net_e2e` tests).
 
 pub mod codec;
+pub mod fault;
 pub mod inproc;
 pub mod stats;
 pub mod tcp;
@@ -36,26 +70,92 @@ use std::time::Duration;
 
 use crate::workers::messages::WireMsg;
 
+pub use codec::CodecError;
+pub use fault::{DeadTransport, FaultPlan, FaultTransport};
 pub use inproc::InprocTransport;
 pub use stats::{ClassStats, MsgClass, WireStats};
 pub use tcp::TcpTransport;
 
+/// Typed transport failure. See the module docs for how each variant is
+/// produced and how the leader/worker loops react.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// A recv deadline elapsed (used by deadline-aware callers; plain
+    /// `recv_timeout` reports expiry as `Ok(None)` instead).
+    TimedOut,
+    /// The peer endpoint is gone. `mid_frame` is true when the stream was
+    /// cut inside a frame (abrupt death), false on a clean frame boundary.
+    Disconnected { mid_frame: bool },
+    /// The peer sent bytes that failed frame validation; framing is lost
+    /// and the link cannot be trusted afterwards.
+    Codec(CodecError),
+    /// OS-level I/O failure, tagged with the operation that hit it.
+    Io { op: &'static str, kind: std::io::ErrorKind, msg: String },
+}
+
+impl TransportError {
+    /// Build an `Io` variant from a `std::io::Error`.
+    pub fn io(op: &'static str, e: &std::io::Error) -> TransportError {
+        TransportError::Io { op, kind: e.kind(), msg: e.to_string() }
+    }
+
+    /// True when the link itself is unusable afterwards (disconnect or
+    /// lost framing) as opposed to a transient condition.
+    pub fn is_fatal(&self) -> bool {
+        matches!(self, TransportError::Disconnected { .. } | TransportError::Codec(_))
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::TimedOut => write!(f, "recv deadline elapsed"),
+            TransportError::Disconnected { mid_frame: true } => {
+                write!(f, "peer disconnected mid-frame")
+            }
+            TransportError::Disconnected { mid_frame: false } => {
+                write!(f, "peer disconnected")
+            }
+            TransportError::Codec(e) => write!(f, "frame validation failed: {e}"),
+            TransportError::Io { op, kind, msg } => write!(f, "{op}: {msg} ({kind:?})"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<CodecError> for TransportError {
+    fn from(e: CodecError) -> TransportError {
+        TransportError::Codec(e)
+    }
+}
+
+/// Convenience for `Result<_, String>` boundary code (scripted harnesses,
+/// worker-side protocol errors): `?` on a transport call stringifies the
+/// typed error. The leader never uses this — it propagates typed.
+impl From<TransportError> for String {
+    fn from(e: TransportError) -> String {
+        e.to_string()
+    }
+}
+
 /// A bidirectional, ordered, reliable message link carrying [`WireMsg`]s.
 ///
 /// One endpoint lives on the leader, its peer on an attention worker. All
-/// methods take `&self` (endpoints do their own locking) and errors are
-/// strings — the worker loop forwards them as `WireMsg::WorkerError`.
+/// methods take `&self` (endpoints do their own locking) and all errors
+/// are typed [`TransportError`]s — see the module docs for the error
+/// plane contract.
 pub trait Transport: Send {
     /// Queue `msg` for delivery to the peer. Byte accounting (logical and,
     /// where applicable, serialized) happens here.
-    fn send(&self, msg: WireMsg) -> Result<(), String>;
+    fn send(&self, msg: WireMsg) -> Result<(), TransportError>;
 
     /// Block until the next message arrives.
-    fn recv(&self) -> Result<WireMsg, String>;
+    fn recv(&self) -> Result<WireMsg, TransportError>;
 
     /// Block up to `timeout`; `Ok(None)` on expiry. Expiry never loses
     /// data (a partially received frame stays buffered).
-    fn recv_timeout(&self, timeout: Duration) -> Result<Option<WireMsg>, String>;
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<WireMsg>, TransportError>;
 
     /// Per-message-class traffic through this endpoint (both directions).
     fn stats(&self) -> WireStats;
@@ -102,5 +202,25 @@ mod tests {
         }
         assert_eq!(TransportKind::parse("rdma"), None);
         assert_eq!(TransportKind::default(), TransportKind::Inproc);
+    }
+
+    #[test]
+    fn transport_error_display_and_fatality() {
+        assert!(!TransportError::TimedOut.is_fatal());
+        assert!(TransportError::Disconnected { mid_frame: true }.is_fatal());
+        assert!(TransportError::Codec(CodecError::BadChecksum { want: 1, got: 2 }).is_fatal());
+        let io = TransportError::io(
+            "tcp send",
+            &std::io::Error::new(std::io::ErrorKind::BrokenPipe, "pipe"),
+        );
+        assert!(!io.is_fatal());
+        assert!(io.to_string().contains("tcp send"));
+        assert_eq!(
+            TransportError::Disconnected { mid_frame: true }.to_string(),
+            "peer disconnected mid-frame"
+        );
+        assert!(TransportError::Codec(CodecError::BadChecksum { want: 1, got: 2 })
+            .to_string()
+            .contains("frame validation failed"));
     }
 }

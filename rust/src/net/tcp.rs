@@ -16,10 +16,18 @@
 //!   and [`super::codec::decode_frame`] is retried on every fill. Partial
 //!   frames survive short reads *and* `recv_timeout` expiry without losing
 //!   stream sync (the buffer simply keeps the prefix).
+//! * **Failure taxonomy**: an empty read (`Ok(0)`) means the peer is gone
+//!   and maps to [`TransportError::Disconnected`] — with `mid_frame: true`
+//!   when the receive buffer still holds a frame prefix (the peer died
+//!   between frames it promised), `false` on a clean frame boundary.
+//!   Reset/aborted/broken-pipe socket errors map to `Disconnected` too
+//!   (the kernel saw the peer vanish before we read the FIN). Frame
+//!   validation failures surface as [`TransportError::Codec`]; everything
+//!   else is [`TransportError::Io`] tagged with the failing operation.
 //! * **Graceful shutdown**: the protocol-level `WireMsg::Shutdown` drains
 //!   the worker loop first; dropping an endpoint then closes the socket
-//!   (`shutdown(Both)`), and a peer blocked in `recv` gets a clean
-//!   "connection closed" error instead of a hang.
+//!   (`shutdown(Both)`), and a peer blocked in `recv` gets a typed
+//!   `Disconnected` error instead of a hang.
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -27,11 +35,25 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use super::stats::{MsgClass, WireStats};
-use super::{codec, Transport, TransportKind};
+use super::{codec, Transport, TransportError, TransportKind};
 use crate::obs;
 use crate::workers::messages::WireMsg;
 
 const READ_CHUNK: usize = 64 * 1024;
+
+/// Socket error kinds that mean "the peer is gone", not "the syscall
+/// failed": the wire contract wants those typed as `Disconnected` so the
+/// leader's death detection doesn't have to pattern-match io kinds.
+fn disconnect_kind(kind: std::io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::BrokenPipe
+            | std::io::ErrorKind::UnexpectedEof
+            | std::io::ErrorKind::NotConnected
+    )
+}
 
 struct WriteHalf {
     stream: TcpStream,
@@ -83,27 +105,25 @@ impl TcpTransport {
     /// Close both directions; a peer blocked in `recv` unblocks with an
     /// error. Idempotent (drop calls it too).
     pub fn close(&self) {
-        if let Ok(w) = self.writer.lock() {
-            let _ = w.stream.shutdown(Shutdown::Both);
-        }
+        let w = obs::lock(&self.writer);
+        let _ = w.stream.shutdown(Shutdown::Both);
     }
 
-    fn recv_inner(&self, timeout: Option<Duration>) -> Result<Option<WireMsg>, String> {
+    fn recv_inner(&self, timeout: Option<Duration>) -> Result<Option<WireMsg>, TransportError> {
         // spans socket wait + deframe; on the calling thread's track
         let _sp = obs::span("wire", "tcp_recv");
-        let mut r = self.reader.lock().map_err(|_| "tcp reader poisoned".to_string())?;
+        let mut r = obs::lock(&self.reader);
         let deadline = timeout.map(|t| Instant::now() + t);
         let mut chunk = [0u8; READ_CHUNK];
         loop {
             match codec::decode_frame(&r.buf) {
                 Ok(Some((msg, used))) => {
                     r.buf.drain(..used);
-                    let mut st = self.stats.lock().map_err(|_| "tcp stats poisoned")?;
-                    st.record(MsgClass::of(&msg), msg.wire_bytes(), used);
+                    obs::lock(&self.stats).record(MsgClass::of(&msg), msg.wire_bytes(), used);
                     return Ok(Some(msg));
                 }
                 Ok(None) => {} // need more bytes
-                Err(e) => return Err(format!("tcp recv from {}: {e}", self.peer)),
+                Err(e) => return Err(TransportError::Codec(e)),
             }
             // compute the remaining budget; expire before a zero-duration
             // timeout (set_read_timeout(Some(0)) is an error in std)
@@ -133,16 +153,15 @@ impl TcpTransport {
             if rearm {
                 r.stream
                     .set_read_timeout(want)
-                    .map_err(|e| format!("tcp set timeout: {e}"))?;
+                    .map_err(|e| TransportError::io("tcp set timeout", &e))?;
                 r.timeout = want;
             }
             match r.stream.read(&mut chunk) {
+                // empty read: the peer closed. A non-empty parse buffer at
+                // this point is a frame prefix that will never complete —
+                // an abrupt mid-frame death, not a clean shutdown.
                 Ok(0) => {
-                    return Err(format!(
-                        "tcp connection to {} closed by peer{}",
-                        self.peer,
-                        if r.buf.is_empty() { "" } else { " mid-frame" }
-                    ))
+                    return Err(TransportError::Disconnected { mid_frame: !r.buf.is_empty() })
                 }
                 Ok(n) => r.buf.extend_from_slice(&chunk[..n]),
                 Err(e)
@@ -154,43 +173,50 @@ impl TcpTransport {
                     }
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-                Err(e) => return Err(format!("tcp read from {}: {e}", self.peer)),
+                Err(e) if disconnect_kind(e.kind()) => {
+                    return Err(TransportError::Disconnected { mid_frame: !r.buf.is_empty() })
+                }
+                Err(e) => return Err(TransportError::io("tcp read", &e)),
             }
         }
     }
 }
 
 impl Transport for TcpTransport {
-    fn send(&self, msg: WireMsg) -> Result<(), String> {
+    fn send(&self, msg: WireMsg) -> Result<(), TransportError> {
         let class = MsgClass::of(&msg);
         let logical = msg.wire_bytes();
         let _sp = obs::span("wire", "tcp_send").arg("bytes", logical as i64);
-        let mut w = self.writer.lock().map_err(|_| "tcp writer poisoned".to_string())?;
+        let mut w = obs::lock(&self.writer);
         w.scratch.clear();
         let frame = codec::encode(&msg, &mut w.scratch);
         let WriteHalf { stream, scratch } = &mut *w;
-        stream
-            .write_all(scratch)
-            .map_err(|e| format!("tcp send to {}: {e}", self.peer))?;
+        stream.write_all(scratch).map_err(|e| {
+            if disconnect_kind(e.kind()) {
+                TransportError::Disconnected { mid_frame: false }
+            } else {
+                TransportError::io("tcp send", &e)
+            }
+        })?;
         drop(w);
-        let mut st = self.stats.lock().map_err(|_| "tcp stats poisoned")?;
-        st.record(class, logical, frame);
+        obs::lock(&self.stats).record(class, logical, frame);
         Ok(())
     }
 
-    fn recv(&self) -> Result<WireMsg, String> {
+    fn recv(&self) -> Result<WireMsg, TransportError> {
         match self.recv_inner(None)? {
             Some(m) => Ok(m),
+            // no deadline was armed, so the expiry path cannot be taken
             None => unreachable!("recv without timeout cannot expire"),
         }
     }
 
-    fn recv_timeout(&self, timeout: Duration) -> Result<Option<WireMsg>, String> {
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<WireMsg>, TransportError> {
         self.recv_inner(Some(timeout))
     }
 
     fn stats(&self) -> WireStats {
-        *self.stats.lock().expect("tcp stats poisoned")
+        *obs::lock(&self.stats)
     }
 
     fn kind(&self) -> TransportKind {
@@ -218,7 +244,17 @@ pub fn pair() -> std::io::Result<(TcpTransport, TcpTransport)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::CodecError;
     use crate::runtime::host::HostTensor;
+
+    /// A (TcpTransport, raw TcpStream) pair for byte-level peer misbehavior.
+    fn raw_pair() -> (TcpTransport, TcpStream) {
+        let listener = TcpListener::bind((std::net::Ipv4Addr::LOCALHOST, 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (TcpTransport::from_stream(server).unwrap(), client)
+    }
 
     #[test]
     fn roundtrip_over_real_socket() {
@@ -273,10 +309,35 @@ mod tests {
     }
 
     #[test]
-    fn closed_peer_errors_cleanly() {
+    fn closed_peer_is_clean_boundary_disconnect() {
         let (a, b) = pair().unwrap();
         drop(b);
-        assert!(a.recv().is_err());
+        assert_eq!(a.recv(), Err(TransportError::Disconnected { mid_frame: false }));
+    }
+
+    #[test]
+    fn mid_frame_death_is_typed_as_such() {
+        // The peer writes a frame *prefix* then dies: the unfinished bytes
+        // in the parse buffer prove the stream was cut inside a frame.
+        let (srv, mut raw) = raw_pair();
+        let mut frame = Vec::new();
+        codec::encode(&WireMsg::Retire { slot: 7 }, &mut frame);
+        assert!(frame.len() > 4);
+        raw.write_all(&frame[..frame.len() / 2]).unwrap();
+        raw.flush().unwrap();
+        drop(raw);
+        assert_eq!(srv.recv(), Err(TransportError::Disconnected { mid_frame: true }));
+    }
+
+    #[test]
+    fn garbage_bytes_are_a_codec_error() {
+        let (srv, mut raw) = raw_pair();
+        raw.write_all(&[0xde, 0xad, 0xbe, 0xef, 0x00, 0x01, 0x02, 0x03]).unwrap();
+        raw.flush().unwrap();
+        match srv.recv() {
+            Err(TransportError::Codec(CodecError::BadMagic(_))) => {}
+            other => panic!("expected BadMagic codec error, got {other:?}"),
+        }
     }
 
     #[test]

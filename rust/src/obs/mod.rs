@@ -36,8 +36,13 @@
 //! `host.copied_bytes`, `kv.read_bytes`, `serve.tbt_ns`, `serve.tokens`,
 //! `kv.blocks_in_use`. The Prometheus exporter prefixes `lamina_` and maps
 //! every non-alphanumeric character to `_`. Span categories are one of
-//! `leader`, `sched`, `wire`, `worker`, `kernel`; span names are the
-//! function-level phase (`decode-step`, `send_q`, `paged_attn`, …).
+//! `leader`, `sched`, `wire`, `worker`, `kernel`, `failover`; span names
+//! are the function-level phase (`decode-step`, `send_q`, `paged_attn`,
+//! `recover`, …). Fault injection marks `wire`-category instants
+//! (`fault_kill`, `fault_drop`); death detection and recovery mark the
+//! `failover` category (`worker-dead` instants, `recover` spans), so a
+//! faulted run's timeline shows the kill, the detection, and the replay
+//! window in one view.
 //!
 //! # Overhead contract
 //!

@@ -813,6 +813,31 @@ impl Scheduler {
         self.running.len()
     }
 
+    /// Ids of the live requests, in running order. Failover recovery
+    /// iterates this to preempt every request whose KV shard died with a
+    /// worker.
+    pub fn live_ids(&self) -> Vec<RequestId> {
+        self.running.clone()
+    }
+
+    /// Physical slot of a live request (`None` once finished/preempted).
+    ///
+    /// Failover recovery captures these *before* preempting: a request
+    /// whose first prefill chunk was in flight when a worker died has
+    /// `wrote_kv == false` here (no `note_prefill_chunk` ran), so
+    /// preempt/cancel queue no Retire — yet surviving workers may already
+    /// have appended that chunk. The leader retires such slots explicitly
+    /// to keep the pool leak-free; a Retire for a never-written slot is a
+    /// no-op on the arena.
+    pub fn slot_of(&self, id: RequestId) -> Option<u32> {
+        let e = self.entries.get(&id)?;
+        if e.state.is_live() {
+            Some(e.slot)
+        } else {
+            None
+        }
+    }
+
     pub fn free_slot_count(&self) -> usize {
         self.free_slots.len()
     }

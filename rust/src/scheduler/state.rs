@@ -97,6 +97,10 @@ pub struct StepOutcome {
     /// Requests preempted back to the waiting queue by KV pressure this
     /// iteration (overcommit mode only).
     pub preempted: Vec<RequestId>,
+    /// Attention workers declared dead and replaced this iteration; every
+    /// live request was preempted for promoted-token replay (those ids
+    /// also appear in `preempted`).
+    pub recovered_workers: Vec<usize>,
     /// Nothing left to do: no waiting and no live requests.
     pub idle: bool,
 }

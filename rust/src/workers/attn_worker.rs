@@ -36,7 +36,7 @@
 
 use crate::kernels::{AttnBackend, AttnBackendKind, EngineBackend, NativeBackend, PartialState};
 use crate::kvcache::{ArenaCfg, KvDtype, PagedKvArena};
-use crate::net::Transport;
+use crate::net::{Transport, TransportError};
 use crate::obs;
 use crate::runtime::host::HostTensor;
 use crate::runtime::manifest::Manifest;
@@ -72,6 +72,30 @@ pub struct AttnWorkerCfg {
     /// Model geometry for the native backend. `None` falls back to the
     /// artifact manifest; the engine backend always uses its manifest.
     pub geom: Option<ModelGeom>,
+}
+
+/// How a worker loop ended abnormally. The two classes get opposite
+/// exits: a **link** fault means the peer is gone (or the stream is
+/// unrecoverable), so nobody is listening — exit silently; a **protocol**
+/// fault (malformed traffic, backend failure) is reported back to the
+/// leader as a best-effort `WireMsg::WorkerError` before exiting, so the
+/// leader can attribute the death instead of just seeing a hang.
+#[derive(Debug)]
+enum WorkerFault {
+    Link(TransportError),
+    Protocol(String),
+}
+
+impl From<TransportError> for WorkerFault {
+    fn from(e: TransportError) -> WorkerFault {
+        WorkerFault::Link(e)
+    }
+}
+
+impl From<String> for WorkerFault {
+    fn from(msg: String) -> WorkerFault {
+        WorkerFault::Protocol(msg)
+    }
 }
 
 /// Run the worker loop until `Shutdown` or link closure, over any
@@ -116,8 +140,13 @@ pub fn run_attn_worker<T: Transport>(cfg: AttnWorkerCfg, link: T) {
         let _ = link.send(WireMsg::WorkerError { msg: e });
         return;
     }
-    if let Err(e) = worker_loop(backend.as_mut(), geom, &cfg, &link) {
-        let _ = link.send(WireMsg::WorkerError { msg: e });
+    match worker_loop(backend.as_mut(), geom, &cfg, &link) {
+        Ok(()) => {}
+        // peer is gone (or framing is lost): there is nobody to tell
+        Err(WorkerFault::Link(_)) => {}
+        Err(WorkerFault::Protocol(msg)) => {
+            let _ = link.send(WireMsg::WorkerError { msg });
+        }
     }
 }
 
@@ -126,12 +155,12 @@ fn worker_loop<T: Transport>(
     geom: ModelGeom,
     cfg: &AttnWorkerCfg,
     link: &T,
-) -> Result<(), String> {
+) -> Result<(), WorkerFault> {
     if geom.kv_heads % cfg.n_shards != 0 {
-        return Err(format!(
+        return Err(WorkerFault::Protocol(format!(
             "shards ({}) must divide kv heads ({})",
             cfg.n_shards, geom.kv_heads
-        ));
+        )));
     }
     let khs = geom.kv_heads / cfg.n_shards;
 
@@ -166,7 +195,7 @@ fn worker_loop<T: Transport>(
 
     loop {
         let Some(msg) = link.recv_timeout(std::time::Duration::from_secs(60))? else {
-            return Err("worker idle timeout".into());
+            return Err(WorkerFault::Protocol("worker idle timeout".into()));
         };
         match msg {
             WireMsg::Shutdown => return Ok(()),
@@ -206,9 +235,14 @@ fn worker_loop<T: Transport>(
             }
             WireMsg::StepKv { layer, k, v } => {
                 let _sp = obs::span("worker", "decode-attn").arg("layer", layer as i64);
-                let p = pending.take().ok_or("StepKv without StepQ")?;
+                let p = pending
+                    .take()
+                    .ok_or_else(|| WorkerFault::Protocol("StepKv without StepQ".into()))?;
                 if p.layer != layer {
-                    return Err(format!("layer mismatch: q@{} kv@{}", p.layer, layer));
+                    return Err(WorkerFault::Protocol(format!(
+                        "layer mismatch: q@{} kv@{}",
+                        p.layer, layer
+                    )));
                 }
                 // append k/v at position lens[b] for each active row
                 arena.append_step(&p.slots, layer, &k, &v, &p.lens);
@@ -234,7 +268,7 @@ fn worker_loop<T: Transport>(
                 arena.append_chunk(slot, layer, &k, &v, cached as usize, valid);
                 link.send(WireMsg::AttnOut { layer, out })?;
             }
-            other => return Err(format!("unexpected message {other:?}")),
+            other => return Err(WorkerFault::Protocol(format!("unexpected message {other:?}"))),
         }
     }
 }

@@ -1,0 +1,743 @@
+//! Artifact-free chaos/failover harness: a scripted leader driving the
+//! REAL scheduler and REAL attention workers (native backend) over either
+//! transport, with fault injection on the links — the end-to-end proof of
+//! the fault-tolerance story that CI can run without PJRT artifacts.
+//!
+//! # The pseudo-model and why its outputs are bit-exact
+//!
+//! The real leader's model slices need AOT artifacts, so this harness
+//! substitutes a deterministic pseudo-model chosen to make recovery
+//! verifiable to the bit:
+//!
+//! * **K is constant across positions** for each (layer, head). Every
+//!   attention score in a row is then equal, so the online softmax's
+//!   weights are *exactly* 1.0 (`exp(0)`), and the attention output is
+//!   the mean of the V rows — accumulated in position order by both the
+//!   decode kernel (`fold_block`) and the prefill kernel (`fold_one`).
+//!   The same context therefore produces bit-identical attention output
+//!   whether it arrived via decode steps or via the preempt-replay
+//!   re-prefill after a worker death.
+//! * **V encodes the content**: each V row is a function of (token,
+//!   position, layer, head, dim), so the attention output — and the next
+//!   token derived from it — checksums the *entire KV history* on the
+//!   workers. A lost, stale, or corrupted KV row changes the output
+//!   stream; matching the fault-free golden run proves the rebuilt cache
+//!   is byte-equivalent.
+//! * **Next token = FNV fold of every layer's attention output row**, mod
+//!   a small vocab — a real recurrence (each token depends on all prior
+//!   tokens through the KV cache) covering every layer's stored V.
+//!
+//! The leader loop mirrors `workers::leader`: real [`Scheduler`]
+//! (admission, chunked prefill, packed decode groups, retirement), the
+//! same [`HealthPolicy`] deadline/retry death detection, and the same
+//! preempt-replay-rebuild recovery. What it cannot exercise is the PJRT
+//! model math — covered by the artifact-gated `e2e_pipeline` failover
+//! tests.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::failover::{DeathCause, HealthPolicy, HealthTracker, Verdict, WorkerDeath};
+use crate::kernels::AttnBackendKind;
+use crate::kvcache::KvDtype;
+use crate::metrics::{KvCacheStats, ServeMetrics};
+use crate::net::{inproc, tcp, FaultPlan, FaultTransport, Transport, TransportKind};
+use crate::netsim::stack::{FHBN, LINE_RATE_400G};
+use crate::obs;
+use crate::runtime::host::HostTensor;
+use crate::scheduler::{
+    AdmissionKind, DecodeRow, GroupMode, KvBudget, KvOccupancy, RequestId, SchedCfg, Scheduler,
+};
+
+use super::attn_worker::{run_attn_worker, AttnWorkerCfg, ModelGeom};
+use super::messages::WireMsg;
+
+/// Pseudo-model vocabulary (next tokens are hashes mod this).
+pub const VOCAB: i32 = 97;
+const LAYERS: usize = 2;
+const HEADS: usize = 8;
+const KV_HEADS: usize = 4;
+const HEAD_DIM: usize = 8;
+const MAX_SEQ: usize = 64;
+/// Prefill chunk size (small, so kills can land between chunks).
+const PREFILL_CHUNK: usize = 8;
+const HASH_INIT: u32 = 0x811C_9DC5;
+
+/// Chaos session configuration.
+#[derive(Debug, Clone)]
+pub struct ChaosCfg {
+    pub transport: TransportKind,
+    /// Attention workers (must divide 4 KV heads: 1, 2 or 4).
+    pub workers: usize,
+    /// Concurrent requests (deterministic synthetic prompts).
+    pub requests: usize,
+    /// Tokens to generate per request.
+    pub gen_tokens: usize,
+    /// Physical cache slots.
+    pub slots: usize,
+    /// Fault schedule for the leader-side links (`None` = golden run).
+    pub fault_plan: Option<FaultPlan>,
+    pub health: HealthPolicy,
+    /// Recover from worker deaths (preempt-replay-rebuild). Off: the
+    /// first death aborts the session with a typed [`ChaosFailure`].
+    pub auto_recover: bool,
+}
+
+impl Default for ChaosCfg {
+    fn default() -> ChaosCfg {
+        ChaosCfg {
+            transport: TransportKind::Inproc,
+            workers: 2,
+            requests: 3,
+            gen_tokens: 8,
+            slots: 4,
+            fault_plan: None,
+            // tight deadlines: native steps are sub-ms, and chaos tests
+            // should detect hangs quickly
+            health: HealthPolicy {
+                recv_deadline: Duration::from_millis(400),
+                recv_retries: 1,
+                backoff: 2.0,
+            },
+            auto_recover: true,
+        }
+    }
+}
+
+/// What a completed chaos session produced.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    /// Generated tokens per request, in submission order.
+    pub outputs: Vec<Vec<i32>>,
+    pub worker_deaths: u64,
+    pub recoveries: u64,
+    pub tokens_replayed: u64,
+    /// Engine iterations run.
+    pub steps: usize,
+    /// KV blocks still mapped after the session drained (leak check —
+    /// must be 0).
+    pub leaked_blocks: usize,
+}
+
+/// Typed session abort: the death that ended it plus the post-cleanup
+/// leak count over the surviving workers (must be 0 — a failed session
+/// must not strand KV reservations).
+#[derive(Debug)]
+pub struct ChaosFailure {
+    pub death: WorkerDeath,
+    pub leaked_blocks: usize,
+}
+
+impl std::fmt::Display for ChaosFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "chaos session aborted: {} ({} blocks leaked)", self.death, self.leaked_blocks)
+    }
+}
+
+impl std::error::Error for ChaosFailure {}
+
+/// Deterministic synthetic prompt for request `r` (3–5 tokens).
+pub fn prompt_for(r: usize) -> Vec<i32> {
+    (0..3 + r % 3).map(|i| ((r * 13 + i * 5 + 2) % VOCAB as usize) as i32).collect()
+}
+
+// ---- the pseudo-model ------------------------------------------------------
+
+/// Constant K per (layer, head): every score equal → softmax weights
+/// exactly 1.0 → attention output is the position-ordered mean of V rows.
+fn k_val(layer: usize, head: usize, d: usize) -> f32 {
+    (((layer * KV_HEADS + head) * HEAD_DIM + d) % 23) as f32 / 16.0
+}
+
+/// V encodes (token, position) — the content the KV cache must preserve
+/// across worker death and replay. Multiples of 1/8 keep sums exact.
+fn v_val(token: i32, pos: usize, layer: usize, head: usize, d: usize) -> f32 {
+    let mix = token as i64 * 31
+        + pos as i64 * 17
+        + (layer * KV_HEADS + head) as i64 * 7
+        + d as i64;
+    (mix.rem_euclid(113)) as f32 / 8.0
+}
+
+/// Q is irrelevant to the output under constant K (all scores equal
+/// regardless), but keep it deterministic and position-dependent anyway.
+fn q_val(token: i32, pos: usize, layer: usize, head: usize, d: usize) -> f32 {
+    let mix = token as i64 * 5 + pos as i64 * 3 + (layer * HEADS + head) as i64 + d as i64;
+    (mix.rem_euclid(29)) as f32 / 16.0
+}
+
+/// Build `[rows, heads, HEAD_DIM]` from a per-(row, head, dim) function.
+fn build(rows: usize, heads: usize, f: impl Fn(usize, usize, usize) -> f32) -> HostTensor {
+    let mut data = vec![0.0f32; rows * heads * HEAD_DIM];
+    for r in 0..rows {
+        for h in 0..heads {
+            for d in 0..HEAD_DIM {
+                data[(r * heads + h) * HEAD_DIM + d] = f(r, h, d);
+            }
+        }
+    }
+    HostTensor::f32(vec![rows, heads, HEAD_DIM], data)
+}
+
+/// Head-range slice of `[rows, H, hd]` (the leader's shard split).
+fn slice_heads(t: &HostTensor, h0: usize, n: usize) -> HostTensor {
+    let shape = t.shape();
+    let (b, h, hd) = (shape[0], shape[1], shape[2]);
+    if h0 == 0 && n == h {
+        return t.clone();
+    }
+    let src = t.as_f32();
+    let mut out = vec![0.0f32; b * n * hd];
+    for bi in 0..b {
+        out[bi * n * hd..][..n * hd].copy_from_slice(&src[(bi * h + h0) * hd..][..n * hd]);
+    }
+    HostTensor::f32(vec![b, n, hd], out)
+}
+
+/// FNV-1a-style fold of a row's f32 bit patterns.
+fn fold_row(mut h: u32, row: &[f32]) -> u32 {
+    for &x in row {
+        h = (h ^ x.to_bits()).wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+// ---- worker spawning -------------------------------------------------------
+
+struct Peer {
+    link: Box<dyn Transport>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    health: HealthTracker,
+}
+
+fn spawn_peer(cfg: &ChaosCfg, idx: usize, respawn: bool) -> Result<Peer, String> {
+    let wcfg = AttnWorkerCfg {
+        // deliberately nonexistent: the native backend must not need it
+        artifacts_dir: std::path::PathBuf::from("artifacts-not-needed"),
+        shard: idx,
+        n_shards: cfg.workers,
+        slots: cfg.slots,
+        kv_block_size: 4,
+        kv_dtype: KvDtype::F32,
+        backend: AttnBackendKind::Native,
+        geom: Some(ModelGeom {
+            layers: LAYERS,
+            kv_heads: KV_HEADS,
+            head_dim: HEAD_DIM,
+            max_seq: MAX_SEQ,
+        }),
+    };
+    let name = if respawn { format!("chaos-attn-{idx}-r") } else { format!("chaos-attn-{idx}") };
+    let builder = std::thread::Builder::new().name(name);
+    let (mut link, thread): (Box<dyn Transport>, _) = match cfg.transport {
+        TransportKind::Inproc => {
+            let (l, w) = inproc::pair(&FHBN, LINE_RATE_400G, 0.0);
+            let t = builder.spawn(move || run_attn_worker(wcfg, w)).map_err(|e| e.to_string())?;
+            (Box::new(l), t)
+        }
+        TransportKind::Tcp => {
+            let (l, w) = tcp::pair().map_err(|e| e.to_string())?;
+            let t = builder.spawn(move || run_attn_worker(wcfg, w)).map_err(|e| e.to_string())?;
+            (Box::new(l), t)
+        }
+    };
+    // same contract as the real leader: respawns are never fault-wrapped
+    if !respawn {
+        if let Some(plan) = &cfg.fault_plan {
+            if plan.is_armed() && plan.applies_to(idx) {
+                link = Box::new(FaultTransport::new(link, plan.clone(), idx as u64));
+            }
+        }
+    }
+    Ok(Peer { link, thread: Some(thread), health: HealthTracker::default() })
+}
+
+// ---- the scripted leader ---------------------------------------------------
+
+struct Chaos<'c> {
+    cfg: &'c ChaosCfg,
+    peers: Vec<Peer>,
+    sched: Scheduler,
+    metrics: ServeMetrics,
+    deaths: u64,
+    recoveries: u64,
+    tokens_replayed: u64,
+}
+
+impl<'c> Chaos<'c> {
+    fn new(cfg: &'c ChaosCfg) -> Result<Chaos<'c>, String> {
+        assert_eq!(KV_HEADS % cfg.workers, 0, "workers must divide kv heads");
+        let mut peers = Vec::new();
+        for w in 0..cfg.workers {
+            peers.push(spawn_peer(cfg, w, false)?);
+        }
+        let sched = Scheduler::new(
+            SchedCfg {
+                max_context: MAX_SEQ - 1,
+                total_slots: cfg.slots,
+                group_slots: cfg.slots,
+                grouping: GroupMode::Packed,
+                use_prefill: true,
+                kv_block_size: 4,
+                block_bytes: 0,
+                budget: KvBudget::Unlimited,
+                overcommit: false,
+            },
+            AdmissionKind::Fifo.build(),
+        );
+        Ok(Chaos {
+            cfg,
+            peers,
+            sched,
+            metrics: ServeMetrics::new(),
+            deaths: 0,
+            recoveries: 0,
+            tokens_replayed: 0,
+        })
+    }
+
+    /// Same contract as the leader's `declare_dead`: record detection
+    /// metrics + timeline marker, build the typed death.
+    fn declare_dead(&mut self, wi: usize, cause: DeathCause, since: Instant) -> WorkerDeath {
+        crate::metrics::note_worker_death(since.elapsed().as_secs_f64());
+        self.deaths += 1;
+        obs::instant(
+            "failover",
+            "worker-dead",
+            vec![
+                ("worker", obs::ArgVal::I(wi as i64)),
+                ("cause", obs::ArgVal::S(cause.name().to_string())),
+            ],
+        );
+        WorkerDeath { worker: wi, cause }
+    }
+
+    /// Deadline/retry-governed receive (the leader's ladder, verbatim).
+    fn recv_worker(&mut self, wi: usize) -> Result<WireMsg, WorkerDeath> {
+        let t0 = Instant::now();
+        loop {
+            let attempt = self.peers[wi].health.strikes();
+            let deadline = self.cfg.health.attempt_deadline(attempt);
+            match self.peers[wi].link.recv_timeout(deadline) {
+                Ok(Some(WireMsg::WorkerError { msg })) => {
+                    return Err(self.declare_dead(wi, DeathCause::Protocol(msg), t0));
+                }
+                Ok(Some(msg)) => {
+                    self.peers[wi].health.on_alive();
+                    return Ok(msg);
+                }
+                Ok(None) => match self.peers[wi].health.on_timeout(&self.cfg.health) {
+                    Verdict::Retry(_) => crate::metrics::note_failover_retry(),
+                    Verdict::Dead => return Err(self.declare_dead(wi, DeathCause::Hang, t0)),
+                },
+                Err(e) => {
+                    return Err(self.declare_dead(wi, DeathCause::of_transport(&e), t0));
+                }
+            }
+        }
+    }
+
+    fn send_to(&mut self, wi: usize, msg: WireMsg) -> Result<(), WorkerDeath> {
+        match self.peers[wi].link.send(msg) {
+            Ok(()) => Ok(()),
+            Err(e) => Err(self.declare_dead(wi, DeathCause::of_transport(&e), Instant::now())),
+        }
+    }
+
+    /// Receive one attention shard per worker and interleave them back
+    /// into `[rows, HEADS, HEAD_DIM]` (flat).
+    fn recv_attn(&mut self, layer: usize, rows: usize) -> Result<Vec<f32>, WorkerDeath> {
+        let w = self.peers.len();
+        let hs = HEADS / w;
+        let mut out = vec![0.0f32; rows * HEADS * HEAD_DIM];
+        for wi in 0..w {
+            match self.recv_worker(wi)? {
+                WireMsg::AttnOut { layer: l, out: shard } if l == layer => {
+                    let sd = shard.as_f32();
+                    for b in 0..rows {
+                        let dst = (b * HEADS + wi * hs) * HEAD_DIM;
+                        let src = b * hs * HEAD_DIM;
+                        out[dst..dst + hs * HEAD_DIM]
+                            .copy_from_slice(&sd[src..src + hs * HEAD_DIM]);
+                    }
+                }
+                other => {
+                    return Err(self.declare_dead(
+                        wi,
+                        DeathCause::Protocol(format!("unexpected reply {other:?}")),
+                        Instant::now(),
+                    ));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn send_retirements(&mut self, retires: &[(RequestId, u32)]) -> Result<(), WorkerDeath> {
+        for i in 0..retires.len() {
+            let (_, slot) = retires[i];
+            for wi in 0..self.peers.len() {
+                if let Err(d) = self.send_to(wi, WireMsg::Retire { slot }) {
+                    // re-queue this one and everything unsent (leader contract)
+                    for &(rid, rslot) in &retires[i..] {
+                        self.sched.push_retirement(rid, rslot);
+                    }
+                    return Err(d);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// `KvStatsReq` round-trip per link: the FIFO barrier that discards
+    /// stale in-flight replies and returns the pool occupancy.
+    fn barrier(&mut self) -> Result<KvCacheStats, WorkerDeath> {
+        for wi in 0..self.peers.len() {
+            self.send_to(wi, WireMsg::KvStatsReq)?;
+        }
+        let mut sum = KvCacheStats::default();
+        for wi in 0..self.peers.len() {
+            loop {
+                match self.recv_worker(wi)? {
+                    WireMsg::KvStats { stats } => {
+                        sum = sum.merge(&stats);
+                        break;
+                    }
+                    _stale => {}
+                }
+            }
+        }
+        Ok(sum)
+    }
+
+    /// One chunked-prefill pass; returns the next-token prediction after
+    /// the chunk's last valid row.
+    fn prefill_chunk(
+        &mut self,
+        slot: u32,
+        chunk: &[i32],
+        cached: usize,
+    ) -> Result<i32, WorkerDeath> {
+        let valid = chunk.len();
+        let w = self.peers.len();
+        let (hs, khs) = (HEADS / w, KV_HEADS / w);
+        let mut hash = HASH_INIT;
+        for layer in 0..LAYERS {
+            let q = build(valid, HEADS, |r, h, d| q_val(chunk[r], cached + r, layer, h, d));
+            let k = build(valid, KV_HEADS, |_r, h, d| k_val(layer, h, d));
+            let v = build(valid, KV_HEADS, |r, h, d| v_val(chunk[r], cached + r, layer, h, d));
+            for wi in 0..w {
+                self.send_to(
+                    wi,
+                    WireMsg::PrefillChunk {
+                        layer,
+                        slot,
+                        q: slice_heads(&q, wi * hs, hs),
+                        k: slice_heads(&k, wi * khs, khs),
+                        v: slice_heads(&v, wi * khs, khs),
+                        cached: cached as i32,
+                        valid,
+                        seq_bucket: MAX_SEQ,
+                    },
+                )?;
+            }
+            let out = self.recv_attn(layer, valid)?;
+            hash = fold_row(hash, &out[(valid - 1) * HEADS * HEAD_DIM..][..HEADS * HEAD_DIM]);
+        }
+        Ok((hash % VOCAB as u32) as i32)
+    }
+
+    /// One decode iteration for a batch group; returns next tokens.
+    fn decode_rows(&mut self, rows: &[DecodeRow]) -> Result<Vec<i32>, WorkerDeath> {
+        let b = rows.len();
+        let w = self.peers.len();
+        let (hs, khs) = (HEADS / w, KV_HEADS / w);
+        let slots: Vec<u32> = rows.iter().map(|r| r.slot).collect();
+        let lens: Vec<i32> = rows.iter().map(|r| r.len).collect();
+        let mut hashes = vec![HASH_INIT; b];
+        for layer in 0..LAYERS {
+            let q = build(b, HEADS, |r, h, d| {
+                q_val(rows[r].input, rows[r].len as usize, layer, h, d)
+            });
+            let k = build(b, KV_HEADS, |_r, h, d| k_val(layer, h, d));
+            let v = build(b, KV_HEADS, |r, h, d| {
+                v_val(rows[r].input, rows[r].len as usize, layer, h, d)
+            });
+            for wi in 0..w {
+                self.send_to(
+                    wi,
+                    WireMsg::StepQ {
+                        layer,
+                        slots: slots.clone(),
+                        q: slice_heads(&q, wi * hs, hs),
+                        lens: lens.clone(),
+                        seq_bucket: MAX_SEQ,
+                        overlap: false,
+                    },
+                )?;
+            }
+            for wi in 0..w {
+                self.send_to(
+                    wi,
+                    WireMsg::StepKv {
+                        layer,
+                        k: slice_heads(&k, wi * khs, khs),
+                        v: slice_heads(&v, wi * khs, khs),
+                    },
+                )?;
+            }
+            let out = self.recv_attn(layer, b)?;
+            for (r, h) in hashes.iter_mut().enumerate() {
+                *h = fold_row(*h, &out[r * HEADS * HEAD_DIM..][..HEADS * HEAD_DIM]);
+            }
+        }
+        Ok(hashes.into_iter().map(|h| (h % VOCAB as u32) as i32).collect())
+    }
+
+    /// One engine iteration (the leader's `step_inner`, scripted).
+    fn step_inner(&mut self) -> Result<bool, WorkerDeath> {
+        let leftover = self.sched.take_retirements();
+        self.send_retirements(&leftover)?;
+        let _ = self.sched.admit(KvOccupancy::default());
+        let _ = self.sched.take_admitted();
+        if let Some(p) = self.sched.next_prefill() {
+            let chunk = self.sched.prompt_chunk(p.id, PREFILL_CHUNK);
+            let next = self.prefill_chunk(p.slot, &chunk, p.cached)?;
+            self.sched.note_prefill_chunk(p.id, chunk.len(), next);
+        } else {
+            for rows in self.sched.decode_plan() {
+                if rows.is_empty() {
+                    continue;
+                }
+                let next = self.decode_rows(&rows)?;
+                for (row, &tok) in rows.iter().zip(next.iter()) {
+                    self.sched.note_decode(row.id, tok);
+                }
+            }
+        }
+        let _ = self.sched.take_finished();
+        let retires = self.sched.take_retirements();
+        self.send_retirements(&retires)?;
+        Ok(self.sched.is_idle())
+    }
+
+    /// The leader's preempt-replay-rebuild recovery, scripted.
+    fn recover(&mut self, death: &WorkerDeath) -> Result<(), WorkerDeath> {
+        let t0 = Instant::now();
+        let _sp = obs::span("failover", "recover")
+            .arg("worker", death.worker as i64)
+            .arg_str("cause", death.cause.name());
+        let live = self.sched.live_ids();
+        // capture slots first: a request caught mid-FIRST-prefill-chunk
+        // shows wrote_kv = false (no Retire on preempt) but surviving
+        // workers may hold its in-flight appends — retire explicitly
+        let slots: Vec<(RequestId, Option<u32>)> =
+            live.iter().map(|&id| (id, self.sched.slot_of(id))).collect();
+        for &id in live.iter().rev() {
+            self.sched.preempt(id);
+        }
+        let queued = self.sched.take_retirements();
+        for &(id, slot) in &slots {
+            let Some(slot) = slot else { continue };
+            if !queued.iter().any(|&(_, qs)| qs == slot) {
+                self.sched.push_retirement(id, slot);
+            }
+        }
+        for (id, slot) in queued {
+            self.sched.push_retirement(id, slot);
+        }
+        let mut replayed = 0u64;
+        for &id in &live {
+            if let Some(p) = self.sched.effective_prompt(id) {
+                replayed += p.len() as u64;
+            }
+        }
+        self.peers[death.worker] = spawn_peer(self.cfg, death.worker, true)
+            .map_err(|e| WorkerDeath { worker: death.worker, cause: DeathCause::Protocol(e) })?;
+        let retires = self.sched.take_retirements();
+        self.send_retirements(&retires)?;
+        let _ = self.barrier()?;
+        self.recoveries += 1;
+        self.tokens_replayed += replayed;
+        self.metrics.record_recovery(replayed, t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    /// Typed abort: cancel everything, flush retirements and count leaks
+    /// on whichever links still answer, shut down.
+    fn abort(&mut self, death: WorkerDeath) -> ChaosFailure {
+        let ids: Vec<RequestId> = self.sched.live_ids();
+        // every live slot gets a Retire regardless of scheduler-visible
+        // progress (in-flight first chunks — see `recover`)
+        let mut slots: Vec<u32> = ids.iter().filter_map(|&id| self.sched.slot_of(id)).collect();
+        for id in ids {
+            self.sched.cancel(id);
+        }
+        for (_, slot) in self.sched.take_retirements() {
+            if !slots.contains(&slot) {
+                slots.push(slot);
+            }
+        }
+        for slot in slots {
+            for wi in 0..self.peers.len() {
+                let _ = self.peers[wi].link.send(WireMsg::Retire { slot });
+            }
+        }
+        let mut leaked = 0usize;
+        for wi in 0..self.peers.len() {
+            if self.peers[wi].link.send(WireMsg::KvStatsReq).is_err() {
+                continue; // dead link: its arena died with it
+            }
+            loop {
+                match self.peers[wi].link.recv_timeout(Duration::from_millis(500)) {
+                    Ok(Some(WireMsg::KvStats { stats })) => {
+                        leaked += stats.blocks_in_use;
+                        break;
+                    }
+                    Ok(Some(_stale)) => {}
+                    _ => break,
+                }
+            }
+        }
+        self.shutdown();
+        ChaosFailure { death, leaked_blocks: leaked }
+    }
+
+    fn shutdown(&mut self) {
+        for wi in 0..self.peers.len() {
+            let _ = self.peers[wi].link.send(WireMsg::Shutdown);
+        }
+        for p in &mut self.peers {
+            if let Some(t) = p.thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+/// Run one chaos session to completion. Never panics on peer
+/// misbehavior: faults either recover transparently (`auto_recover`) or
+/// abort with a typed [`ChaosFailure`] after freeing all KV.
+pub fn run_chaos(cfg: &ChaosCfg) -> Result<ChaosReport, ChaosFailure> {
+    let mut h = match Chaos::new(cfg) {
+        Ok(h) => h,
+        Err(e) => {
+            return Err(ChaosFailure {
+                death: WorkerDeath { worker: 0, cause: DeathCause::Protocol(e) },
+                leaked_blocks: 0,
+            });
+        }
+    };
+    let ids: Vec<RequestId> = (0..cfg.requests)
+        .map(|r| {
+            h.sched
+                .submit(prompt_for(r), cfg.gen_tokens)
+                .expect("chaos prompts are valid by construction")
+        })
+        .collect();
+
+    let mut steps = 0usize;
+    loop {
+        match h.step_inner() {
+            Ok(idle) => {
+                steps += 1;
+                if idle {
+                    break;
+                }
+            }
+            Err(death) => {
+                if !cfg.auto_recover {
+                    return Err(h.abort(death));
+                }
+                // cascade like the leader: recovery may trip over another
+                // dying link; give up if any worker needs recovering twice
+                // within one episode (its own replacement died)
+                let mut d = death;
+                let mut tried: Vec<usize> = Vec::new();
+                loop {
+                    if tried.contains(&d.worker) {
+                        return Err(h.abort(d));
+                    }
+                    tried.push(d.worker);
+                    match h.recover(&d) {
+                        Ok(()) => break,
+                        Err(d2) => d = d2,
+                    }
+                }
+            }
+        }
+        if steps > 20_000 {
+            let d = WorkerDeath {
+                worker: 0,
+                cause: DeathCause::Protocol("chaos session exceeded step cap".into()),
+            };
+            return Err(h.abort(d));
+        }
+    }
+
+    // drained: the leak check must see zero mapped blocks pool-wide
+    let stats = match h.barrier() {
+        Ok(s) => s,
+        Err(d) => return Err(h.abort(d)),
+    };
+    let outputs = ids
+        .iter()
+        .map(|&id| h.sched.poll(id).map(|s| s.tokens).unwrap_or_default())
+        .collect();
+    h.shutdown();
+    Ok(ChaosReport {
+        outputs,
+        worker_deaths: h.deaths,
+        recoveries: h.recoveries,
+        tokens_replayed: h.tokens_replayed,
+        steps,
+        leaked_blocks: stats.blocks_in_use,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_run_completes_clean() {
+        let cfg = ChaosCfg::default();
+        let r = run_chaos(&cfg).expect("golden run");
+        assert_eq!(r.outputs.len(), cfg.requests);
+        assert!(r.outputs.iter().all(|o| o.len() == cfg.gen_tokens));
+        assert_eq!(r.worker_deaths, 0);
+        assert_eq!(r.leaked_blocks, 0);
+    }
+
+    #[test]
+    fn golden_run_is_deterministic() {
+        let cfg = ChaosCfg::default();
+        let a = run_chaos(&cfg).expect("run a");
+        let b = run_chaos(&cfg).expect("run b");
+        assert_eq!(a.outputs, b.outputs);
+    }
+
+    #[test]
+    fn kill_mid_decode_recovers_bit_identical() {
+        let golden = run_chaos(&ChaosCfg::default()).expect("golden");
+        let mut cfg = ChaosCfg::default();
+        // kill worker 1's link mid-decode (prefill is ~6 sends, decode
+        // iterations are 4 sends each on this geometry)
+        cfg.fault_plan = Some(FaultPlan::parse("worker=1,kill-send=20").expect("plan"));
+        let faulted = run_chaos(&cfg).expect("faulted run must recover");
+        assert!(faulted.worker_deaths >= 1, "the kill must have been detected");
+        assert!(faulted.recoveries >= 1);
+        assert!(faulted.tokens_replayed > 0);
+        assert_eq!(faulted.leaked_blocks, 0);
+        assert_eq!(faulted.outputs, golden.outputs, "recovery must be bit-identical");
+    }
+
+    #[test]
+    fn no_recover_mode_fails_typed_without_leaks() {
+        let mut cfg = ChaosCfg::default();
+        cfg.fault_plan = Some(FaultPlan::parse("worker=0,kill-recv=5").expect("plan"));
+        cfg.auto_recover = false;
+        let err = run_chaos(&cfg).expect_err("death must surface typed");
+        assert_eq!(err.death.worker, 0);
+        assert_eq!(err.leaked_blocks, 0, "aborted session must free all KV");
+    }
+}

@@ -49,15 +49,38 @@
 //! workers, combine on K/V arrival) and §5 chunked prefill are unchanged
 //! underneath; §4.3's staggered waves survive only as the
 //! [`GroupMode::ByWave`] driver grouping.
+//!
+//! # Fault tolerance (paper §5)
+//!
+//! Every wire operation is typed: a worker that dies, hangs, or emits
+//! garbage surfaces as a [`WorkerDeath`] error, never a panic. Receives
+//! run under the [`HealthPolicy`] deadline/retry ladder (per-worker
+//! [`HealthTracker`] strikes); fatal link errors and `WorkerError`
+//! reports declare death immediately. When `auto_recover` is on (the
+//! default), [`DisaggPipeline::step`] catches the death and runs the
+//! preempt-replay-rebuild protocol documented in
+//! [`crate::coordinator::failover`]: every live request is preempted
+//! through the scheduler's promoted-token replay, a replacement worker is
+//! spawned, surviving links are drained to a clean boundary (`KvStatsReq`
+//! FIFO barrier), and serving resumes — recovered output bit-identical to
+//! an unfailed run on the native backend. [`FaultPlan`]
+//! (`--fault-plan`) arms deterministic fault injection on the leader-side
+//! links for testing all of this.
 
+use std::cell::RefCell;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::coordinator::failover::{
+    DeathCause, HealthPolicy, HealthTracker, Verdict, WorkerDeath,
+};
 use crate::kernels::AttnBackendKind;
 use crate::kvcache::{KvDtype, PrefixIndex};
 use crate::metrics::{KvCacheStats, ServeMetrics, StepBreakdown};
-use crate::net::{inproc, tcp, Transport, TransportKind};
+use crate::net::{
+    inproc, tcp, DeadTransport, FaultPlan, FaultTransport, Transport, TransportKind,
+};
 use crate::netsim::stack::{NetStackModel, LINE_RATE_400G};
 use crate::obs;
 use crate::runtime::engine::Engine;
@@ -150,6 +173,21 @@ pub struct PipelineOpts {
     /// now a JSONL-exportable event). Records only while `obs::trace`
     /// collection is enabled (the CLI enables it for the run).
     pub step_trace: bool,
+    /// Deterministic fault injection (`--fault-plan`): wrap the leader
+    /// side of matching worker links in a [`FaultTransport`] applying the
+    /// plan's drop/delay/corrupt/kill schedule. `None` (or an unarmed
+    /// plan) leaves the links untouched — zero cost on the healthy path.
+    /// Respawned replacement workers are never wrapped, so kill schedules
+    /// fire once and a faulted run still terminates.
+    pub fault_plan: Option<FaultPlan>,
+    /// Worker-death detection knobs: per-attempt receive deadline, retry
+    /// count and backoff (`--recv-deadline-ms`, `--recv-retries`).
+    pub health: HealthPolicy,
+    /// Recover from worker deaths inside [`DisaggPipeline::step`]
+    /// (preempt-replay-rebuild) instead of surfacing the [`WorkerDeath`]
+    /// to the caller. On by default; tests that assert on the typed error
+    /// turn it off.
+    pub auto_recover: bool,
 }
 
 impl PipelineOpts {
@@ -174,6 +212,9 @@ impl PipelineOpts {
             prefix_cache: false,
             overcommit: false,
             step_trace: false,
+            fault_plan: None,
+            health: HealthPolicy::default(),
+            auto_recover: true,
         }
     }
 }
@@ -181,11 +222,17 @@ impl PipelineOpts {
 struct WorkerHandle {
     link: Box<dyn Transport>,
     thread: Option<std::thread::JoinHandle<()>>,
+    /// Strike counter of the death-detection retry ladder (see
+    /// [`crate::coordinator::failover`]). RefCell: wire helpers take
+    /// `&self`, and the pipeline is single-threaded on the leader side.
+    health: RefCell<HealthTracker>,
 }
 
 /// Spawn one attention-worker thread connected over the configured
 /// transport: a paced in-process channel, or a real TCP loopback socket
-/// carrying serialized `net::codec` frames.
+/// carrying serialized `net::codec` frames. On the first spawn (not a
+/// recovery respawn), the leader-side link endpoint is wrapped in a
+/// [`FaultTransport`] when the pipeline's fault plan targets this worker.
 fn spawn_worker(opts: &PipelineOpts, geom: ModelGeom, idx: usize, respawn: bool) -> Result<WorkerHandle> {
     let cfg = AttnWorkerCfg {
         artifacts_dir: opts.artifacts_dir.clone(),
@@ -202,23 +249,33 @@ fn spawn_worker(opts: &PipelineOpts, geom: ModelGeom, idx: usize, respawn: bool)
     };
     let name = if respawn { format!("lamina-attn-{idx}-r") } else { format!("lamina-attn-{idx}") };
     let builder = std::thread::Builder::new().name(name);
-    match opts.transport {
+    let (mut link, thread): (Box<dyn Transport>, _) = match opts.transport {
         TransportKind::Inproc => {
             let (leader_end, worker_end) =
                 inproc::pair(opts.stack, LINE_RATE_400G, opts.time_scale);
             let thread = builder
                 .spawn(move || run_attn_worker(cfg, worker_end))
                 .context("spawn attention worker")?;
-            Ok(WorkerHandle { link: Box::new(leader_end), thread: Some(thread) })
+            (Box::new(leader_end), thread)
         }
         TransportKind::Tcp => {
             let (leader_end, worker_end) = tcp::pair().context("tcp loopback pair")?;
             let thread = builder
                 .spawn(move || run_attn_worker(cfg, worker_end))
                 .context("spawn attention worker")?;
-            Ok(WorkerHandle { link: Box::new(leader_end), thread: Some(thread) })
+            (Box::new(leader_end), thread)
+        }
+    };
+    // replacement workers are never fault-wrapped: kill schedules fire
+    // once, so a faulted run recovers and terminates
+    if !respawn {
+        if let Some(plan) = &opts.fault_plan {
+            if plan.is_armed() && plan.applies_to(idx) {
+                link = Box::new(FaultTransport::new(link, plan.clone(), idx as u64));
+            }
         }
     }
+    Ok(WorkerHandle { link, thread: Some(thread), health: RefCell::new(HealthTracker::default()) })
 }
 
 /// One serving session's engine-side state: the scheduler (control plane)
@@ -430,7 +487,60 @@ impl DisaggPipeline {
     /// One engine iteration: admit, then one prefill chunk **or** one
     /// decode pass over the running batch (grouped by the session's
     /// [`GroupMode`]), then retire finishes and refresh the KV snapshot.
+    ///
+    /// An attention-worker death mid-iteration does not panic and (with
+    /// `auto_recover`, the default) does not error: the iteration's
+    /// partial work is abandoned, recovery preempts every live request
+    /// and respawns the worker, and the outcome reports the death via
+    /// [`StepOutcome::recovered_workers`] (the preempted ids replay
+    /// through the normal admission path on later steps, bit-identical).
+    /// With `auto_recover` off the typed [`WorkerDeath`] surfaces in the
+    /// `Err` for the caller to downcast.
     pub fn step(&mut self) -> Result<StepOutcome> {
+        match self.step_inner() {
+            Ok(o) => Ok(o),
+            Err(e) => self.catch_death(e),
+        }
+    }
+
+    /// Recovery path of [`Self::step`]: classify the error and, for
+    /// worker deaths under `auto_recover`, run preempt-replay-rebuild.
+    /// Recovery itself may trip over *another* dying link (multi-fault
+    /// plans); the loop recovers each in turn, giving up only if the same
+    /// worker dies twice in one iteration.
+    fn catch_death(&mut self, e: anyhow::Error) -> Result<StepOutcome> {
+        let mut outcome = StepOutcome::default();
+        let mut err = e;
+        loop {
+            let death = match err.downcast::<WorkerDeath>() {
+                Ok(d) => d,
+                Err(other) => return Err(other),
+            };
+            if !self.opts.auto_recover || self.session.is_none() {
+                return Err(anyhow::Error::new(death));
+            }
+            if outcome.recovered_workers.contains(&death.worker) {
+                // its own replacement died during recovery — unrecoverable
+                return Err(anyhow::Error::new(death));
+            }
+            match self.recover_from_death(death.worker, &death.cause) {
+                Ok(preempted) => {
+                    outcome.recovered_workers.push(death.worker);
+                    for id in preempted {
+                        if !outcome.preempted.contains(&id) {
+                            outcome.preempted.push(id);
+                        }
+                    }
+                    break;
+                }
+                Err(e2) => err = e2,
+            }
+        }
+        outcome.idle = self.session_ref().sched.is_idle();
+        Ok(outcome)
+    }
+
+    fn step_inner(&mut self) -> Result<StepOutcome> {
         let _sp_step = obs::span("leader", "step");
         let workers_n = self.workers.len().max(1);
         let mut outcome = StepOutcome::default();
@@ -671,6 +781,66 @@ impl DisaggPipeline {
         Ok(m)
     }
 
+    // ---- typed wire error plane -------------------------------------------
+
+    /// Declare worker `wi` dead: bump the `failover.*` detection metrics,
+    /// drop a timeline marker, and build the typed error [`Self::step`]
+    /// catches for recovery. `since` is when the failing operation began
+    /// (detection latency = now − since).
+    fn declare_dead(&self, wi: usize, cause: DeathCause, since: Instant) -> anyhow::Error {
+        crate::metrics::note_worker_death(since.elapsed().as_secs_f64());
+        obs::instant(
+            "failover",
+            "worker-dead",
+            vec![
+                ("worker", obs::ArgVal::I(wi as i64)),
+                ("cause", obs::ArgVal::S(cause.name().to_string())),
+            ],
+        );
+        anyhow::Error::new(WorkerDeath { worker: wi, cause })
+    }
+
+    /// One receive from worker `wi` under the health policy's
+    /// deadline/retry ladder. A healthy message resets the worker's
+    /// strikes; expiries escalate through [`Verdict::Retry`] (counted in
+    /// `failover.retries`) to a `Hang` death; fatal link errors and
+    /// `WorkerError` reports declare death immediately.
+    fn recv_worker(&self, wi: usize) -> Result<WireMsg> {
+        let worker = &self.workers[wi];
+        let policy = &self.opts.health;
+        let t0 = Instant::now();
+        loop {
+            let attempt = worker.health.borrow().strikes();
+            match worker.link.recv_timeout(policy.attempt_deadline(attempt)) {
+                Ok(Some(WireMsg::WorkerError { msg })) => {
+                    return Err(self.declare_dead(wi, DeathCause::Protocol(msg), t0));
+                }
+                Ok(Some(msg)) => {
+                    worker.health.borrow_mut().on_alive();
+                    return Ok(msg);
+                }
+                Ok(None) => match worker.health.borrow_mut().on_timeout(policy) {
+                    Verdict::Retry(_) => crate::metrics::note_failover_retry(),
+                    Verdict::Dead => {
+                        return Err(self.declare_dead(wi, DeathCause::Hang, t0));
+                    }
+                },
+                Err(e) => {
+                    return Err(self.declare_dead(wi, DeathCause::of_transport(&e), t0));
+                }
+            }
+        }
+    }
+
+    /// Send to worker `wi`; a failed send IS a death (the link is gone or
+    /// unusable — sends have no retry ladder).
+    fn send_to(&self, wi: usize, msg: WireMsg) -> Result<()> {
+        self.workers[wi]
+            .link
+            .send(msg)
+            .map_err(|e| self.declare_dead(wi, DeathCause::of_transport(&e), Instant::now()))
+    }
+
     // ---- attention round-trip -------------------------------------------
 
     fn send_q(&self, layer: usize, slots: &[u32], q: &HostTensor, lens: &[i32],
@@ -679,7 +849,7 @@ impl DisaggPipeline {
         let mc = self.config();
         let w = self.workers.len();
         let hs = mc.heads / w;
-        for (wi, worker) in self.workers.iter().enumerate() {
+        for wi in 0..w {
             let qs = slice_heads(q, wi * hs, hs);
             let msg = WireMsg::StepQ {
                 layer,
@@ -690,7 +860,7 @@ impl DisaggPipeline {
                 overlap: self.opts.overlap,
             };
             self.step_net_bytes.set(self.step_net_bytes.get() + msg.wire_bytes());
-            worker.link.send(msg).map_err(|e| anyhow!(e))?;
+            self.send_to(wi, msg)?;
         }
         Ok(())
     }
@@ -700,14 +870,14 @@ impl DisaggPipeline {
         let mc = self.config();
         let w = self.workers.len();
         let khs = mc.kv_heads / w;
-        for (wi, worker) in self.workers.iter().enumerate() {
+        for wi in 0..w {
             let msg = WireMsg::StepKv {
                 layer,
                 k: slice_heads(k, wi * khs, khs),
                 v: slice_heads(v, wi * khs, khs),
             };
             self.step_net_bytes.set(self.step_net_bytes.get() + msg.wire_bytes());
-            worker.link.send(msg).map_err(|e| anyhow!(e))?;
+            self.send_to(wi, msg)?;
         }
         Ok(())
     }
@@ -721,22 +891,34 @@ impl DisaggPipeline {
         let hs = mc.heads / w;
         let hd = mc.head_dim;
         let mut shards: Vec<HostTensor> = Vec::with_capacity(w);
-        for (wi, worker) in self.workers.iter().enumerate() {
-            let msg = worker.link.recv().map_err(|e| anyhow!(e))?;
-            match msg {
+        for wi in 0..w {
+            match self.recv_worker(wi)? {
                 WireMsg::AttnOut { layer: l, out: shard } => {
                     if l != layer {
-                        bail!("attention out for layer {l}, expected {layer}");
+                        // protocol desync: the link is unusable, treat as death
+                        return Err(self.declare_dead(
+                            wi,
+                            DeathCause::Protocol(format!(
+                                "attention out for layer {l}, expected {layer}"
+                            )),
+                            Instant::now(),
+                        ));
                     }
                     shards.push(shard);
                 }
-                WireMsg::WorkerError { msg } => bail!("attention worker {wi}: {msg}"),
-                other => bail!("unexpected reply {other:?}"),
+                other => {
+                    return Err(self.declare_dead(
+                        wi,
+                        DeathCause::Protocol(format!("unexpected reply {other:?}")),
+                        Instant::now(),
+                    ));
+                }
             }
         }
         if w == 1 {
-            // single shard IS the full [bucket, H, hd] output — zero-copy
-            return Ok(shards.pop().unwrap());
+            // single shard IS the full [bucket, H, hd] output — zero-copy.
+            // pop() is infallible: the loop above pushed exactly w == 1.
+            return Ok(shards.pop().expect("one shard pushed"));
         }
         // interleave head shards back into [bucket, H, hd]
         let mut out = vec![0.0f32; bucket * mc.heads * hd];
@@ -757,8 +939,8 @@ impl DisaggPipeline {
     /// Free `slot`'s KV blocks on every attention worker (request retired).
     fn retire_slot(&self, slot: u32) -> Result<()> {
         let _sp = obs::span("wire", "retire").arg("slot", slot as i64);
-        for worker in &self.workers {
-            worker.link.send(WireMsg::Retire { slot }).map_err(|e| anyhow!(e))?;
+        for wi in 0..self.workers.len() {
+            self.send_to(wi, WireMsg::Retire { slot })?;
         }
         Ok(())
     }
@@ -771,11 +953,8 @@ impl DisaggPipeline {
             .arg("dst", dst_slot as i64)
             .arg("src", src_slot as i64)
             .arg("tokens", tokens as i64);
-        for worker in &self.workers {
-            worker
-                .link
-                .send(WireMsg::MapBlocks { slot: dst_slot, src_slot, tokens })
-                .map_err(|e| anyhow!(e))?;
+        for wi in 0..self.workers.len() {
+            self.send_to(wi, WireMsg::MapBlocks { slot: dst_slot, src_slot, tokens })?;
         }
         Ok(())
     }
@@ -785,16 +964,20 @@ impl DisaggPipeline {
     /// block shrinks with the shard width).
     pub fn kv_stats(&self) -> Result<KvCacheStats> {
         let _sp = obs::span("wire", "kv_stats");
-        for worker in &self.workers {
-            worker.link.send(WireMsg::KvStatsReq).map_err(|e| anyhow!(e))?;
+        for wi in 0..self.workers.len() {
+            self.send_to(wi, WireMsg::KvStatsReq)?;
         }
         let mut sum = KvCacheStats::default();
-        for (wi, worker) in self.workers.iter().enumerate() {
-            let msg = worker.link.recv().map_err(|e| anyhow!(e))?;
-            match msg {
+        for wi in 0..self.workers.len() {
+            match self.recv_worker(wi)? {
                 WireMsg::KvStats { stats } => sum = sum.merge(&stats),
-                WireMsg::WorkerError { msg } => bail!("attention worker {wi}: {msg}"),
-                other => bail!("unexpected reply {other:?}"),
+                other => {
+                    return Err(self.declare_dead(
+                        wi,
+                        DeathCause::Protocol(format!("unexpected reply {other:?}")),
+                        Instant::now(),
+                    ));
+                }
             }
         }
         Ok(sum)
@@ -1095,7 +1278,7 @@ impl DisaggPipeline {
         let w = self.workers.len();
         let hs = mc.heads / w;
         let khs = mc.kv_heads / w;
-        for (wi, worker) in self.workers.iter().enumerate() {
+        for wi in 0..w {
             let msg = WireMsg::PrefillChunk {
                 layer,
                 slot,
@@ -1107,7 +1290,7 @@ impl DisaggPipeline {
                 seq_bucket,
             };
             self.step_net_bytes.set(self.step_net_bytes.get() + msg.wire_bytes());
-            worker.link.send(msg).map_err(|e| anyhow!(e))?;
+            self.send_to(wi, msg)?;
         }
         Ok(())
     }
@@ -1203,6 +1386,114 @@ impl DisaggPipeline {
 
     // ---- fault tolerance (paper §5) ---------------------------------------
 
+    /// Live recovery from a declared worker death, run inside [`Self::step`]:
+    ///
+    /// 1. **Preempt** every live request through the scheduler's
+    ///    promoted-token replay — its KV head-shard on the dead worker is
+    ///    gone, so its context must re-prefill (effective prompt = prompt
+    ///    ⧺ generated-so-far; the surviving shards are overwritten with
+    ///    byte-identical values, so replay is idempotent there).
+    /// 2. **Respawn** a replacement worker with an empty arena (never
+    ///    fault-wrapped), folding the dead link's wire counters into the
+    ///    pool totals.
+    /// 3. **Flush + drain**: queued retirements go to every worker (a
+    ///    `Retire` for a slot the fresh arena never saw is a no-op), then
+    ///    a `KvStatsReq` round-trip per link acts as a FIFO barrier that
+    ///    discards the failed iteration's in-flight replies and yields a
+    ///    clean occupancy snapshot.
+    ///
+    /// Decoding resumes through the normal admission path on subsequent
+    /// steps; the recovered output is bit-identical to an unfailed run on
+    /// the native backend (chaos suite + `fault-smoke`). Returns the
+    /// preempted ids.
+    fn recover_from_death(&mut self, idx: usize, cause: &DeathCause) -> Result<Vec<RequestId>> {
+        let t0 = Instant::now();
+        let _sp = obs::span("failover", "recover")
+            .arg("worker", idx as i64)
+            .arg_str("cause", cause.name());
+        // (1) preempt — reverse running order so front-of-queue insertion
+        // re-admits in the original order. Slots are captured first: a
+        // request whose FIRST prefill chunk was in flight when the worker
+        // died shows no progress to the scheduler (wrote_kv = false, no
+        // Retire queued on preempt), yet surviving workers may have
+        // appended that chunk — retiring every preempted slot explicitly
+        // keeps their arenas leak-free (no-op where nothing landed).
+        let live = self.session_ref().sched.live_ids();
+        {
+            let s = self.session_mut();
+            let slots: Vec<(RequestId, Option<u32>)> =
+                live.iter().map(|&id| (id, s.sched.slot_of(id))).collect();
+            for &id in live.iter().rev() {
+                if let Some(ix) = s.prefix.as_mut() {
+                    ix.remove(id);
+                }
+                s.sched.preempt(id);
+            }
+            let queued = s.sched.take_retirements();
+            for &(id, slot) in &slots {
+                let Some(slot) = slot else { continue };
+                if !queued.iter().any(|&(_, qs)| qs == slot) {
+                    s.sched.push_retirement(id, slot);
+                }
+            }
+            for (id, slot) in queued {
+                s.sched.push_retirement(id, slot);
+            }
+        }
+        let mut tokens_replayed = 0u64;
+        {
+            let s = self.session_ref();
+            for &id in &live {
+                if let Some(p) = s.sched.effective_prompt(id) {
+                    tokens_replayed += p.len() as u64;
+                }
+            }
+        }
+        // (2) respawn
+        self.retired_wire.merge(&self.workers[idx].link.stats());
+        let geom = ModelGeom::of(self.config());
+        // the old handle is dropped without a join: its thread exits on its
+        // own once it observes the severed link (a *hung* thread would
+        // otherwise block recovery here)
+        self.workers[idx] = spawn_worker(&self.opts, geom, idx, true)?;
+        // (3) flush queued retirements, then the drain barrier
+        let retires = self.session_mut().sched.take_retirements();
+        self.send_retirements(&retires)?;
+        for wi in 0..self.workers.len() {
+            self.send_to(wi, WireMsg::KvStatsReq)?;
+        }
+        let mut snap = KvCacheStats::default();
+        for wi in 0..self.workers.len() {
+            loop {
+                match self.recv_worker(wi)? {
+                    WireMsg::KvStats { stats } => {
+                        snap = snap.merge(&stats);
+                        break;
+                    }
+                    // the failed iteration's stale in-flight replies
+                    _stale => {}
+                }
+            }
+        }
+        let s = self.session_mut();
+        s.kv_snap = snap;
+        s.metrics.record_kv(snap);
+        s.metrics.record_recovery(tokens_replayed, t0.elapsed().as_secs_f64());
+        Ok(live)
+    }
+
+    /// Deterministic chaos hook: sever worker `idx`'s link *now*. The
+    /// leader-side endpoint is replaced with a dead stub (counters
+    /// preserved) and the real link is dropped, so the worker thread
+    /// observes the disconnect and exits. The next wire operation touching
+    /// the worker surfaces a typed [`WorkerDeath`], which [`Self::step`]
+    /// recovers from when `auto_recover` is on.
+    pub fn inject_worker_death(&mut self, idx: usize) {
+        let w = &mut self.workers[idx];
+        let dead = DeadTransport::new(w.link.kind(), w.link.stats());
+        w.link = Box::new(dead);
+    }
+
     /// Simulate an attention-worker failure: its thread is terminated and
     /// all its KV state (the head shard of every live request) is lost.
     pub fn kill_attn_worker(&mut self, idx: usize) {
@@ -1276,6 +1567,7 @@ fn take4(outs: &mut Vec<HostTensor>) -> Result<(HostTensor, HostTensor, HostTens
     if outs.len() != 4 {
         bail!("expected 4 outputs, got {}", outs.len());
     }
+    // infallible: the arity was just checked (engine outputs, not wire data)
     let r = outs.pop().unwrap();
     let v = outs.pop().unwrap();
     let k = outs.pop().unwrap();

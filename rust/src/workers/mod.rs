@@ -97,13 +97,44 @@
 //! charges **zero** bytes (see `cargo bench` → `BENCH_decode.json`).
 //! Simulated-network accounting is unchanged: `wire_bytes()` still charges
 //! the logical payload size to the modelled link.
+//!
+//! # Failure handling: detection → declare dead → preempt-replay-rebuild
+//!
+//! Every wire operation in the leader is typed
+//! ([`crate::net::TransportError`]) — a peer that dies, hangs, or emits
+//! garbage can never panic the leader. Failures extend the lifecycle
+//! diagram above:
+//!
+//! ```text
+//!   recv ──deadline──▶ retry (backoff ×N) ──▶ declare DEAD ──▶ recover:
+//!    │                                          │    preempt every live request
+//!    └─ Disconnected / Codec / WorkerError ─────┘    (promoted-token replay)
+//!                                                    respawn the worker (fresh arena)
+//!                                                    flush Retires + KvStats barrier
+//!                                                    re-prefill prompt ⧺ generated
+//!                                                    resume decoding — bit-identical
+//! ```
+//!
+//! Detection policy lives in [`crate::coordinator::failover`]
+//! ([`crate::coordinator::failover::HealthPolicy`]: recv deadline, bounded
+//! retries, exponential backoff), the recovery procedure in
+//! [`leader::DisaggPipeline`] (`auto_recover`), and deterministic fault
+//! injection in [`crate::net::fault`] (`--fault-plan`). The [`chaos`]
+//! harness drives all three end-to-end without artifacts: real scheduler,
+//! real attention workers, faulted links, and a pseudo-model whose
+//! constant-K attention makes recovered output bit-comparable to an
+//! unfailed golden run. Failure telemetry lands in the metrics registry
+//! (`failover.worker_deaths`, `failover.recovery_ns`, …) and on the
+//! `failover` span track of the trace timeline.
 
 pub mod attn_worker;
+pub mod chaos;
 pub mod leader;
 pub mod messages;
 pub mod smoke;
 
 pub use attn_worker::{run_attn_worker, AttnWorkerCfg, ModelGeom, PAD_SLOT};
+pub use chaos::{run_chaos, ChaosCfg, ChaosFailure, ChaosReport};
 pub use leader::{DisaggPipeline, PipelineOpts};
 pub use messages::WireMsg;
 pub use smoke::{run_trace_smoke, SmokeReport};

@@ -2,7 +2,9 @@
 # Repo-wide verification gate: release build, full test suite, the obs
 # trace-emission smoke (an artifact-free scripted session must export a
 # Perfetto-parseable trace — happy path AND worker-death truncation), the
-# bench suite in quick mode (which regenerates rust/BENCH_decode.json with
+# fault-matrix smoke (chaos sessions with worker kills at prefill,
+# mid-decode, and the drain tail, over both transports — each must recover
+# bit-identically with zero leaked KV blocks), the bench suite in quick mode (which regenerates rust/BENCH_decode.json with
 # codec GB/s, TCP-loopback RTT, KV-gather, native-kernel decode-step and
 # obs-overhead rows), and the bench regression guard (decode-path ns/iter
 # must stay within 20% of rust/BENCH_baseline.json and per-step copied
@@ -28,6 +30,21 @@ python3 scripts/validate_trace.py "$TRACE_TMP/trace.json"
 target/release/lamina trace-smoke --steps 6 --kill-worker \
   --trace-out "$TRACE_TMP/trace-kill.json"
 python3 scripts/validate_trace.py "$TRACE_TMP/trace-kill.json"
+
+echo "== fault-matrix smoke (kill at prefill / mid-decode / drain x transport) =="
+# artifact-free chaos sessions: each must recover bit-identically to its
+# golden pass with zero leaked KV blocks (fault-smoke exits nonzero
+# otherwise). Plans target the worker-link operation counts: ~6 sends
+# during prefill, 4 per decode iteration, then the retire/drain tail.
+for transport in inproc tcp; do
+  for plan in "worker=0,kill-send=1" "worker=1,kill-send=20" "worker=0,kill-recv=17"; do
+    echo "-- fault-smoke --transport $transport --fault-plan $plan"
+    target/release/lamina fault-smoke --transport "$transport" --fault-plan "$plan"
+  done
+done
+# no-recover mode: the death must surface typed, still with zero leaks
+target/release/lamina fault-smoke --transport inproc \
+  --fault-plan "worker=1,kill-send=20" --no-recover
 
 if [[ "${1:-}" != "--no-bench" ]]; then
   echo "== cargo bench (LAMINA_BENCH_QUICK=1) =="
