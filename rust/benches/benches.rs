@@ -145,6 +145,7 @@ fn main() {
     bench_host_staging(&mut b, &mut rows);
     bench_obs(&mut b, &mut rows);
     bench_failover(&mut b, &mut rows);
+    bench_degrade(&mut b, &mut rows);
     if artifacts_dir().join("manifest.json").exists() {
         bench_runtime(&mut b);
         bench_pipeline(&mut b, &mut rows);
@@ -1047,6 +1048,90 @@ fn bench_failover(b: &mut Bench, rows: &mut Vec<Json>) {
         (
             "recovered_tokens_per_s",
             Json::num(session_tokens as f64 / (faulted.0.max(1.0) * 1e-9)),
+        ),
+    ]));
+}
+
+// ---- failover: graceful degradation (reshard to the survivors) ------------
+
+/// Degrade-path chaos benchmark: respawn disabled, one worker of a W=4
+/// pool killed at a step boundary — the pool reshards live to the three
+/// survivors (epoch-fenced W→W−1) and keeps serving. Each iteration must
+/// end bit-identical to the fault-free W=4 golden pass with zero leaked
+/// KV blocks. The row reports the mean degrade latency from the
+/// `failover.reshard_ns` registry (preempt + re-plan + re-welcome +
+/// fenced barrier) and the degraded end-to-end token rate against the
+/// healthy baseline.
+fn bench_degrade(b: &mut Bench, rows: &mut Vec<Json>) {
+    use lamina::workers::{run_chaos, ChaosCfg};
+
+    let mut cfg = ChaosCfg::default();
+    cfg.workers = 4;
+    let golden = run_chaos(&cfg).expect("golden W=4 chaos session");
+    assert_eq!(golden.worker_deaths, 0, "golden run must be fault-free");
+    assert_eq!(golden.leaked_blocks, 0);
+    let session_tokens: usize = golden.outputs.iter().map(Vec::len).sum();
+
+    let iters = if b.is_quick() { 3 } else { 12 };
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let r = run_chaos(&cfg).expect("healthy chaos session");
+        assert_eq!(r.outputs, golden.outputs);
+    }
+    let healthy_ns = t0.elapsed().as_secs_f64() * 1e9 / iters as f64;
+
+    // sever worker 1's link at step boundary 4 (mid-decode) with respawn
+    // disabled: every iteration degrades W=4 → 3 exactly once
+    cfg.allow_respawn = false;
+    cfg.min_workers = 2;
+    cfg.kill_at = vec![(4, 1)];
+    let reshard = lamina::obs::registry().histogram("failover.reshard_ns");
+    let r0 = reshard.snapshot();
+    let mut sum_ns = 0.0f64;
+    let mut min_ns = f64::INFINITY;
+    let mut replayed = 0u64;
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        let r = run_chaos(&cfg).expect("degraded session must keep serving");
+        let per = t0.elapsed().as_secs_f64() * 1e9;
+        assert_eq!(r.outputs, golden.outputs, "degraded output must be bit-identical");
+        assert_eq!(r.leaked_blocks, 0, "degradation leaked KV blocks");
+        assert_eq!(r.degrades, 1, "kill schedule never fired");
+        assert_eq!(r.final_workers, 3);
+        replayed += r.tokens_replayed;
+        sum_ns += per;
+        min_ns = min_ns.min(per);
+    }
+    let r1 = reshard.snapshot();
+    let reshard_ns = if r1.count > r0.count {
+        (r1.sum - r0.sum) as f64 / (r1.count - r0.count) as f64
+    } else {
+        0.0
+    };
+
+    eprintln!(
+        "failover/degrade-reshard: healthy W=4 session {:.2} ms → degraded-to-3 {:.2} ms \
+         (degrade {:.0} ns, {:.1} tokens replayed/iter)",
+        healthy_ns / 1e6,
+        sum_ns / iters as f64 / 1e6,
+        reshard_ns,
+        replayed as f64 / iters as f64
+    );
+
+    rows.push(Json::obj(vec![
+        ("name", Json::str("failover/degrade-reshard")),
+        ("ns_per_iter", Json::num(sum_ns / iters as f64)),
+        ("ns_per_iter_min", Json::num(min_ns)),
+        ("host_copy_bytes_per_iter", Json::num(0.0)),
+        ("healthy_session_ns", Json::num(healthy_ns)),
+        ("reshard_ns_mean", Json::num(reshard_ns)),
+        (
+            "tokens_replayed_per_iter",
+            Json::num(replayed as f64 / iters as f64),
+        ),
+        (
+            "degraded_tokens_per_s",
+            Json::num(session_tokens as f64 / ((sum_ns / iters as f64).max(1.0) * 1e-9)),
         ),
     ]));
 }

@@ -43,6 +43,47 @@
 //! paper-model cost estimates: rebuild is prefill-shaped and takes
 //! seconds, not hours, which is what makes discard-and-replay a sane
 //! policy at all.
+//!
+//! # Membership lifecycle (elastic shard pool)
+//!
+//! The worker pool is no longer fixed-width: membership is **elastic and
+//! epoch-fenced**, governed by [`MembershipPolicy`]. The life of a worker:
+//!
+//! ```text
+//!   spawn/respawn/adopt ──Hello──▶ leader validates codec version
+//!                                      │
+//!                                      ▼ Welcome{epoch, kv range, arena geometry}
+//!                              IN MEMBERSHIP (data plane open)
+//!                                      │ death (ladder exhausted / fatal link error)
+//!                                      ▼
+//!                     respawn allowed? ──yes──▶ respawn + reshard (same W)
+//!                            │ no
+//!                            ▼
+//!             W−1 ≥ min_workers? ──yes──▶ DEGRADE: reshard over survivors (W−1)
+//!                            │ no
+//!                            ▼
+//!              typed session failure (all requests cancelled, zero leaks)
+//!
+//!   adopt_worker() ──handshake──▶ quiesce at step boundary ──▶ reshard W→W+1
+//! ```
+//!
+//! **Epoch/fencing rules.** Every reshard — respawn recovery, degrade, or
+//! adoption — bumps the membership epoch and re-`Welcome`s *every* member.
+//! A `Welcome` makes the worker rebuild its arena from the carried
+//! geometry (dropping all cached blocks — the KV is rebuilt by replay, so
+//! nothing stale can survive) and echo the new epoch on every subsequent
+//! `KvStats`. The leader's post-reshard barrier sends `KvStatsReq` on
+//! every link and discards replies whose epoch predates the current
+//! membership, so an in-flight snapshot (or any frame queued behind it)
+//! from a dead geometry can never alias into the new one. Leader-side
+//! request state is rebuilt via the PR 6 promoted-token replay, which is
+//! what makes a degraded or adopted run **bit-identical** to an unfailed
+//! one on the native backend.
+//!
+//! After any *successful* reshard the leader resets every surviving
+//! worker's [`HealthTracker`] (see [`HealthTracker::reset`]): a later,
+//! unrelated death must face the full retry ladder again rather than
+//! inheriting strikes accumulated before the recovery.
 
 use std::time::Duration;
 
@@ -85,6 +126,34 @@ impl HealthPolicy {
     /// Total attempts a blocking receive makes before declaring death.
     pub fn attempts(&self) -> u32 {
         self.recv_retries + 1
+    }
+}
+
+/// Elastic-membership policy knobs (CLI: `--no-respawn`, `--min-workers`).
+/// Decides what the leader does when a worker death survives the retry
+/// ladder: respawn a replacement at the same width (the PR 8 behaviour),
+/// or degrade the pool to the survivors — down to a floor below which the
+/// session fails typed instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MembershipPolicy {
+    /// Respawn a replacement worker on death (`--no-respawn` clears this;
+    /// a cleared flag makes every death a degradation).
+    pub allow_respawn: bool,
+    /// Minimum pool width to keep serving at; degrading below it is a
+    /// typed session failure with zero leaked blocks.
+    pub min_workers: usize,
+}
+
+impl Default for MembershipPolicy {
+    fn default() -> MembershipPolicy {
+        MembershipPolicy { allow_respawn: true, min_workers: 1 }
+    }
+}
+
+impl MembershipPolicy {
+    /// Whether the pool may keep serving at `survivors` workers.
+    pub fn can_degrade_to(&self, survivors: usize) -> bool {
+        survivors >= self.min_workers.max(1)
     }
 }
 
@@ -149,6 +218,34 @@ impl std::fmt::Display for WorkerDeath {
 
 impl std::error::Error for WorkerDeath {}
 
+/// Typed terminal membership failure: a worker died, respawn is disabled,
+/// and the surviving pool would fall below the [`MembershipPolicy`] floor.
+/// Unlike [`WorkerDeath`] this is **not** recoverable — the leader refuses
+/// to degrade, flushes what bookkeeping it can (zero leaked KV blocks on
+/// the survivors), and surfaces this to the caller on every subsequent
+/// step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MembershipRefused {
+    /// Workers that would remain after dropping the dead one.
+    pub survivors: usize,
+    /// The effective `min_workers` floor (≥ 1).
+    pub floor: usize,
+    /// Why the dead worker was condemned.
+    pub cause: DeathCause,
+}
+
+impl std::fmt::Display for MembershipRefused {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cannot degrade to {} worker(s): below the --min-workers floor {} (death: {})",
+            self.survivors, self.floor, self.cause
+        )
+    }
+}
+
+impl std::error::Error for MembershipRefused {}
+
 /// Per-worker strike bookkeeping for the retry ladder. One tracker per
 /// worker link lives on the leader; strikes accumulate across *separate*
 /// receives too (a worker that limps from deadline to deadline without
@@ -186,6 +283,15 @@ impl HealthTracker {
 
     pub fn strikes(&self) -> u32 {
         self.strikes
+    }
+
+    /// Forget all strikes. Called for every *surviving* worker after a
+    /// successful recovery/reshard: `on_alive` only fires on the link that
+    /// received a message, so without this a worker that accumulated
+    /// strikes while the pool was busy recovering from an unrelated death
+    /// would face a later failure with an already-exhausted ladder.
+    pub fn reset(&mut self) {
+        self.strikes = 0;
     }
 }
 
@@ -306,5 +412,38 @@ mod tests {
     #[test]
     fn lost_fraction_head_level() {
         assert_eq!(lost_fraction(4), 0.25);
+    }
+
+    #[test]
+    fn tracker_reset_restores_full_ladder() {
+        let p = HealthPolicy {
+            recv_deadline: Duration::from_millis(10),
+            recv_retries: 2,
+            backoff: 1.0,
+        };
+        let mut t = HealthTracker::default();
+        assert_eq!(t.on_timeout(&p), Verdict::Retry(1));
+        assert_eq!(t.on_timeout(&p), Verdict::Retry(2));
+        // recovery completed elsewhere: the survivor's ladder is restored
+        t.reset();
+        assert_eq!(t.strikes(), 0);
+        assert_eq!(t.on_timeout(&p), Verdict::Retry(1));
+        assert_eq!(t.on_timeout(&p), Verdict::Retry(2));
+        assert_eq!(t.on_timeout(&p), Verdict::Dead);
+    }
+
+    #[test]
+    fn membership_policy_floor() {
+        let m = MembershipPolicy::default();
+        assert!(m.allow_respawn);
+        assert!(m.can_degrade_to(1));
+        let m = MembershipPolicy { allow_respawn: false, min_workers: 2 };
+        assert!(m.can_degrade_to(3));
+        assert!(m.can_degrade_to(2));
+        assert!(!m.can_degrade_to(1));
+        // a zero floor still refuses an empty pool
+        let m = MembershipPolicy { allow_respawn: false, min_workers: 0 };
+        assert!(m.can_degrade_to(1));
+        assert!(!m.can_degrade_to(0));
     }
 }

@@ -33,7 +33,10 @@ pub mod table;
 
 pub use arena::{ArenaCfg, KvBlockRef, PagedKvArena, TableView, PAD_SLOT};
 pub use block::{AllocError, BlockAllocator, BlockId};
-pub use partition::{head_level, kv_blocks_needed, kv_bytes_needed, request_level, Partition};
+pub use partition::{
+    head_level, head_ranges, kv_blocks_needed, kv_bytes_needed, request_level, Partition,
+    ShardRange,
+};
 pub use prefix::{PrefixHit, PrefixIndex};
 pub use quant::KvDtype;
 pub use table::{BlockTable, KvRegistry};

@@ -69,6 +69,56 @@ pub fn head_level(
     Ok(Partition { load, assignment })
 }
 
+/// One worker's contiguous KV-head range under elastic membership.
+///
+/// Unlike [`head_level`]'s round-robin deal (which requires the worker
+/// count to divide the head count), a [`ShardRange`] plan splits the heads
+/// into contiguous runs whose sizes differ by at most one — any worker
+/// count `1..=kv_heads` is valid, which is what lets the pool degrade to
+/// W−1 survivors or adopt a W+1-th member mid-session. The leader slices
+/// q/k/v by these ranges and interleaves attention outputs back at each
+/// range's query offset; the per-head online-softmax math is shard-width
+/// independent, so any plan over the same heads is bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRange {
+    /// First KV head of the range.
+    pub start: usize,
+    /// KV heads in the range (≥ 1).
+    pub count: usize,
+}
+
+impl ShardRange {
+    /// The matching query-head range under GQA: query heads follow their
+    /// KV group, so the range scales by `group` = `heads / kv_heads`.
+    pub fn q_range(&self, group: usize) -> ShardRange {
+        ShardRange { start: self.start * group, count: self.count * group }
+    }
+}
+
+/// Contiguous largest-remainder split of `kv_heads` across `workers`:
+/// the first `kv_heads % workers` workers get one extra head. Total always
+/// covers every head exactly once; sizes differ by ≤ 1.
+pub fn head_ranges(kv_heads: usize, workers: usize) -> Result<Vec<ShardRange>, PartitionError> {
+    if workers == 0 || kv_heads == 0 {
+        return Err(PartitionError("need ≥1 worker and ≥1 head".into()));
+    }
+    if workers > kv_heads {
+        return Err(PartitionError(format!(
+            "cannot split {kv_heads} kv heads across {workers} workers (each needs ≥1)"
+        )));
+    }
+    let base = kv_heads / workers;
+    let extra = kv_heads % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let count = base + usize::from(w < extra);
+        out.push(ShardRange { start, count });
+        start += count;
+    }
+    Ok(out)
+}
+
 /// KV blocks a paged arena needs to hold `seq_lens` at `block_size` tokens
 /// per block. Under head-level sharding every worker caches a head shard of
 /// *every* request, so the block count is worker-invariant (only the bytes
@@ -191,5 +241,52 @@ mod tests {
     fn zero_workers_rejected() {
         assert!(head_level(8, 0, &[1], 1.0).is_err());
         assert!(request_level(0, &[1], 1.0).is_err());
+        assert!(head_ranges(8, 0).is_err());
+        assert!(head_ranges(0, 2).is_err());
+    }
+
+    #[test]
+    fn head_ranges_cover_exactly_once_any_width() {
+        for kv_heads in 1..=16usize {
+            for workers in 1..=kv_heads {
+                let plan = head_ranges(kv_heads, workers).unwrap();
+                assert_eq!(plan.len(), workers);
+                let mut next = 0;
+                for r in &plan {
+                    assert_eq!(r.start, next, "contiguous");
+                    assert!(r.count >= 1);
+                    next += r.count;
+                }
+                assert_eq!(next, kv_heads, "covers every head");
+                let (min, max) = plan
+                    .iter()
+                    .fold((usize::MAX, 0), |(lo, hi), r| (lo.min(r.count), hi.max(r.count)));
+                assert!(max - min <= 1, "sizes differ by ≤ 1");
+            }
+        }
+    }
+
+    #[test]
+    fn head_ranges_nonuniform_split() {
+        // 4 kv heads over 3 workers: 2,1,1 — the chaos degrade geometry
+        let plan = head_ranges(4, 3).unwrap();
+        assert_eq!(
+            plan,
+            vec![
+                ShardRange { start: 0, count: 2 },
+                ShardRange { start: 2, count: 1 },
+                ShardRange { start: 3, count: 1 },
+            ]
+        );
+        // more workers than heads is a typed error, not a zero-head shard
+        assert!(head_ranges(4, 5).is_err());
+    }
+
+    #[test]
+    fn q_range_scales_by_gqa_group() {
+        let r = ShardRange { start: 2, count: 1 };
+        assert_eq!(r.q_range(2), ShardRange { start: 4, count: 2 });
+        // MHA (group 1) leaves the range unchanged
+        assert_eq!(r.q_range(1), r);
     }
 }

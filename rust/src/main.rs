@@ -52,7 +52,10 @@ real pipeline (tiny model, PJRT end-to-end):
           asserts recovered output is bit-identical with zero leaked KV
           blocks; prints the failover.* metrics. Flags: --transport,
           --fault-plan PLAN, --no-recover (typed failure instead of
-          recovery), --workers N (1|2|4)
+          recovery), --workers N (1..=4, contiguous head-range shards),
+          --no-respawn (degrade to the survivors instead of respawning),
+          --min-workers N (degradation floor), --adopt N (scale up by one
+          worker at step boundary N)
 
 flags:
   --requests N     trace subsample size for simulations (default 1000)
@@ -116,6 +119,15 @@ flags:
   --no-recover     disable automatic worker-death recovery: the first
                    declared death surfaces as a typed error instead of
                    preempt-replay-rebuild
+  --no-respawn     on worker death, degrade the pool to the survivors
+                   (epoch-fenced W→W−1 reshard, bit-identical output)
+                   instead of respawning a replacement at the same width
+  --min-workers N  smallest pool width degradation may leave; a death that
+                   would shrink below it fails typed with zero leaked KV
+                   blocks (default 1)
+  --adopt N        fault-smoke only: adopt one extra worker at step
+                   boundary N — handshake, quiesce, epoch-fenced W→W+1
+                   reshard, replay
 
 serve drives the request-lifecycle engine (submit → step → drain):
 requests join and leave the running batch at iteration granularity, and
@@ -129,7 +141,7 @@ const SPEC: &[&str] = &[
     "kv-budget-blocks!", "kv-dtype!", "prefix-cache!", "overcommit",
     "wave-driver", "step-trace", "trace-out!", "metrics-dump",
     "kill-worker", "fault-plan!", "recv-deadline-ms!", "recv-retries!",
-    "no-recover", "help",
+    "no-recover", "no-respawn", "min-workers!", "adopt!", "help",
 ];
 
 fn main() {
@@ -385,11 +397,20 @@ fn run(argv: &[String]) -> Result<(), String> {
                     .ok_or_else(|| format!("unknown transport '{t}' (use inproc|tcp)"))?;
             }
             let workers = args.usize_or("workers", cfg.workers).map_err(|e| e.to_string())?;
-            if ![1, 2, 4].contains(&workers) {
-                return Err(format!("--workers {workers}: must divide 4 KV heads (1|2|4)"));
+            if !(1..=4).contains(&workers) {
+                return Err(format!("--workers {workers}: need 1..=4 (4 KV heads to split)"));
             }
             cfg.workers = workers;
             cfg.auto_recover = !args.has("no-recover");
+            cfg.allow_respawn = !args.has("no-respawn");
+            cfg.min_workers = args.usize_or("min-workers", 1).map_err(|e| e.to_string())?;
+            // adoption only applies to the faulted pass below: the golden
+            // run stays the plain fault-free bit-identity reference
+            let adopt_at = if args.has("adopt") {
+                Some(args.usize_or("adopt", 0).map_err(|e| e.to_string())?)
+            } else {
+                None
+            };
             parse_health(args.get("recv-deadline-ms"), args.get("recv-retries"), &mut cfg.health)?;
             let plan = args
                 .get("fault-plan")
@@ -405,12 +426,12 @@ fn run(argv: &[String]) -> Result<(), String> {
                 cfg.transport.name(),
                 golden.steps
             );
-            let Some(plan) = plan else {
-                println!("no --fault-plan given: golden pass only");
+            cfg.adopt_at_step = adopt_at;
+            if plan.is_none() && adopt_at.is_none() {
+                println!("no --fault-plan or --adopt given: golden pass only");
                 return Ok(());
-            };
-
-            cfg.fault_plan = Some(plan);
+            }
+            cfg.fault_plan = plan;
             match lamina::workers::run_chaos(&cfg) {
                 Ok(r) => {
                     let identical = r.outputs == golden.outputs;
@@ -419,6 +440,12 @@ fn run(argv: &[String]) -> Result<(), String> {
                          {} engine steps",
                         r.worker_deaths, r.recoveries, r.tokens_replayed, r.steps
                     );
+                    if r.degrades + r.adoptions > 0 {
+                        println!(
+                            "membership: {} degrade(s)  {} adoption(s)  pool {} -> {} workers",
+                            r.degrades, r.adoptions, cfg.workers, r.final_workers
+                        );
+                    }
                     println!(
                         "recovered output bit-identical: {}   leaked KV blocks: {}",
                         identical, r.leaked_blocks
@@ -460,6 +487,8 @@ fn pipeline_opts(args: &Args, artifacts: &str) -> Result<PipelineOpts, String> {
     let mut opts = PipelineOpts::new(artifacts);
     opts.attn_workers = args.usize_or("workers", 2).map_err(|e| e.to_string())?;
     opts.overlap = !args.has("no-overlap");
+    opts.allow_respawn = !args.has("no-respawn");
+    opts.min_workers = args.usize_or("min-workers", 1).map_err(|e| e.to_string())?;
     opts.time_scale = args.f64_or("time-scale", 0.0).map_err(|e| e.to_string())?;
     if let Some(name) = args.get("stack") {
         opts.stack = stack_by_name(name).ok_or_else(|| format!("unknown stack '{name}'"))?;

@@ -59,6 +59,9 @@ mod reg {
     cell!(tokens_replayed, Counter, counter, "failover.tokens_replayed");
     cell!(detection_ns, Histogram, histogram, "failover.detection_ns");
     cell!(recovery_ns, Histogram, histogram, "failover.recovery_ns");
+    cell!(degrades, Counter, counter, "failover.degrades");
+    cell!(adoptions, Counter, counter, "failover.adoptions");
+    cell!(reshard_ns, Histogram, histogram, "failover.reshard_ns");
 }
 
 /// Registry-only publication from the leader's wire path: one receive
@@ -74,6 +77,22 @@ pub fn note_failover_retry() {
 pub fn note_worker_death(detection_s: f64) {
     reg::worker_deaths().inc();
     reg::detection_ns().record_secs(detection_s);
+}
+
+/// Registry-only publication: the pool resharded to fewer workers after
+/// an unreplaceable death (`--no-respawn` or respawn failure), taking
+/// `reshard_s` seconds to re-plan geometry, re-welcome survivors and fence
+/// the barrier.
+pub fn note_degrade(reshard_s: f64) {
+    reg::degrades().inc();
+    reg::reshard_ns().record_secs(reshard_s);
+}
+
+/// Registry-only publication: the pool adopted a new worker and resharded
+/// back up, taking `reshard_s` seconds.
+pub fn note_adoption(reshard_s: f64) {
+    reg::adoptions().inc();
+    reg::reshard_ns().record_secs(reshard_s);
 }
 
 /// Snapshot of paged KV-cache occupancy, summed across attention workers.

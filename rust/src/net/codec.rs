@@ -62,7 +62,11 @@ pub const MAGIC: u16 = 0x1A31;
 /// v3: new `MapBlocks` message (tag 9, prefix sharing: map a donor slot's
 /// block chain into a destination slot) and `KvStats` gained the
 /// `physical_blocks_in_use`/`physical_bytes_in_use` dedup view.
-pub const FORMAT_VERSION: u8 = 3;
+/// v4: elastic membership — new `Hello` (tag 10) / `Welcome` (tag 11)
+/// handshake frames (codec-version check + negotiated KV-head range +
+/// membership epoch), and `KvStats` gained the worker's echoed membership
+/// `epoch` for the leader's reshard fencing barrier.
+pub const FORMAT_VERSION: u8 = 4;
 /// Fixed frame header size in bytes.
 pub const HEADER_LEN: usize = 12;
 
@@ -125,6 +129,8 @@ fn tag_of(msg: &WireMsg) -> u8 {
         WireMsg::WorkerError { .. } => 7,
         WireMsg::Shutdown => 8,
         WireMsg::MapBlocks { .. } => 9,
+        WireMsg::Hello { .. } => 10,
+        WireMsg::Welcome { .. } => 11,
     }
 }
 
@@ -286,7 +292,7 @@ fn encode_payload(msg: &WireMsg, out: &mut Vec<u8>) {
         }
         WireMsg::Retire { slot } => put_u32(out, *slot),
         WireMsg::KvStatsReq => {}
-        WireMsg::KvStats { stats } => {
+        WireMsg::KvStats { stats, epoch } => {
             put_u64(out, stats.blocks_in_use as u64);
             put_u64(out, stats.total_blocks as u64);
             put_u32(out, stats.block_size as u32);
@@ -295,6 +301,7 @@ fn encode_payload(msg: &WireMsg, out: &mut Vec<u8>) {
             put_u64(out, stats.total_bytes as u64);
             put_u64(out, stats.physical_blocks_in_use as u64);
             put_u64(out, stats.physical_bytes_in_use as u64);
+            put_u64(out, *epoch);
         }
         WireMsg::WorkerError { msg } => {
             put_u32(out, msg.len() as u32);
@@ -305,6 +312,20 @@ fn encode_payload(msg: &WireMsg, out: &mut Vec<u8>) {
             put_u32(out, *slot);
             put_u32(out, *src_slot);
             put_u32(out, *tokens as u32);
+        }
+        WireMsg::Hello { codec_version, shard } => {
+            put_u32(out, *codec_version);
+            put_u32(out, *shard);
+        }
+        WireMsg::Welcome { epoch, kv_start, kv_count, slots, kv_block_size, layers, head_dim, max_seq } => {
+            put_u64(out, *epoch);
+            put_u32(out, *kv_start);
+            put_u32(out, *kv_count);
+            put_u32(out, *slots);
+            put_u32(out, *kv_block_size);
+            put_u32(out, *layers);
+            put_u32(out, *head_dim);
+            put_u32(out, *max_seq);
         }
     }
 }
@@ -342,10 +363,12 @@ pub fn encoded_len(msg: &WireMsg) -> usize {
             WireMsg::AttnOut { out, .. } => 4 + tensor(out),
             WireMsg::Retire { .. } => 4,
             WireMsg::KvStatsReq => 0,
-            WireMsg::KvStats { .. } => 8 + 8 + 4 + 8 + 8 + 8 + 8 + 8,
+            WireMsg::KvStats { .. } => 8 + 8 + 4 + 8 + 8 + 8 + 8 + 8 + 8,
             WireMsg::WorkerError { msg } => 4 + msg.len(),
             WireMsg::Shutdown => 0,
             WireMsg::MapBlocks { .. } => 4 + 4 + 4,
+            WireMsg::Hello { .. } => 4 + 4,
+            WireMsg::Welcome { .. } => 8 + 4 * 7,
         }
 }
 
@@ -486,7 +509,8 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
                 physical_blocks_in_use: r.u64("physical_blocks_in_use")? as usize,
                 physical_bytes_in_use: r.u64("physical_bytes_in_use")? as usize,
             };
-            WireMsg::KvStats { stats }
+            let epoch = r.u64("epoch")?;
+            WireMsg::KvStats { stats, epoch }
         }
         7 => {
             let n = get_vec_len(&mut r, "error text")?;
@@ -501,6 +525,22 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
             let src_slot = r.u32("src_slot")?;
             let tokens = r.u32("tokens")? as usize;
             WireMsg::MapBlocks { slot, src_slot, tokens }
+        }
+        10 => {
+            let codec_version = r.u32("codec_version")?;
+            let shard = r.u32("shard")?;
+            WireMsg::Hello { codec_version, shard }
+        }
+        11 => {
+            let epoch = r.u64("epoch")?;
+            let kv_start = r.u32("kv_start")?;
+            let kv_count = r.u32("kv_count")?;
+            let slots = r.u32("slots")?;
+            let kv_block_size = r.u32("kv_block_size")?;
+            let layers = r.u32("layers")?;
+            let head_dim = r.u32("head_dim")?;
+            let max_seq = r.u32("max_seq")?;
+            WireMsg::Welcome { epoch, kv_start, kv_count, slots, kv_block_size, layers, head_dim, max_seq }
         }
         t => return Err(CodecError::UnknownType(t)),
     };
@@ -577,10 +617,28 @@ mod tests {
                 physical_blocks_in_use: 2,
                 physical_bytes_in_use: 2 * 1056,
             },
+            epoch: 7,
         };
         assert_eq!(roundtrip(&s), s);
         let m = WireMsg::MapBlocks { slot: 3, src_slot: 0, tokens: 96 };
         assert_eq!(roundtrip(&m), m);
+    }
+
+    #[test]
+    fn handshake_messages_roundtrip() {
+        let h = WireMsg::Hello { codec_version: FORMAT_VERSION as u32, shard: 3 };
+        assert_eq!(roundtrip(&h), h);
+        let w = WireMsg::Welcome {
+            epoch: u64::MAX,
+            kv_start: 2,
+            kv_count: 1,
+            slots: 8,
+            kv_block_size: 4,
+            layers: 2,
+            head_dim: 16,
+            max_seq: 64,
+        };
+        assert_eq!(roundtrip(&w), w);
     }
 
     #[test]

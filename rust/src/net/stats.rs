@@ -50,6 +50,8 @@ impl MsgClass {
             | WireMsg::KvStatsReq
             | WireMsg::KvStats { .. }
             | WireMsg::WorkerError { .. }
+            | WireMsg::Hello { .. }
+            | WireMsg::Welcome { .. }
             | WireMsg::Shutdown => MsgClass::Control,
         }
     }

@@ -258,6 +258,25 @@ impl Scheduler {
         &self.cfg
     }
 
+    /// Reshard capacity re-derivation: the per-worker byte size of one KV
+    /// block changed (the pool degraded to fewer workers or adopted a new
+    /// one, so each worker now holds a different KV-head range). Rebases
+    /// every live reservation and the running byte totals onto the new
+    /// conversion so byte-denominated budget accounting keeps matching the
+    /// workers' arenas. Block counts are geometry-invariant (every worker
+    /// caches a head shard of every request) and stay untouched.
+    pub fn set_block_bytes(&mut self, block_bytes: usize) {
+        assert!(block_bytes > 0, "need a positive block size");
+        self.cfg.block_bytes = block_bytes;
+        self.reserved_bytes = 0;
+        for e in self.entries.values_mut() {
+            e.needed_bytes = e.needed_blocks * block_bytes;
+            if e.state.is_live() {
+                self.reserved_bytes += e.needed_bytes;
+            }
+        }
+    }
+
     /// The id the next `submit` will be assigned.
     pub fn next_request_id(&self) -> RequestId {
         self.next_id
@@ -916,6 +935,30 @@ mod tests {
         assert_eq!(s.free_slot_count(), 0);
         // slots hand out as 0, 1, …
         assert_eq!(s.next_prefill().unwrap().slot, 0);
+    }
+
+    #[test]
+    fn set_block_bytes_rebases_live_reservations() {
+        let mut s = sched(2, 2, GroupMode::Packed, KvBudget::Blocks(100));
+        let a = s.submit(vec![1; 4], 4).unwrap(); // ctx 8 → 2 blocks
+        let _b = s.submit(vec![2; 4], 4).unwrap();
+        s.admit(KvOccupancy::default());
+        assert_eq!((s.reserved_blocks(), s.reserved_bytes()), (4, 4 * 64));
+        // reshard: fewer workers → more heads per worker → bigger blocks
+        s.set_block_bytes(96);
+        assert_eq!(s.cfg().block_bytes, 96);
+        assert_eq!(s.reserved_blocks(), 4, "block counts are geometry-invariant");
+        assert_eq!(s.reserved_bytes(), 4 * 96);
+        // a finished request's reservation stays released after the rebase
+        s.note_prefill_chunk(a, 4, 7);
+        for _ in 0..3 {
+            s.note_decode(a, 7);
+        }
+        assert_eq!(s.poll(a).unwrap().state, RequestState::Finished(FinishReason::Completed));
+        let (blocks, bytes) = (s.reserved_blocks(), s.reserved_bytes());
+        s.set_block_bytes(32);
+        assert_eq!(s.reserved_blocks(), blocks);
+        assert_eq!(s.reserved_bytes(), bytes / 96 * 32);
     }
 
     #[test]

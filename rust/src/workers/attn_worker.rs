@@ -1,7 +1,9 @@
 //! Attention worker: owns a head shard of every request's KV cache and
 //! turns `StepQ`/`StepKv`/`PrefillChunk` traffic into attention output
-//! shards (paper §5: head-level partitioning — worker `w` of `W` owns
-//! `KH/W` KV heads of *all* requests).
+//! shards (paper §5: head-level partitioning — each worker owns a
+//! contiguous KV-head range of *all* requests, assigned by the leader's
+//! `Welcome` handshake reply; ranges differ by at most one head when the
+//! pool width does not divide the head count).
 //!
 //! The worker is a thread that receives wire messages over its
 //! [`Transport`] link (paced in-process channel or real TCP socket — see
@@ -55,11 +57,15 @@ pub use crate::kernels::ModelGeom;
 #[derive(Debug, Clone)]
 pub struct AttnWorkerCfg {
     pub artifacts_dir: std::path::PathBuf,
-    /// This worker's index within the shard group.
+    /// This worker's index within the shard group (diagnostic: sent in
+    /// `Hello`; the authoritative KV-head range arrives in `Welcome`).
     pub shard: usize,
-    /// Total attention workers (must divide kv_heads).
+    /// Total attention workers at spawn time. The engine backend needs it
+    /// to pick its per-width artifact; the native data plane takes its
+    /// geometry from `Welcome` instead.
     pub n_shards: usize,
-    /// Number of batch slots addressable by the wire protocol.
+    /// Number of batch slots addressable by the wire protocol (the arena
+    /// itself is sized by the `Welcome` reply).
     pub slots: usize,
     /// Token slots per KV block in the paged arena.
     pub kv_block_size: usize,
@@ -156,26 +162,23 @@ fn worker_loop<T: Transport>(
     cfg: &AttnWorkerCfg,
     link: &T,
 ) -> Result<(), WorkerFault> {
-    if geom.kv_heads % cfg.n_shards != 0 {
-        return Err(WorkerFault::Protocol(format!(
-            "shards ({}) must divide kv heads ({})",
-            cfg.n_shards, geom.kv_heads
-        )));
-    }
-    let khs = geom.kv_heads / cfg.n_shards;
+    // Membership handshake: `Hello` is the first frame on every link —
+    // spawned, respawned, or adopted. The leader validates the codec
+    // version and replies `Welcome` with this worker's negotiated KV-head
+    // range and the membership epoch; the arena is built from that reply,
+    // so the worker has no data plane until it is welcomed.
+    link.send(WireMsg::Hello {
+        codec_version: crate::net::codec::FORMAT_VERSION as u32,
+        shard: cfg.shard as u32,
+    })?;
 
-    // this shard's paged KV store: all layers, every request's head shard.
-    // Starts at one block per slot and grows with live context.
-    let mut arena = PagedKvArena::new(ArenaCfg {
-        layers: geom.layers,
-        kv_heads: khs,
-        head_dim: geom.head_dim,
-        max_seq: geom.max_seq,
-        slots: cfg.slots,
-        block_size: cfg.kv_block_size,
-        initial_blocks: cfg.slots.max(1),
-        dtype: cfg.kv_dtype,
-    });
+    // this shard's paged KV store: all layers, every request's head-range
+    // shard. (Re)built on every `Welcome` — a mid-session re-Welcome is a
+    // reshard: drop all cached blocks, adopt the new range and epoch.
+    let mut arena: Option<PagedKvArena> = None;
+    // membership epoch of the last Welcome, echoed on every KvStats so the
+    // leader's reshard barrier can fence out stale snapshots
+    let mut epoch: u64 = 0;
 
     // state carried from StepQ to StepKv
     struct Pending {
@@ -193,21 +196,70 @@ fn worker_loop<T: Transport>(
     // reused per-step scratch for the post-append lens (`lens[b] + 1`)
     let mut lens1: Vec<i32> = Vec::new();
 
+    // a data-plane message on an un-welcomed link is a protocol fault
+    fn member<'a>(arena: &'a mut Option<PagedKvArena>) -> Result<&'a mut PagedKvArena, WorkerFault> {
+        arena
+            .as_mut()
+            .ok_or_else(|| WorkerFault::Protocol("data message before Welcome".into()))
+    }
+
     loop {
         let Some(msg) = link.recv_timeout(std::time::Duration::from_secs(60))? else {
             return Err(WorkerFault::Protocol("worker idle timeout".into()));
         };
         match msg {
             WireMsg::Shutdown => return Ok(()),
+            WireMsg::Welcome {
+                epoch: e,
+                kv_start,
+                kv_count,
+                slots,
+                kv_block_size,
+                layers,
+                head_dim,
+                max_seq,
+            } => {
+                let _sp = obs::span("worker", "welcome").arg("epoch", e as i64);
+                let (start, count) = (kv_start as usize, kv_count as usize);
+                if count == 0 || start + count > geom.kv_heads {
+                    return Err(WorkerFault::Protocol(format!(
+                        "welcome kv range {start}+{count} invalid for {} kv heads",
+                        geom.kv_heads
+                    )));
+                }
+                if layers as usize != geom.layers || head_dim as usize != geom.head_dim {
+                    return Err(WorkerFault::Protocol(format!(
+                        "welcome geometry mismatch: layers {layers} vs {}, head_dim {head_dim} \
+                         vs {}",
+                        geom.layers, geom.head_dim
+                    )));
+                }
+                // a mid-session re-Welcome is a reshard: the previous
+                // arena's blocks and any StepQ awaiting its KV belong to
+                // the dead geometry — drop both, the leader replays
+                pending = None;
+                epoch = e;
+                arena = Some(PagedKvArena::new(ArenaCfg {
+                    layers: layers as usize,
+                    kv_heads: count,
+                    head_dim: head_dim as usize,
+                    max_seq: max_seq as usize,
+                    slots: slots as usize,
+                    block_size: kv_block_size as usize,
+                    initial_blocks: (slots as usize).max(1),
+                    dtype: cfg.kv_dtype,
+                }));
+            }
             WireMsg::Retire { slot } => {
                 let _sp = obs::span("worker", "retire").arg("slot", slot as i64);
-                arena.retire(slot);
+                member(&mut arena)?.retire(slot);
             }
             WireMsg::MapBlocks { slot, src_slot, tokens } => {
-                arena.map_prefix(slot, src_slot, tokens);
+                member(&mut arena)?.map_prefix(slot, src_slot, tokens);
             }
             WireMsg::KvStatsReq => {
-                link.send(WireMsg::KvStats { stats: arena.stats() })?;
+                let stats = member(&mut arena)?.stats();
+                link.send(WireMsg::KvStats { stats, epoch })?;
             }
             WireMsg::StepQ { layer, slots, q, lens, seq_bucket, overlap } => {
                 let mut p = Pending {
@@ -223,13 +275,15 @@ fn worker_loop<T: Transport>(
                     // partial attention over cached tokens, before k/v exist
                     let _sp = obs::span("worker", "attn_prev").arg("layer", layer as i64);
                     p.partial = Some(backend.attn_prev(
-                        &mut arena,
+                        member(&mut arena)?,
                         &p.slots,
                         layer,
                         &p.q,
                         &p.lens,
                         seq_bucket,
                     )?);
+                } else {
+                    member(&mut arena)?;
                 }
                 pending = Some(p);
             }
@@ -245,14 +299,15 @@ fn worker_loop<T: Transport>(
                     )));
                 }
                 // append k/v at position lens[b] for each active row
-                arena.append_step(&p.slots, layer, &k, &v, &p.lens);
+                let a = member(&mut arena)?;
+                a.append_step(&p.slots, layer, &k, &v, &p.lens);
                 let out = if p.overlap {
                     let prev = p.partial.as_ref().expect("overlap StepQ stored partial");
                     backend.attn_combine(&p.q, &k, &v, prev)?
                 } else {
                     lens1.clear();
                     lens1.extend(p.lens.iter().map(|&l| l + 1));
-                    backend.attention(&mut arena, &p.slots, layer, &p.q, &lens1, p.seq_bucket)?
+                    backend.attention(a, &p.slots, layer, &p.q, &lens1, p.seq_bucket)?
                 };
                 link.send(WireMsg::AttnOut { layer, out })?;
             }
@@ -263,9 +318,10 @@ fn worker_loop<T: Transport>(
                     .arg("valid", valid as i64);
                 // attention over cached prefix + causal chunk, computed
                 // BEFORE the chunk's K/V lands in the arena
-                let out = backend.prefill(&mut arena, slot, layer, &q, &k, &v, cached, seq_bucket)?;
+                let a = member(&mut arena)?;
+                let out = backend.prefill(a, slot, layer, &q, &k, &v, cached, seq_bucket)?;
                 // append the chunk's valid K/V rows at cached.. positions
-                arena.append_chunk(slot, layer, &k, &v, cached as usize, valid);
+                a.append_chunk(slot, layer, &k, &v, cached as usize, valid);
                 link.send(WireMsg::AttnOut { layer, out })?;
             }
             other => return Err(WorkerFault::Protocol(format!("unexpected message {other:?}"))),

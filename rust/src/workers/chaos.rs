@@ -36,11 +36,13 @@
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::failover::{DeathCause, HealthPolicy, HealthTracker, Verdict, WorkerDeath};
+use crate::coordinator::failover::{
+    DeathCause, HealthPolicy, HealthTracker, MembershipPolicy, Verdict, WorkerDeath,
+};
 use crate::kernels::AttnBackendKind;
-use crate::kvcache::KvDtype;
+use crate::kvcache::{head_ranges, KvDtype, ShardRange};
 use crate::metrics::{KvCacheStats, ServeMetrics};
-use crate::net::{inproc, tcp, FaultPlan, FaultTransport, Transport, TransportKind};
+use crate::net::{inproc, tcp, DeadTransport, FaultPlan, FaultTransport, Transport, TransportKind};
 use crate::netsim::stack::{FHBN, LINE_RATE_400G};
 use crate::obs;
 use crate::runtime::host::HostTensor;
@@ -66,7 +68,8 @@ const HASH_INIT: u32 = 0x811C_9DC5;
 #[derive(Debug, Clone)]
 pub struct ChaosCfg {
     pub transport: TransportKind,
-    /// Attention workers (must divide 4 KV heads: 1, 2 or 4).
+    /// Attention workers: any width `1..=4` (contiguous head-range
+    /// shards; the 4 KV heads need not divide evenly).
     pub workers: usize,
     /// Concurrent requests (deterministic synthetic prompts).
     pub requests: usize,
@@ -80,6 +83,21 @@ pub struct ChaosCfg {
     /// Recover from worker deaths (preempt-replay-rebuild). Off: the
     /// first death aborts the session with a typed [`ChaosFailure`].
     pub auto_recover: bool,
+    /// Respawn replacements on death (`--no-respawn` clears it). Cleared,
+    /// a death **degrades** the pool to the survivors (epoch-fenced
+    /// reshard, bit-identical output) down to the `min_workers` floor.
+    pub allow_respawn: bool,
+    /// Smallest pool width degradation may leave (`--min-workers`);
+    /// refusing to go below it aborts typed with zero leaks.
+    pub min_workers: usize,
+    /// Adopt one extra worker at this step boundary (`--adopt`): the
+    /// scripted W→W+1 scale-up reshard.
+    pub adopt_at_step: Option<usize>,
+    /// Deterministic link kills: at step boundary `.0`, sever worker
+    /// `.1`'s link (the leader's `inject_worker_death`, scripted). Unlike
+    /// `fault_plan` message-count triggers, these land *between* steps —
+    /// the degrade-ladder tests use them for exact W=4→3→2 scripts.
+    pub kill_at: Vec<(usize, usize)>,
 }
 
 impl Default for ChaosCfg {
@@ -99,6 +117,10 @@ impl Default for ChaosCfg {
                 backoff: 2.0,
             },
             auto_recover: true,
+            allow_respawn: true,
+            min_workers: 1,
+            adopt_at_step: None,
+            kill_at: Vec::new(),
         }
     }
 }
@@ -116,6 +138,13 @@ pub struct ChaosReport {
     /// KV blocks still mapped after the session drained (leak check —
     /// must be 0).
     pub leaked_blocks: usize,
+    /// Graceful degradations (reshards to W−1 survivors).
+    pub degrades: u64,
+    /// Scale-up adoptions (reshards to W+1 members).
+    pub adoptions: u64,
+    /// Pool width at drain (differs from the starting width after
+    /// degrades/adoptions).
+    pub final_workers: usize,
 }
 
 /// Typed session abort: the death that ended it plus the post-cleanup
@@ -261,15 +290,25 @@ struct Chaos<'c> {
     deaths: u64,
     recoveries: u64,
     tokens_replayed: u64,
+    /// Per-peer contiguous KV-head ranges (mirrors the leader's plan).
+    plan: Vec<ShardRange>,
+    /// Membership epoch (mirrors the leader's; bumped on every reshard).
+    epoch: u64,
+    degrades: u64,
+    adoptions: u64,
 }
 
 impl<'c> Chaos<'c> {
     fn new(cfg: &'c ChaosCfg) -> Result<Chaos<'c>, String> {
-        assert_eq!(KV_HEADS % cfg.workers, 0, "workers must divide kv heads");
+        assert!(
+            cfg.workers >= 1 && cfg.workers <= KV_HEADS,
+            "workers must be 1..={KV_HEADS}"
+        );
         let mut peers = Vec::new();
         for w in 0..cfg.workers {
             peers.push(spawn_peer(cfg, w, false)?);
         }
+        let plan = head_ranges(KV_HEADS, cfg.workers).map_err(|e| e.to_string())?;
         let sched = Scheduler::new(
             SchedCfg {
                 max_context: MAX_SEQ - 1,
@@ -284,7 +323,7 @@ impl<'c> Chaos<'c> {
             },
             AdmissionKind::Fifo.build(),
         );
-        Ok(Chaos {
+        let mut chaos = Chaos {
             cfg,
             peers,
             sched,
@@ -292,7 +331,70 @@ impl<'c> Chaos<'c> {
             deaths: 0,
             recoveries: 0,
             tokens_replayed: 0,
-        })
+            plan,
+            epoch: 1,
+            degrades: 0,
+            adoptions: 0,
+        };
+        // membership handshake before any data-plane traffic (the real
+        // leader's start() contract)
+        for wi in 0..chaos.peers.len() {
+            chaos.handshake_hello(wi).map_err(|d| d.to_string())?;
+            let msg = chaos.welcome_msg(wi);
+            chaos.send_to(wi, msg).map_err(|d| d.to_string())?;
+        }
+        Ok(chaos)
+    }
+
+    /// Leader side of the membership handshake (the real leader's
+    /// `handshake_hello`, scripted): the link's first frame must be a
+    /// version-compatible `Hello`.
+    fn handshake_hello(&mut self, wi: usize) -> Result<(), WorkerDeath> {
+        let t0 = Instant::now();
+        match self.recv_worker(wi)? {
+            WireMsg::Hello { codec_version, shard: _ } => {
+                if codec_version != crate::net::codec::FORMAT_VERSION as u32 {
+                    return Err(self.declare_dead(
+                        wi,
+                        DeathCause::Protocol(format!(
+                            "worker speaks codec v{codec_version}, leader v{}",
+                            crate::net::codec::FORMAT_VERSION
+                        )),
+                        t0,
+                    ));
+                }
+                Ok(())
+            }
+            other => Err(self.declare_dead(
+                wi,
+                DeathCause::Protocol(format!("expected Hello, got {other:?}")),
+                t0,
+            )),
+        }
+    }
+
+    /// Peer `wi`'s `Welcome` from the current plan and epoch.
+    fn welcome_msg(&self, wi: usize) -> WireMsg {
+        let r = self.plan[wi];
+        WireMsg::Welcome {
+            epoch: self.epoch,
+            kv_start: r.start as u32,
+            kv_count: r.count as u32,
+            slots: self.cfg.slots as u32,
+            kv_block_size: 4,
+            layers: LAYERS as u32,
+            head_dim: HEAD_DIM as u32,
+            max_seq: MAX_SEQ as u32,
+        }
+    }
+
+    /// Sever peer `wi`'s link *now* (the leader's `inject_worker_death`,
+    /// scripted): counters preserved, the worker thread observes the
+    /// disconnect and exits, the next wire op surfaces a typed death.
+    fn inject_kill(&mut self, wi: usize) {
+        let p = &mut self.peers[wi];
+        let dead = DeadTransport::new(p.link.kind(), p.link.stats());
+        p.link = Box::new(dead);
     }
 
     /// Same contract as the leader's `declare_dead`: record detection
@@ -347,17 +449,18 @@ impl<'c> Chaos<'c> {
     /// into `[rows, HEADS, HEAD_DIM]` (flat).
     fn recv_attn(&mut self, layer: usize, rows: usize) -> Result<Vec<f32>, WorkerDeath> {
         let w = self.peers.len();
-        let hs = HEADS / w;
+        let group = HEADS / KV_HEADS;
         let mut out = vec![0.0f32; rows * HEADS * HEAD_DIM];
         for wi in 0..w {
             match self.recv_worker(wi)? {
                 WireMsg::AttnOut { layer: l, out: shard } if l == layer => {
+                    let qr = self.plan[wi].q_range(group);
                     let sd = shard.as_f32();
                     for b in 0..rows {
-                        let dst = (b * HEADS + wi * hs) * HEAD_DIM;
-                        let src = b * hs * HEAD_DIM;
-                        out[dst..dst + hs * HEAD_DIM]
-                            .copy_from_slice(&sd[src..src + hs * HEAD_DIM]);
+                        let dst = (b * HEADS + qr.start) * HEAD_DIM;
+                        let src = b * qr.count * HEAD_DIM;
+                        out[dst..dst + qr.count * HEAD_DIM]
+                            .copy_from_slice(&sd[src..src + qr.count * HEAD_DIM]);
                     }
                 }
                 other => {
@@ -389,7 +492,8 @@ impl<'c> Chaos<'c> {
     }
 
     /// `KvStatsReq` round-trip per link: the FIFO barrier that discards
-    /// stale in-flight replies and returns the pool occupancy.
+    /// stale in-flight replies — including `KvStats` carrying a stale
+    /// membership epoch — and returns the pool occupancy.
     fn barrier(&mut self) -> Result<KvCacheStats, WorkerDeath> {
         for wi in 0..self.peers.len() {
             self.send_to(wi, WireMsg::KvStatsReq)?;
@@ -398,10 +502,11 @@ impl<'c> Chaos<'c> {
         for wi in 0..self.peers.len() {
             loop {
                 match self.recv_worker(wi)? {
-                    WireMsg::KvStats { stats } => {
+                    WireMsg::KvStats { stats, epoch } if epoch == self.epoch => {
                         sum = sum.merge(&stats);
                         break;
                     }
+                    // pre-reshard traffic: fenced off by the epoch
                     _stale => {}
                 }
             }
@@ -419,21 +524,23 @@ impl<'c> Chaos<'c> {
     ) -> Result<i32, WorkerDeath> {
         let valid = chunk.len();
         let w = self.peers.len();
-        let (hs, khs) = (HEADS / w, KV_HEADS / w);
+        let group = HEADS / KV_HEADS;
         let mut hash = HASH_INIT;
         for layer in 0..LAYERS {
             let q = build(valid, HEADS, |r, h, d| q_val(chunk[r], cached + r, layer, h, d));
             let k = build(valid, KV_HEADS, |_r, h, d| k_val(layer, h, d));
             let v = build(valid, KV_HEADS, |r, h, d| v_val(chunk[r], cached + r, layer, h, d));
             for wi in 0..w {
+                let r = self.plan[wi];
+                let qr = r.q_range(group);
                 self.send_to(
                     wi,
                     WireMsg::PrefillChunk {
                         layer,
                         slot,
-                        q: slice_heads(&q, wi * hs, hs),
-                        k: slice_heads(&k, wi * khs, khs),
-                        v: slice_heads(&v, wi * khs, khs),
+                        q: slice_heads(&q, qr.start, qr.count),
+                        k: slice_heads(&k, r.start, r.count),
+                        v: slice_heads(&v, r.start, r.count),
                         cached: cached as i32,
                         valid,
                         seq_bucket: MAX_SEQ,
@@ -450,7 +557,7 @@ impl<'c> Chaos<'c> {
     fn decode_rows(&mut self, rows: &[DecodeRow]) -> Result<Vec<i32>, WorkerDeath> {
         let b = rows.len();
         let w = self.peers.len();
-        let (hs, khs) = (HEADS / w, KV_HEADS / w);
+        let group = HEADS / KV_HEADS;
         let slots: Vec<u32> = rows.iter().map(|r| r.slot).collect();
         let lens: Vec<i32> = rows.iter().map(|r| r.len).collect();
         let mut hashes = vec![HASH_INIT; b];
@@ -463,12 +570,13 @@ impl<'c> Chaos<'c> {
                 v_val(rows[r].input, rows[r].len as usize, layer, h, d)
             });
             for wi in 0..w {
+                let qr = self.plan[wi].q_range(group);
                 self.send_to(
                     wi,
                     WireMsg::StepQ {
                         layer,
                         slots: slots.clone(),
-                        q: slice_heads(&q, wi * hs, hs),
+                        q: slice_heads(&q, qr.start, qr.count),
                         lens: lens.clone(),
                         seq_bucket: MAX_SEQ,
                         overlap: false,
@@ -476,12 +584,13 @@ impl<'c> Chaos<'c> {
                 )?;
             }
             for wi in 0..w {
+                let r = self.plan[wi];
                 self.send_to(
                     wi,
                     WireMsg::StepKv {
                         layer,
-                        k: slice_heads(&k, wi * khs, khs),
-                        v: slice_heads(&v, wi * khs, khs),
+                        k: slice_heads(&k, r.start, r.count),
+                        v: slice_heads(&v, r.start, r.count),
                     },
                 )?;
             }
@@ -520,12 +629,10 @@ impl<'c> Chaos<'c> {
         Ok(self.sched.is_idle())
     }
 
-    /// The leader's preempt-replay-rebuild recovery, scripted.
-    fn recover(&mut self, death: &WorkerDeath) -> Result<(), WorkerDeath> {
-        let t0 = Instant::now();
-        let _sp = obs::span("failover", "recover")
-            .arg("worker", death.worker as i64)
-            .arg_str("cause", death.cause.name());
+    /// Preempt every live request back to the waiting queue and queue a
+    /// `Retire` for every slot it held; returns the replay-token count
+    /// (the leader's `preempt_all_live`, scripted).
+    fn preempt_all(&mut self) -> u64 {
         let live = self.sched.live_ids();
         // capture slots first: a request caught mid-FIRST-prefill-chunk
         // shows wrote_kv = false (no Retire on preempt) but surviving
@@ -551,15 +658,141 @@ impl<'c> Chaos<'c> {
                 replayed += p.len() as u64;
             }
         }
-        self.peers[death.worker] = spawn_peer(self.cfg, death.worker, true)
-            .map_err(|e| WorkerDeath { worker: death.worker, cause: DeathCause::Protocol(e) })?;
+        replayed
+    }
+
+    /// Epoch-fenced reshard over the current pool (the leader's
+    /// `reshard_and_barrier`, scripted): bump the epoch, re-plan the
+    /// contiguous head ranges, re-`Welcome` every member (the arena
+    /// rebuild is an implicit retire-everything), flush queued Retires,
+    /// then run the fenced barrier so no stale-epoch reply can alias.
+    fn reshard(&mut self) -> Result<(), WorkerDeath> {
+        self.epoch += 1;
+        let _sp = obs::span("failover", "reshard").arg("epoch", self.epoch as i64);
+        self.plan = head_ranges(KV_HEADS, self.peers.len()).map_err(|e| WorkerDeath {
+            worker: 0,
+            cause: DeathCause::Protocol(format!("shard plan: {e}")),
+        })?;
+        for wi in 0..self.peers.len() {
+            let msg = self.welcome_msg(wi);
+            self.send_to(wi, msg)?;
+        }
         let retires = self.sched.take_retirements();
         self.send_retirements(&retires)?;
         let _ = self.barrier()?;
-        self.recoveries += 1;
-        self.tokens_replayed += replayed;
-        self.metrics.record_recovery(replayed, t0.elapsed().as_secs_f64());
+        // a surviving worker must not face its next fault with a ladder
+        // already exhausted by this episode
+        for p in &mut self.peers {
+            p.health.reset();
+        }
         Ok(())
+    }
+
+    /// The leader's recovery, scripted: preempt-replay plus either a
+    /// same-width respawn or (respawn disabled) a graceful degradation
+    /// to the survivors, both funneled through [`Chaos::reshard`].
+    fn recover(&mut self, death: &WorkerDeath) -> Result<(), WorkerDeath> {
+        // a rolled-back adoption surfaces the joiner's death with an
+        // index one past the already-restored pool: nothing to recover
+        if death.worker >= self.peers.len() {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let degrade = !self.cfg.allow_respawn;
+        let _sp = obs::span("failover", if degrade { "degrade" } else { "recover" })
+            .arg("worker", death.worker as i64)
+            .arg_str("cause", death.cause.name());
+        // credit the replay at preemption time: a cascade (this recovery
+        // tripping over another dead link) retries with nothing left to
+        // preempt, so crediting only on success would under-count
+        let replayed = self.preempt_all();
+        self.tokens_replayed += replayed;
+        if degrade {
+            let policy =
+                MembershipPolicy { allow_respawn: false, min_workers: self.cfg.min_workers };
+            if !policy.can_degrade_to(self.peers.len() - 1) {
+                // refuse below the floor: leave the pool as-is so the
+                // cascade ladder sees a repeat death and aborts typed
+                // (the queued Retires drain leak-free in `abort`)
+                return Err(death.clone());
+            }
+            self.peers.remove(death.worker);
+            self.degrades += 1;
+        } else {
+            self.peers[death.worker] = spawn_peer(self.cfg, death.worker, true).map_err(|e| {
+                WorkerDeath { worker: death.worker, cause: DeathCause::Protocol(e) }
+            })?;
+            self.handshake_hello(death.worker)?;
+        }
+        self.reshard()?;
+        self.recoveries += 1;
+        self.metrics.record_recovery(replayed, t0.elapsed().as_secs_f64());
+        if degrade {
+            crate::metrics::note_degrade(t0.elapsed().as_secs_f64());
+        }
+        Ok(())
+    }
+
+    /// Scripted W→W+1 scale-up: spawn a joiner, handshake it, quiesce
+    /// (preempt everything live), reshard the widened pool. On any
+    /// failure the joiner is evicted and the original membership
+    /// re-fenced before the error surfaces.
+    fn adopt(&mut self) -> Result<(), WorkerDeath> {
+        if self.peers.len() + 1 > KV_HEADS {
+            return Ok(()); // no spare head range to give a joiner
+        }
+        let t0 = Instant::now();
+        let new_idx = self.peers.len();
+        let _sp = obs::span("failover", "adopt").arg("worker", new_idx as i64);
+        // respawn=false so the fault plan may wrap the joiner — kills
+        // inside the adoption window are a tested path
+        let joiner = spawn_peer(self.cfg, new_idx, false)
+            .map_err(|e| WorkerDeath { worker: new_idx, cause: DeathCause::Protocol(e) })?;
+        self.peers.push(joiner);
+        self.tokens_replayed += self.preempt_all();
+        let res = self.handshake_hello(new_idx).and_then(|()| self.reshard());
+        match res {
+            Ok(()) => {
+                self.adoptions += 1;
+                crate::metrics::note_adoption(t0.elapsed().as_secs_f64());
+                Ok(())
+            }
+            Err(d) => {
+                // evict the joiner and re-fence the original members
+                let mut p = self.peers.remove(new_idx);
+                let _ = p.link.send(WireMsg::Shutdown);
+                if let Some(t) = p.thread.take() {
+                    let _ = t.join();
+                }
+                self.reshard()?;
+                Err(d)
+            }
+        }
+    }
+
+    /// Cascade like the leader: recovery may trip over another dying
+    /// link; give up (the caller aborts typed) if any worker needs
+    /// recovering twice within one episode.
+    fn recover_ladder(&mut self, death: WorkerDeath) -> Result<(), WorkerDeath> {
+        let mut d = death;
+        let mut tried: Vec<usize> = Vec::new();
+        let mut width = self.peers.len();
+        loop {
+            if self.peers.len() < width {
+                // a degradation removed a peer, shifting indices: restart
+                // the repeat-death guard (the shrinking pool bounds this)
+                width = self.peers.len();
+                tried.clear();
+            }
+            if tried.contains(&d.worker) {
+                return Err(d);
+            }
+            tried.push(d.worker);
+            match self.recover(&d) {
+                Ok(()) => return Ok(()),
+                Err(d2) => d = d2,
+            }
+        }
     }
 
     /// Typed abort: cancel everything, flush retirements and count leaks
@@ -589,7 +822,7 @@ impl<'c> Chaos<'c> {
             }
             loop {
                 match self.peers[wi].link.recv_timeout(Duration::from_millis(500)) {
-                    Ok(Some(WireMsg::KvStats { stats })) => {
+                    Ok(Some(WireMsg::KvStats { stats, .. })) => {
                         leaked += stats.blocks_in_use;
                         break;
                     }
@@ -636,7 +869,33 @@ pub fn run_chaos(cfg: &ChaosCfg) -> Result<ChaosReport, ChaosFailure> {
         .collect();
 
     let mut steps = 0usize;
+    let mut adopted = cfg.adopt_at_step.is_none();
+    let mut killed = vec![false; cfg.kill_at.len()];
     loop {
+        // scripted membership events land at step boundaries, never
+        // mid-step: exact degrade/adopt scripts stay deterministic
+        for i in 0..cfg.kill_at.len() {
+            let (at, wi) = cfg.kill_at[i];
+            if !killed[i] && at <= steps {
+                killed[i] = true;
+                if wi < h.peers.len() {
+                    h.inject_kill(wi);
+                }
+            }
+        }
+        if let Some(at) = cfg.adopt_at_step {
+            if !adopted && steps >= at {
+                adopted = true;
+                if let Err(d) = h.adopt() {
+                    if !cfg.auto_recover {
+                        return Err(h.abort(d));
+                    }
+                    if let Err(d) = h.recover_ladder(d) {
+                        return Err(h.abort(d));
+                    }
+                }
+            }
+        }
         match h.step_inner() {
             Ok(idle) => {
                 steps += 1;
@@ -648,20 +907,8 @@ pub fn run_chaos(cfg: &ChaosCfg) -> Result<ChaosReport, ChaosFailure> {
                 if !cfg.auto_recover {
                     return Err(h.abort(death));
                 }
-                // cascade like the leader: recovery may trip over another
-                // dying link; give up if any worker needs recovering twice
-                // within one episode (its own replacement died)
-                let mut d = death;
-                let mut tried: Vec<usize> = Vec::new();
-                loop {
-                    if tried.contains(&d.worker) {
-                        return Err(h.abort(d));
-                    }
-                    tried.push(d.worker);
-                    match h.recover(&d) {
-                        Ok(()) => break,
-                        Err(d2) => d = d2,
-                    }
+                if let Err(d) = h.recover_ladder(death) {
+                    return Err(h.abort(d));
                 }
             }
         }
@@ -683,6 +930,7 @@ pub fn run_chaos(cfg: &ChaosCfg) -> Result<ChaosReport, ChaosFailure> {
         .iter()
         .map(|&id| h.sched.poll(id).map(|s| s.tokens).unwrap_or_default())
         .collect();
+    let final_workers = h.peers.len();
     h.shutdown();
     Ok(ChaosReport {
         outputs,
@@ -691,6 +939,9 @@ pub fn run_chaos(cfg: &ChaosCfg) -> Result<ChaosReport, ChaosFailure> {
         tokens_replayed: h.tokens_replayed,
         steps,
         leaked_blocks: stats.blocks_in_use,
+        degrades: h.degrades,
+        adoptions: h.adoptions,
+        final_workers,
     })
 }
 

@@ -66,6 +66,24 @@
 //! an unfailed run on the native backend. [`FaultPlan`]
 //! (`--fault-plan`) arms deterministic fault injection on the leader-side
 //! links for testing all of this.
+//!
+//! # Elastic membership
+//!
+//! The worker pool is no longer fixed-width. Every worker — spawned,
+//! respawned, or adopted — joins through a versioned `Hello`/`Welcome`
+//! handshake before any data-plane traffic; the `Welcome` carries its
+//! negotiated contiguous KV-head range ([`crate::kvcache::ShardRange`]),
+//! the arena geometry, and the current **membership epoch**. With
+//! `--no-respawn`, a death *degrades* the pool instead of respawning: the
+//! leader re-plans head ranges over the W−1 survivors and keeps serving
+//! (bit-identical output on the native backend) down to the
+//! `--min-workers` floor, below which the step fails with a typed
+//! [`MembershipRefused`]. [`DisaggPipeline::adopt_worker`] reshards a
+//! joining worker in at a step boundary (W→W+1). Every reshard bumps the
+//! epoch and re-`Welcome`s every member; workers echo the epoch on
+//! `KvStats`, so the post-reshard barrier can fence out in-flight replies
+//! from a dead geometry — see [`crate::coordinator::failover`]'s
+//! membership-lifecycle walkthrough.
 
 use std::cell::RefCell;
 use std::time::Instant;
@@ -73,10 +91,11 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::failover::{
-    DeathCause, HealthPolicy, HealthTracker, Verdict, WorkerDeath,
+    DeathCause, HealthPolicy, HealthTracker, MembershipPolicy, MembershipRefused, Verdict,
+    WorkerDeath,
 };
 use crate::kernels::AttnBackendKind;
-use crate::kvcache::{KvDtype, PrefixIndex};
+use crate::kvcache::{head_ranges, KvDtype, PrefixIndex, ShardRange};
 use crate::metrics::{KvCacheStats, ServeMetrics, StepBreakdown};
 use crate::net::{
     inproc, tcp, DeadTransport, FaultPlan, FaultTransport, Transport, TransportKind,
@@ -103,7 +122,9 @@ const SERVE_PROMPT_SEED: u64 = 0x1a31a;
 #[derive(Debug, Clone)]
 pub struct PipelineOpts {
     pub artifacts_dir: std::path::PathBuf,
-    /// Attention workers (head-level shards; must divide kv_heads).
+    /// Attention workers (contiguous head-range shards). Any width
+    /// `1..=kv_heads` on the native backend; the engine backend's
+    /// per-width artifacts still require the width to divide `kv_heads`.
     pub attn_workers: usize,
     /// §4.2.2 resource-utilisation overlapping.
     pub overlap: bool,
@@ -188,6 +209,16 @@ pub struct PipelineOpts {
     /// to the caller. On by default; tests that assert on the typed error
     /// turn it off.
     pub auto_recover: bool,
+    /// Respawn a replacement on worker death (`--no-respawn` clears it).
+    /// When cleared, a death **degrades** the pool instead: the leader
+    /// re-plans head ranges over the W−1 survivors and keeps serving —
+    /// bit-identical output on the native backend — down to the
+    /// `min_workers` floor, below which the step fails with a typed
+    /// [`MembershipRefused`].
+    pub allow_respawn: bool,
+    /// Smallest pool width degradation may leave (`--min-workers`;
+    /// effective minimum 1).
+    pub min_workers: usize,
 }
 
 impl PipelineOpts {
@@ -215,6 +246,8 @@ impl PipelineOpts {
             fault_plan: None,
             health: HealthPolicy::default(),
             auto_recover: true,
+            allow_respawn: true,
+            min_workers: 1,
         }
     }
 }
@@ -309,6 +342,12 @@ pub struct DisaggPipeline {
     retired_wire: crate::net::WireStats,
     /// The current serving session (always present after `start`).
     session: Option<Session>,
+    /// Per-worker contiguous KV-head ranges (the shard plan); always the
+    /// same length as `workers`. Re-planned on every membership change.
+    plan: Vec<ShardRange>,
+    /// Membership epoch: bumped on every reshard and carried by `Welcome`;
+    /// workers echo it on `KvStats` so barriers can fence stale replies.
+    epoch: u64,
 }
 
 impl DisaggPipeline {
@@ -327,11 +366,28 @@ impl DisaggPipeline {
             }
         }
         let mc = &engine.manifest.config;
-        if mc.kv_heads % opts.attn_workers != 0 {
+        if opts.attn_workers == 0 || opts.attn_workers > mc.kv_heads {
             bail!(
-                "attention workers ({}) must divide kv heads ({}) for head-level partitioning",
+                "attention workers ({}) must be 1..={} (every worker needs ≥1 kv head)",
                 opts.attn_workers,
                 mc.kv_heads
+            );
+        }
+        // the native backend computes any contiguous head range in pure
+        // Rust; only the engine backend's per-width attention artifacts
+        // still require uniform shards
+        if opts.attn_backend == AttnBackendKind::Engine && mc.kv_heads % opts.attn_workers != 0 {
+            bail!(
+                "attention workers ({}) must divide kv heads ({}) on the engine backend",
+                opts.attn_workers,
+                mc.kv_heads
+            );
+        }
+        if opts.min_workers > opts.attn_workers {
+            bail!(
+                "--min-workers {} exceeds the starting pool of {} workers",
+                opts.min_workers,
+                opts.attn_workers
             );
         }
         // the native backend computes any shard width in pure Rust; only the
@@ -348,6 +404,8 @@ impl DisaggPipeline {
                 opts.attn_workers);
         }
 
+        let plan =
+            head_ranges(mc.kv_heads, opts.attn_workers).map_err(|e| anyhow!("shard plan: {e}"))?;
         let geom = ModelGeom::of(mc);
         let mut workers = Vec::new();
         for w in 0..opts.attn_workers {
@@ -360,7 +418,17 @@ impl DisaggPipeline {
             step_net_bytes: std::cell::Cell::new(0),
             retired_wire: crate::net::WireStats::new(),
             session: None,
+            plan,
+            epoch: 1,
         };
+        // membership handshake: every worker completes Hello → Welcome
+        // before any data-plane traffic (begin_session may poll KvStats
+        // immediately when a budget is set)
+        for wi in 0..pipe.workers.len() {
+            pipe.handshake_hello(wi)?;
+            let msg = pipe.welcome_msg(wi);
+            pipe.send_to(wi, msg)?;
+        }
         let waves = pipe.opts.max_waves;
         pipe.begin_session(GroupMode::Packed, waves)?;
         Ok(pipe)
@@ -372,6 +440,68 @@ impl DisaggPipeline {
 
     pub fn engine_stats(&self) -> crate::runtime::engine::EngineStats {
         self.engine.snapshot_stats()
+    }
+
+    /// Live attention-worker count (shrinks on degrade, grows on adoption).
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Current membership epoch (bumped on every reshard; starts at 1).
+    pub fn membership_epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The current shard plan: worker → contiguous KV-head range.
+    pub fn shard_plan(&self) -> &[ShardRange] {
+        &self.plan
+    }
+
+    // ---- membership handshake ---------------------------------------------
+
+    /// Leader side of the membership handshake: every freshly spawned
+    /// link's first frame is the worker's `Hello`; validate its codec
+    /// version before opening the data plane with a `Welcome`. A version
+    /// mismatch or any other first frame is a protocol death.
+    fn handshake_hello(&self, wi: usize) -> Result<()> {
+        let t0 = Instant::now();
+        match self.recv_worker(wi)? {
+            WireMsg::Hello { codec_version, shard: _ } => {
+                if codec_version != crate::net::codec::FORMAT_VERSION as u32 {
+                    return Err(self.declare_dead(
+                        wi,
+                        DeathCause::Protocol(format!(
+                            "worker speaks codec v{codec_version}, leader v{}",
+                            crate::net::codec::FORMAT_VERSION
+                        )),
+                        t0,
+                    ));
+                }
+                Ok(())
+            }
+            other => Err(self.declare_dead(
+                wi,
+                DeathCause::Protocol(format!("expected Hello, got {other:?}")),
+                t0,
+            )),
+        }
+    }
+
+    /// Build worker `wi`'s `Welcome` from the current plan and epoch: its
+    /// negotiated KV-head range plus the arena geometry it must (re)build.
+    fn welcome_msg(&self, wi: usize) -> WireMsg {
+        let mc = self.config();
+        let r = self.plan[wi];
+        WireMsg::Welcome {
+            epoch: self.epoch,
+            kv_start: r.start as u32,
+            kv_count: r.count as u32,
+            slots: (self.opts.slots * self.opts.max_waves) as u32,
+            kv_block_size: self.opts.kv_block_size as u32,
+            layers: mc.layers as u32,
+            head_dim: mc.head_dim as u32,
+            max_seq: mc.max_seq as u32,
+        }
     }
 
     // ---- session lifecycle ------------------------------------------------
@@ -511,6 +641,8 @@ impl DisaggPipeline {
     fn catch_death(&mut self, e: anyhow::Error) -> Result<StepOutcome> {
         let mut outcome = StepOutcome::default();
         let mut err = e;
+        let mut tried: Vec<usize> = Vec::new();
+        let mut width = self.workers.len();
         loop {
             let death = match err.downcast::<WorkerDeath>() {
                 Ok(d) => d,
@@ -519,10 +651,18 @@ impl DisaggPipeline {
             if !self.opts.auto_recover || self.session.is_none() {
                 return Err(anyhow::Error::new(death));
             }
-            if outcome.recovered_workers.contains(&death.worker) {
+            if self.workers.len() < width {
+                // a degradation removed a member, so worker indices have
+                // shifted: the repeat-death guard restarts (the shrinking
+                // pool itself bounds this loop)
+                width = self.workers.len();
+                tried.clear();
+            }
+            if tried.contains(&death.worker) {
                 // its own replacement died during recovery — unrecoverable
                 return Err(anyhow::Error::new(death));
             }
+            tried.push(death.worker);
             match self.recover_from_death(death.worker, &death.cause) {
                 Ok(preempted) => {
                     outcome.recovered_workers.push(death.worker);
@@ -847,10 +987,10 @@ impl DisaggPipeline {
               seq_bucket: usize) -> Result<()> {
         let _sp = obs::span("wire", "send_q").arg("layer", layer as i64);
         let mc = self.config();
-        let w = self.workers.len();
-        let hs = mc.heads / w;
-        for wi in 0..w {
-            let qs = slice_heads(q, wi * hs, hs);
+        let group = mc.heads / mc.kv_heads;
+        for (wi, r) in self.plan.iter().enumerate() {
+            let qr = r.q_range(group);
+            let qs = slice_heads(q, qr.start, qr.count);
             let msg = WireMsg::StepQ {
                 layer,
                 slots: slots.to_vec(),
@@ -867,14 +1007,11 @@ impl DisaggPipeline {
 
     fn send_kv(&self, layer: usize, k: &HostTensor, v: &HostTensor) -> Result<()> {
         let _sp = obs::span("wire", "send_kv").arg("layer", layer as i64);
-        let mc = self.config();
-        let w = self.workers.len();
-        let khs = mc.kv_heads / w;
-        for wi in 0..w {
+        for (wi, r) in self.plan.iter().enumerate() {
             let msg = WireMsg::StepKv {
                 layer,
-                k: slice_heads(k, wi * khs, khs),
-                v: slice_heads(v, wi * khs, khs),
+                k: slice_heads(k, r.start, r.count),
+                v: slice_heads(v, r.start, r.count),
             };
             self.step_net_bytes.set(self.step_net_bytes.get() + msg.wire_bytes());
             self.send_to(wi, msg)?;
@@ -888,7 +1025,7 @@ impl DisaggPipeline {
             .arg("workers", self.workers.len() as i64);
         let mc = self.config();
         let w = self.workers.len();
-        let hs = mc.heads / w;
+        let group = mc.heads / mc.kv_heads;
         let hd = mc.head_dim;
         let mut shards: Vec<HostTensor> = Vec::with_capacity(w);
         for wi in 0..w {
@@ -920,14 +1057,16 @@ impl DisaggPipeline {
             // pop() is infallible: the loop above pushed exactly w == 1.
             return Ok(shards.pop().expect("one shard pushed"));
         }
-        // interleave head shards back into [bucket, H, hd]
+        // interleave head shards back into [bucket, H, hd] at each
+        // worker's query-range offset (ranges may be non-uniform)
         let mut out = vec![0.0f32; bucket * mc.heads * hd];
         for (wi, shard) in shards.iter().enumerate() {
+            let qr = self.plan[wi].q_range(group);
             let sd = shard.as_f32();
             for b in 0..bucket {
-                let dst = (b * mc.heads + wi * hs) * hd;
-                let src = b * hs * hd;
-                out[dst..dst + hs * hd].copy_from_slice(&sd[src..src + hs * hd]);
+                let dst = (b * mc.heads + qr.start) * hd;
+                let src = b * qr.count * hd;
+                out[dst..dst + qr.count * hd].copy_from_slice(&sd[src..src + qr.count * hd]);
             }
         }
         copies::add(bucket * mc.heads * hd * 4);
@@ -961,7 +1100,10 @@ impl DisaggPipeline {
 
     /// Pool-wide KV-arena snapshot: polls every worker and sums the
     /// per-shard stats (block counts add across shards; the byte size of a
-    /// block shrinks with the shard width).
+    /// block shrinks with the shard width). Replies carrying a stale
+    /// membership epoch — queued before a reshard's re-`Welcome` — are
+    /// discarded and the link re-read, so a snapshot can never mix
+    /// geometries.
     pub fn kv_stats(&self) -> Result<KvCacheStats> {
         let _sp = obs::span("wire", "kv_stats");
         for wi in 0..self.workers.len() {
@@ -969,14 +1111,21 @@ impl DisaggPipeline {
         }
         let mut sum = KvCacheStats::default();
         for wi in 0..self.workers.len() {
-            match self.recv_worker(wi)? {
-                WireMsg::KvStats { stats } => sum = sum.merge(&stats),
-                other => {
-                    return Err(self.declare_dead(
-                        wi,
-                        DeathCause::Protocol(format!("unexpected reply {other:?}")),
-                        Instant::now(),
-                    ));
+            loop {
+                match self.recv_worker(wi)? {
+                    WireMsg::KvStats { stats, epoch } if epoch == self.epoch => {
+                        sum = sum.merge(&stats);
+                        break;
+                    }
+                    // stale-epoch snapshot: fenced off, keep reading
+                    WireMsg::KvStats { .. } => {}
+                    other => {
+                        return Err(self.declare_dead(
+                            wi,
+                            DeathCause::Protocol(format!("unexpected reply {other:?}")),
+                            Instant::now(),
+                        ));
+                    }
                 }
             }
         }
@@ -1275,16 +1424,15 @@ impl DisaggPipeline {
             .arg("layer", layer as i64)
             .arg("slot", slot as i64);
         let mc = self.config();
-        let w = self.workers.len();
-        let hs = mc.heads / w;
-        let khs = mc.kv_heads / w;
-        for wi in 0..w {
+        let group = mc.heads / mc.kv_heads;
+        for (wi, r) in self.plan.iter().enumerate() {
+            let qr = r.q_range(group);
             let msg = WireMsg::PrefillChunk {
                 layer,
                 slot,
-                q: slice_heads(q, wi * hs, hs),
-                k: slice_heads(k, wi * khs, khs),
-                v: slice_heads(v, wi * khs, khs),
+                q: slice_heads(q, qr.start, qr.count),
+                k: slice_heads(k, r.start, r.count),
+                v: slice_heads(v, r.start, r.count),
                 cached,
                 valid,
                 seq_bucket,
@@ -1391,33 +1539,92 @@ impl DisaggPipeline {
     /// 1. **Preempt** every live request through the scheduler's
     ///    promoted-token replay — its KV head-shard on the dead worker is
     ///    gone, so its context must re-prefill (effective prompt = prompt
-    ///    ⧺ generated-so-far; the surviving shards are overwritten with
-    ///    byte-identical values, so replay is idempotent there).
-    /// 2. **Respawn** a replacement worker with an empty arena (never
-    ///    fault-wrapped), folding the dead link's wire counters into the
-    ///    pool totals.
-    /// 3. **Flush + drain**: queued retirements go to every worker (a
-    ///    `Retire` for a slot the fresh arena never saw is a no-op), then
-    ///    a `KvStatsReq` round-trip per link acts as a FIFO barrier that
-    ///    discards the failed iteration's in-flight replies and yields a
-    ///    clean occupancy snapshot.
+    ///    ⧺ generated-so-far).
+    /// 2. **Replace or shrink.** With `allow_respawn` (the default) a
+    ///    replacement worker is spawned and handshaked at the same width.
+    ///    With `--no-respawn` the pool **degrades**: the dead member is
+    ///    dropped and the survivors keep serving at W−1 — unless that
+    ///    falls below the `min_workers` floor, in which case the queued
+    ///    retirements are flushed to the survivors (zero leaked blocks)
+    ///    and a typed, non-recoverable [`MembershipRefused`] surfaces.
+    /// 3. **Epoch-fenced reshard**: bump the epoch, re-plan head ranges
+    ///    over the current members, re-`Welcome` everyone (arena rebuild =
+    ///    implicit retire-everything), and run the fenced `KvStatsReq`
+    ///    barrier that discards any reply from the dead geometry.
     ///
     /// Decoding resumes through the normal admission path on subsequent
-    /// steps; the recovered output is bit-identical to an unfailed run on
-    /// the native backend (chaos suite + `fault-smoke`). Returns the
-    /// preempted ids.
+    /// steps; the recovered — or degraded — output is bit-identical to an
+    /// unfailed run on the native backend (chaos suite + `fault-smoke`).
+    /// Returns the preempted ids.
     fn recover_from_death(&mut self, idx: usize, cause: &DeathCause) -> Result<Vec<RequestId>> {
         let t0 = Instant::now();
-        let _sp = obs::span("failover", "recover")
+        let degrade = !self.opts.allow_respawn;
+        let _sp = obs::span("failover", if degrade { "degrade" } else { "recover" })
             .arg("worker", idx as i64)
             .arg_str("cause", cause.name());
-        // (1) preempt — reverse running order so front-of-queue insertion
-        // re-admits in the original order. Slots are captured first: a
-        // request whose FIRST prefill chunk was in flight when the worker
-        // died shows no progress to the scheduler (wrote_kv = false, no
-        // Retire queued on preempt), yet surviving workers may have
-        // appended that chunk — retiring every preempted slot explicitly
-        // keeps their arenas leak-free (no-op where nothing landed).
+        // (1) preempt every live request
+        let (live, tokens_replayed) = self.preempt_all_live();
+        // (2) replace the dead worker, or shrink the pool
+        if degrade {
+            let survivors = self.workers.len() - 1;
+            let policy =
+                MembershipPolicy { allow_respawn: false, min_workers: self.opts.min_workers };
+            if !policy.can_degrade_to(survivors) {
+                // refuse below the floor. Flush the preempt-queued Retires
+                // to the survivors directly (the dead link would poison
+                // send_retirements) so their arenas stay leak-free, then
+                // fail typed; the pool is left as-is and every later step
+                // surfaces the same refusal.
+                let retires = self.session_mut().sched.take_retirements();
+                for &(_, slot) in &retires {
+                    for (wi, w) in self.workers.iter().enumerate() {
+                        if wi == idx {
+                            continue;
+                        }
+                        let _ = w.link.send(WireMsg::Retire { slot });
+                    }
+                }
+                return Err(anyhow::Error::new(MembershipRefused {
+                    survivors,
+                    floor: self.opts.min_workers.max(1),
+                    cause: cause.clone(),
+                }));
+            }
+            // drop the dead handle (wire counters folded into the pool
+            // totals); its thread exits on its own once it observes the
+            // severed link
+            self.retired_wire.merge(&self.workers[idx].link.stats());
+            let _dead = self.workers.remove(idx);
+        } else {
+            self.retired_wire.merge(&self.workers[idx].link.stats());
+            let geom = ModelGeom::of(self.config());
+            // the old handle is dropped without a join: its thread exits on
+            // its own once it observes the severed link (a *hung* thread
+            // would otherwise block recovery here)
+            self.workers[idx] = spawn_worker(&self.opts, geom, idx, true)?;
+            self.handshake_hello(idx)?;
+        }
+        // (3) epoch-fenced reshard over the current membership
+        let snap = self.reshard_and_barrier()?;
+        self.rebudget(snap);
+        let s = self.session_mut();
+        s.metrics.record_recovery(tokens_replayed, t0.elapsed().as_secs_f64());
+        if degrade {
+            crate::metrics::note_degrade(t0.elapsed().as_secs_f64());
+        }
+        Ok(live)
+    }
+
+    /// Preempt every live request through the promoted-token replay —
+    /// reverse running order so front-of-queue insertion re-admits in the
+    /// original order. Slots are captured first: a request whose FIRST
+    /// prefill chunk was in flight when the worker died shows no progress
+    /// to the scheduler (wrote_kv = false, no Retire queued on preempt),
+    /// yet surviving workers may have appended that chunk — retiring every
+    /// preempted slot explicitly keeps their arenas leak-free (no-op where
+    /// nothing landed). Returns the preempted ids and the total tokens
+    /// their replays will re-prefill.
+    fn preempt_all_live(&mut self) -> (Vec<RequestId>, u64) {
         let live = self.session_ref().sched.live_ids();
         {
             let s = self.session_mut();
@@ -1449,14 +1656,31 @@ impl DisaggPipeline {
                 }
             }
         }
-        // (2) respawn
-        self.retired_wire.merge(&self.workers[idx].link.stats());
-        let geom = ModelGeom::of(self.config());
-        // the old handle is dropped without a join: its thread exits on its
-        // own once it observes the severed link (a *hung* thread would
-        // otherwise block recovery here)
-        self.workers[idx] = spawn_worker(&self.opts, geom, idx, true)?;
-        // (3) flush queued retirements, then the drain barrier
+        (live, tokens_replayed)
+    }
+
+    /// Re-fence the pool on its **current** membership: bump the epoch,
+    /// re-plan contiguous head ranges over the live workers, re-`Welcome`
+    /// every member (the worker rebuilds its arena from the carried
+    /// geometry — an implicit retire-everything), flush queued retirements
+    /// (no-ops on fresh arenas, but keeps the scheduler's ledger drained),
+    /// then run the epoch-fenced `KvStatsReq` barrier: per link, replies
+    /// are discarded until one echoes the new epoch, so in-flight frames
+    /// from the dead geometry can never alias into the new one. Callers
+    /// must have preempted every live request first. Resets every
+    /// survivor's health ladder and returns the fresh pool snapshot.
+    fn reshard_and_barrier(&mut self) -> Result<KvCacheStats> {
+        self.epoch += 1;
+        let _sp = obs::span("failover", "reshard")
+            .arg("epoch", self.epoch as i64)
+            .arg("workers", self.workers.len() as i64);
+        let kv_heads = self.config().kv_heads;
+        self.plan = head_ranges(kv_heads, self.workers.len())
+            .map_err(|e| anyhow!("reshard plan: {e}"))?;
+        for wi in 0..self.workers.len() {
+            let msg = self.welcome_msg(wi);
+            self.send_to(wi, msg)?;
+        }
         let retires = self.session_mut().sched.take_retirements();
         self.send_retirements(&retires)?;
         for wi in 0..self.workers.len() {
@@ -1466,20 +1690,110 @@ impl DisaggPipeline {
         for wi in 0..self.workers.len() {
             loop {
                 match self.recv_worker(wi)? {
-                    WireMsg::KvStats { stats } => {
+                    WireMsg::KvStats { stats, epoch } if epoch == self.epoch => {
                         snap = snap.merge(&stats);
                         break;
                     }
-                    // the failed iteration's stale in-flight replies
+                    // pre-reshard traffic (stale-epoch stats, attention
+                    // outputs of the abandoned iteration): fenced off
                     _stale => {}
                 }
             }
         }
+        // a later, unrelated death must face the full retry ladder again
+        for w in &self.workers {
+            w.health.borrow_mut().reset();
+        }
+        Ok(snap)
+    }
+
+    /// Re-derive the scheduler's byte ledger and the session budget view
+    /// from a fresh pool snapshot: a reshard changes the per-worker block
+    /// byte size (shards hold more or fewer heads), so block↔byte budget
+    /// conversions must rebase or admission would misjudge capacity.
+    fn rebudget(&mut self, snap: KvCacheStats) {
+        let block_bytes =
+            if snap.total_blocks > 0 { snap.total_bytes / snap.total_blocks } else { 0 };
+        let budget = match (self.opts.kv_byte_budget, self.opts.kv_block_budget) {
+            (Some(bytes), _) => KvBudget::Bytes(bytes),
+            (None, Some(blocks)) => KvBudget::Blocks(blocks),
+            (None, None) => KvBudget::Unlimited,
+        };
+        let (budget_blocks, budget_bytes) = match budget {
+            KvBudget::Unlimited => (None, None),
+            KvBudget::Blocks(b) => (Some(b), (block_bytes > 0).then_some(b * block_bytes)),
+            KvBudget::Bytes(b) => ((block_bytes > 0).then(|| b / block_bytes), Some(b)),
+        };
         let s = self.session_mut();
+        if block_bytes > 0 {
+            s.sched.set_block_bytes(block_bytes);
+        }
+        s.budget_blocks = budget_blocks;
+        s.budget_bytes = budget_bytes;
         s.kv_snap = snap;
         s.metrics.record_kv(snap);
-        s.metrics.record_recovery(tokens_replayed, t0.elapsed().as_secs_f64());
-        Ok(live)
+    }
+
+    /// **Scale-up adoption**: spawn and handshake one additional attention
+    /// worker, quiesce at the step boundary (every live request preempted
+    /// through the promoted-token replay), and reshard W→W+1. Output is
+    /// bit-identical to an un-adopted run on the native backend. The
+    /// joining link IS fault-wrapped when the pipeline's `--fault-plan`
+    /// targets its index (adoption is a first spawn, not a recovery
+    /// respawn) — which is what lets tests kill a worker inside the
+    /// adoption window. A failed adoption is non-fatal when the rollback
+    /// reshard over the original members succeeds: the pool stays at W and
+    /// the error is returned; if the rollback ALSO fails (a survivor died
+    /// inside the window), the next [`Self::step`]'s recovery picks it up.
+    pub fn adopt_worker(&mut self) -> Result<usize> {
+        let t0 = Instant::now();
+        if self.opts.attn_backend != AttnBackendKind::Native {
+            bail!(
+                "adoption requires --attn-backend native \
+                 (engine attention artifacts are per-width)"
+            );
+        }
+        let kv_heads = self.config().kv_heads;
+        let new_idx = self.workers.len();
+        if new_idx + 1 > kv_heads {
+            bail!(
+                "cannot adopt a {}th worker: only {} kv heads to shard",
+                new_idx + 1,
+                kv_heads
+            );
+        }
+        let _sp = obs::span("failover", "adopt").arg("worker", new_idx as i64);
+        let geom = ModelGeom::of(self.config());
+        self.workers.push(spawn_worker(&self.opts, geom, new_idx, false)?);
+        match self.adopt_inner(new_idx) {
+            Ok(()) => {
+                crate::metrics::note_adoption(t0.elapsed().as_secs_f64());
+                Ok(new_idx)
+            }
+            Err(e) => {
+                // roll back: drop the joiner and re-fence the original
+                // members at their previous width (everything is already
+                // preempted, so the replay machinery absorbs the churn
+                // either way)
+                let dead = self.workers.remove(new_idx);
+                self.retired_wire.merge(&dead.link.stats());
+                drop(dead);
+                if let Ok(snap) = self.reshard_and_barrier() {
+                    self.rebudget(snap);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    fn adopt_inner(&mut self, new_idx: usize) -> Result<()> {
+        self.handshake_hello(new_idx)?;
+        // quiesce: adoption re-keys every worker's shard, so live KV is
+        // rebuilt by replay exactly as in failure recovery
+        let (_live, _tokens) = self.preempt_all_live();
+        let snap = self.reshard_and_barrier()?;
+        self.rebudget(snap);
+        Ok(())
     }
 
     /// Deterministic chaos hook: sever worker `idx`'s link *now*. The
@@ -1520,6 +1834,12 @@ impl DisaggPipeline {
         self.retired_wire.merge(&self.workers[idx].link.stats());
         let geom = ModelGeom::of(self.config());
         self.workers[idx] = spawn_worker(&self.opts, geom, idx, true)?;
+        // membership handshake at the unchanged plan/epoch: the survivors'
+        // shards stay resident, so this is a same-geometry re-join, not a
+        // reshard
+        self.handshake_hello(idx)?;
+        let msg = self.welcome_msg(idx);
+        self.send_to(idx, msg)?;
         for (slot, tokens) in live {
             assert!(!tokens.is_empty());
             // re-prefill the full known token history; the final next-token
@@ -1529,7 +1849,19 @@ impl DisaggPipeline {
         Ok(())
     }
 
+    /// Stop every worker with a clean `Shutdown` frame and join the
+    /// threads. Pending retirements — e.g. queued by a cancel or an abort
+    /// path whose typed error cut the run short of the next step's flush —
+    /// go out first, so arenas quiesce leak-free before teardown (leak
+    /// assertions read `kv_stats` right before this).
     pub fn shutdown(mut self) {
+        if let Some(s) = &mut self.session {
+            for (_, slot) in s.sched.take_retirements() {
+                for w in &self.workers {
+                    let _ = w.link.send(WireMsg::Retire { slot });
+                }
+            }
+        }
         for w in &self.workers {
             let _ = w.link.send(WireMsg::Shutdown);
         }

@@ -44,6 +44,44 @@ use crate::runtime::host::HostTensor;
 /// Messages on the leader↔worker link (one enum; the link is bidirectional).
 #[derive(Debug, Clone, PartialEq)]
 pub enum WireMsg {
+    /// Membership handshake, worker → leader: the **first** frame on every
+    /// link (spawned, respawned, or adopted). Carries the worker's codec
+    /// version so incompatible peers fail typed before any tensor moves,
+    /// and its spawn-time shard index for diagnostics. The worker sends
+    /// nothing else until the leader's [`WireMsg::Welcome`] arrives.
+    Hello {
+        /// `net::codec::FORMAT_VERSION` the worker speaks; the leader
+        /// rejects a mismatch as a `Protocol` death.
+        codec_version: u32,
+        /// Spawn-time shard index (diagnostic; the authoritative geometry
+        /// arrives in `Welcome`).
+        shard: u32,
+    },
+    /// Membership handshake reply, leader → worker: admits the worker into
+    /// membership epoch `epoch` and assigns its KV-head range. The worker
+    /// (re)builds its paged arena from these fields — a `Welcome` received
+    /// mid-session is a **reshard**: drop every cached block, adopt the new
+    /// range, echo the new epoch on subsequent `KvStats`.
+    Welcome {
+        /// Membership epoch this geometry belongs to (bumped on every
+        /// respawn / degrade / adopt reshard).
+        epoch: u64,
+        /// First KV head of this worker's contiguous range.
+        kv_start: u32,
+        /// KV heads in the range (may differ across workers when the pool
+        /// width does not divide the head count).
+        kv_count: u32,
+        /// Slot capacity to size the arena for.
+        slots: u32,
+        /// Tokens per KV block.
+        kv_block_size: u32,
+        /// Model layers.
+        layers: u32,
+        /// Head dimension.
+        head_dim: u32,
+        /// Max sequence length per slot.
+        max_seq: u32,
+    },
     /// Query shard for one layer step. Arrives first; in overlap mode the
     /// worker immediately starts partial attention over its cached tokens.
     StepQ {
@@ -101,8 +139,12 @@ pub enum WireMsg {
     MapBlocks { slot: u32, src_slot: u32, tokens: usize },
     /// Ask for a KV-arena accounting snapshot (leader → worker).
     KvStatsReq,
-    /// KV-arena accounting snapshot (worker → leader).
-    KvStats { stats: KvCacheStats },
+    /// KV-arena accounting snapshot (worker → leader). `epoch` echoes the
+    /// membership epoch of the worker's last `Welcome` — the leader's
+    /// reshard barrier discards snapshots from a dead geometry by epoch
+    /// mismatch, so stale in-flight replies can never alias into the new
+    /// membership.
+    KvStats { stats: KvCacheStats, epoch: u64 },
     /// Worker fatal error (worker → leader).
     WorkerError { msg: String },
     /// Graceful shutdown (leader → worker).
@@ -113,6 +155,8 @@ impl WireMsg {
     /// Bytes this message occupies on the wire (tensor payloads only).
     pub fn wire_bytes(&self) -> usize {
         match self {
+            WireMsg::Hello { .. } => 8,
+            WireMsg::Welcome { .. } => 36,
             WireMsg::StepQ { q, lens, slots, .. } => {
                 q.byte_size() + lens.len() * 4 + slots.len() * 4
             }
@@ -123,7 +167,7 @@ impl WireMsg {
             WireMsg::AttnOut { out, .. } => out.byte_size(),
             WireMsg::Retire { .. } => 4,
             WireMsg::KvStatsReq => 0,
-            WireMsg::KvStats { .. } => 64,
+            WireMsg::KvStats { .. } => 72,
             WireMsg::WorkerError { msg } => msg.len(),
             WireMsg::Shutdown => 0,
             WireMsg::MapBlocks { .. } => 12,
@@ -150,8 +194,23 @@ mod tests {
         assert_eq!(WireMsg::Shutdown.wire_bytes(), 0);
         assert_eq!(WireMsg::Retire { slot: 3 }.wire_bytes(), 4);
         assert_eq!(WireMsg::KvStatsReq.wire_bytes(), 0);
-        assert_eq!(WireMsg::KvStats { stats: KvCacheStats::default() }.wire_bytes(), 64);
+        assert_eq!(
+            WireMsg::KvStats { stats: KvCacheStats::default(), epoch: 0 }.wire_bytes(),
+            72
+        );
         assert_eq!(WireMsg::MapBlocks { slot: 1, src_slot: 0, tokens: 32 }.wire_bytes(), 12);
+        assert_eq!(WireMsg::Hello { codec_version: 4, shard: 0 }.wire_bytes(), 8);
+        let w = WireMsg::Welcome {
+            epoch: 1,
+            kv_start: 0,
+            kv_count: 2,
+            slots: 4,
+            kv_block_size: 4,
+            layers: 2,
+            head_dim: 8,
+            max_seq: 64,
+        };
+        assert_eq!(w.wire_bytes(), 36);
     }
 
     #[test]

@@ -115,17 +115,44 @@
 //!                                                    resume decoding — bit-identical
 //! ```
 //!
-//! Detection policy lives in [`crate::coordinator::failover`]
+//! With elastic membership the pool width itself is a recovery variable.
+//! Every worker — spawned, respawned, or adopted — joins through a
+//! versioned `Hello`/`Welcome` handshake, and every width change is an
+//! **epoch-fenced reshard** (re-plan contiguous KV-head ranges over the
+//! members, re-`Welcome` all of them, then a `KvStats` barrier that
+//! discards replies from any older epoch):
+//!
+//! ```text
+//!                         ┌────────────────────────────────────────────┐
+//!   declare DEAD ──┬─────▶│ respawn (default): same width, fresh arena │
+//!                  │      └────────────────────────────────────────────┘
+//!                  │      ┌────────────────────────────────────────────┐
+//!                  └─────▶│ DEGRADE (--no-respawn): reshard W → W−1    │
+//!                         │ survivors; below --min-workers → typed     │
+//!                         │ MembershipRefused, zero leaked blocks      │
+//!                         └────────────────────────────────────────────┘
+//!   adopt_worker() ──────▶ handshake joiner ─ quiesce ─ reshard W → W+1
+//!
+//!   every arrow above = preempt-all → epoch += 1 → Welcome all →
+//!                       fenced barrier → replay (bit-identical)
+//! ```
+//!
+//! Detection policy and membership policy live in
+//! [`crate::coordinator::failover`]
 //! ([`crate::coordinator::failover::HealthPolicy`]: recv deadline, bounded
-//! retries, exponential backoff), the recovery procedure in
-//! [`leader::DisaggPipeline`] (`auto_recover`), and deterministic fault
-//! injection in [`crate::net::fault`] (`--fault-plan`). The [`chaos`]
-//! harness drives all three end-to-end without artifacts: real scheduler,
-//! real attention workers, faulted links, and a pseudo-model whose
-//! constant-K attention makes recovered output bit-comparable to an
-//! unfailed golden run. Failure telemetry lands in the metrics registry
-//! (`failover.worker_deaths`, `failover.recovery_ns`, …) and on the
-//! `failover` span track of the trace timeline.
+//! retries, exponential backoff;
+//! [`crate::coordinator::failover::MembershipPolicy`]: respawn vs degrade,
+//! floor), the recovery procedure in [`leader::DisaggPipeline`]
+//! (`auto_recover`), and deterministic fault injection in
+//! [`crate::net::fault`] (`--fault-plan`). The [`chaos`] harness drives
+//! all of it end-to-end without artifacts: real scheduler, real attention
+//! workers, faulted links, scripted kill/adopt schedules, and a
+//! pseudo-model whose constant-K attention makes recovered — or degraded —
+//! output bit-comparable to an unfailed golden run. Failure telemetry
+//! lands in the metrics registry (`failover.worker_deaths`,
+//! `failover.recovery_ns`, `failover.degrades`, `failover.adoptions`,
+//! `failover.reshard_ns`, …) and on the `failover` span track of the
+//! trace timeline.
 
 pub mod attn_worker;
 pub mod chaos;

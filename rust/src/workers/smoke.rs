@@ -78,6 +78,28 @@ pub fn run_trace_smoke(steps: usize, kill_worker_mid: bool) -> Result<SmokeRepor
     };
     let h = std::thread::spawn(move || run_attn_worker(cfg, worker));
 
+    // membership handshake: the worker's first frame is its Hello, and
+    // the data plane only opens after our Welcome (the worker builds its
+    // arena from the negotiated geometry)
+    {
+        let _sp = obs::span("leader", "handshake").arg("epoch", 1);
+        match leader.recv()? {
+            WireMsg::Hello { codec_version, .. }
+                if codec_version == crate::net::codec::FORMAT_VERSION as u32 => {}
+            other => return Err(format!("expected Hello, got {other:?}")),
+        }
+        leader.send(WireMsg::Welcome {
+            epoch: 1,
+            kv_start: 0,
+            kv_count: 4,
+            slots: 4,
+            kv_block_size: 4,
+            layers: LAYERS as u32,
+            head_dim: 16,
+            max_seq: SEQ_BUCKET as u32,
+        })?;
+    }
+
     let mut replies = 0usize;
     let mut worker_died = false;
 

@@ -33,7 +33,7 @@ fn rand_tensor(rng: &mut Rng) -> HostTensor {
 }
 
 fn rand_msg(rng: &mut Rng) -> WireMsg {
-    match rng.usize(0, 10) {
+    match rng.usize(0, 12) {
         0 => {
             let rows = rng.usize(0, 5);
             WireMsg::StepQ {
@@ -70,6 +70,7 @@ fn rand_msg(rng: &mut Rng) -> WireMsg {
                 physical_blocks_in_use: rng.usize(0, 1 << 30),
                 physical_bytes_in_use: rng.usize(0, 1 << 40),
             },
+            epoch: rng.next_u64(),
         },
         7 => WireMsg::MapBlocks {
             slot: rng.next_u64() as u32,
@@ -81,6 +82,20 @@ fn rand_msg(rng: &mut Rng) -> WireMsg {
             let text: String = (0..n).map(|_| char::from(b'a' + (rng.usize(0, 26) as u8))).collect();
             WireMsg::WorkerError { msg: text }
         }
+        9 => WireMsg::Hello {
+            codec_version: rng.next_u64() as u32,
+            shard: rng.next_u64() as u32,
+        },
+        10 => WireMsg::Welcome {
+            epoch: rng.next_u64(),
+            kv_start: rng.next_u64() as u32,
+            kv_count: rng.next_u64() as u32,
+            slots: rng.next_u64() as u32,
+            kv_block_size: rng.next_u64() as u32,
+            layers: rng.next_u64() as u32,
+            head_dim: rng.next_u64() as u32,
+            max_seq: rng.next_u64() as u32,
+        },
         _ => WireMsg::Shutdown,
     }
 }

@@ -59,7 +59,7 @@ fn scripted_worker<T: Transport>(link: T) {
                     physical_blocks_in_use: 3,
                     physical_bytes_in_use: 3 * 4096,
                 };
-                link.send(WireMsg::KvStats { stats }).expect("worker send");
+                link.send(WireMsg::KvStats { stats, epoch: 0 }).expect("worker send");
             }
             WireMsg::StepQ { q, .. } => pending_q = Some(q),
             WireMsg::StepKv { layer, k, v } => {
@@ -229,6 +229,27 @@ fn run_native_session<T: Transport + 'static>(leader: T, worker: T, dtype: KvDty
     let h = std::thread::spawn(move || run_attn_worker(cfg, worker));
     let mut replies = Vec::new();
 
+    // membership handshake: the worker opens with Hello and only joins the
+    // data plane after a geometry-carrying Welcome
+    match leader.recv().unwrap() {
+        WireMsg::Hello { codec_version, .. } => {
+            assert_eq!(codec_version, lamina::net::codec::FORMAT_VERSION as u32);
+        }
+        other => panic!("expected Hello, got {other:?}"),
+    }
+    leader
+        .send(WireMsg::Welcome {
+            epoch: 1,
+            kv_start: 0,
+            kv_count: 4,
+            slots: 4,
+            kv_block_size: 4,
+            layers: 2,
+            head_dim: 16,
+            max_seq: 64,
+        })
+        .unwrap();
+
     // chunked prefill: 2 chunks × 3 tokens on slot 0, both layers each
     let mut cached = 0i32;
     for chunk in 0..2i32 {
@@ -316,10 +337,10 @@ fn native_backend_full_session_artifact_free_over_both_transports() {
     // blocks for slot 0 (6 prefill + 4 decode = 10 tokens → 3 blocks of 4)
     // plus slots 1 and 3 (4 tokens → 1 block each); after retiring slot 0
     // its 3 blocks are back in the pool
-    let WireMsg::KvStats { stats: before } = &replies_inproc[replies_inproc.len() - 2] else {
+    let WireMsg::KvStats { stats: before, .. } = &replies_inproc[replies_inproc.len() - 2] else {
         panic!("expected KvStats");
     };
-    let WireMsg::KvStats { stats: after } = &replies_inproc[replies_inproc.len() - 1] else {
+    let WireMsg::KvStats { stats: after, .. } = &replies_inproc[replies_inproc.len() - 1] else {
         panic!("expected KvStats");
     };
     assert_eq!(before.blocks_in_use, 3 + 1 + 1);
@@ -340,7 +361,7 @@ fn native_backend_full_session_artifact_free_over_both_transports() {
 fn native_backend_quantized_session_over_both_transports() {
     let (l32, w32) = inproc::pair(&FHBN, LINE_RATE_400G, 0.0);
     let base = run_native_session(l32, w32, KvDtype::F32);
-    let WireMsg::KvStats { stats: base_before } = &base[base.len() - 2] else {
+    let WireMsg::KvStats { stats: base_before, .. } = &base[base.len() - 2] else {
         panic!("expected KvStats");
     };
 
@@ -370,7 +391,7 @@ fn native_backend_quantized_session_over_both_transports() {
         }
 
         // same blocks, fewer bytes
-        let WireMsg::KvStats { stats } = &a[a.len() - 2] else { panic!("expected KvStats") };
+        let WireMsg::KvStats { stats, .. } = &a[a.len() - 2] else { panic!("expected KvStats") };
         assert_eq!(stats.blocks_in_use, base_before.blocks_in_use);
         let cut = base_before.bytes_in_use as f64 / stats.bytes_in_use as f64;
         assert!(

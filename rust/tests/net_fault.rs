@@ -92,11 +92,13 @@ fn kill_schedules_never_panic_and_recover_bit_identical() {
     for transport in [TransportKind::Inproc, TransportKind::Tcp] {
         let gold = golden(transport);
         let mut recovered = 0usize;
-        // per link, a fault-free session sees ~38 sends (6 prefill, 4 per
-        // decode iteration, retires, barrier) and ~21 recvs (2 per prefill
-        // step and decode iteration, barrier) — these schedules land kills
-        // in prefill, mid-decode, and the retire/drain tail
-        for (worker, k) in [(0, 1), (1, 3), (0, 7), (1, 14), (0, 23), (1, 31)] {
+        // per link, a fault-free session sees ~39 sends (1 Welcome, 6
+        // prefill, 4 per decode iteration, retires, barrier) and ~22 recvs
+        // (the Hello, 2 per prefill step and decode iteration, barrier) —
+        // these schedules land kills in prefill, mid-decode, and the
+        // retire/drain tail (send/recv #1 is the handshake, covered by its
+        // own test below)
+        for (worker, k) in [(0, 2), (1, 4), (0, 8), (1, 15), (0, 24), (1, 32)] {
             let plan = format!("worker={worker},kill-send={k}");
             if let Ok(r) = assert_invariant(&plan, transport, &gold) {
                 assert!(r.worker_deaths >= 1, "plan `{plan}` never fired");
@@ -104,7 +106,7 @@ fn kill_schedules_never_panic_and_recover_bit_identical() {
                 recovered += 1;
             }
         }
-        for (worker, k) in [(0, 1), (1, 2), (0, 5), (1, 9), (0, 13), (1, 17)] {
+        for (worker, k) in [(0, 2), (1, 3), (0, 6), (1, 10), (0, 14), (1, 18)] {
             let plan = format!("worker={worker},kill-recv={k}");
             if let Ok(r) = assert_invariant(&plan, transport, &gold) {
                 assert!(r.worker_deaths >= 1, "plan `{plan}` never fired");
@@ -184,7 +186,7 @@ fn delay_within_deadline_is_transparent() {
 #[test]
 fn without_auto_recover_every_kill_fails_typed_with_zero_leaks() {
     for transport in [TransportKind::Inproc, TransportKind::Tcp] {
-        for (worker, k) in [(0, 2), (1, 11)] {
+        for (worker, k) in [(0, 3), (1, 12)] {
             let mut c = cfg(transport);
             c.fault_plan =
                 Some(FaultPlan::parse(&format!("worker={worker},kill-send={k}")).expect("plan"));
@@ -197,5 +199,154 @@ fn without_auto_recover_every_kill_fails_typed_with_zero_leaks() {
                 transport.name()
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// elastic membership: handshake kills, graceful degradation, adoption
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kill_inside_handshake_fails_typed_with_zero_leaks() {
+    // send #1 on a link is the leader's Welcome and recv #1 the worker's
+    // Hello: both kills land inside the membership handshake, before the
+    // data plane opens — the session must refuse to start, typed, without
+    // stranding anything (no KV was ever reserved)
+    for transport in [TransportKind::Inproc, TransportKind::Tcp] {
+        for plan in ["worker=1,kill-send=1", "worker=1,kill-recv=1"] {
+            let mut c = cfg(transport);
+            c.fault_plan = Some(FaultPlan::parse(plan).expect("plan"));
+            let f = run_chaos(&c).expect_err("handshake kill must abort typed");
+            assert_eq!(
+                f.leaked_blocks, 0,
+                "plan `{plan}` on {} leaked KV",
+                transport.name()
+            );
+        }
+    }
+}
+
+/// Property: ANY two-kill script over a W=4 pool with respawn disabled
+/// degrades W=4→3→2 with output bit-identical to the fault-free run, on
+/// both transports. Includes a same-boundary double kill, which forces
+/// the second death to surface *inside* the first degrade's reshard
+/// window (the cascade path with shifted worker indices).
+#[test]
+fn degrade_ladder_w4_w3_w2_bit_identical_both_transports() {
+    for transport in [TransportKind::Inproc, TransportKind::Tcp] {
+        let mut g = cfg(transport);
+        g.workers = 4;
+        let gold = run_chaos(&g).expect("golden W=4");
+        assert_eq!(gold.leaked_blocks, 0);
+        for script in [
+            vec![(2usize, 3usize), (5, 1)], // sequential, tail worker first
+            vec![(1, 0), (4, 2)],           // head worker first, then a survivor
+            vec![(2, 2), (2, 1)],           // simultaneous: cascade inside reshard
+        ] {
+            let mut c = g.clone();
+            c.allow_respawn = false;
+            c.min_workers = 2;
+            c.kill_at = script.clone();
+            let r = run_chaos(&c)
+                .unwrap_or_else(|f| panic!("script {script:?} on {}: {f}", transport.name()));
+            assert_eq!(
+                r.outputs, gold.outputs,
+                "script {script:?} on {}: degraded output diverged",
+                transport.name()
+            );
+            assert_eq!(r.degrades, 2, "script {script:?}");
+            assert_eq!(r.final_workers, 2, "script {script:?}");
+            assert_eq!(r.leaked_blocks, 0, "script {script:?}");
+            assert!(r.tokens_replayed > 0, "script {script:?}");
+        }
+    }
+}
+
+#[test]
+fn degrade_below_floor_refuses_typed_and_leak_free() {
+    for transport in [TransportKind::Inproc, TransportKind::Tcp] {
+        let mut c = cfg(transport);
+        c.workers = 2;
+        c.allow_respawn = false;
+        c.min_workers = 2;
+        c.kill_at = vec![(3, 1)];
+        let f = run_chaos(&c).expect_err("below-floor degrade must refuse");
+        assert_eq!(f.death.worker, 1);
+        assert_eq!(
+            f.leaked_blocks, 0,
+            "refusal must quiesce leak-free on {}",
+            transport.name()
+        );
+    }
+}
+
+/// The PR's acceptance scenario: kill one of W=4 with respawn disabled —
+/// the pool degrades live to W=3, bit-identical — then adopt a joiner at
+/// a later step boundary and finish back at W=4.
+#[test]
+fn degrade_then_adopt_restores_full_width_bit_identical() {
+    for transport in [TransportKind::Inproc, TransportKind::Tcp] {
+        let mut g = cfg(transport);
+        g.workers = 4;
+        let gold = run_chaos(&g).expect("golden W=4");
+        let mut c = g.clone();
+        c.allow_respawn = false;
+        c.min_workers = 2;
+        c.kill_at = vec![(2, 1)];
+        c.adopt_at_step = Some(6);
+        let r = run_chaos(&c)
+            .unwrap_or_else(|f| panic!("degrade+adopt on {}: {f}", transport.name()));
+        assert_eq!(r.outputs, gold.outputs, "output diverged on {}", transport.name());
+        assert_eq!(r.degrades, 1);
+        assert_eq!(r.adoptions, 1);
+        assert_eq!(r.final_workers, 4);
+        assert_eq!(r.worker_deaths, 1);
+        assert_eq!(r.leaked_blocks, 0);
+    }
+}
+
+#[test]
+fn kill_inside_adoption_window_rolls_back_clean() {
+    // the joiner spawns fault-wrapped (`worker=2` targets it alone in a
+    // W=2 pool); its link dies inside the adoption handshake (`kill-recv`
+    // hits its Hello) or inside the reshard window (`kill-send` hits its
+    // Welcome, AFTER the survivors already took the widened epoch). The
+    // leader must evict it, re-fence the original membership at a fresh
+    // epoch, and still finish bit-identical.
+    for transport in [TransportKind::Inproc, TransportKind::Tcp] {
+        let gold = golden(transport);
+        for plan in ["worker=2,kill-recv=1", "worker=2,kill-send=1"] {
+            let mut c = cfg(transport);
+            c.adopt_at_step = Some(3);
+            c.fault_plan = Some(FaultPlan::parse(plan).expect("plan"));
+            let r = run_chaos(&c)
+                .unwrap_or_else(|f| panic!("plan `{plan}` on {}: {f}", transport.name()));
+            assert_eq!(
+                r.outputs, gold.outputs,
+                "plan `{plan}` on {}: rollback diverged",
+                transport.name()
+            );
+            assert_eq!(r.adoptions, 0, "plan `{plan}`: failed adoption must not count");
+            assert_eq!(r.final_workers, 2, "plan `{plan}`");
+            assert_eq!(r.worker_deaths, 1, "plan `{plan}`");
+            assert_eq!(r.leaked_blocks, 0, "plan `{plan}`");
+        }
+    }
+}
+
+#[test]
+fn adoption_on_healthy_pool_is_transparent() {
+    // pure scale-up, no faults: W=2 → W=3 mid-session must not change a
+    // single output token
+    for transport in [TransportKind::Inproc, TransportKind::Tcp] {
+        let gold = golden(transport);
+        let mut c = cfg(transport);
+        c.adopt_at_step = Some(4);
+        let r = run_chaos(&c).expect("adoption must not fail a healthy pool");
+        assert_eq!(r.outputs, gold.outputs, "adoption changed output on {}", transport.name());
+        assert_eq!(r.adoptions, 1);
+        assert_eq!(r.final_workers, 3);
+        assert_eq!(r.worker_deaths, 0);
+        assert_eq!(r.leaked_blocks, 0);
     }
 }

@@ -34,17 +34,31 @@ python3 scripts/validate_trace.py "$TRACE_TMP/trace-kill.json"
 echo "== fault-matrix smoke (kill at prefill / mid-decode / drain x transport) =="
 # artifact-free chaos sessions: each must recover bit-identically to its
 # golden pass with zero leaked KV blocks (fault-smoke exits nonzero
-# otherwise). Plans target the worker-link operation counts: ~6 sends
+# otherwise). Plans target the worker-link operation counts: the 1st
+# send/recv is the membership handshake (Welcome/Hello), then ~6 sends
 # during prefill, 4 per decode iteration, then the retire/drain tail.
 for transport in inproc tcp; do
-  for plan in "worker=0,kill-send=1" "worker=1,kill-send=20" "worker=0,kill-recv=17"; do
+  for plan in "worker=0,kill-send=2" "worker=1,kill-send=21" "worker=0,kill-recv=18"; do
     echo "-- fault-smoke --transport $transport --fault-plan $plan"
     target/release/lamina fault-smoke --transport "$transport" --fault-plan "$plan"
   done
 done
 # no-recover mode: the death must surface typed, still with zero leaks
 target/release/lamina fault-smoke --transport inproc \
-  --fault-plan "worker=1,kill-send=20" --no-recover
+  --fault-plan "worker=1,kill-send=21" --no-recover
+
+echo "== membership smoke (degrade / adopt x transport) =="
+# degrade: one of W=4 killed with respawn disabled — the pool reshards
+# live to the 3 survivors, output stays bit-identical, zero leaks.
+# adopt: W=2 -> 3 scale-up at a step boundary mid-session, also
+# bit-identical (fault-smoke exits nonzero on any divergence or leak).
+for transport in inproc tcp; do
+  echo "-- fault-smoke --transport $transport --workers 4 --no-respawn (degrade)"
+  target/release/lamina fault-smoke --transport "$transport" --workers 4 \
+    --no-respawn --min-workers 2 --fault-plan "worker=1,kill-send=21"
+  echo "-- fault-smoke --transport $transport --adopt 4 (scale-up)"
+  target/release/lamina fault-smoke --transport "$transport" --adopt 4
+done
 
 if [[ "${1:-}" != "--no-bench" ]]; then
   echo "== cargo bench (LAMINA_BENCH_QUICK=1) =="
