@@ -139,6 +139,8 @@ fn main() {
     bench_opgraph(&mut b);
     bench_transport(&mut b);
     bench_net(&mut b, &mut rows);
+    bench_net_batch(&mut b, &mut rows);
+    bench_net_mux(&mut b, &mut rows);
     bench_simulators(&mut b);
     let gather_ratio = bench_kv_paged(&mut b, &mut rows);
     bench_kernels(&mut b, &mut rows);
@@ -417,6 +419,190 @@ fn bench_net(b: &mut Bench, rows: &mut Vec<Json>) {
 
     leader.send(WireMsg::Shutdown).unwrap();
     echo.join().unwrap();
+}
+
+// ---- net: per-step frame batching (one writev per worker per step) --------
+
+/// The tentpole wire win: a decode step's per-layer message burst rides
+/// ONE batch envelope flushed with ONE vectored write, vs one `write`
+/// syscall per frame. The syscall ratio is measured in-binary from the
+/// `net.writev_calls` counter and must be ≥4× (the acceptance bar); the
+/// two rows track the wall-clock side in BENCH_decode.json.
+fn bench_net_batch(b: &mut Bench, rows: &mut Vec<Json>) {
+    let (leader, worker) = tcp::pair().expect("tcp loopback pair");
+    // sink thread: drain everything so socket buffers never stall a send
+    let sink = std::thread::spawn(move || loop {
+        match worker.recv() {
+            Ok(WireMsg::Shutdown) | Err(_) => return,
+            Ok(_) => {}
+        }
+    });
+
+    // a decode step's burst on the chaos geometry: 2 layers × (StepQ +
+    // StepKv) × 2 shard messages collapsed onto one link — 8 frames
+    let q = HostTensor::f32(vec![4, 4, 16], (0..4 * 4 * 16).map(|i| i as f32 * 0.25).collect());
+    let kv = HostTensor::f32(vec![4, 2, 16], (0..4 * 2 * 16).map(|i| i as f32 * 0.5).collect());
+    let mut burst: Vec<WireMsg> = Vec::new();
+    for layer in 0..2usize {
+        for _shard in 0..2usize {
+            burst.push(WireMsg::StepQ {
+                layer,
+                slots: vec![0, 1, 2, 3],
+                q: q.clone(),
+                lens: vec![3, 3, 3, 3],
+                seq_bucket: 64,
+                overlap: false,
+            });
+            burst.push(WireMsg::StepKv { layer, k: kv.clone(), v: kv.clone() });
+        }
+    }
+    let wire_bytes: usize = burst.iter().map(codec::encoded_len).sum();
+
+    // baseline: one write syscall per frame (the pre-batching send path)
+    let per_ns = ns_of(b.run("net/frame-batch per-message (8-frame burst)", || {
+        for m in &burst {
+            leader.send(m.clone()).unwrap();
+        }
+    }));
+    rows.push(row_net("net/frame-batch per-message (8-frame burst)", per_ns, wire_bytes));
+
+    // batched: the whole burst buffered, then ONE envelope flush
+    let batch_ns = ns_of(b.run("net/frame-batch batched writev (8-frame burst)", || {
+        for m in &burst {
+            leader.send_buffered(m.clone()).unwrap();
+        }
+        leader.flush().unwrap();
+    }));
+    rows.push(row_net("net/frame-batch batched writev (8-frame burst)", batch_ns, wire_bytes));
+
+    // measured syscall ratio: writev calls per batched burst, counted by
+    // the transport itself (a partial write may take >1, so measure)
+    let wv = lamina::obs::registry().counter("net.writev_calls");
+    let wv0 = wv.get();
+    let reps = 64u64;
+    for _ in 0..reps {
+        for m in &burst {
+            leader.send_buffered(m.clone()).unwrap();
+        }
+        leader.flush().unwrap();
+    }
+    let writev_per_burst = (wv.get() - wv0) as f64 / reps as f64;
+    let ratio = burst.len() as f64 / writev_per_burst.max(1.0);
+    assert!(
+        ratio >= 4.0,
+        "frame batching must cut write syscalls ≥4× per step burst \
+         ({} frames over {writev_per_burst:.2} writev calls = {ratio:.1}×)",
+        burst.len()
+    );
+    eprintln!(
+        "net/frame-batch: {} frames/burst in {writev_per_burst:.2} writev calls ({ratio:.1}× \
+         fewer write syscalls), per-message {:.0} ns vs batched {:.0} ns",
+        burst.len(),
+        per_ns.0,
+        batch_ns.0
+    );
+
+    leader.send(WireMsg::Shutdown).unwrap();
+    sink.join().unwrap();
+}
+
+// ---- net: multiplexed gather vs sequential send→recv ----------------------
+
+/// The leader I/O-loop win: with W workers each taking ~service_us to
+/// reply, the old sequential send→recv ladder pays W × service while the
+/// batched-send + `poll(2)` readiness loop overlaps all W services and
+/// pays ~max(service). Both rows land in BENCH_decode.json under the
+/// bench-guard `net/mux-step` prefix.
+fn bench_net_mux(b: &mut Bench, rows: &mut Vec<Json>) {
+    use lamina::net::mux;
+    use std::time::Duration;
+
+    if !mux::supported() {
+        eprintln!("NOTE: poll(2) mux unsupported on this platform — skipping net/mux-step");
+        return;
+    }
+    const W: usize = 4;
+    const SERVICE_US: u64 = 150;
+
+    let mut links = Vec::new();
+    let mut echoes = Vec::new();
+    for _ in 0..W {
+        let (l, w) = tcp::pair().expect("tcp loopback pair");
+        echoes.push(std::thread::spawn(move || loop {
+            match w.recv() {
+                Ok(WireMsg::Shutdown) | Err(_) => return,
+                Ok(m) => {
+                    // stand-in for the worker's attention compute
+                    std::thread::sleep(Duration::from_micros(SERVICE_US));
+                    if w.send(m).is_err() {
+                        return;
+                    }
+                }
+            }
+        }));
+        links.push(l);
+    }
+    let ping = WireMsg::Retire { slot: 1 };
+    let wire_bytes = 2 * W * codec::encoded_len(&ping);
+
+    // sequential ladder: send worker i, block on its reply, move on
+    let seq_ns = ns_of(b.run("net/mux-step sequential send→recv (4 workers)", || {
+        for l in &links {
+            l.send(ping.clone()).unwrap();
+            loop {
+                if let Some(m) = l.recv_timeout(Duration::from_secs(1)).unwrap() {
+                    black_box(m);
+                    break;
+                }
+            }
+        }
+    }));
+    rows.push(row_net("net/mux-step sequential send→recv (4 workers)", seq_ns, wire_bytes));
+
+    // mux loop: batched send to all, then poll-driven gather
+    let mux_ns = ns_of(b.run("net/mux-step batched send + poll gather (4 workers)", || {
+        for l in &links {
+            l.send_buffered(ping.clone()).unwrap();
+        }
+        for l in &links {
+            l.flush().unwrap();
+        }
+        let mut outstanding: Vec<usize> = (0..links.len()).collect();
+        while !outstanding.is_empty() {
+            // free sweep: frames already decoded or buffered in userspace
+            // are invisible to poll
+            outstanding
+                .retain(|&i| !matches!(links[i].recv_timeout(Duration::ZERO), Ok(Some(_))));
+            if outstanding.is_empty() {
+                break;
+            }
+            let fds: Vec<i32> =
+                outstanding.iter().map(|&i| links[i].poll_fd().expect("tcp fd")).collect();
+            let ready = mux::wait_readable(&fds, Duration::from_millis(100)).expect("poll");
+            let ready_wi: Vec<usize> = ready.iter().map(|&ri| outstanding[ri]).collect();
+            for wi in ready_wi {
+                if let Ok(Some(m)) = links[wi].recv_timeout(Duration::from_millis(1)) {
+                    black_box(m);
+                    outstanding.retain(|&o| o != wi);
+                }
+            }
+        }
+    }));
+    rows.push(row_net("net/mux-step batched send + poll gather (4 workers)", mux_ns, wire_bytes));
+    eprintln!(
+        "net/mux-step: sequential {:.0} µs vs mux {:.0} µs over {W} workers at ~{SERVICE_US} µs \
+         service ({:.2}× wall-clock)",
+        seq_ns.0 / 1e3,
+        mux_ns.0 / 1e3,
+        seq_ns.0 / mux_ns.0.max(1.0)
+    );
+
+    for l in &links {
+        l.send(WireMsg::Shutdown).unwrap();
+    }
+    for e in echoes {
+        e.join().unwrap();
+    }
 }
 
 // ---- paper-scale simulators (one per serving figure) ----------------------

@@ -1,0 +1,144 @@
+//! `lamina-attn` — standalone attention-worker daemon.
+//!
+//! One process per attention shard on a real multi-host deployment: bind
+//! `--listen HOST:PORT`, print the bound address on stdout (exactly one
+//! line — scripts and the e2e tests parse it, so everything else goes to
+//! stderr), then serve leader connections forever.
+//!
+//! Each accepted connection is one worker *session*: the process speaks
+//! the PR 9 membership handshake (worker sends `Hello`, leader replies
+//! `Welcome` carrying the authoritative KV-head range and arena
+//! geometry), then runs the attention data plane until the leader shuts
+//! the link down or the session errors. The accept loop then returns to
+//! listening, so a leader that respawns a "dead" worker by re-dialing
+//! the same address gets a fresh session from the same process.
+//!
+//! The binary trusts `Welcome` for model geometry (`trust_welcome`): a
+//! standalone worker has no artifact manifest to cross-check against, so
+//! the handshake IS its configuration.
+//!
+//! Deployment walkthrough:
+//!
+//! ```text
+//!   hostA$ lamina-attn --listen 0.0.0.0:7001 &
+//!   hostB$ lamina-attn --listen 0.0.0.0:7001 &
+//!   lead$  lamina decode --workers hostA:7001,hostB:7001 --prompt 1,7,42
+//! ```
+//!
+//! `--listen 127.0.0.1:0` binds an ephemeral port (the stdout line tells
+//! you which); `--once` exits after the first session ends (CI teardown).
+
+use std::io::Write;
+use std::net::TcpListener;
+
+use lamina::kernels::AttnBackendKind;
+use lamina::kvcache::KvDtype;
+use lamina::net::{tcp::TcpTransport, Addr};
+use lamina::util::cli::Args;
+use lamina::workers::{run_attn_worker, AttnWorkerCfg};
+
+const USAGE: &str = "\
+lamina-attn — standalone Lamina attention worker
+
+USAGE: lamina-attn --listen HOST:PORT [flags]
+
+flags:
+  --listen HOST:PORT  address to bind (required). Port 0 binds an
+                      ephemeral port; the bound address is printed as the
+                      single stdout line 'lamina-attn listening on A'
+  --attn-backend B    attention compute: native (pure-Rust paged-KV
+                      kernel, default — needs no artifacts) or engine
+                      (PJRT artifacts from --artifacts)
+  --artifacts DIR     AOT artifact dir for --attn-backend engine
+                      (default artifacts/)
+  --kv-dtype D        KV block storage: f32 (default) | f16 | int8
+  --kv-block-size N   token slots per KV block (default 16)
+  --slots N           wire-addressable batch slots (default 64; the
+                      arena itself is sized by the leader's Welcome)
+  --once              exit after the first session ends instead of
+                      returning to accept (CI teardown)
+
+The worker is passive: model geometry and the KV-head range it owns
+arrive in the leader's Welcome at connect time, so the same daemon can
+serve any pool width without restarting.
+";
+
+const SPEC: &[&str] = &[
+    "listen!", "attn-backend!", "artifacts!", "kv-dtype!", "kv-block-size!",
+    "slots!", "once", "help",
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("lamina-attn: error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, SPEC).map_err(|e| e.to_string())?;
+    if args.has("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let listen = args
+        .get("listen")
+        .ok_or("--listen HOST:PORT is required (try --help)")?;
+    let addr = Addr::parse(listen).map_err(|e| format!("--listen: {e}"))?;
+    let sa = addr.resolve().map_err(|e| format!("--listen: {e}"))?;
+
+    let mut cfg = AttnWorkerCfg {
+        artifacts_dir: std::path::PathBuf::from(args.get_or("artifacts", "artifacts")),
+        shard: 0,
+        n_shards: 1,
+        slots: args.usize_or("slots", 64).map_err(|e| e.to_string())?,
+        kv_block_size: args.usize_or("kv-block-size", 16).map_err(|e| e.to_string())?,
+        kv_dtype: KvDtype::F32,
+        backend: AttnBackendKind::Native,
+        geom: None,
+        trust_welcome: true,
+    };
+    if let Some(d) = args.get("kv-dtype") {
+        cfg.kv_dtype = KvDtype::parse(d)
+            .ok_or_else(|| format!("unknown kv dtype '{d}' (use f32|f16|int8)"))?;
+    }
+    if let Some(b) = args.get("attn-backend") {
+        cfg.backend = AttnBackendKind::parse(b)
+            .ok_or_else(|| format!("unknown attention backend '{b}' (use engine|native)"))?;
+    }
+
+    let listener = TcpListener::bind(sa).map_err(|e| format!("bind {addr}: {e}"))?;
+    let bound = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+    // the ONE stdout line — scripts parse it, so flush before serving
+    println!("lamina-attn listening on {bound}");
+    std::io::stdout().flush().map_err(|e| format!("stdout: {e}"))?;
+
+    let once = args.has("once");
+    loop {
+        let (stream, peer) = match listener.accept() {
+            Ok(x) => x,
+            Err(e) => {
+                eprintln!("lamina-attn: accept: {e}");
+                continue;
+            }
+        };
+        eprintln!("lamina-attn: session from {peer}");
+        match TcpTransport::from_stream(stream) {
+            Ok(link) => {
+                // one blocking session per connection: the leader drives
+                // exactly one worker per link, so there is nothing to
+                // serve concurrently
+                run_attn_worker(cfg.clone(), link);
+                eprintln!("lamina-attn: session from {peer} ended");
+            }
+            Err(e) => eprintln!("lamina-attn: session setup from {peer}: {e}"),
+        }
+        if once {
+            return Ok(());
+        }
+    }
+}

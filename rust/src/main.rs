@@ -32,7 +32,7 @@ experiments (analytical, paper-scale):
   fig9 | offload | alt-devices | slo | pingpong-live
 
 real pipeline (tiny model, PJRT end-to-end):
-  decode  --prompt 1,7,42 --steps 16 [--workers N] [--no-overlap]
+  decode  --prompt 1,7,42 --steps 16 [--workers N|ADDRS] [--no-overlap]
           [--transport inproc|tcp] [--attn-backend engine|native]
           [--kv-dtype f32|f16|int8]
   serve   [--trace azure-conv] [--requests N] [--waves N]
@@ -57,11 +57,31 @@ real pipeline (tiny model, PJRT end-to-end):
           --min-workers N (degradation floor), --adopt N (scale up by one
           worker at step boundary N)
 
+multi-host deployment (standalone lamina-attn workers):
+  1. start one `lamina-attn` daemon per shard host; each prints its bound
+     address on stdout and waits for a leader:
+       hostA$ lamina-attn --listen 0.0.0.0:7001
+       hostB$ lamina-attn --listen 0.0.0.0:7001
+  2. point the leader at them with the address form of --workers:
+       lead$  lamina decode --workers hostA:7001,hostB:7001 --prompt 1,7
+       lead$  lamina fault-smoke --workers hostA:7001,hostB:7001 \\
+                --fault-plan kill-recv=18
+     worker i dials the i-th address (bounded, backoff-paced retry);
+     respawn-style recovery re-dials the SAME address, and the daemon's
+     accept loop serves the reconnect as a fresh session. IPv6 addresses
+     use the bracket form [::1]:7001. A decode step's per-layer message
+     burst rides one batched envelope per worker (single writev), and
+     replies from many workers are multiplexed with poll(2).
+
 flags:
   --requests N     trace subsample size for simulations (default 1000)
   --seed S         workload seed (default 42)
   --results DIR    where experiment JSON lands (default results/)
   --artifacts DIR  AOT artifact dir (default artifacts/)
+  --workers W      attention pool: a width N (in-process shard workers,
+                   default 2) or a comma-separated HOST:PORT list of
+                   running lamina-attn daemons (worker i dials address i;
+                   implies --transport tcp)
   --transport T    leader↔worker wire: inproc (paced channel, modelled
                    bytes) or tcp (real loopback sockets, serialized frames,
                    measured-vs-logical byte report)  (default inproc)
@@ -396,11 +416,27 @@ fn run(argv: &[String]) -> Result<(), String> {
                 cfg.transport = TransportKind::parse(t)
                     .ok_or_else(|| format!("unknown transport '{t}' (use inproc|tcp)"))?;
             }
-            let workers = args.usize_or("workers", cfg.workers).map_err(|e| e.to_string())?;
-            if !(1..=4).contains(&workers) {
-                return Err(format!("--workers {workers}: need 1..=4 (4 KV heads to split)"));
+            match args.get("workers") {
+                None => {}
+                Some(w) if !w.is_empty() && w.chars().all(|c| c.is_ascii_digit()) => {
+                    cfg.workers = w.parse().map_err(|_| format!("--workers: bad count '{w}'"))?;
+                }
+                Some(w) => {
+                    // address form: dial running lamina-attn daemons
+                    // instead of spawning worker threads
+                    let addrs = lamina::net::Addr::parse_list(w)
+                        .map_err(|e| format!("--workers: {e}"))?;
+                    cfg.workers = addrs.len();
+                    cfg.worker_addrs = Some(addrs.iter().map(|a| a.to_string()).collect());
+                    cfg.transport = TransportKind::Tcp;
+                }
             }
-            cfg.workers = workers;
+            if !(1..=4).contains(&cfg.workers) {
+                return Err(format!(
+                    "--workers {}: need 1..=4 (4 KV heads to split)",
+                    cfg.workers
+                ));
+            }
             cfg.auto_recover = !args.has("no-recover");
             cfg.allow_respawn = !args.has("no-respawn");
             cfg.min_workers = args.usize_or("min-workers", 1).map_err(|e| e.to_string())?;
@@ -485,7 +521,19 @@ fn run(argv: &[String]) -> Result<(), String> {
 
 fn pipeline_opts(args: &Args, artifacts: &str) -> Result<PipelineOpts, String> {
     let mut opts = PipelineOpts::new(artifacts);
-    opts.attn_workers = args.usize_or("workers", 2).map_err(|e| e.to_string())?;
+    match args.get("workers") {
+        None => opts.attn_workers = 2,
+        Some(w) if !w.is_empty() && w.chars().all(|c| c.is_ascii_digit()) => {
+            opts.attn_workers = w.parse().map_err(|_| format!("--workers: bad count '{w}'"))?;
+        }
+        Some(w) => {
+            // address form: worker i dials addrs[i] — running lamina-attn
+            // daemons instead of in-process shard threads
+            let addrs = lamina::net::Addr::parse_list(w).map_err(|e| format!("--workers: {e}"))?;
+            opts.attn_workers = addrs.len();
+            opts.worker_addrs = Some(addrs);
+        }
+    }
     opts.overlap = !args.has("no-overlap");
     opts.allow_respawn = !args.has("no-respawn");
     opts.min_workers = args.usize_or("min-workers", 1).map_err(|e| e.to_string())?;
@@ -496,6 +544,14 @@ fn pipeline_opts(args: &Args, artifacts: &str) -> Result<PipelineOpts, String> {
     if let Some(t) = args.get("transport") {
         opts.transport = TransportKind::parse(t)
             .ok_or_else(|| format!("unknown transport '{t}' (use inproc|tcp)"))?;
+    }
+    if opts.worker_addrs.is_some() {
+        if args.get("transport").is_some_and(|t| !t.eq_ignore_ascii_case("tcp")) {
+            return Err(
+                "--workers with addresses dials real sockets; --transport inproc conflicts".into(),
+            );
+        }
+        opts.transport = TransportKind::Tcp;
     }
     if let Some(b) = args.get("attn-backend") {
         opts.attn_backend = AttnBackendKind::parse(b)

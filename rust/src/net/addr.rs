@@ -1,0 +1,211 @@
+//! Typed `HOST:PORT` address parsing for the cluster CLI surface
+//! (`--listen`, `--workers addr1,addr2,…`).
+//!
+//! A malformed address on the command line must produce an actionable
+//! error message, never a panic deep inside `ToSocketAddrs`. [`Addr`]
+//! keeps the host **textual** (hostname, IPv4, or bracketed IPv6) so the
+//! CLI can echo exactly what the user typed; [`Addr::resolve`] turns it
+//! into a concrete [`SocketAddr`] at dial/bind time, which is also where
+//! DNS failures surface — again typed, with the offending address in the
+//! message.
+//!
+//! Accepted forms:
+//!
+//! ```text
+//!   host:port          my-worker-3:7001, localhost:0
+//!   ipv4:port          127.0.0.1:7001
+//!   [ipv6]:port        [::1]:7001, [fe80::1]:7001
+//! ```
+//!
+//! Port `0` is allowed (ephemeral bind for `--listen`; tests use it to
+//! avoid port collisions). A bare IPv6 address without brackets is
+//! rejected with a hint — `::1:7001` is hopelessly ambiguous otherwise.
+
+use std::net::{SocketAddr, ToSocketAddrs};
+
+/// A parsed-but-unresolved network address (`HOST:PORT`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Addr {
+    /// Hostname, IPv4 literal, or IPv6 literal (brackets stripped).
+    pub host: String,
+    pub port: u16,
+    /// Whether the host was written in `[…]` bracket (IPv6) form.
+    ipv6: bool,
+}
+
+/// Typed address error; `Display` is the actionable CLI message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AddrError(pub String);
+
+impl std::fmt::Display for AddrError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for AddrError {}
+
+fn err<T>(msg: String) -> Result<T, AddrError> {
+    Err(AddrError(msg))
+}
+
+impl Addr {
+    /// Parse one `HOST:PORT` (or `[IPV6]:PORT`) address.
+    pub fn parse(s: &str) -> Result<Addr, AddrError> {
+        let s = s.trim();
+        if s.is_empty() {
+            return err("empty address (expected HOST:PORT)".into());
+        }
+        let (host, port_str, ipv6) = if let Some(rest) = s.strip_prefix('[') {
+            // bracketed IPv6: [addr]:port
+            let Some((host, after)) = rest.split_once(']') else {
+                return err(format!("`{s}`: missing `]` (expected [IPV6]:PORT)"));
+            };
+            let Some(port) = after.strip_prefix(':') else {
+                return err(format!("`{s}`: expected `:PORT` after the `]`"));
+            };
+            if host.is_empty() {
+                return err(format!("`{s}`: empty host inside `[…]`"));
+            }
+            (host, port, true)
+        } else {
+            let Some((host, port)) = s.rsplit_once(':') else {
+                return err(format!("`{s}`: missing `:PORT` (expected HOST:PORT)"));
+            };
+            if host.contains(':') {
+                return err(format!(
+                    "`{s}`: bare IPv6 is ambiguous — write it bracketed, [{host}]:{port}"
+                ));
+            }
+            if host.is_empty() {
+                return err(format!("`{s}`: empty host (expected HOST:PORT)"));
+            }
+            (host, port, false)
+        };
+        if port_str.is_empty() {
+            return err(format!("`{s}`: empty port (expected HOST:PORT)"));
+        }
+        let Ok(port) = port_str.parse::<u16>() else {
+            return err(format!("`{s}`: port `{port_str}` is not a number in 0..=65535"));
+        };
+        Ok(Addr { host: host.to_string(), port, ipv6 })
+    }
+
+    /// Parse a comma-separated address list (`--workers a:1,b:2`). Empty
+    /// segments are rejected — a trailing comma is more likely a typo'd
+    /// worker than an intentional no-op.
+    pub fn parse_list(s: &str) -> Result<Vec<Addr>, AddrError> {
+        let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+        if parts.iter().all(|p| p.is_empty()) {
+            return err("empty worker list (expected HOST:PORT[,HOST:PORT…])".into());
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            if p.is_empty() {
+                return err(format!("`{s}`: empty entry in the address list"));
+            }
+            out.push(Addr::parse(p)?);
+        }
+        Ok(out)
+    }
+
+    /// Resolve to a concrete socket address (DNS happens here). The first
+    /// resolution result wins; failure is typed with the textual address.
+    pub fn resolve(&self) -> Result<SocketAddr, AddrError> {
+        match (self.host.as_str(), self.port).to_socket_addrs() {
+            Ok(mut it) => match it.next() {
+                Some(sa) => Ok(sa),
+                None => err(format!("`{self}`: resolved to no addresses")),
+            },
+            Err(e) => err(format!("`{self}`: resolve failed: {e}")),
+        }
+    }
+}
+
+impl std::fmt::Display for Addr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.ipv6 || self.host.contains(':') {
+            write!(f, "[{}]:{}", self.host, self.port)
+        } else {
+            write!(f, "{}:{}", self.host, self.port)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_ipv4_host_and_port() {
+        let a = Addr::parse("127.0.0.1:7001").unwrap();
+        assert_eq!(a.host, "127.0.0.1");
+        assert_eq!(a.port, 7001);
+        assert_eq!(a.to_string(), "127.0.0.1:7001");
+    }
+
+    #[test]
+    fn parses_hostname_and_ephemeral_port() {
+        let a = Addr::parse("localhost:0").unwrap();
+        assert_eq!(a.host, "localhost");
+        assert_eq!(a.port, 0);
+        // resolvable (loopback)
+        let sa = a.resolve().unwrap();
+        assert!(sa.ip().is_loopback());
+    }
+
+    #[test]
+    fn parses_bracketed_ipv6() {
+        let a = Addr::parse("[::1]:8080").unwrap();
+        assert_eq!(a.host, "::1");
+        assert_eq!(a.port, 8080);
+        assert_eq!(a.to_string(), "[::1]:8080");
+        let sa = a.resolve().unwrap();
+        assert!(sa.is_ipv6());
+    }
+
+    #[test]
+    fn malformed_addresses_are_typed_errors_not_panics() {
+        for bad in [
+            "",
+            "   ",
+            "no-port",
+            ":7001",
+            "host:",
+            "host:notanum",
+            "host:70000",
+            "host:-1",
+            "[::1]",
+            "[::1]7001",
+            "[]:7001",
+            "[::1:7001",
+        ] {
+            let e = Addr::parse(bad).expect_err(bad);
+            assert!(!e.0.is_empty(), "error for `{bad}` must carry a message");
+        }
+    }
+
+    #[test]
+    fn bare_ipv6_gets_a_bracket_hint() {
+        let e = Addr::parse("::1:7001").unwrap_err();
+        assert!(e.0.contains("bracket"), "hint missing: {e}");
+    }
+
+    #[test]
+    fn list_parses_and_rejects_empties() {
+        let l = Addr::parse_list("127.0.0.1:1, localhost:2,[::1]:3").unwrap();
+        assert_eq!(l.len(), 3);
+        assert_eq!(l[1].host, "localhost");
+        assert_eq!(l[2].to_string(), "[::1]:3");
+        assert!(Addr::parse_list("").is_err());
+        assert!(Addr::parse_list("a:1,,b:2").is_err());
+        assert!(Addr::parse_list("a:1,b:bad").is_err());
+    }
+
+    #[test]
+    fn resolve_failure_is_typed_with_the_address() {
+        let a = Addr::parse("definitely-not-a-real-host.invalid:9").unwrap();
+        let e = a.resolve().unwrap_err();
+        assert!(e.0.contains("definitely-not-a-real-host.invalid"), "{e}");
+    }
+}

@@ -1,0 +1,427 @@
+//! Multi-frame batch envelopes: coalesce a decode step's per-layer
+//! message burst into **one** length-prefixed envelope so the TCP
+//! transport can flush it with a single vectored write (`writev`) per
+//! worker per step instead of a syscall per `WireMsg`.
+//!
+//! # Wire format
+//!
+//! An envelope is a 12-byte header followed by `payload_len` bytes of
+//! back-to-back ordinary [`codec`] frames:
+//!
+//! ```text
+//!   offset  size  field
+//!   0       2     envelope magic 0xB1A3 (LE) — first byte 0xA3, distinct
+//!                 from a frame's first byte 0x31, so the stream decoder
+//!                 can tell envelopes and bare frames apart at any point
+//!   2       1     format version (must equal codec::FORMAT_VERSION)
+//!   3       1     reserved, must be 0
+//!   4       4     frame count (u32 LE, 1..=MAX_ENV_FRAMES)
+//!   8       4     payload length in bytes (u32 LE)
+//! ```
+//!
+//! Inner frames carry their own per-frame checksums, so the envelope
+//! itself needs none — but its bookkeeping is still validated: the
+//! declared frame count must match exactly the frames that consume the
+//! declared payload, and an inner frame that crosses the envelope
+//! boundary is a typed [`CodecError::Malformed`], never a desync.
+//!
+//! # Incremental decoding
+//!
+//! [`BatchDecoder`] is the stream-side state machine: feed it the front
+//! of the receive buffer and it yields one message at a time, whether the
+//! bytes arrived as bare frames, envelopes, or any interleaving. It obeys
+//! the same never-lose-sync contract as [`codec::decode_frame`]:
+//! `Ok(None)` means "wait for more bytes" and **consumes nothing** (state
+//! only advances when a message is returned), so a sender may be cut off
+//! at any byte offset without the receiver misparsing what came before.
+
+use super::codec::{self, CodecError};
+use crate::workers::messages::WireMsg;
+
+/// Envelope magic (LE on the wire: `A3 B1`). Chosen so neither byte
+/// collides with a frame's first byte (`0x31`).
+pub const ENV_MAGIC: u16 = 0xB1A3;
+/// Envelope header length in bytes.
+pub const ENV_HEADER_LEN: usize = 12;
+/// Cap on frames per envelope (far above any real step burst).
+pub const MAX_ENV_FRAMES: usize = 1 << 16;
+/// Cap on envelope payload bytes (mirrors the codec's payload cap).
+pub const MAX_ENV_PAYLOAD: usize = 1 << 30;
+
+/// Build the 12-byte header for an envelope of `frames` frames covering
+/// `payload_len` bytes. The write path accumulates encoded frames in a
+/// pending buffer and emits `[header, pending]` as one vectored write.
+pub fn envelope_header(frames: u32, payload_len: u32) -> [u8; ENV_HEADER_LEN] {
+    let mut h = [0u8; ENV_HEADER_LEN];
+    h[0..2].copy_from_slice(&ENV_MAGIC.to_le_bytes());
+    h[2] = codec::FORMAT_VERSION;
+    // h[3] reserved = 0
+    h[4..8].copy_from_slice(&frames.to_le_bytes());
+    h[8..12].copy_from_slice(&payload_len.to_le_bytes());
+    h
+}
+
+/// Encode `msgs` as one envelope appended to `out`; returns bytes
+/// appended. Test/bench convenience — the transport's hot path builds
+/// the header separately to keep the pending buffer un-copied.
+pub fn encode_batch(msgs: &[WireMsg], out: &mut Vec<u8>) -> usize {
+    assert!(!msgs.is_empty(), "an envelope carries at least one frame");
+    assert!(msgs.len() <= MAX_ENV_FRAMES);
+    let start = out.len();
+    out.extend_from_slice(&[0u8; ENV_HEADER_LEN]);
+    for m in msgs {
+        codec::encode(m, out);
+    }
+    let payload = out.len() - start - ENV_HEADER_LEN;
+    let header = envelope_header(msgs.len() as u32, payload as u32);
+    out[start..start + ENV_HEADER_LEN].copy_from_slice(&header);
+    out.len() - start
+}
+
+/// Stream decoder for interleaved bare frames and batch envelopes.
+///
+/// `env_remaining`/`env_frames` track the envelope currently being
+/// drained; both are zero between envelopes. State advances **only**
+/// when `decode` returns a message, so a call that returns `Ok(None)` or
+/// an error is side-effect free and may be retried with more bytes.
+#[derive(Debug, Default)]
+pub struct BatchDecoder {
+    /// Payload bytes of the current envelope not yet consumed.
+    env_remaining: usize,
+    /// Frames of the current envelope not yet decoded.
+    env_frames: usize,
+}
+
+impl BatchDecoder {
+    pub fn new() -> BatchDecoder {
+        BatchDecoder::default()
+    }
+
+    /// True when the stream stopped mid-envelope (peer died between the
+    /// frames it promised) — the receive path reports such a death as
+    /// `Disconnected { mid_frame: true }`.
+    pub fn mid_envelope(&self) -> bool {
+        self.env_remaining > 0
+    }
+
+    /// Decode one message from the front of `buf`.
+    ///
+    /// * `Ok(Some((msg, consumed)))` — drain `consumed` bytes and go again.
+    /// * `Ok(None)` — incomplete; read more bytes and retry.
+    /// * `Err(_)` — the stream is corrupt; framing is unrecoverable.
+    pub fn decode(&mut self, buf: &[u8]) -> Result<Option<(WireMsg, usize)>, CodecError> {
+        if self.env_remaining > 0 {
+            return self.decode_inner(buf, 0);
+        }
+        if buf.len() < 2 {
+            return Ok(None);
+        }
+        let magic = u16::from_le_bytes([buf[0], buf[1]]);
+        if magic == codec::MAGIC {
+            return codec::decode_frame(buf);
+        }
+        if magic != ENV_MAGIC {
+            return Err(CodecError::BadMagic(magic));
+        }
+        if buf.len() < ENV_HEADER_LEN {
+            return Ok(None);
+        }
+        if buf[2] != codec::FORMAT_VERSION {
+            return Err(CodecError::BadVersion(buf[2]));
+        }
+        if buf[3] != 0 {
+            return Err(CodecError::Malformed(format!(
+                "envelope reserved byte is {:#04x}, want 0",
+                buf[3]
+            )));
+        }
+        let frames = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+        let payload = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
+        if frames == 0 || frames > MAX_ENV_FRAMES {
+            return Err(CodecError::Malformed(format!(
+                "envelope frame count {frames} outside 1..={MAX_ENV_FRAMES}"
+            )));
+        }
+        if payload > MAX_ENV_PAYLOAD {
+            return Err(CodecError::Malformed(format!(
+                "envelope payload {payload} exceeds cap {MAX_ENV_PAYLOAD}"
+            )));
+        }
+        if payload < frames * codec::HEADER_LEN {
+            return Err(CodecError::Malformed(format!(
+                "envelope payload {payload} bytes cannot hold {frames} frames"
+            )));
+        }
+        // Tentatively consume the header: commit happens only if the
+        // first inner frame decodes, otherwise state is rolled back so
+        // the call stays side-effect free.
+        self.env_remaining = payload;
+        self.env_frames = frames;
+        match self.decode_inner(&buf[ENV_HEADER_LEN..], ENV_HEADER_LEN) {
+            Ok(Some((msg, consumed))) => Ok(Some((msg, consumed))),
+            other => {
+                self.env_remaining = 0;
+                self.env_frames = 0;
+                other
+            }
+        }
+    }
+
+    /// Decode the next frame inside the current envelope. `extra` is
+    /// added to the consumed count (the envelope header, when this call
+    /// rides the same `decode` that parsed it).
+    fn decode_inner(
+        &mut self,
+        buf: &[u8],
+        extra: usize,
+    ) -> Result<Option<(WireMsg, usize)>, CodecError> {
+        let limit = self.env_remaining.min(buf.len());
+        match codec::decode_frame(&buf[..limit])? {
+            Some((msg, used)) => {
+                if self.env_frames == 0 {
+                    // unreachable by construction (count/payload are
+                    // cross-checked below), kept as a typed guard
+                    return Err(CodecError::Malformed(
+                        "envelope payload outlives its frame count".into(),
+                    ));
+                }
+                self.env_remaining -= used;
+                self.env_frames -= 1;
+                if self.env_remaining == 0 && self.env_frames != 0 {
+                    return Err(CodecError::Malformed(format!(
+                        "envelope ended with {} declared frame(s) missing",
+                        self.env_frames
+                    )));
+                }
+                if self.env_remaining > 0 && self.env_frames == 0 {
+                    return Err(CodecError::Malformed(format!(
+                        "envelope has {} trailing byte(s) after its last frame",
+                        self.env_remaining
+                    )));
+                }
+                Ok(Some((msg, extra + used)))
+            }
+            None if limit < self.env_remaining => Ok(None), // stream short: wait
+            None => Err(CodecError::Malformed(
+                "inner frame crosses the envelope boundary".into(),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::host::HostTensor;
+
+    fn burst() -> Vec<WireMsg> {
+        vec![
+            WireMsg::Retire { slot: 3 },
+            WireMsg::StepKv {
+                layer: 1,
+                k: HostTensor::f32(vec![2, 2, 4], (0..16).map(|i| i as f32).collect()),
+                v: HostTensor::f32(vec![2, 2, 4], (0..16).map(|i| i as f32 * 0.5).collect()),
+            },
+            WireMsg::KvStatsReq,
+            WireMsg::Shutdown,
+        ]
+    }
+
+    /// Drain everything decodable from `buf` with a fresh decoder.
+    fn drain(buf: &[u8]) -> Result<Vec<WireMsg>, CodecError> {
+        let mut d = BatchDecoder::new();
+        let mut off = 0;
+        let mut out = Vec::new();
+        while let Some((msg, used)) = d.decode(&buf[off..])? {
+            out.push(msg);
+            off += used;
+        }
+        assert_eq!(off, buf.len(), "fully-formed input must be fully consumed");
+        Ok(out)
+    }
+
+    #[test]
+    fn envelope_roundtrips_all_frames_in_order() {
+        let msgs = burst();
+        let mut buf = Vec::new();
+        let n = encode_batch(&msgs, &mut buf);
+        assert_eq!(n, buf.len());
+        let got = drain(&buf).unwrap();
+        assert_eq!(got.len(), msgs.len());
+        assert!(matches!(got[0], WireMsg::Retire { slot: 3 }));
+        assert!(matches!(got[2], WireMsg::KvStatsReq));
+        assert!(matches!(got[3], WireMsg::Shutdown));
+    }
+
+    #[test]
+    fn bare_frames_and_envelopes_interleave() {
+        let mut buf = Vec::new();
+        codec::encode(&WireMsg::KvStatsReq, &mut buf);
+        encode_batch(&burst(), &mut buf);
+        codec::encode(&WireMsg::Retire { slot: 9 }, &mut buf);
+        encode_batch(&[WireMsg::Shutdown], &mut buf);
+        let got = drain(&buf).unwrap();
+        assert_eq!(got.len(), 1 + 4 + 1 + 1);
+        assert!(matches!(got[0], WireMsg::KvStatsReq));
+        assert!(matches!(got[5], WireMsg::Retire { slot: 9 }));
+        assert!(matches!(got[6], WireMsg::Shutdown));
+    }
+
+    #[test]
+    fn partial_envelope_never_desyncs() {
+        // every prefix cut of (envelope ++ bare frame) must decode a
+        // strict prefix of the messages and then ask for more — stateful
+        // decoding across arbitrary packetization boundaries
+        let mut buf = Vec::new();
+        encode_batch(&burst(), &mut buf);
+        codec::encode(&WireMsg::Retire { slot: 7 }, &mut buf);
+        for cut in 0..buf.len() {
+            let mut d = BatchDecoder::new();
+            let mut off = 0;
+            let mut n = 0usize;
+            loop {
+                match d.decode(&buf[off..cut]) {
+                    Ok(Some((_, used))) => {
+                        off += used;
+                        n += 1;
+                    }
+                    Ok(None) => break,
+                    Err(e) => panic!("cut at {cut}: prefix must never error, got {e}"),
+                }
+            }
+            assert!(n <= 5, "cut at {cut} produced {n} messages");
+            // feeding the remainder completes the stream exactly
+            let mut total = n;
+            let mut off2 = off;
+            while let Some((_, used)) = d.decode(&buf[off2..]).unwrap() {
+                off2 += used;
+                total += 1;
+            }
+            assert_eq!(total, 5, "cut at {cut}");
+            assert_eq!(off2, buf.len(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn corrupt_inner_frame_fails_typed_never_panics() {
+        // flip each byte of the envelope somewhere: the decoder must
+        // return a typed error or ask for more — never panic, never
+        // yield a bogus extra message
+        let mut clean = Vec::new();
+        encode_batch(&burst(), &mut clean);
+        for i in 0..clean.len() {
+            let mut buf = clean.clone();
+            buf[i] ^= 0x40;
+            let mut d = BatchDecoder::new();
+            let mut off = 0;
+            let mut n = 0;
+            let r = loop {
+                match d.decode(&buf[off..]) {
+                    Ok(Some((_, used))) => {
+                        off += used;
+                        n += 1;
+                        if off >= buf.len() {
+                            break Ok(());
+                        }
+                    }
+                    Ok(None) => break Ok(()),
+                    Err(e) => break Err(e),
+                }
+            };
+            // a flipped byte may land in a tensor payload (checksum
+            // catches it) or in envelope bookkeeping (typed Malformed) —
+            // but the frame count can never exceed the real one
+            assert!(n <= 4, "byte {i}: {n} messages from a corrupt stream");
+            let _ = r;
+        }
+    }
+
+    #[test]
+    fn frame_crossing_envelope_boundary_is_typed() {
+        // envelope declaring 1 frame but truncating it: shorten the
+        // declared payload so the inner frame pokes past the boundary
+        let mut inner = Vec::new();
+        codec::encode(&WireMsg::Retire { slot: 1 }, &mut inner);
+        let mut buf = Vec::new();
+        let declared = inner.len() as u32 - 4; // cut into the frame
+        buf.extend_from_slice(&envelope_header(1, declared));
+        buf.extend_from_slice(&inner);
+        let mut d = BatchDecoder::new();
+        match d.decode(&buf) {
+            Err(CodecError::Malformed(m)) => {
+                assert!(m.contains("boundary") || m.contains("hold"), "{m}")
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_count_mismatch_is_typed() {
+        // payload holds 2 frames but the header declares 3
+        let mut inner = Vec::new();
+        codec::encode(&WireMsg::KvStatsReq, &mut inner);
+        codec::encode(&WireMsg::Shutdown, &mut inner);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&envelope_header(3, inner.len() as u32));
+        buf.extend_from_slice(&inner);
+        let mut d = BatchDecoder::new();
+        let mut off = 0;
+        let e = loop {
+            match d.decode(&buf[off..]) {
+                Ok(Some((_, used))) => off += used,
+                Ok(None) => panic!("stream is complete"),
+                Err(e) => break e,
+            }
+        };
+        assert!(matches!(e, CodecError::Malformed(_)), "{e}");
+    }
+
+    #[test]
+    fn trailing_bytes_after_declared_frames_are_typed() {
+        // header declares 1 frame but the payload holds 2
+        let mut inner = Vec::new();
+        codec::encode(&WireMsg::KvStatsReq, &mut inner);
+        codec::encode(&WireMsg::Shutdown, &mut inner);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&envelope_header(1, inner.len() as u32));
+        buf.extend_from_slice(&inner);
+        let mut d = BatchDecoder::new();
+        match d.decode(&buf) {
+            Err(CodecError::Malformed(m)) => assert!(m.contains("trailing"), "{m}"),
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_and_zero_frames_are_typed() {
+        let mut d = BatchDecoder::new();
+        assert!(matches!(d.decode(&[0x00, 0x00, 1, 2]), Err(CodecError::BadMagic(_))));
+
+        let mut h = envelope_header(1, 12);
+        h[2] = 99;
+        let mut d = BatchDecoder::new();
+        assert!(matches!(d.decode(&h), Err(CodecError::BadVersion(99))));
+
+        let h = envelope_header(0, 0);
+        let mut d = BatchDecoder::new();
+        assert!(matches!(d.decode(&h), Err(CodecError::Malformed(_))));
+    }
+
+    #[test]
+    fn header_only_consumes_nothing_and_reports_mid_envelope_correctly() {
+        let mut buf = Vec::new();
+        encode_batch(&[WireMsg::KvStatsReq, WireMsg::Shutdown], &mut buf);
+        let mut d = BatchDecoder::new();
+        // header alone: no state change, not mid-envelope
+        assert!(d.decode(&buf[..ENV_HEADER_LEN]).unwrap().is_none());
+        assert!(!d.mid_envelope());
+        // first frame out: now mid-envelope until the second arrives
+        let (m1, used) = d.decode(&buf).unwrap().unwrap();
+        assert!(matches!(m1, WireMsg::KvStatsReq));
+        assert!(d.mid_envelope());
+        let (m2, used2) = d.decode(&buf[used..]).unwrap().unwrap();
+        assert!(matches!(m2, WireMsg::Shutdown));
+        assert!(!d.mid_envelope());
+        assert_eq!(used + used2, buf.len());
+    }
+}

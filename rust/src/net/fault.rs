@@ -213,6 +213,35 @@ impl Transport for FaultTransport {
         t.send(msg)
     }
 
+    fn send_buffered(&self, msg: WireMsg) -> Result<(), TransportError> {
+        // identical accounting and kill/drop logic to `send`: a buffered
+        // frame is still the Nth send of the plan's schedule, so chaos
+        // plans stay valid whether the leader batches or not
+        let n = self.sends.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut inner = obs::lock(&self.inner);
+        if self.plan.kill_send.is_some_and(|k| n >= k) {
+            return Err(self.kill(&mut inner));
+        }
+        let Some(t) = inner.as_ref() else {
+            return Err(TransportError::Disconnected { mid_frame: false });
+        };
+        if self.roll(self.plan.drop_p) {
+            obs::instant("wire", "fault_drop", vec![]);
+            let _ = self.kill(&mut inner);
+            return Ok(());
+        }
+        t.send_buffered(msg)
+    }
+
+    fn flush(&self) -> Result<(), TransportError> {
+        // not a scheduled op (plans count messages, not syscalls)
+        let inner = obs::lock(&self.inner);
+        let Some(t) = inner.as_ref() else {
+            return Err(TransportError::Disconnected { mid_frame: false });
+        };
+        t.flush()
+    }
+
     fn recv(&self) -> Result<WireMsg, TransportError> {
         // delegate through recv_timeout-with-None shape: same fault logic
         let n = self.recvs.fetch_add(1, Ordering::Relaxed) + 1;
@@ -276,6 +305,10 @@ impl Transport for FaultTransport {
     fn kind(&self) -> TransportKind {
         self.kind
     }
+
+    fn poll_fd(&self) -> Option<i32> {
+        obs::lock(&self.inner).as_ref().and_then(|t| t.poll_fd())
+    }
 }
 
 /// A link whose peer is already gone: every operation reports
@@ -296,6 +329,10 @@ impl DeadTransport {
 
 impl Transport for DeadTransport {
     fn send(&self, _msg: WireMsg) -> Result<(), TransportError> {
+        Err(TransportError::Disconnected { mid_frame: false })
+    }
+
+    fn flush(&self) -> Result<(), TransportError> {
         Err(TransportError::Disconnected { mid_frame: false })
     }
 
@@ -403,6 +440,24 @@ mod tests {
         let first = run(42);
         assert_eq!(first, run(42), "same seed must replay identically");
         assert!((43..49).any(|s| run(s) != first), "seeds must decorrelate");
+    }
+
+    #[test]
+    fn send_buffered_counts_against_the_same_kill_schedule() {
+        // a plan written for plain sends must fire at the same message
+        // number when the leader batches — buffered sends share the
+        // counter
+        let (a, b) = inproc_boxed();
+        let plan = FaultPlan::parse("kill-send=3").unwrap();
+        let faulty = FaultTransport::new(a, plan, 0);
+        faulty.send_buffered(WireMsg::KvStatsReq).unwrap();
+        faulty.send(WireMsg::KvStatsReq).unwrap();
+        assert_eq!(
+            faulty.send_buffered(WireMsg::KvStatsReq),
+            Err(TransportError::Disconnected { mid_frame: false })
+        );
+        drop(faulty);
+        let _ = b;
     }
 
     #[test]

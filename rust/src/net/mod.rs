@@ -25,6 +25,52 @@
 //!   `logical_bytes` (the model) next to `serialized_bytes` (measured
 //!   frames), so every `--transport tcp` run checks the simulator's
 //!   `wire_bytes()` model against what a real wire carries.
+//! * [`addr`] — typed `HOST:PORT` parsing for the cluster CLI surface
+//!   (`--listen`, `--workers addr,…`), with actionable errors.
+//! * [`batch`] — the multi-frame envelope that coalesces a decode step's
+//!   per-layer message burst into one vectored write per worker per step
+//!   (see "Batching" below).
+//! * [`mux`] — `poll(2)`-based readiness multiplexing so the leader
+//!   services W worker sockets concurrently instead of sequentially.
+//!
+//! # Remote topology
+//!
+//! The tcp transport is no longer loopback-only: a standalone
+//! `lamina-attn` binary runs the attention-worker loop behind
+//! `--listen HOST:PORT`, and the leader dials out with
+//! `--workers addr1,addr2,…`. The connection lifecycle:
+//!
+//! ```text
+//!   lamina-attn --listen 0.0.0.0:7001          lamina … --workers host:7001,…
+//!   ┌───────────────────────────┐              ┌───────────────────────────┐
+//!   │ bind + accept loop        │◄── dial ─────│ connect_timeout + bounded │
+//!   │                           │   (retry     │ retry on HealthPolicy     │
+//!   │ session:                  │    ladder)   │ backoff ladder            │
+//!   │   send Hello ─────────────┼──────────────┼─► codec-version check     │
+//!   │   validate Welcome ◄──────┼──────────────┼── shard plan + geometry   │
+//!   │   serve StepQ/StepKv/…    │◄═ envelopes ═│ batched sends, writev     │
+//!   │   (60s idle timeout)      │══ frames ═══►│ mux'd recv over poll(2)   │
+//!   │ session ends (Shutdown,   │              │ death → failover: degrade │
+//!   │  EOF, error) → accept     │              │ or re-dial + re-Welcome   │
+//!   │  again (leader may return)│              │ (epoch-fenced reshard)    │
+//!   └───────────────────────────┘              └───────────────────────────┘
+//! ```
+//!
+//! A dead remote worker is indistinguishable from a dead loopback one at
+//! the failover layer: the same typed errors feed the same
+//! detection/recovery machinery, and respawn becomes "re-dial the same
+//! address" (the worker's accept loop takes the leader back).
+//!
+//! # Batching
+//!
+//! `Transport` has a buffered send plane: `send_buffered` queues a frame,
+//! `flush` emits everything queued as one length-prefixed multi-frame
+//! [`batch`] envelope with a single vectored write. `send` flushes any
+//! pending batch before its own frame, so FIFO order holds across both
+//! paths. The receive side decodes envelopes incrementally with the same
+//! never-lose-sync guarantees as bare frames. Transports without a real
+//! syscall boundary (inproc) keep the default implementation, where
+//! `send_buffered` degenerates to `send` and `flush` is a no-op.
 //!
 //! # Error plane
 //!
@@ -60,9 +106,12 @@
 //! full decode + chunked-prefill session is bit-identical over either
 //! (asserted by the `net_e2e` tests).
 
+pub mod addr;
+pub mod batch;
 pub mod codec;
 pub mod fault;
 pub mod inproc;
+pub mod mux;
 pub mod stats;
 pub mod tcp;
 
@@ -70,6 +119,8 @@ use std::time::Duration;
 
 use crate::workers::messages::WireMsg;
 
+pub use addr::{Addr, AddrError};
+pub use batch::BatchDecoder;
 pub use codec::CodecError;
 pub use fault::{DeadTransport, FaultPlan, FaultTransport};
 pub use inproc::InprocTransport;
@@ -147,8 +198,26 @@ impl From<TransportError> for String {
 /// plane contract.
 pub trait Transport: Send {
     /// Queue `msg` for delivery to the peer. Byte accounting (logical and,
-    /// where applicable, serialized) happens here.
+    /// where applicable, serialized) happens here. Any frames previously
+    /// queued with [`Transport::send_buffered`] are flushed first, so
+    /// mixing the two planes preserves FIFO order.
     fn send(&self, msg: WireMsg) -> Result<(), TransportError>;
+
+    /// Queue `msg` into the pending batch; nothing reaches the peer until
+    /// [`Transport::flush`] (or a subsequent `send`, which flushes first).
+    /// Transports without a syscall boundary just send immediately — the
+    /// contract is "delivered no later than the next flush", not
+    /// "withheld until it".
+    fn send_buffered(&self, msg: WireMsg) -> Result<(), TransportError> {
+        self.send(msg)
+    }
+
+    /// Emit every frame queued by [`Transport::send_buffered`] as one
+    /// multi-frame envelope (single vectored write on tcp). No-op when
+    /// nothing is pending.
+    fn flush(&self) -> Result<(), TransportError> {
+        Ok(())
+    }
 
     /// Block until the next message arrives.
     fn recv(&self) -> Result<WireMsg, TransportError>;
@@ -162,6 +231,17 @@ pub trait Transport: Send {
 
     /// Which implementation this is (for reports).
     fn kind(&self) -> TransportKind;
+
+    /// A pollable raw fd whose readability implies `recv_timeout` would
+    /// make progress, if this transport has one ([`mux`] readiness loop).
+    /// `None` (the default) keeps the caller on its sequential path.
+    ///
+    /// Readability is advisory — frames already decoded into userspace
+    /// buffers are *not* visible to `poll(2)`, so callers must sweep with
+    /// a zero-timeout receive before parking on the fd.
+    fn poll_fd(&self) -> Option<i32> {
+        None
+    }
 }
 
 /// Transport selector (the `--transport` CLI flag).

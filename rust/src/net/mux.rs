@@ -1,0 +1,209 @@
+//! Readiness multiplexing over worker sockets, used by the leader's
+//! receive path so W workers are serviced concurrently: instead of the
+//! old sequential per-worker blocking receive (which let one slow shard
+//! serialize the whole step and charge its stall to the *next* worker's
+//! deadline), the leader polls every outstanding socket at once and
+//! drains whichever answers first.
+//!
+//! Implemented directly on `poll(2)` via a minimal FFI declaration
+//! against the system libc — std exposes no readiness API and the build
+//! is vendored-deps-only. Unix-only; on other platforms
+//! [`supported`] reports `false` and the leader keeps its sequential
+//! path (as it does for inproc links, which have no fd to poll).
+//!
+//! The time spent parked in `poll` is charged to the `net.mux_wait_ns`
+//! counter in the obs registry — the leader's "waiting on stragglers"
+//! budget, to set against per-worker turnaround spans on the trace
+//! timeline.
+
+use std::io;
+use std::time::{Duration, Instant};
+
+use crate::obs;
+
+/// Whether readiness multiplexing works on this platform.
+pub fn supported() -> bool {
+    cfg!(unix)
+}
+
+fn mux_wait_counter() -> &'static obs::Counter {
+    static C: std::sync::OnceLock<obs::Counter> = std::sync::OnceLock::new();
+    C.get_or_init(|| obs::registry().counter("net.mux_wait_ns"))
+}
+
+#[cfg(unix)]
+mod sys {
+    #[repr(C)]
+    pub struct Pollfd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+
+    // nfds_t: unsigned long on Linux (pointer-sized), unsigned int on
+    // macOS. Declared per-OS so the FFI ABI is exact.
+    #[cfg(target_os = "macos")]
+    pub type Nfds = u32;
+    #[cfg(not(target_os = "macos"))]
+    pub type Nfds = usize;
+
+    extern "C" {
+        pub fn poll(fds: *mut Pollfd, nfds: Nfds, timeout_ms: i32) -> i32;
+    }
+}
+
+/// Block until at least one of `fds` is readable (or has hung up /
+/// errored — both mean "calling recv will return promptly with the
+/// truth") or `timeout` expires. Returns the **indices into `fds`** that
+/// are ready; empty means the timeout expired.
+///
+/// Readiness is level-triggered and advisory: the caller must still use
+/// its normal (typed, deadline-guarded) receive on the ready links — a
+/// spurious wakeup costs one short receive attempt, never a hang.
+#[cfg(unix)]
+pub fn wait_readable(fds: &[i32], timeout: Duration) -> io::Result<Vec<usize>> {
+    if fds.is_empty() {
+        return Ok(Vec::new());
+    }
+    let t0 = Instant::now();
+    let deadline = t0 + timeout;
+    let mut pfds: Vec<sys::Pollfd> = fds
+        .iter()
+        .map(|&fd| sys::Pollfd { fd, events: sys::POLLIN, revents: 0 })
+        .collect();
+    let ready = loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        // round sub-millisecond remainders *up* so a 400us deadline
+        // parks instead of busy-spinning through poll(…, 0)
+        let ms = left.as_millis().min(i32::MAX as u128) as i32;
+        let ms = if ms == 0 && !left.is_zero() { 1 } else { ms };
+        for p in pfds.iter_mut() {
+            p.revents = 0;
+        }
+        let rc = unsafe { sys::poll(pfds.as_mut_ptr(), pfds.len() as sys::Nfds, ms) };
+        if rc < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                continue;
+            }
+            mux_wait_counter().add(t0.elapsed().as_nanos() as u64);
+            return Err(e);
+        }
+        if rc == 0 {
+            if Instant::now() >= deadline {
+                break Vec::new(); // timed out
+            }
+            continue;
+        }
+        let hits: Vec<usize> = pfds
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.revents & (sys::POLLIN | sys::POLLERR | sys::POLLHUP) != 0)
+            .map(|(i, _)| i)
+            .collect();
+        if !hits.is_empty() {
+            break hits;
+        }
+    };
+    mux_wait_counter().add(t0.elapsed().as_nanos() as u64);
+    Ok(ready)
+}
+
+/// Non-unix fallback: report unsupported so callers keep their
+/// sequential path (gated by [`supported`], so this is defensive).
+#[cfg(not(unix))]
+pub fn wait_readable(_fds: &[i32], _timeout: Duration) -> io::Result<Vec<usize>> {
+    Err(io::Error::new(io::ErrorKind::Unsupported, "readiness mux needs poll(2)"))
+}
+
+/// Accept with a deadline: poll the listener for readability, then
+/// accept. `Ok(None)` on timeout. Used by tests and harnesses that must
+/// never hang on a leader that isn't coming; the standalone worker
+/// binary accepts in a plain blocking loop instead.
+#[cfg(unix)]
+pub fn accept_timeout(
+    listener: &std::net::TcpListener,
+    timeout: Duration,
+) -> io::Result<Option<(std::net::TcpStream, std::net::SocketAddr)>> {
+    use std::os::unix::io::AsRawFd;
+    if wait_readable(&[listener.as_raw_fd()], timeout)?.is_empty() {
+        return Ok(None);
+    }
+    listener.accept().map(Some)
+}
+
+#[cfg(not(unix))]
+pub fn accept_timeout(
+    listener: &std::net::TcpListener,
+    _timeout: Duration,
+) -> io::Result<Option<(std::net::TcpStream, std::net::SocketAddr)>> {
+    // no readiness primitive: block (callers on non-unix accept the hang
+    // risk; every supported platform is unix)
+    listener.accept().map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+    #[cfg(unix)]
+    use std::os::unix::io::AsRawFd;
+
+    fn loopback_pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = l.accept().unwrap();
+        (a, b)
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn timeout_with_no_data_returns_empty() {
+        let (a, _b) = loopback_pair();
+        let t0 = Instant::now();
+        let ready = wait_readable(&[a.as_raw_fd()], Duration::from_millis(30)).unwrap();
+        assert!(ready.is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(25), "returned too early");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn ready_fd_is_reported_by_index() {
+        let (a, b) = loopback_pair();
+        let (c, mut d) = loopback_pair();
+        d.write_all(b"x").unwrap();
+        let ready =
+            wait_readable(&[a.as_raw_fd(), c.as_raw_fd()], Duration::from_secs(2)).unwrap();
+        assert_eq!(ready, vec![1], "only the written-to socket is readable");
+        drop(b);
+        // a's peer hung up: now both report ready (HUP counts)
+        let ready =
+            wait_readable(&[a.as_raw_fd(), c.as_raw_fd()], Duration::from_secs(2)).unwrap();
+        assert!(ready.contains(&0));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mux_wait_counter_accumulates() {
+        let (a, _b) = loopback_pair();
+        let before = mux_wait_counter().get();
+        let _ = wait_readable(&[a.as_raw_fd()], Duration::from_millis(10)).unwrap();
+        assert!(mux_wait_counter().get() > before);
+    }
+
+    #[test]
+    fn accept_timeout_times_out_then_accepts() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        assert!(accept_timeout(&l, Duration::from_millis(20)).is_ok());
+        let addr = l.local_addr().unwrap();
+        let _c = TcpStream::connect(addr).unwrap();
+        let got = accept_timeout(&l, Duration::from_secs(5)).unwrap();
+        assert!(got.is_some());
+    }
+}

@@ -78,6 +78,13 @@ pub struct AttnWorkerCfg {
     /// Model geometry for the native backend. `None` falls back to the
     /// artifact manifest; the engine backend always uses its manifest.
     pub geom: Option<ModelGeom>,
+    /// Accept the leader's `Welcome` as the authoritative geometry
+    /// instead of cross-checking it against local knowledge. The
+    /// standalone `lamina-attn` binary sets this: a remote worker has no
+    /// artifacts or manifest of its own, the handshake *is* its config.
+    /// In-process workers keep it `false` so a leader/worker geometry
+    /// disagreement stays a loud protocol fault.
+    pub trust_welcome: bool,
 }
 
 /// How a worker loop ended abnormally. The two classes get opposite
@@ -112,11 +119,14 @@ pub fn run_attn_worker<T: Transport>(cfg: AttnWorkerCfg, link: T) {
     // every span/instant this thread records lands on the worker's own
     // timeline track (leader is track 0)
     obs::set_thread_track(cfg.shard as u64 + 1);
-    let (mut backend, geom): (Box<dyn AttnBackend>, ModelGeom) = match cfg.backend {
+    // `geom` is this worker's *local* knowledge of the model geometry,
+    // used to cross-check the leader's `Welcome`. `None` (standalone
+    // binary with `trust_welcome`) means the handshake is authoritative.
+    let (mut backend, geom): (Box<dyn AttnBackend>, Option<ModelGeom>) = match cfg.backend {
         AttnBackendKind::Engine => match EngineBackend::new(&cfg.artifacts_dir, cfg.n_shards) {
             Ok(b) => {
                 let geom = b.geom();
-                (Box::new(b), geom)
+                (Box::new(b), Some(geom))
             }
             Err(e) => {
                 let _ = link.send(WireMsg::WorkerError { msg: e });
@@ -125,9 +135,10 @@ pub fn run_attn_worker<T: Transport>(cfg: AttnWorkerCfg, link: T) {
         },
         AttnBackendKind::Native => {
             let geom = match cfg.geom {
-                Some(g) => g,
+                Some(g) => Some(g),
+                None if cfg.trust_welcome => None,
                 None => match Manifest::load(&cfg.artifacts_dir) {
-                    Ok(m) => ModelGeom::of(&m.config),
+                    Ok(m) => Some(ModelGeom::of(&m.config)),
                     Err(e) => {
                         let _ = link.send(WireMsg::WorkerError {
                             msg: format!(
@@ -158,7 +169,7 @@ pub fn run_attn_worker<T: Transport>(cfg: AttnWorkerCfg, link: T) {
 
 fn worker_loop<T: Transport>(
     backend: &mut dyn AttnBackend,
-    geom: ModelGeom,
+    geom: Option<ModelGeom>,
     cfg: &AttnWorkerCfg,
     link: &T,
 ) -> Result<(), WorkerFault> {
@@ -221,18 +232,27 @@ fn worker_loop<T: Transport>(
             } => {
                 let _sp = obs::span("worker", "welcome").arg("epoch", e as i64);
                 let (start, count) = (kv_start as usize, kv_count as usize);
-                if count == 0 || start + count > geom.kv_heads {
+                if count == 0 {
                     return Err(WorkerFault::Protocol(format!(
-                        "welcome kv range {start}+{count} invalid for {} kv heads",
-                        geom.kv_heads
+                        "welcome kv range {start}+{count} is empty"
                     )));
                 }
-                if layers as usize != geom.layers || head_dim as usize != geom.head_dim {
-                    return Err(WorkerFault::Protocol(format!(
-                        "welcome geometry mismatch: layers {layers} vs {}, head_dim {head_dim} \
-                         vs {}",
-                        geom.layers, geom.head_dim
-                    )));
+                // cross-check against local geometry when we have one; a
+                // trust_welcome worker takes the leader's word instead
+                if let Some(g) = geom {
+                    if start + count > g.kv_heads {
+                        return Err(WorkerFault::Protocol(format!(
+                            "welcome kv range {start}+{count} invalid for {} kv heads",
+                            g.kv_heads
+                        )));
+                    }
+                    if layers as usize != g.layers || head_dim as usize != g.head_dim {
+                        return Err(WorkerFault::Protocol(format!(
+                            "welcome geometry mismatch: layers {layers} vs {}, head_dim \
+                             {head_dim} vs {}",
+                            g.layers, g.head_dim
+                        )));
+                    }
                 }
                 // a mid-session re-Welcome is a reshard: the previous
                 // arena's blocks and any StepQ awaiting its KV belong to

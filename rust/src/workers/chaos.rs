@@ -51,6 +51,7 @@ use crate::scheduler::{
 };
 
 use super::attn_worker::{run_attn_worker, AttnWorkerCfg, ModelGeom};
+use super::leader::dial_worker;
 use super::messages::WireMsg;
 
 /// Pseudo-model vocabulary (next tokens are hashes mod this).
@@ -98,6 +99,15 @@ pub struct ChaosCfg {
     /// `fault_plan` message-count triggers, these land *between* steps —
     /// the degrade-ladder tests use them for exact W=4→3→2 scripts.
     pub kill_at: Vec<(usize, usize)>,
+    /// Remote cluster mode: `HOST:PORT` of a standalone `lamina-attn`
+    /// process per worker index (including respawn/adopt targets — a
+    /// respawn re-dials the same address). `None` spawns in-process
+    /// threads per `transport` as before.
+    pub worker_addrs: Option<Vec<String>>,
+    /// Test hook invoked at each step boundary with the step number —
+    /// e2e tests use it to SIGKILL a subprocess at an exact point in the
+    /// session. Plain fn pointer so the config stays `Clone + Debug`.
+    pub on_step: Option<fn(usize)>,
 }
 
 impl Default for ChaosCfg {
@@ -121,6 +131,8 @@ impl Default for ChaosCfg {
             min_workers: 1,
             adopt_at_step: None,
             kill_at: Vec::new(),
+            worker_addrs: None,
+            on_step: None,
         }
     }
 }
@@ -254,21 +266,36 @@ fn spawn_peer(cfg: &ChaosCfg, idx: usize, respawn: bool) -> Result<Peer, String>
             head_dim: HEAD_DIM,
             max_seq: MAX_SEQ,
         }),
+        trust_welcome: false,
     };
     let name = if respawn { format!("chaos-attn-{idx}-r") } else { format!("chaos-attn-{idx}") };
     let builder = std::thread::Builder::new().name(name);
-    let (mut link, thread): (Box<dyn Transport>, _) = match cfg.transport {
-        TransportKind::Inproc => {
-            let (l, w) = inproc::pair(&FHBN, LINE_RATE_400G, 0.0);
-            let t = builder.spawn(move || run_attn_worker(wcfg, w)).map_err(|e| e.to_string())?;
-            (Box::new(l), t)
-        }
-        TransportKind::Tcp => {
-            let (l, w) = tcp::pair().map_err(|e| e.to_string())?;
-            let t = builder.spawn(move || run_attn_worker(wcfg, w)).map_err(|e| e.to_string())?;
-            (Box::new(l), t)
-        }
-    };
+    let (mut link, thread): (Box<dyn Transport>, Option<std::thread::JoinHandle<()>>) =
+        match (&cfg.worker_addrs, cfg.transport) {
+            // remote cluster: dial a standalone lamina-attn process with the
+            // same bounded-retry ladder the real leader uses; no thread to
+            // join (the subprocess owns its own lifetime)
+            (Some(addrs), _) => {
+                let spec = addrs
+                    .get(idx)
+                    .ok_or_else(|| format!("no address for worker {idx} (got {})", addrs.len()))?;
+                let addr = crate::net::Addr::parse(spec).map_err(|e| e.to_string())?;
+                let l = dial_worker(&addr, &cfg.health)?;
+                (Box::new(l), None)
+            }
+            (None, TransportKind::Inproc) => {
+                let (l, w) = inproc::pair(&FHBN, LINE_RATE_400G, 0.0);
+                let t =
+                    builder.spawn(move || run_attn_worker(wcfg, w)).map_err(|e| e.to_string())?;
+                (Box::new(l), Some(t))
+            }
+            (None, TransportKind::Tcp) => {
+                let (l, w) = tcp::pair().map_err(|e| e.to_string())?;
+                let t =
+                    builder.spawn(move || run_attn_worker(wcfg, w)).map_err(|e| e.to_string())?;
+                (Box::new(l), Some(t))
+            }
+        };
     // same contract as the real leader: respawns are never fault-wrapped
     if !respawn {
         if let Some(plan) = &cfg.fault_plan {
@@ -277,7 +304,7 @@ fn spawn_peer(cfg: &ChaosCfg, idx: usize, respawn: bool) -> Result<Peer, String>
             }
         }
     }
-    Ok(Peer { link, thread: Some(thread), health: HealthTracker::default() })
+    Ok(Peer { link, thread, health: HealthTracker::default() })
 }
 
 // ---- the scripted leader ---------------------------------------------------
@@ -874,6 +901,9 @@ pub fn run_chaos(cfg: &ChaosCfg) -> Result<ChaosReport, ChaosFailure> {
     loop {
         // scripted membership events land at step boundaries, never
         // mid-step: exact degrade/adopt scripts stay deterministic
+        if let Some(hook) = cfg.on_step {
+            hook(steps);
+        }
         for i in 0..cfg.kill_at.len() {
             let (at, wi) = cfg.kill_at[i];
             if !killed[i] && at <= steps {

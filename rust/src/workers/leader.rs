@@ -86,7 +86,7 @@
 //! membership-lifecycle walkthrough.
 
 use std::cell::RefCell;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -219,6 +219,15 @@ pub struct PipelineOpts {
     /// Smallest pool width degradation may leave (`--min-workers`;
     /// effective minimum 1).
     pub min_workers: usize,
+    /// Remote cluster mode (`--workers addr1,addr2,…`): instead of
+    /// spawning in-process worker threads, dial standalone `lamina-attn`
+    /// processes — worker `i` connects to `worker_addrs[i]`. A recovery
+    /// respawn re-dials the same address (the worker binary's accept loop
+    /// takes the leader back), and adoption consumes the next spare
+    /// address beyond the starting width. The links speak the same tcp
+    /// framing as loopback pairs, so failover, fault plans, and the
+    /// `Hello`/`Welcome` handshake behave identically.
+    pub worker_addrs: Option<Vec<crate::net::Addr>>,
 }
 
 impl PipelineOpts {
@@ -248,6 +257,7 @@ impl PipelineOpts {
             auto_recover: true,
             allow_respawn: true,
             min_workers: 1,
+            worker_addrs: None,
         }
     }
 }
@@ -261,12 +271,67 @@ struct WorkerHandle {
     health: RefCell<HealthTracker>,
 }
 
-/// Spawn one attention-worker thread connected over the configured
-/// transport: a paced in-process channel, or a real TCP loopback socket
-/// carrying serialized `net::codec` frames. On the first spawn (not a
+/// Dial a standalone `lamina-attn` worker with bounded retry on the
+/// health policy's backoff ladder: attempt `k` gets a connect deadline of
+/// `attempt_deadline(k)`, with a short pause between attempts (a refused
+/// connection returns instantly, so the pause is what gives a
+/// still-starting worker its grace window). A worker that never comes up
+/// is a typed error naming the address — never a hang.
+pub fn dial_worker(
+    addr: &crate::net::Addr,
+    policy: &HealthPolicy,
+) -> std::result::Result<tcp::TcpTransport, String> {
+    let sa = addr.resolve().map_err(|e| e.to_string())?;
+    let attempts = policy.attempts().max(1);
+    let mut last = String::new();
+    for k in 0..attempts {
+        let _sp = obs::span("wire", "dial").arg("attempt", k as i64);
+        match tcp::TcpTransport::connect_timeout(sa, policy.attempt_deadline(k)) {
+            Ok(t) => return Ok(t),
+            Err(e) => {
+                last = e.to_string();
+                if k + 1 < attempts {
+                    std::thread::sleep(policy.attempt_deadline(k).min(Duration::from_millis(250)));
+                }
+            }
+        }
+    }
+    Err(format!("dial {addr}: no worker after {attempts} attempts: {last}"))
+}
+
+/// Spawn one attention-worker connected over the configured transport: a
+/// paced in-process channel, a real TCP loopback socket carrying
+/// serialized `net::codec` frames, or — with `worker_addrs` — an outbound
+/// dial to a standalone `lamina-attn` process. On the first spawn (not a
 /// recovery respawn), the leader-side link endpoint is wrapped in a
 /// [`FaultTransport`] when the pipeline's fault plan targets this worker.
 fn spawn_worker(opts: &PipelineOpts, geom: ModelGeom, idx: usize, respawn: bool) -> Result<WorkerHandle> {
+    // remote cluster: worker `idx` lives at `worker_addrs[idx]`; a respawn
+    // re-dials the same address (the binary's accept loop takes us back)
+    if let Some(addrs) = &opts.worker_addrs {
+        let addr = addrs.get(idx).ok_or_else(|| {
+            anyhow!(
+                "no --workers address for worker {idx} (got {}; respawn re-dials, adoption \
+                 needs a spare address)",
+                addrs.len()
+            )
+        })?;
+        let mut link: Box<dyn Transport> =
+            Box::new(dial_worker(addr, &opts.health).map_err(|e| anyhow!(e))?);
+        if !respawn {
+            if let Some(plan) = &opts.fault_plan {
+                if plan.is_armed() && plan.applies_to(idx) {
+                    link = Box::new(FaultTransport::new(link, plan.clone(), idx as u64));
+                }
+            }
+        }
+        // no thread: the subprocess owns its own lifetime
+        return Ok(WorkerHandle {
+            link,
+            thread: None,
+            health: RefCell::new(HealthTracker::default()),
+        });
+    }
     let cfg = AttnWorkerCfg {
         artifacts_dir: opts.artifacts_dir.clone(),
         shard: idx,
@@ -279,6 +344,7 @@ fn spawn_worker(opts: &PipelineOpts, geom: ModelGeom, idx: usize, respawn: bool)
         // the leader always has a manifest; handing the geometry over keeps
         // native workers artifact-independent
         geom: Some(geom),
+        trust_welcome: false,
     };
     let name = if respawn { format!("lamina-attn-{idx}-r") } else { format!("lamina-attn-{idx}") };
     let builder = std::thread::Builder::new().name(name);
@@ -389,6 +455,15 @@ impl DisaggPipeline {
                 opts.min_workers,
                 opts.attn_workers
             );
+        }
+        if let Some(addrs) = &opts.worker_addrs {
+            if addrs.len() < opts.attn_workers {
+                bail!(
+                    "--workers lists {} addresses but {} workers requested",
+                    addrs.len(),
+                    opts.attn_workers
+                );
+            }
         }
         // the native backend computes any shard width in pure Rust; only the
         // engine backend depends on per-width attention artifacts
@@ -981,6 +1056,29 @@ impl DisaggPipeline {
             .map_err(|e| self.declare_dead(wi, DeathCause::of_transport(&e), Instant::now()))
     }
 
+    /// Queue a frame into worker `wi`'s pending batch envelope (delivered
+    /// by the next [`Self::flush_all`] or plain send — the tcp transport
+    /// turns a step's whole burst into one `writev`). Same death
+    /// semantics as [`Self::send_to`].
+    fn send_buffered_to(&self, wi: usize, msg: WireMsg) -> Result<()> {
+        self.workers[wi]
+            .link
+            .send_buffered(msg)
+            .map_err(|e| self.declare_dead(wi, DeathCause::of_transport(&e), Instant::now()))
+    }
+
+    /// Flush every worker's pending batch envelope. Must run before any
+    /// receive that waits on a buffered request — the receive helpers call
+    /// it themselves.
+    fn flush_all(&self) -> Result<()> {
+        for (wi, w) in self.workers.iter().enumerate() {
+            w.link
+                .flush()
+                .map_err(|e| self.declare_dead(wi, DeathCause::of_transport(&e), Instant::now()))?;
+        }
+        Ok(())
+    }
+
     // ---- attention round-trip -------------------------------------------
 
     fn send_q(&self, layer: usize, slots: &[u32], q: &HostTensor, lens: &[i32],
@@ -1000,7 +1098,7 @@ impl DisaggPipeline {
                 overlap: self.opts.overlap,
             };
             self.step_net_bytes.set(self.step_net_bytes.get() + msg.wire_bytes());
-            self.send_to(wi, msg)?;
+            self.send_buffered_to(wi, msg)?;
         }
         Ok(())
     }
@@ -1014,12 +1112,15 @@ impl DisaggPipeline {
                 v: slice_heads(v, r.start, r.count),
             };
             self.step_net_bytes.set(self.step_net_bytes.get() + msg.wire_bytes());
-            self.send_to(wi, msg)?;
+            self.send_buffered_to(wi, msg)?;
         }
         Ok(())
     }
 
     fn recv_attn(&self, layer: usize, bucket: usize) -> Result<HostTensor> {
+        // the step's request burst rides per-worker batch envelopes;
+        // nothing is on the wire until this flush
+        self.flush_all()?;
         let _sp = obs::span("wire", "recv_attn")
             .arg("layer", layer as i64)
             .arg("workers", self.workers.len() as i64);
@@ -1027,40 +1128,24 @@ impl DisaggPipeline {
         let w = self.workers.len();
         let group = mc.heads / mc.kv_heads;
         let hd = mc.head_dim;
-        let mut shards: Vec<HostTensor> = Vec::with_capacity(w);
-        for wi in 0..w {
-            match self.recv_worker(wi)? {
-                WireMsg::AttnOut { layer: l, out: shard } => {
-                    if l != layer {
-                        // protocol desync: the link is unusable, treat as death
-                        return Err(self.declare_dead(
-                            wi,
-                            DeathCause::Protocol(format!(
-                                "attention out for layer {l}, expected {layer}"
-                            )),
-                            Instant::now(),
-                        ));
-                    }
-                    shards.push(shard);
-                }
-                other => {
-                    return Err(self.declare_dead(
-                        wi,
-                        DeathCause::Protocol(format!("unexpected reply {other:?}")),
-                        Instant::now(),
-                    ));
-                }
+        let mut shards: Vec<Option<HostTensor>> = (0..w).map(|_| None).collect();
+        if w > 1 && self.mux_ready() {
+            self.recv_attn_mux(layer, &mut shards)?;
+        } else {
+            for (wi, slot) in shards.iter_mut().enumerate() {
+                *slot = Some(self.recv_attn_one(wi, layer)?);
             }
         }
         if w == 1 {
             // single shard IS the full [bucket, H, hd] output — zero-copy.
-            // pop() is infallible: the loop above pushed exactly w == 1.
-            return Ok(shards.pop().expect("one shard pushed"));
+            // take() is infallible: both receive paths filled every slot.
+            return Ok(shards[0].take().expect("one shard received"));
         }
         // interleave head shards back into [bucket, H, hd] at each
         // worker's query-range offset (ranges may be non-uniform)
         let mut out = vec![0.0f32; bucket * mc.heads * hd];
         for (wi, shard) in shards.iter().enumerate() {
+            let shard = shard.as_ref().expect("every shard received");
             let qr = self.plan[wi].q_range(group);
             let sd = shard.as_f32();
             for b in 0..bucket {
@@ -1073,13 +1158,186 @@ impl DisaggPipeline {
         Ok(HostTensor::f32(vec![bucket, mc.heads, hd], out))
     }
 
+    /// Blocking receive of worker `wi`'s `AttnOut` for `layer` through the
+    /// health ladder (the sequential path; also the only path for inproc
+    /// links, which have no pollable fd).
+    fn recv_attn_one(&self, wi: usize, layer: usize) -> Result<HostTensor> {
+        let t0 = Instant::now();
+        match self.recv_worker(wi)? {
+            WireMsg::AttnOut { layer: l, out: shard } => {
+                if l != layer {
+                    // protocol desync: the link is unusable, treat as death
+                    return Err(self.declare_dead(
+                        wi,
+                        DeathCause::Protocol(format!(
+                            "attention out for layer {l}, expected {layer}"
+                        )),
+                        Instant::now(),
+                    ));
+                }
+                self.note_turnaround(wi, layer, t0);
+                Ok(shard)
+            }
+            other => Err(self.declare_dead(
+                wi,
+                DeathCause::Protocol(format!("unexpected reply {other:?}")),
+                Instant::now(),
+            )),
+        }
+    }
+
+    /// Whether every worker link exposes a pollable fd (remote tcp links
+    /// do; inproc links don't) and the platform has `poll(2)`.
+    fn mux_ready(&self) -> bool {
+        crate::net::mux::supported() && self.workers.iter().all(|w| w.link.poll_fd().is_some())
+    }
+
+    /// One bounded attempt to pull worker `wi`'s `AttnOut` for `layer`.
+    /// `Ok(None)` means the deadline expired with no frame — NOT a strike;
+    /// the mux loop owns the per-worker deadline ladder. Everything else a
+    /// receive can surface is terminal here: `WorkerError`, a wrong-layer
+    /// or off-protocol reply, and link errors all declare death.
+    fn try_recv_attn(
+        &self,
+        wi: usize,
+        layer: usize,
+        timeout: Duration,
+        t0: Instant,
+    ) -> Result<Option<HostTensor>> {
+        let worker = &self.workers[wi];
+        match worker.link.recv_timeout(timeout) {
+            Ok(Some(WireMsg::AttnOut { layer: l, out })) if l == layer => {
+                worker.health.borrow_mut().on_alive();
+                self.note_turnaround(wi, layer, t0);
+                Ok(Some(out))
+            }
+            Ok(Some(WireMsg::AttnOut { layer: l, .. })) => Err(self.declare_dead(
+                wi,
+                DeathCause::Protocol(format!("attention out for layer {l}, expected {layer}")),
+                t0,
+            )),
+            Ok(Some(WireMsg::WorkerError { msg })) => {
+                Err(self.declare_dead(wi, DeathCause::Protocol(msg), t0))
+            }
+            Ok(Some(other)) => Err(self.declare_dead(
+                wi,
+                DeathCause::Protocol(format!("unexpected reply {other:?}")),
+                t0,
+            )),
+            Ok(None) => Ok(None),
+            Err(e) => Err(self.declare_dead(wi, DeathCause::of_transport(&e), t0)),
+        }
+    }
+
+    /// Multiplexed attention gather: wait on every outstanding worker
+    /// socket at once with `poll(2)` instead of draining them in index
+    /// order, so one slow shard can't serialize behind the others.
+    ///
+    /// Loop shape, in order:
+    /// 1. zero-timeout sweep — frames already sitting in userspace read
+    ///    buffers (a prior read pulled several envelopes) are invisible to
+    ///    `poll`, so every outstanding link gets a free non-blocking try;
+    /// 2. `poll` the survivors until the *nearest* per-worker deadline;
+    /// 3. service readable links with a short bounded receive;
+    /// 4. on a poll round with nothing readable, strike every expired
+    ///    worker through the same [`Verdict`] ladder `recv_worker` runs
+    ///    (Retry re-arms that worker's deadline; Dead is a `Hang` death).
+    fn recv_attn_mux(&self, layer: usize, shards: &mut [Option<HostTensor>]) -> Result<()> {
+        let policy = &self.opts.health;
+        let t0 = Instant::now();
+        let mut outstanding: Vec<usize> = (0..shards.len()).collect();
+        let mut deadlines: Vec<Instant> = self
+            .workers
+            .iter()
+            .map(|w| t0 + policy.attempt_deadline(w.health.borrow().strikes()))
+            .collect();
+        while !outstanding.is_empty() {
+            let mut i = 0;
+            while i < outstanding.len() {
+                let wi = outstanding[i];
+                if let Some(out) = self.try_recv_attn(wi, layer, Duration::ZERO, t0)? {
+                    shards[wi] = Some(out);
+                    outstanding.swap_remove(i);
+                } else {
+                    i += 1;
+                }
+            }
+            if outstanding.is_empty() {
+                break;
+            }
+            let now = Instant::now();
+            let wait = outstanding
+                .iter()
+                .map(|&wi| deadlines[wi].saturating_duration_since(now))
+                .min()
+                .unwrap_or(Duration::ZERO);
+            let fds: Vec<i32> = outstanding
+                .iter()
+                .map(|&wi| self.workers[wi].link.poll_fd().expect("mux_ready checked"))
+                .collect();
+            let ready = crate::net::mux::wait_readable(&fds, wait)
+                .map_err(|e| anyhow!("mux poll failed: {e}"))?;
+            if ready.is_empty() {
+                let now = Instant::now();
+                for &wi in &outstanding {
+                    if now < deadlines[wi] {
+                        continue;
+                    }
+                    match self.workers[wi].health.borrow_mut().on_timeout(policy) {
+                        Verdict::Retry(attempt) => {
+                            crate::metrics::note_failover_retry();
+                            deadlines[wi] = now + policy.attempt_deadline(attempt);
+                        }
+                        Verdict::Dead => {
+                            return Err(self.declare_dead(wi, DeathCause::Hang, t0));
+                        }
+                    }
+                }
+                continue;
+            }
+            // resolve ready entries to worker ids BEFORE mutating
+            // `outstanding` — `ready` indexes the fds snapshot above
+            let ready_wi: Vec<usize> = ready.iter().map(|&ri| outstanding[ri]).collect();
+            for wi in ready_wi {
+                if let Some(out) =
+                    self.try_recv_attn(wi, layer, Duration::from_millis(1), t0)?
+                {
+                    shards[wi] = Some(out);
+                    outstanding.retain(|&o| o != wi);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-worker reply turnaround (receive-entry → `AttnOut` in hand):
+    /// a trace instant on the wire track plus the
+    /// `net.attn_turnaround_ns` histogram.
+    fn note_turnaround(&self, wi: usize, layer: usize, t0: Instant) {
+        use std::sync::OnceLock;
+        static H: OnceLock<obs::Histogram> = OnceLock::new();
+        let ns = t0.elapsed().as_nanos() as u64;
+        H.get_or_init(|| obs::registry().histogram("net.attn_turnaround_ns")).record(ns);
+        if obs::trace::enabled() {
+            obs::instant(
+                "wire",
+                "attn_turnaround",
+                vec![
+                    ("worker", obs::ArgVal::I(wi as i64)),
+                    ("layer", obs::ArgVal::I(layer as i64)),
+                    ("ns", obs::ArgVal::I(ns as i64)),
+                ],
+            );
+        }
+    }
+
     // ---- KV lifecycle control plane ---------------------------------------
 
     /// Free `slot`'s KV blocks on every attention worker (request retired).
     fn retire_slot(&self, slot: u32) -> Result<()> {
         let _sp = obs::span("wire", "retire").arg("slot", slot as i64);
         for wi in 0..self.workers.len() {
-            self.send_to(wi, WireMsg::Retire { slot })?;
+            self.send_buffered_to(wi, WireMsg::Retire { slot })?;
         }
         Ok(())
     }
@@ -1093,7 +1351,7 @@ impl DisaggPipeline {
             .arg("src", src_slot as i64)
             .arg("tokens", tokens as i64);
         for wi in 0..self.workers.len() {
-            self.send_to(wi, WireMsg::MapBlocks { slot: dst_slot, src_slot, tokens })?;
+            self.send_buffered_to(wi, WireMsg::MapBlocks { slot: dst_slot, src_slot, tokens })?;
         }
         Ok(())
     }
@@ -1438,7 +1696,7 @@ impl DisaggPipeline {
                 seq_bucket,
             };
             self.step_net_bytes.set(self.step_net_bytes.get() + msg.wire_bytes());
-            self.send_to(wi, msg)?;
+            self.send_buffered_to(wi, msg)?;
         }
         Ok(())
     }

@@ -98,6 +98,44 @@
 //! Simulated-network accounting is unchanged: `wire_bytes()` still charges
 //! the logical payload size to the modelled link.
 //!
+//! # Deployment: real multi-host clusters (`lamina-attn`)
+//!
+//! Attention workers need not share the leader's process. The standalone
+//! `lamina-attn` binary runs [`attn_worker`] behind `--listen HOST:PORT`;
+//! the leader dials out with `--workers addr1,addr2,…`
+//! ([`crate::net::Addr`] — `HOST:PORT`, IPv6 in brackets) instead of
+//! spawning shard threads. Everything downstream of the connect is the
+//! in-process protocol unchanged: same handshake, same frames, same
+//! failover, bit-identical output (asserted by `tests/net_cluster.rs`
+//! against real subprocesses). One leader connection = one worker
+//! *session*; a daemon outlives its sessions:
+//!
+//! ```text
+//!   leader                                lamina-attn daemon
+//!   ──────                                ──────────────────
+//!   dial addr ── bounded retry ladder ──▶ accept ─┐
+//!       (HealthPolicy backoff, typed            session: Hello ─▶
+//!        dial failure after N tries)            ◀─ Welcome (geometry,
+//!                                                   epoch, KV range)
+//!   decode/prefill steps ◀───────────────▶ data plane (batched
+//!       per-step frame burst in ONE          envelopes, one writev
+//!       envelope per worker; replies         per step per worker)
+//!       gathered via poll(2) readiness
+//!       loop across all workers
+//!   Shutdown / drop link ────────────────▶ session ends (EOF) ─┘
+//!                                          back to accept: a respawn
+//!   re-dial same addr ──────────────────▶  re-dials the SAME daemon
+//!                                          for a fresh session
+//! ```
+//!
+//! Because "respawn" for a dialed worker is just a re-dial, daemon
+//! processes survive leader-side declare-dead verdicts (hang, sever) —
+//! while a daemon that truly dies (SIGKILL) exhausts the dial ladder and
+//! flows into the same degrade path as a thread worker. The wire-level
+//! batching + multiplexing live in [`crate::net`] (`net::batch` envelope
+//! codec, `net::mux` poll loop); inproc transports keep the plain
+//! unbatched path, preserving cross-transport bit-identity.
+//!
 //! # Failure handling: detection → declare dead → preempt-replay-rebuild
 //!
 //! Every wire operation in the leader is typed

@@ -75,6 +75,7 @@ pub fn run_trace_smoke(steps: usize, kill_worker_mid: bool) -> Result<SmokeRepor
             head_dim: 16,
             max_seq: SEQ_BUCKET,
         }),
+        trust_welcome: false,
     };
     let h = std::thread::spawn(move || run_attn_worker(cfg, worker));
 

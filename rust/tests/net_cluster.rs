@@ -1,0 +1,162 @@
+//! Real multi-host cluster e2e: spawn standalone `lamina-attn` worker
+//! PROCESSES on 127.0.0.1 ephemeral ports and drive a full chaos session
+//! (prefill + decode + retire, native backend, no artifacts) against
+//! them, asserting the remote pool is bit-identical to the in-process
+//! golden run — including across link severs (respawn re-dials the same
+//! daemon) and a SIGKILLed subprocess (graceful degradation).
+//!
+//! These tests exercise the whole new-subsystem stack at once: the
+//! `lamina-attn` accept loop, `Addr` parsing, `dial_worker`'s bounded
+//! retry, the batched-envelope wire format crossing real sockets, and
+//! the typed failure taxonomy when a peer is a separate OS process.
+
+use std::io::BufRead;
+use std::process::{Child, Command, Stdio};
+use std::sync::Mutex;
+
+use lamina::net::TransportKind;
+use lamina::workers::{run_chaos, ChaosCfg};
+
+/// Spawn one `lamina-attn` daemon on an ephemeral port and return it
+/// with its bound address, parsed from the single stdout line the
+/// binary contractually prints before serving.
+fn spawn_daemon() -> (Child, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_lamina-attn"))
+        .args(["--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn lamina-attn");
+    let stdout = child.stdout.take().expect("stdout piped");
+    let mut line = String::new();
+    std::io::BufReader::new(stdout)
+        .read_line(&mut line)
+        .expect("read the address line");
+    let addr = line
+        .trim()
+        .rsplit(' ')
+        .next()
+        .unwrap_or_default()
+        .to_string();
+    assert!(
+        line.starts_with("lamina-attn listening on ") && addr.contains(':'),
+        "unexpected stdout line from lamina-attn: {line:?}"
+    );
+    (child, addr)
+}
+
+/// Kills the daemon on drop so a failing assertion can't leak processes.
+struct Daemon {
+    child: Child,
+    addr: String,
+}
+
+impl Daemon {
+    fn spawn() -> Daemon {
+        let (child, addr) = spawn_daemon();
+        Daemon { child, addr }
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn remote_cfg(addrs: &[&str]) -> ChaosCfg {
+    let mut cfg = ChaosCfg::default();
+    cfg.transport = TransportKind::Tcp;
+    cfg.workers = addrs.len();
+    cfg.worker_addrs = Some(addrs.iter().map(|a| a.to_string()).collect());
+    cfg
+}
+
+#[test]
+fn remote_cluster_is_bit_identical_to_inproc() {
+    let golden = run_chaos(&ChaosCfg::default()).expect("inproc golden");
+
+    let d0 = Daemon::spawn();
+    let d1 = Daemon::spawn();
+    let cfg = remote_cfg(&[&d0.addr, &d1.addr]);
+    let remote = run_chaos(&cfg).expect("remote session");
+
+    assert_eq!(remote.worker_deaths, 0, "healthy cluster: no deaths");
+    assert_eq!(remote.leaked_blocks, 0);
+    assert_eq!(
+        remote.outputs, golden.outputs,
+        "2 real lamina-attn processes must reproduce the inproc session bit-for-bit"
+    );
+}
+
+#[test]
+fn severed_link_respawn_redials_the_same_daemon() {
+    let golden = run_chaos(&ChaosCfg::default()).expect("inproc golden");
+
+    let d0 = Daemon::spawn();
+    let d1 = Daemon::spawn();
+    let mut cfg = remote_cfg(&[&d0.addr, &d1.addr]);
+    // sever worker 1's link at step boundary 3: the daemon's session ends
+    // on the dropped socket, its accept loop returns to listening, and
+    // respawn-style recovery re-dials the SAME address for a fresh
+    // session (handshake + rebuilt arena)
+    cfg.kill_at = vec![(3, 1)];
+    let faulted = run_chaos(&cfg).expect("recovery through re-dial");
+
+    assert!(faulted.worker_deaths >= 1, "the sever must be detected");
+    assert!(faulted.recoveries >= 1);
+    assert_eq!(faulted.final_workers, 2, "respawned at the same width");
+    assert_eq!(faulted.leaked_blocks, 0);
+    assert_eq!(faulted.outputs, golden.outputs, "re-dialed session must be bit-identical");
+}
+
+/// The subprocess the degrade test SIGKILLs mid-session; the `on_step`
+/// hook is a plain fn pointer, so the victim rides a static.
+static VICTIM: Mutex<Option<Child>> = Mutex::new(None);
+
+fn sigkill_victim_at_step_5(step: usize) {
+    if step == 5 {
+        if let Some(mut c) = VICTIM.lock().unwrap().take() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+#[test]
+fn sigkilled_subprocess_degrades_bit_identically() {
+    let mut golden_cfg = ChaosCfg::default();
+    golden_cfg.workers = 3;
+    let golden = run_chaos(&golden_cfg).expect("inproc golden at width 3");
+
+    let d0 = Daemon::spawn();
+    let d1 = Daemon::spawn();
+    let (victim, victim_addr) = spawn_daemon();
+    *VICTIM.lock().unwrap() = Some(victim);
+
+    let mut cfg = remote_cfg(&[&d0.addr, &d1.addr, &victim_addr]);
+    // no process left to re-dial → degradation is the only recovery
+    cfg.allow_respawn = false;
+    cfg.min_workers = 1;
+    cfg.on_step = Some(sigkill_victim_at_step_5);
+    let faulted = run_chaos(&cfg).expect("degrade to the survivors");
+
+    assert!(faulted.worker_deaths >= 1, "the SIGKILL must be detected");
+    assert_eq!(faulted.degrades, 1);
+    assert_eq!(faulted.final_workers, 2, "pool degraded 3 -> 2");
+    assert_eq!(faulted.leaked_blocks, 0, "zero leaked KV blocks after losing a process");
+    assert_eq!(faulted.outputs, golden.outputs, "degraded output must be bit-identical");
+}
+
+#[test]
+fn dialing_an_unreachable_worker_fails_typed() {
+    // port 1 on loopback: refused immediately, so the bounded retry
+    // ladder (not a hang) decides how long this takes
+    let cfg = remote_cfg(&["127.0.0.1:1"]);
+    let err = run_chaos(&cfg).expect_err("no daemon to dial");
+    let msg = err.death.to_string();
+    assert!(msg.contains("dial"), "typed dial failure, got: {msg}");
+    assert!(msg.contains("127.0.0.1:1"), "names the address, got: {msg}");
+    assert_eq!(err.leaked_blocks, 0);
+}

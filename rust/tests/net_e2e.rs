@@ -218,6 +218,7 @@ fn native_worker_cfg(kv_dtype: KvDtype) -> AttnWorkerCfg {
         kv_dtype,
         backend: AttnBackendKind::Native,
         geom: Some(ModelGeom { layers: 2, kv_heads: 4, head_dim: 16, max_seq: 64 }),
+        trust_welcome: false,
     }
 }
 

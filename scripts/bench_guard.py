@@ -45,7 +45,10 @@ import sys
 
 NS_REGRESSION = 1.20  # fail if > 20% slower
 NS_SLACK = 250.0      # ignore sub-noise absolute deltas (quick-mode jitter)
-NS_PREFIXES = ("kv/", "kernel/", "e2e/", "host/", "obs/", "failover/")
+NS_PREFIXES = (
+    "kv/", "kernel/", "e2e/", "host/", "obs/", "failover/",
+    "net/frame-batch", "net/mux-step",
+)
 FORMAT = "per-machine-v1"
 NOTE = (
     "Per-machine bench baselines (keyed by hostname). Bench numbers are "

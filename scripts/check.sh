@@ -23,7 +23,12 @@ cargo test -q
 
 echo "== trace-emission smoke (exporter + validator) =="
 TRACE_TMP="$(mktemp -d)"
-trap 'rm -rf "$TRACE_TMP"' EXIT
+ATTN_PIDS=()
+cleanup() {
+  for p in "${ATTN_PIDS[@]:-}"; do kill "$p" 2>/dev/null || true; done
+  rm -rf "$TRACE_TMP"
+}
+trap cleanup EXIT
 target/release/lamina trace-smoke --steps 6 --trace-out "$TRACE_TMP/trace.json"
 python3 scripts/validate_trace.py "$TRACE_TMP/trace.json"
 # a worker dying mid-session must still leave a well-formed (truncated) trace
@@ -59,6 +64,39 @@ for transport in inproc tcp; do
   echo "-- fault-smoke --transport $transport --adopt 4 (scale-up)"
   target/release/lamina fault-smoke --transport "$transport" --adopt 4
 done
+
+echo "== multi-host smoke (lamina-attn subprocesses x {healthy, kill-one, degrade}) =="
+# real cluster: standalone lamina-attn daemons on loopback ephemeral
+# ports, leader dialing out with --workers ADDR,ADDR. Each scenario must
+# stay bit-identical to its in-process golden pass with zero leaked KV
+# blocks (fault-smoke exits nonzero otherwise).
+start_attn() {  # start_attn OUTFILE — daemon in background, pid tracked
+  target/release/lamina-attn --listen 127.0.0.1:0 >"$1" 2>/dev/null &
+  ATTN_PIDS+=($!)
+}
+attn_addr() {  # attn_addr OUTFILE -> echoes the daemon's bound address
+  for _ in $(seq 1 50); do
+    grep -q "listening on" "$1" 2>/dev/null && break
+    sleep 0.1
+  done
+  awk '/listening on/{print $NF}' "$1"
+}
+start_attn "$TRACE_TMP/attn1.addr"
+start_attn "$TRACE_TMP/attn2.addr"
+start_attn "$TRACE_TMP/attn3.addr"
+A1="$(attn_addr "$TRACE_TMP/attn1.addr")"
+A2="$(attn_addr "$TRACE_TMP/attn2.addr")"
+A3="$(attn_addr "$TRACE_TMP/attn3.addr")"
+echo "-- fault-smoke --workers $A1,$A2 (healthy remote pool)"
+target/release/lamina fault-smoke --workers "$A1,$A2"
+echo "-- fault-smoke --workers $A1,$A2 --fault-plan worker=1,kill-send=21 (kill-one, re-dial)"
+# the sever drops the daemon's session; its accept loop serves the
+# respawn re-dial of the SAME address as a fresh handshake
+target/release/lamina fault-smoke --workers "$A1,$A2" \
+  --fault-plan "worker=1,kill-send=21"
+echo "-- fault-smoke --workers $A1,$A2,$A3 --no-respawn (degrade 3 -> 2)"
+target/release/lamina fault-smoke --workers "$A1,$A2,$A3" \
+  --no-respawn --min-workers 2 --fault-plan "worker=1,kill-send=21"
 
 if [[ "${1:-}" != "--no-bench" ]]; then
   echo "== cargo bench (LAMINA_BENCH_QUICK=1) =="
